@@ -1,0 +1,96 @@
+//! Memory-controller anatomy demo (paper §4/§5): drive each of the
+//! paper's access patterns through each transfer type and show why the
+//! pattern/engine pairing matters — streams through DMA, random factor
+//! rows through the cache, and what goes wrong when they are mismatched.
+//!
+//! ```bash
+//! cargo run --release --offline --example controller_sim
+//! ```
+
+use ptmc::bench::{fmt_cycles, Table};
+use ptmc::controller::{Access, ControllerConfig, MemoryController};
+use ptmc::testkit::Rng;
+
+const TOTAL_BYTES: usize = 4 << 20; // 4 MiB of traffic per pattern
+const ROW_BYTES: usize = 64; // one rank-16 factor row
+
+fn fresh() -> MemoryController {
+    MemoryController::new(ControllerConfig::default_for(16))
+}
+
+/// Sequential tensor stream addresses.
+fn stream_trace(via_cache: bool) -> Vec<Access> {
+    (0..TOTAL_BYTES / 4096)
+        .map(|i| {
+            let addr = (i * 4096) as u64;
+            if via_cache {
+                Access::Cached { addr, bytes: 4096 }
+            } else {
+                Access::Stream { addr, bytes: 4096 }
+            }
+        })
+        .collect()
+}
+
+/// Zipf-random factor-row addresses over a 64 MiB matrix region.
+fn random_rows_trace(kind: &str) -> Vec<Access> {
+    let mut rng = Rng::new(3);
+    (0..TOTAL_BYTES / ROW_BYTES)
+        .map(|_| {
+            let row = rng.zipf(1 << 20, 1.2);
+            let addr = (8u64 << 30) + row * ROW_BYTES as u64;
+            match kind {
+                "cached" => Access::Cached {
+                    addr,
+                    bytes: ROW_BYTES,
+                },
+                "element" => Access::Element {
+                    addr,
+                    bytes: ROW_BYTES,
+                },
+                _ => Access::Stream {
+                    addr,
+                    bytes: ROW_BYTES,
+                },
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let mut table = Table::new(&["access pattern", "served by", "cycles", "bytes/cycle"]);
+    let mut run = |pattern: &str, served: &str, trace: Vec<Access>| {
+        let mut ctl = fresh();
+        let cycles = ctl.replay(&trace);
+        let bytes: usize = trace.iter().map(|a| a.bytes()).sum();
+        table.row(&[
+            pattern.to_string(),
+            served.to_string(),
+            fmt_cycles(cycles),
+            format!("{:.2}", bytes as f64 / cycles as f64),
+        ]);
+        ctl
+    };
+
+    // §4 pattern 1: tensor elements — streaming.
+    run("tensor stream", "DMA stream (paper)", stream_trace(false));
+    run("tensor stream", "cache (mismatched)", stream_trace(true));
+
+    // §4 pattern 3: factor rows — random with locality.
+    let ctl = run("factor rows (zipf)", "cache (paper)", random_rows_trace("cached"));
+    let hits = ctl.cache_stats().hit_rate();
+    run(
+        "factor rows (zipf)",
+        "DMA element (mismatched)",
+        random_rows_trace("element"),
+    );
+
+    table.emit("transfer-type / access-pattern pairing (paper §4)", None);
+    println!("cache hit rate on zipf rows: {:.1}%", 100.0 * hits);
+    println!(
+        "\nReading: bulk streams want the DMA engine; random-but-skewed\n\
+         factor rows want the cache. Mismatching either direction costs\n\
+         multiples of the right pairing — the §5 controller exists to\n\
+         route each pattern to the right engine."
+    );
+}

@@ -1,0 +1,163 @@
+"""L2->artifact AOT pipeline: lower the JAX graphs to HLO **text**.
+
+HLO text (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Usage (from ``make artifacts``)::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``<name>.hlo.txt`` per model variant plus ``manifest.txt`` with
+``key=value`` lines the Rust runtime parses to pick an executable.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (blk, s, r) variants for the 3-mode one-hot block kernel.  blk must be a
+# multiple of the kernel tile (128); s is the output-slot budget the Rust
+# coordinator packs blocks against.
+MTTKRP3_ONEHOT = [(256, 64, 8), (256, 64, 16), (256, 64, 32), (512, 128, 16)]
+MTTKRP3_SEGIDS = [(256, 64, 16), (512, 128, 16)]
+# D2 ablation: jnp segment-sum form (also the fastest on CPU backends).
+MTTKRP3_REFSEG = [(256, 64, 16), (512, 128, 16)]
+# One-hot matmul without Pallas: isolates interpret-mode overhead.
+MTTKRP3_ONEHOT_JNP = [(256, 64, 16)]
+MTTKRP4_ONEHOT = [(256, 64, 16)]
+SOLVE_TILES = [(256, 8), (256, 16), (256, 32)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _emit(out_dir, name, fn, args, manifest, **meta):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    fields = " ".join(f"{k}={v}" for k, v in meta.items())
+    manifest.append(f"name={name} file={name}.hlo.txt {fields}")
+    print(f"  {name}: {len(text)} chars")
+
+
+def build_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: list[str] = []
+
+    for blk, s, r in MTTKRP3_ONEHOT:
+        _emit(
+            out_dir,
+            f"mttkrp3_onehot_b{blk}_s{s}_r{r}",
+            model.block_mttkrp_fn(2),
+            model.example_args(2, blk, s, r),
+            manifest,
+            kind="mttkrp",
+            modes=3,
+            seg="onehot",
+            blk=blk,
+            s=s,
+            r=r,
+        )
+    for blk, s, r in MTTKRP3_SEGIDS:
+        _emit(
+            out_dir,
+            f"mttkrp3_segids_b{blk}_s{s}_r{r}",
+            model.block_mttkrp_from_segments_fn(2, s),
+            model.example_args(2, blk, s, r, from_segments=True),
+            manifest,
+            kind="mttkrp",
+            modes=3,
+            seg="segids",
+            blk=blk,
+            s=s,
+            r=r,
+        )
+    for blk, s, r in MTTKRP3_REFSEG:
+        _emit(
+            out_dir,
+            f"mttkrp3_refseg_b{blk}_s{s}_r{r}",
+            model.block_mttkrp_ref_fn(2, s),
+            model.example_args(2, blk, s, r, from_segments=True),
+            manifest,
+            kind="mttkrp",
+            modes=3,
+            seg="refseg",
+            blk=blk,
+            s=s,
+            r=r,
+        )
+    for blk, s, r in MTTKRP3_ONEHOT_JNP:
+        _emit(
+            out_dir,
+            f"mttkrp3_onehotjnp_b{blk}_s{s}_r{r}",
+            model.block_mttkrp_onehot_jnp_fn(2),
+            model.example_args(2, blk, s, r),
+            manifest,
+            kind="mttkrp",
+            modes=3,
+            seg="onehot_jnp",
+            blk=blk,
+            s=s,
+            r=r,
+        )
+    for blk, s, r in MTTKRP4_ONEHOT:
+        _emit(
+            out_dir,
+            f"mttkrp4_onehot_b{blk}_s{s}_r{r}",
+            model.block_mttkrp_fn(3),
+            model.example_args(3, blk, s, r),
+            manifest,
+            kind="mttkrp",
+            modes=4,
+            seg="onehot",
+            blk=blk,
+            s=s,
+            r=r,
+        )
+    for tile, r in SOLVE_TILES:
+        _emit(
+            out_dir,
+            f"als_rowsolve_t{tile}_r{r}",
+            model.als_row_solve_fn(),
+            model.example_args_solve(tile, r),
+            manifest,
+            kind="rowsolve",
+            tile=tile,
+            r=r,
+        )
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifacts + manifest to {out_dir}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", default=None, help="compat: ignored if --out-dir set")
+    args = p.parse_args()
+    out_dir = args.out_dir
+    if args.out and not args.out_dir:
+        out_dir = os.path.dirname(args.out)
+    build_all(out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""L1 — Pallas kernels for the blocked spMTTKRP hot spot.
+
+Hardware adaptation (DESIGN.md §3).  The paper's FPGA compute unit is an
+element-wise MAC pipeline fed dense operands by the memory controller; its
+scatter-accumulate into the output factor matrix relies on the tensor
+remap placing equal output coordinates consecutively.  On TPU we keep the
+same contract — the (Rust) coordinator gathers factor rows and assigns
+block-local output slots — and re-think the scatter as a **one-hot segment
+matmul on the MXU**:
+
+    out[S, R] = Seg[S, BLK] @ (vals[:, None] * Brows * Crows [* Drows])
+
+The kernel tiles the BLK (non-zero) dimension through VMEM with a grid,
+accumulating into a single (S, R) output tile that stays resident — the
+VMEM analogue of the paper's on-chip output row buffer.  All Pallas calls
+use ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so interpret mode is the correctness path and real-TPU
+numbers are estimated analytically (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile along the non-zero (block) dimension.  8 sublanes x f32 is
+# the TPU-native tiling; 128 keeps the Seg tile (S x TB) MXU-shaped.
+DEFAULT_TB = 128
+
+
+def _mttkrp_kernel(seg_ref, vals_ref, *rest):
+    """Grid step: multiply-accumulate one TB-slice of non-zeros.
+
+    seg_ref:  (S, TB) one-hot scatter tile
+    vals_ref: (TB,)   non-zero values
+    rest:     (N-1) refs of (TB, R) gathered factor rows, then o_ref (S, R)
+    """
+    *row_refs, o_ref = rest
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = vals_ref[...][:, None]
+    for ref in row_refs:
+        prod = prod * ref[...]
+    # MXU-shaped scatter: Seg (S, TB) @ prod (TB, R) -> (S, R).
+    o_ref[...] += jnp.dot(seg_ref[...], prod, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def mttkrp_block(seg_onehot, vals, *factor_rows, tb=DEFAULT_TB, interpret=True):
+    """Blocked spMTTKRP partial product via the Pallas kernel.
+
+    Args:
+      seg_onehot: f32[S, BLK] one-hot output-slot matrix
+        (:func:`ref.onehot_from_segments`).
+      vals: f32[BLK] non-zero values.
+      *factor_rows: (N-1) arrays f32[BLK, R] of gathered input factor rows.
+      tb: tile size along BLK; must divide BLK.
+      interpret: keep True off-TPU (see module docstring).
+
+    Returns:
+      f32[S, R] partial output-factor rows for this block.
+    """
+    s, blk = seg_onehot.shape
+    r = factor_rows[0].shape[1]
+    if blk % tb != 0:
+        raise ValueError(f"BLK={blk} not divisible by tile tb={tb}")
+    n_in = len(factor_rows)
+
+    grid = (blk // tb,)
+    in_specs = [
+        # Seg: walk the BLK axis, keep all S rows resident.
+        pl.BlockSpec((s, tb), lambda i: (0, i)),
+        # vals: walk the BLK axis.
+        pl.BlockSpec((tb,), lambda i: (i,)),
+    ] + [
+        # factor rows: walk the BLK axis, full rank width.
+        pl.BlockSpec((tb, r), lambda i: (i, 0))
+        for _ in range(n_in)
+    ]
+    out_spec = pl.BlockSpec((s, r), lambda i: (0, 0))
+
+    return pl.pallas_call(
+        _mttkrp_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((s, r), jnp.float32),
+        interpret=interpret,
+    )(seg_onehot, vals, *factor_rows)
+
+
+def _row_solve_kernel(m_ref, hinv_ref, o_ref):
+    """One tile of the ALS row-solve: O = M @ Hinv (Hinv is R x R)."""
+    o_ref[...] = jnp.dot(m_ref[...], hinv_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def als_row_solve(m_block, hinv, tm=DEFAULT_TB, interpret=True):
+    """ALS factor update tile: rows of the MTTKRP output times the inverted
+    Hadamard-of-Grams matrix (CP-ALS line 4-6 right-multiplication).
+
+    Args:
+      m_block: f32[TILE, R] MTTKRP output rows.
+      hinv: f32[R, R] pre-inverted Hadamard product of Gram matrices.
+      tm: tile size along TILE; must divide TILE.
+
+    Returns:
+      f32[TILE, R] updated factor rows (un-normalized).
+    """
+    tile, r = m_block.shape
+    if tile % tm != 0:
+        raise ValueError(f"TILE={tile} not divisible by tile tm={tm}")
+    grid = (tile // tm,)
+    return pl.pallas_call(
+        _row_solve_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, r), lambda i: (i, 0)),
+            pl.BlockSpec((r, r), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((tile, r), jnp.float32),
+        interpret=interpret,
+    )(m_block, hinv)
+
+
+def vmem_bytes(s, blk, r, n_in, tb=DEFAULT_TB):
+    """Estimated VMEM residency of one grid step (DESIGN.md §8): the Seg
+    tile, vals tile, (N-1) factor-row tiles, and the resident output."""
+    f32 = 4
+    return f32 * (s * tb + tb + n_in * tb * r + s * r)
+
+
+def mxu_macs(s, blk, r, n_in):
+    """MAC count per block: element-wise products + the scatter matmul."""
+    return blk * r * n_in + s * blk * r

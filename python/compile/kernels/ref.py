@@ -1,0 +1,88 @@
+"""Pure-jnp correctness oracles for the blocked spMTTKRP kernels.
+
+These are the ground truth the Pallas kernels (L1) and the assembled JAX
+graphs (L2) are tested against.  They mirror the paper's Algorithm 2
+(COO spMTTKRP) and its blocked formulation used by the Rust coordinator:
+the coordinator (playing the paper's memory-controller role) gathers the
+factor-matrix rows for a block of non-zeros and hands the kernel dense,
+fixed-shape operands.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mttkrp_block_ref(seg_ids, vals, *factor_rows, num_segments):
+    """Blocked spMTTKRP partial-output oracle, via explicit segment sum.
+
+    Args:
+      seg_ids: int32[BLK] — output-row slot (0..num_segments-1) of each nnz.
+        Slots are block-local: the Rust coordinator maps output-mode
+        coordinates to slots after the tensor remap groups equal
+        coordinates together (paper Alg. 5).
+      vals: f32[BLK] — non-zero values.
+      *factor_rows: (N-1) arrays f32[BLK, R] — gathered input factor rows
+        (B[j,:], C[k,:], ... in paper Alg. 2 line 6).
+      num_segments: S — number of output-row slots in the block.
+
+    Returns:
+      f32[S, R] — partial rows of the output factor matrix.
+    """
+    prod = vals[:, None]
+    for rows in factor_rows:
+        prod = prod * rows
+    out = jnp.zeros((num_segments, prod.shape[1]), dtype=prod.dtype)
+    return out.at[seg_ids].add(prod)
+
+
+def onehot_from_segments(seg_ids, num_segments, dtype=jnp.float32):
+    """One-hot scatter matrix Seg[S, BLK]: Seg[s, z] = 1 iff seg_ids[z]==s.
+
+    This is the TPU adaptation of the paper's FPGA scatter-accumulate: the
+    segment reduction becomes a matmul on the MXU (DESIGN.md §3).
+    """
+    blk = seg_ids.shape[0]
+    return (
+        (seg_ids[None, :] == jnp.arange(num_segments)[:, None])
+        .astype(dtype)
+        .reshape(num_segments, blk)
+    )
+
+
+def mttkrp_block_onehot_ref(seg_onehot, vals, *factor_rows):
+    """Same as :func:`mttkrp_block_ref` but in the one-hot-matmul form the
+    Pallas kernel implements: out = Seg @ (vals[:,None] * prod(rows))."""
+    prod = vals[:, None]
+    for rows in factor_rows:
+        prod = prod * rows
+    return seg_onehot @ prod
+
+
+def mttkrp_coo_ref(indices, vals, factors, mode):
+    """Full-tensor COO spMTTKRP oracle (paper Algorithm 2, any mode).
+
+    Args:
+      indices: int32[nnz, N] coordinate list.
+      vals: f32[nnz].
+      factors: list of N dense factor matrices, factors[m]: f32[I_m, R].
+      mode: output mode (the paper's Alg. 2 is mode 0).
+
+    Returns:
+      f32[I_mode, R] — the un-normalized MTTKRP output \\tilde{A}.
+    """
+    nnz, n_modes = indices.shape
+    r = factors[0].shape[1]
+    prod = vals[:, None] * jnp.ones((nnz, r), dtype=vals.dtype)
+    for m in range(n_modes):
+        if m == mode:
+            continue
+        prod = prod * factors[m][indices[:, m]]
+    out = jnp.zeros((factors[mode].shape[0], r), dtype=vals.dtype)
+    return out.at[indices[:, mode]].add(prod)
+
+
+def als_row_solve_ref(m_tile, hinv):
+    """Oracle for the ALS row-solve tile: rows of the MTTKRP output times
+    the (pre-inverted) Hadamard-of-Grams matrix, M @ Hinv (R x R)."""
+    return m_tile @ hinv

@@ -1,0 +1,104 @@
+"""L2 — JAX compute graphs that the Rust coordinator executes via PJRT.
+
+Each graph is a fixed-shape function over the dense operands the
+coordinator (the paper's memory-controller analogue) has already gathered:
+
+  * ``block_mttkrp_fn``  — one spMTTKRP block: one-hot scatter matmul over
+    the element-wise product of gathered factor rows (calls the L1 Pallas
+    kernel so it lowers into the same HLO).
+  * ``block_mttkrp_from_segments_fn`` — same, but takes raw int32 segment
+    ids and builds the one-hot inside the graph (saves S*BLK*4 bytes of
+    host->device traffic per block; benched as D2 in DESIGN.md §7).
+  * ``als_row_solve_fn`` — a tile of the CP-ALS factor update
+    M @ Hinv.
+
+These are lowered once by ``aot.py`` to HLO *text* artifacts; Python never
+runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import mttkrp_block as kernels
+from .kernels import ref
+
+
+def block_mttkrp_fn(n_inputs):
+    """Returns fn(seg_onehot[S,BLK], vals[BLK], rows_0..rows_{n-1}[BLK,R])
+    -> (out[S,R],) for a tensor with ``n_inputs``+1 modes."""
+
+    def fn(seg_onehot, vals, *rows):
+        assert len(rows) == n_inputs
+        return (kernels.mttkrp_block(seg_onehot, vals, *rows),)
+
+    return fn
+
+
+def block_mttkrp_from_segments_fn(n_inputs, num_segments):
+    """Like :func:`block_mttkrp_fn` but takes int32 seg ids; the one-hot is
+    materialized inside the graph (XLA fuses it into the matmul operand)."""
+
+    def fn(seg_ids, vals, *rows):
+        assert len(rows) == n_inputs
+        onehot = ref.onehot_from_segments(seg_ids, num_segments, dtype=vals.dtype)
+        return (kernels.mttkrp_block(onehot, vals, *rows),)
+
+    return fn
+
+
+def als_row_solve_fn():
+    """Returns fn(m_tile[TILE,R], hinv[R,R]) -> (out[TILE,R],)."""
+
+    def fn(m_tile, hinv):
+        return (kernels.als_row_solve(m_tile, hinv),)
+
+    return fn
+
+
+def block_mttkrp_onehot_jnp_fn(n_inputs):
+    """One-hot matmul form *without* the Pallas kernel (pure jnp): same
+    math and shapes as :func:`block_mttkrp_fn`.  Used to isolate the
+    interpret-mode Pallas overhead on CPU backends (§Perf L1)."""
+
+    def fn(seg_onehot, vals, *rows):
+        assert len(rows) == n_inputs
+        return (ref.mttkrp_block_onehot_ref(seg_onehot, vals, *rows),)
+
+    return fn
+
+
+def block_mttkrp_ref_fn(n_inputs, num_segments):
+    """Pure-jnp segment-sum variant (no Pallas, no one-hot matmul) — the D2
+    ablation baseline; also lowered to an artifact so the Rust bench can
+    compare both forms end-to-end."""
+
+    def fn(seg_ids, vals, *rows):
+        assert len(rows) == n_inputs
+        return (
+            ref.mttkrp_block_ref(seg_ids, vals, *rows, num_segments=num_segments),
+        )
+
+    return fn
+
+
+def example_args(n_inputs, blk, s, r, from_segments=False):
+    """ShapeDtypeStructs for lowering a block-MTTKRP variant."""
+    import jax
+
+    if from_segments:
+        seg = jax.ShapeDtypeStruct((blk,), jnp.int32)
+    else:
+        seg = jax.ShapeDtypeStruct((s, blk), jnp.float32)
+    vals = jax.ShapeDtypeStruct((blk,), jnp.float32)
+    rows = [jax.ShapeDtypeStruct((blk, r), jnp.float32) for _ in range(n_inputs)]
+    return (seg, vals, *rows)
+
+
+def example_args_solve(tile, r):
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((tile, r), jnp.float32),
+        jax.ShapeDtypeStruct((r, r), jnp.float32),
+    )

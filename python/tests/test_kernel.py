@@ -1,0 +1,147 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes/contents; assert_allclose against ref.
+This is the CORE correctness signal for the compute layer — everything
+the Rust coordinator executes via PJRT is lowered from these kernels.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import mttkrp_block as kernels
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def _block_case(rng, blk, s, r, n_in):
+    seg_ids = jnp.asarray(rng.integers(0, s, size=blk), dtype=jnp.int32)
+    vals = _rand(rng, blk)
+    rows = [_rand(rng, blk, r) for _ in range(n_in)]
+    return seg_ids, vals, rows
+
+
+class TestMttkrpBlockKernel:
+    @given(
+        blk=st.sampled_from([128, 256, 512]),
+        s=st.sampled_from([8, 32, 64, 128]),
+        r=st.sampled_from([4, 8, 16, 32]),
+        n_in=st.sampled_from([1, 2, 3, 4]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_segment_sum_oracle(self, blk, s, r, n_in, seed):
+        rng = np.random.default_rng(seed)
+        seg_ids, vals, rows = _block_case(rng, blk, s, r, n_in)
+        onehot = ref.onehot_from_segments(seg_ids, s)
+        got = kernels.mttkrp_block(onehot, vals, *rows)
+        want = ref.mttkrp_block_ref(seg_ids, vals, *rows, num_segments=s)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @given(
+        tb=st.sampled_from([64, 128, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_tile_size_invariance(self, tb, seed):
+        """Result must not depend on the VMEM tile split (tb)."""
+        rng = np.random.default_rng(seed)
+        seg_ids, vals, rows = _block_case(rng, 512, 64, 16, 2)
+        onehot = ref.onehot_from_segments(seg_ids, 64)
+        got = kernels.mttkrp_block(onehot, vals, *rows, tb=tb)
+        want = ref.mttkrp_block_onehot_ref(onehot, vals, *rows)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_rejects_indivisible_tile(self):
+        rng = np.random.default_rng(0)
+        seg_ids, vals, rows = _block_case(rng, 192, 8, 4, 2)
+        onehot = ref.onehot_from_segments(seg_ids, 8)
+        with pytest.raises(ValueError, match="not divisible"):
+            kernels.mttkrp_block(onehot, vals, *rows, tb=128)
+
+    def test_zero_vals_give_zero_output(self):
+        rng = np.random.default_rng(1)
+        seg_ids, _, rows = _block_case(rng, 128, 16, 8, 2)
+        onehot = ref.onehot_from_segments(seg_ids, 16)
+        got = kernels.mttkrp_block(onehot, jnp.zeros(128), *rows)
+        np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+    def test_single_segment_sums_everything(self):
+        """All nnz mapped to slot 0 == plain weighted row-product sum."""
+        rng = np.random.default_rng(2)
+        blk, r = 128, 8
+        vals = _rand(rng, blk)
+        b, c = _rand(rng, blk, r), _rand(rng, blk, r)
+        onehot = jnp.ones((1, blk), jnp.float32)
+        got = kernels.mttkrp_block(onehot, vals, b, c)
+        want = jnp.sum(vals[:, None] * b * c, axis=0, keepdims=True)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_padding_slots_stay_zero(self):
+        """Slots with no nnz (coordinator pads short blocks) must be 0."""
+        rng = np.random.default_rng(3)
+        blk, s, r = 128, 32, 8
+        # Only use slots 0..7.
+        seg_ids = jnp.asarray(rng.integers(0, 8, size=blk), dtype=jnp.int32)
+        vals = _rand(rng, blk)
+        b, c = _rand(rng, blk, r), _rand(rng, blk, r)
+        onehot = ref.onehot_from_segments(seg_ids, s)
+        got = np.asarray(kernels.mttkrp_block(onehot, vals, b, c))
+        np.testing.assert_array_equal(got[8:], 0.0)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_linearity_in_vals(self, seed):
+        """MTTKRP is linear in the tensor values (alg. 2 line 6)."""
+        rng = np.random.default_rng(seed)
+        seg_ids, vals, rows = _block_case(rng, 128, 16, 8, 2)
+        onehot = ref.onehot_from_segments(seg_ids, 16)
+        a = kernels.mttkrp_block(onehot, vals, *rows)
+        b = kernels.mttkrp_block(onehot, 2.0 * vals, *rows)
+        np.testing.assert_allclose(2.0 * np.asarray(a), b, rtol=1e-5, atol=1e-5)
+
+
+class TestAlsRowSolveKernel:
+    @given(
+        tile=st.sampled_from([128, 256]),
+        r=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_matmul_oracle(self, tile, r, seed):
+        rng = np.random.default_rng(seed)
+        m = _rand(rng, tile, r)
+        hinv = _rand(rng, r, r)
+        got = kernels.als_row_solve(m, hinv)
+        np.testing.assert_allclose(
+            got, ref.als_row_solve_ref(m, hinv), rtol=1e-5, atol=1e-5
+        )
+
+    def test_identity_hinv_is_noop(self):
+        rng = np.random.default_rng(4)
+        m = _rand(rng, 128, 16)
+        got = kernels.als_row_solve(m, jnp.eye(16))
+        np.testing.assert_allclose(got, m, rtol=1e-6, atol=1e-6)
+
+
+class TestResourceEstimates:
+    def test_vmem_fits_default_variants(self):
+        """Every AOT variant must fit the 16 MiB TPU VMEM budget."""
+        from compile import aot
+
+        budget = 16 * 1024 * 1024
+        for blk, s, r in aot.MTTKRP3_ONEHOT + aot.MTTKRP4_ONEHOT:
+            n_in = 2 if (blk, s, r) in aot.MTTKRP3_ONEHOT else 3
+            assert kernels.vmem_bytes(s, blk, r, n_in) < budget
+
+    def test_mxu_macs_formula(self):
+        # 2 inputs: blk*r elementwise MACs per input + s*blk*r scatter MACs
+        assert kernels.mxu_macs(64, 256, 16, 2) == 256 * 16 * 2 + 64 * 256 * 16

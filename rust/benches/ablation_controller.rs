@@ -1,0 +1,109 @@
+//! E9 — memory-controller ablation: remove or cripple each module of the
+//! paper's Fig.-4 controller and measure the regression on a full
+//! Approach-1-with-remap sweep.  Quantifies each module's contribution —
+//! the paper's implicit claim that all three are necessary.
+
+use ptmc::bench::{fmt_cycles, fmt_speedup, Table};
+use ptmc::controller::{
+    Access, CacheConfig, ControllerConfig, MemLayout, MemoryController,
+};
+use ptmc::cpd::linalg::Mat;
+use ptmc::mttkrp::{approach1, Tracing};
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+use ptmc::tensor::remap;
+
+/// Full 3-mode sweep under `cfg`; `cache_enabled=false` routes factor
+/// rows through element-wise DMA instead of the Cache Engine (the
+/// "no cache" ablation).
+fn sweep(cfg: &ControllerConfig, cache_enabled: bool, seed: u64) -> u64 {
+    let mut t = generate(&SynthConfig {
+        dims: vec![6_000, 4_000, 2_500],
+        nnz: 100_000,
+        profile: Profile::Zipf { alpha_milli: 1250 },
+        seed,
+    });
+    let rank = 16;
+    let factors: Vec<Mat> = t
+        .dims()
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| Mat::randn(d, rank, m as u64))
+        .collect();
+    let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+    let mut ctl = MemoryController::new(cfg.clone());
+    for mode in 0..3 {
+        ctl.remap_pass(t.mode_col(mode), t.dims()[mode], &layout, 0, 1);
+        remap::remap(&mut t, mode, cfg.remapper.max_pointers);
+        let run = approach1::run(&t, &factors, mode, &layout, Tracing::On);
+        if cache_enabled {
+            ctl.replay(&run.trace);
+        } else {
+            for a in &run.trace {
+                match *a {
+                    Access::Cached { addr, bytes } => {
+                        ctl.request(Access::Element { addr, bytes });
+                    }
+                    other => {
+                        ctl.request(other);
+                    }
+                }
+            }
+        }
+    }
+    ctl.now()
+}
+
+fn main() {
+    let base_cfg = ControllerConfig::default_for(16);
+    let seed = 31;
+    let base = sweep(&base_cfg, true, seed);
+
+    let mut tbl = Table::new(&["variant", "cycles", "slowdown vs full"]);
+    tbl.row(&["full controller (paper Fig. 4)".into(), fmt_cycles(base), "1.00x".into()]);
+
+    let mut record = |name: &str, cycles: u64| {
+        tbl.row(&[
+            name.into(),
+            fmt_cycles(cycles),
+            fmt_speedup(cycles as f64 / base as f64),
+        ]);
+        cycles
+    };
+
+    // A. No Cache Engine: factor rows via element-wise DMA.
+    let no_cache = record("no cache engine", sweep(&base_cfg, false, seed));
+
+    // B. Tiny cache (64 lines direct-mapped).
+    let mut tiny = base_cfg.clone();
+    tiny.cache = CacheConfig {
+        line_bytes: 64,
+        num_lines: 64,
+        assoc: 1,
+        hit_latency: 2,
+    };
+    let tiny_cache = record("tiny direct-mapped cache", sweep(&tiny, true, seed));
+
+    // C. Crippled DMA: one DMA, one 512 B buffer.
+    let mut one_dma = base_cfg.clone();
+    one_dma.dma.num_dmas = 1;
+    one_dma.dma.buffers_per_dma = 1;
+    one_dma.dma.buffer_bytes = 512;
+    one_dma.remapper.buffer_bytes = 512;
+    let crippled_dma = record("single 512B DMA buffer", sweep(&one_dma, true, seed));
+
+    // D. Pointer spill: remapper tracks only 256 pointers on-chip.
+    let mut spill = base_cfg.clone();
+    spill.remapper.max_pointers = 256;
+    let ptr_spill = record("256 on-chip pointers (spill)", sweep(&spill, true, seed));
+
+    tbl.emit(
+        "E9 — controller module ablation (3-mode sweep, 100k nnz)",
+        Some(std::path::Path::new("bench_results/ablation.csv")),
+    );
+
+    assert!(no_cache > base, "cache must matter");
+    assert!(tiny_cache > base, "cache capacity must matter");
+    assert!(crippled_dma > base, "DMA buffering must matter");
+    assert!(ptr_spill > base, "pointer budget must matter");
+    println!("every module contributes; removing any regresses. OK");
+}

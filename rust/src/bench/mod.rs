@@ -1,0 +1,189 @@
+//! Bench harness (S16; no criterion in the offline build): warmed-up
+//! wall-clock timing with min/mean/max, aligned table printing, and CSV
+//! emission for the per-table/figure bench binaries under `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub iters: u32,
+    pub min: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl Timing {
+    pub fn mean_us(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e6
+    }
+}
+
+/// Time `f` with `warmup` unrecorded runs then `iters` recorded runs.
+/// `f` must return something opaque to keep the optimizer honest; its
+/// result is black-boxed.
+pub fn time<T>(warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> Timing {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut min = Duration::MAX;
+    let mut max = Duration::ZERO;
+    let mut total = Duration::ZERO;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        let dt = t0.elapsed();
+        min = min.min(dt);
+        max = max.max(dt);
+        total += dt;
+    }
+    Timing {
+        iters,
+        min,
+        mean: total / iters,
+        max,
+    }
+}
+
+/// Optimization barrier (std::hint::black_box wrapper, kept local so the
+/// bench binaries don't import std::hint everywhere).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// A simple fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$}  ", cell, w = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (no quoting needed for our numeric tables).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and optionally write a CSV next to the bench.
+    pub fn emit(&self, title: &str, csv_path: Option<&std::path::Path>) {
+        println!("\n== {title} ==");
+        println!("{}", self.render());
+        if let Some(p) = csv_path {
+            if let Some(dir) = p.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            if let Err(e) = std::fs::write(p, self.to_csv()) {
+                eprintln!("warning: failed to write {}: {e}", p.display());
+            } else {
+                println!("[csv written to {}]", p.display());
+            }
+        }
+    }
+}
+
+/// Format a cycle count with thousands separators.
+pub fn fmt_cycles(c: u64) -> String {
+    let s = c.to_string();
+    let mut out = String::new();
+    for (i, ch) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push('_');
+        }
+        out.push(ch);
+    }
+    out
+}
+
+/// Format a ratio as `x.xx×`.
+pub fn fmt_speedup(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reports_consistent_stats() {
+        let t = time(1, 5, || {
+            std::thread::sleep(Duration::from_micros(200));
+            42
+        });
+        assert_eq!(t.iters, 5);
+        assert!(t.min <= t.mean && t.mean <= t.max);
+        assert!(t.min >= Duration::from_micros(150));
+    }
+
+    #[test]
+    fn table_renders_aligned_and_csv() {
+        let mut tb = Table::new(&["name", "cycles"]);
+        tb.row(&["a".into(), "100".into()]);
+        tb.row(&["longer-name".into(), "2".into()]);
+        let r = tb.render();
+        assert!(r.contains("longer-name"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        let csv = tb.to_csv();
+        assert_eq!(csv, "name,cycles\na,100\nlonger-name,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut tb = Table::new(&["a", "b"]);
+        tb.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn cycle_formatting() {
+        assert_eq!(fmt_cycles(1234567), "1_234_567");
+        assert_eq!(fmt_cycles(42), "42");
+        assert_eq!(fmt_speedup(2.5), "2.50x");
+    }
+}

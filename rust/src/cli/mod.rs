@@ -1,0 +1,150 @@
+//! Hand-rolled CLI argument parsing (S14; no clap in the offline build).
+//!
+//! Grammar: `ptmc <subcommand> [--flag] [--key value]...`.  Flags are
+//! order-independent; unknown keys are an error so typos fail loudly.
+
+pub mod workload;
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// CLI error.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse raw args (without argv[0]).  `known_opts` take a value;
+    /// `known_flags` do not.
+    pub fn parse(
+        raw: &[String],
+        known_opts: &[&str],
+        known_flags: &[&str],
+    ) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = raw.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if known_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else if known_opts.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError(format!("--{name} requires a value")))?;
+                    args.options.insert(name.to_string(), v.clone());
+                } else {
+                    return Err(CliError(format!("unknown option --{name}")));
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok.clone());
+            } else {
+                return Err(CliError(format!("unexpected positional argument {tok:?}")));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .replace('_', "")
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected integer, got {v:?}"))),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        Ok(self.usize_or(name, default as usize)? as u64)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{name}: expected float, got {v:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            &sv(&["decompose", "--rank", "32", "--verbose", "--input", "x.tns"]),
+            &["rank", "input"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("decompose"));
+        assert_eq!(a.usize_or("rank", 16).unwrap(), 32);
+        assert_eq!(a.get("input"), Some("x.tns"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn unknown_option_is_an_error() {
+        let e = Args::parse(&sv(&["x", "--bogus", "1"]), &["rank"], &[]).unwrap_err();
+        assert!(e.0.contains("--bogus"));
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        let e = Args::parse(&sv(&["x", "--rank"]), &["rank"], &[]).unwrap_err();
+        assert!(e.0.contains("requires a value"));
+    }
+
+    #[test]
+    fn bad_int_is_an_error() {
+        let a = Args::parse(&sv(&["x", "--rank", "abc"]), &["rank"], &[]).unwrap();
+        assert!(a.usize_or("rank", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&sv(&["x"]), &["rank"], &[]).unwrap();
+        assert_eq!(a.usize_or("rank", 16).unwrap(), 16);
+        assert_eq!(a.str_or("backend", "native"), "native");
+        assert_eq!(a.f64_or("tol", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        assert!(Args::parse(&sv(&["a", "b"]), &[], &[]).is_err());
+    }
+}

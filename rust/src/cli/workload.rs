@@ -1,0 +1,85 @@
+//! Shared workload construction for the CLI, examples, and benches:
+//! either load a FROSTT `.tns` file (`--input`) or generate a synthetic
+//! tensor (`--synth uniform|zipf|clustered`, `--dims`, `--nnz`, `--seed`).
+
+use super::{Args, CliError};
+use crate::tensor::synth::{generate, Profile, SynthConfig};
+use crate::tensor::{frostt, SparseTensor};
+
+/// Option names consumed by [`tensor_from_args`]; include them in the
+/// caller's `known_opts`.
+pub const WORKLOAD_OPTS: &[&str] = &["input", "synth", "dims", "nnz", "seed", "alpha"];
+
+/// Parse `--dims 100x200x300`.
+pub fn parse_dims(s: &str) -> Result<Vec<usize>, CliError> {
+    s.split(['x', ','])
+        .map(|p| {
+            p.trim()
+                .parse::<usize>()
+                .map_err(|_| CliError(format!("bad --dims component {p:?}")))
+        })
+        .collect()
+}
+
+/// Build the tensor a subcommand should operate on.
+pub fn tensor_from_args(args: &Args) -> Result<SparseTensor, Box<dyn std::error::Error>> {
+    if let Some(path) = args.get("input") {
+        return Ok(frostt::read_tns_file(std::path::Path::new(path))?);
+    }
+    let dims = parse_dims(args.str_or("dims", "2000x1500x1000"))?;
+    let nnz = args.usize_or("nnz", 50_000)?;
+    let seed = args.u64_or("seed", 42)?;
+    let alpha = args.f64_or("alpha", 1.2)?;
+    let profile = match args.str_or("synth", "zipf") {
+        "uniform" => Profile::Uniform,
+        "zipf" => Profile::Zipf {
+            alpha_milli: (alpha * 1000.0) as u32,
+        },
+        "clustered" => Profile::Clustered {
+            block: 64,
+            blocks: (nnz / 256).max(1),
+        },
+        other => return Err(Box::new(CliError(format!("unknown --synth {other:?}")))),
+    };
+    Ok(generate(&SynthConfig {
+        dims,
+        nnz,
+        profile,
+        seed,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn dims_parse_both_separators() {
+        assert_eq!(parse_dims("10x20x30").unwrap(), vec![10, 20, 30]);
+        assert_eq!(parse_dims("10,20").unwrap(), vec![10, 20]);
+        assert!(parse_dims("10xzebra").is_err());
+    }
+
+    #[test]
+    fn synth_tensor_from_args() {
+        let a = Args::parse(
+            &sv(&["x", "--synth", "uniform", "--dims", "50x40x30", "--nnz", "100"]),
+            WORKLOAD_OPTS,
+            &[],
+        )
+        .unwrap();
+        let t = tensor_from_args(&a).unwrap();
+        assert_eq!(t.dims(), &[50, 40, 30]);
+        assert_eq!(t.nnz(), 100);
+    }
+
+    #[test]
+    fn unknown_profile_is_error() {
+        let a = Args::parse(&sv(&["x", "--synth", "weird"]), WORKLOAD_OPTS, &[]).unwrap();
+        assert!(tensor_from_args(&a).is_err());
+    }
+}

@@ -1,0 +1,270 @@
+//! Run configuration (S14): a TOML-subset parser and the typed run
+//! config it feeds.  The offline build has no serde, so this implements
+//! exactly the subset the tool needs: `[section]` headers, `key = value`
+//! pairs with integer / float / string / boolean values, `#` comments.
+//!
+//! Example (`ptmc.toml`):
+//! ```toml
+//! [run]
+//! rank = 16
+//! iters = 10
+//! backend = "pjrt"
+//!
+//! [cache]
+//! line_bytes = 64
+//! num_lines = 4096
+//! assoc = 4
+//!
+//! [dma]
+//! num_dmas = 2
+//! buffers_per_dma = 2
+//! buffer_bytes = 4096
+//!
+//! [remapper]
+//! max_pointers = 65536
+//!
+//! [dram]
+//! channels = 4
+//! ```
+
+use std::collections::HashMap;
+
+use crate::controller::ControllerConfig;
+use crate::cpd::AlsConfig;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: section -> key -> value.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: HashMap<String, HashMap<String, Value>>,
+}
+
+/// Parse error with line number.
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn parse_value(raw: &str, line: usize) -> Result<Value, ParseError> {
+    let raw = raw.trim();
+    if raw.starts_with('"') && raw.ends_with('"') && raw.len() >= 2 {
+        return Ok(Value::Str(raw[1..raw.len() - 1].to_string()));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = raw.replace('_', "").parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(ParseError {
+        line,
+        message: format!("cannot parse value {raw:?}"),
+    })
+}
+
+impl Config {
+    /// Parse TOML-subset text.
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (idx, raw_line) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = match raw_line.find('#') {
+                Some(p) => &raw_line[..p],
+                None => raw_line,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    return Err(ParseError {
+                        line: line_no,
+                        message: format!("malformed section header {line:?}"),
+                    });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| ParseError {
+                line: line_no,
+                message: format!("expected key = value, got {line:?}"),
+            })?;
+            let value = parse_value(v, line_no)?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<Self, Box<dyn std::error::Error>> {
+        Ok(Self::parse(&std::fs::read_to_string(path)?)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.get(section, key)
+            .and_then(Value::as_usize)
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(Value::as_f64)
+            .unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key)
+            .and_then(Value::as_str)
+            .unwrap_or(default)
+    }
+
+    /// Build a [`ControllerConfig`] from the `[cache]`, `[dma]`,
+    /// `[remapper]` and `[dram]` sections, defaulting unset keys.
+    pub fn controller(&self, elem_bytes: usize) -> ControllerConfig {
+        let mut c = ControllerConfig::default_for(elem_bytes);
+        c.cache.line_bytes = self.usize_or("cache", "line_bytes", c.cache.line_bytes);
+        c.cache.num_lines = self.usize_or("cache", "num_lines", c.cache.num_lines);
+        c.cache.assoc = self.usize_or("cache", "assoc", c.cache.assoc);
+        c.cache.hit_latency = self.usize_or("cache", "hit_latency", c.cache.hit_latency as usize) as u64;
+        c.dma.num_dmas = self.usize_or("dma", "num_dmas", c.dma.num_dmas);
+        c.dma.buffers_per_dma = self.usize_or("dma", "buffers_per_dma", c.dma.buffers_per_dma);
+        c.dma.buffer_bytes = self.usize_or("dma", "buffer_bytes", c.dma.buffer_bytes);
+        c.remapper.max_pointers = self.usize_or("remapper", "max_pointers", c.remapper.max_pointers);
+        c.remapper.buffer_bytes = self.usize_or("remapper", "buffer_bytes", c.remapper.buffer_bytes);
+        c.dram.channels = self.usize_or("dram", "channels", c.dram.channels);
+        c.dram.banks = self.usize_or("dram", "banks", c.dram.banks);
+        c
+    }
+
+    /// Build an [`AlsConfig`] from the `[run]` section.
+    pub fn als(&self) -> AlsConfig {
+        let d = AlsConfig::default();
+        AlsConfig {
+            rank: self.usize_or("run", "rank", d.rank),
+            max_iters: self.usize_or("run", "iters", d.max_iters),
+            tol: self.f64_or("run", "tol", d.tol),
+            ridge: self.f64_or("run", "ridge", d.ridge as f64) as f32,
+            seed: self.usize_or("run", "seed", d.seed as usize) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# comment
+[run]
+rank = 32
+backend = "pjrt"
+tol = 1e-4
+verbose = true
+
+[cache]
+num_lines = 4096   # inline comment
+line_bytes = 128
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("run", "rank"), Some(&Value::Int(32)));
+        assert_eq!(c.get("run", "backend"), Some(&Value::Str("pjrt".into())));
+        assert_eq!(c.get("run", "tol"), Some(&Value::Float(1e-4)));
+        assert_eq!(c.get("run", "verbose"), Some(&Value::Bool(true)));
+        assert_eq!(c.get("cache", "num_lines"), Some(&Value::Int(4096)));
+    }
+
+    #[test]
+    fn defaults_fill_missing_keys() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let ctl = c.controller(16);
+        assert_eq!(ctl.cache.num_lines, 4096);
+        assert_eq!(ctl.cache.line_bytes, 128);
+        assert_eq!(ctl.cache.assoc, 4); // default
+        let als = c.als();
+        assert_eq!(als.rank, 32);
+        assert_eq!(als.max_iters, 20); // default
+        assert!((als.tol - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("[unclosed\n").is_err());
+        assert!(Config::parse("keyvalue\n").is_err());
+        assert!(Config::parse("k = @@@\n").is_err());
+        let err = Config::parse("\n\nk = @@@\n").unwrap_err();
+        assert_eq!(err.line, 3);
+    }
+
+    #[test]
+    fn underscored_ints_parse() {
+        let c = Config::parse("[a]\nn = 1_000_000\n").unwrap();
+        assert_eq!(c.usize_or("a", "n", 0), 1_000_000);
+    }
+
+    #[test]
+    fn accessor_defaults() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.usize_or("x", "y", 7), 7);
+        assert_eq!(c.str_or("x", "y", "dflt"), "dflt");
+        assert_eq!(c.f64_or("x", "y", 2.5), 2.5);
+    }
+}

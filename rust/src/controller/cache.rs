@@ -1,0 +1,416 @@
+//! Cache Engine (S3, paper §5.1.1): serves the *random* factor-matrix row
+//! accesses with minimum latency, exploiting their temporal and spatial
+//! locality.
+//!
+//! Set-associative with true-LRU replacement.  All three §5.2.1
+//! parameters are programmable: line width, number of lines, and
+//! associativity.  Backing fetches go to the shared [`Dram`] model.
+
+use crate::dram::Dram;
+
+/// Programmable Cache Engine parameters (paper §5.2.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheConfig {
+    /// Cache line width in bytes (power of two).
+    pub line_bytes: usize,
+    /// Total number of lines (power of two, multiple of `assoc`).
+    pub num_lines: usize,
+    /// Associativity (1 = direct-mapped; `num_lines` = fully assoc.).
+    pub assoc: usize,
+    /// Lookup/service latency on a hit, in cycles (BRAM access).
+    pub hit_latency: u64,
+}
+
+impl CacheConfig {
+    /// 64 KiB, 64 B lines, 4-way — a sensible mid-size default.
+    pub fn default_64k() -> Self {
+        CacheConfig {
+            line_bytes: 64,
+            num_lines: 1024,
+            assoc: 4,
+            hit_latency: 2,
+        }
+    }
+
+    /// Total data capacity in bytes.
+    pub fn capacity_bytes(&self) -> usize {
+        self.line_bytes * self.num_lines
+    }
+
+    /// Number of sets.
+    pub fn num_sets(&self) -> usize {
+        self.num_lines / self.assoc
+    }
+
+    fn validate(&self) {
+        assert!(self.line_bytes.is_power_of_two(), "line_bytes must be 2^k");
+        assert!(self.assoc >= 1 && self.assoc <= self.num_lines);
+        assert_eq!(
+            self.num_lines % self.assoc,
+            0,
+            "num_lines must be a multiple of assoc"
+        );
+        assert!(
+            self.num_sets().is_power_of_two(),
+            "num_sets must be a power of two"
+        );
+    }
+}
+
+/// Cache Engine statistics.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub accesses: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Dirty lines written back to DRAM on eviction.
+    pub writebacks: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    /// Written since fill; eviction costs a DRAM writeback.
+    dirty: bool,
+    /// LRU timestamp (larger = more recent).
+    lru: u64,
+}
+
+/// The Cache Engine simulator.
+#[derive(Debug, Clone)]
+pub struct CacheEngine {
+    cfg: CacheConfig,
+    sets: Vec<Line>,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl CacheEngine {
+    pub fn new(cfg: CacheConfig) -> Self {
+        cfg.validate();
+        CacheEngine {
+            cfg,
+            sets: vec![
+                Line {
+                    tag: 0,
+                    valid: false,
+                    dirty: false,
+                    lru: 0
+                };
+                cfg.num_lines
+            ],
+            tick: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Invalidate all lines and clear stats.
+    pub fn reset(&mut self) {
+        for l in &mut self.sets {
+            l.valid = false;
+        }
+        self.tick = 0;
+        self.stats = CacheStats::default();
+    }
+
+    /// Serve a load of `bytes` at `addr` starting at cycle `now`; fetches
+    /// missing lines from `dram`.  Returns the completion cycle.
+    pub fn load(&mut self, dram: &mut Dram, addr: u64, bytes: usize, now: u64) -> u64 {
+        self.transfer(dram, addr, bytes, now, false)
+    }
+
+    /// Serve a store through the cache (write-allocate, write-back):
+    /// partial-line writes fetch the line on a miss, dirty lines cost a
+    /// DRAM writeback when evicted.  This is what the paper's §5.1.2(b)
+    /// warns about when scattered stores go through the Cache Engine.
+    pub fn store(&mut self, dram: &mut Dram, addr: u64, bytes: usize, now: u64) -> u64 {
+        self.transfer(dram, addr, bytes, now, true)
+    }
+
+    fn transfer(&mut self, dram: &mut Dram, addr: u64, bytes: usize, now: u64, write: bool) -> u64 {
+        assert!(bytes > 0);
+        let lb = self.cfg.line_bytes as u64;
+        let first = addr / lb;
+        let last = (addr + bytes as u64 - 1) / lb;
+        let mut t = now;
+        for line in first..=last {
+            t = self.access_line(dram, line, t, write);
+        }
+        t
+    }
+
+    /// Access one line; returns completion cycle.
+    fn access_line(&mut self, dram: &mut Dram, line_idx: u64, now: u64, write: bool) -> u64 {
+        self.tick += 1;
+        self.stats.accesses += 1;
+        let n_sets = self.cfg.num_sets() as u64;
+        let set = (line_idx % n_sets) as usize;
+        let tag = line_idx / n_sets;
+        let base = set * self.cfg.assoc;
+        let ways = &mut self.sets[base..base + self.cfg.assoc];
+
+        if let Some(way) = ways.iter_mut().find(|w| w.valid && w.tag == tag) {
+            way.lru = self.tick;
+            way.dirty |= write;
+            self.stats.hits += 1;
+            return now + self.cfg.hit_latency;
+        }
+
+        // Miss: fetch the whole line from DRAM (write-allocate for
+        // stores), install with LRU evict; dirty victims write back.
+        self.stats.misses += 1;
+        let victim = ways
+            .iter_mut()
+            .min_by_key(|w| if w.valid { w.lru } else { 0 })
+            .expect("assoc >= 1");
+        let mut t = now;
+        if victim.valid {
+            self.stats.evictions += 1;
+            if victim.dirty {
+                // Writeback: the victim's line goes out before the fill.
+                let victim_line = victim.tag * n_sets + set as u64;
+                t = dram.access(
+                    victim_line * self.cfg.line_bytes as u64,
+                    self.cfg.line_bytes,
+                    t,
+                );
+                self.stats.writebacks += 1;
+            }
+        }
+        let done = dram.access(line_idx * self.cfg.line_bytes as u64, self.cfg.line_bytes, t);
+        victim.valid = true;
+        victim.tag = tag;
+        victim.dirty = write;
+        victim.lru = self.tick;
+        done + self.cfg.hit_latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::DramConfig;
+    use crate::testkit::Rng;
+
+    fn dram() -> Dram {
+        Dram::new(DramConfig::default_ddr4())
+    }
+
+    fn tiny(assoc: usize) -> CacheEngine {
+        CacheEngine::new(CacheConfig {
+            line_bytes: 64,
+            num_lines: 8,
+            assoc,
+            hit_latency: 2,
+        })
+    }
+
+    #[test]
+    fn repeat_access_hits() {
+        let mut d = dram();
+        let mut c = tiny(2);
+        let t1 = c.load(&mut d, 0, 64, 0);
+        let t2 = c.load(&mut d, 0, 64, t1);
+        assert_eq!(c.stats().hits, 1);
+        assert_eq!(c.stats().misses, 1);
+        assert_eq!(t2 - t1, 2, "hit costs only hit_latency");
+    }
+
+    #[test]
+    fn spatial_locality_within_line() {
+        let mut d = dram();
+        let mut c = CacheEngine::new(CacheConfig {
+            line_bytes: 256,
+            num_lines: 8,
+            assoc: 2,
+            hit_latency: 2,
+        });
+        c.load(&mut d, 0, 4, 0);
+        c.load(&mut d, 128, 4, 100); // same 256B line
+        assert_eq!(c.stats().hits, 1);
+    }
+
+    #[test]
+    fn multi_line_load_counts_each_line() {
+        let mut d = dram();
+        let mut c = tiny(2);
+        c.load(&mut d, 0, 256, 0); // 4 lines of 64B
+        assert_eq!(c.stats().accesses, 4);
+        assert_eq!(c.stats().misses, 4);
+    }
+
+    #[test]
+    fn direct_mapped_conflicts_thrash() {
+        let mut d = dram();
+        let mut c = tiny(1); // 8 sets, direct mapped
+        // Two addresses 8 lines apart map to the same set.
+        for i in 0..10 {
+            let addr = if i % 2 == 0 { 0 } else { 8 * 64 };
+            c.load(&mut d, addr, 64, i * 100);
+        }
+        assert_eq!(c.stats().hits, 0, "direct-mapped ping-pong never hits");
+        assert_eq!(c.stats().evictions, 9, "all but the cold miss evict");
+    }
+
+    #[test]
+    fn two_way_fixes_the_same_thrash() {
+        let mut d = dram();
+        let mut c = tiny(2); // 4 sets, 2-way
+        for i in 0..10 {
+            let addr = if i % 2 == 0 { 0 } else { 4 * 2 * 64 };
+            c.load(&mut d, addr, 64, i * 100);
+        }
+        assert_eq!(c.stats().misses, 2, "only the two cold misses remain");
+        assert_eq!(c.stats().hits, 8);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut d = dram();
+        // Fully associative, 2 lines.
+        let mut c = CacheEngine::new(CacheConfig {
+            line_bytes: 64,
+            num_lines: 2,
+            assoc: 2,
+            hit_latency: 1,
+        });
+        c.load(&mut d, 0, 1, 0); // A
+        c.load(&mut d, 64, 1, 10); // B
+        c.load(&mut d, 0, 1, 20); // touch A -> B is LRU
+        c.load(&mut d, 128, 1, 30); // C evicts B
+        c.load(&mut d, 0, 1, 40); // A still resident
+        assert_eq!(c.stats().hits, 2);
+        c.load(&mut d, 64, 1, 50); // B was evicted -> miss
+        assert_eq!(c.stats().misses, 4);
+    }
+
+    #[test]
+    fn stores_write_allocate_and_write_back() {
+        let mut d = dram();
+        // 2 lines fully associative.
+        let mut c = CacheEngine::new(CacheConfig {
+            line_bytes: 64,
+            num_lines: 2,
+            assoc: 2,
+            hit_latency: 1,
+        });
+        c.store(&mut d, 0, 16, 0); // miss + allocate, dirty
+        assert_eq!(c.stats().misses, 1);
+        c.store(&mut d, 16, 16, 10); // same line: hit, stays dirty
+        assert_eq!(c.stats().hits, 1);
+        // Fill the other way, then evict the dirty line -> writeback.
+        c.load(&mut d, 64, 1, 20);
+        c.load(&mut d, 128, 1, 30); // evicts LRU = line 0 (dirty)
+        assert_eq!(c.stats().writebacks, 1);
+        // Clean eviction does not write back.
+        c.load(&mut d, 192, 1, 40);
+        assert_eq!(c.stats().writebacks, 1);
+    }
+
+    #[test]
+    fn scattered_stores_via_cache_cost_more_dram_than_element_sized_traffic() {
+        // The §5.1.2(b) effect: write-allocate turns each 16B scattered
+        // store into a 64B fill + eventual 64B writeback.
+        let mut d = dram();
+        let mut c = CacheEngine::new(CacheConfig {
+            line_bytes: 64,
+            num_lines: 64,
+            assoc: 4,
+            hit_latency: 1,
+        });
+        let mut t = 0;
+        for i in 0..10_000u64 {
+            t = c.store(&mut d, (i % 4096) * 16384, 16, t);
+        }
+        let cache_bytes = d.stats().bytes;
+        // Raw element-wise stores of the same records:
+        let mut d2 = dram();
+        let mut t2 = 0;
+        for i in 0..10_000u64 {
+            t2 = d2.access((i % 4096) * 16384, 16, t2);
+        }
+        assert!(
+            cache_bytes > d2.stats().bytes * 3 / 2,
+            "write-allocate+writeback must inflate DRAM traffic: {} vs {}",
+            cache_bytes,
+            d2.stats().bytes
+        );
+    }
+
+    #[test]
+    fn working_set_knee_appears_at_capacity() {
+        // Cycling through W lines: hit rate ~1 when W <= lines, ~0 when
+        // W > lines (LRU worst case) — the knee the DSE must find.
+        let run = |num_lines: usize, w: usize| {
+            let mut d = dram();
+            let mut c = CacheEngine::new(CacheConfig {
+                line_bytes: 64,
+                num_lines,
+                assoc: num_lines,
+                hit_latency: 1,
+            });
+            let mut t = 0;
+            for i in 0..w * 50 {
+                t = c.load(&mut d, ((i % w) * 64) as u64, 64, t);
+            }
+            c.stats().hit_rate()
+        };
+        assert!(run(64, 32) > 0.95);
+        assert!(run(64, 128) < 0.05);
+    }
+
+    #[test]
+    fn random_hit_rate_increases_with_capacity() {
+        let run = |num_lines: usize| {
+            let mut d = dram();
+            let mut c = CacheEngine::new(CacheConfig {
+                line_bytes: 64,
+                num_lines,
+                assoc: 4,
+                hit_latency: 1,
+            });
+            let mut rng = Rng::new(3);
+            let mut t = 0;
+            for _ in 0..20_000 {
+                // Zipf-skewed line index over 4096 lines.
+                let line = rng.zipf(4096, 1.2);
+                t = c.load(&mut d, line * 64, 64, t);
+            }
+            c.stats().hit_rate()
+        };
+        let small = run(64);
+        let big = run(2048);
+        assert!(big > small + 0.1, "big {big} small {small}");
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of assoc")]
+    fn rejects_bad_geometry() {
+        CacheEngine::new(CacheConfig {
+            line_bytes: 64,
+            num_lines: 6,
+            assoc: 4,
+            hit_latency: 1,
+        });
+    }
+}

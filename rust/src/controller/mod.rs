@@ -1,0 +1,359 @@
+//! The programmable memory controller (S6, paper §5, Fig. 4): Cache
+//! Engine + DMA Engine + Tensor Remapper over a shared DRAM model.
+//!
+//! The controller exposes the paper's three transfer types (§4) as a
+//! request interface ([`Access`]) and processes requests **in order**
+//! (the paper's weak consistency: each module is FIFO, and module-to-
+//! module ordering is first-in-first-served; disjoint address ranges make
+//! that sufficient).  spMTTKRP engines ([`crate::mttkrp`]) compile their
+//! memory behaviour into an access trace; [`MemoryController::replay`]
+//! produces the total memory access time the paper optimizes.
+
+pub mod cache;
+pub mod dma;
+pub mod remapper;
+
+pub use cache::{CacheConfig, CacheEngine, CacheStats};
+pub use dma::{DmaConfig, DmaEngine, DmaStats};
+pub use remapper::{RemapperConfig, RemapperStats, TensorRemapper};
+
+use crate::dram::{Dram, DramConfig, DramStats};
+use crate::tensor::Coord;
+
+/// One memory request, tagged with the §4 transfer type that serves it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    /// Bulk sequential transfer through the DMA Engine (tensor element
+    /// streams, output factor-row stores).
+    Stream { addr: u64, bytes: usize },
+    /// Element-wise transfer through the DMA Engine (no locality).
+    Element { addr: u64, bytes: usize },
+    /// Cached load through the Cache Engine (random accesses with
+    /// temporal/spatial locality: input factor-matrix rows).
+    Cached { addr: u64, bytes: usize },
+    /// Store routed through the Cache Engine (write-allocate,
+    /// write-back) — the §5.1.2(b) anti-pattern, modeled for ablations.
+    CachedStore { addr: u64, bytes: usize },
+}
+
+impl Access {
+    pub fn bytes(&self) -> usize {
+        match *self {
+            Access::Stream { bytes, .. }
+            | Access::Element { bytes, .. }
+            | Access::Cached { bytes, .. }
+            | Access::CachedStore { bytes, .. } => bytes,
+        }
+    }
+}
+
+/// Full controller configuration: one knob set per module (§5.2).
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    pub dram: DramConfig,
+    pub cache: CacheConfig,
+    pub dma: DmaConfig,
+    pub remapper: RemapperConfig,
+}
+
+impl ControllerConfig {
+    /// Default configuration for a tensor with `elem_bytes`-wide records.
+    pub fn default_for(elem_bytes: usize) -> Self {
+        ControllerConfig {
+            dram: DramConfig::default_ddr4(),
+            cache: CacheConfig::default_64k(),
+            dma: DmaConfig::default_2x4k(),
+            remapper: RemapperConfig::default_16k(elem_bytes),
+        }
+    }
+
+    /// Total on-chip buffer/cache bytes the configuration occupies —
+    /// the quantity the PMS checks against the FPGA device (§5.3).
+    pub fn onchip_bytes(&self) -> usize {
+        self.cache.capacity_bytes()
+            + self.dma.buffer_capacity_bytes()
+            + self.remapper.onchip_bytes()
+    }
+}
+
+/// External-memory layout of a decomposition run: where the two tensor
+/// copies (ping-pong for remap), the factor matrices, the output region,
+/// and the spilled pointer table live.  Regions are disjoint; the paper's
+/// weak-consistency argument relies on exactly this disjointness.
+#[derive(Debug, Clone)]
+pub struct MemLayout {
+    /// Base of tensor copy 0 and copy 1 (remap ping-pong).
+    pub tensor_base: [u64; 2],
+    /// Base address of each mode's factor matrix.
+    pub factor_base: Vec<u64>,
+    /// Row stride in bytes of factor matrices (R * 4).
+    pub row_bytes: usize,
+    /// Base of the spilled pointer table.
+    pub ptr_base: u64,
+    /// Base of the Approach-2 partial-sum region (|T| x R floats + tags).
+    pub partial_base: u64,
+}
+
+impl MemLayout {
+    /// Lay out a tensor with `dims`, `nnz` non-zeros of `elem_bytes` each
+    /// and rank `r`, regions aligned to 1 MiB.
+    pub fn plan(dims: &[usize], nnz: usize, elem_bytes: usize, r: usize) -> Self {
+        const ALIGN: u64 = 1 << 20;
+        let align = |x: u64| x.div_ceil(ALIGN) * ALIGN;
+        let mut cursor = 0u64;
+        let tensor_bytes = align((nnz * elem_bytes) as u64);
+        let t0 = cursor;
+        cursor += tensor_bytes;
+        let t1 = cursor;
+        cursor += tensor_bytes;
+        let row_bytes = r * 4;
+        let mut factor_base = Vec::with_capacity(dims.len());
+        for &d in dims {
+            factor_base.push(cursor);
+            cursor += align((d * row_bytes) as u64);
+        }
+        let ptr_base = cursor;
+        cursor += align((dims.iter().max().copied().unwrap_or(0) * 4) as u64);
+        let partial_base = cursor;
+        MemLayout {
+            tensor_base: [t0, t1],
+            factor_base,
+            row_bytes,
+            ptr_base,
+            partial_base,
+        }
+    }
+
+    /// Address of row `row` of mode-`m` factor matrix.
+    pub fn factor_row_addr(&self, m: usize, row: Coord) -> u64 {
+        self.factor_base[m] + row as u64 * self.row_bytes as u64
+    }
+}
+
+/// Aggregated controller statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ControllerStats {
+    pub requests: u64,
+    pub total_bytes: u64,
+}
+
+/// The memory-controller simulator top.
+#[derive(Debug, Clone)]
+pub struct MemoryController {
+    cfg: ControllerConfig,
+    dram: Dram,
+    cache: CacheEngine,
+    dma: DmaEngine,
+    remapper: TensorRemapper,
+    stats: ControllerStats,
+    /// Current cycle (requests are processed FIFO).
+    now: u64,
+}
+
+impl MemoryController {
+    pub fn new(cfg: ControllerConfig) -> Self {
+        MemoryController {
+            dram: Dram::new(cfg.dram.clone()),
+            cache: CacheEngine::new(cfg.cache),
+            dma: DmaEngine::new(cfg.dma),
+            remapper: TensorRemapper::new(cfg.remapper),
+            cfg,
+            stats: ControllerStats::default(),
+            now: 0,
+        }
+    }
+
+    pub fn config(&self) -> &ControllerConfig {
+        &self.cfg
+    }
+
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    pub fn cache_stats(&self) -> &CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn dma_stats(&self) -> &DmaStats {
+        self.dma.stats()
+    }
+
+    pub fn remapper_stats(&self) -> &RemapperStats {
+        self.remapper.stats()
+    }
+
+    pub fn dram_stats(&self) -> &DramStats {
+        self.dram.stats()
+    }
+
+    pub fn stats(&self) -> &ControllerStats {
+        &self.stats
+    }
+
+    /// Reset time, engine state, and statistics.
+    pub fn reset(&mut self) {
+        self.dram.reset();
+        self.cache.reset();
+        self.dma.reset();
+        self.remapper.reset();
+        self.stats = ControllerStats::default();
+        self.now = 0;
+    }
+
+    /// Process one request (FIFO: starts no earlier than the previous
+    /// request's completion).  Returns the completion cycle.
+    pub fn request(&mut self, access: Access) -> u64 {
+        self.stats.requests += 1;
+        self.stats.total_bytes += access.bytes() as u64;
+        self.now = match access {
+            Access::Stream { addr, bytes } => {
+                self.dma.stream(&mut self.dram, addr, bytes, self.now)
+            }
+            Access::Element { addr, bytes } => {
+                self.dma.element(&mut self.dram, addr, bytes, self.now)
+            }
+            Access::Cached { addr, bytes } => {
+                self.cache.load(&mut self.dram, addr, bytes, self.now)
+            }
+            Access::CachedStore { addr, bytes } => {
+                self.cache.store(&mut self.dram, addr, bytes, self.now)
+            }
+        };
+        self.now
+    }
+
+    /// Replay a full access trace; returns total cycles.
+    pub fn replay(&mut self, trace: &[Access]) -> u64 {
+        for &a in trace {
+            self.request(a);
+        }
+        self.now
+    }
+
+    /// Run a tensor-remap pass through the Tensor Remapper module
+    /// (paper Alg. 5 lines 3–6).  `src`/`dst` select the ping-pong copy.
+    pub fn remap_pass(
+        &mut self,
+        mode_col: &[Coord],
+        mode_len: usize,
+        layout: &MemLayout,
+        src: usize,
+        dst: usize,
+    ) -> u64 {
+        self.now = self.remapper.run(
+            &mut self.dram,
+            mode_col,
+            mode_len,
+            layout.tensor_base[src],
+            layout.tensor_base[dst],
+            layout.ptr_base,
+            self.now,
+        );
+        self.now
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    fn ctl() -> MemoryController {
+        MemoryController::new(ControllerConfig::default_for(16))
+    }
+
+    #[test]
+    fn fifo_time_is_monotonic() {
+        let mut c = ctl();
+        let mut prev = 0;
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let addr = rng.below(1 << 24);
+            let t = c.request(Access::Cached { addr, bytes: 64 });
+            assert!(t >= prev);
+            prev = t;
+        }
+        assert_eq!(c.stats().requests, 100);
+    }
+
+    #[test]
+    fn cached_rereads_are_fast() {
+        let mut c = ctl();
+        let t1 = c.request(Access::Cached { addr: 0, bytes: 64 });
+        let t2 = c.request(Access::Cached { addr: 0, bytes: 64 });
+        assert_eq!(t2 - t1, c.config().cache.hit_latency);
+    }
+
+    #[test]
+    fn replay_matches_sequential_requests() {
+        let trace: Vec<Access> = (0..50)
+            .map(|i| Access::Stream {
+                addr: i * 4096,
+                bytes: 4096,
+            })
+            .collect();
+        let mut a = ctl();
+        let t_replay = a.replay(&trace);
+        let mut b = ctl();
+        let mut t_seq = 0;
+        for &acc in &trace {
+            t_seq = b.request(acc);
+        }
+        assert_eq!(t_replay, t_seq);
+    }
+
+    #[test]
+    fn layout_regions_are_disjoint_and_aligned() {
+        let l = MemLayout::plan(&[1000, 800, 600], 50_000, 16, 16);
+        assert!(l.tensor_base[0] < l.tensor_base[1]);
+        assert!(l.tensor_base[1] < l.factor_base[0]);
+        assert!(l.factor_base[0] < l.factor_base[1]);
+        assert!(l.factor_base[2] < l.ptr_base);
+        assert!(l.ptr_base < l.partial_base);
+        for base in l.factor_base.iter().chain(l.tensor_base.iter()) {
+            assert_eq!(base % (1 << 20), 0);
+        }
+        assert_eq!(l.factor_row_addr(1, 3), l.factor_base[1] + 3 * 64);
+    }
+
+    #[test]
+    fn onchip_bytes_sums_modules() {
+        let cfg = ControllerConfig::default_for(16);
+        assert_eq!(
+            cfg.onchip_bytes(),
+            cfg.cache.capacity_bytes()
+                + cfg.dma.buffer_capacity_bytes()
+                + cfg.remapper.onchip_bytes()
+        );
+    }
+
+    #[test]
+    fn remap_pass_advances_time_and_records_stats() {
+        use crate::tensor::synth::{generate, Profile, SynthConfig};
+        let t = generate(&SynthConfig {
+            dims: vec![100, 80, 60],
+            nnz: 1_000,
+            profile: Profile::Uniform,
+            seed: 4,
+        });
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 16);
+        let mut c = MemoryController::new(ControllerConfig::default_for(t.record_bytes()));
+        let done = c.remap_pass(t.mode_col(1), t.dims()[1], &layout, 0, 1);
+        assert!(done > 0);
+        assert_eq!(c.remapper_stats().elements, 1_000);
+    }
+
+    #[test]
+    fn reset_restores_fresh_state() {
+        let mut c = ctl();
+        c.request(Access::Stream {
+            addr: 0,
+            bytes: 8192,
+        });
+        c.reset();
+        assert_eq!(c.now(), 0);
+        assert_eq!(c.stats().requests, 0);
+        assert_eq!(c.dram_stats().bursts, 0);
+    }
+}

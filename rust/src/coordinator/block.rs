@@ -1,0 +1,279 @@
+//! Block packing: convert a mode-sorted COO tensor into the fixed-shape
+//! blocks the AOT MTTKRP artifacts consume.
+//!
+//! This is the coordinator-side mirror of the paper's remap guarantee:
+//! because all non-zeros with the same output coordinate are consecutive,
+//! a greedy scan packs up to `blk` non-zeros covering up to `s` distinct
+//! output coordinates per block, assigns block-local output *slots*, and
+//! pads the tail block to the artifact's fixed shape (padded lanes carry
+//! `val = 0`, so they contribute nothing).
+
+use crate::tensor::{Coord, SortOrder, SparseTensor};
+
+/// One fixed-shape MTTKRP block.
+#[derive(Debug, Clone)]
+pub struct Block {
+    /// Half-open nnz range [start, start+len) of real elements.
+    pub start: usize,
+    pub len: usize,
+    /// Block-local output slot of each lane (padded lanes -> slot 0).
+    pub seg_ids: Vec<i32>,
+    /// Output coordinate of each used slot (len <= s).
+    pub slots: Vec<Coord>,
+}
+
+/// Packing parameters, matched to an artifact's (blk, s).
+#[derive(Debug, Clone, Copy)]
+pub struct PackConfig {
+    pub blk: usize,
+    pub s: usize,
+}
+
+/// Pack a tensor sorted by `mode` into blocks.
+pub fn pack(t: &SparseTensor, mode: usize, cfg: PackConfig) -> Vec<Block> {
+    assert_eq!(
+        t.order(),
+        SortOrder::ByMode(mode),
+        "pack requires the tensor sorted by the output mode"
+    );
+    assert!(cfg.blk >= 1 && cfg.s >= 1);
+    let col = t.mode_col(mode);
+    let nnz = col.len();
+    let mut blocks = Vec::new();
+    let mut start = 0usize;
+    while start < nnz {
+        let mut end = start;
+        let mut slots: Vec<Coord> = Vec::with_capacity(cfg.s);
+        let mut seg_ids: Vec<i32> = Vec::with_capacity(cfg.blk);
+        while end < nnz && end - start < cfg.blk {
+            let c = col[end];
+            match slots.last() {
+                Some(&last) if last == c => {}
+                _ => {
+                    if slots.len() == cfg.s {
+                        break;
+                    }
+                    slots.push(c);
+                }
+            }
+            seg_ids.push(slots.len() as i32 - 1);
+            end += 1;
+        }
+        let len = end - start;
+        seg_ids.resize(cfg.blk, 0); // padded lanes
+        blocks.push(Block {
+            start,
+            len,
+            seg_ids,
+            slots,
+        });
+        start = end;
+    }
+    blocks
+}
+
+/// Gather the per-block dense operands for the artifacts: padded `vals`
+/// and one flat row-major `[blk, r]` buffer per input mode.
+pub struct GatheredBlock {
+    pub vals: Vec<f32>,
+    /// One `[blk * r]` buffer per non-output mode, in mode order.
+    pub rows: Vec<Vec<f32>>,
+}
+
+/// Gather operands for `block` against the current factor matrices.
+pub fn gather(
+    t: &SparseTensor,
+    factors: &[crate::cpd::linalg::Mat],
+    mode: usize,
+    block: &Block,
+    blk: usize,
+) -> GatheredBlock {
+    let r = factors[0].cols();
+    let mut g = GatheredBlock {
+        vals: vec![0.0f32; blk],
+        rows: vec![vec![0.0f32; blk * r]; t.n_modes() - 1],
+    };
+    gather_into(t, factors, mode, block, blk, &mut g);
+    g
+}
+
+/// [`gather`] into preallocated buffers (the §Perf hot-loop variant: no
+/// per-block allocation).  `out` must be shaped for (blk, r, n_modes-1).
+pub fn gather_into(
+    t: &SparseTensor,
+    factors: &[crate::cpd::linalg::Mat],
+    mode: usize,
+    block: &Block,
+    blk: usize,
+    out: &mut GatheredBlock,
+) {
+    let r = factors[0].cols();
+    debug_assert_eq!(out.vals.len(), blk);
+    out.vals[..block.len].copy_from_slice(&t.values()[block.start..block.start + block.len]);
+    out.vals[block.len..].fill(0.0);
+
+    let mut ri = 0usize;
+    for m in 0..t.n_modes() {
+        if m == mode {
+            continue;
+        }
+        let col = t.mode_col(m);
+        let buf = &mut out.rows[ri];
+        debug_assert_eq!(buf.len(), blk * r);
+        for k in 0..block.len {
+            let row = factors[m].row(col[block.start + k] as usize);
+            buf[k * r..(k + 1) * r].copy_from_slice(row);
+        }
+        // Padded lanes carry val=0, so stale row data is harmless; zero
+        // anyway to keep the operand deterministic.
+        buf[block.len * r..].fill(0.0);
+        ri += 1;
+    }
+}
+
+/// Build the row-major `[s, blk]` one-hot scatter matrix for a block.
+pub fn onehot(block: &Block, blk: usize, s: usize) -> Vec<f32> {
+    let mut m = vec![0.0f32; s * blk];
+    onehot_into(block, blk, s, &mut m);
+    m
+}
+
+/// [`onehot`] into a preallocated `[s * blk]` buffer (cleared first).
+pub fn onehot_into(block: &Block, blk: usize, s: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), s * blk);
+    out.fill(0.0);
+    // Padded lanes have val=0; point them at slot 0 harmlessly (matches
+    // seg_ids). Only real lanes need their slot bit set for correctness,
+    // but setting all keeps the matrix consistent with seg_ids.
+    for (lane, &slot) in block.seg_ids.iter().enumerate() {
+        out[slot as usize * blk + lane] = 1.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpd::linalg::Mat;
+    use crate::tensor::synth::{generate, Profile, SynthConfig};
+    use crate::testkit::forall;
+
+    fn sorted_tensor(seed: u64, nnz: usize) -> SparseTensor {
+        let mut t = generate(&SynthConfig {
+            dims: vec![50, 40, 30],
+            nnz,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed,
+        });
+        t.sort_by_mode(0);
+        t
+    }
+
+    #[test]
+    fn blocks_cover_all_nnz_in_order() {
+        let t = sorted_tensor(61, 1_000);
+        let blocks = pack(&t, 0, PackConfig { blk: 128, s: 32 });
+        let mut cursor = 0;
+        for b in &blocks {
+            assert_eq!(b.start, cursor);
+            assert!(b.len >= 1 && b.len <= 128);
+            assert!(b.slots.len() <= 32);
+            cursor += b.len;
+        }
+        assert_eq!(cursor, 1_000);
+    }
+
+    #[test]
+    fn seg_ids_map_lanes_to_correct_coords() {
+        forall("pack_segids_consistent", 16, |rng| {
+            let t = sorted_tensor(rng.next_u64(), rng.range(1, 800));
+            let cfg = PackConfig {
+                blk: 1 << rng.range(4, 9),
+                s: 1 << rng.range(2, 7),
+            };
+            let col = t.mode_col(0);
+            for b in pack(&t, 0, cfg) {
+                for k in 0..b.len {
+                    let slot = b.seg_ids[k] as usize;
+                    assert_eq!(
+                        b.slots[slot], col[b.start + k],
+                        "lane {k} of block at {} maps to wrong coord",
+                        b.start
+                    );
+                }
+                // Padded lanes are slot 0.
+                for k in b.len..cfg.blk {
+                    assert_eq!(b.seg_ids[k], 0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn a_fiber_longer_than_blk_spans_blocks() {
+        // All nnz share output coord 0 -> blocks split a single fiber.
+        let entries: Vec<(Vec<Coord>, f32)> = (0..300)
+            .map(|i| (vec![0, (i % 40) as Coord, (i % 30) as Coord], 1.0))
+            .collect();
+        // Dedup may drop duplicates; build unique second coords instead.
+        let entries: Vec<(Vec<Coord>, f32)> = entries
+            .into_iter()
+            .enumerate()
+            .map(|(i, (mut c, v))| {
+                c[1] = (i % 40) as Coord;
+                c[2] = (i / 40) as Coord;
+                (c, v)
+            })
+            .collect();
+        let mut t = SparseTensor::new(vec![4, 40, 30], &entries);
+        t.sort_by_mode(0);
+        let blocks = pack(&t, 0, PackConfig { blk: 128, s: 16 });
+        assert_eq!(blocks.len(), 3); // 300 = 128 + 128 + 44
+        for b in &blocks {
+            assert_eq!(b.slots, vec![0]);
+        }
+    }
+
+    #[test]
+    fn slot_limit_splits_blocks_before_blk() {
+        // Every nnz has a distinct output coord -> s limits block size.
+        let entries: Vec<(Vec<Coord>, f32)> =
+            (0..100).map(|i| (vec![i as Coord, 0, 0], 1.0)).collect();
+        let mut t = SparseTensor::new(vec![100, 1, 1], &entries);
+        t.sort_by_mode(0);
+        let blocks = pack(&t, 0, PackConfig { blk: 128, s: 8 });
+        assert_eq!(blocks.len(), 13); // ceil(100/8)
+        assert!(blocks.iter().all(|b| b.len <= 8));
+    }
+
+    #[test]
+    fn gather_and_onehot_shapes() {
+        let t = sorted_tensor(62, 500);
+        let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 3)).collect();
+        let cfg = PackConfig { blk: 128, s: 32 };
+        let blocks = pack(&t, 0, cfg);
+        let g = gather(&t, &factors, 0, &blocks[0], cfg.blk);
+        assert_eq!(g.vals.len(), 128);
+        assert_eq!(g.rows.len(), 2);
+        assert_eq!(g.rows[0].len(), 128 * 8);
+        let oh = onehot(&blocks[0], cfg.blk, cfg.s);
+        assert_eq!(oh.len(), 32 * 128);
+        // Each lane has exactly one hot slot.
+        for lane in 0..cfg.blk {
+            let hot: f32 = (0..cfg.s).map(|s| oh[s * cfg.blk + lane]).sum();
+            assert_eq!(hot, 1.0);
+        }
+    }
+
+    #[test]
+    fn padded_vals_are_zero() {
+        let t = sorted_tensor(63, 100);
+        let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 4, 3)).collect();
+        let cfg = PackConfig { blk: 256, s: 64 };
+        let blocks = pack(&t, 0, cfg);
+        let last = blocks.last().unwrap();
+        let g = gather(&t, &factors, 0, last, cfg.blk);
+        for k in last.len..cfg.blk {
+            assert_eq!(g.vals[k], 0.0);
+        }
+    }
+}

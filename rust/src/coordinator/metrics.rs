@@ -1,0 +1,116 @@
+//! Coordinator metrics: per-phase wall-clock accounting for the PJRT
+//! dispatch path (gather / host->device / execute / accumulate), plus
+//! block-throughput summaries for the serving-style logs.
+
+use std::time::Duration;
+
+/// Accumulated timings of one coordinator run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub blocks: u64,
+    pub nnz: u64,
+    pub padded_lanes: u64,
+    pub gather: Duration,
+    pub execute: Duration,
+    pub accumulate: Duration,
+    /// Remap passes performed between modes.
+    pub remaps: u64,
+    pub remap: Duration,
+}
+
+impl Metrics {
+    pub fn total(&self) -> Duration {
+        self.gather + self.execute + self.accumulate + self.remap
+    }
+
+    /// Non-zeros processed per second of end-to-end time.
+    pub fn nnz_per_sec(&self) -> f64 {
+        let s = self.total().as_secs_f64();
+        if s == 0.0 {
+            0.0
+        } else {
+            self.nnz as f64 / s
+        }
+    }
+
+    /// Fraction of kernel lanes wasted on padding.
+    pub fn padding_ratio(&self) -> f64 {
+        let lanes = self.nnz + self.padded_lanes;
+        if lanes == 0 {
+            0.0
+        } else {
+            self.padded_lanes as f64 / lanes as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "blocks={} nnz={} pad={:.1}% gather={:?} exec={:?} accum={:?} remap={:?} ({:.0} nnz/s)",
+            self.blocks,
+            self.nnz,
+            100.0 * self.padding_ratio(),
+            self.gather,
+            self.execute,
+            self.accumulate,
+            self.remap,
+            self.nnz_per_sec(),
+        )
+    }
+
+    /// Merge another run's metrics into this one.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.blocks += other.blocks;
+        self.nnz += other.nnz;
+        self.padded_lanes += other.padded_lanes;
+        self.gather += other.gather;
+        self.execute += other.execute;
+        self.accumulate += other.accumulate;
+        self.remaps += other.remaps;
+        self.remap += other.remap;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padding_ratio_and_throughput() {
+        let m = Metrics {
+            blocks: 4,
+            nnz: 900,
+            padded_lanes: 100,
+            execute: Duration::from_millis(100),
+            ..Default::default()
+        };
+        assert!((m.padding_ratio() - 0.1).abs() < 1e-12);
+        assert!((m.nnz_per_sec() - 9000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = Metrics {
+            blocks: 1,
+            nnz: 10,
+            ..Default::default()
+        };
+        let b = Metrics {
+            blocks: 2,
+            nnz: 20,
+            remaps: 1,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.blocks, 3);
+        assert_eq!(a.nnz, 30);
+        assert_eq!(a.remaps, 1);
+    }
+
+    #[test]
+    fn zero_division_is_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.nnz_per_sec(), 0.0);
+        assert_eq!(m.padding_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,269 @@
+//! L3 coordinator (S13): the leader that drives CP-ALS with the MTTKRP
+//! hot path offloaded to the AOT-compiled PJRT executables.
+//!
+//! This is the runtime mirror of the paper's division of labour: the
+//! *memory controller* (here: remap + block packing + row gather) feeds
+//! dense, fixed-shape operands to a *dumb, fast compute unit* (here: the
+//! Pallas-derived MTTKRP block kernel on PJRT instead of FPGA MAC
+//! pipelines).  Python is never touched: artifacts are loaded from disk.
+
+pub mod block;
+pub mod metrics;
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::cpd::linalg::Mat;
+use crate::cpd::MttkrpBackend;
+use crate::runtime::Runtime;
+use crate::tensor::{remap, SortOrder, SparseTensor};
+
+pub use block::{gather, gather_into, onehot, onehot_into, pack, Block, GatheredBlock, PackConfig};
+pub use metrics::Metrics;
+
+/// Segment encoding variant to use (DESIGN.md D2 ablation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegMode {
+    /// One-hot scatter matrix built host-side; kernel is a pure matmul.
+    Onehot,
+    /// One-hot matmul form lowered without Pallas (pure jnp): isolates
+    /// interpret-mode overhead on CPU backends (§Perf L1).
+    OnehotJnp,
+    /// int32 segment ids; the one-hot materializes inside the graph.
+    SegIds,
+    /// int32 segment ids through the jnp segment-sum reference graph.
+    RefSeg,
+}
+
+impl SegMode {
+    fn manifest_key(self) -> &'static str {
+        match self {
+            SegMode::Onehot => "onehot",
+            SegMode::OnehotJnp => "onehot_jnp",
+            SegMode::SegIds => "segids",
+            SegMode::RefSeg => "refseg",
+        }
+    }
+}
+
+/// The PJRT-offloading coordinator.  Implements [`MttkrpBackend`] so
+/// [`crate::cpd::cp_als`] can run unchanged on top of it.
+pub struct PjrtCoordinator {
+    rt: Runtime,
+    seg_mode: SegMode,
+    metrics: Metrics,
+}
+
+impl PjrtCoordinator {
+    pub fn new(rt: Runtime, seg_mode: SegMode) -> Self {
+        PjrtCoordinator {
+            rt,
+            seg_mode,
+            metrics: Metrics::default(),
+        }
+    }
+
+    /// Open the default artifacts directory with the one-hot kernel.
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(Runtime::open_default()?, SegMode::Onehot))
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn reset_metrics(&mut self) {
+        self.metrics = Metrics::default();
+    }
+
+    /// Compute one mode's MTTKRP via blocked PJRT dispatch.  The tensor
+    /// is remapped into the mode's direction if needed (paper Alg. 5).
+    pub fn mttkrp_pjrt(
+        &mut self,
+        t: &mut SparseTensor,
+        factors: &[Mat],
+        mode: usize,
+    ) -> Result<Mat> {
+        let n_modes = t.n_modes();
+        let r = factors[0].cols();
+        let seg = self.seg_mode;
+
+        // Remap into output direction (the coordinator plays the Tensor
+        // Remapper's role on the host data structure).
+        if t.order() != SortOrder::ByMode(mode) {
+            let t0 = Instant::now();
+            remap::remap(t, mode, usize::MAX);
+            self.metrics.remap += t0.elapsed();
+            self.metrics.remaps += 1;
+        }
+
+        let meta = self
+            .rt
+            .find_mttkrp(n_modes, r, seg.manifest_key())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no mttkrp artifact for modes={n_modes} r={r} seg={} — \
+                     add the variant to python/compile/aot.py and re-run `make artifacts`",
+                    seg.manifest_key()
+                )
+            })?;
+        let name = meta.name.clone();
+        let (blk, s) = (
+            meta.int("blk").ok_or_else(|| anyhow!("blk missing"))?,
+            meta.int("s").ok_or_else(|| anyhow!("s missing"))?,
+        );
+
+        let blocks = pack(t, mode, PackConfig { blk, s });
+        let mut out = Mat::zeros(t.dims()[mode], r);
+
+        // §Perf: scratch buffers reused across blocks (no per-block
+        // allocation in the hot loop).
+        let mut g = block::GatheredBlock {
+            vals: vec![0.0f32; blk],
+            rows: vec![vec![0.0f32; blk * r]; n_modes - 1],
+        };
+        let mut oh = vec![0.0f32; s * blk];
+
+        for b in &blocks {
+            let t0 = Instant::now();
+            block::gather_into(t, factors, mode, b, blk, &mut g);
+            let row_refs: Vec<&[f32]> = g.rows.iter().map(|v| v.as_slice()).collect();
+            self.metrics.gather += t0.elapsed();
+
+            let t1 = Instant::now();
+            let partial = match seg {
+                SegMode::Onehot | SegMode::OnehotJnp => {
+                    block::onehot_into(b, blk, s, &mut oh);
+                    self.rt
+                        .mttkrp_block_onehot(&name, &oh, &g.vals, &row_refs)?
+                }
+                SegMode::SegIds | SegMode::RefSeg => {
+                    self.rt
+                        .mttkrp_block_segids(&name, &b.seg_ids, &g.vals, &row_refs)?
+                }
+            };
+            self.metrics.execute += t1.elapsed();
+
+            let t2 = Instant::now();
+            // Accumulate used slots into the output rows (a fiber can
+            // span blocks, so += not =).
+            for (slot, &coord) in b.slots.iter().enumerate() {
+                let dst = out.row_mut(coord as usize);
+                let src = &partial[slot * r..(slot + 1) * r];
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d += v;
+                }
+            }
+            self.metrics.accumulate += t2.elapsed();
+
+            self.metrics.blocks += 1;
+            self.metrics.nnz += b.len as u64;
+            self.metrics.padded_lanes += (blk - b.len) as u64;
+        }
+        Ok(out)
+    }
+}
+
+impl MttkrpBackend for PjrtCoordinator {
+    fn mttkrp(&mut self, t: &mut SparseTensor, factors: &[Mat], mode: usize) -> Mat {
+        self.mttkrp_pjrt(t, factors, mode)
+            .expect("PJRT MTTKRP failed")
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::oracle;
+    use crate::tensor::synth::{generate, Profile, SynthConfig};
+    use crate::testkit::assert_allclose;
+    use std::path::Path;
+
+    fn artifacts_available() -> bool {
+        Path::new("artifacts/manifest.txt").exists()
+    }
+
+    fn setup(seed: u64, r: usize) -> (SparseTensor, Vec<Mat>) {
+        let t = generate(&SynthConfig {
+            dims: vec![80, 60, 40],
+            nnz: 3_000,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed,
+        });
+        let factors = t
+            .dims()
+            .iter()
+            .enumerate()
+            .map(|(m, &d)| Mat::randn(d, r, seed + m as u64))
+            .collect();
+        (t, factors)
+    }
+
+    #[test]
+    fn pjrt_mttkrp_matches_oracle() {
+        if !artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let (mut t, factors) = setup(71, 16);
+        let mut c = PjrtCoordinator::open_default().unwrap();
+        for mode in 0..3 {
+            let want = oracle::mttkrp(&t, &factors, mode);
+            let got = c.mttkrp_pjrt(&mut t, &factors, mode).unwrap();
+            assert_allclose(got.data(), want.data(), 1e-4, 1e-4);
+        }
+        assert!(c.metrics().blocks > 0);
+        assert!(c.metrics().remaps >= 2);
+    }
+
+    #[test]
+    fn segids_variant_matches_oracle() {
+        if !artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let (mut t, factors) = setup(72, 16);
+        let rt = Runtime::open_default().unwrap();
+        let mut c = PjrtCoordinator::new(rt, SegMode::SegIds);
+        let want = oracle::mttkrp(&t, &factors, 0);
+        let got = c.mttkrp_pjrt(&mut t, &factors, 0).unwrap();
+        assert_allclose(got.data(), want.data(), 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn missing_variant_is_a_clean_error() {
+        if !artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        let (mut t, factors) = setup(73, 7); // r=7 has no artifact
+        let mut c = PjrtCoordinator::open_default().unwrap();
+        let err = c.mttkrp_pjrt(&mut t, &factors, 0).unwrap_err();
+        assert!(err.to_string().contains("no mttkrp artifact"), "{err}");
+    }
+
+    #[test]
+    fn cp_als_runs_on_pjrt_backend() {
+        if !artifacts_available() {
+            eprintln!("SKIP: run `make artifacts` first");
+            return;
+        }
+        use crate::cpd::{cp_als, AlsConfig};
+        let (mut t, _) = setup(74, 16);
+        let mut c = PjrtCoordinator::open_default().unwrap();
+        let cfg = AlsConfig {
+            rank: 16,
+            max_iters: 3,
+            tol: 0.0,
+            ..Default::default()
+        };
+        let model = cp_als(&mut t, &cfg, &mut c);
+        assert_eq!(model.fit_history.len(), 3);
+        assert!(model.final_fit().is_finite());
+    }
+}

@@ -1,0 +1,373 @@
+//! From-scratch dense linear algebra (S9 substrate): row-major f32
+//! matrices with exactly the operations CP-ALS needs — Gram matrices,
+//! Hadamard products, Cholesky-based SPD inverse, column normalization.
+//!
+//! No external crates are available in the offline build; R is small
+//! (8–64) so naive O(R^3) routines are ample.
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |r| r.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    /// Random N(0,1) entries (deterministic per seed).
+    pub fn randn(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = crate::testkit::Rng::new(seed);
+        Mat::from_fn(rows, cols, |_, _| rng.normal() as f32)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Gram matrix `A^T A` (cols x cols, symmetric PSD).
+    pub fn gram(&self) -> Mat {
+        let c = self.cols;
+        let mut g = Mat::zeros(c, c);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for a in 0..c {
+                let ra = row[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                for b in a..c {
+                    g.data[a * c + b] += ra * row[b];
+                }
+            }
+        }
+        for a in 0..c {
+            for b in 0..a {
+                g.data[a * c + b] = g.data[b * c + a];
+            }
+        }
+        g
+    }
+
+    /// Element-wise (Hadamard) product, in place.
+    pub fn hadamard_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+    }
+
+    /// Dense matmul `self (m x k) * other (k x n)`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, n);
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[p * n..(p + 1) * n];
+                let dst = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    dst[j] += a * orow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Sum of element-wise products `<self, other>_F`.
+    pub fn dot(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum()
+    }
+
+    /// Normalize each column to unit 2-norm; returns the norms (the CP
+    /// lambda vector).  Zero columns get lambda 0 and are left as-is.
+    pub fn normalize_columns(&mut self) -> Vec<f32> {
+        let mut norms = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let v = self.data[i * self.cols + j] as f64;
+                norms[j] += v * v;
+            }
+        }
+        let norms: Vec<f32> = norms.iter().map(|&n| n.sqrt() as f32).collect();
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                if norms[j] > 0.0 {
+                    self.data[i * self.cols + j] /= norms[j];
+                }
+            }
+        }
+        norms
+    }
+
+    /// Scale column `j` by `s`.
+    pub fn scale_column(&mut self, j: usize, s: f32) {
+        for i in 0..self.rows {
+            self.data[i * self.cols + j] *= s;
+        }
+    }
+}
+
+/// Cholesky factorization of an SPD matrix (lower triangular L with
+/// `A = L L^T`).  Returns None if not positive definite.
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.get(i, j) as f64;
+            for k in 0..j {
+                sum -= l.get(i, k) as f64 * l.get(j, k) as f64;
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l.set(i, j, sum.sqrt() as f32);
+            } else {
+                l.set(i, j, (sum / l.get(j, j) as f64) as f32);
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Inverse of an SPD matrix via Cholesky; adds `ridge * mean(diag)` to
+/// the diagonal on failure and retries (ALS Gram-Hadamard matrices can be
+/// near-singular when factors are collinear).
+pub fn spd_inverse(a: &Mat, ridge: f32) -> Mat {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut work = a.clone();
+    let mean_diag: f32 = (0..n).map(|i| a.get(i, i)).sum::<f32>() / n as f32;
+    let mut bump = 0.0f32;
+    let l = loop {
+        if let Some(l) = cholesky(&work) {
+            break l;
+        }
+        bump = if bump == 0.0 {
+            ridge * mean_diag.max(1e-12)
+        } else {
+            bump * 10.0
+        };
+        work = a.clone();
+        for i in 0..n {
+            work.set(i, i, work.get(i, i) + bump);
+        }
+        assert!(
+            bump.is_finite() && bump < 1e12,
+            "spd_inverse: could not regularize"
+        );
+    };
+    // Solve L L^T X = I column by column.
+    let mut inv = Mat::zeros(n, n);
+    for col in 0..n {
+        // Forward: L y = e_col
+        let mut y = vec![0.0f64; n];
+        for i in 0..n {
+            let mut s = if i == col { 1.0 } else { 0.0 };
+            for k in 0..i {
+                s -= l.get(i, k) as f64 * y[k];
+            }
+            y[i] = s / l.get(i, i) as f64;
+        }
+        // Backward: L^T x = y
+        let mut x = vec![0.0f64; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= l.get(k, i) as f64 * x[k];
+            }
+            x[i] = s / l.get(i, i) as f64;
+        }
+        for i in 0..n {
+            inv.set(i, col, x[i] as f32);
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{assert_allclose, forall};
+
+    #[test]
+    fn gram_of_identity_is_identity() {
+        let g = Mat::eye(4).gram();
+        assert_eq!(g, Mat::eye(4));
+    }
+
+    #[test]
+    fn gram_matches_explicit_transpose_matmul() {
+        forall("gram_vs_matmul", 16, |rng| {
+            let (m, n) = (rng.range(1, 20), rng.range(1, 8));
+            let a = Mat::randn(m, n, rng.next_u64());
+            let at = Mat::from_fn(n, m, |i, j| a.get(j, i));
+            let want = at.matmul(&a);
+            let got = a.gram();
+            assert_allclose(got.data(), want.data(), 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn matmul_identity_is_noop() {
+        let a = Mat::randn(5, 5, 1);
+        let got = a.matmul(&Mat::eye(5));
+        assert_allclose(got.data(), a.data(), 1e-6, 0.0);
+    }
+
+    #[test]
+    fn matmul_known_case() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn hadamard_known_case() {
+        let mut a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        a.hadamard_assign(&Mat::from_rows(&[&[2.0, 0.5], &[1.0, -1.0]]));
+        assert_eq!(a.data(), &[2.0, 1.0, 3.0, -4.0]);
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        forall("cholesky_roundtrip", 16, |rng| {
+            let n = rng.range(1, 8);
+            let b = Mat::randn(n + 2, n, rng.next_u64());
+            let mut a = b.gram(); // SPD (a.s.)
+            for i in 0..n {
+                a.set(i, i, a.get(i, i) + 0.1); // ensure PD
+            }
+            let l = cholesky(&a).expect("PD");
+            let lt = Mat::from_fn(n, n, |i, j| l.get(j, i));
+            let back = l.matmul(&lt);
+            assert_allclose(back.data(), a.data(), 1e-3, 1e-3);
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eig -1, 3
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn spd_inverse_times_matrix_is_identity() {
+        forall("spd_inverse", 16, |rng| {
+            let n = rng.range(1, 10);
+            let b = Mat::randn(n + 3, n, rng.next_u64());
+            let mut a = b.gram();
+            for i in 0..n {
+                a.set(i, i, a.get(i, i) + 0.5);
+            }
+            let inv = spd_inverse(&a, 1e-6);
+            let prod = a.matmul(&inv);
+            assert_allclose(prod.data(), Mat::eye(n).data(), 5e-2, 5e-2);
+        });
+    }
+
+    #[test]
+    fn spd_inverse_regularizes_singular_input() {
+        // Rank-1 Gram: singular; ridge path must still return something
+        // finite with A*inv ~ I on the non-null space.
+        let v = Mat::from_rows(&[&[1.0, 2.0]]);
+        let g = v.gram(); // 2x2 rank 1
+        let inv = spd_inverse(&g, 1e-6);
+        assert!(inv.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn normalize_columns_returns_norms_and_unit_columns() {
+        let mut a = Mat::from_rows(&[&[3.0, 0.0], &[4.0, 0.0]]);
+        let norms = a.normalize_columns();
+        assert_allclose(&norms, &[5.0, 0.0], 1e-6, 1e-6);
+        assert_allclose(a.data(), &[0.6, 0.0, 0.8, 0.0], 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn fro_norm_and_dot() {
+        let a = Mat::from_rows(&[&[3.0, 4.0]]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-9);
+        let b = Mat::from_rows(&[&[1.0, 2.0]]);
+        assert!((a.dot(&b) - 11.0).abs() < 1e-9);
+    }
+}

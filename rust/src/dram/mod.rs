@@ -1,0 +1,352 @@
+//! DRAM timing model (S2) — the hardware substitution for the FPGA
+//! board's external memory (DESIGN.md §2).
+//!
+//! The paper's whole argument rests on DRAM access-time asymmetry:
+//! streaming bulk transfers amortize row activations while random
+//! element accesses pay activate/precharge on nearly every request
+//! (§4: "Accessing the data in bulk can reduce the total memory access
+//! time. It is due to the characteristics of the DRAM").  This module
+//! reproduces exactly that asymmetry with a bank/row-buffer state model
+//! driven by request traces: per-bank open row, tRCD / tRP / tCL / tBURST
+//! timing classes, and multi-channel parallelism.
+//!
+//! Times are in *memory-controller cycles*; [`DramConfig::default_ddr4`]
+//! maps to DDR4-2400-class timings at the controller clock.
+
+pub mod address;
+
+pub use address::{AddressMap, Mapped};
+
+/// DRAM timing / geometry parameters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DramConfig {
+    /// Independent channels (separate data buses, e.g. one per SLR DDR).
+    pub channels: usize,
+    /// Banks per channel.
+    pub banks: usize,
+    /// Row-buffer (page) size in bytes.
+    pub row_bytes: usize,
+    /// Bytes moved per burst (bus width x burst length).
+    pub burst_bytes: usize,
+    /// ACT-to-READ/WRITE delay (cycles).
+    pub t_rcd: u64,
+    /// Precharge delay (cycles).
+    pub t_rp: u64,
+    /// CAS latency (cycles).
+    pub t_cl: u64,
+    /// Data transfer time of one burst (cycles).
+    pub t_burst: u64,
+}
+
+impl DramConfig {
+    /// DDR4-2400-like single-DIMM config at a 300 MHz controller clock:
+    /// 16 banks, 8 KiB rows, 64 B bursts, tRCD=tRP=tCL≈5 controller
+    /// cycles, burst occupies the bus for 2 cycles.
+    pub fn default_ddr4() -> Self {
+        DramConfig {
+            channels: 1,
+            banks: 16,
+            row_bytes: 8192,
+            burst_bytes: 64,
+            t_rcd: 5,
+            t_rp: 5,
+            t_cl: 5,
+            t_burst: 2,
+        }
+    }
+
+    /// Four-channel config (Alveo U250-like: one DDR4 DIMM per SLR).
+    pub fn u250_quad() -> Self {
+        DramConfig {
+            channels: 4,
+            ..Self::default_ddr4()
+        }
+    }
+
+    /// Peak bandwidth in bytes/cycle (all channels streaming).
+    pub fn peak_bytes_per_cycle(&self) -> f64 {
+        self.channels as f64 * self.burst_bytes as f64 / self.t_burst as f64
+    }
+}
+
+/// Outcome class of one burst access (row-buffer policy: open page).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowOutcome {
+    /// Row already open: tCL + tBURST.
+    Hit,
+    /// Bank idle (no open row): tRCD + tCL + tBURST.
+    Miss,
+    /// Different row open: tRP + tRCD + tCL + tBURST.
+    Conflict,
+}
+
+/// Aggregate DRAM statistics.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DramStats {
+    pub bursts: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+    pub bytes: u64,
+}
+
+impl DramStats {
+    /// Row-buffer hit rate over all bursts.
+    pub fn hit_rate(&self) -> f64 {
+        if self.bursts == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / self.bursts as f64
+        }
+    }
+}
+
+/// Bank state: the open row, if any.
+#[derive(Debug, Clone, Copy, Default)]
+struct Bank {
+    open_row: Option<u64>,
+    /// Cycle at which this bank finishes its last operation.
+    ready_at: u64,
+}
+
+/// One DRAM channel: banks + a shared data bus.
+#[derive(Debug, Clone)]
+struct Channel {
+    banks: Vec<Bank>,
+    /// Cycle at which the data bus is next free.
+    bus_free_at: u64,
+}
+
+/// The DRAM device model.  Drive it with [`Dram::access`] calls carrying
+/// absolute byte addresses and lengths; it splits them into bursts,
+/// updates bank state, and advances per-channel time.  `now` lets the
+/// caller model idle gaps; the device never goes back in time.
+#[derive(Debug, Clone)]
+pub struct Dram {
+    cfg: DramConfig,
+    map: AddressMap,
+    channels: Vec<Channel>,
+    stats: DramStats,
+}
+
+impl Dram {
+    pub fn new(cfg: DramConfig) -> Self {
+        let map = AddressMap::new(&cfg);
+        let channels = (0..cfg.channels)
+            .map(|_| Channel {
+                banks: vec![Bank::default(); cfg.banks],
+                bus_free_at: 0,
+            })
+            .collect();
+        Dram {
+            cfg,
+            map,
+            channels,
+            stats: DramStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &DramConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> &DramStats {
+        &self.stats
+    }
+
+    /// Reset bank/bus state and statistics (fresh epoch).
+    pub fn reset(&mut self) {
+        for ch in &mut self.channels {
+            ch.bus_free_at = 0;
+            for b in &mut ch.banks {
+                *b = Bank::default();
+            }
+        }
+        self.stats = DramStats::default();
+    }
+
+    /// Access `len` bytes at `addr` starting no earlier than `start`;
+    /// returns the completion cycle.  Splits into burst-aligned accesses;
+    /// consecutive bursts in the same open row pipeline on the bus.
+    pub fn access(&mut self, addr: u64, len: usize, start: u64) -> u64 {
+        assert!(len > 0, "zero-length DRAM access");
+        let bb = self.cfg.burst_bytes as u64;
+        let first = addr / bb;
+        let last = (addr + len as u64 - 1) / bb;
+        let mut done = start;
+        for burst in first..=last {
+            done = done.max(self.access_burst(burst * bb, start));
+        }
+        done
+    }
+
+    /// One burst access; returns completion cycle.
+    fn access_burst(&mut self, addr: u64, start: u64) -> u64 {
+        let m = self.map.map(addr);
+        let ch = &mut self.channels[m.channel];
+        let bank = &mut ch.banks[m.bank];
+
+        let outcome = match bank.open_row {
+            Some(r) if r == m.row => RowOutcome::Hit,
+            Some(_) => RowOutcome::Conflict,
+            None => RowOutcome::Miss,
+        };
+        let (lat_pre, class) = match outcome {
+            RowOutcome::Hit => (self.cfg.t_cl, &mut self.stats.row_hits),
+            RowOutcome::Miss => (self.cfg.t_rcd + self.cfg.t_cl, &mut self.stats.row_misses),
+            RowOutcome::Conflict => (
+                self.cfg.t_rp + self.cfg.t_rcd + self.cfg.t_cl,
+                &mut self.stats.row_conflicts,
+            ),
+        };
+        *class += 1;
+        self.stats.bursts += 1;
+        self.stats.bytes += self.cfg.burst_bytes as u64;
+
+        // Command issues when both the bank and the caller are ready;
+        // data needs the bus after the access latency.
+        let issue = start.max(bank.ready_at);
+        let data_start = (issue + lat_pre).max(ch.bus_free_at);
+        let done = data_start + self.cfg.t_burst;
+        bank.open_row = Some(m.row);
+        bank.ready_at = data_start; // next access to this bank can overlap CAS
+        ch.bus_free_at = done;
+        done
+    }
+
+    /// Current makespan: max completion across channels.
+    pub fn makespan(&self) -> u64 {
+        self.channels.iter().map(|c| c.bus_free_at).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_bank_cfg() -> DramConfig {
+        DramConfig {
+            channels: 1,
+            banks: 1,
+            row_bytes: 1024,
+            burst_bytes: 64,
+            t_rcd: 5,
+            t_rp: 5,
+            t_cl: 5,
+            t_burst: 2,
+        }
+    }
+
+    #[test]
+    fn first_access_is_a_row_miss() {
+        let mut d = Dram::new(one_bank_cfg());
+        let done = d.access(0, 64, 0);
+        // miss: tRCD + tCL + tBURST = 5 + 5 + 2
+        assert_eq!(done, 12);
+        assert_eq!(d.stats().row_misses, 1);
+    }
+
+    #[test]
+    fn same_row_second_access_is_a_hit() {
+        let mut d = Dram::new(one_bank_cfg());
+        let t1 = d.access(0, 64, 0);
+        let t2 = d.access(64, 64, t1);
+        assert_eq!(d.stats().row_hits, 1);
+        assert!(t2 - t1 < t1, "hit should be cheaper than cold miss");
+    }
+
+    #[test]
+    fn different_row_is_a_conflict_and_slowest() {
+        let mut d = Dram::new(one_bank_cfg());
+        let t1 = d.access(0, 64, 0);
+        let t2 = d.access(4096, 64, t1); // beyond row_bytes => other row
+        assert_eq!(d.stats().row_conflicts, 1);
+        // conflict latency = tRP+tRCD+tCL+tBURST = 17
+        assert_eq!(t2 - t1, 17);
+    }
+
+    #[test]
+    fn multi_burst_access_splits_correctly() {
+        let mut d = Dram::new(one_bank_cfg());
+        d.access(0, 256, 0); // 4 bursts
+        assert_eq!(d.stats().bursts, 4);
+        assert_eq!(d.stats().bytes, 256);
+        assert_eq!(d.stats().row_misses, 1);
+        assert_eq!(d.stats().row_hits, 3);
+    }
+
+    #[test]
+    fn unaligned_access_touches_both_bursts() {
+        let mut d = Dram::new(one_bank_cfg());
+        d.access(60, 8, 0); // straddles burst boundary at 64
+        assert_eq!(d.stats().bursts, 2);
+    }
+
+    #[test]
+    fn streaming_is_much_faster_than_random_per_byte() {
+        let cfg = DramConfig::default_ddr4();
+        let total = 1 << 20; // 1 MiB
+        let mut stream = Dram::new(cfg.clone());
+        let mut t = 0;
+        for off in (0..total).step_by(cfg.burst_bytes) {
+            t = stream.access(off as u64, cfg.burst_bytes, t);
+        }
+        let stream_cycles = stream.makespan();
+
+        let mut random = Dram::new(cfg.clone());
+        let mut rng = crate::testkit::Rng::new(1);
+        let mut t = 0;
+        for _ in 0..total / cfg.burst_bytes {
+            let addr = rng.below((256u64) << 20) / 64 * 64;
+            t = random.access(addr, cfg.burst_bytes, t);
+        }
+        let random_cycles = random.makespan();
+        assert!(
+            random_cycles > 2 * stream_cycles,
+            "random {random_cycles} should be >2x stream {stream_cycles}"
+        );
+        assert!(stream.stats().hit_rate() > 0.95);
+    }
+
+    #[test]
+    fn channels_parallelize_independent_streams() {
+        let mut cfg = DramConfig::default_ddr4();
+        cfg.channels = 4;
+        let mut d = Dram::new(cfg.clone());
+        // One pass of sequential bursts round-robins channels (low bits);
+        // makespan should be ~1/4 of the single channel case.
+        let total = 1 << 20;
+        for off in (0..total).step_by(cfg.burst_bytes) {
+            d.access(off as u64, cfg.burst_bytes, 0);
+        }
+        let quad = d.makespan();
+
+        let mut cfg1 = cfg.clone();
+        cfg1.channels = 1;
+        let mut d1 = Dram::new(cfg1);
+        for off in (0..total).step_by(cfg.burst_bytes) {
+            d1.access(off as u64, cfg.burst_bytes, 0);
+        }
+        let single = d1.makespan();
+        let ratio = single as f64 / quad as f64;
+        assert!(ratio > 3.0, "expected ~4x channel speedup, got {ratio}");
+    }
+
+    #[test]
+    fn reset_clears_state_and_stats() {
+        let mut d = Dram::new(one_bank_cfg());
+        d.access(0, 64, 0);
+        d.reset();
+        assert_eq!(d.stats(), &DramStats::default());
+        assert_eq!(d.makespan(), 0);
+        // After reset the same access is a miss again.
+        d.access(0, 64, 0);
+        assert_eq!(d.stats().row_misses, 1);
+    }
+
+    #[test]
+    fn peak_bandwidth_formula() {
+        let cfg = DramConfig::default_ddr4();
+        assert!((cfg.peak_bytes_per_cycle() - 32.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,194 @@
+//! FPGA on-chip resource model (S7, paper §5.2/§5.3): BRAM/URAM block
+//! accounting for a memory-controller configuration, plus a device
+//! catalog of Alveo-class parts.
+//!
+//! The PMS (§5.3) "should estimate the total FPGA on-chip memory
+//! requirement for a given set of programmable parameters to make sure
+//! the memory controller fits in the FPGA device" — this module is that
+//! estimator.  Block RAM granularity matters: a 4-line cache still burns
+//! whole BRAM36 blocks per way, which is why module budgets trade off
+//! against each other in the DSE.
+
+use crate::controller::ControllerConfig;
+
+/// One BRAM36 block: 36 Kbit = 4.5 KiB usable as 4 KiB data + parity.
+pub const BRAM36_BYTES: usize = 4 * 1024;
+/// One URAM288 block: 288 Kbit = 36 KiB.
+pub const URAM_BYTES: usize = 36 * 1024;
+
+/// An FPGA device's memory resources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Device {
+    pub name: &'static str,
+    pub bram36: usize,
+    pub uram: usize,
+    /// DRAM channels on the board (bounds `DramConfig::channels`).
+    pub dram_channels: usize,
+}
+
+impl Device {
+    /// Xilinx Alveo U250 (paper's reference platform family): 2,000
+    /// BRAM36 + 1,280 URAM, 4 DDR4 channels.
+    pub fn alveo_u250() -> Self {
+        Device {
+            name: "alveo-u250",
+            bram36: 2000,
+            uram: 1280,
+            dram_channels: 4,
+        }
+    }
+
+    /// Alveo U280: 1,824 BRAM36 + 960 URAM (plus HBM: 32 pseudo-channels,
+    /// modeled as dram_channels=8 at this abstraction).
+    pub fn alveo_u280() -> Self {
+        Device {
+            name: "alveo-u280",
+            bram36: 1824,
+            uram: 960,
+            dram_channels: 8,
+        }
+    }
+
+    /// A mid-size VU9P-class part with a single DIMM.
+    pub fn vu9p() -> Self {
+        Device {
+            name: "vu9p",
+            bram36: 2160,
+            uram: 960,
+            dram_channels: 1,
+        }
+    }
+
+    /// Total on-chip memory bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.bram36 * BRAM36_BYTES + self.uram * URAM_BYTES
+    }
+}
+
+/// Resource usage of a controller configuration on a device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Usage {
+    pub bram36_used: usize,
+    pub uram_used: usize,
+    /// True iff the configuration fits the device.
+    pub fits: bool,
+}
+
+impl Usage {
+    /// Fraction of the device's total memory bytes consumed.
+    pub fn utilization(&self, dev: &Device) -> f64 {
+        (self.bram36_used * BRAM36_BYTES + self.uram_used * URAM_BYTES) as f64
+            / dev.total_bytes() as f64
+    }
+}
+
+/// Fraction of a device's memory blocks available to the *memory
+/// controller*: the compute units (MAC pipelines, FIFOs, AXI
+/// infrastructure) claim the rest.  This is why the paper's §3 example —
+/// a 40 MB pointer table on a ~53 MB-of-SRAM device — "does not fit in
+/// the FPGA on-chip memory".
+pub const MC_BUDGET_FRACTION: f64 = 0.5;
+
+/// Map a controller configuration onto `dev`'s block budget.
+///
+/// Allocation policy (typical synthesis outcome):
+/// * Cache data+tag arrays -> BRAM (need per-way independent ports);
+///   tags add ~8 bytes/line.
+/// * DMA buffers -> URAM first (deep sequential FIFOs), overflow to BRAM.
+/// * Remapper pointer table + stream buffer -> URAM first, overflow BRAM.
+pub fn estimate(cfg: &ControllerConfig, dev: &Device) -> Usage {
+    let bram_budget = (dev.bram36 as f64 * MC_BUDGET_FRACTION) as usize;
+    let uram_budget = (dev.uram as f64 * MC_BUDGET_FRACTION) as usize;
+
+    let cache_bytes = cfg.cache.capacity_bytes() + cfg.cache.num_lines * 8;
+    let bram_for_cache = cache_bytes.div_ceil(BRAM36_BYTES);
+
+    let uram_wanted_bytes = cfg.dma.buffer_capacity_bytes() + cfg.remapper.onchip_bytes();
+    let uram_blocks_wanted = uram_wanted_bytes.div_ceil(URAM_BYTES);
+    let uram_used = uram_blocks_wanted.min(uram_budget);
+    let overflow_bytes = uram_blocks_wanted.saturating_sub(uram_budget) * URAM_BYTES;
+    let bram_overflow = overflow_bytes.div_ceil(BRAM36_BYTES);
+
+    // URAM overflow was re-homed to BRAM above, so fitting reduces to
+    // the BRAM budget (uram_used is clamped to the budget by construction).
+    let bram36_used = bram_for_cache + bram_overflow;
+    Usage {
+        bram36_used,
+        uram_used,
+        fits: bram36_used <= bram_budget,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::{CacheConfig, ControllerConfig, DmaConfig, RemapperConfig};
+    use crate::dram::DramConfig;
+
+    fn cfg(cache_lines: usize, max_pointers: usize) -> ControllerConfig {
+        ControllerConfig {
+            dram: DramConfig::default_ddr4(),
+            cache: CacheConfig {
+                line_bytes: 64,
+                num_lines: cache_lines,
+                assoc: 4,
+                hit_latency: 2,
+            },
+            dma: DmaConfig::default_2x4k(),
+            remapper: RemapperConfig {
+                buffer_bytes: 16 * 1024,
+                elem_bytes: 16,
+                max_pointers,
+                store_setup_cycles: 4,
+            },
+        }
+    }
+
+    #[test]
+    fn default_config_fits_u250() {
+        let u = estimate(&cfg(1024, 64 * 1024), &Device::alveo_u250());
+        assert!(u.fits, "{u:?}");
+        assert!(u.bram36_used > 0 && u.uram_used > 0);
+    }
+
+    #[test]
+    fn monster_cache_does_not_fit() {
+        // 64 MiB cache >> U250's ~12.7 MiB of BRAM.
+        let u = estimate(&cfg(1 << 20, 1024), &Device::alveo_u250());
+        assert!(!u.fits);
+    }
+
+    #[test]
+    fn pointer_table_scales_uram() {
+        let small = estimate(&cfg(1024, 1024), &Device::alveo_u250());
+        let big = estimate(&cfg(1024, 4 << 20), &Device::alveo_u250());
+        assert!(big.uram_used > small.uram_used);
+    }
+
+    #[test]
+    fn paper_example_10m_pointers_exceed_onchip() {
+        // §3: "a tensor with an output mode with 10 million coordinate
+        // values requires 40 MB ... does not fit in the FPGA on-chip
+        // memory."  Our model must agree for every catalog device.
+        let c = cfg(1024, 10_000_000);
+        for dev in [Device::alveo_u250(), Device::alveo_u280(), Device::vu9p()] {
+            let u = estimate(&c, &dev);
+            assert!(!u.fits, "{}: 40MB pointer table must not fit", dev.name);
+        }
+    }
+
+    #[test]
+    fn utilization_is_monotone_in_cache_size() {
+        let dev = Device::alveo_u250();
+        let a = estimate(&cfg(256, 1024), &dev).utilization(&dev);
+        let b = estimate(&cfg(4096, 1024), &dev).utilization(&dev);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn device_totals_are_sane() {
+        // U250: 2000*4KiB + 1280*36KiB ≈ 52.8 MiB.
+        let t = Device::alveo_u250().total_bytes();
+        assert!(t > 50 << 20 && t < 56 << 20, "{t}");
+    }
+}

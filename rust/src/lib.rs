@@ -1,0 +1,50 @@
+//! # ptmc — Programmable Tensor Memory Controller
+//!
+//! A full-stack reproduction of *"Towards Programmable Memory Controller
+//! for Tensor Decomposition"* (Wijeratne, Wang, Kannan, Prasanna, 2022):
+//! sparse-MTTKRP-centric CP-ALS tensor decomposition built around a
+//! cycle-approximate model of the paper's programmable FPGA memory
+//! controller (Cache Engine + DMA Engine + Tensor Remapper), its
+//! Performance Model Simulator (PMS), and a design-space explorer.
+//!
+//! Architecture (DESIGN.md §6): a three-layer Rust + JAX + Pallas stack.
+//! Layer 3 (this crate) owns the event loop, the memory-controller
+//! simulation, CP-ALS orchestration, metrics, and CLI.  Layers 2/1 (JAX
+//! graph + Pallas kernel) are AOT-compiled to HLO-text artifacts at build
+//! time and executed from Rust via the PJRT C API ([`runtime`]); Python
+//! never runs on the request path.
+//!
+//! Module map (system inventory in DESIGN.md §4):
+//! * [`tensor`] — COO sparse tensors, FROSTT IO, synthetic generators,
+//!   mode sort / remap, access-pattern statistics. (S1)
+//! * [`dram`] — bank / row-buffer DRAM timing model. (S2)
+//! * [`controller`] — Cache Engine, DMA Engine, Tensor Remapper, and the
+//!   memory-controller top that routes the paper's three transfer types.
+//!   (S3–S6)
+//! * [`fpga`] — BRAM/URAM resource accounting and device catalog. (S7)
+//! * [`mttkrp`] — Approach 1 / Approach 2 / Approach-1-with-remap compute
+//!   engines and their memory-trace generators. (S8)
+//! * [`cpd`] — CP-ALS with from-scratch dense linear algebra. (S9)
+//! * [`pms`] — analytic Performance Model Simulator. (S10)
+//! * [`dse`] — module-by-module exhaustive design-space search. (S11)
+//! * [`runtime`] — PJRT artifact loading and execution. (S12)
+//! * [`coordinator`] — block batching leader + worker pool. (S13)
+//! * [`cli`], [`config`] — hand-rolled CLI and config (offline build:
+//!   no clap/serde available). (S14)
+//! * [`testkit`] — PRNG + mini property-test harness (no proptest). (S15)
+//! * [`bench`] — timing harness + table emitters (no criterion). (S16)
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod controller;
+pub mod coordinator;
+pub mod cpd;
+pub mod dram;
+pub mod dse;
+pub mod fpga;
+pub mod mttkrp;
+pub mod pms;
+pub mod runtime;
+pub mod tensor;
+pub mod testkit;

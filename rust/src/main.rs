@@ -1,0 +1,309 @@
+//! `ptmc` — leader entrypoint for the Programmable Tensor Memory
+//! Controller stack.
+//!
+//! Subcommands:
+//! * `decompose` — run CP-ALS on a tensor (native / sim / pjrt backend).
+//! * `simulate`  — one full MTTKRP sweep through the memory-controller
+//!   cycle simulator, with per-module statistics.
+//! * `pms`       — analytic PMS estimate for a (tensor, config) pair.
+//! * `explore`   — module-by-module design-space search (paper §5.3).
+//! * `stats`     — Table-2-style characteristics of a tensor.
+//!
+//! Workload selection (all subcommands): `--input file.tns` or
+//! `--synth zipf|uniform|clustered --dims AxBxC --nnz N --seed S`.
+//! Controller parameters come from `--config ptmc.toml` plus overrides
+//! (`--cache-lines`, `--dma-buffers`, ...).
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use ptmc::cli::{workload, Args, CliError};
+use ptmc::config::Config;
+use ptmc::controller::{ControllerConfig, MemLayout, MemoryController};
+use ptmc::coordinator::{PjrtCoordinator, SegMode};
+use ptmc::cpd::{cp_als, linalg::Mat, AlsConfig, NativeBackend, SimBackend};
+use ptmc::dse::{explore, Evaluator, Grids};
+use ptmc::fpga::Device;
+use ptmc::pms::{self, TensorProfile};
+use ptmc::runtime::Runtime;
+use ptmc::tensor::{stats, SparseTensor};
+
+const OPTS: &[&str] = &[
+    "input", "synth", "dims", "nnz", "seed", "alpha", // workload
+    "config", "rank", "iters", "tol", "backend", "device", "evaluator", "seg",
+    "cache-lines", "cache-line-bytes", "cache-assoc", "dma-buffers", "dma-num",
+    "dma-buffer-bytes", "max-pointers", "channels", "artifacts",
+];
+const FLAGS: &[&str] = &["help", "verbose", "csv"];
+
+fn main() -> ExitCode {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    match run(&raw) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "ptmc — programmable tensor memory controller (paper reproduction)\n\
+         \n\
+         USAGE: ptmc <decompose|simulate|pms|explore|stats> [options]\n\
+         \n\
+         workload:  --input x.tns | --synth zipf|uniform|clustered\n\
+         \x20          --dims 2000x1500x1000 --nnz 50000 --seed 42 --alpha 1.2\n\
+         run:       --rank 16 --iters 10 --tol 1e-5 --backend native|sim|pjrt\n\
+         \x20          --seg onehot|segids|refseg --artifacts DIR\n\
+         controller:--config ptmc.toml --cache-lines N --cache-line-bytes B\n\
+         \x20          --cache-assoc A --dma-num N --dma-buffers K\n\
+         \x20          --dma-buffer-bytes B --max-pointers P --channels C\n\
+         dse:       --device u250|u280|vu9p --evaluator pms|sim\n"
+    );
+}
+
+fn run(raw: &[String]) -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(raw, OPTS, FLAGS)?;
+    if args.flag("help") || args.subcommand.is_none() {
+        usage();
+        return Ok(());
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "decompose" => cmd_decompose(&args),
+        "simulate" => cmd_simulate(&args),
+        "pms" => cmd_pms(&args),
+        "explore" => cmd_explore(&args),
+        "stats" => cmd_stats(&args),
+        other => Err(Box::new(CliError(format!(
+            "unknown subcommand {other:?} (try --help)"
+        )))),
+    }
+}
+
+/// Controller config from `--config` file plus CLI overrides.
+fn controller_config(args: &Args, elem_bytes: usize) -> Result<ControllerConfig, Box<dyn std::error::Error>> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::load(Path::new(path))?.controller(elem_bytes),
+        None => ControllerConfig::default_for(elem_bytes),
+    };
+    cfg.cache.num_lines = args.usize_or("cache-lines", cfg.cache.num_lines)?;
+    cfg.cache.line_bytes = args.usize_or("cache-line-bytes", cfg.cache.line_bytes)?;
+    cfg.cache.assoc = args.usize_or("cache-assoc", cfg.cache.assoc)?;
+    cfg.dma.num_dmas = args.usize_or("dma-num", cfg.dma.num_dmas)?;
+    cfg.dma.buffers_per_dma = args.usize_or("dma-buffers", cfg.dma.buffers_per_dma)?;
+    cfg.dma.buffer_bytes = args.usize_or("dma-buffer-bytes", cfg.dma.buffer_bytes)?;
+    cfg.remapper.max_pointers = args.usize_or("max-pointers", cfg.remapper.max_pointers)?;
+    cfg.dram.channels = args.usize_or("channels", cfg.dram.channels)?;
+    Ok(cfg)
+}
+
+fn als_config(args: &Args) -> Result<AlsConfig, Box<dyn std::error::Error>> {
+    let base = match args.get("config") {
+        Some(path) => Config::load(Path::new(path))?.als(),
+        None => AlsConfig::default(),
+    };
+    Ok(AlsConfig {
+        rank: args.usize_or("rank", base.rank)?,
+        max_iters: args.usize_or("iters", base.max_iters)?,
+        tol: args.f64_or("tol", base.tol)?,
+        ridge: base.ridge,
+        seed: args.u64_or("seed", base.seed)?,
+    })
+}
+
+fn device(args: &Args) -> Result<Device, CliError> {
+    match args.str_or("device", "u250") {
+        "u250" => Ok(Device::alveo_u250()),
+        "u280" => Ok(Device::alveo_u280()),
+        "vu9p" => Ok(Device::vu9p()),
+        other => Err(CliError(format!("unknown --device {other:?}"))),
+    }
+}
+
+fn cmd_decompose(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let mut t = workload::tensor_from_args(args)?;
+    let als = als_config(args)?;
+    let backend_name = args.str_or("backend", "native");
+    println!(
+        "decompose: {} modes, dims {:?}, nnz {}, rank {}, backend {}",
+        t.n_modes(),
+        t.dims(),
+        t.nnz(),
+        als.rank,
+        backend_name
+    );
+    let t0 = std::time::Instant::now();
+    let model = match backend_name {
+        "native" => cp_als(&mut t, &als, &mut NativeBackend),
+        "sim" => {
+            let cfg = controller_config(args, t.record_bytes())?;
+            let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), als.rank);
+            let mut b = SimBackend::new(MemoryController::new(cfg), layout);
+            cp_als(&mut t, &als, &mut b)
+        }
+        "pjrt" => {
+            let rt = Runtime::open(Path::new(args.str_or("artifacts", "artifacts")))?;
+            let seg = match args.str_or("seg", "onehot") {
+                "onehot" => SegMode::Onehot,
+                "segids" => SegMode::SegIds,
+                "refseg" => SegMode::RefSeg,
+                other => return Err(Box::new(CliError(format!("unknown --seg {other:?}")))),
+            };
+            let mut b = PjrtCoordinator::new(rt, seg);
+            let model = cp_als(&mut t, &als, &mut b);
+            println!("coordinator: {}", b.metrics().summary());
+            model
+        }
+        other => {
+            return Err(Box::new(CliError(format!(
+                "unknown --backend {other:?} (native|sim|pjrt)"
+            ))))
+        }
+    };
+    let wall = t0.elapsed();
+    println!("iters: {}", model.iters);
+    for (i, f) in model.fit_history.iter().enumerate() {
+        println!("  iter {:>3}: fit {f:.6}", i + 1);
+    }
+    println!("final fit: {:.6}", model.final_fit());
+    if model.cycles > 0 {
+        println!("simulated memory cycles: {}", model.cycles);
+    }
+    println!("wall time: {wall:?}");
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let mut t = workload::tensor_from_args(args)?;
+    let rank = args.usize_or("rank", 16)?;
+    let cfg = controller_config(args, t.record_bytes())?;
+    let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+    let factors: Vec<Mat> = t
+        .dims()
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| Mat::randn(d, rank, m as u64))
+        .collect();
+    let mut ctl = MemoryController::new(cfg);
+
+    println!("simulate: dims {:?}, nnz {}, rank {rank}", t.dims(), t.nnz());
+    let mut total = 0u64;
+    for mode in 0..t.n_modes() {
+        let run = ptmc::mttkrp::remap_exec::run(&mut t, &factors, mode, &layout, &mut ctl, 0);
+        println!(
+            "  mode {mode}: remap {} + compute {} cycles (overhead {:.2}%)",
+            run.remap_cycles,
+            run.compute_cycles,
+            100.0 * run.overhead_ratio()
+        );
+        total = ctl.now();
+    }
+    println!("total cycles: {total}");
+    let cs = ctl.cache_stats();
+    println!(
+        "cache: {} accesses, {:.1}% hits | dram: {} bursts, {:.1}% row hits | remapper: {} spilled",
+        cs.accesses,
+        100.0 * cs.hit_rate(),
+        ctl.dram_stats().bursts,
+        100.0 * ctl.dram_stats().hit_rate(),
+        ctl.remapper_stats().spilled_cursor_elems,
+    );
+    Ok(())
+}
+
+fn cmd_pms(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let t = workload::tensor_from_args(args)?;
+    let rank = args.usize_or("rank", 16)?;
+    let cfg = controller_config(args, t.record_bytes())?;
+    let dev = device(args)?;
+    let profile = TensorProfile::measure(&t);
+    let est = pms::estimate_with_rank(&profile, &cfg, &dev, rank);
+    println!("pms: dims {:?}, nnz {}, rank {rank}, device {}", t.dims(), t.nnz(), dev.name);
+    for (m, e) in est.per_mode.iter().enumerate() {
+        println!(
+            "  mode {m}: remap {:.0} + tensor {:.0} + factors {:.0} + output {:.0} = {:.0} cycles",
+            e.remap_cycles,
+            e.tensor_stream_cycles,
+            e.factor_access_cycles,
+            e.output_store_cycles,
+            e.total()
+        );
+    }
+    println!("total estimate: {:.0} cycles", est.total_cycles());
+    println!(
+        "resources: {} BRAM36 + {} URAM ({}, {:.1}% of device)",
+        est.resources.bram36_used,
+        est.resources.uram_used,
+        if est.resources.fits { "fits" } else { "DOES NOT FIT" },
+        100.0 * est.resources.utilization(&dev)
+    );
+    Ok(())
+}
+
+fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let t = workload::tensor_from_args(args)?;
+    let rank = args.usize_or("rank", 16)?;
+    let base = controller_config(args, t.record_bytes())?;
+    let dev = device(args)?;
+    let profile = TensorProfile::measure(&t);
+    let factors: Vec<Mat> = t
+        .dims()
+        .iter()
+        .map(|&d| Mat::randn(d, rank, 3))
+        .collect();
+    let eval = match args.str_or("evaluator", "pms") {
+        "pms" => Evaluator::Pms {
+            profile: &profile,
+            rank,
+        },
+        "sim" => Evaluator::CycleSim {
+            tensor: &t,
+            factors: &factors,
+        },
+        other => return Err(Box::new(CliError(format!("unknown --evaluator {other:?}")))),
+    };
+    let ex = explore(&base, &Grids::default(), &dev, &eval);
+    println!(
+        "explored {} feasible configs ({} rejected as not fitting {})",
+        ex.visited.len(),
+        ex.rejected,
+        dev.name
+    );
+    let b = &ex.best;
+    println!("best: {:.3e} cycles", b.cycles);
+    println!(
+        "  cache: {} lines x {}B, {}-way | dma: {} x {} x {}B | pointers: {}",
+        b.cfg.cache.num_lines,
+        b.cfg.cache.line_bytes,
+        b.cfg.cache.assoc,
+        b.cfg.dma.num_dmas,
+        b.cfg.dma.buffers_per_dma,
+        b.cfg.dma.buffer_bytes,
+        b.cfg.remapper.max_pointers
+    );
+    println!("  resources: {} BRAM36 + {} URAM", b.bram36, b.uram);
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let t: SparseTensor = workload::tensor_from_args(args)?;
+    let rank = args.usize_or("rank", 16)?;
+    let c = stats::characteristics(&t, rank);
+    println!("tensor characteristics (cf. paper Table 2):");
+    println!("  modes:             {}", c.n_modes);
+    println!("  mode lengths:      {:?} (max {})", t.dims(), c.max_mode_len);
+    println!("  non-zeros:         {}", c.nnz);
+    println!("  density:           {:.3e}", c.density);
+    println!("  tensor size:       {} bytes", c.tensor_bytes);
+    println!("  max factor matrix: {} bytes (R = {rank})", c.max_factor_bytes);
+    for m in 0..t.n_modes() {
+        let f = stats::fiber_stats(&t, m);
+        println!(
+            "  mode {m}: {} used coords, mean fiber {:.2}, max fiber {}, skew {:.3}",
+            f.used_coords, f.mean_len, f.max_len, f.skew
+        );
+    }
+    Ok(())
+}

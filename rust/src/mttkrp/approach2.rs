@@ -1,0 +1,255 @@
+//! Approach 2 — input-mode-direction spMTTKRP (paper Algorithm 4).
+//!
+//! The tensor is ordered by an *input* mode: the input factor row is
+//! loaded once per fiber, but every non-zero produces a partial output
+//! row that must be stored to — and later accumulated from — external
+//! memory (`|T| x R` scalars, the Table-1 "size of total partial sums").
+//! The accumulation phase then walks the partials in *output* order,
+//! which is a random element-wise pattern: this is exactly why the paper
+//! rules Approach 2 impractical on FPGA (§3.1).
+
+use crate::controller::{Access, MemLayout};
+use crate::cpd::linalg::Mat;
+use crate::tensor::{SortOrder, SparseTensor};
+
+use super::{counts::OpCounts, EngineRun, Tracing};
+
+const STREAM_CHUNK_ELEMS: usize = 1024;
+
+/// Run Approach 2 computing the MTTKRP of `out_mode`, with the tensor
+/// sorted by `in_mode` (any mode other than `out_mode`).
+pub fn run(
+    t: &SparseTensor,
+    factors: &[Mat],
+    out_mode: usize,
+    in_mode: usize,
+    layout: &MemLayout,
+    tracing: Tracing,
+) -> EngineRun {
+    assert_ne!(out_mode, in_mode, "input mode must differ from output");
+    assert_eq!(
+        t.order(),
+        SortOrder::ByMode(in_mode),
+        "Approach 2 requires the tensor sorted by the input mode"
+    );
+    let n = t.n_modes();
+    let r = factors[0].cols();
+    let eb = t.record_bytes();
+    let row_bytes = r * 4;
+    let tensor_base = layout.tensor_base[0];
+    let vals = t.values();
+
+    let mut trace = Vec::new();
+    let mut counts = OpCounts::default();
+
+    // ---- Phase 1 (Alg. 4 lines 3-10): compute + store partials --------
+    // partials[z] = val_z * prod of all input-mode rows; kept in host
+    // memory standing in for the FPGA's external partial region.
+    let mut partials = vec![0.0f32; t.nnz() * r];
+    for (in_coord, start, end) in t.fiber_ranges(in_mode) {
+        // Load the input-mode factor row once per fiber (line 4).
+        if tracing == Tracing::On {
+            trace.push(Access::Cached {
+                addr: layout.factor_row_addr(in_mode, in_coord),
+                bytes: row_bytes,
+            });
+            let mut z = start;
+            while z < end {
+                let n_chunk = (end - z).min(STREAM_CHUNK_ELEMS);
+                trace.push(Access::Stream {
+                    addr: tensor_base + (z * eb) as u64,
+                    bytes: n_chunk * eb,
+                });
+                z += n_chunk;
+            }
+        }
+        counts.factor_loads += r as u64;
+        counts.tensor_loads += (end - start) as u64;
+
+        for z in start..end {
+            for m in 0..n {
+                if m == out_mode || m == in_mode {
+                    continue;
+                }
+                if tracing == Tracing::On {
+                    trace.push(Access::Cached {
+                        addr: layout.factor_row_addr(m, t.mode_col(m)[z]),
+                        bytes: row_bytes,
+                    });
+                }
+                counts.factor_loads += r as u64;
+            }
+            let p = &mut partials[z * r..(z + 1) * r];
+            for (rr, slot) in p.iter_mut().enumerate() {
+                let mut v = vals[z];
+                for m in 0..n {
+                    if m == out_mode {
+                        continue;
+                    }
+                    v *= factors[m].get(t.mode_col(m)[z] as usize, rr);
+                }
+                *slot = v;
+            }
+            // (N-1) multiplies per scalar; the accumulate add is phase 2.
+            counts.compute_ops += ((n - 1) * r) as u64;
+            // Element-wise partial store (line 10) — no locality.
+            if tracing == Tracing::On {
+                trace.push(Access::Element {
+                    addr: layout.partial_base + (z * row_bytes) as u64,
+                    bytes: row_bytes,
+                });
+            }
+            counts.partial_stores += r as u64;
+        }
+    }
+
+    // ---- Phase 2 (Alg. 4 lines 11-17): accumulate by output coord -----
+    // Bucket nnz indices by output coordinate (the FPGA would re-walk the
+    // partial region; the bucket list reproduces its access order).
+    let i_out = t.dims()[out_mode];
+    let mut heads = vec![usize::MAX; i_out];
+    let mut next = vec![usize::MAX; t.nnz()];
+    for z in (0..t.nnz()).rev() {
+        let c = t.mode_col(out_mode)[z] as usize;
+        next[z] = heads[c];
+        heads[c] = z;
+    }
+
+    let mut output = Mat::zeros(i_out, r);
+    for c in 0..i_out {
+        let mut z = heads[c];
+        if z == usize::MAX {
+            continue;
+        }
+        let row = output.row_mut(c);
+        while z != usize::MAX {
+            // Element-wise partial load (line 15) — random order.
+            if tracing == Tracing::On {
+                trace.push(Access::Element {
+                    addr: layout.partial_base + (z * row_bytes) as u64,
+                    bytes: row_bytes,
+                });
+            }
+            counts.partial_loads += r as u64;
+            for (d, &p) in row.iter_mut().zip(&partials[z * r..(z + 1) * r]) {
+                *d += p;
+            }
+            counts.compute_ops += r as u64;
+            z = next[z];
+        }
+        // Store the finished output row (line 17).
+        if tracing == Tracing::On {
+            trace.push(Access::Stream {
+                addr: layout.factor_row_addr(out_mode, c as u32),
+                bytes: row_bytes,
+            });
+        }
+        counts.output_stores += r as u64;
+    }
+
+    EngineRun {
+        output,
+        trace,
+        counts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::{approach1, oracle};
+    use crate::tensor::synth::{generate, Profile, SynthConfig};
+    use crate::testkit::assert_allclose;
+
+    fn setup(seed: u64) -> (SparseTensor, Vec<Mat>, MemLayout) {
+        let t = generate(&SynthConfig {
+            dims: vec![30, 40, 25],
+            nnz: 500,
+            profile: Profile::Zipf { alpha_milli: 1100 },
+            seed,
+        });
+        let factors: Vec<Mat> = t
+            .dims()
+            .iter()
+            .enumerate()
+            .map(|(m, &d)| Mat::randn(d, 8, seed ^ (m as u64) << 8))
+            .collect();
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 8);
+        (t, factors, layout)
+    }
+
+    #[test]
+    fn matches_oracle_for_all_mode_pairs() {
+        for out_mode in 0..3 {
+            for in_mode in 0..3 {
+                if in_mode == out_mode {
+                    continue;
+                }
+                let (mut t, factors, layout) = setup(41);
+                t.sort_by_mode(in_mode);
+                let run = run(&t, &factors, out_mode, in_mode, &layout, Tracing::Off);
+                let want = oracle::mttkrp(&t, &factors, out_mode);
+                assert_allclose(run.output.data(), want.data(), 1e-4, 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn agrees_with_approach1() {
+        let (mut t, factors, layout) = setup(42);
+        t.sort_by_mode(1);
+        let a2 = run(&t, &factors, 0, 1, &layout, Tracing::Off);
+        t.sort_by_mode(0);
+        let a1 = approach1::run(&t, &factors, 0, &layout, Tracing::Off);
+        assert_allclose(a2.output.data(), a1.output.data(), 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn partial_sum_traffic_matches_table1() {
+        let (mut t, factors, layout) = setup(43);
+        t.sort_by_mode(2);
+        let run = run(&t, &factors, 0, 2, &layout, Tracing::Off);
+        let nnz_r = (t.nnz() * 8) as u64;
+        assert_eq!(run.counts.partial_stores, nnz_r);
+        assert_eq!(run.counts.partial_loads, nnz_r);
+        // Total compute matches the paper: N * |T| * R.
+        assert_eq!(run.counts.compute_ops, 3 * nnz_r);
+    }
+
+    #[test]
+    fn trace_contains_element_accesses_for_partials() {
+        let (mut t, factors, layout) = setup(44);
+        t.sort_by_mode(1);
+        let run = run(&t, &factors, 0, 1, &layout, Tracing::On);
+        let elements = run
+            .trace
+            .iter()
+            .filter(|a| matches!(a, Access::Element { .. }))
+            .count();
+        // One element store + one element load per nnz.
+        assert_eq!(elements, 2 * t.nnz());
+    }
+
+    #[test]
+    fn more_total_accesses_than_approach1() {
+        let (mut t, factors, layout) = setup(45);
+        t.sort_by_mode(1);
+        let a2 = run(&t, &factors, 0, 1, &layout, Tracing::Off);
+        t.sort_by_mode(0);
+        let a1 = approach1::run(&t, &factors, 0, &layout, Tracing::Off);
+        assert!(
+            a2.counts.total_accesses() > a1.counts.total_accesses(),
+            "A2 {} must exceed A1 {}",
+            a2.counts.total_accesses(),
+            a1.counts.total_accesses()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted by the input mode")]
+    fn panics_on_wrong_sort() {
+        let (mut t, factors, layout) = setup(46);
+        t.sort_by_mode(0);
+        run(&t, &factors, 0, 1, &layout, Tracing::Off);
+    }
+}

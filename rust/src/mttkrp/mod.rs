@@ -1,0 +1,44 @@
+//! spMTTKRP compute engines (S8): the paper's two compute patterns (§3)
+//! plus Approach 1 with remapping (Alg. 5), each producing both the
+//! numeric result and the memory-access trace its FPGA execution would
+//! issue to the memory controller.
+//!
+//! * [`oracle`] — sequential COO spMTTKRP (paper Alg. 2), the numeric
+//!   ground truth.
+//! * [`approach1`] — output-mode-direction computation (Alg. 3): no
+//!   partial sums; requires the tensor sorted by the output mode.
+//! * [`approach2`] — input-mode-direction computation (Alg. 4): streams
+//!   an input mode, stores |T| partial rows in external memory, then
+//!   accumulates them.
+//! * [`remap_exec`] — Alg. 5: Tensor-Remapper pass (re-sorting the tensor
+//!   in the output direction) followed by Approach 1.
+//! * [`counts`] — the closed-form Table-1 cost model.
+
+pub mod approach1;
+pub mod approach2;
+pub mod counts;
+pub mod oracle;
+pub mod remap_exec;
+
+pub use counts::OpCounts;
+
+use crate::controller::Access;
+use crate::cpd::linalg::Mat;
+
+/// Result of one MTTKRP engine run: the updated (un-normalized) output
+/// factor matrix, the memory trace (empty when tracing is disabled), and
+/// the operation counts for the Table-1 comparison.
+#[derive(Debug, Clone)]
+pub struct EngineRun {
+    pub output: Mat,
+    pub trace: Vec<Access>,
+    pub counts: OpCounts,
+}
+
+/// Whether an engine should also produce its memory trace (tracing a
+/// 100k-nnz tensor allocates a few MB; numeric-only runs skip it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tracing {
+    On,
+    Off,
+}

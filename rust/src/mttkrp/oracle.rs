@@ -1,0 +1,125 @@
+//! Sequential COO spMTTKRP — paper Algorithm 2, the numeric ground truth
+//! every engine (and the PJRT path) is checked against.
+
+use crate::cpd::linalg::Mat;
+use crate::tensor::SparseTensor;
+
+/// Compute mode-`mode` MTTKRP of `t` with the given factor matrices
+/// (`factors[m]` must have `t.dims()[m]` rows; all the same rank).
+/// Works in any storage order.
+pub fn mttkrp(t: &SparseTensor, factors: &[Mat], mode: usize) -> Mat {
+    assert_eq!(factors.len(), t.n_modes());
+    let r = factors[0].cols();
+    for (m, f) in factors.iter().enumerate() {
+        assert_eq!(f.rows(), t.dims()[m], "factor {m} row count");
+        assert_eq!(f.cols(), r, "factor {m} rank");
+    }
+    let mut out = Mat::zeros(t.dims()[mode], r);
+    let mut prod = vec![0.0f32; r];
+    let vals = t.values();
+    for z in 0..t.nnz() {
+        // prod = val * hadamard of the other modes' rows (Alg. 2 line 6).
+        prod.iter_mut().for_each(|p| *p = vals[z]);
+        for m in 0..t.n_modes() {
+            if m == mode {
+                continue;
+            }
+            let row = factors[m].row(t.mode_col(m)[z] as usize);
+            for (p, &x) in prod.iter_mut().zip(row) {
+                *p *= x;
+            }
+        }
+        let dst = out.row_mut(t.mode_col(mode)[z] as usize);
+        for (d, &p) in dst.iter_mut().zip(&prod) {
+            *d += p;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{Coord, SparseTensor};
+    use crate::testkit::assert_allclose;
+
+    /// Dense 3-way MTTKRP by definition: A~(i,r) = sum_{j,k} X(i,j,k) B(j,r) C(k,r).
+    fn dense_mttkrp_mode0(dense: &[f32], dims: &[usize], b: &Mat, c: &Mat) -> Mat {
+        let (i0, i1, i2) = (dims[0], dims[1], dims[2]);
+        let r = b.cols();
+        let mut out = Mat::zeros(i0, r);
+        for i in 0..i0 {
+            for j in 0..i1 {
+                for k in 0..i2 {
+                    let x = dense[(i * i1 + j) * i2 + k];
+                    if x == 0.0 {
+                        continue;
+                    }
+                    for rr in 0..r {
+                        let v = out.get(i, rr) + x * b.get(j, rr) * c.get(k, rr);
+                        out.set(i, rr, v);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_dense_definition_mode0() {
+        let dims = vec![4usize, 5, 3];
+        let t = crate::tensor::synth::generate(&crate::tensor::synth::SynthConfig {
+            dims: dims.clone(),
+            nnz: 20,
+            profile: crate::tensor::synth::Profile::Uniform,
+            seed: 17,
+        });
+        let b = Mat::randn(5, 6, 2);
+        let c = Mat::randn(3, 6, 3);
+        let a = Mat::zeros(4, 6); // unused by mode-0 MTTKRP
+        let got = mttkrp(&t, &[a, b.clone(), c.clone()], 0);
+        let want = dense_mttkrp_mode0(&t.to_dense(), &dims, &b, &c);
+        assert_allclose(got.data(), want.data(), 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn single_nnz_hand_case() {
+        // X(1,2,0) = 2.0; A~(1,r) = 2 * B(2,r) * C(0,r).
+        let t = SparseTensor::new(vec![2, 3, 2], &[(vec![1 as Coord, 2, 0], 2.0)]);
+        let b = Mat::from_rows(&[&[1.0, 1.0], &[2.0, 2.0], &[3.0, -1.0]]);
+        let c = Mat::from_rows(&[&[10.0, 4.0], &[0.0, 0.0]]);
+        let a = Mat::zeros(2, 2);
+        let out = mttkrp(&t, &[a, b, c], 0);
+        assert_eq!(out.row(0), &[0.0, 0.0]);
+        assert_eq!(out.row(1), &[60.0, -8.0]);
+    }
+
+    #[test]
+    fn order_invariant() {
+        let mut t = crate::tensor::synth::generate(&crate::tensor::synth::SynthConfig {
+            dims: vec![10, 12, 8],
+            nnz: 100,
+            profile: crate::tensor::synth::Profile::Uniform,
+            seed: 5,
+        });
+        let factors: Vec<Mat> = t
+            .dims()
+            .iter()
+            .enumerate()
+            .map(|(m, &d)| Mat::randn(d, 4, m as u64))
+            .collect();
+        let before = mttkrp(&t, &factors, 1);
+        t.sort_by_mode(2);
+        let after = mttkrp(&t, &factors, 1);
+        assert_allclose(after.data(), before.data(), 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "factor 1 row count")]
+    fn rejects_mismatched_factors() {
+        let t = SparseTensor::new(vec![2, 3], &[(vec![0, 0], 1.0)]);
+        let a = Mat::zeros(2, 4);
+        let b = Mat::zeros(999, 4);
+        mttkrp(&t, &[a, b], 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Approach 1 with remapping — paper Algorithm 5: between modes, the
+//! Tensor Remapper re-orders the COO list into the next output mode's
+//! direction (lines 3–6), then Approach 1 runs without partial sums
+//! (lines 7–15).  This is the paper's chosen full-decomposition scheme:
+//! one tensor copy ping-pongs between two external-memory regions instead
+//! of keeping N sorted copies.
+
+use crate::controller::{MemLayout, MemoryController};
+use crate::cpd::linalg::Mat;
+use crate::tensor::{remap, SortOrder, SparseTensor};
+
+use super::{approach1, EngineRun, Tracing};
+
+/// Timing/traffic breakdown of one remapped-mode execution.
+#[derive(Debug, Clone)]
+pub struct RemappedRun {
+    pub engine: EngineRun,
+    /// Cycles spent in the Tensor Remapper pass (0 if no remap needed).
+    pub remap_cycles: u64,
+    /// Cycles spent in the Approach-1 compute trace replay.
+    pub compute_cycles: u64,
+    /// Remap data-movement accounting (None if no remap was needed).
+    pub remap_report: Option<remap::RemapReport>,
+}
+
+impl RemappedRun {
+    pub fn total_cycles(&self) -> u64 {
+        self.remap_cycles + self.compute_cycles
+    }
+
+    /// Measured communication overhead of the remap: extra accesses over
+    /// the Approach-1 baseline accesses (the §3 ratio).
+    pub fn overhead_ratio(&self) -> f64 {
+        match &self.remap_report {
+            None => 0.0,
+            Some(rep) => {
+                rep.extra_accesses() as f64 / self.engine.counts.total_accesses() as f64
+            }
+        }
+    }
+}
+
+/// Execute mode `mode` with remap-if-needed through the memory
+/// controller `ctl` (advances its clock), updating `t` in place.
+///
+/// `src` is the ping-pong slot currently holding the tensor; on remap the
+/// data moves to `1 - src` (the caller flips its slot tracking).
+pub fn run(
+    t: &mut SparseTensor,
+    factors: &[Mat],
+    mode: usize,
+    layout: &MemLayout,
+    ctl: &mut MemoryController,
+    src: usize,
+) -> RemappedRun {
+    let t_start = ctl.now();
+
+    // Remap pass (skipped when the tensor is already in direction).
+    let (remap_cycles, remap_report) = if t.order() == SortOrder::ByMode(mode) {
+        (0, None)
+    } else {
+        let done = ctl.remap_pass(t.mode_col(mode), t.dims()[mode], layout, src, 1 - src);
+        let report = remap::remap(t, mode, ctl.config().remapper.max_pointers);
+        (done - t_start, Some(report))
+    };
+
+    // Approach-1 compute with trace replay.
+    let engine = approach1::run(t, factors, mode, layout, Tracing::On);
+    let t_mid = ctl.now();
+    let compute_cycles = ctl.replay(&engine.trace) - t_mid;
+
+    let mut engine = engine;
+    if let Some(rep) = &remap_report {
+        engine.counts.remap_accesses = rep.extra_accesses() as u64;
+    }
+
+    RemappedRun {
+        engine,
+        remap_cycles,
+        compute_cycles,
+        remap_report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::ControllerConfig;
+    use crate::mttkrp::oracle;
+    use crate::tensor::synth::{generate, Profile, SynthConfig};
+    use crate::testkit::assert_allclose;
+
+    fn setup(seed: u64) -> (SparseTensor, Vec<Mat>, MemLayout, MemoryController) {
+        let t = generate(&SynthConfig {
+            dims: vec![60, 45, 35],
+            nnz: 1_500,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed,
+        });
+        let factors: Vec<Mat> = t
+            .dims()
+            .iter()
+            .enumerate()
+            .map(|(m, &d)| Mat::randn(d, 16, seed ^ (m as u64) << 4))
+            .collect();
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 16);
+        let ctl = MemoryController::new(ControllerConfig::default_for(t.record_bytes()));
+        (t, factors, layout, ctl)
+    }
+
+    #[test]
+    fn produces_oracle_result_after_remap() {
+        let (mut t, factors, layout, mut ctl) = setup(51);
+        let want = oracle::mttkrp(&t, &factors, 1);
+        let run = run(&mut t, &factors, 1, &layout, &mut ctl, 0);
+        assert_allclose(run.engine.output.data(), want.data(), 1e-4, 1e-5);
+        assert!(run.remap_cycles > 0, "unsorted tensor must pay a remap");
+        assert!(run.compute_cycles > 0);
+    }
+
+    #[test]
+    fn skips_remap_when_already_sorted() {
+        let (mut t, factors, layout, mut ctl) = setup(52);
+        t.sort_by_mode(2);
+        let run = run(&mut t, &factors, 2, &layout, &mut ctl, 0);
+        assert_eq!(run.remap_cycles, 0);
+        assert!(run.remap_report.is_none());
+        assert_eq!(run.overhead_ratio(), 0.0);
+    }
+
+    #[test]
+    fn all_modes_in_sequence_like_cp_als() {
+        // The Alg.-5 usage pattern: modes 0,1,2 back-to-back with
+        // ping-pong slots; every mode's result must match the oracle.
+        let (mut t, factors, layout, mut ctl) = setup(53);
+        let mut src = 0;
+        for mode in 0..3 {
+            let want = oracle::mttkrp(&t, &factors, mode);
+            let r = run(&mut t, &factors, mode, &layout, &mut ctl, src);
+            if r.remap_report.is_some() {
+                src = 1 - src;
+            }
+            assert_allclose(r.engine.output.data(), want.data(), 1e-4, 1e-5);
+        }
+    }
+
+    #[test]
+    fn measured_overhead_close_to_paper_formula() {
+        let (mut t, factors, layout, mut ctl) = setup(54);
+        let run = run(&mut t, &factors, 0, &layout, &mut ctl, 0);
+        let measured = run.overhead_ratio();
+        let approx = crate::tensor::remap::overhead_ratio_approx(3, 16);
+        // Measured uses actual I_out stores, so it differs a little from
+        // the closed form — but must be the same magnitude and < 6%.
+        assert!(measured > 0.0 && measured < 0.09, "measured {measured}");
+        assert!(
+            (measured - approx).abs() / approx < 0.6,
+            "measured {measured} vs approx {approx}"
+        );
+    }
+
+    #[test]
+    fn remap_cycles_scale_with_nnz() {
+        let mk = |nnz| {
+            let t = generate(&SynthConfig {
+                dims: vec![60, 45, 35],
+                nnz,
+                profile: Profile::Uniform,
+                seed: 7,
+            });
+            let factors: Vec<Mat> = t
+                .dims()
+                .iter()
+                .map(|&d| Mat::randn(d, 8, 1))
+                .collect();
+            let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 8);
+            let mut ctl =
+                MemoryController::new(ControllerConfig::default_for(t.record_bytes()));
+            let mut t = t;
+            run(&mut t, &factors, 1, &layout, &mut ctl, 0).remap_cycles
+        };
+        let small = mk(500);
+        let big = mk(4_000);
+        assert!(big > 4 * small, "remap cycles: {big} vs {small}");
+    }
+}

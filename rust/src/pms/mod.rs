@@ -1,0 +1,389 @@
+//! Performance Model Simulator (S10, paper §5.3 and §6): a *fast
+//! analytic* estimator of total spMTTKRP memory-access time and FPGA
+//! on-chip memory for a given (dataset, memory-controller configuration)
+//! pair — the tool the paper says it is developing because "synthesizing
+//! a FPGA can take a long time".
+//!
+//! Inputs mirror §5.3 exactly: (1) FPGA resources via
+//! [`crate::fpga::Device`], (2) data-structure sizes (record width, rank),
+//! (3) controller parameters ([`crate::controller::ControllerConfig`]).
+//! The dataset enters through cheap summary statistics
+//! ([`TensorProfile`]) so one profile can stand for a whole application
+//! domain (the paper's `t_avg` use-case).
+//!
+//! The model is closed-form per §4 access class; it is validated against
+//! the cycle-level simulator in the `pms_validation` bench (E7) — single
+//! digit percentage error across the DSE grid is the target, which is
+//! ample to rank configurations.
+
+use crate::controller::ControllerConfig;
+use crate::dram::DramConfig;
+use crate::fpga::{self, Device, Usage};
+use crate::tensor::{stats, SparseTensor};
+
+/// Summary statistics of a tensor, per mode — everything the analytic
+/// model needs to know about the dataset.
+#[derive(Debug, Clone)]
+pub struct TensorProfile {
+    pub n_modes: usize,
+    pub nnz: usize,
+    pub record_bytes: usize,
+    /// Mode lengths.
+    pub dims: Vec<usize>,
+    /// Non-empty fiber count per mode (output-store row count).
+    pub used_coords: Vec<usize>,
+    /// Mean reuse distance proxy per mode when walked in another mode's
+    /// order (drives the cache-hit model); `f64::INFINITY` = no reuse.
+    pub reuse_distance: Vec<f64>,
+    /// Per mode: fraction of nnz covered by the top-k densest
+    /// coordinates, at k = 4^0, 4^1, ... (drives the densest-first
+    /// pointer-spill model).  Monotone non-decreasing, ends at 1.0.
+    pub coverage: Vec<Vec<(usize, f64)>>,
+}
+
+/// Coverage of the top-k densest coordinates for one mode column.
+fn coverage_curve(col: &[u32], mode_len: usize) -> Vec<(usize, f64)> {
+    let mut counts = vec![0u32; mode_len];
+    for &c in col {
+        counts[c as usize] += 1;
+    }
+    let mut lens: Vec<u32> = counts.into_iter().filter(|&c| c > 0).collect();
+    lens.sort_unstable_by(|a, b| b.cmp(a));
+    let total: u64 = lens.iter().map(|&l| l as u64).sum();
+    let mut curve = Vec::new();
+    let mut k = 1usize;
+    let mut cum = 0u64;
+    let mut idx = 0usize;
+    while idx < lens.len() {
+        let next = k.min(lens.len());
+        while idx < next {
+            cum += lens[idx] as u64;
+            idx += 1;
+        }
+        curve.push((next, cum as f64 / total.max(1) as f64));
+        if next == lens.len() {
+            break;
+        }
+        k *= 4;
+    }
+    curve
+}
+
+/// Interpolate a coverage curve at pointer budget `k` (log-linear).
+fn coverage_at(curve: &[(usize, f64)], k: usize) -> f64 {
+    if curve.is_empty() {
+        return 1.0;
+    }
+    if k >= curve.last().unwrap().0 {
+        return 1.0;
+    }
+    if k <= curve[0].0 {
+        return curve[0].1 * (k as f64 / curve[0].0 as f64);
+    }
+    for w in curve.windows(2) {
+        let (k0, c0) = w[0];
+        let (k1, c1) = w[1];
+        if k >= k0 && k <= k1 {
+            let f = ((k as f64).ln() - (k0 as f64).ln()) / ((k1 as f64).ln() - (k0 as f64).ln());
+            return c0 + f * (c1 - c0);
+        }
+    }
+    1.0
+}
+
+impl TensorProfile {
+    /// Measure a tensor (one pass per mode).
+    pub fn measure(t: &SparseTensor) -> Self {
+        let n = t.n_modes();
+        TensorProfile {
+            n_modes: n,
+            nnz: t.nnz(),
+            record_bytes: t.record_bytes(),
+            dims: t.dims().to_vec(),
+            used_coords: (0..n).map(|m| stats::fiber_stats(t, m).used_coords).collect(),
+            reuse_distance: (0..n).map(|m| stats::mean_reuse_distance(t, m)).collect(),
+            coverage: (0..n)
+                .map(|m| coverage_curve(t.mode_col(m), t.dims()[m]))
+                .collect(),
+        }
+    }
+
+    /// Average several tensors from one application domain (the paper's
+    /// `t_avg` input: "use with multiple datasets from the same domain").
+    pub fn average(profiles: &[TensorProfile]) -> Self {
+        assert!(!profiles.is_empty());
+        let n = profiles[0].n_modes;
+        assert!(profiles.iter().all(|p| p.n_modes == n));
+        let k = profiles.len() as f64;
+        let avg_usize =
+            |f: &dyn Fn(&TensorProfile) -> usize| (profiles.iter().map(f).sum::<usize>() as f64 / k) as usize;
+        TensorProfile {
+            n_modes: n,
+            nnz: avg_usize(&|p| p.nnz),
+            record_bytes: profiles[0].record_bytes,
+            dims: (0..n)
+                .map(|m| (profiles.iter().map(|p| p.dims[m]).sum::<usize>() as f64 / k) as usize)
+                .collect(),
+            used_coords: (0..n)
+                .map(|m| {
+                    (profiles.iter().map(|p| p.used_coords[m]).sum::<usize>() as f64 / k) as usize
+                })
+                .collect(),
+            reuse_distance: (0..n)
+                .map(|m| profiles.iter().map(|p| p.reuse_distance[m]).sum::<f64>() / k)
+                .collect(),
+            // Averaging curves point-wise would need re-sampling; take
+            // the first profile's (domain-mates have similar skew).
+            coverage: profiles[0].coverage.clone(),
+        }
+    }
+}
+
+/// Per-mode estimate breakdown (cycles).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ModeEstimate {
+    pub remap_cycles: f64,
+    pub tensor_stream_cycles: f64,
+    pub factor_access_cycles: f64,
+    pub output_store_cycles: f64,
+}
+
+impl ModeEstimate {
+    pub fn total(&self) -> f64 {
+        self.remap_cycles
+            + self.tensor_stream_cycles
+            + self.factor_access_cycles
+            + self.output_store_cycles
+    }
+}
+
+/// Full PMS output.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    pub per_mode: Vec<ModeEstimate>,
+    pub resources: Usage,
+}
+
+impl Estimate {
+    /// Total cycles across all modes (one full MTTKRP sweep — the paper's
+    /// unit of optimization).
+    pub fn total_cycles(&self) -> f64 {
+        self.per_mode.iter().map(|m| m.total()).sum()
+    }
+}
+
+// ---- DRAM service-time primitives --------------------------------------
+
+/// Effective streaming bandwidth in bytes/cycle: peak derated by the
+/// fraction of bursts that still pay activations (one per row).
+fn stream_bytes_per_cycle(d: &DramConfig) -> f64 {
+    let bursts_per_row = (d.row_bytes / d.burst_bytes) as f64;
+    let hit_time = d.t_burst as f64;
+    let miss_time = (d.t_rp + d.t_rcd + d.t_cl + d.t_burst) as f64;
+    let avg = (miss_time + (bursts_per_row - 1.0) * hit_time) / bursts_per_row;
+    d.channels as f64 * d.burst_bytes as f64 / avg
+}
+
+/// Latency of one isolated random access (row conflict assumed).
+fn random_access_cycles(d: &DramConfig) -> f64 {
+    (d.t_rp + d.t_rcd + d.t_cl + d.t_burst) as f64
+}
+
+// ---- The model -----------------------------------------------------------
+
+/// Estimate one full MTTKRP sweep (all modes, Approach 1 with remapping)
+/// for `profile` under `cfg` on `dev` with factor rank 16 (the FROSTT
+/// "typical" value, Table 2).  Use [`estimate_with_rank`] otherwise.
+pub fn estimate(profile: &TensorProfile, cfg: &ControllerConfig, dev: &Device) -> Estimate {
+    estimate_with_rank(profile, cfg, dev, 16)
+}
+
+/// Estimate one full MTTKRP sweep for an explicit factor rank `rank`
+/// (the factor-row width R*4 drives cache behaviour and output volume).
+pub fn estimate_with_rank(
+    profile: &TensorProfile,
+    cfg: &ControllerConfig,
+    dev: &Device,
+    rank: usize,
+) -> Estimate {
+    let d = &cfg.dram;
+    let sbw = stream_bytes_per_cycle(d);
+    let rand_lat = random_access_cycles(d);
+    let row_bytes = cfg.remapper.elem_bytes; // record width
+    let nnz = profile.nnz as f64;
+
+    let mut per_mode = Vec::with_capacity(profile.n_modes);
+    for mode in 0..profile.n_modes {
+        // --- Remap pass (every mode but the first in steady state; we
+        // charge it for every mode, matching the simulator's behaviour
+        // when the previous mode left the tensor in its own order).
+        let stream_in = nnz * row_bytes as f64 / sbw;
+        // Element-wise stores: per-request setup plus a mostly-conflict
+        // DRAM access (the interleaved stream loads keep closing rows).
+        let store_each =
+            cfg.remapper.store_setup_cycles as f64 + 0.9 * rand_lat + 0.1 * d.t_burst as f64;
+        // Pointer spill: densest-first allocation means the spilled
+        // *element* fraction is 1 - coverage(top max_pointers coords).
+        let spill_frac = 1.0 - coverage_at(&profile.coverage[mode], cfg.remapper.max_pointers);
+        let ptr_cycles = spill_frac * nnz * 2.0 * rand_lat;
+        // Every mode pays a remap in the simulator's protocol (the
+        // tensor arrives in no particular order before mode 0 too).
+        let remap_cycles = stream_in + nnz * store_each + ptr_cycles;
+
+        // --- Compute phase ---
+        let tensor_stream_cycles = nnz * row_bytes as f64 / sbw;
+
+        // Factor-row loads through the cache: hit probability from the
+        // reuse distance vs cache reach (lines that survive between
+        // reuses ≈ num_lines / lines-per-row).
+        let rank_bytes = (rank * 4) as f64;
+        let lines_per_row = (rank_bytes / cfg.cache.line_bytes as f64).max(1.0);
+        let cache_rows = cfg.cache.num_lines as f64 / lines_per_row;
+        // The cache is shared by the (N-1) input factor matrices.
+        let rows_per_matrix = (cache_rows / (profile.n_modes as f64 - 1.0)).max(1.0);
+        let mut factor_access_cycles = 0.0;
+        for m in 0..profile.n_modes {
+            if m == mode {
+                continue;
+            }
+            // LRU-under-skew approximation: the top-W hottest rows stay
+            // resident, so the hit rate is their access coverage (the
+            // same curve that drives the pointer-spill model).
+            let p_hit = coverage_at(&profile.coverage[m], rows_per_matrix as usize);
+            // Associativity correction: low associativity suffers
+            // conflict misses; fold in a simple penalty.
+            let assoc_pen = match cfg.cache.assoc {
+                1 => 0.75,
+                2 => 0.9,
+                4 => 0.97,
+                _ => 1.0,
+            };
+            let p_hit = p_hit * assoc_pen;
+            let hit_c = cfg.cache.hit_latency as f64;
+            let miss_c = rand_lat * lines_per_row + hit_c;
+            factor_access_cycles += nnz * (p_hit * hit_c + (1.0 - p_hit) * miss_c);
+        }
+
+        // --- Output stores: streaming, one row per used coordinate.
+        let output_store_cycles = profile.used_coords[mode] as f64 * rank_bytes / sbw;
+
+        per_mode.push(ModeEstimate {
+            remap_cycles,
+            tensor_stream_cycles,
+            factor_access_cycles,
+            output_store_cycles,
+        });
+    }
+
+    Estimate {
+        per_mode,
+        resources: fpga::estimate(cfg, dev),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::{CacheConfig, ControllerConfig};
+    use crate::tensor::synth::{generate, Profile, SynthConfig};
+
+    fn profile() -> TensorProfile {
+        let t = generate(&SynthConfig {
+            dims: vec![800, 600, 400],
+            nnz: 30_000,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed: 5,
+        });
+        TensorProfile::measure(&t)
+    }
+
+    fn base_cfg() -> ControllerConfig {
+        ControllerConfig::default_for(16)
+    }
+
+    #[test]
+    fn estimate_is_positive_and_every_mode_pays_remap() {
+        let e = estimate(&profile(), &base_cfg(), &Device::alveo_u250());
+        assert!(e.total_cycles() > 0.0);
+        for m in &e.per_mode {
+            assert!(m.remap_cycles > 0.0);
+        }
+    }
+
+    #[test]
+    fn coverage_curve_and_interpolation() {
+        // 4 coords with counts 8, 4, 2, 1.
+        let col: Vec<u32> = [vec![0u32; 8], vec![1; 4], vec![2; 2], vec![3; 1]].concat();
+        let curve = coverage_curve(&col, 10);
+        assert_eq!(curve[0], (1, 8.0 / 15.0));
+        assert_eq!(curve.last().unwrap().0, 4);
+        assert!((curve.last().unwrap().1 - 1.0).abs() < 1e-12);
+        assert_eq!(coverage_at(&curve, 100), 1.0);
+        let mid = coverage_at(&curve, 2);
+        assert!(mid > 8.0 / 15.0 && mid < 1.0);
+    }
+
+    #[test]
+    fn bigger_cache_never_slower() {
+        let p = profile();
+        let dev = Device::alveo_u250();
+        let mut small = base_cfg();
+        small.cache = CacheConfig {
+            line_bytes: 64,
+            num_lines: 64,
+            assoc: 4,
+            hit_latency: 2,
+        };
+        let mut big = small.clone();
+        big.cache.num_lines = 8192;
+        let es = estimate(&p, &small, &dev).total_cycles();
+        let eb = estimate(&p, &big, &dev).total_cycles();
+        assert!(eb <= es, "big cache {eb} vs small {es}");
+    }
+
+    #[test]
+    fn pointer_spill_adds_remap_cost() {
+        let p = profile();
+        let dev = Device::alveo_u250();
+        let fits = base_cfg();
+        let mut spills = base_cfg();
+        spills.remapper.max_pointers = 16;
+        let a = estimate(&p, &fits, &dev).total_cycles();
+        let b = estimate(&p, &spills, &dev).total_cycles();
+        assert!(b > a * 1.05, "spill {b} should cost >5% over {a}");
+    }
+
+    #[test]
+    fn stream_bandwidth_between_half_and_full_peak() {
+        let d = DramConfig::default_ddr4();
+        let s = stream_bytes_per_cycle(&d);
+        assert!(s > 0.5 * d.peak_bytes_per_cycle());
+        assert!(s <= d.peak_bytes_per_cycle());
+    }
+
+    #[test]
+    fn average_profile_blends_domains() {
+        let p1 = profile();
+        let t2 = generate(&SynthConfig {
+            dims: vec![800, 600, 400],
+            nnz: 10_000,
+            profile: Profile::Uniform,
+            seed: 9,
+        });
+        let p2 = TensorProfile::measure(&t2);
+        let avg = TensorProfile::average(&[p1.clone(), p2.clone()]);
+        assert_eq!(avg.nnz, (p1.nnz + p2.nnz) / 2);
+        assert!(avg.reuse_distance[0] > 0.0);
+    }
+
+    #[test]
+    fn rank_scales_output_traffic() {
+        let p = profile();
+        let dev = Device::alveo_u250();
+        let lo = estimate_with_rank(&p, &base_cfg(), &dev, 8);
+        let hi = estimate_with_rank(&p, &base_cfg(), &dev, 64);
+        assert!(
+            hi.per_mode[0].output_store_cycles > 4.0 * lo.per_mode[0].output_store_cycles
+        );
+    }
+}

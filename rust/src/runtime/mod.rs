@@ -1,0 +1,298 @@
+//! PJRT runtime (S12): load the AOT-compiled HLO-text artifacts emitted
+//! by `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! Interchange is **HLO text** — jax >= 0.5 serializes HloModuleProto
+//! with 64-bit instruction ids that the crate's bundled xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids (see aot.py and
+//! /opt/xla-example/README.md).  Python is never invoked here: the
+//! artifacts directory is the only contract between the layers.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed `manifest.txt` entry describing one artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// "mttkrp" or "rowsolve".
+    pub kind: String,
+    /// Extra key=value fields (modes, seg, blk, s, r, tile ...).
+    pub fields: HashMap<String, String>,
+}
+
+impl ArtifactMeta {
+    /// Integer field accessor (`blk`, `s`, `r`, `modes`, `tile`).
+    pub fn int(&self, key: &str) -> Option<usize> {
+        self.fields.get(key)?.parse().ok()
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.fields.get(key).map(|s| s.as_str())
+    }
+}
+
+/// Parse a manifest file's contents.
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut fields = HashMap::new();
+        for kv in line.split_whitespace() {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow!("manifest line {}: bad field {kv:?}", lineno + 1))?;
+            fields.insert(k.to_string(), v.to_string());
+        }
+        let name = fields
+            .remove("name")
+            .ok_or_else(|| anyhow!("manifest line {}: missing name", lineno + 1))?;
+        let file = fields
+            .remove("file")
+            .ok_or_else(|| anyhow!("manifest line {}: missing file", lineno + 1))?;
+        let kind = fields
+            .remove("kind")
+            .ok_or_else(|| anyhow!("manifest line {}: missing kind", lineno + 1))?;
+        out.push(ArtifactMeta {
+            name,
+            file,
+            kind,
+            fields,
+        });
+    }
+    Ok(out)
+}
+
+/// A compiled, ready-to-execute artifact.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with the given input literals; returns the tuple-unwrapped
+    /// first output literal (aot.py lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.meta.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.meta.name))?;
+        Ok(lit.to_tuple1()?)
+    }
+}
+
+/// The PJRT runtime: one CPU client plus compiled executables, loaded
+/// lazily from an artifacts directory and cached by name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactMeta>,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Open `dir` (must contain `manifest.txt`).  Compilation happens on
+    /// first use of each artifact.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = parse_manifest(&text)?;
+        if manifest.is_empty() {
+            bail!("empty manifest at {}", manifest_path.display());
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Artifact directory default used by the CLI/examples: `./artifacts`.
+    pub fn open_default() -> Result<Self> {
+        Self::open(Path::new("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &[ArtifactMeta] {
+        &self.manifest
+    }
+
+    /// Find the block-MTTKRP artifact for a tensor with `modes` modes,
+    /// rank `r`, and segment encoding `seg` ("onehot"/"segids"/"refseg").
+    ///
+    /// Block-size policy (measured in the §Perf pass): the one-hot form
+    /// does `S x BLK x R` MACs per block — work grows ~quadratically in
+    /// block size, so the *smallest* block wins on compute-bound
+    /// backends.  The segment forms are linear in BLK, so the *largest*
+    /// block wins (fewer dispatches at the same total work).
+    pub fn find_mttkrp(&self, modes: usize, r: usize, seg: &str) -> Option<&ArtifactMeta> {
+        let candidates = self.manifest.iter().filter(|m| {
+            m.kind == "mttkrp"
+                && m.int("modes") == Some(modes)
+                && m.int("r") == Some(r)
+                && m.str("seg") == Some(seg)
+        });
+        if seg == "onehot" {
+            candidates.min_by_key(|m| m.int("blk").unwrap_or(usize::MAX))
+        } else {
+            candidates.max_by_key(|m| m.int("blk").unwrap_or(0))
+        }
+    }
+
+    /// Find the ALS row-solve artifact for rank `r`.
+    pub fn find_rowsolve(&self, r: usize) -> Option<&ArtifactMeta> {
+        self.manifest
+            .iter()
+            .find(|m| m.kind == "rowsolve" && m.int("r") == Some(r))
+    }
+
+    /// Get (compiling on first use) the executable named `name`.
+    pub fn executable(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .iter()
+                .find(|m| m.name == name)
+                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+                .clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            self.cache.insert(name.to_string(), Executable { meta, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute one MTTKRP block through the `onehot` artifact.
+    ///
+    /// * `seg_onehot` — row-major `[s, blk]` scatter matrix.
+    /// * `vals` — `[blk]`.
+    /// * `rows` — `modes-1` row-major `[blk, r]` gathered factor blocks.
+    ///
+    /// Returns the row-major `[s, r]` partial output.
+    pub fn mttkrp_block_onehot(
+        &mut self,
+        name: &str,
+        seg_onehot: &[f32],
+        vals: &[f32],
+        rows: &[&[f32]],
+    ) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let (blk, s, r) = (
+            exe.meta.int("blk").context("blk")?,
+            exe.meta.int("s").context("s")?,
+            exe.meta.int("r").context("r")?,
+        );
+        anyhow::ensure!(seg_onehot.len() == s * blk, "seg_onehot shape");
+        anyhow::ensure!(vals.len() == blk, "vals shape");
+        let mut inputs = Vec::with_capacity(rows.len() + 2);
+        inputs.push(xla::Literal::vec1(seg_onehot).reshape(&[s as i64, blk as i64])?);
+        inputs.push(xla::Literal::vec1(vals));
+        for row in rows {
+            anyhow::ensure!(row.len() == blk * r, "row block shape");
+            inputs.push(xla::Literal::vec1(row).reshape(&[blk as i64, r as i64])?);
+        }
+        let out = self.cache[name].run(&inputs)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute one MTTKRP block through a `segids`/`refseg` artifact
+    /// (int32 segment ids instead of the one-hot matrix).
+    pub fn mttkrp_block_segids(
+        &mut self,
+        name: &str,
+        seg_ids: &[i32],
+        vals: &[f32],
+        rows: &[&[f32]],
+    ) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let (blk, r) = (
+            exe.meta.int("blk").context("blk")?,
+            exe.meta.int("r").context("r")?,
+        );
+        anyhow::ensure!(seg_ids.len() == blk, "seg_ids shape");
+        anyhow::ensure!(vals.len() == blk, "vals shape");
+        let mut inputs = Vec::with_capacity(rows.len() + 2);
+        inputs.push(xla::Literal::vec1(seg_ids));
+        inputs.push(xla::Literal::vec1(vals));
+        for row in rows {
+            anyhow::ensure!(row.len() == blk * r, "row block shape");
+            inputs.push(xla::Literal::vec1(row).reshape(&[blk as i64, r as i64])?);
+        }
+        let out = self.cache[name].run(&inputs)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute one ALS row-solve tile: `m_tile [tile, r] @ hinv [r, r]`.
+    pub fn rowsolve(&mut self, name: &str, m_tile: &[f32], hinv: &[f32]) -> Result<Vec<f32>> {
+        let exe = self.executable(name)?;
+        let (tile, r) = (
+            exe.meta.int("tile").context("tile")?,
+            exe.meta.int("r").context("r")?,
+        );
+        anyhow::ensure!(m_tile.len() == tile * r, "m_tile shape");
+        anyhow::ensure!(hinv.len() == r * r, "hinv shape");
+        let inputs = [
+            xla::Literal::vec1(m_tile).reshape(&[tile as i64, r as i64])?,
+            xla::Literal::vec1(hinv).reshape(&[r as i64, r as i64])?,
+        ];
+        let out = self.cache[name].run(&inputs)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_key_values() {
+        let text = "name=a file=a.hlo.txt kind=mttkrp modes=3 seg=onehot blk=256 s=64 r=16\n\
+                    # comment\n\
+                    name=b file=b.hlo.txt kind=rowsolve tile=256 r=16\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].name, "a");
+        assert_eq!(m[0].int("blk"), Some(256));
+        assert_eq!(m[0].str("seg"), Some("onehot"));
+        assert_eq!(m[1].kind, "rowsolve");
+        assert_eq!(m[1].int("tile"), Some(256));
+    }
+
+    #[test]
+    fn manifest_rejects_missing_name() {
+        assert!(parse_manifest("file=x kind=y\n").is_err());
+        assert!(parse_manifest("name=x kind=y\n").is_err());
+        assert!(parse_manifest("garbage\n").is_err());
+    }
+
+    #[test]
+    fn open_fails_cleanly_without_artifacts() {
+        let err = match Runtime::open(Path::new("/nonexistent-dir")) {
+            Ok(_) => panic!("open of missing dir must fail"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

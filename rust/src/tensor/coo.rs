@@ -1,0 +1,359 @@
+//! COO sparse tensor: the paper's in-memory tensor format (§2.1, Alg. 2).
+
+use super::Coord;
+
+/// How the non-zero list is currently ordered.  The paper's Approach 1
+/// requires the tensor sorted in the *output-mode* direction; Approach 2
+/// sorts by an *input* mode.  Tracking the order lets engines assert
+/// their precondition and lets the remapper skip no-op remaps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SortOrder {
+    /// Sorted by the coordinates of the given mode (stable w.r.t.
+    /// insertion order within equal coordinates).
+    ByMode(usize),
+    /// No ordering guarantee.
+    Unsorted,
+}
+
+/// A sparse tensor in coordinate format.
+///
+/// Indices are stored mode-major (`indices[m][z]` = coordinate of nnz `z`
+/// in mode `m`) rather than nnz-major: every engine walks one mode's
+/// coordinate column linearly, and the FPGA layout the paper assumes
+/// (tensor elements streamed as records) is reproduced by the trace
+/// generators, not by this host layout.
+#[derive(Debug, Clone)]
+pub struct SparseTensor {
+    /// Mode lengths `I_0 .. I_{N-1}`.
+    dims: Vec<usize>,
+    /// Coordinate columns, one per mode; all of length `nnz`.
+    indices: Vec<Vec<Coord>>,
+    /// Non-zero values.
+    values: Vec<f32>,
+    /// Current ordering of the nnz list.
+    order: SortOrder,
+}
+
+impl SparseTensor {
+    /// Build a tensor from nnz-major triples. Panics on inconsistent
+    /// lengths or out-of-range coordinates (these are programmer errors
+    /// in generators/readers, not recoverable conditions).
+    pub fn new(dims: Vec<usize>, entries: &[(Vec<Coord>, f32)]) -> Self {
+        let n = dims.len();
+        assert!(n >= 2, "tensor needs >= 2 modes");
+        let mut indices = vec![Vec::with_capacity(entries.len()); n];
+        let mut values = Vec::with_capacity(entries.len());
+        for (coords, v) in entries {
+            assert_eq!(coords.len(), n, "coordinate arity mismatch");
+            for (m, &c) in coords.iter().enumerate() {
+                assert!(
+                    (c as usize) < dims[m],
+                    "coordinate {c} out of range for mode {m} (len {})",
+                    dims[m]
+                );
+                indices[m].push(c);
+            }
+            values.push(*v);
+        }
+        SparseTensor {
+            dims,
+            indices,
+            values,
+            order: SortOrder::Unsorted,
+        }
+    }
+
+    /// Build directly from columns (no copy). `indices[m].len()` must all
+    /// equal `values.len()`.
+    pub fn from_columns(
+        dims: Vec<usize>,
+        indices: Vec<Vec<Coord>>,
+        values: Vec<f32>,
+        order: SortOrder,
+    ) -> Self {
+        assert_eq!(indices.len(), dims.len());
+        for col in &indices {
+            assert_eq!(col.len(), values.len());
+        }
+        SparseTensor {
+            dims,
+            indices,
+            values,
+            order,
+        }
+    }
+
+    /// Number of modes N.
+    pub fn n_modes(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Mode lengths.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Number of non-zero elements |T|.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Coordinate column of `mode`.
+    pub fn mode_col(&self, mode: usize) -> &[Coord] {
+        &self.indices[mode]
+    }
+
+    /// Non-zero values.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Current sort order.
+    pub fn order(&self) -> SortOrder {
+        self.order
+    }
+
+    /// Internal mutable access for modules (remap) that establish an
+    /// ordering by construction.
+    pub(crate) fn order_mut(&mut self) -> &mut SortOrder {
+        &mut self.order
+    }
+
+    /// Coordinates of nnz `z` as a small vec.
+    pub fn coords_of(&self, z: usize) -> Vec<Coord> {
+        self.indices.iter().map(|col| col[z]).collect()
+    }
+
+    /// Density `|T| / prod(dims)` (useful for stats; real tensors ~1e-7).
+    pub fn density(&self) -> f64 {
+        let cells: f64 = self.dims.iter().map(|&d| d as f64).product();
+        self.nnz() as f64 / cells
+    }
+
+    /// Bytes of one COO record: N u32 coordinates + one f32 value.  This
+    /// is the "width of a tensor element" remapper parameter (§5.2.1).
+    pub fn record_bytes(&self) -> usize {
+        self.n_modes() * 4 + 4
+    }
+
+    /// Total tensor bytes in external memory (|T| records).
+    pub fn bytes(&self) -> usize {
+        self.nnz() * self.record_bytes()
+    }
+
+    /// Sort (stably) in the direction of `mode` — the layout Approach 1
+    /// needs for that output mode.  Counting sort over the mode column:
+    /// O(nnz + I_mode), mirroring the remapper's pointer-table pass.
+    pub fn sort_by_mode(&mut self, mode: usize) {
+        assert!(mode < self.n_modes());
+        if self.order == SortOrder::ByMode(mode) {
+            return;
+        }
+        let perm = sort_permutation(&self.indices[mode], self.dims[mode]);
+        self.apply_permutation(&perm);
+        self.order = SortOrder::ByMode(mode);
+    }
+
+    /// Apply a gather permutation: `new[z] = old[perm[z]]`.
+    pub fn apply_permutation(&mut self, perm: &[usize]) {
+        assert_eq!(perm.len(), self.nnz());
+        for col in &mut self.indices {
+            let old = std::mem::take(col);
+            *col = perm.iter().map(|&p| old[p]).collect();
+        }
+        let old_vals = std::mem::take(&mut self.values);
+        self.values = perm.iter().map(|&p| old_vals[p]).collect();
+        self.order = SortOrder::Unsorted;
+    }
+
+    /// Iterate runs of equal coordinates in `mode` (requires sorted by
+    /// that mode): yields `(coord, start, end)` half-open nnz ranges —
+    /// the "all non-zeros with the same output coordinate" groups of
+    /// Alg. 3 line 5.
+    pub fn fiber_ranges(&self, mode: usize) -> FiberRanges<'_> {
+        assert_eq!(
+            self.order,
+            SortOrder::ByMode(mode),
+            "fiber_ranges requires tensor sorted by mode {mode}"
+        );
+        FiberRanges {
+            col: &self.indices[mode],
+            pos: 0,
+        }
+    }
+
+    /// Dense reconstruction (tests only; tiny tensors).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let total: usize = self.dims.iter().product();
+        let mut out = vec![0.0f32; total];
+        for z in 0..self.nnz() {
+            let mut off = 0usize;
+            for m in 0..self.n_modes() {
+                off = off * self.dims[m] + self.indices[m][z] as usize;
+            }
+            out[off] += self.values[z];
+        }
+        let _ = total;
+        out
+    }
+}
+
+/// Stable counting-sort permutation of `col` with key range `key_len`.
+/// Returned `perm` satisfies: `col[perm[z]]` is non-decreasing in `z`.
+pub fn sort_permutation(col: &[Coord], key_len: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; key_len + 1];
+    for &c in col {
+        counts[c as usize + 1] += 1;
+    }
+    for i in 1..counts.len() {
+        counts[i] += counts[i - 1];
+    }
+    let mut perm = vec![0usize; col.len()];
+    for (z, &c) in col.iter().enumerate() {
+        perm[counts[c as usize]] = z;
+        counts[c as usize] += 1;
+    }
+    perm
+}
+
+/// Iterator over equal-coordinate runs of a sorted mode column.
+pub struct FiberRanges<'a> {
+    col: &'a [Coord],
+    pos: usize,
+}
+
+impl Iterator for FiberRanges<'_> {
+    /// `(coordinate, start_nnz, end_nnz)` half-open range.
+    type Item = (Coord, usize, usize);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.col.len() {
+            return None;
+        }
+        let start = self.pos;
+        let c = self.col[start];
+        let mut end = start + 1;
+        while end < self.col.len() && self.col[end] == c {
+            end += 1;
+        }
+        self.pos = end;
+        Some((c, start, end))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, Rng};
+
+    fn small() -> SparseTensor {
+        SparseTensor::new(
+            vec![3, 4, 2],
+            &[
+                (vec![2, 0, 1], 1.0),
+                (vec![0, 3, 0], 2.0),
+                (vec![2, 1, 1], 3.0),
+                (vec![1, 2, 0], 4.0),
+                (vec![0, 0, 1], 5.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let t = small();
+        assert_eq!(t.n_modes(), 3);
+        assert_eq!(t.nnz(), 5);
+        assert_eq!(t.dims(), &[3, 4, 2]);
+        assert_eq!(t.record_bytes(), 16);
+        assert_eq!(t.bytes(), 80);
+        assert_eq!(t.order(), SortOrder::Unsorted);
+        assert_eq!(t.coords_of(3), vec![1, 2, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn rejects_out_of_range_coordinate() {
+        SparseTensor::new(vec![2, 2], &[(vec![2, 0], 1.0)]);
+    }
+
+    #[test]
+    fn sort_by_mode_orders_column_and_is_stable() {
+        let mut t = small();
+        t.sort_by_mode(0);
+        assert_eq!(t.order(), SortOrder::ByMode(0));
+        assert_eq!(t.mode_col(0), &[0, 0, 1, 2, 2]);
+        // Stability: the two i0=0 entries keep insertion order (2.0, 5.0).
+        assert_eq!(&t.values()[..2], &[2.0, 5.0]);
+        // The two i0=2 entries keep order (1.0, 3.0).
+        assert_eq!(&t.values()[3..], &[1.0, 3.0]);
+    }
+
+    #[test]
+    fn sort_is_idempotent() {
+        let mut t = small();
+        t.sort_by_mode(1);
+        let vals = t.values().to_vec();
+        t.sort_by_mode(1); // should early-out
+        assert_eq!(t.values(), &vals[..]);
+    }
+
+    #[test]
+    fn fiber_ranges_cover_all_nnz_without_overlap() {
+        let mut t = small();
+        t.sort_by_mode(0);
+        let ranges: Vec<_> = t.fiber_ranges(0).collect();
+        assert_eq!(ranges, vec![(0, 0, 2), (1, 2, 3), (2, 3, 5)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires tensor sorted")]
+    fn fiber_ranges_requires_sorted() {
+        let t = small();
+        let _ = t.fiber_ranges(0).count();
+    }
+
+    #[test]
+    fn sort_preserves_multiset_property() {
+        forall("sort_preserves_multiset", 32, |rng: &mut Rng| {
+            let dims = vec![rng.range(1, 20), rng.range(1, 20), rng.range(1, 20)];
+            let nnz = rng.range(0, 200);
+            let entries: Vec<(Vec<Coord>, f32)> = (0..nnz)
+                .map(|_| {
+                    (
+                        dims.iter().map(|&d| rng.below(d as u64) as Coord).collect(),
+                        rng.f32(),
+                    )
+                })
+                .collect();
+            let mut t = SparseTensor::new(dims.clone(), &entries);
+            let mode = rng.range(0, 3);
+            let dense_before = t.to_dense();
+            t.sort_by_mode(mode);
+            // Sorted column is non-decreasing.
+            let col = t.mode_col(mode);
+            assert!(col.windows(2).all(|w| w[0] <= w[1]));
+            // Tensor contents unchanged.
+            assert_eq!(t.to_dense(), dense_before);
+        });
+    }
+
+    #[test]
+    fn sort_permutation_matches_std_stable_sort() {
+        forall("counting_sort_vs_std", 32, |rng: &mut Rng| {
+            let key_len = rng.range(1, 50);
+            let n = rng.range(0, 300);
+            let col: Vec<Coord> = (0..n).map(|_| rng.below(key_len as u64) as Coord).collect();
+            let perm = sort_permutation(&col, key_len);
+            let mut want: Vec<usize> = (0..n).collect();
+            want.sort_by_key(|&z| col[z]); // std stable sort
+            assert_eq!(perm, want);
+        });
+    }
+
+    #[test]
+    fn density_of_known_tensor() {
+        let t = small();
+        assert!((t.density() - 5.0 / 24.0).abs() < 1e-12);
+    }
+}

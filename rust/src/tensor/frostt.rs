@@ -1,0 +1,193 @@
+//! FROSTT `.tns` reader / writer (Table 2's benchmark repository format).
+//!
+//! The format is whitespace-separated text: one non-zero per line,
+//! `c_0 c_1 ... c_{N-1} value`, with **1-based** coordinates; `#` starts
+//! a comment.  Mode lengths are not declared in the file — they are the
+//! per-mode coordinate maxima unless the caller overrides them.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::path::Path;
+
+use super::{Coord, SparseTensor};
+
+/// Errors from `.tns` parsing.
+#[derive(Debug)]
+pub enum TnsError {
+    Io(std::io::Error),
+    /// (line number, message)
+    Parse(usize, String),
+    Empty,
+}
+
+impl std::fmt::Display for TnsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TnsError::Io(e) => write!(f, "tns io error: {e}"),
+            TnsError::Parse(line, msg) => write!(f, "tns parse error at line {line}: {msg}"),
+            TnsError::Empty => write!(f, "tns file has no non-zero entries"),
+        }
+    }
+}
+
+impl std::error::Error for TnsError {}
+
+impl From<std::io::Error> for TnsError {
+    fn from(e: std::io::Error) -> Self {
+        TnsError::Io(e)
+    }
+}
+
+/// Parse a `.tns` stream.  All data lines must have the same arity.
+pub fn read_tns<R: Read>(reader: R) -> Result<SparseTensor, TnsError> {
+    let reader = BufReader::new(reader);
+    let mut n_modes: Option<usize> = None;
+    let mut cols: Vec<Vec<Coord>> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    let mut maxima: Vec<Coord> = Vec::new();
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = line?;
+        let data = match line.find('#') {
+            Some(pos) => &line[..pos],
+            None => &line[..],
+        };
+        let fields: Vec<&str> = data.split_whitespace().collect();
+        if fields.is_empty() {
+            continue;
+        }
+        if fields.len() < 3 {
+            return Err(TnsError::Parse(
+                lineno,
+                format!("expected >= 3 fields, got {}", fields.len()),
+            ));
+        }
+        let arity = fields.len() - 1;
+        match n_modes {
+            None => {
+                n_modes = Some(arity);
+                cols = vec![Vec::new(); arity];
+                maxima = vec![0; arity];
+            }
+            Some(n) if n != arity => {
+                return Err(TnsError::Parse(
+                    lineno,
+                    format!("arity {arity} != first line's {n}"),
+                ));
+            }
+            _ => {}
+        }
+        for (m, f) in fields[..arity].iter().enumerate() {
+            let c: u64 = f
+                .parse()
+                .map_err(|e| TnsError::Parse(lineno, format!("bad coordinate {f:?}: {e}")))?;
+            if c == 0 {
+                return Err(TnsError::Parse(
+                    lineno,
+                    "coordinates are 1-based; got 0".into(),
+                ));
+            }
+            let c0 = (c - 1) as Coord;
+            maxima[m] = maxima[m].max(c0);
+            cols[m].push(c0);
+        }
+        let v: f32 = fields[arity]
+            .parse()
+            .map_err(|e| TnsError::Parse(lineno, format!("bad value {:?}: {e}", fields[arity])))?;
+        vals.push(v);
+    }
+
+    if vals.is_empty() {
+        return Err(TnsError::Empty);
+    }
+    let dims: Vec<usize> = maxima.iter().map(|&m| m as usize + 1).collect();
+    Ok(SparseTensor::from_columns(
+        dims,
+        cols,
+        vals,
+        super::SortOrder::Unsorted,
+    ))
+}
+
+/// Read a `.tns` file from disk.
+pub fn read_tns_file(path: &Path) -> Result<SparseTensor, TnsError> {
+    read_tns(std::fs::File::open(path)?)
+}
+
+/// Write a tensor in `.tns` format (1-based coordinates).
+pub fn write_tns<W: Write>(t: &SparseTensor, mut w: W) -> std::io::Result<()> {
+    for z in 0..t.nnz() {
+        for m in 0..t.n_modes() {
+            write!(w, "{} ", t.mode_col(m)[z] as u64 + 1)?;
+        }
+        writeln!(w, "{}", t.values()[z])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_file_with_comments_and_blanks() {
+        let text = "# a comment\n\n1 1 1 1.5\n2 3 1 -2.0 # trailing\n2 1 4 0.25\n";
+        let t = read_tns(text.as_bytes()).unwrap();
+        assert_eq!(t.n_modes(), 3);
+        assert_eq!(t.nnz(), 3);
+        assert_eq!(t.dims(), &[2, 3, 4]);
+        assert_eq!(t.mode_col(0), &[0, 1, 1]);
+        assert_eq!(t.values(), &[1.5, -2.0, 0.25]);
+    }
+
+    #[test]
+    fn rejects_zero_based_coordinates() {
+        let err = read_tns("0 1 1 1.0\n".as_bytes()).unwrap_err();
+        assert!(matches!(err, TnsError::Parse(1, _)), "{err}");
+    }
+
+    #[test]
+    fn rejects_mixed_arity() {
+        let err = read_tns("1 1 1 1.0\n1 1 1 1 1.0\n".as_bytes()).unwrap_err();
+        assert!(matches!(err, TnsError::Parse(2, _)), "{err}");
+    }
+
+    #[test]
+    fn rejects_empty_file() {
+        assert!(matches!(
+            read_tns("# nothing\n".as_bytes()).unwrap_err(),
+            TnsError::Empty
+        ));
+    }
+
+    #[test]
+    fn rejects_garbage_value() {
+        let err = read_tns("1 1 1 abc\n".as_bytes()).unwrap_err();
+        assert!(matches!(err, TnsError::Parse(1, _)), "{err}");
+    }
+
+    #[test]
+    fn roundtrip_write_read() {
+        let t = SparseTensor::new(
+            vec![3, 2, 5],
+            &[(vec![0, 1, 4], 1.25), (vec![2, 0, 0], -3.5)],
+        );
+        let mut buf = Vec::new();
+        write_tns(&t, &mut buf).unwrap();
+        let t2 = read_tns(&buf[..]).unwrap();
+        assert_eq!(t2.nnz(), t.nnz());
+        // Dims shrink to coordinate maxima (write does not store dims).
+        assert_eq!(t2.dims(), &[3, 2, 5]);
+        assert_eq!(t2.values(), t.values());
+        for m in 0..3 {
+            assert_eq!(t2.mode_col(m), t.mode_col(m));
+        }
+    }
+
+    #[test]
+    fn four_mode_file() {
+        let t = read_tns("1 2 3 4 9.0\n4 3 2 1 8.0\n".as_bytes()).unwrap();
+        assert_eq!(t.n_modes(), 4);
+        assert_eq!(t.dims(), &[4, 3, 3, 4]);
+    }
+}

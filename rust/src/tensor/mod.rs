@@ -1,0 +1,20 @@
+//! Sparse tensor substrate (S1): COO storage, mode ordering, FROSTT IO,
+//! synthetic workload generators, and access-pattern statistics.
+//!
+//! The paper (§3) computes spMTTKRP over tensors stored in coordinate
+//! (COO) format in FPGA external memory, sorted in the direction of the
+//! current output mode.  [`SparseTensor`] is that representation;
+//! [`remap`] implements the §3/Alg. 5 output-direction remapping.
+
+mod coo;
+pub mod frostt;
+pub mod remap;
+pub mod stats;
+pub mod synth;
+
+pub use coo::{SortOrder, SparseTensor};
+
+/// Element index type for mode coordinates.  Real FROSTT tensors have
+/// mode lengths up to ~39M (Table 2), well within u32; we use u32 to
+/// halve index traffic exactly like a 32-bit FPGA address pointer.
+pub type Coord = u32;

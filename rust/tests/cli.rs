@@ -1,0 +1,140 @@
+//! End-to-end CLI tests: spawn the real `ptmc` binary
+//! (`CARGO_BIN_EXE_ptmc`) and check each subcommand's contract.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_ptmc"))
+        .args(args)
+        .output()
+        .expect("spawn ptmc");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+const SMALL: &[&str] = &["--synth", "zipf", "--dims", "200x150x100", "--nnz", "5000"];
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, text) = run(&["--help"]);
+    assert!(ok);
+    for sub in ["decompose", "simulate", "pms", "explore", "stats"] {
+        assert!(text.contains(sub), "help missing {sub}: {text}");
+    }
+}
+
+#[test]
+fn stats_reports_table2_fields() {
+    let (ok, text) = run(&[&["stats"], SMALL].concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("non-zeros:         5000"));
+    assert!(text.contains("modes:             3"));
+    assert!(text.contains("skew"));
+}
+
+#[test]
+fn simulate_reports_cycles_and_overhead() {
+    let (ok, text) = run(&[&["simulate"], SMALL, &["--rank", "16"]].concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("total cycles:"));
+    assert!(text.contains("overhead"));
+    assert!(text.contains("cache:"));
+}
+
+#[test]
+fn decompose_native_prints_fit_curve() {
+    let (ok, text) = run(&[
+        &["decompose"],
+        SMALL,
+        &["--rank", "4", "--iters", "3", "--backend", "native", "--tol", "0"],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert_eq!(text.matches("fit ").count(), 3, "{text}");
+    assert!(text.contains("final fit:"));
+}
+
+#[test]
+fn decompose_sim_reports_cycles() {
+    let (ok, text) = run(&[
+        &["decompose"],
+        SMALL,
+        &["--rank", "4", "--iters", "2", "--backend", "sim", "--tol", "0"],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("simulated memory cycles:"), "{text}");
+}
+
+#[test]
+fn pms_reports_estimate_and_resources() {
+    let (ok, text) = run(&[&["pms"], SMALL, &["--device", "u280"]].concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("total estimate:"));
+    assert!(text.contains("BRAM36"));
+    assert!(text.contains("fits"));
+}
+
+#[test]
+fn explore_reports_best_config() {
+    let (ok, text) = run(&[&["explore"], SMALL, &["--evaluator", "pms"]].concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("best:"));
+    assert!(text.contains("cache:"));
+}
+
+#[test]
+fn unknown_flag_fails_loudly() {
+    let (ok, text) = run(&["stats", "--bogus", "1"]);
+    assert!(!ok);
+    assert!(text.contains("--bogus"), "{text}");
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"), "{text}");
+}
+
+#[test]
+fn config_file_overrides_defaults() {
+    let dir = std::env::temp_dir().join("ptmc_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("ptmc.toml");
+    std::fs::write(&cfg, "[cache]\nnum_lines = 128\nassoc = 2\n").unwrap();
+    let (ok, text) = run(&[
+        &["simulate"],
+        SMALL,
+        &["--config", cfg.to_str().unwrap()],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    // A 128-line cache on this workload must show a sub-90% hit rate
+    // (the default 1024-line cache shows >90%).
+    assert!(text.contains("cache:"), "{text}");
+}
+
+#[test]
+fn decompose_pjrt_when_artifacts_exist() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let (ok, text) = run(&[
+        &["decompose"],
+        SMALL,
+        &[
+            "--rank", "16", "--iters", "1", "--backend", "pjrt", "--seg", "refseg",
+            "--tol", "0",
+        ],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("coordinator:"), "{text}");
+    assert!(text.contains("final fit:"), "{text}");
+}

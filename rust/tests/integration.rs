@@ -1,0 +1,221 @@
+//! Cross-module integration tests: full pipelines spanning tensor IO,
+//! remap, the MTTKRP engines, the memory-controller simulator, CP-ALS,
+//! the PMS/DSE pair, and (when artifacts are present) the PJRT runtime.
+
+use ptmc::controller::{Access, ControllerConfig, MemLayout, MemoryController};
+use ptmc::cpd::linalg::Mat;
+use ptmc::cpd::{cp_als, AlsConfig, MttkrpBackend, NativeBackend, SimBackend};
+use ptmc::dse::{explore, Evaluator, Grids};
+use ptmc::fpga::Device;
+use ptmc::mttkrp::{approach1, oracle, remap_exec, Tracing};
+use ptmc::pms::{self, TensorProfile};
+use ptmc::tensor::synth::{generate, low_rank, Profile, SynthConfig};
+use ptmc::tensor::{frostt, remap, SparseTensor};
+use ptmc::testkit::assert_allclose;
+
+fn tensor(seed: u64, nnz: usize) -> SparseTensor {
+    generate(&SynthConfig {
+        dims: vec![500, 400, 300],
+        nnz,
+        profile: Profile::Zipf { alpha_milli: 1200 },
+        seed,
+    })
+}
+
+#[test]
+fn tns_file_to_decomposition() {
+    // Write a low-rank tensor to .tns, read it back, decompose, recover.
+    let t = low_rank(&[20, 16, 12], 3, 0.02, 5);
+    let mut buf = Vec::new();
+    frostt::write_tns(&t, &mut buf).unwrap();
+    let mut t2 = frostt::read_tns(&buf[..]).unwrap();
+    assert_eq!(t2.nnz(), t.nnz());
+
+    let cfg = AlsConfig {
+        rank: 3,
+        max_iters: 25,
+        tol: 1e-7,
+        ..Default::default()
+    };
+    let model = cp_als(&mut t2, &cfg, &mut NativeBackend);
+    assert!(model.final_fit() > 0.9, "fit {}", model.final_fit());
+}
+
+#[test]
+fn remap_then_approach1_equals_oracle_through_controller() {
+    let mut t = tensor(1, 5_000);
+    let factors: Vec<Mat> = t
+        .dims()
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| Mat::randn(d, 16, m as u64))
+        .collect();
+    let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 16);
+    let mut ctl = MemoryController::new(ControllerConfig::default_for(t.record_bytes()));
+
+    for mode in 0..3 {
+        let want = oracle::mttkrp(&t, &factors, mode);
+        let run = remap_exec::run(&mut t, &factors, mode, &layout, &mut ctl, 0);
+        assert_allclose(run.engine.output.data(), want.data(), 1e-4, 1e-4);
+    }
+    assert!(ctl.now() > 0);
+    assert!(ctl.cache_stats().hit_rate() > 0.3, "zipf rows should hit");
+}
+
+#[test]
+fn full_als_sim_vs_native_same_fit_and_nonzero_cycles() {
+    let mut ta = tensor(2, 4_000);
+    let mut tb = ta.clone();
+    let cfg = AlsConfig {
+        rank: 8,
+        max_iters: 4,
+        tol: 0.0,
+        ..Default::default()
+    };
+    let native = cp_als(&mut ta, &cfg, &mut NativeBackend);
+    let layout = MemLayout::plan(tb.dims(), tb.nnz(), tb.record_bytes(), cfg.rank);
+    let mut sim = SimBackend::new(
+        MemoryController::new(ControllerConfig::default_for(tb.record_bytes())),
+        layout,
+    );
+    let simmed = cp_als(&mut tb, &cfg, &mut sim);
+    assert!((native.final_fit() - simmed.final_fit()).abs() < 1e-3);
+    assert!(simmed.cycles > 0);
+}
+
+#[test]
+fn dse_winner_beats_loser_when_resimulated() {
+    let t = tensor(3, 10_000);
+    let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 16, 9)).collect();
+    let profile = TensorProfile::measure(&t);
+    let dev = Device::alveo_u250();
+    let base = ControllerConfig::default_for(t.record_bytes());
+    let ex = explore(
+        &base,
+        &Grids::default(),
+        &dev,
+        &Evaluator::Pms {
+            profile: &profile,
+            rank: 16,
+        },
+    );
+    // Re-simulate best + a deliberately bad config with the cycle model.
+    let sim = Evaluator::CycleSim {
+        tensor: &t,
+        factors: &factors,
+    };
+    let best_cycles = sim.score(&ex.best.cfg, &dev).unwrap();
+    let mut bad = base.clone();
+    bad.cache.num_lines = 64;
+    bad.cache.assoc = 1;
+    bad.dma.buffer_bytes = 64;
+    bad.dma.buffers_per_dma = 1;
+    bad.remapper.max_pointers = 8;
+    let bad_cycles = sim.score(&bad, &dev).unwrap();
+    assert!(
+        best_cycles < bad_cycles,
+        "PMS-chosen config ({best_cycles}) must beat a crippled one ({bad_cycles})"
+    );
+}
+
+#[test]
+fn pms_tracks_simulator_on_fresh_tensor() {
+    let t = tensor(4, 20_000);
+    let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 16, 11)).collect();
+    let profile = TensorProfile::measure(&t);
+    let dev = Device::alveo_u250();
+    let cfg = ControllerConfig::default_for(t.record_bytes());
+    let est = pms::estimate_with_rank(&profile, &cfg, &dev, 16).total_cycles();
+    let sim = Evaluator::CycleSim {
+        tensor: &t,
+        factors: &factors,
+    }
+    .score(&cfg, &dev)
+    .unwrap();
+    let rel = (est - sim).abs() / sim;
+    assert!(rel < 0.30, "PMS {est:.3e} vs sim {sim:.3e} ({rel:.2})");
+}
+
+#[test]
+fn controller_trace_cycles_are_deterministic() {
+    let mut t = tensor(5, 3_000);
+    t.sort_by_mode(0);
+    let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 2)).collect();
+    let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 8);
+    let run = approach1::run(&t, &factors, 0, &layout, Tracing::On);
+    let cycles: Vec<u64> = (0..3)
+        .map(|_| {
+            let mut ctl =
+                MemoryController::new(ControllerConfig::default_for(t.record_bytes()));
+            ctl.replay(&run.trace)
+        })
+        .collect();
+    assert_eq!(cycles[0], cycles[1]);
+    assert_eq!(cycles[1], cycles[2]);
+}
+
+#[test]
+fn remap_report_feeds_controller_consistently() {
+    // The host-side remap accounting and the remapper-module simulation
+    // must agree on element counts and spill behaviour.
+    let mut t = tensor(6, 8_000);
+    let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 16);
+    let mut cfg = ControllerConfig::default_for(t.record_bytes());
+    cfg.remapper.max_pointers = 32;
+    let mut ctl = MemoryController::new(cfg.clone());
+    ctl.remap_pass(t.mode_col(1), t.dims()[1], &layout, 0, 1);
+    let report = remap::remap(&mut t, 1, cfg.remapper.max_pointers);
+    let stats = ctl.remapper_stats();
+    assert_eq!(stats.elements as usize, report.elements);
+    assert_eq!(
+        stats.spilled_cursor_elems * 2,
+        report.spilled_pointer_accesses as u64
+    );
+}
+
+#[test]
+fn mixed_access_stream_is_fifo_ordered() {
+    let mut ctl = MemoryController::new(ControllerConfig::default_for(16));
+    let mut last = 0;
+    for i in 0..200u64 {
+        let t = match i % 3 {
+            0 => ctl.request(Access::Stream {
+                addr: i * 4096,
+                bytes: 2048,
+            }),
+            1 => ctl.request(Access::Cached {
+                addr: (i % 7) * 64,
+                bytes: 64,
+            }),
+            _ => ctl.request(Access::Element {
+                addr: (1 << 30) + i * 16384,
+                bytes: 16,
+            }),
+        };
+        assert!(t >= last, "FIFO completion must be monotone");
+        last = t;
+    }
+}
+
+#[test]
+fn pjrt_full_stack_when_artifacts_present() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("SKIP: artifacts missing; run `make artifacts`");
+        return;
+    }
+    use ptmc::coordinator::PjrtCoordinator;
+    let mut t = tensor(7, 6_000);
+    let mut c = PjrtCoordinator::open_default().unwrap();
+    let factors: Vec<Mat> = t
+        .dims()
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| Mat::randn(d, 16, m as u64 + 70))
+        .collect();
+    for mode in 0..3 {
+        let want = oracle::mttkrp(&t, &factors, mode);
+        let got = c.mttkrp(&mut t, &factors, mode);
+        assert_allclose(got.data(), want.data(), 1e-4, 1e-4);
+    }
+    assert!(c.metrics().nnz >= 18_000);
+}

@@ -104,9 +104,11 @@ fn main() {
                     setup_cycles: 8,
                 };
                 let (c, onchip) = run(dma);
-                if c as f64 <= best.0 as f64 * 1.005
-                    && cheapest.map_or(true, |(b, _)| onchip < b)
-                {
+                let improves = match cheapest {
+                    None => true,
+                    Some((b, _)) => onchip < b,
+                };
+                if c as f64 <= best.0 as f64 * 1.005 && improves {
                     cheapest = Some((onchip, dma));
                 }
             }

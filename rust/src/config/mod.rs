@@ -181,12 +181,15 @@ impl Config {
         c.cache.line_bytes = self.usize_or("cache", "line_bytes", c.cache.line_bytes);
         c.cache.num_lines = self.usize_or("cache", "num_lines", c.cache.num_lines);
         c.cache.assoc = self.usize_or("cache", "assoc", c.cache.assoc);
-        c.cache.hit_latency = self.usize_or("cache", "hit_latency", c.cache.hit_latency as usize) as u64;
+        c.cache.hit_latency =
+            self.usize_or("cache", "hit_latency", c.cache.hit_latency as usize) as u64;
         c.dma.num_dmas = self.usize_or("dma", "num_dmas", c.dma.num_dmas);
         c.dma.buffers_per_dma = self.usize_or("dma", "buffers_per_dma", c.dma.buffers_per_dma);
         c.dma.buffer_bytes = self.usize_or("dma", "buffer_bytes", c.dma.buffer_bytes);
-        c.remapper.max_pointers = self.usize_or("remapper", "max_pointers", c.remapper.max_pointers);
-        c.remapper.buffer_bytes = self.usize_or("remapper", "buffer_bytes", c.remapper.buffer_bytes);
+        c.remapper.max_pointers =
+            self.usize_or("remapper", "max_pointers", c.remapper.max_pointers);
+        c.remapper.buffer_bytes =
+            self.usize_or("remapper", "buffer_bytes", c.remapper.buffer_bytes);
         c.dram.channels = self.usize_or("dram", "channels", c.dram.channels);
         c.dram.banks = self.usize_or("dram", "banks", c.dram.banks);
         c

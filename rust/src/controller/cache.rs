@@ -76,6 +76,17 @@ impl CacheStats {
             self.hits as f64 / self.accesses as f64
         }
     }
+
+    /// Accumulate another engine's counters — the per-shard aggregation
+    /// path ([`crate::shard`]): K workers each run their own Cache
+    /// Engine, and the aggregate view sums their statistics.
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.accesses += other.accesses;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.writebacks += other.writebacks;
+    }
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -401,6 +412,26 @@ mod tests {
         let small = run(64);
         let big = run(2048);
         assert!(big > small + 0.1, "big {big} small {small}");
+    }
+
+    #[test]
+    fn stats_merge_sums_every_field() {
+        let mut d = dram();
+        let mut a = tiny(2);
+        a.load(&mut d, 0, 64, 0); // miss
+        a.load(&mut d, 0, 64, 10); // hit
+        let mut b = tiny(2);
+        b.store(&mut d, 4096, 64, 0); // miss, dirty
+        let mut merged = a.stats().clone();
+        merged.merge(b.stats());
+        assert_eq!(merged.accesses, 3);
+        assert_eq!(merged.hits, 1);
+        assert_eq!(merged.misses, 2);
+        assert_eq!(
+            merged.hit_rate(),
+            (a.stats().hits + b.stats().hits) as f64
+                / (a.stats().accesses + b.stats().accesses) as f64
+        );
     }
 
     #[test]

@@ -61,6 +61,18 @@ pub struct DmaStats {
     pub chunks: u64,
 }
 
+impl DmaStats {
+    /// Accumulate another engine's counters (per-shard aggregation,
+    /// [`crate::shard`]).
+    pub fn merge(&mut self, other: &DmaStats) {
+        self.stream_requests += other.stream_requests;
+        self.stream_bytes += other.stream_bytes;
+        self.element_requests += other.element_requests;
+        self.element_bytes += other.element_bytes;
+        self.chunks += other.chunks;
+    }
+}
+
 /// The DMA Engine simulator.
 #[derive(Debug, Clone)]
 pub struct DmaEngine {
@@ -241,6 +253,22 @@ mod tests {
         e.stream(&mut d, 0, 8192, 0);
         e.reset();
         assert_eq!(e.stats(), &DmaStats::default());
+    }
+
+    #[test]
+    fn stats_merge_sums_every_field() {
+        let mut d = dram();
+        let mut a = DmaEngine::new(DmaConfig::default_2x4k());
+        a.stream(&mut d, 0, 10_000, 0);
+        let mut b = DmaEngine::new(DmaConfig::default_2x4k());
+        b.element(&mut d, 1 << 20, 16, 0);
+        let mut merged = a.stats().clone();
+        merged.merge(b.stats());
+        assert_eq!(merged.stream_requests, 1);
+        assert_eq!(merged.stream_bytes, 10_000);
+        assert_eq!(merged.element_requests, 1);
+        assert_eq!(merged.element_bytes, 16);
+        assert_eq!(merged.chunks, a.stats().chunks);
     }
 
     #[test]

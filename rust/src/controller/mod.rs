@@ -131,10 +131,19 @@ impl MemLayout {
 }
 
 /// Aggregated controller statistics.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct ControllerStats {
     pub requests: u64,
     pub total_bytes: u64,
+}
+
+impl ControllerStats {
+    /// Accumulate another controller's counters (per-shard aggregation,
+    /// [`crate::shard`]).
+    pub fn merge(&mut self, other: &ControllerStats) {
+        self.requests += other.requests;
+        self.total_bytes += other.total_bytes;
+    }
 }
 
 /// The memory-controller simulator top.

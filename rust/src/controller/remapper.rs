@@ -55,6 +55,19 @@ pub struct RemapperStats {
     pub pointer_bytes: u64,
 }
 
+impl RemapperStats {
+    /// Accumulate another remapper's counters (per-shard aggregation,
+    /// [`crate::shard`]).
+    pub fn merge(&mut self, other: &RemapperStats) {
+        self.elements += other.elements;
+        self.onchip_cursor_elems += other.onchip_cursor_elems;
+        self.spilled_cursor_elems += other.spilled_cursor_elems;
+        self.stream_bytes += other.stream_bytes;
+        self.store_bytes += other.store_bytes;
+        self.pointer_bytes += other.pointer_bytes;
+    }
+}
+
 /// The Tensor Remapper simulator.
 #[derive(Debug, Clone)]
 pub struct TensorRemapper {

@@ -12,10 +12,10 @@ pub mod metrics;
 
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
-
 use crate::cpd::linalg::Mat;
 use crate::cpd::MttkrpBackend;
+use crate::err;
+use crate::error::Result;
 use crate::runtime::Runtime;
 use crate::tensor::{remap, SortOrder, SparseTensor};
 
@@ -102,7 +102,7 @@ impl PjrtCoordinator {
             .rt
             .find_mttkrp(n_modes, r, seg.manifest_key())
             .ok_or_else(|| {
-                anyhow!(
+                err!(
                     "no mttkrp artifact for modes={n_modes} r={r} seg={} — \
                      add the variant to python/compile/aot.py and re-run `make artifacts`",
                     seg.manifest_key()
@@ -110,8 +110,8 @@ impl PjrtCoordinator {
             })?;
         let name = meta.name.clone();
         let (blk, s) = (
-            meta.int("blk").ok_or_else(|| anyhow!("blk missing"))?,
-            meta.int("s").ok_or_else(|| anyhow!("s missing"))?,
+            meta.int("blk").ok_or_else(|| err!("blk missing"))?,
+            meta.int("s").ok_or_else(|| err!("s missing"))?,
         );
 
         let blocks = pack(t, mode, PackConfig { blk, s });

@@ -99,6 +99,16 @@ impl DramStats {
             self.row_hits as f64 / self.bursts as f64
         }
     }
+
+    /// Accumulate another device's counters (per-shard aggregation,
+    /// [`crate::shard`]).
+    pub fn merge(&mut self, other: &DramStats) {
+        self.bursts += other.bursts;
+        self.row_hits += other.row_hits;
+        self.row_misses += other.row_misses;
+        self.row_conflicts += other.row_conflicts;
+        self.bytes += other.bytes;
+    }
 }
 
 /// Bank state: the open row, if any.

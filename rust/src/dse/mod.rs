@@ -29,6 +29,17 @@ pub enum Evaluator<'a> {
         tensor: &'a SparseTensor,
         factors: &'a [Mat],
     },
+    /// Sharded cycle-level simulation ([`crate::shard`]): every candidate
+    /// configuration is evaluated as K per-shard controller instances
+    /// running concurrently; the score is the sum over modes of the
+    /// remap pass plus the slowest shard's replay makespan.  The sweep
+    /// is prepared once ([`crate::shard::ShardedSweep::prepare`]) so
+    /// per-candidate scoring replays traces only.  This is how a
+    /// multi-controller (multi-SLR) deployment should pick its
+    /// per-instance parameters.
+    ShardedSim {
+        sweep: &'a crate::shard::ShardedSweep<'a>,
+    },
 }
 
 impl Evaluator<'_> {
@@ -56,6 +67,27 @@ impl Evaluator<'_> {
                     total = ctl.replay(&run.trace);
                 }
                 Some(total as f64)
+            }
+            Evaluator::ShardedSim { sweep } => {
+                // K concurrent controller instances must *all* fit the
+                // device: each needs a 1/K slice of the block budget
+                // (the whole-device check above only covers one
+                // instance), and each instance owns a DRAM channel
+                // group, so the device must have K channel groups and
+                // the configured bus must exist on the board.
+                let w = sweep.workers();
+                if w > dev.dram_channels || cfg.dram.channels > dev.dram_channels {
+                    return None;
+                }
+                let slice = Device {
+                    bram36: dev.bram36 / w,
+                    uram: dev.uram / w,
+                    ..*dev
+                };
+                if !fpga::estimate(cfg, &slice).fits {
+                    return None;
+                }
+                Some(sweep.makespan(cfg) as f64)
             }
         }
     }
@@ -285,6 +317,55 @@ mod tests {
     }
 
     #[test]
+    fn sharded_evaluation_ranks_like_serial_and_scores_lower() {
+        // A crippled cache must lose under the sharded evaluator too,
+        // and parallel makespans must come in under the serial sweep.
+        let t = generate(&SynthConfig {
+            dims: vec![800, 600, 400],
+            nnz: 10_000,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed: 79,
+        });
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let sweep4 = crate::shard::ShardedSweep::prepare(&t, 16, 4);
+        let sharded = Evaluator::ShardedSim { sweep: &sweep4 };
+        let good = sharded.score(&base, &dev).unwrap();
+        let mut crippled = base.clone();
+        crippled.cache.num_lines = 64;
+        crippled.cache.assoc = 1;
+        let bad = sharded.score(&crippled, &dev).unwrap();
+        assert!(good < bad, "crippled cache must lose: {good} vs {bad}");
+
+        let sweep1 = crate::shard::ShardedSweep::prepare(&t, 16, 1);
+        let serial = Evaluator::ShardedSim { sweep: &sweep1 };
+        let serial_score = serial.score(&base, &dev).unwrap();
+        assert!(
+            good < serial_score,
+            "4-worker makespan {good} must beat 1-worker {serial_score}"
+        );
+
+        // A config that fits as ONE instance but not as four concurrent
+        // instances must be rejected by the sharded evaluator.
+        let mut big = base.clone();
+        big.cache.num_lines = 1 << 14; // ~1.1 MiB cache + tags per instance
+        assert!(fpga::estimate(&big, &dev).fits, "fits as a single instance");
+        assert!(
+            sharded.score(&big, &dev).is_none(),
+            "4 instances must not fit the device"
+        );
+
+        // More worker instances than the device has DRAM channel groups
+        // is not a realizable deployment either.
+        let sweep8 = crate::shard::ShardedSweep::prepare(&t, 16, 8);
+        let oversubscribed = Evaluator::ShardedSim { sweep: &sweep8 };
+        assert!(
+            oversubscribed.score(&base, &dev).is_none(),
+            "u250 has 4 channel groups; 8 instances must be rejected"
+        );
+    }
+
+    #[test]
     fn module_order_is_respected() {
         // After exploration the best config's DMA comes from the DMA
         // sweep holding the best cache — verify the best point's cache
@@ -297,11 +378,13 @@ mod tests {
         };
         let base = ControllerConfig::default_for(t.record_bytes());
         let dev = Device::alveo_u250();
-        let mut cache_only = Grids::default();
-        cache_only.dma_num = vec![base.dma.num_dmas];
-        cache_only.dma_buffers = vec![base.dma.buffers_per_dma];
-        cache_only.dma_buffer_bytes = vec![base.dma.buffer_bytes];
-        cache_only.remap_max_pointers = vec![base.remapper.max_pointers];
+        let cache_only = Grids {
+            dma_num: vec![base.dma.num_dmas],
+            dma_buffers: vec![base.dma.buffers_per_dma],
+            dma_buffer_bytes: vec![base.dma.buffer_bytes],
+            remap_max_pointers: vec![base.remapper.max_pointers],
+            ..Grids::default()
+        };
         let ex_cache = explore(&base, &cache_only, &dev, &eval);
         let ex_full = explore(&base, &Grids::default(), &dev, &eval);
         assert_eq!(

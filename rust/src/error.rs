@@ -1,0 +1,184 @@
+//! Minimal error substrate for the fallible subsystems ([`crate::runtime`],
+//! [`crate::coordinator`]).  The offline build has no `anyhow`; this
+//! vendors the small slice of its API the crate uses: a string-message
+//! [`Error`] with an optional source, a [`Result`] alias, a [`Context`]
+//! extension trait for `Result`/`Option`, and the [`err!`](crate::err),
+//! [`bail!`](crate::bail), [`ensure!`](crate::ensure) macros.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A message-carrying error, optionally wrapping a source error.
+/// `Display` renders the full context chain (`outer: inner: ...`) so a
+/// bare `eprintln!("{e}")` tells the whole story.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// Crate-wide result alias (defaults the error type to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// An error from a plain message.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error {
+            msg: msg.to_string(),
+            source: None,
+        }
+    }
+
+    /// An error wrapping `source` with a context message.
+    pub fn with_source(
+        msg: impl fmt::Display,
+        source: impl StdError + Send + Sync + 'static,
+    ) -> Self {
+        Error {
+            msg: msg.to_string(),
+            source: Some(Box::new(source)),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if let Some(outer) = &self.source {
+            write!(f, ": {outer}")?;
+            let mut src = outer.source();
+            while let Some(inner) = src {
+                write!(f, ": {inner}")?;
+                src = inner.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl StdError for Error {
+    // Display already renders the chain; exposing the source again here
+    // would make chain-walking printers duplicate it.
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        None
+    }
+}
+
+/// `.context()` / `.with_context()` on `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::with_source(ctx, e))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::with_source(f(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string: `err!("bad {thing}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_renders_context_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        let s = e.to_string();
+        assert!(s.starts_with("reading manifest"), "{s}");
+        assert!(s.contains("gone"), "{s}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky");
+    }
+
+    #[test]
+    fn converts_into_boxed_std_error() {
+        fn run() -> std::result::Result<(), Box<dyn StdError>> {
+            Err(err!("boom"))?;
+            Ok(())
+        }
+        assert_eq!(run().unwrap_err().to_string(), "boom");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let ok: Result<u32, std::io::Error> = Ok(5);
+        let v = ok
+            .with_context(|| {
+                called = true;
+                "never"
+            })
+            .unwrap();
+        assert_eq!(v, 5);
+        assert!(!called, "context closure must not run on Ok");
+    }
+}

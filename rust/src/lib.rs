@@ -29,10 +29,14 @@
 //! * [`dse`] — module-by-module exhaustive design-space search. (S11)
 //! * [`runtime`] — PJRT artifact loading and execution. (S12)
 //! * [`coordinator`] — block batching leader + worker pool. (S13)
+//! * [`shard`] — output-disjoint nnz sharding + the multi-threaded
+//!   [`shard::ParallelBackend`] (one worker and one simulated memory
+//!   controller per shard). (S17)
 //! * [`cli`], [`config`] — hand-rolled CLI and config (offline build:
 //!   no clap/serde available). (S14)
 //! * [`testkit`] — PRNG + mini property-test harness (no proptest). (S15)
 //! * [`bench`] — timing harness + table emitters (no criterion). (S16)
+//! * [`error`] — vendored minimal error type (no anyhow). (S18)
 
 pub mod bench;
 pub mod cli;
@@ -42,9 +46,11 @@ pub mod coordinator;
 pub mod cpd;
 pub mod dram;
 pub mod dse;
+pub mod error;
 pub mod fpga;
 pub mod mttkrp;
 pub mod pms;
 pub mod runtime;
+pub mod shard;
 pub mod tensor;
 pub mod testkit;

@@ -2,9 +2,12 @@
 //! Controller stack.
 //!
 //! Subcommands:
-//! * `decompose` — run CP-ALS on a tensor (native / sim / pjrt backend).
+//! * `decompose` — run CP-ALS on a tensor (native / sim / parallel /
+//!   pjrt backend; `--workers N` sets the parallel shard count).
 //! * `simulate`  — one full MTTKRP sweep through the memory-controller
 //!   cycle simulator, with per-module statistics.
+//! * `shard`     — report the output-disjoint shard plan (per-shard
+//!   coordinate ranges, nnz shares, load imbalance) for `--workers K`.
 //! * `pms`       — analytic PMS estimate for a (tensor, config) pair.
 //! * `explore`   — module-by-module design-space search (paper §5.3).
 //! * `stats`     — Table-2-style characteristics of a tensor.
@@ -26,11 +29,13 @@ use ptmc::dse::{explore, Evaluator, Grids};
 use ptmc::fpga::Device;
 use ptmc::pms::{self, TensorProfile};
 use ptmc::runtime::Runtime;
+use ptmc::shard::{ParallelBackend, ShardPlan, ShardedSweep};
 use ptmc::tensor::{stats, SparseTensor};
 
 const OPTS: &[&str] = &[
     "input", "synth", "dims", "nnz", "seed", "alpha", // workload
     "config", "rank", "iters", "tol", "backend", "device", "evaluator", "seg",
+    "workers", "mode", // sharded execution
     "cache-lines", "cache-line-bytes", "cache-assoc", "dma-buffers", "dma-num",
     "dma-buffer-bytes", "max-pointers", "channels", "artifacts",
 ];
@@ -51,16 +56,18 @@ fn usage() {
     println!(
         "ptmc — programmable tensor memory controller (paper reproduction)\n\
          \n\
-         USAGE: ptmc <decompose|simulate|pms|explore|stats> [options]\n\
+         USAGE: ptmc <decompose|simulate|shard|pms|explore|stats> [options]\n\
          \n\
          workload:  --input x.tns | --synth zipf|uniform|clustered\n\
          \x20          --dims 2000x1500x1000 --nnz 50000 --seed 42 --alpha 1.2\n\
-         run:       --rank 16 --iters 10 --tol 1e-5 --backend native|sim|pjrt\n\
+         run:       --rank 16 --iters 10 --tol 1e-5\n\
+         \x20          --backend native|sim|parallel|pjrt --workers 4\n\
          \x20          --seg onehot|segids|refseg --artifacts DIR\n\
+         shard:     --workers 4 [--mode M]  (plan report; default: all modes)\n\
          controller:--config ptmc.toml --cache-lines N --cache-line-bytes B\n\
          \x20          --cache-assoc A --dma-num N --dma-buffers K\n\
          \x20          --dma-buffer-bytes B --max-pointers P --channels C\n\
-         dse:       --device u250|u280|vu9p --evaluator pms|sim\n"
+         dse:       --device u250|u280|vu9p --evaluator pms|sim|sharded\n"
     );
 }
 
@@ -73,6 +80,7 @@ fn run(raw: &[String]) -> Result<(), Box<dyn std::error::Error>> {
     match args.subcommand.as_deref().unwrap() {
         "decompose" => cmd_decompose(&args),
         "simulate" => cmd_simulate(&args),
+        "shard" => cmd_shard(&args),
         "pms" => cmd_pms(&args),
         "explore" => cmd_explore(&args),
         "stats" => cmd_stats(&args),
@@ -83,7 +91,10 @@ fn run(raw: &[String]) -> Result<(), Box<dyn std::error::Error>> {
 }
 
 /// Controller config from `--config` file plus CLI overrides.
-fn controller_config(args: &Args, elem_bytes: usize) -> Result<ControllerConfig, Box<dyn std::error::Error>> {
+fn controller_config(
+    args: &Args,
+    elem_bytes: usize,
+) -> Result<ControllerConfig, Box<dyn std::error::Error>> {
     let mut cfg = match args.get("config") {
         Some(path) => Config::load(Path::new(path))?.controller(elem_bytes),
         None => ControllerConfig::default_for(elem_bytes),
@@ -143,6 +154,23 @@ fn cmd_decompose(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             let mut b = SimBackend::new(MemoryController::new(cfg), layout);
             cp_als(&mut t, &als, &mut b)
         }
+        "parallel" => {
+            let workers = args.usize_or("workers", 4)?.max(1);
+            let cfg = controller_config(args, t.record_bytes())?;
+            let mut b = ParallelBackend::with_controller(workers, cfg);
+            let model = cp_als(&mut t, &als, &mut b);
+            let s = b.stats();
+            println!(
+                "parallel: {} workers, {} controller instances, cache {:.1}% hits, \
+                 {} dram bursts, imbalance {:.2}",
+                b.workers(),
+                s.controllers,
+                100.0 * s.cache.hit_rate(),
+                s.dram.bursts,
+                b.last_plan().map_or(1.0, |p| p.imbalance()),
+            );
+            model
+        }
         "pjrt" => {
             let rt = Runtime::open(Path::new(args.str_or("artifacts", "artifacts")))?;
             let seg = match args.str_or("seg", "onehot") {
@@ -158,7 +186,7 @@ fn cmd_decompose(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         }
         other => {
             return Err(Box::new(CliError(format!(
-                "unknown --backend {other:?} (native|sim|pjrt)"
+                "unknown --backend {other:?} (native|sim|parallel|pjrt)"
             ))))
         }
     };
@@ -213,6 +241,41 @@ fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
+fn cmd_shard(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let t = workload::tensor_from_args(args)?;
+    let workers = args.usize_or("workers", 4)?.max(1);
+    let modes: Vec<usize> = match args.get("mode") {
+        Some(_) => vec![args.usize_or("mode", 0)?],
+        None => (0..t.n_modes()).collect(),
+    };
+    println!(
+        "shard plan: dims {:?}, nnz {}, {workers} workers",
+        t.dims(),
+        t.nnz()
+    );
+    for mode in modes {
+        if mode >= t.n_modes() {
+            return Err(Box::new(CliError(format!(
+                "--mode {mode} out of range for a {}-mode tensor",
+                t.n_modes()
+            ))));
+        }
+        let plan = ShardPlan::balance(&t, mode, workers);
+        println!("mode {mode}: imbalance {:.3}", plan.imbalance());
+        for (sid, s) in plan.shards.iter().enumerate() {
+            println!(
+                "  shard {sid}: coords [{}, {}) ({} rows), {} nnz ({:.1}%)",
+                s.coord_lo,
+                s.coord_hi,
+                s.rows(),
+                s.nnz,
+                100.0 * s.nnz as f64 / t.nnz().max(1) as f64
+            );
+        }
+    }
+    Ok(())
+}
+
 fn cmd_pms(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let t = workload::tensor_from_args(args)?;
     let rank = args.usize_or("rank", 16)?;
@@ -253,6 +316,7 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         .iter()
         .map(|&d| Mat::randn(d, rank, 3))
         .collect();
+    let sweep;
     let eval = match args.str_or("evaluator", "pms") {
         "pms" => Evaluator::Pms {
             profile: &profile,
@@ -262,7 +326,17 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             tensor: &t,
             factors: &factors,
         },
-        other => return Err(Box::new(CliError(format!("unknown --evaluator {other:?}")))),
+        "sharded" => {
+            let workers = args.usize_or("workers", 4)?.max(1);
+            println!("sharded evaluator: {workers} concurrent controller instances");
+            sweep = ShardedSweep::prepare(&t, rank, workers);
+            Evaluator::ShardedSim { sweep: &sweep }
+        }
+        other => {
+            return Err(Box::new(CliError(format!(
+                "unknown --evaluator {other:?} (pms|sim|sharded)"
+            ))))
+        }
     };
     let ex = explore(&base, &Grids::default(), &dev, &eval);
     println!(

@@ -14,11 +14,7 @@ use crate::controller::{Access, MemLayout};
 use crate::cpd::linalg::Mat;
 use crate::tensor::{SortOrder, SparseTensor};
 
-use super::{counts::OpCounts, EngineRun, Tracing};
-
-/// Coalesce consecutive tensor-element loads into stream chunks of at
-/// most this many records (a DMA buffer's worth at 16 B/record).
-const STREAM_CHUNK_ELEMS: usize = 1024;
+use super::{counts::OpCounts, EngineRun, Tracing, STREAM_CHUNK_ELEMS};
 
 /// Run Approach 1 for `mode`.  Panics if the tensor is not sorted by
 /// `mode` (use [`crate::mttkrp::remap_exec`] to remap first).

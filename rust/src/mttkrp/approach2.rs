@@ -12,9 +12,7 @@ use crate::controller::{Access, MemLayout};
 use crate::cpd::linalg::Mat;
 use crate::tensor::{SortOrder, SparseTensor};
 
-use super::{counts::OpCounts, EngineRun, Tracing};
-
-const STREAM_CHUNK_ELEMS: usize = 1024;
+use super::{counts::OpCounts, EngineRun, Tracing, STREAM_CHUNK_ELEMS};
 
 /// Run Approach 2 computing the MTTKRP of `out_mode`, with the tensor
 /// sorted by `in_mode` (any mode other than `out_mode`).

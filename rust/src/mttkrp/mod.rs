@@ -25,6 +25,12 @@ pub use counts::OpCounts;
 use crate::controller::Access;
 use crate::cpd::linalg::Mat;
 
+/// Coalesce at most this many consecutive tensor records into one
+/// streaming load (a DMA buffer's worth at 16 B/record).  Shared by the
+/// sequential engines and the sharded executor ([`crate::shard`]) so
+/// their DMA chunking models stay comparable.
+pub const STREAM_CHUNK_ELEMS: usize = 1024;
+
 /// Result of one MTTKRP engine run: the updated (un-normalized) output
 /// factor matrix, the memory trace (empty when tracing is disabled), and
 /// the operation counts for the Table-1 comparison.

@@ -15,12 +15,32 @@ pub fn mttkrp(t: &SparseTensor, factors: &[Mat], mode: usize) -> Mat {
         assert_eq!(f.cols(), r, "factor {m} rank");
     }
     let mut out = Mat::zeros(t.dims()[mode], r);
+    accumulate_into(t, factors, mode, 0..t.nnz(), 0, &mut out);
+    out
+}
+
+/// The Alg.-2 inner kernel: accumulate the contributions of the nnz
+/// indices yielded by `zs` into `out`, where nnz `z` lands in row
+/// `mode_col[z] - row_base`.  Shared with the sharded workers
+/// ([`crate::shard`]) — a single copy of the loop is what makes the
+/// sharded result *bit-identical* to this oracle, not merely close.
+pub fn accumulate_into(
+    t: &SparseTensor,
+    factors: &[Mat],
+    mode: usize,
+    zs: impl Iterator<Item = usize>,
+    row_base: usize,
+    out: &mut Mat,
+) {
+    let n = t.n_modes();
+    let r = factors[0].cols();
     let mut prod = vec![0.0f32; r];
     let vals = t.values();
-    for z in 0..t.nnz() {
+    let col = t.mode_col(mode);
+    for z in zs {
         // prod = val * hadamard of the other modes' rows (Alg. 2 line 6).
         prod.iter_mut().for_each(|p| *p = vals[z]);
-        for m in 0..t.n_modes() {
+        for m in 0..n {
             if m == mode {
                 continue;
             }
@@ -29,12 +49,11 @@ pub fn mttkrp(t: &SparseTensor, factors: &[Mat], mode: usize) -> Mat {
                 *p *= x;
             }
         }
-        let dst = out.row_mut(t.mode_col(mode)[z] as usize);
+        let dst = out.row_mut(col[z] as usize - row_base);
         for (d, &p) in dst.iter_mut().zip(&prod) {
             *d += p;
         }
     }
-    out
 }
 
 #[cfg(test)]

@@ -115,8 +115,9 @@ impl TensorProfile {
         let n = profiles[0].n_modes;
         assert!(profiles.iter().all(|p| p.n_modes == n));
         let k = profiles.len() as f64;
-        let avg_usize =
-            |f: &dyn Fn(&TensorProfile) -> usize| (profiles.iter().map(f).sum::<usize>() as f64 / k) as usize;
+        let avg_usize = |f: &dyn Fn(&TensorProfile) -> usize| {
+            (profiles.iter().map(f).sum::<usize>() as f64 / k) as usize
+        };
         TensorProfile {
             n_modes: n,
             nnz: avg_usize(&|p| p.nnz),

@@ -6,11 +6,19 @@
 //! 0.5.1 rejects; the text parser reassigns ids (see aot.py and
 //! /opt/xla-example/README.md).  Python is never invoked here: the
 //! artifacts directory is the only contract between the layers.
+//!
+//! Execution requires the `pjrt` cargo feature (which in turn needs the
+//! xla_extension bindings baked into the offline image).  Without it the
+//! runtime still opens artifact directories and serves manifest metadata
+//! — so manifest tooling and the coordinator's packing paths stay
+//! testable on a bare toolchain — but every dispatch returns a clean
+//! "built without pjrt" error.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Context, Result};
+use crate::{bail, err};
 
 /// Parsed `manifest.txt` entry describing one artifact.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -46,18 +54,18 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
         for kv in line.split_whitespace() {
             let (k, v) = kv
                 .split_once('=')
-                .ok_or_else(|| anyhow!("manifest line {}: bad field {kv:?}", lineno + 1))?;
+                .ok_or_else(|| err!("manifest line {}: bad field {kv:?}", lineno + 1))?;
             fields.insert(k.to_string(), v.to_string());
         }
         let name = fields
             .remove("name")
-            .ok_or_else(|| anyhow!("manifest line {}: missing name", lineno + 1))?;
+            .ok_or_else(|| err!("manifest line {}: missing name", lineno + 1))?;
         let file = fields
             .remove("file")
-            .ok_or_else(|| anyhow!("manifest line {}: missing file", lineno + 1))?;
+            .ok_or_else(|| err!("manifest line {}: missing file", lineno + 1))?;
         let kind = fields
             .remove("kind")
-            .ok_or_else(|| anyhow!("manifest line {}: missing kind", lineno + 1))?;
+            .ok_or_else(|| err!("manifest line {}: missing kind", lineno + 1))?;
         out.push(ArtifactMeta {
             name,
             file,
@@ -69,11 +77,13 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
 }
 
 /// A compiled, ready-to-execute artifact.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with the given input literals; returns the tuple-unwrapped
     /// first output literal (aot.py lowers with `return_tuple=True`).
@@ -81,20 +91,23 @@ impl Executable {
         let result = self
             .exe
             .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.meta.name))?;
+            .map_err(|e| err!("executing {}: {e}", self.meta.name))?;
         let lit = result[0][0]
             .to_literal_sync()
-            .with_context(|| format!("fetching result of {}", self.meta.name))?;
-        Ok(lit.to_tuple1()?)
+            .map_err(|e| err!("fetching result of {}: {e}", self.meta.name))?;
+        lit.to_tuple1()
+            .map_err(|e| err!("unwrapping result of {}: {e}", self.meta.name))
     }
 }
 
 /// The PJRT runtime: one CPU client plus compiled executables, loaded
 /// lazily from an artifacts directory and cached by name.
 pub struct Runtime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Vec<ArtifactMeta>,
+    #[cfg(feature = "pjrt")]
+    client: xla::PjRtClient,
+    #[cfg(feature = "pjrt")]
     cache: HashMap<String, Executable>,
 }
 
@@ -113,11 +126,12 @@ impl Runtime {
         if manifest.is_empty() {
             bail!("empty manifest at {}", manifest_path.display());
         }
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
         Ok(Runtime {
-            client,
             dir: dir.to_path_buf(),
             manifest,
+            #[cfg(feature = "pjrt")]
+            client: xla::PjRtClient::cpu().map_err(|e| err!("PJRT cpu client: {e}"))?,
+            #[cfg(feature = "pjrt")]
             cache: HashMap::new(),
         })
     }
@@ -125,6 +139,11 @@ impl Runtime {
     /// Artifact directory default used by the CLI/examples: `./artifacts`.
     pub fn open_default() -> Result<Self> {
         Self::open(Path::new("artifacts"))
+    }
+
+    /// The artifacts directory this runtime was opened on.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 
     pub fn manifest(&self) -> &[ArtifactMeta] {
@@ -159,7 +178,10 @@ impl Runtime {
             .iter()
             .find(|m| m.kind == "rowsolve" && m.int("r") == Some(r))
     }
+}
 
+#[cfg(feature = "pjrt")]
+impl Runtime {
     /// Get (compiling on first use) the executable named `name`.
     pub fn executable(&mut self, name: &str) -> Result<&Executable> {
         if !self.cache.contains_key(name) {
@@ -167,18 +189,18 @@ impl Runtime {
                 .manifest
                 .iter()
                 .find(|m| m.name == name)
-                .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?
+                .ok_or_else(|| err!("artifact {name:?} not in manifest"))?
                 .clone();
             let path = self.dir.join(&meta.file);
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
             )
-            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            .map_err(|e| err!("parsing {}: {e}", path.display()))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+                .map_err(|e| err!("compiling {name}: {e}"))?;
             self.cache.insert(name.to_string(), Executable { meta, exe });
         }
         Ok(&self.cache[name])
@@ -204,17 +226,25 @@ impl Runtime {
             exe.meta.int("s").context("s")?,
             exe.meta.int("r").context("r")?,
         );
-        anyhow::ensure!(seg_onehot.len() == s * blk, "seg_onehot shape");
-        anyhow::ensure!(vals.len() == blk, "vals shape");
+        crate::ensure!(seg_onehot.len() == s * blk, "seg_onehot shape");
+        crate::ensure!(vals.len() == blk, "vals shape");
         let mut inputs = Vec::with_capacity(rows.len() + 2);
-        inputs.push(xla::Literal::vec1(seg_onehot).reshape(&[s as i64, blk as i64])?);
+        inputs.push(
+            xla::Literal::vec1(seg_onehot)
+                .reshape(&[s as i64, blk as i64])
+                .map_err(|e| err!("reshaping seg_onehot: {e}"))?,
+        );
         inputs.push(xla::Literal::vec1(vals));
         for row in rows {
-            anyhow::ensure!(row.len() == blk * r, "row block shape");
-            inputs.push(xla::Literal::vec1(row).reshape(&[blk as i64, r as i64])?);
+            crate::ensure!(row.len() == blk * r, "row block shape");
+            inputs.push(
+                xla::Literal::vec1(row)
+                    .reshape(&[blk as i64, r as i64])
+                    .map_err(|e| err!("reshaping row block: {e}"))?,
+            );
         }
         let out = self.cache[name].run(&inputs)?;
-        Ok(out.to_vec::<f32>()?)
+        out.to_vec::<f32>().map_err(|e| err!("reading output: {e}"))
     }
 
     /// Execute one MTTKRP block through a `segids`/`refseg` artifact
@@ -231,17 +261,21 @@ impl Runtime {
             exe.meta.int("blk").context("blk")?,
             exe.meta.int("r").context("r")?,
         );
-        anyhow::ensure!(seg_ids.len() == blk, "seg_ids shape");
-        anyhow::ensure!(vals.len() == blk, "vals shape");
+        crate::ensure!(seg_ids.len() == blk, "seg_ids shape");
+        crate::ensure!(vals.len() == blk, "vals shape");
         let mut inputs = Vec::with_capacity(rows.len() + 2);
         inputs.push(xla::Literal::vec1(seg_ids));
         inputs.push(xla::Literal::vec1(vals));
         for row in rows {
-            anyhow::ensure!(row.len() == blk * r, "row block shape");
-            inputs.push(xla::Literal::vec1(row).reshape(&[blk as i64, r as i64])?);
+            crate::ensure!(row.len() == blk * r, "row block shape");
+            inputs.push(
+                xla::Literal::vec1(row)
+                    .reshape(&[blk as i64, r as i64])
+                    .map_err(|e| err!("reshaping row block: {e}"))?,
+            );
         }
         let out = self.cache[name].run(&inputs)?;
-        Ok(out.to_vec::<f32>()?)
+        out.to_vec::<f32>().map_err(|e| err!("reading output: {e}"))
     }
 
     /// Execute one ALS row-solve tile: `m_tile [tile, r] @ hinv [r, r]`.
@@ -251,14 +285,58 @@ impl Runtime {
             exe.meta.int("tile").context("tile")?,
             exe.meta.int("r").context("r")?,
         );
-        anyhow::ensure!(m_tile.len() == tile * r, "m_tile shape");
-        anyhow::ensure!(hinv.len() == r * r, "hinv shape");
+        crate::ensure!(m_tile.len() == tile * r, "m_tile shape");
+        crate::ensure!(hinv.len() == r * r, "hinv shape");
         let inputs = [
-            xla::Literal::vec1(m_tile).reshape(&[tile as i64, r as i64])?,
-            xla::Literal::vec1(hinv).reshape(&[r as i64, r as i64])?,
+            xla::Literal::vec1(m_tile)
+                .reshape(&[tile as i64, r as i64])
+                .map_err(|e| err!("reshaping m_tile: {e}"))?,
+            xla::Literal::vec1(hinv)
+                .reshape(&[r as i64, r as i64])
+                .map_err(|e| err!("reshaping hinv: {e}"))?,
         ];
         let out = self.cache[name].run(&inputs)?;
-        Ok(out.to_vec::<f32>()?)
+        out.to_vec::<f32>().map_err(|e| err!("reading output: {e}"))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    fn no_pjrt(&self) -> crate::error::Error {
+        err!(
+            "ptmc was built without the `pjrt` feature; add the xla \
+             path dependency (see the [features] notes in rust/Cargo.toml) \
+             and rebuild with `--features pjrt` to execute artifacts \
+             from {}",
+            self.dir.display()
+        )
+    }
+
+    /// Stub: execution needs the `pjrt` feature.
+    pub fn mttkrp_block_onehot(
+        &mut self,
+        _name: &str,
+        _seg_onehot: &[f32],
+        _vals: &[f32],
+        _rows: &[&[f32]],
+    ) -> Result<Vec<f32>> {
+        Err(self.no_pjrt())
+    }
+
+    /// Stub: execution needs the `pjrt` feature.
+    pub fn mttkrp_block_segids(
+        &mut self,
+        _name: &str,
+        _seg_ids: &[i32],
+        _vals: &[f32],
+        _rows: &[&[f32]],
+    ) -> Result<Vec<f32>> {
+        Err(self.no_pjrt())
+    }
+
+    /// Stub: execution needs the `pjrt` feature.
+    pub fn rowsolve(&mut self, _name: &str, _m_tile: &[f32], _hinv: &[f32]) -> Result<Vec<f32>> {
+        Err(self.no_pjrt())
     }
 }
 
@@ -294,5 +372,26 @@ mod tests {
             Err(e) => e,
         };
         assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn dispatch_without_pjrt_is_a_clean_error() {
+        // Build a manifest-only runtime in a temp dir and check the
+        // execution stubs refuse with a pointer at the feature flag.
+        let dir = std::env::temp_dir().join("ptmc_runtime_stub_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "name=a file=a.hlo.txt kind=mttkrp modes=3 seg=segids blk=4 s=2 r=2\n",
+        )
+        .unwrap();
+        let mut rt = Runtime::open(&dir).unwrap();
+        assert_eq!(rt.manifest().len(), 1);
+        assert!(rt.find_mttkrp(3, 2, "segids").is_some());
+        let e = rt
+            .mttkrp_block_segids("a", &[0; 4], &[0.0; 4], &[])
+            .unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 }

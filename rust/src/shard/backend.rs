@@ -1,0 +1,262 @@
+//! [`ParallelBackend`]: the sharded executor packaged as a
+//! [`MttkrpBackend`], so [`crate::cpd::cp_als`] runs unchanged on K
+//! worker threads.
+
+use std::collections::HashMap;
+
+use super::exec::mttkrp_planned;
+use super::{partition_indices, AggregateStats, ShardPlan};
+use crate::controller::{ControllerConfig, MemLayout, MemoryController};
+use crate::coordinator::Metrics;
+use crate::cpd::linalg::Mat;
+use crate::cpd::MttkrpBackend;
+use crate::tensor::{SortOrder, SparseTensor};
+
+/// Multi-threaded MTTKRP backend: every call shards the output mode
+/// across `workers` threads.  Optionally simulates one
+/// [`crate::controller::MemoryController`] per worker; simulated time
+/// accumulates as the sum over modes of the slowest worker's makespan
+/// (modes are sequential in CP-ALS, workers within a mode are parallel).
+///
+/// Numerically the backend is bit-identical to
+/// [`crate::cpd::NativeBackend`] for any worker count (each output row
+/// is owned by one shard and accumulated in oracle order).
+pub struct ParallelBackend {
+    workers: usize,
+    cfg: Option<ControllerConfig>,
+    layout: Option<MemLayout>,
+    stats: AggregateStats,
+    metrics: Metrics,
+    cycles: u64,
+    last_plan: Option<ShardPlan>,
+    /// Per-mode (plan, partition) cache: the backend never re-orders
+    /// the tensor, so across ALS iterations the two O(nnz) planning
+    /// passes only run once per mode.  Invalidated (together with the
+    /// layout and sim memo) when the tensor's fingerprint
+    /// (dims, nnz, sort order) changes.
+    plan_cache: HashMap<usize, (ShardPlan, Vec<Vec<usize>>)>,
+    /// Per-mode memoized simulation accounting: traces and replays are
+    /// iteration-invariant (addresses depend on indices and rank, not
+    /// factor values), so the full per-shard simulation runs once per
+    /// mode and later iterations merge the memoized numbers.
+    sim_cache: HashMap<usize, SimMemo>,
+    /// (dims, nnz, sort order, rank) the caches were computed for.
+    fingerprint: Option<(Vec<usize>, usize, SortOrder, usize)>,
+}
+
+/// Memoized per-mode simulation result: parallel makespan plus remap
+/// cycles, the merged controller statistics (workers + remap pass), and
+/// the remap count to add to the metrics per call.
+struct SimMemo {
+    cycles: u64,
+    stats: AggregateStats,
+    remaps: u64,
+}
+
+impl ParallelBackend {
+    /// Pure-compute parallel backend (no memory-controller simulation).
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "need at least one worker");
+        ParallelBackend {
+            workers,
+            cfg: None,
+            layout: None,
+            stats: AggregateStats::default(),
+            metrics: Metrics::default(),
+            cycles: 0,
+            last_plan: None,
+            plan_cache: HashMap::new(),
+            sim_cache: HashMap::new(),
+            fingerprint: None,
+        }
+    }
+
+    /// Parallel backend that also drives one controller instance per
+    /// worker with `cfg` (the external-memory layout is planned from the
+    /// first tensor it sees).
+    pub fn with_controller(workers: usize, cfg: ControllerConfig) -> Self {
+        let mut b = Self::new(workers);
+        b.cfg = Some(cfg);
+        b
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Merged per-shard controller statistics across all calls so far.
+    pub fn stats(&self) -> &AggregateStats {
+        &self.stats
+    }
+
+    /// Merged wall-clock phase metrics across all calls so far.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// The shard plan of the most recent MTTKRP call.
+    pub fn last_plan(&self) -> Option<&ShardPlan> {
+        self.last_plan.as_ref()
+    }
+}
+
+impl MttkrpBackend for ParallelBackend {
+    fn mttkrp(&mut self, t: &mut SparseTensor, factors: &[Mat], mode: usize) -> Mat {
+        // A different tensor (shape, size, storage order) or rank
+        // invalidates everything derived from the previous one: plans,
+        // partitions, the external-memory layout, and the memoized
+        // simulations.
+        let fp = (t.dims().to_vec(), t.nnz(), t.order(), factors[0].cols());
+        if self.fingerprint.as_ref() != Some(&fp) {
+            self.plan_cache.clear();
+            self.sim_cache.clear();
+            self.layout = None;
+            self.fingerprint = Some(fp);
+        }
+        if self.cfg.is_some() && self.layout.is_none() {
+            self.layout = Some(MemLayout::plan(
+                t.dims(),
+                t.nnz(),
+                t.record_bytes(),
+                factors[0].cols(),
+            ));
+        }
+        let workers = self.workers;
+        let (plan, parts) = self.plan_cache.entry(mode).or_insert_with(|| {
+            let plan = ShardPlan::balance(t, mode, workers);
+            let parts = partition_indices(t, &plan);
+            (plan, parts)
+        });
+
+        // Simulate only on this mode's first call; later iterations
+        // reuse the memoized accounting (see `sim_cache`).
+        let sim_needed = self.cfg.is_some() && !self.sim_cache.contains_key(&mode);
+        let sim = if sim_needed {
+            match (&self.cfg, &self.layout) {
+                (Some(cfg), Some(layout)) => Some((cfg, layout)),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        let run = mttkrp_planned(t, factors, plan, parts, sim);
+        self.metrics.merge(&run.metrics);
+        self.last_plan = Some(run.plan);
+
+        if sim_needed {
+            let mut memo = SimMemo {
+                cycles: run.makespan,
+                stats: run.stats,
+                remaps: 0,
+            };
+            // The shard traces model the mode-sorted tensor image;
+            // charge the sequential Tensor-Remapper pass that produces
+            // it (same accounting as SimBackend and
+            // ShardedSweep::makespan), unless the tensor already
+            // arrives in direction.
+            if t.order() != SortOrder::ByMode(mode) {
+                if let (Some(cfg), Some(layout)) = (self.cfg.as_ref(), self.layout.as_ref()) {
+                    let mut rctl = MemoryController::new(cfg.clone());
+                    rctl.remap_pass(t.mode_col(mode), t.dims()[mode], layout, 0, 1);
+                    memo.cycles += rctl.now();
+                    memo.stats.absorb(&rctl);
+                    memo.remaps = 1;
+                }
+            }
+            self.sim_cache.insert(mode, memo);
+        }
+        if let Some(memo) = self.sim_cache.get(&mode) {
+            self.cycles += memo.cycles;
+            self.stats.merge(&memo.stats);
+            self.metrics.remaps += memo.remaps;
+        }
+        run.output
+    }
+
+    fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpd::{cp_als, AlsConfig, NativeBackend};
+    use crate::tensor::synth::{generate, Profile, SynthConfig};
+
+    fn tensor(seed: u64) -> SparseTensor {
+        generate(&SynthConfig {
+            dims: vec![120, 90, 70],
+            nnz: 3_000,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed,
+        })
+    }
+
+    #[test]
+    fn cp_als_identical_to_native_for_any_worker_count() {
+        let cfg = AlsConfig {
+            rank: 4,
+            max_iters: 4,
+            tol: 0.0,
+            ..Default::default()
+        };
+        let mut t0 = tensor(21);
+        let native = cp_als(&mut t0, &cfg, &mut NativeBackend);
+        for k in [1, 2, 4] {
+            let mut t = tensor(21);
+            let mut b = ParallelBackend::new(k);
+            let par = cp_als(&mut t, &cfg, &mut b);
+            assert_eq!(
+                par.fit_history, native.fit_history,
+                "k={k} fit curve diverged"
+            );
+            for (fp, fa) in par.factors.iter().zip(&native.factors) {
+                assert_eq!(fp.data(), fa.data(), "k={k} factors diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn controller_mode_accumulates_cycles_and_stats() {
+        use crate::controller::ControllerConfig;
+        let mut t = tensor(22);
+        let cfg = AlsConfig {
+            rank: 8,
+            max_iters: 2,
+            tol: 0.0,
+            ..Default::default()
+        };
+        let ctl_cfg = ControllerConfig::default_for(t.record_bytes());
+        let mut b = ParallelBackend::with_controller(4, ctl_cfg);
+        let model = cp_als(&mut t, &cfg, &mut b);
+        assert!(model.cycles > 0, "simulated clock must advance");
+        // Per mode per iteration: 4 worker controllers + 1 remap-pass
+        // controller, over 2 iterations x 3 modes.
+        assert_eq!(b.stats().controllers, 2 * 3 * 5);
+        assert!(b.stats().cache.accesses > 0);
+        assert!(b.stats().dma.stream_bytes > 0);
+        assert_eq!(b.stats().remapper.elements, 2 * 3 * 3_000);
+        assert_eq!(b.metrics().remaps, 2 * 3);
+        assert_eq!(b.metrics().nnz, 2 * 3 * 3_000);
+        assert_eq!(b.last_plan().unwrap().k(), 4);
+    }
+
+    #[test]
+    fn pure_compute_mode_reports_zero_cycles() {
+        let mut t = tensor(23);
+        let factors: Vec<Mat> = t
+            .dims()
+            .iter()
+            .map(|&d| Mat::randn(d, 4, 5))
+            .collect();
+        let mut b = ParallelBackend::new(2);
+        let _ = b.mttkrp(&mut t, &factors, 0);
+        assert_eq!(b.cycles(), 0);
+        assert_eq!(b.name(), "parallel");
+    }
+}

@@ -1,0 +1,360 @@
+//! Sharded multi-threaded spMTTKRP execution (S17).
+//!
+//! The paper's controller exists to keep many parallel compute units fed
+//! ("dumb, fast compute" behind a smart memory subsystem); until now the
+//! reproduction executed every engine on a single thread.  This module
+//! supplies the missing parallel substrate:
+//!
+//! 1. [`ShardPlan`] partitions the *output-mode coordinate axis* into K
+//!    contiguous, disjoint ranges, load-balanced over the per-coordinate
+//!    nnz histogram (the same fiber-length distribution
+//!    [`crate::tensor::stats`] measures).  Output disjointness is the
+//!    whole trick: every output row is owned by exactly one shard, so
+//!    workers never contend and no cross-shard reduction is needed.
+//! 2. [`exec::mttkrp_sharded`] runs one `std::thread` worker per shard.
+//!    Each worker computes its shard's partial MTTKRP *and* drives its
+//!    own [`MemoryController`] over the shard's access trace — modeling
+//!    K controller instances running concurrently, each owning its own
+//!    DRAM channel group (the paper's multi-SLR layout; a configured
+//!    multi-channel bus is split across instances, and the DSE bounds
+//!    K by the device's channel count).  The simulated time of the
+//!    mode is the slowest worker's makespan.
+//! 3. [`AggregateStats`] merges the per-shard engine statistics
+//!    ([`CacheStats::merge`], [`DmaStats::merge`], ...) into one
+//!    aggregate view, and [`backend::ParallelBackend`] packages the whole
+//!    thing as a [`crate::cpd::MttkrpBackend`] so `cp_als` runs unchanged.
+
+pub mod backend;
+pub mod exec;
+
+pub use backend::ParallelBackend;
+pub use exec::{
+    mttkrp_planned, mttkrp_sharded, shard_trace, sweep_makespan, ShardedRun, ShardedSweep,
+};
+
+use crate::controller::{CacheStats, ControllerStats, DmaStats, MemoryController, RemapperStats};
+use crate::dram::DramStats;
+use crate::tensor::{Coord, SparseTensor};
+
+/// One shard: a contiguous output-mode coordinate range and the number
+/// of non-zeros whose output coordinate falls inside it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Owned coordinate range `[coord_lo, coord_hi)` of the output mode.
+    pub coord_lo: Coord,
+    pub coord_hi: Coord,
+    /// Non-zeros this shard processes.
+    pub nnz: usize,
+}
+
+impl ShardSpec {
+    /// Number of output coordinates (rows) the shard owns.
+    pub fn rows(&self) -> usize {
+        (self.coord_hi - self.coord_lo) as usize
+    }
+}
+
+/// An output-disjoint exact cover of a tensor's non-zeros for one mode:
+/// K contiguous coordinate ranges that tile `[0, I_mode)`.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// The output mode the plan shards.
+    pub mode: usize,
+    /// The K shards, in coordinate order; ranges are contiguous,
+    /// disjoint, and cover the whole axis.
+    pub shards: Vec<ShardSpec>,
+}
+
+impl ShardPlan {
+    /// Build a K-shard plan for `mode`, balancing nnz counts from the
+    /// tensor's coordinate column (one counting pass, no sort needed).
+    pub fn balance(t: &SparseTensor, mode: usize, k: usize) -> ShardPlan {
+        let mut counts = vec![0usize; t.dims()[mode]];
+        for &c in t.mode_col(mode) {
+            counts[c as usize] += 1;
+        }
+        Self::from_counts(mode, &counts, k)
+    }
+
+    /// Greedy prefix partition of a fiber-length histogram: each shard
+    /// takes coordinates until it holds its share of the *remaining*
+    /// nnz (`ceil(remaining / shards_left)`), re-targeting after every
+    /// cut so an overweight shard shrinks the ones after it.  A single
+    /// ultra-dense fiber can exceed the share — a coordinate is never
+    /// split across shards, which is what keeps outputs disjoint.
+    pub fn from_counts(mode: usize, counts: &[usize], k: usize) -> ShardPlan {
+        assert!(k >= 1, "need at least one shard");
+        let n = counts.len();
+        let total: usize = counts.iter().sum();
+        let mut shards = Vec::with_capacity(k);
+        let mut lo = 0usize;
+        let mut remaining = total;
+        for s in 0..k {
+            let shards_left = k - s;
+            let (hi, nnz) = if shards_left == 1 {
+                (n, remaining)
+            } else {
+                // Leave at least one coordinate for each later shard
+                // while coordinates remain.
+                let max_hi = n.saturating_sub(shards_left - 1).max(lo);
+                let target = remaining.div_ceil(shards_left);
+                let mut hi = lo;
+                let mut nnz = 0usize;
+                while hi < max_hi && nnz < target {
+                    nnz += counts[hi];
+                    hi += 1;
+                }
+                (hi, nnz)
+            };
+            shards.push(ShardSpec {
+                coord_lo: lo as Coord,
+                coord_hi: hi as Coord,
+                nnz,
+            });
+            remaining -= nnz;
+            lo = hi;
+        }
+        debug_assert_eq!(lo, n, "shards must cover the coordinate axis");
+        debug_assert_eq!(remaining, 0, "shards must cover all nnz");
+        ShardPlan { mode, shards }
+    }
+
+    /// Number of shards.
+    pub fn k(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total non-zeros across shards.
+    pub fn total_nnz(&self) -> usize {
+        self.shards.iter().map(|s| s.nnz).sum()
+    }
+
+    /// Load imbalance: heaviest shard over the ideal `total/k` share
+    /// (1.0 = perfectly balanced; K = everything on one shard).
+    pub fn imbalance(&self) -> f64 {
+        let total = self.total_nnz();
+        if total == 0 {
+            return 1.0;
+        }
+        let max = self.shards.iter().map(|s| s.nnz).max().unwrap_or(0);
+        max as f64 / (total as f64 / self.k() as f64)
+    }
+
+    /// Shard owning output coordinate `c`.
+    pub fn shard_of(&self, c: Coord) -> usize {
+        self.shards
+            .iter()
+            .position(|s| s.coord_lo <= c && c < s.coord_hi)
+            .expect("coordinate outside the plan's axis")
+    }
+}
+
+/// Per-shard nnz storage indices, in storage order — so each worker's
+/// per-row accumulation order matches the sequential oracle exactly
+/// (bit-identical floating-point results).
+pub fn partition_indices(t: &SparseTensor, plan: &ShardPlan) -> Vec<Vec<usize>> {
+    let mode_len = t.dims()[plan.mode];
+    let mut owner = vec![0u32; mode_len];
+    for (sid, s) in plan.shards.iter().enumerate() {
+        for c in s.coord_lo..s.coord_hi {
+            owner[c as usize] = sid as u32;
+        }
+    }
+    let mut out: Vec<Vec<usize>> = plan
+        .shards
+        .iter()
+        .map(|s| Vec::with_capacity(s.nnz))
+        .collect();
+    for (z, &c) in t.mode_col(plan.mode).iter().enumerate() {
+        out[owner[c as usize] as usize].push(z);
+    }
+    out
+}
+
+/// Merged statistics of K per-shard memory controllers: every engine's
+/// counters summed across workers.  Rates derived from the sums (e.g.
+/// [`CacheStats::hit_rate`]) are the nnz-weighted aggregate rates.
+#[derive(Debug, Clone, Default)]
+pub struct AggregateStats {
+    pub cache: CacheStats,
+    pub dma: DmaStats,
+    pub dram: DramStats,
+    pub remapper: RemapperStats,
+    pub controller: ControllerStats,
+    /// Controller instances absorbed (per mode: one per worker, plus
+    /// one for the remap pass when the backend simulates it).
+    pub controllers: u64,
+}
+
+impl AggregateStats {
+    /// Fold one worker's controller into the aggregate.
+    pub fn absorb(&mut self, ctl: &MemoryController) {
+        self.cache.merge(ctl.cache_stats());
+        self.dma.merge(ctl.dma_stats());
+        self.dram.merge(ctl.dram_stats());
+        self.remapper.merge(ctl.remapper_stats());
+        self.controller.merge(ctl.stats());
+        self.controllers += 1;
+    }
+
+    /// Fold another aggregate (e.g. the next mode's) into this one.
+    pub fn merge(&mut self, other: &AggregateStats) {
+        self.cache.merge(&other.cache);
+        self.dma.merge(&other.dma);
+        self.dram.merge(&other.dram);
+        self.remapper.merge(&other.remapper);
+        self.controller.merge(&other.controller);
+        self.controllers += other.controllers;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth::{generate, Profile, SynthConfig};
+    use crate::testkit::forall;
+
+    fn tensor(seed: u64, nnz: usize) -> SparseTensor {
+        generate(&SynthConfig {
+            dims: vec![300, 200, 150],
+            nnz,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed,
+        })
+    }
+
+    #[test]
+    fn plan_tiles_the_coordinate_axis() {
+        let t = tensor(1, 5_000);
+        for mode in 0..3 {
+            for k in [1, 2, 4, 7] {
+                let plan = ShardPlan::balance(&t, mode, k);
+                assert_eq!(plan.k(), k);
+                let mut expect_lo = 0;
+                for s in &plan.shards {
+                    assert_eq!(s.coord_lo, expect_lo, "ranges must be contiguous");
+                    assert!(s.coord_lo <= s.coord_hi);
+                    expect_lo = s.coord_hi;
+                }
+                assert_eq!(expect_lo as usize, t.dims()[mode]);
+                assert_eq!(plan.total_nnz(), t.nnz());
+            }
+        }
+    }
+
+    #[test]
+    fn partition_is_a_disjoint_exact_cover() {
+        forall("shard_partition_cover", 24, |rng| {
+            let t = tensor(rng.next_u64(), rng.range(1, 3_000));
+            let mode = rng.range(0, 3);
+            let k = rng.range(1, 9);
+            let plan = ShardPlan::balance(&t, mode, k);
+            let parts = partition_indices(&t, &plan);
+            assert_eq!(parts.len(), k);
+            // Every nnz appears exactly once, and in its owning range.
+            let mut seen = vec![false; t.nnz()];
+            for (sid, zs) in parts.iter().enumerate() {
+                assert_eq!(zs.len(), plan.shards[sid].nnz);
+                for &z in zs {
+                    assert!(!seen[z], "nnz {z} assigned to two shards");
+                    seen[z] = true;
+                    let c = t.mode_col(mode)[z];
+                    assert!(
+                        plan.shards[sid].coord_lo <= c && c < plan.shards[sid].coord_hi,
+                        "nnz {z} (coord {c}) outside shard {sid}"
+                    );
+                }
+                // Storage order is preserved within the shard.
+                assert!(zs.windows(2).all(|w| w[0] < w[1]));
+            }
+            assert!(seen.iter().all(|&s| s), "some nnz unassigned");
+        });
+    }
+
+    #[test]
+    fn balance_is_reasonable_on_uniform_tensors() {
+        let t = generate(&SynthConfig {
+            dims: vec![400, 300, 200],
+            nnz: 20_000,
+            profile: Profile::Uniform,
+            seed: 3,
+        });
+        for k in [2, 4, 8] {
+            let plan = ShardPlan::balance(&t, 0, k);
+            assert!(
+                plan.imbalance() < 1.25,
+                "k={k} imbalance {}",
+                plan.imbalance()
+            );
+        }
+    }
+
+    #[test]
+    fn dense_fiber_is_never_split() {
+        // Coordinate 5 holds 90% of nnz: it must land in exactly one
+        // shard (output disjointness), making that shard heavy.
+        let mut counts = vec![10usize; 20];
+        counts[5] = 2_000;
+        let plan = ShardPlan::from_counts(0, &counts, 4);
+        let owner = plan.shard_of(5);
+        assert!(plan.shards[owner].nnz >= 2_000);
+        assert_eq!(plan.total_nnz(), 2_000 + 19 * 10);
+        assert!(plan.imbalance() > 2.0, "hot fiber must show as imbalance");
+    }
+
+    #[test]
+    fn more_shards_than_coordinates_degrades_gracefully() {
+        let counts = vec![7usize; 3];
+        let plan = ShardPlan::from_counts(1, &counts, 8);
+        assert_eq!(plan.k(), 8);
+        assert_eq!(plan.total_nnz(), 21);
+        let nonempty = plan.shards.iter().filter(|s| s.rows() > 0).count();
+        assert!(nonempty <= 3);
+        // Cover still holds.
+        assert_eq!(plan.shards.last().unwrap().coord_hi, 3);
+    }
+
+    #[test]
+    fn shard_of_matches_ranges() {
+        let t = tensor(9, 2_000);
+        let plan = ShardPlan::balance(&t, 1, 5);
+        for (sid, s) in plan.shards.iter().enumerate() {
+            if s.rows() > 0 {
+                assert_eq!(plan.shard_of(s.coord_lo), sid);
+                assert_eq!(plan.shard_of(s.coord_hi - 1), sid);
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_merge_sums_counters() {
+        use crate::controller::{Access, ControllerConfig};
+        let mk = |n_req: u64| {
+            let mut ctl = MemoryController::new(ControllerConfig::default_for(16));
+            for i in 0..n_req {
+                ctl.request(Access::Cached {
+                    addr: i * 64,
+                    bytes: 64,
+                });
+            }
+            ctl
+        };
+        let (a, b) = (mk(10), mk(25));
+        let mut agg = AggregateStats::default();
+        agg.absorb(&a);
+        agg.absorb(&b);
+        assert_eq!(agg.controllers, 2);
+        assert_eq!(agg.controller.requests, 35);
+        assert_eq!(
+            agg.cache.accesses,
+            a.cache_stats().accesses + b.cache_stats().accesses
+        );
+        assert_eq!(agg.dram.bursts, a.dram_stats().bursts + b.dram_stats().bursts);
+
+        let mut c = AggregateStats::default();
+        c.merge(&agg);
+        c.merge(&agg);
+        assert_eq!(c.controller.requests, 70);
+        assert_eq!(c.controllers, 4);
+    }
+}

@@ -95,7 +95,7 @@ impl Rng {
             // alpha == 1: inverse CDF of 1/x on [1, n+1).
             let u = self.f64();
             let x = ((n as f64 + 1.0).ln() * u).exp();
-            return (x as u64).min(n) .saturating_sub(1);
+            return (x as u64).min(n).saturating_sub(1);
         }
         let u = self.f64();
         let one_m = 1.0 - alpha;

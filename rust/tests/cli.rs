@@ -22,9 +22,10 @@ const SMALL: &[&str] = &["--synth", "zipf", "--dims", "200x150x100", "--nnz", "5
 fn help_lists_subcommands() {
     let (ok, text) = run(&["--help"]);
     assert!(ok);
-    for sub in ["decompose", "simulate", "pms", "explore", "stats"] {
+    for sub in ["decompose", "simulate", "shard", "pms", "explore", "stats"] {
         assert!(text.contains(sub), "help missing {sub}: {text}");
     }
+    assert!(text.contains("--workers"), "help missing --workers: {text}");
 }
 
 #[test]
@@ -68,6 +69,49 @@ fn decompose_sim_reports_cycles() {
     .concat());
     assert!(ok, "{text}");
     assert!(text.contains("simulated memory cycles:"), "{text}");
+}
+
+#[test]
+fn shard_reports_plan_for_one_mode() {
+    let (ok, text) = run(&[&["shard"], SMALL, &["--workers", "4", "--mode", "0"]].concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("4 workers"), "{text}");
+    assert!(text.contains("imbalance"), "{text}");
+    assert_eq!(text.matches("coords [").count(), 4, "{text}");
+}
+
+#[test]
+fn shard_defaults_to_all_modes() {
+    let (ok, text) = run(&[&["shard"], SMALL, &["--workers", "2"]].concat());
+    assert!(ok, "{text}");
+    for mode in 0..3 {
+        assert!(text.contains(&format!("mode {mode}:")), "{text}");
+    }
+    assert_eq!(text.matches("coords [").count(), 6, "{text}");
+}
+
+#[test]
+fn shard_rejects_out_of_range_mode() {
+    let (ok, text) = run(&[&["shard"], SMALL, &["--mode", "7"]].concat());
+    assert!(!ok);
+    assert!(text.contains("out of range"), "{text}");
+}
+
+#[test]
+fn decompose_parallel_reports_workers_and_cycles() {
+    let (ok, text) = run(&[
+        &["decompose"],
+        SMALL,
+        &[
+            "--rank", "4", "--iters", "2", "--backend", "parallel", "--workers", "4",
+            "--tol", "0",
+        ],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("parallel: 4 workers"), "{text}");
+    assert!(text.contains("simulated memory cycles:"), "{text}");
+    assert!(text.contains("final fit:"), "{text}");
 }
 
 #[test]

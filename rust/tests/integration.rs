@@ -9,6 +9,7 @@ use ptmc::dse::{explore, Evaluator, Grids};
 use ptmc::fpga::Device;
 use ptmc::mttkrp::{approach1, oracle, remap_exec, Tracing};
 use ptmc::pms::{self, TensorProfile};
+use ptmc::shard::{self, ParallelBackend};
 use ptmc::tensor::synth::{generate, low_rank, Profile, SynthConfig};
 use ptmc::tensor::{frostt, remap, SparseTensor};
 use ptmc::testkit::assert_allclose;
@@ -195,6 +196,67 @@ fn mixed_access_stream_is_fifo_ordered() {
         assert!(t >= last, "FIFO completion must be monotone");
         last = t;
     }
+}
+
+#[test]
+fn parallel_backend_cp_als_matches_native_for_k_1_2_4() {
+    let cfg = AlsConfig {
+        rank: 6,
+        max_iters: 3,
+        tol: 0.0,
+        ..Default::default()
+    };
+    let mut tn = tensor(8, 5_000);
+    let native = cp_als(&mut tn, &cfg, &mut NativeBackend);
+    for k in [1usize, 2, 4] {
+        let mut tp = tensor(8, 5_000);
+        let mut b = ParallelBackend::new(k);
+        let par = cp_als(&mut tp, &cfg, &mut b);
+        assert!(
+            (par.final_fit() - native.final_fit()).abs() < 1e-6,
+            "k={k}: fit {} vs native {}",
+            par.final_fit(),
+            native.final_fit()
+        );
+        for (m, (fp, fa)) in par.factors.iter().zip(&native.factors).enumerate() {
+            assert_allclose(fp.data(), fa.data(), 0.0, 1e-6);
+            assert_eq!(fp.rows(), tn.dims()[m]);
+        }
+    }
+}
+
+#[test]
+fn parallel_backend_with_controllers_full_stack() {
+    // cp_als on the sharded backend with per-worker controller
+    // simulation: the clock advances, the aggregate statistics are
+    // populated, and sharded MTTKRP agrees with the oracle directly.
+    let mut t = tensor(9, 6_000);
+    let factors: Vec<Mat> = t
+        .dims()
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| Mat::randn(d, 8, m as u64 + 90))
+        .collect();
+    for mode in 0..3 {
+        let want = oracle::mttkrp(&t, &factors, mode);
+        let run = shard::mttkrp_sharded(&t, &factors, mode, 4, None);
+        assert_allclose(run.output.data(), want.data(), 0.0, 1e-6);
+    }
+
+    let cfg = AlsConfig {
+        rank: 8,
+        max_iters: 2,
+        tol: 0.0,
+        ..Default::default()
+    };
+    let ctl_cfg = ControllerConfig::default_for(t.record_bytes());
+    let mut b = ParallelBackend::with_controller(4, ctl_cfg);
+    let model = cp_als(&mut t, &cfg, &mut b);
+    assert!(model.cycles > 0);
+    // 4 worker controllers + 1 remap controller, per mode per iteration.
+    assert_eq!(b.stats().controllers, 2 * 3 * 5);
+    assert!(b.stats().cache.hit_rate() > 0.0);
+    assert_eq!(b.metrics().nnz, 2 * 3 * 6_000);
 }
 
 #[test]

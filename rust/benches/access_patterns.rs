@@ -3,11 +3,13 @@
 //! transfer types and confirm the paper's prescribed pairing is optimal
 //! in every row.
 
-use ptmc::bench::{fmt_cycles, Table};
+use ptmc::bench::{fmt_cycles, sized, smoke, Table};
 use ptmc::controller::{Access, ControllerConfig, MemoryController};
 use ptmc::testkit::Rng;
 
-const BYTES_PER_PATTERN: usize = 2 << 20;
+fn bytes_per_pattern() -> usize {
+    sized(2 << 20, 2 << 16)
+}
 const ROW_BYTES: usize = 64; // rank-16 factor row
 
 fn replay(trace: &[Access]) -> u64 {
@@ -19,7 +21,7 @@ fn replay(trace: &[Access]) -> u64 {
 fn trace(pattern: &str, transfer: &str, rng: &mut Rng) -> Vec<Access> {
     let addrs: Vec<(u64, usize)> = match pattern {
         // 1. tensor elements while remapping/computing: sequential bulk.
-        "tensor stream" => (0..BYTES_PER_PATTERN / 4096)
+        "tensor stream" => (0..bytes_per_pattern() / 4096)
             .map(|i| ((i * 4096) as u64, 4096))
             .collect(),
         // 2. remapped element stores — measured as a *combined* workload
@@ -29,14 +31,14 @@ fn trace(pattern: &str, transfer: &str, rng: &mut Rng) -> Vec<Access> {
         // the controller with the cached factor-row stream.
         "remap stores" => unreachable!("handled by remap_store_trace"),
         // 3. input factor rows: random with zipf temporal locality.
-        "factor rows" => (0..BYTES_PER_PATTERN / ROW_BYTES)
+        "factor rows" => (0..bytes_per_pattern() / ROW_BYTES)
             .map(|_| {
                 let row = rng.zipf(1 << 20, 1.2);
                 ((8u64 << 30) + row * ROW_BYTES as u64, ROW_BYTES)
             })
             .collect(),
         // 4. output rows: streaming store of finished rows.
-        "output rows" => (0..BYTES_PER_PATTERN / ROW_BYTES)
+        "output rows" => (0..bytes_per_pattern() / ROW_BYTES)
             .map(|i| ((12u64 << 30) + (i * ROW_BYTES) as u64, ROW_BYTES))
             .collect(),
         _ => unreachable!(),
@@ -61,7 +63,7 @@ fn trace(pattern: &str, transfer: &str, rng: &mut Rng) -> Vec<Access> {
 fn remap_store_trace(transfer: &str) -> Vec<Access> {
     let parts = 8192u64;
     let mut rng = Rng::new(42);
-    let n = BYTES_PER_PATTERN / 64;
+    let n = bytes_per_pattern() / 64;
     let mut out = Vec::with_capacity(2 * n);
     for i in 0..n {
         // One remapped 16-byte record store...
@@ -124,11 +126,13 @@ fn main() {
             pick.into(),
             optimal.to_string(),
         ]);
-        assert!(
-            optimal,
-            "{pattern}: paper picks {pick} ({}) but {best} is faster ({})",
-            cycles[pick], cycles[*best]
-        );
+        if !smoke() {
+            assert!(
+                optimal,
+                "{pattern}: paper picks {pick} ({}) but {best} is faster ({})",
+                cycles[pick], cycles[*best]
+            );
+        }
     }
 
     table.emit(

@@ -5,9 +5,10 @@
 //! time falls until the hot factor-row working set fits, then plateaus
 //! while BRAM cost keeps growing — the point the DSE must find.
 
-use ptmc::bench::{fmt_cycles, Table};
+use ptmc::bench::{fmt_cycles, fmt_speedup, sized, smoke, Table};
 use ptmc::controller::{CacheConfig, ControllerConfig, MemLayout, MemoryController};
 use ptmc::cpd::linalg::Mat;
+use ptmc::engine::{EngineKind, PreparedTrace};
 use ptmc::fpga::{self, Device};
 use ptmc::mttkrp::{approach1, Tracing};
 use ptmc::pms::{self, TensorProfile};
@@ -16,8 +17,8 @@ use ptmc::tensor::synth::{generate, Profile, SynthConfig};
 fn main() {
     let rank = 16usize;
     let t_base = generate(&SynthConfig {
-        dims: vec![8_000, 5_000, 3_000],
-        nnz: 120_000,
+        dims: vec![sized(8_000, 800), sized(5_000, 500), sized(3_000, 300)],
+        nnz: sized(120_000, 8_000),
         profile: Profile::Zipf { alpha_milli: 1250 },
         seed: 13,
     });
@@ -76,7 +77,48 @@ fn main() {
         "E5a — cache capacity sweep (mode-0 compute trace)",
         Some(std::path::Path::new("bench_results/dse_cache_capacity.csv")),
     );
-    assert!(knee_seen, "expected a capacity knee/plateau");
+    if !smoke() {
+        assert!(knee_seen, "expected a capacity knee/plateau");
+    }
+
+    // --- Engine comparison on the same sweep's replay loop ---
+    // Same trace, same configs, lockstep vs event core; scores must be
+    // bit-identical, only wall-clock differs.
+    let prepared = PreparedTrace::new(run.trace.clone());
+    let sweep_cfgs: Vec<ControllerConfig> = [256usize, 1024, 4096, 16384]
+        .iter()
+        .map(|&num_lines| {
+            let mut cfg = ControllerConfig::default_for(t.record_bytes());
+            cfg.cache = CacheConfig {
+                line_bytes: 64,
+                num_lines,
+                assoc: 4,
+                hit_latency: 2,
+            };
+            cfg
+        })
+        .collect();
+    let score_all = |engine: EngineKind| -> (Vec<u64>, f64) {
+        let t0 = std::time::Instant::now();
+        let scores = sweep_cfgs
+            .iter()
+            .map(|cfg| {
+                let mut ctl = MemoryController::new(cfg.clone());
+                engine.replay(&mut ctl, &prepared)
+            })
+            .collect();
+        (scores, t0.elapsed().as_secs_f64() * 1e3)
+    };
+    let _ = score_all(EngineKind::Lockstep); // warm-up
+    let (lockstep_scores, lockstep_ms) = score_all(EngineKind::Lockstep);
+    let (event_scores, event_ms) = score_all(EngineKind::Event);
+    assert_eq!(lockstep_scores, event_scores, "engines must agree");
+    println!(
+        "engine replay comparison: lockstep {lockstep_ms:.0} ms, event {event_ms:.0} ms \
+         ({}), trace compression {:.1}x",
+        fmt_speedup(lockstep_ms / event_ms),
+        prepared.compressed().compression_ratio()
+    );
 
     // --- Sweep 2: line width at fixed capacity ---
     let mut line = Table::new(&["line_bytes", "num_lines", "sim cycles", "hit rate"]);
@@ -128,10 +170,12 @@ fn main() {
         Some(std::path::Path::new("bench_results/dse_cache_assoc.csv")),
     );
     // Direct-mapped must be the worst (conflict misses on zipf rows).
-    let dm = results[0].1;
-    assert!(
-        results[1..].iter().all(|&(_, c)| c <= dm),
-        "higher associativity should not lose to direct-mapped"
-    );
+    if !smoke() {
+        let dm = results[0].1;
+        assert!(
+            results[1..].iter().all(|&(_, c)| c <= dm),
+            "higher associativity should not lose to direct-mapped"
+        );
+    }
     println!("cache DSE shapes OK: capacity knee, line-width optimum, assoc monotone");
 }

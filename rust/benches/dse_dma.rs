@@ -3,14 +3,14 @@
 //! remap-phase traffic (the DMA-heaviest phase), plus the on-chip buffer
 //! cost of each point.
 
-use ptmc::bench::{fmt_cycles, Table};
+use ptmc::bench::{fmt_cycles, sized, smoke, Table};
 use ptmc::controller::{ControllerConfig, DmaConfig, MemLayout, MemoryController};
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
 
 fn main() {
     let t = generate(&SynthConfig {
-        dims: vec![8_000, 5_000, 3_000],
-        nnz: 150_000,
+        dims: vec![sized(8_000, 800), sized(5_000, 500), sized(3_000, 300)],
+        nnz: sized(150_000, 10_000),
         profile: Profile::Zipf { alpha_milli: 1250 },
         seed: 17,
     });
@@ -82,16 +82,18 @@ fn main() {
         buffer_bytes: 512,
         setup_cycles: 8,
     });
-    assert!(
-        worst_cycles > best.0,
-        "1x1x512B should not be optimal ({worst_cycles} vs {})",
-        best.0
-    );
-    assert!(
-        best.1.num_dmas * best.1.buffers_per_dma >= 2 || best.1.buffer_bytes >= 8192,
-        "best must amortize setup: {:?}",
-        best.1
-    );
+    if !smoke() {
+        assert!(
+            worst_cycles > best.0,
+            "1x1x512B should not be optimal ({worst_cycles} vs {})",
+            best.0
+        );
+        assert!(
+            best.1.num_dmas * best.1.buffers_per_dma >= 2 || best.1.buffer_bytes >= 8192,
+            "best must amortize setup: {:?}",
+            best.1
+        );
+    }
     // Find the minimum on-chip cost achieving within 0.5% of best.
     let mut cheapest: Option<(usize, DmaConfig)> = None;
     for &num_dmas in &[1usize, 2, 4] {
@@ -115,10 +117,12 @@ fn main() {
         }
     }
     let (onchip, dma) = cheapest.unwrap();
-    assert!(
-        dma.buffers_per_dma >= 2,
-        "SRAM-cheapest near-best point should double-buffer: {dma:?}"
-    );
+    if !smoke() {
+        assert!(
+            dma.buffers_per_dma >= 2,
+            "SRAM-cheapest near-best point should double-buffer: {dma:?}"
+        );
+    }
     println!(
         "best: {} DMAs x {} buffers x {} B -> {} cycles ({:.2}x over worst)",
         best.1.num_dmas,

@@ -1,0 +1,155 @@
+//! E11 — simulation-engine comparison on the DSE scoring hot path: a
+//! sharded sweep ([`ptmc::shard::ShardedSweep`]) scores a grid of
+//! controller candidates under the legacy lockstep core and under the
+//! event-driven batched core, on the same prepared traces.
+//!
+//! The event core wins three ways, all structural: (1) delta-encoded
+//! compressed traces stream ~6x less trace data per replay, (2) the K
+//! per-shard replays run on concurrent host threads (independent fresh
+//! controller instances), and (3) the sequential remap pass — identical
+//! for every candidate sharing (DRAM, remapper) knobs, i.e. the whole
+//! cache/DMA grid — is memoized instead of re-simulated per candidate.
+//! Scores are asserted bit-identical; only wall-clock differs.  Target:
+//! >= 3x on the candidate-scoring loop.
+//!
+//! Emits `bench_results/dse_engines.csv` and a machine-readable
+//! `bench_results/engine_speedup.json` line for the bench trajectory.
+
+use std::time::Instant;
+
+use ptmc::bench::{fmt_cycles, fmt_speedup, sized, smoke, Table};
+use ptmc::controller::{CacheConfig, ControllerConfig, DmaConfig};
+use ptmc::engine::EngineKind;
+use ptmc::shard::ShardedSweep;
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+
+/// The candidate grid: a cache sweep plus a DMA sweep, holding the
+/// remapper fixed — exactly the per-module DSE shape (§5.3).
+fn grid(elem_bytes: usize) -> Vec<ControllerConfig> {
+    let mut grid = Vec::new();
+    for &num_lines in &[256usize, 1024, 4096, 16384] {
+        for &assoc in &[2usize, 4] {
+            let mut cfg = ControllerConfig::default_for(elem_bytes);
+            cfg.cache = CacheConfig {
+                line_bytes: 64,
+                num_lines,
+                assoc,
+                hit_latency: 2,
+            };
+            grid.push(cfg);
+        }
+    }
+    for &num_dmas in &[1usize, 2, 4] {
+        for &buffer_bytes in &[1024usize, 8192] {
+            let mut cfg = ControllerConfig::default_for(elem_bytes);
+            cfg.dma = DmaConfig {
+                num_dmas,
+                buffers_per_dma: 2,
+                buffer_bytes,
+                setup_cycles: 8,
+            };
+            grid.push(cfg);
+        }
+    }
+    grid
+}
+
+fn main() {
+    let rank = 16usize;
+    let workers = 4usize;
+    let nnz = sized(300_000, 10_000);
+    println!("generating {nnz}-nnz zipf tensor...");
+    let t = generate(&SynthConfig {
+        dims: vec![
+            sized(30_000, 3_000),
+            sized(20_000, 2_000),
+            sized(12_000, 1_200),
+        ],
+        nnz,
+        profile: Profile::Zipf { alpha_milli: 1250 },
+        seed: 2026,
+    });
+    let grid = grid(t.record_bytes());
+
+    println!(
+        "preparing {workers}-worker sweep ({} candidate configs)...",
+        grid.len()
+    );
+    let sweep = ShardedSweep::prepare(&t, rank, workers);
+
+    // Warm both paths once (allocator, page cache) outside the clock.
+    let warm_cfg = ControllerConfig::default_for(t.record_bytes());
+    let warm_lockstep = sweep.makespan_with(&warm_cfg, EngineKind::Lockstep);
+    let warm_event = sweep.makespan_with(&warm_cfg, EngineKind::Event);
+    assert_eq!(
+        warm_lockstep, warm_event,
+        "engines must be bit-identical before timing means anything"
+    );
+
+    // Fresh sweep for the timed event run so the remap memo starts
+    // cold and its warm-up is charged to the event side fairly.
+    let timed_sweep = ShardedSweep::prepare(&t, rank, workers);
+
+    let t0 = Instant::now();
+    let lockstep_scores: Vec<u64> = grid
+        .iter()
+        .map(|cfg| timed_sweep.makespan_with(cfg, EngineKind::Lockstep))
+        .collect();
+    let lockstep_wall = t0.elapsed();
+
+    let t1 = Instant::now();
+    let event_scores: Vec<u64> = grid
+        .iter()
+        .map(|cfg| timed_sweep.makespan_with(cfg, EngineKind::Event))
+        .collect();
+    let event_wall = t1.elapsed();
+
+    assert_eq!(
+        lockstep_scores, event_scores,
+        "per-candidate scores must be bit-identical"
+    );
+
+    let mut tbl = Table::new(&["engine", "configs", "wall ms", "speedup", "best cycles"]);
+    let best = *lockstep_scores.iter().min().unwrap();
+    let speedup = lockstep_wall.as_secs_f64() / event_wall.as_secs_f64();
+    tbl.row(&[
+        "lockstep (legacy)".into(),
+        grid.len().to_string(),
+        format!("{:.0}", lockstep_wall.as_secs_f64() * 1e3),
+        "1.00x".into(),
+        fmt_cycles(best),
+    ]);
+    tbl.row(&[
+        "event (batched)".into(),
+        grid.len().to_string(),
+        format!("{:.0}", event_wall.as_secs_f64() * 1e3),
+        fmt_speedup(speedup),
+        fmt_cycles(*event_scores.iter().min().unwrap()),
+    ]);
+    tbl.emit(
+        "E11 — DSE sweep scoring: lockstep vs event engine (identical scores)",
+        Some(std::path::Path::new("bench_results/dse_engines.csv")),
+    );
+
+    let json = format!(
+        "{{\"bench\":\"dse_engines\",\"nnz\":{nnz},\"workers\":{workers},\
+         \"configs\":{},\"lockstep_ms\":{:.1},\"event_ms\":{:.1},\
+         \"speedup\":{speedup:.2}}}\n",
+        grid.len(),
+        lockstep_wall.as_secs_f64() * 1e3,
+        event_wall.as_secs_f64() * 1e3,
+    );
+    let _ = std::fs::create_dir_all("bench_results");
+    if let Err(e) = std::fs::write("bench_results/engine_speedup.json", &json) {
+        eprintln!("warning: failed to write engine_speedup.json: {e}");
+    }
+    print!("{json}");
+
+    if !smoke() {
+        if speedup < 3.0 {
+            println!("WARNING: event engine below the 3x target on this host ({speedup:.2}x)");
+        } else {
+            println!("event engine >= 3x target met ({speedup:.2}x). OK");
+        }
+    }
+}

@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-use ptmc::bench::{time, Table};
+use ptmc::bench::{sized, time, Table};
 use ptmc::controller::{ControllerConfig, MemLayout, MemoryController};
 use ptmc::coordinator::{PjrtCoordinator, SegMode};
 use ptmc::cpd::{cp_als, AlsConfig, MttkrpBackend, NativeBackend, SimBackend};
@@ -17,8 +17,8 @@ use ptmc::tensor::SparseTensor;
 
 fn tensor() -> SparseTensor {
     generate(&SynthConfig {
-        dims: vec![2_000, 1_500, 1_000],
-        nnz: 50_000,
+        dims: vec![sized(2_000, 400), sized(1_500, 300), sized(1_000, 200)],
+        nnz: sized(50_000, 4_000),
         profile: Profile::Zipf { alpha_milli: 1250 },
         seed: 2022,
     })
@@ -40,7 +40,7 @@ fn main() {
 
     // Native host compute.
     let mut fit = 0.0;
-    let t_native = time(1, 3, || {
+    let t_native = time(sized(1, 0) as u32, sized(3, 1) as u32, || {
         let mut t = tensor();
         let m = cp_als(&mut t, &cfg, &mut NativeBackend);
         fit = m.final_fit();
@@ -54,7 +54,7 @@ fn main() {
     ]);
 
     // Memory-controller simulation.
-    let t_sim = time(0, 2, || {
+    let t_sim = time(0, sized(2, 1) as u32, || {
         let mut t = tensor();
         let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), cfg.rank);
         let ctl = MemoryController::new(ControllerConfig::default_for(t.record_bytes()));

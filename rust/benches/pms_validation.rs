@@ -3,10 +3,11 @@
 //! importantly for the DSE use-case, *rank agreement* (does the PMS
 //! order configurations the same way the simulator does?).
 
-use ptmc::bench::Table;
+use ptmc::bench::{sized, smoke, Table};
 use ptmc::controller::{CacheConfig, ControllerConfig};
 use ptmc::cpd::linalg::Mat;
 use ptmc::dse::Evaluator;
+use ptmc::engine::EngineKind;
 use ptmc::fpga::Device;
 use ptmc::pms::TensorProfile;
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
@@ -14,8 +15,8 @@ use ptmc::tensor::synth::{generate, Profile, SynthConfig};
 fn main() {
     let rank = 16usize;
     let t = generate(&SynthConfig {
-        dims: vec![5_000, 3_000, 2_000],
-        nnz: 80_000,
+        dims: vec![sized(5_000, 500), sized(3_000, 300), sized(2_000, 200)],
+        nnz: sized(80_000, 6_000),
         profile: Profile::Zipf { alpha_milli: 1250 },
         seed: 23,
     });
@@ -34,6 +35,7 @@ fn main() {
     let sim_eval = Evaluator::CycleSim {
         tensor: &t,
         factors: &factors,
+        engine: EngineKind::Event,
     };
 
     // Grid: cache geometry x pointer budget (the params with the largest
@@ -101,7 +103,9 @@ fn main() {
     println!("Spearman rank correlation (DSE fidelity): {spearman:.3}");
     // Targets: analytic models drift in absolute terms, but the DSE only
     // needs ordering — demand strong rank agreement and sane magnitude.
-    assert!(mean < 0.40, "mean error too large: {mean}");
-    assert!(spearman > 0.8, "PMS must rank configs like the simulator");
+    if !smoke() {
+        assert!(mean < 0.40, "mean error too large: {mean}");
+        assert!(spearman > 0.8, "PMS must rank configs like the simulator");
+    }
     println!("E7 OK");
 }

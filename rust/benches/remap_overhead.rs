@@ -2,7 +2,7 @@
 //! `2|T| / (|T| + (N-1)|T|R + I_out R) ≈ 2/(1+(N-1)R)`, under 6% for the
 //! typical N=3–5, R=16–64 — measured against the real remap engine.
 
-use ptmc::bench::Table;
+use ptmc::bench::{sized, smoke, Table};
 use ptmc::controller::{ControllerConfig, MemLayout, MemoryController};
 use ptmc::cpd::linalg::Mat;
 use ptmc::mttkrp::remap_exec;
@@ -21,7 +21,7 @@ fn main() {
         for &r in &[16usize, 32, 64] {
             let t = generate(&SynthConfig {
                 dims: dims.clone(),
-                nnz: 60_000,
+                nnz: sized(60_000, 6_000),
                 profile: Profile::Zipf { alpha_milli: 1200 },
                 seed: 7 + n_modes as u64,
             });
@@ -51,10 +51,12 @@ fn main() {
                 format!("{:.3}%", 100.0 * measured),
                 (measured < 0.06).to_string(),
             ]);
-            assert!(
-                measured < 0.06,
-                "paper claim violated: N={n_modes} R={r} overhead {measured}"
-            );
+            if !smoke() {
+                assert!(
+                    measured < 0.06,
+                    "paper claim violated: N={n_modes} R={r} overhead {measured}"
+                );
+            }
         }
     }
 

@@ -6,7 +6,7 @@
 //! replay both traces through the memory controller to show the paper's
 //! qualitative conclusion (Approach 1 wins) in *cycles*, not just counts.
 
-use ptmc::bench::{fmt_cycles, Table};
+use ptmc::bench::{fmt_cycles, sized, smoke, Table};
 use ptmc::controller::{ControllerConfig, MemLayout, MemoryController};
 use ptmc::cpd::linalg::Mat;
 use ptmc::mttkrp::counts::{table1_accesses_a1, table1_accesses_a2};
@@ -26,7 +26,7 @@ fn main() {
         for &r in &[8usize, 16, 32] {
             let t = generate(&SynthConfig {
                 dims: dims.clone(),
-                nnz: 40_000,
+                nnz: sized(40_000, 4_000),
                 profile: Profile::Zipf { alpha_milli: 1200 },
                 seed: 99,
             });
@@ -80,10 +80,14 @@ fn main() {
                 "-".into(),
             ]);
 
-            // The paper's qualitative claims, enforced:
+            // The paper's qualitative claims, enforced (the exact count
+            // identity holds at any scale; the cycle race needs the
+            // full-size workload):
             assert_eq!(a1.counts.compute_ops, a2.counts.compute_ops);
             assert!(a1.counts.total_accesses() < a2.counts.total_accesses());
-            assert!(a1_cycles < a2_cycles, "Approach 1 must win in cycles");
+            if !smoke() {
+                assert!(a1_cycles < a2_cycles, "Approach 1 must win in cycles");
+            }
         }
     }
 

@@ -11,18 +11,24 @@
 use std::path::Path;
 use std::time::Instant;
 
-use ptmc::bench::{fmt_cycles, fmt_speedup, Table};
+use ptmc::bench::{fmt_cycles, fmt_speedup, sized, smoke, Table};
 use ptmc::controller::{ControllerConfig, MemLayout};
 use ptmc::cpd::linalg::Mat;
-use ptmc::shard::{mttkrp_sharded, ShardPlan};
+use ptmc::engine::EngineKind;
+use ptmc::shard::{mttkrp_sharded, ShardPlan, ShardedSweep};
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
 
 fn main() {
     let rank = 16usize;
-    println!("generating 1.2M-nnz zipf tensor...");
+    let nnz = sized(1_200_000, 40_000);
+    println!("generating {nnz}-nnz zipf tensor...");
     let t = generate(&SynthConfig {
-        dims: vec![80_000, 50_000, 30_000],
-        nnz: 1_200_000,
+        dims: vec![
+            sized(80_000, 8_000),
+            sized(50_000, 5_000),
+            sized(30_000, 3_000),
+        ],
+        nnz,
         profile: Profile::Zipf { alpha_milli: 1200 },
         seed: 2022,
     });
@@ -45,7 +51,9 @@ fn main() {
     };
 
     // Warm up allocators / page cache once before measuring.
-    let _ = sweep(2);
+    if !smoke() {
+        let _ = sweep(2);
+    }
 
     let mut table = Table::new(&[
         "workers",
@@ -98,7 +106,49 @@ fn main() {
         wall4,
         fmt_speedup(base_wall / wall4)
     );
-    if wall4 >= base_wall {
+    if wall4 >= base_wall && !smoke() {
         println!("WARNING: no wall-clock improvement at 4 workers on this host");
     }
+
+    // --- DSE-scoring engine comparison at the same scale ---
+    // One prepared sweep, scored under both replay cores: identical
+    // makespans, different wall-clock (the event core batches replays,
+    // runs shards concurrently, and memoizes the remap pass).
+    let cfgs: Vec<ControllerConfig> = [256usize, 1024, 4096]
+        .iter()
+        .map(|&num_lines| {
+            let mut c = cfg.clone();
+            c.cache.num_lines = num_lines;
+            c
+        })
+        .collect();
+    let mut etbl = Table::new(&["engine", "configs scored", "wall ms", "speedup"]);
+    let sweep4 = ShardedSweep::prepare(&t, rank, 4);
+    let score = |engine: EngineKind| -> (Vec<u64>, f64) {
+        let t0 = Instant::now();
+        let scores = cfgs
+            .iter()
+            .map(|c| sweep4.makespan_with(c, engine))
+            .collect();
+        (scores, t0.elapsed().as_secs_f64() * 1e3)
+    };
+    let (lockstep_scores, lockstep_ms) = score(EngineKind::Lockstep);
+    let (event_scores, event_ms) = score(EngineKind::Event);
+    assert_eq!(lockstep_scores, event_scores, "engines must agree");
+    etbl.row(&[
+        "lockstep (legacy)".into(),
+        cfgs.len().to_string(),
+        format!("{lockstep_ms:.0}"),
+        "1.00x".into(),
+    ]);
+    etbl.row(&[
+        "event (batched)".into(),
+        cfgs.len().to_string(),
+        format!("{event_ms:.0}"),
+        fmt_speedup(lockstep_ms / event_ms),
+    ]);
+    etbl.emit(
+        "DSE scoring at scale — lockstep vs event engine (identical makespans)",
+        Some(Path::new("bench_out/worker_scaling_engines.csv")),
+    );
 }

@@ -4,6 +4,24 @@
 
 use std::time::{Duration, Instant};
 
+/// True when `PTMC_BENCH_SMOKE` is set: benches shrink their workloads
+/// to seconds-scale "does it still run" checks (the CI bench-smoke job)
+/// and skip statistical shape assertions that need full-size workloads.
+/// Compile bit-rot and panics still fail the run.
+pub fn smoke() -> bool {
+    std::env::var_os("PTMC_BENCH_SMOKE").is_some()
+}
+
+/// `full` normally, `small` under [`smoke`] — the one-liner benches use
+/// to scale nnz counts and iteration counts.
+pub fn sized(full: usize, small: usize) -> usize {
+    if smoke() {
+        small
+    } else {
+        full
+    }
+}
+
 /// Result of timing one benchmark case.
 #[derive(Debug, Clone, Copy)]
 pub struct Timing {

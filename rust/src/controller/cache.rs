@@ -170,13 +170,68 @@ impl CacheEngine {
         t
     }
 
+    /// Batched kernel for the event engine ([`crate::engine`]): serve a
+    /// run of same-width loads at `base + 4*word` for each delta word,
+    /// threading the clock through the run.  Bit-identical to calling
+    /// [`CacheEngine::load`] once per word — the per-line state machine
+    /// is shared ([`CacheEngine::serve_line`]); only the line/set/tag
+    /// arithmetic is hoisted out of the loop (shift/mask forms of the
+    /// same power-of-two divisions the scalar path performs).
+    pub fn load_run(
+        &mut self,
+        dram: &mut Dram,
+        base: u64,
+        words: &[u32],
+        bytes: usize,
+        now: u64,
+    ) -> u64 {
+        assert!(bytes > 0);
+        // line_bytes and num_sets are validated powers of two, so the
+        // scalar path's `/` and `%` are exactly these shifts and masks.
+        let line_shift = self.cfg.line_bytes.trailing_zeros();
+        let set_mask = (self.cfg.num_sets() as u64) - 1;
+        let set_shift = (self.cfg.num_sets() as u64).trailing_zeros();
+        let span = (bytes - 1) as u64;
+        let mut t = now;
+        for &w in words {
+            let addr = base + 4 * w as u64;
+            let first = addr >> line_shift;
+            let last = (addr + span) >> line_shift;
+            let mut line = first;
+            loop {
+                let set = (line & set_mask) as usize;
+                let tag = line >> set_shift;
+                t = self.serve_line(dram, line, set, tag, t, false);
+                if line == last {
+                    break;
+                }
+                line += 1;
+            }
+        }
+        t
+    }
+
     /// Access one line; returns completion cycle.
     fn access_line(&mut self, dram: &mut Dram, line_idx: u64, now: u64, write: bool) -> u64 {
-        self.tick += 1;
-        self.stats.accesses += 1;
         let n_sets = self.cfg.num_sets() as u64;
         let set = (line_idx % n_sets) as usize;
         let tag = line_idx / n_sets;
+        self.serve_line(dram, line_idx, set, tag, now, write)
+    }
+
+    /// The per-line state machine shared by the scalar and batched
+    /// paths: lookup, LRU update, miss fill, dirty-victim writeback.
+    fn serve_line(
+        &mut self,
+        dram: &mut Dram,
+        line_idx: u64,
+        set: usize,
+        tag: u64,
+        now: u64,
+        write: bool,
+    ) -> u64 {
+        self.tick += 1;
+        self.stats.accesses += 1;
         let base = set * self.cfg.assoc;
         let ways = &mut self.sets[base..base + self.cfg.assoc];
 
@@ -199,7 +254,7 @@ impl CacheEngine {
             self.stats.evictions += 1;
             if victim.dirty {
                 // Writeback: the victim's line goes out before the fill.
-                let victim_line = victim.tag * n_sets + set as u64;
+                let victim_line = victim.tag * self.cfg.num_sets() as u64 + set as u64;
                 t = dram.access(
                     victim_line * self.cfg.line_bytes as u64,
                     self.cfg.line_bytes,
@@ -432,6 +487,30 @@ mod tests {
             (a.stats().hits + b.stats().hits) as f64
                 / (a.stats().accesses + b.stats().accesses) as f64
         );
+    }
+
+    #[test]
+    fn load_run_matches_scalar_loads_exactly() {
+        // The batched kernel must be bit-identical to per-access
+        // load() — same stats, same completion cycles — including
+        // multi-line accesses (bytes > line_bytes).
+        for bytes in [8usize, 64, 200] {
+            let mut rng = Rng::new(17);
+            let base = 8u64 << 20;
+            let words: Vec<u32> = (0..2_000).map(|_| rng.below(1 << 16) as u32).collect();
+            let mut d1 = dram();
+            let mut c1 = tiny(2);
+            let mut t_scalar = 0u64;
+            for &w in &words {
+                t_scalar = c1.load(&mut d1, base + 4 * w as u64, bytes, t_scalar);
+            }
+            let mut d2 = dram();
+            let mut c2 = tiny(2);
+            let t_batched = c2.load_run(&mut d2, base, &words, bytes, 0);
+            assert_eq!(t_scalar, t_batched, "bytes={bytes}");
+            assert_eq!(c1.stats(), c2.stats(), "bytes={bytes}");
+            assert_eq!(d1.stats(), d2.stats(), "bytes={bytes}");
+        }
     }
 
     #[test]

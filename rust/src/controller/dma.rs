@@ -141,6 +141,30 @@ impl DmaEngine {
         done
     }
 
+    /// Batched kernel for the event engine ([`crate::engine`]): issue a
+    /// run of `count` contiguous stream requests — request `i` covers
+    /// `chunk` bytes at `base + i*chunk`, the final request covers
+    /// `tail` bytes — threading the FIFO clock through the run exactly
+    /// as the controller threads it between per-access
+    /// [`DmaEngine::stream`] calls.  Bit-identical by construction: it
+    /// delegates each request to [`DmaEngine::stream`].
+    pub fn stream_run(
+        &mut self,
+        dram: &mut Dram,
+        base: u64,
+        chunk: usize,
+        count: u32,
+        tail: usize,
+        now: u64,
+    ) -> u64 {
+        let mut t = now;
+        for i in 0..count as u64 {
+            let bytes = if i + 1 == count as u64 { tail } else { chunk };
+            t = self.stream(dram, base + i * chunk as u64, bytes, t);
+        }
+        t
+    }
+
     /// Element-wise transfer: one request of `bytes` at `addr` with full
     /// per-request setup (paper §4 transfer type 3 — no locality).
     pub fn element(&mut self, dram: &mut Dram, addr: u64, bytes: usize, now: u64) -> u64 {
@@ -244,6 +268,24 @@ mod tests {
         let t3 = e.stream(&mut d, 2 << 20, 4096, 0);
         assert!(t3 >= t1);
         assert_eq!(e.stats().stream_requests, 3);
+    }
+
+    #[test]
+    fn stream_run_matches_scalar_streams_exactly() {
+        let mut d1 = dram();
+        let mut e1 = DmaEngine::new(DmaConfig::default_2x4k());
+        let mut t_scalar = 0u64;
+        let (base, chunk, count, tail) = (1u64 << 20, 4096usize, 6u32, 1_000usize);
+        for i in 0..count as u64 {
+            let bytes = if i + 1 == count as u64 { tail } else { chunk };
+            t_scalar = e1.stream(&mut d1, base + i * chunk as u64, bytes, t_scalar);
+        }
+        let mut d2 = dram();
+        let mut e2 = DmaEngine::new(DmaConfig::default_2x4k());
+        let t_batched = e2.stream_run(&mut d2, base, chunk, count, tail, 0);
+        assert_eq!(t_scalar, t_batched);
+        assert_eq!(e1.stats(), e2.stats());
+        assert_eq!(d1.stats(), d2.stats());
     }
 
     #[test]

@@ -210,25 +210,28 @@ impl MemoryController {
         self.now = 0;
     }
 
+    /// Route one access to its serving engine starting at `now`;
+    /// returns the completion cycle.  The single §4 routing table,
+    /// shared by the lockstep path ([`Self::request`]) and the event
+    /// engine's verbatim runs ([`Self::replay_events`]) so the two
+    /// cores cannot diverge.
+    fn dispatch(&mut self, access: Access, now: u64) -> u64 {
+        match access {
+            Access::Stream { addr, bytes } => self.dma.stream(&mut self.dram, addr, bytes, now),
+            Access::Element { addr, bytes } => self.dma.element(&mut self.dram, addr, bytes, now),
+            Access::Cached { addr, bytes } => self.cache.load(&mut self.dram, addr, bytes, now),
+            Access::CachedStore { addr, bytes } => {
+                self.cache.store(&mut self.dram, addr, bytes, now)
+            }
+        }
+    }
+
     /// Process one request (FIFO: starts no earlier than the previous
     /// request's completion).  Returns the completion cycle.
     pub fn request(&mut self, access: Access) -> u64 {
         self.stats.requests += 1;
         self.stats.total_bytes += access.bytes() as u64;
-        self.now = match access {
-            Access::Stream { addr, bytes } => {
-                self.dma.stream(&mut self.dram, addr, bytes, self.now)
-            }
-            Access::Element { addr, bytes } => {
-                self.dma.element(&mut self.dram, addr, bytes, self.now)
-            }
-            Access::Cached { addr, bytes } => {
-                self.cache.load(&mut self.dram, addr, bytes, self.now)
-            }
-            Access::CachedStore { addr, bytes } => {
-                self.cache.store(&mut self.dram, addr, bytes, self.now)
-            }
-        };
+        self.now = self.dispatch(access, self.now);
         self.now
     }
 
@@ -237,6 +240,60 @@ impl MemoryController {
         for &a in trace {
             self.request(a);
         }
+        self.now
+    }
+
+    /// Event-driven batched replay of a delta-encoded trace
+    /// ([`crate::engine`]): processes the trace run by run, dispatching
+    /// each run to the matching engine's batched kernel and folding the
+    /// controller-level counters in per epoch (one bulk update instead
+    /// of two adds per request).  Bit-identical to [`Self::replay`] of
+    /// the same trace's raw form in both the returned completion cycle
+    /// and every statistics counter.
+    pub fn replay_events(&mut self, trace: &crate::engine::CompressedTrace) -> u64 {
+        use crate::engine::trace::Run;
+        self.stats.requests += trace.requests();
+        self.stats.total_bytes += trace.total_bytes();
+        let mut now = self.now;
+        for run in trace.runs() {
+            match *run {
+                Run::Stream {
+                    base,
+                    chunk,
+                    count,
+                    tail,
+                } => {
+                    now = self.dma.stream_run(
+                        &mut self.dram,
+                        base,
+                        chunk as usize,
+                        count,
+                        tail as usize,
+                        now,
+                    );
+                }
+                Run::Cached {
+                    base,
+                    bytes,
+                    off,
+                    count,
+                } => {
+                    now = self.cache.load_run(
+                        &mut self.dram,
+                        base,
+                        trace.words_at(off, count),
+                        bytes as usize,
+                        now,
+                    );
+                }
+                Run::Verbatim { off, count } => {
+                    for &a in trace.raw_at(off, count) {
+                        now = self.dispatch(a, now);
+                    }
+                }
+            }
+        }
+        self.now = now;
         self.now
     }
 

@@ -12,8 +12,10 @@ use crate::dram::Dram;
 use crate::tensor::Coord;
 
 /// Programmable Tensor Remapper parameters (paper §5.2.1: buffer size,
-/// tensor-element width, max tracked pointers).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// tensor-element width, max tracked pointers).  `Hash` so (DRAM,
+/// remapper) pairs can key the event engine's remap-pass memo
+/// ([`crate::shard::ShardedSweep`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct RemapperConfig {
     /// Stream-in DMA buffer size in bytes.
     pub buffer_bytes: usize,

@@ -17,8 +17,10 @@ pub mod address;
 
 pub use address::{AddressMap, Mapped};
 
-/// DRAM timing / geometry parameters.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// DRAM timing / geometry parameters.  `Hash` so configuration tuples
+/// can key memoization tables (the event engine's remap-pass memo,
+/// [`crate::shard::ShardedSweep`]).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct DramConfig {
     /// Independent channels (separate data buses, e.g. one per SLR DDR).
     pub channels: usize,
@@ -91,6 +93,12 @@ pub struct DramStats {
 }
 
 impl DramStats {
+    /// Row activations issued: every non-hit burst opens a row
+    /// (misses activate an idle bank, conflicts precharge + activate).
+    pub fn activations(&self) -> u64 {
+        self.row_misses + self.row_conflicts
+    }
+
     /// Row-buffer hit rate over all bursts.
     pub fn hit_rate(&self) -> f64 {
         if self.bursts == 0 {

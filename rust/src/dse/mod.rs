@@ -11,6 +11,7 @@
 
 use crate::controller::{CacheConfig, ControllerConfig, DmaConfig, MemLayout, MemoryController};
 use crate::cpd::linalg::Mat;
+use crate::engine::EngineKind;
 use crate::fpga::{self, Device};
 use crate::mttkrp::{approach1, Tracing};
 use crate::pms::{self, TensorProfile};
@@ -25,9 +26,13 @@ pub enum Evaluator<'a> {
     },
     /// Cycle-level simulation of a full Approach-1 sweep over a concrete
     /// tensor (slow but exact; used to validate the PMS ranking).
+    /// `engine` selects the replay core ([`crate::engine`]): both
+    /// produce identical scores; `Event` replays the compiled trace
+    /// through the batched kernels.
     CycleSim {
         tensor: &'a SparseTensor,
         factors: &'a [Mat],
+        engine: EngineKind,
     },
     /// Sharded cycle-level simulation ([`crate::shard`]): every candidate
     /// configuration is evaluated as K per-shard controller instances
@@ -53,7 +58,11 @@ impl Evaluator<'_> {
             Evaluator::Pms { profile, rank } => {
                 Some(pms::estimate_with_rank(profile, cfg, dev, *rank).total_cycles())
             }
-            Evaluator::CycleSim { tensor, factors } => {
+            Evaluator::CycleSim {
+                tensor,
+                factors,
+                engine,
+            } => {
                 let rank = factors[0].cols();
                 let layout =
                     MemLayout::plan(tensor.dims(), tensor.nnz(), tensor.record_bytes(), rank);
@@ -64,7 +73,7 @@ impl Evaluator<'_> {
                     ctl.remap_pass(t.mode_col(mode), t.dims()[mode], &layout, 0, 1);
                     crate::tensor::remap::remap(&mut t, mode, cfg.remapper.max_pointers);
                     let run = approach1::run(&t, factors, mode, &layout, Tracing::On);
-                    total = ctl.replay(&run.trace);
+                    total = engine.replay_raw(&mut ctl, &run.trace);
                 }
                 Some(total as f64)
             }
@@ -298,6 +307,7 @@ mod tests {
         let eval = Evaluator::CycleSim {
             tensor: &t,
             factors: &factors,
+            engine: crate::engine::EngineKind::Event,
         };
         let base = ControllerConfig::default_for(t.record_bytes());
         let dev = Device::alveo_u250();
@@ -363,6 +373,36 @@ mod tests {
             oversubscribed.score(&base, &dev).is_none(),
             "u250 has 4 channel groups; 8 instances must be rejected"
         );
+    }
+
+    #[test]
+    fn cycle_sim_engines_score_identically() {
+        // The event core is an execution strategy, not a model change:
+        // the same configuration must score to the exact same cycle
+        // count under both engines, including remap phases.
+        let t = tensor();
+        let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 2)).collect();
+        let dev = Device::alveo_u250();
+        let mut cfg = ControllerConfig::default_for(t.record_bytes());
+        cfg.cache.num_lines = 512;
+        for max_pointers in [1usize << 4, 1 << 18] {
+            cfg.remapper.max_pointers = max_pointers;
+            let lockstep = Evaluator::CycleSim {
+                tensor: &t,
+                factors: &factors,
+                engine: crate::engine::EngineKind::Lockstep,
+            }
+            .score(&cfg, &dev)
+            .unwrap();
+            let event = Evaluator::CycleSim {
+                tensor: &t,
+                factors: &factors,
+                engine: crate::engine::EngineKind::Event,
+            }
+            .score(&cfg, &dev)
+            .unwrap();
+            assert_eq!(lockstep, event, "engines diverged at {max_pointers} pointers");
+        }
     }
 
     #[test]

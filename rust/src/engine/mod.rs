@@ -1,0 +1,258 @@
+//! Simulation engines (S19): how a compiled access trace is driven
+//! through the [`MemoryController`].
+//!
+//! Two engines implement the same [`SimEngine`] trait over the same
+//! [`PreparedTrace`], so they are differentially comparable:
+//!
+//! * [`LockstepEngine`] — the legacy core: replays the raw
+//!   [`Access`](crate::controller::Access) list one request at a time
+//!   ([`MemoryController::replay`]).  Exact, simple, slow.
+//! * [`EventEngine`] — the event-driven, epoch-batched core: walks the
+//!   delta-encoded [`CompressedTrace`] run by run, dispatching each
+//!   run to a batched kernel ([`MemoryController::replay_events`])
+//!   that processes the whole run without per-access dispatch, and
+//!   folds controller-level statistics in per epoch rather than per
+//!   request.
+//!
+//! The two engines are **bit-identical** in completion cycles and in
+//! every statistics counter (cache hits/misses, DRAM bursts and row
+//! activations, DMA chunks, controller totals); the event engine is
+//! strictly an execution-strategy change, not a model change.  The
+//! differential harness in `tests/differential.rs` enforces this on a
+//! randomized corpus; pick `Event` for sweep throughput (DSE scoring,
+//! shard replays) and `Lockstep` when debugging the model or when a
+//! third-party trace is replayed once and compression would not pay
+//! for itself.
+
+pub mod trace;
+
+pub use trace::CompressedTrace;
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::controller::{Access, MemoryController};
+
+/// Which simulation core replays traces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Legacy per-access lockstep replay.
+    Lockstep,
+    /// Event-driven batched replay of the compressed trace.
+    #[default]
+    Event,
+}
+
+impl EngineKind {
+    /// The engine implementation behind this kind.
+    pub fn engine(self) -> &'static dyn SimEngine {
+        match self {
+            EngineKind::Lockstep => &LockstepEngine,
+            EngineKind::Event => &EventEngine,
+        }
+    }
+
+    /// Replay `trace` on `ctl` (continuing from `ctl.now()`) with this
+    /// kind's engine; returns the completion cycle.
+    pub fn replay(self, ctl: &mut MemoryController, trace: &PreparedTrace) -> u64 {
+        self.engine().replay(ctl, trace)
+    }
+
+    /// Replay a raw, single-use access list under this kind's engine:
+    /// lockstep replays it directly; the event engine delta-encodes it
+    /// on the fly and drives the batched kernels.  The one shared
+    /// entry point for callers that compile a fresh trace per call
+    /// (CycleSim scoring, remapped execution, shard workers) — keep
+    /// the engine dispatch here so the paths cannot diverge.
+    pub fn replay_raw(self, ctl: &mut MemoryController, trace: &[Access]) -> u64 {
+        match self {
+            EngineKind::Lockstep => ctl.replay(trace),
+            EngineKind::Event => ctl.replay_events(&CompressedTrace::compress(trace)),
+        }
+    }
+}
+
+impl FromStr for EngineKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "lockstep" => Ok(EngineKind::Lockstep),
+            "event" => Ok(EngineKind::Event),
+            other => Err(format!("unknown engine {other:?} (lockstep|event)")),
+        }
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            EngineKind::Lockstep => "lockstep",
+            EngineKind::Event => "event",
+        })
+    }
+}
+
+/// A trace compiled once and replayable by either engine: the raw
+/// access list (lockstep's input) plus its delta-encoded form (the
+/// event engine's input).  Building one costs a single linear pass;
+/// both views describe exactly the same request sequence.
+#[derive(Debug, Clone)]
+pub struct PreparedTrace {
+    raw: Vec<Access>,
+    compressed: CompressedTrace,
+}
+
+impl PreparedTrace {
+    /// Prepare a raw trace for replay under any engine.
+    pub fn new(raw: Vec<Access>) -> Self {
+        let compressed = CompressedTrace::compress(&raw);
+        PreparedTrace { raw, compressed }
+    }
+
+    /// The raw access list.
+    pub fn raw(&self) -> &[Access] {
+        &self.raw
+    }
+
+    /// The delta-encoded form.
+    pub fn compressed(&self) -> &CompressedTrace {
+        &self.compressed
+    }
+
+    /// Number of accesses.
+    pub fn len(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// True when the trace has no accesses.
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+}
+
+/// A simulation core: replays a prepared trace through a controller.
+/// Implementations MUST be bit-identical to one another in both the
+/// returned completion cycle and every statistics counter — engines
+/// differ only in how fast they get there.
+pub trait SimEngine: Sync {
+    /// Engine name for reports and CLI selection.
+    fn name(&self) -> &'static str;
+
+    /// Replay `trace` on `ctl`, continuing from `ctl.now()`; returns
+    /// the completion cycle (== `ctl.now()` afterwards).
+    fn replay(&self, ctl: &mut MemoryController, trace: &PreparedTrace) -> u64;
+}
+
+/// Legacy per-access lockstep replay core.
+pub struct LockstepEngine;
+
+impl SimEngine for LockstepEngine {
+    fn name(&self) -> &'static str {
+        "lockstep"
+    }
+
+    fn replay(&self, ctl: &mut MemoryController, trace: &PreparedTrace) -> u64 {
+        ctl.replay(trace.raw())
+    }
+}
+
+/// Event-driven batched replay core over the compressed trace.
+pub struct EventEngine;
+
+impl SimEngine for EventEngine {
+    fn name(&self) -> &'static str {
+        "event"
+    }
+
+    fn replay(&self, ctl: &mut MemoryController, trace: &PreparedTrace) -> u64 {
+        ctl.replay_events(trace.compressed())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::{Access, ControllerConfig};
+    use crate::testkit::Rng;
+
+    fn random_trace(seed: u64, n: usize) -> Vec<Access> {
+        let mut rng = Rng::new(seed);
+        let mut trace = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            match rng.below(4) {
+                0 => trace.push(Access::Stream {
+                    addr: i * 4096,
+                    bytes: 2048 + rng.below(2048) as usize,
+                }),
+                1 => trace.push(Access::Cached {
+                    addr: (8 << 20) + rng.below(1 << 14) * 64,
+                    bytes: 64,
+                }),
+                2 => trace.push(Access::Element {
+                    addr: (1 << 28) + rng.below(1 << 20) * 16,
+                    bytes: 16,
+                }),
+                _ => trace.push(Access::CachedStore {
+                    addr: (2 << 28) + rng.below(1 << 14) * 16,
+                    bytes: 16,
+                }),
+            }
+        }
+        trace
+    }
+
+    #[test]
+    fn kind_parses_and_displays() {
+        assert_eq!("lockstep".parse::<EngineKind>().unwrap(), EngineKind::Lockstep);
+        assert_eq!("event".parse::<EngineKind>().unwrap(), EngineKind::Event);
+        assert!("bogus".parse::<EngineKind>().is_err());
+        assert_eq!(EngineKind::Event.to_string(), "event");
+        assert_eq!(EngineKind::Lockstep.to_string(), "lockstep");
+        assert_eq!(EngineKind::default(), EngineKind::Event);
+        assert_eq!(EngineKind::Event.engine().name(), "event");
+        assert_eq!(EngineKind::Lockstep.engine().name(), "lockstep");
+    }
+
+    #[test]
+    fn engines_are_bit_identical_on_random_traces() {
+        for seed in [3u64, 7, 11] {
+            let prepared = PreparedTrace::new(random_trace(seed, 2_000));
+            let mut a = MemoryController::new(ControllerConfig::default_for(16));
+            let mut b = MemoryController::new(ControllerConfig::default_for(16));
+            let ta = EngineKind::Lockstep.replay(&mut a, &prepared);
+            let tb = EngineKind::Event.replay(&mut b, &prepared);
+            assert_eq!(ta, tb, "completion cycles diverged (seed {seed})");
+            assert_eq!(a.now(), b.now());
+            assert_eq!(a.stats(), b.stats());
+            assert_eq!(a.cache_stats(), b.cache_stats());
+            assert_eq!(a.dma_stats(), b.dma_stats());
+            assert_eq!(a.dram_stats(), b.dram_stats());
+        }
+    }
+
+    #[test]
+    fn event_replay_continues_from_now_like_lockstep() {
+        // Two back-to-back replays must thread the clock identically.
+        let p1 = PreparedTrace::new(random_trace(21, 500));
+        let p2 = PreparedTrace::new(random_trace(22, 500));
+        let mut a = MemoryController::new(ControllerConfig::default_for(16));
+        let mut b = MemoryController::new(ControllerConfig::default_for(16));
+        EngineKind::Lockstep.replay(&mut a, &p1);
+        EngineKind::Lockstep.replay(&mut a, &p2);
+        EngineKind::Event.replay(&mut b, &p1);
+        EngineKind::Event.replay(&mut b, &p2);
+        assert_eq!(a.now(), b.now());
+        assert_eq!(a.dram_stats(), b.dram_stats());
+    }
+
+    #[test]
+    fn prepared_trace_views_agree() {
+        let raw = random_trace(5, 300);
+        let p = PreparedTrace::new(raw.clone());
+        assert_eq!(p.len(), 300);
+        assert!(!p.is_empty());
+        assert_eq!(p.raw(), &raw[..]);
+        assert_eq!(p.compressed().expand(), raw);
+    }
+}

@@ -1,0 +1,467 @@
+//! Delta-encoded compressed access traces — the shared trace
+//! representation the event engine replays ([`crate::engine`], S19).
+//!
+//! A raw [`Access`] list spends 24 bytes per request and forces the
+//! replay loop through an enum dispatch per access.  Real spMTTKRP
+//! traces are extremely regular, though: tensor records stream in
+//! fixed-size contiguous chunks, and factor-row loads are millions of
+//! same-width cached reads whose addresses differ only in the row
+//! index.  [`CompressedTrace`] exploits exactly that structure:
+//!
+//! * **Stream runs** — a maximal sequence of contiguous `Stream`
+//!   requests collapses to `(base, chunk, count, tail)`: request `i`
+//!   covers `chunk` bytes at `base + i*chunk`, the final request covers
+//!   `tail` bytes.  One 24-byte run replaces `count` accesses.
+//! * **Cached runs** — a maximal sequence of same-width `Cached` loads
+//!   collapses to a base address plus one `u32` word per access
+//!   (`addr = base + 4*word`, the delta from the run's lowest address
+//!   in 4-byte units): 4 bytes per access instead of 24, so the replay
+//!   loop streams 6x less trace data through the host cache.
+//! * **Verbatim runs** — anything else (`Element`, `CachedStore`, and
+//!   the rare run that does not fit the delta encoding, e.g. offsets
+//!   beyond the 16 GiB window) is kept as raw accesses and replayed
+//!   exactly as the lockstep engine would.
+//!
+//! The encoding is **lossless**: [`CompressedTrace::expand`] rebuilds
+//! the original access list element for element, which is what the
+//! differential test harness checks (`tests/differential.rs`), and the
+//! event engine's replay of the compressed form is bit-identical in
+//! cycles and statistics to lockstep replay of the raw form.
+
+use crate::controller::Access;
+
+/// One batched event: a run of homogeneous accesses.
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum Run {
+    /// `count` contiguous `Stream` requests: request `i` covers `chunk`
+    /// bytes at `base + i*chunk`; the last request covers `tail` bytes
+    /// (`tail == chunk` when the run divides evenly).
+    Stream {
+        base: u64,
+        chunk: u32,
+        count: u32,
+        tail: u32,
+    },
+    /// `count` `Cached` loads of `bytes` each at
+    /// `base + 4*words[off + i]`.
+    Cached {
+        base: u64,
+        bytes: u32,
+        off: usize,
+        count: usize,
+    },
+    /// `count` raw accesses at `raw[off..off + count]`, replayed
+    /// verbatim.
+    Verbatim { off: usize, count: usize },
+}
+
+/// A lossless, delta-encoded access trace (see module docs).
+///
+/// Build one with [`CompressedTrace::compress`]; replay it with
+/// [`crate::controller::MemoryController::replay_events`].  The
+/// compressed form is configuration-independent — addresses depend
+/// only on tensor shape, rank, and layout — so one trace serves every
+/// DSE candidate configuration.
+#[derive(Debug, Clone, Default)]
+pub struct CompressedTrace {
+    runs: Vec<Run>,
+    /// Packed 4-byte-unit address deltas for cached runs.
+    words: Vec<u32>,
+    /// Verbatim accesses (cold access classes and encoding fallbacks).
+    raw: Vec<Access>,
+    /// Total request count (= the raw trace's length).
+    requests: u64,
+    /// Total bytes across all requests.
+    total_bytes: u64,
+}
+
+impl CompressedTrace {
+    /// Delta-encode a raw access trace.  Lossless for any input;
+    /// accesses that do not fit the run encodings fall back to
+    /// verbatim storage.
+    pub fn compress(trace: &[Access]) -> CompressedTrace {
+        let mut out = CompressedTrace::default();
+        for a in trace {
+            out.requests += 1;
+            out.total_bytes += a.bytes() as u64;
+        }
+
+        let mut i = 0usize;
+        while i < trace.len() {
+            match trace[i] {
+                Access::Stream { .. } => {
+                    let mut j = i;
+                    while j < trace.len() && matches!(trace[j], Access::Stream { .. }) {
+                        j += 1;
+                    }
+                    out.encode_streams(&trace[i..j]);
+                    i = j;
+                }
+                Access::Cached { bytes, .. } => {
+                    let mut j = i + 1;
+                    while j < trace.len()
+                        && matches!(trace[j], Access::Cached { bytes: b, .. } if b == bytes)
+                    {
+                        j += 1;
+                    }
+                    out.encode_cached(&trace[i..j]);
+                    i = j;
+                }
+                _ => {
+                    let mut j = i;
+                    while j < trace.len()
+                        && matches!(
+                            trace[j],
+                            Access::Element { .. } | Access::CachedStore { .. }
+                        )
+                    {
+                        j += 1;
+                    }
+                    out.push_verbatim(&trace[i..j]);
+                    i = j;
+                }
+            }
+        }
+        out
+    }
+
+    /// Encode a maximal `Stream`-only segment as contiguous runs.
+    fn encode_streams(&mut self, seg: &[Access]) {
+        let at = |k: usize| -> (u64, usize) {
+            match seg[k] {
+                Access::Stream { addr, bytes } => (addr, bytes),
+                _ => unreachable!("stream segment"),
+            }
+        };
+        let mut k = 0usize;
+        while k < seg.len() {
+            let (base, chunk) = at(k);
+            if chunk > u32::MAX as usize {
+                self.push_verbatim(&seg[k..k + 1]);
+                k += 1;
+                continue;
+            }
+            // Extend while each next request starts exactly where the
+            // previous uniform chunk ends; a single short (or long)
+            // tail request is absorbed and terminates the run.
+            let mut count = 1u32;
+            let mut tail = chunk as u32;
+            while tail == chunk as u32 && k + (count as usize) < seg.len() {
+                let (a, b) = at(k + count as usize);
+                if a != base + count as u64 * chunk as u64 || b > u32::MAX as usize {
+                    break;
+                }
+                tail = b as u32;
+                count += 1;
+            }
+            self.runs.push(Run::Stream {
+                base,
+                chunk: chunk as u32,
+                count,
+                tail,
+            });
+            k += count as usize;
+        }
+    }
+
+    /// Encode a maximal same-width `Cached` segment as one delta run,
+    /// falling back to verbatim if the offsets do not fit the window.
+    fn encode_cached(&mut self, seg: &[Access]) {
+        let addr_of = |a: &Access| -> u64 {
+            match *a {
+                Access::Cached { addr, .. } => addr,
+                _ => unreachable!("cached segment"),
+            }
+        };
+        let bytes = seg[0].bytes();
+        let base = seg.iter().map(addr_of).min().expect("non-empty segment");
+        let fits = bytes <= u32::MAX as usize
+            && seg.iter().all(|a| {
+                let d = addr_of(a) - base;
+                d % 4 == 0 && d / 4 <= u32::MAX as u64
+            });
+        if !fits {
+            self.push_verbatim(seg);
+            return;
+        }
+        let off = self.words.len();
+        self.words
+            .extend(seg.iter().map(|a| ((addr_of(a) - base) / 4) as u32));
+        self.runs.push(Run::Cached {
+            base,
+            bytes: bytes as u32,
+            off,
+            count: seg.len(),
+        });
+    }
+
+    fn push_verbatim(&mut self, seg: &[Access]) {
+        if seg.is_empty() {
+            return;
+        }
+        // Merge with a directly preceding verbatim run.
+        if let Some(Run::Verbatim { off, count }) = self.runs.last_mut() {
+            if *off + *count == self.raw.len() {
+                *count += seg.len();
+                self.raw.extend_from_slice(seg);
+                return;
+            }
+        }
+        self.runs.push(Run::Verbatim {
+            off: self.raw.len(),
+            count: seg.len(),
+        });
+        self.raw.extend_from_slice(seg);
+    }
+
+    /// Reconstruct the original raw access list (lossless inverse of
+    /// [`CompressedTrace::compress`]).
+    pub fn expand(&self) -> Vec<Access> {
+        let mut out = Vec::with_capacity(self.requests as usize);
+        for run in &self.runs {
+            match *run {
+                Run::Stream {
+                    base,
+                    chunk,
+                    count,
+                    tail,
+                } => {
+                    for i in 0..count as u64 {
+                        let bytes = if i + 1 == count as u64 { tail } else { chunk };
+                        out.push(Access::Stream {
+                            addr: base + i * chunk as u64,
+                            bytes: bytes as usize,
+                        });
+                    }
+                }
+                Run::Cached {
+                    base,
+                    bytes,
+                    off,
+                    count,
+                } => {
+                    for &w in &self.words[off..off + count] {
+                        out.push(Access::Cached {
+                            addr: base + 4 * w as u64,
+                            bytes: bytes as usize,
+                        });
+                    }
+                }
+                Run::Verbatim { off, count } => {
+                    out.extend_from_slice(&self.raw[off..off + count]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of accesses (requests) the trace encodes.
+    pub fn len(&self) -> usize {
+        self.requests as usize
+    }
+
+    /// True when the trace encodes no accesses.
+    pub fn is_empty(&self) -> bool {
+        self.requests == 0
+    }
+
+    /// Total request count, for bulk controller-stat accounting.
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    /// Total bytes across all requests, for bulk accounting.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// Host bytes of the compressed representation.
+    pub fn encoded_bytes(&self) -> usize {
+        self.runs.len() * std::mem::size_of::<Run>()
+            + self.words.len() * 4
+            + self.raw.len() * std::mem::size_of::<Access>()
+    }
+
+    /// Host bytes the equivalent raw `Vec<Access>` occupies.
+    pub fn raw_bytes(&self) -> usize {
+        self.len() * std::mem::size_of::<Access>()
+    }
+
+    /// raw / encoded size ratio (higher = better compression).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.encoded_bytes() == 0 {
+            1.0
+        } else {
+            self.raw_bytes() as f64 / self.encoded_bytes() as f64
+        }
+    }
+
+    pub(crate) fn runs(&self) -> &[Run] {
+        &self.runs
+    }
+
+    pub(crate) fn words_at(&self, off: usize, count: usize) -> &[u32] {
+        &self.words[off..off + count]
+    }
+
+    pub(crate) fn raw_at(&self, off: usize, count: usize) -> &[Access] {
+        &self.raw[off..off + count]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+
+    fn roundtrip(trace: &[Access]) {
+        let ct = CompressedTrace::compress(trace);
+        assert_eq!(ct.len(), trace.len());
+        assert_eq!(
+            ct.total_bytes(),
+            trace.iter().map(|a| a.bytes() as u64).sum::<u64>()
+        );
+        assert_eq!(ct.expand(), trace, "compress/expand must be lossless");
+    }
+
+    #[test]
+    fn empty_trace() {
+        let ct = CompressedTrace::compress(&[]);
+        assert!(ct.is_empty());
+        assert!(ct.expand().is_empty());
+    }
+
+    #[test]
+    fn contiguous_stream_with_tail_is_one_run() {
+        let trace: Vec<Access> = (0..5)
+            .map(|i| Access::Stream {
+                addr: 1_000 + i * 4096,
+                bytes: if i == 4 { 100 } else { 4096 },
+            })
+            .collect();
+        let ct = CompressedTrace::compress(&trace);
+        assert_eq!(ct.runs().len(), 1);
+        roundtrip(&trace);
+    }
+
+    #[test]
+    fn cached_rows_pack_as_words() {
+        let mut rng = Rng::new(1);
+        let trace: Vec<Access> = (0..500)
+            .map(|_| Access::Cached {
+                addr: (8 << 20) + rng.below(10_000) * 64,
+                bytes: 64,
+            })
+            .collect();
+        let ct = CompressedTrace::compress(&trace);
+        assert_eq!(ct.runs().len(), 1, "one delta run expected");
+        assert!(
+            ct.compression_ratio() > 4.0,
+            "ratio {}",
+            ct.compression_ratio()
+        );
+        roundtrip(&trace);
+    }
+
+    #[test]
+    fn mixed_classes_roundtrip() {
+        let mut rng = Rng::new(2);
+        let mut trace = Vec::new();
+        for i in 0..400u64 {
+            match rng.below(5) {
+                0 => trace.push(Access::Stream {
+                    addr: i * 4096,
+                    bytes: 4096,
+                }),
+                1 => trace.push(Access::Element {
+                    addr: (1 << 30) + i * 16,
+                    bytes: 16,
+                }),
+                2 => trace.push(Access::CachedStore {
+                    addr: (2 << 30) + rng.below(1 << 20) * 16,
+                    bytes: 16,
+                }),
+                3 => trace.push(Access::Cached {
+                    addr: (3 << 30) + rng.below(1 << 16) * 64,
+                    bytes: 64,
+                }),
+                _ => trace.push(Access::Cached {
+                    // Different width: must split the cached run.
+                    addr: (3 << 30) + rng.below(1 << 16) * 32,
+                    bytes: 32,
+                }),
+            }
+        }
+        roundtrip(&trace);
+    }
+
+    #[test]
+    fn far_apart_cached_addresses_fall_back_to_verbatim() {
+        // A >16 GiB span cannot be expressed in u32 4-byte deltas.
+        let trace = vec![
+            Access::Cached { addr: 0, bytes: 64 },
+            Access::Cached {
+                addr: 1 << 40,
+                bytes: 64,
+            },
+        ];
+        let ct = CompressedTrace::compress(&trace);
+        assert_eq!(ct.expand(), trace);
+    }
+
+    #[test]
+    fn unaligned_cached_addresses_fall_back_to_verbatim() {
+        let trace = vec![
+            Access::Cached { addr: 3, bytes: 8 },
+            Access::Cached { addr: 10, bytes: 8 },
+        ];
+        let ct = CompressedTrace::compress(&trace);
+        assert_eq!(ct.expand(), trace);
+    }
+
+    #[test]
+    fn gapped_streams_split_into_runs() {
+        // Output-row stores with unused rows between them.
+        let trace = vec![
+            Access::Stream {
+                addr: 0,
+                bytes: 64,
+            },
+            Access::Stream {
+                addr: 64,
+                bytes: 64,
+            },
+            Access::Stream {
+                addr: 256, // gap
+                bytes: 64,
+            },
+        ];
+        let ct = CompressedTrace::compress(&trace);
+        assert_eq!(ct.runs().len(), 2);
+        roundtrip(&trace);
+    }
+
+    #[test]
+    fn shard_trace_compresses_well() {
+        use crate::controller::MemLayout;
+        use crate::shard::{partition_indices, shard_trace, ShardPlan};
+        use crate::tensor::synth::{generate, Profile, SynthConfig};
+        let t = generate(&SynthConfig {
+            dims: vec![300, 200, 150],
+            nnz: 5_000,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed: 4,
+        });
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 16);
+        let plan = ShardPlan::balance(&t, 0, 2);
+        let parts = partition_indices(&t, &plan);
+        let trace = shard_trace(&t, 16, 0, &layout, &plan.shards[0], &parts[0], 0);
+        let ct = CompressedTrace::compress(&trace);
+        assert_eq!(ct.expand(), trace);
+        assert!(
+            ct.compression_ratio() > 3.0,
+            "spMTTKRP shard traces are highly regular: {}",
+            ct.compression_ratio()
+        );
+    }
+}

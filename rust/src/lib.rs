@@ -18,6 +18,9 @@
 //! * [`tensor`] — COO sparse tensors, FROSTT IO, synthetic generators,
 //!   mode sort / remap, access-pattern statistics. (S1)
 //! * [`dram`] — bank / row-buffer DRAM timing model. (S2)
+//! * [`engine`] — lockstep vs event-driven simulation cores behind one
+//!   [`engine::SimEngine`] trait, plus the delta-encoded
+//!   [`engine::CompressedTrace`] both replay. (S19)
 //! * [`controller`] — Cache Engine, DMA Engine, Tensor Remapper, and the
 //!   memory-controller top that routes the paper's three transfer types.
 //!   (S3–S6)
@@ -46,6 +49,7 @@ pub mod coordinator;
 pub mod cpd;
 pub mod dram;
 pub mod dse;
+pub mod engine;
 pub mod error;
 pub mod fpga;
 pub mod mttkrp;

@@ -15,7 +15,9 @@
 //! Workload selection (all subcommands): `--input file.tns` or
 //! `--synth zipf|uniform|clustered --dims AxBxC --nnz N --seed S`.
 //! Controller parameters come from `--config ptmc.toml` plus overrides
-//! (`--cache-lines`, `--dma-buffers`, ...).
+//! (`--cache-lines`, `--dma-buffers`, ...).  `--engine lockstep|event`
+//! picks the trace-replay core for `simulate` and `explore`
+//! (bit-identical results; `event` is the batched fast path).
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -26,6 +28,7 @@ use ptmc::controller::{ControllerConfig, MemLayout, MemoryController};
 use ptmc::coordinator::{PjrtCoordinator, SegMode};
 use ptmc::cpd::{cp_als, linalg::Mat, AlsConfig, NativeBackend, SimBackend};
 use ptmc::dse::{explore, Evaluator, Grids};
+use ptmc::engine::EngineKind;
 use ptmc::fpga::Device;
 use ptmc::pms::{self, TensorProfile};
 use ptmc::runtime::Runtime;
@@ -35,7 +38,7 @@ use ptmc::tensor::{stats, SparseTensor};
 const OPTS: &[&str] = &[
     "input", "synth", "dims", "nnz", "seed", "alpha", // workload
     "config", "rank", "iters", "tol", "backend", "device", "evaluator", "seg",
-    "workers", "mode", // sharded execution
+    "workers", "mode", "engine", // sharded execution + replay core
     "cache-lines", "cache-line-bytes", "cache-assoc", "dma-buffers", "dma-num",
     "dma-buffer-bytes", "max-pointers", "channels", "artifacts",
 ];
@@ -67,7 +70,9 @@ fn usage() {
          controller:--config ptmc.toml --cache-lines N --cache-line-bytes B\n\
          \x20          --cache-assoc A --dma-num N --dma-buffers K\n\
          \x20          --dma-buffer-bytes B --max-pointers P --channels C\n\
-         dse:       --device u250|u280|vu9p --evaluator pms|sim|sharded\n"
+         dse:       --device u250|u280|vu9p --evaluator pms|sim|sharded\n\
+         sim core:  --engine lockstep|event (bit-identical; default event\n\
+         \x20          on explore for sweep throughput, lockstep on simulate)\n"
     );
 }
 
@@ -122,6 +127,20 @@ fn als_config(args: &Args) -> Result<AlsConfig, Box<dyn std::error::Error>> {
         ridge: base.ridge,
         seed: args.u64_or("seed", base.seed)?,
     })
+}
+
+/// Replay core from `--engine`.  The default is per command:
+/// `explore` replays the same prepared traces across a whole candidate
+/// grid, where the event engine's batching amortizes (`event`);
+/// `simulate` compiles and replays each trace exactly once, where
+/// compression would not pay for itself (`lockstep`).
+fn engine_kind(args: &Args, default: EngineKind) -> Result<EngineKind, CliError> {
+    match args.get("engine") {
+        None => Ok(default),
+        Some(v) => v
+            .parse::<EngineKind>()
+            .map_err(|e| CliError(format!("--engine: {e}"))),
+    }
 }
 
 fn device(args: &Args) -> Result<Device, CliError> {
@@ -206,6 +225,7 @@ fn cmd_decompose(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let mut t = workload::tensor_from_args(args)?;
     let rank = args.usize_or("rank", 16)?;
+    let engine = engine_kind(args, EngineKind::Lockstep)?;
     let cfg = controller_config(args, t.record_bytes())?;
     let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
     let factors: Vec<Mat> = t
@@ -217,9 +237,12 @@ fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let mut ctl = MemoryController::new(cfg);
 
     println!("simulate: dims {:?}, nnz {}, rank {rank}", t.dims(), t.nnz());
+    println!("engine: {engine}");
     let mut total = 0u64;
     for mode in 0..t.n_modes() {
-        let run = ptmc::mttkrp::remap_exec::run(&mut t, &factors, mode, &layout, &mut ctl, 0);
+        let run = ptmc::mttkrp::remap_exec::run_with_engine(
+            &mut t, &factors, mode, &layout, &mut ctl, 0, engine,
+        );
         println!(
             "  mode {mode}: remap {} + compute {} cycles (overhead {:.2}%)",
             run.remap_cycles,
@@ -308,6 +331,7 @@ fn cmd_pms(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let t = workload::tensor_from_args(args)?;
     let rank = args.usize_or("rank", 16)?;
+    let engine = engine_kind(args, EngineKind::Event)?;
     let base = controller_config(args, t.record_bytes())?;
     let dev = device(args)?;
     let profile = TensorProfile::measure(&t);
@@ -316,6 +340,7 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         .iter()
         .map(|&d| Mat::randn(d, rank, 3))
         .collect();
+    println!("engine: {engine}");
     let sweep;
     let eval = match args.str_or("evaluator", "pms") {
         "pms" => Evaluator::Pms {
@@ -325,11 +350,12 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         "sim" => Evaluator::CycleSim {
             tensor: &t,
             factors: &factors,
+            engine,
         },
         "sharded" => {
             let workers = args.usize_or("workers", 4)?.max(1);
             println!("sharded evaluator: {workers} concurrent controller instances");
-            sweep = ShardedSweep::prepare(&t, rank, workers);
+            sweep = ShardedSweep::prepare_with_engine(&t, rank, workers, engine);
             Evaluator::ShardedSim { sweep: &sweep }
         }
         other => {

@@ -7,6 +7,7 @@
 
 use crate::controller::{MemLayout, MemoryController};
 use crate::cpd::linalg::Mat;
+use crate::engine::EngineKind;
 use crate::tensor::{remap, SortOrder, SparseTensor};
 
 use super::{approach1, EngineRun, Tracing};
@@ -53,6 +54,22 @@ pub fn run(
     ctl: &mut MemoryController,
     src: usize,
 ) -> RemappedRun {
+    run_with_engine(t, factors, mode, layout, ctl, src, EngineKind::Lockstep)
+}
+
+/// [`run`] with an explicit replay core ([`crate::engine`]) for the
+/// compute-trace replay: `Lockstep` replays the raw access list,
+/// `Event` delta-encodes it and drives the batched kernels.  Both are
+/// bit-identical in cycles and statistics.
+pub fn run_with_engine(
+    t: &mut SparseTensor,
+    factors: &[Mat],
+    mode: usize,
+    layout: &MemLayout,
+    ctl: &mut MemoryController,
+    src: usize,
+    replay_engine: EngineKind,
+) -> RemappedRun {
     let t_start = ctl.now();
 
     // Remap pass (skipped when the tensor is already in direction).
@@ -67,7 +84,7 @@ pub fn run(
     // Approach-1 compute with trace replay.
     let engine = approach1::run(t, factors, mode, layout, Tracing::On);
     let t_mid = ctl.now();
-    let compute_cycles = ctl.replay(&engine.trace) - t_mid;
+    let compute_cycles = replay_engine.replay_raw(ctl, &engine.trace) - t_mid;
 
     let mut engine = engine;
     if let Some(rep) = &remap_report {

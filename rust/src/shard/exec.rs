@@ -12,13 +12,17 @@
 //! simulated time of a mode is the *slowest* worker's makespan while
 //! statistics are the *sum* over workers ([`AggregateStats`]).
 
+use std::collections::HashMap;
+use std::sync::Mutex;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use super::{partition_indices, AggregateStats, ShardPlan, ShardSpec};
-use crate::controller::{Access, ControllerConfig, MemLayout, MemoryController};
+use crate::controller::{Access, ControllerConfig, MemLayout, MemoryController, RemapperConfig};
 use crate::coordinator::Metrics;
 use crate::cpd::linalg::Mat;
+use crate::dram::DramConfig;
+use crate::engine::{EngineKind, PreparedTrace};
 use crate::mttkrp::{oracle, STREAM_CHUNK_ELEMS};
 use crate::tensor::{Coord, SparseTensor};
 
@@ -149,6 +153,15 @@ fn worker_cfg(cfg: &ControllerConfig, k: usize) -> ControllerConfig {
     c
 }
 
+/// Per-worker simulation request: controller parameters, memory
+/// layout, and which replay core drives the shard's trace.
+#[derive(Clone, Copy)]
+struct SimSpec<'a> {
+    cfg: &'a ControllerConfig,
+    layout: &'a MemLayout,
+    engine: EngineKind,
+}
+
 /// The full worker body: compute, then (optionally) compile and replay
 /// the shard's trace on a fresh controller.
 fn worker(
@@ -158,7 +171,7 @@ fn worker(
     spec: &ShardSpec,
     zs: &[usize],
     record_offset: usize,
-    sim: Option<(&ControllerConfig, &MemLayout)>,
+    sim: Option<SimSpec<'_>>,
 ) -> (Mat, Metrics, Option<MemoryController>) {
     let t0 = Instant::now();
     let local = shard_mttkrp(t, factors, mode, spec, zs);
@@ -166,13 +179,13 @@ fn worker(
 
     let mut gather = Duration::ZERO;
     let mut accumulate = Duration::ZERO;
-    let ctl = sim.map(|(cfg, layout)| {
+    let ctl = sim.map(|s| {
         let t1 = Instant::now();
-        let trace = shard_trace(t, factors[0].cols(), mode, layout, spec, zs, record_offset);
+        let trace = shard_trace(t, factors[0].cols(), mode, s.layout, spec, zs, record_offset);
         gather = t1.elapsed();
-        let mut ctl = MemoryController::new(cfg.clone());
+        let mut ctl = MemoryController::new(s.cfg.clone());
         let t2 = Instant::now();
-        ctl.replay(&trace);
+        s.engine.replay_raw(&mut ctl, &trace);
         accumulate = t2.elapsed();
         ctl
     });
@@ -208,10 +221,25 @@ pub fn mttkrp_sharded(
     k: usize,
     sim: Option<(&ControllerConfig, &MemLayout)>,
 ) -> ShardedRun {
+    mttkrp_sharded_with_engine(t, factors, mode, k, sim, EngineKind::Lockstep)
+}
+
+/// [`mttkrp_sharded`] with an explicit replay core for the per-worker
+/// controller simulation.  The two engines are bit-identical in cycles
+/// and statistics ([`crate::engine`]); `Event` is faster on large
+/// shards, `Lockstep` is the legacy default.
+pub fn mttkrp_sharded_with_engine(
+    t: &SparseTensor,
+    factors: &[Mat],
+    mode: usize,
+    k: usize,
+    sim: Option<(&ControllerConfig, &MemLayout)>,
+    engine: EngineKind,
+) -> ShardedRun {
     assert!(k >= 1, "need at least one worker");
     let plan = ShardPlan::balance(t, mode, k);
     let parts = partition_indices(t, &plan);
-    mttkrp_planned(t, factors, &plan, &parts, sim)
+    mttkrp_planned_with_engine(t, factors, &plan, &parts, sim, engine)
 }
 
 /// Like [`mttkrp_sharded`] with a precomputed plan and partition —
@@ -225,6 +253,19 @@ pub fn mttkrp_planned(
     plan: &ShardPlan,
     parts: &[Vec<usize>],
     sim: Option<(&ControllerConfig, &MemLayout)>,
+) -> ShardedRun {
+    mttkrp_planned_with_engine(t, factors, plan, parts, sim, EngineKind::Lockstep)
+}
+
+/// [`mttkrp_planned`] with an explicit replay core (see
+/// [`mttkrp_sharded_with_engine`]).
+pub fn mttkrp_planned_with_engine(
+    t: &SparseTensor,
+    factors: &[Mat],
+    plan: &ShardPlan,
+    parts: &[Vec<usize>],
+    sim: Option<(&ControllerConfig, &MemLayout)>,
+    engine: EngineKind,
 ) -> ShardedRun {
     debug_assert_eq!(parts.len(), plan.k(), "partition/plan mismatch");
     let mode = plan.mode;
@@ -245,8 +286,12 @@ pub fn mttkrp_planned(
     // K concurrent instances share the board's DRAM channels: each
     // worker's controller models its slice, not the whole bus.
     let wcfg = sim.map(|(cfg, _)| worker_cfg(cfg, plan.k()));
-    let sim_w: Option<(&ControllerConfig, &MemLayout)> = match (&wcfg, sim) {
-        (Some(c), Some((_, layout))) => Some((c, layout)),
+    let sim_w: Option<SimSpec<'_>> = match (&wcfg, sim) {
+        (Some(c), Some((_, layout))) => Some(SimSpec {
+            cfg: c,
+            layout,
+            engine,
+        }),
         _ => None,
     };
 
@@ -290,25 +335,54 @@ pub fn mttkrp_planned(
     }
 }
 
+/// Key of one memoized remap-pass simulation: the remap's cost under a
+/// configuration depends only on these knobs (the pass runs on a fresh
+/// controller, and neither the Cache Engine nor the DMA Engine touches
+/// it), so every candidate sharing them reuses the same cycle count.
+type RemapKey = (usize, DramConfig, RemapperConfig);
+
 /// Precomputed, configuration-independent inputs of a sharded DSE
-/// sweep: per-mode shard plans and access traces.  Trace addresses
-/// depend only on tensor shape, rank, and worker count — never on the
-/// controller parameters being scored — so the expensive planning and
-/// trace compilation runs once while [`ShardedSweep::makespan`] scores
-/// each candidate configuration with replay only (no numeric MTTKRP is
-/// computed at all on this path).
+/// sweep: per-mode shard plans and prepared access traces (raw +
+/// delta-encoded, [`PreparedTrace`]).  Trace addresses depend only on
+/// tensor shape, rank, and worker count — never on the controller
+/// parameters being scored — so the expensive planning and trace
+/// compilation runs once per (tensor, mode) while
+/// [`ShardedSweep::makespan`] scores each candidate configuration with
+/// replay only (no numeric MTTKRP is computed at all on this path).
+///
+/// The replay core is selectable ([`EngineKind`]): the legacy
+/// `Lockstep` path re-simulates everything per candidate; the `Event`
+/// path replays the compressed traces with the batched kernels, runs
+/// the K shard replays on concurrent host threads (they are
+/// independent fresh controller instances — the max is
+/// order-invariant), and memoizes the sequential remap pass per
+/// (mode, DRAM, remapper) key.  Both paths return bit-identical
+/// makespans.
 pub struct ShardedSweep<'a> {
     t: &'a SparseTensor,
     layout: MemLayout,
     workers: usize,
-    /// Per mode: the shard plan and each shard's compiled trace.
-    modes: Vec<(ShardPlan, Vec<Vec<Access>>)>,
+    engine: EngineKind,
+    /// Per mode: the shard plan and each shard's prepared trace.
+    modes: Vec<(ShardPlan, Vec<PreparedTrace>)>,
+    /// Event-engine memo of remap-pass cycles per configuration key.
+    remap_memo: Mutex<HashMap<RemapKey, u64>>,
 }
 
 impl<'a> ShardedSweep<'a> {
     /// Plan and compile every mode's per-shard traces for `workers`
-    /// shards at factor rank `rank`.
+    /// shards at factor rank `rank`, scored with the event engine.
     pub fn prepare(t: &'a SparseTensor, rank: usize, workers: usize) -> Self {
+        Self::prepare_with_engine(t, rank, workers, EngineKind::Event)
+    }
+
+    /// [`ShardedSweep::prepare`] with an explicit default replay core.
+    pub fn prepare_with_engine(
+        t: &'a SparseTensor,
+        rank: usize,
+        workers: usize,
+        engine: EngineKind,
+    ) -> Self {
         let workers = workers.max(1);
         let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
         let modes = (0..t.n_modes())
@@ -316,14 +390,14 @@ impl<'a> ShardedSweep<'a> {
                 let plan = ShardPlan::balance(t, mode, workers);
                 let parts = partition_indices(t, &plan);
                 let mut offset = 0usize;
-                let traces: Vec<Vec<Access>> = plan
+                let traces: Vec<PreparedTrace> = plan
                     .shards
                     .iter()
                     .zip(&parts)
                     .map(|(spec, zs)| {
                         let tr = shard_trace(t, rank, mode, &layout, spec, zs, offset);
                         offset += spec.nnz;
-                        tr
+                        PreparedTrace::new(tr)
                     })
                     .collect();
                 (plan, traces)
@@ -333,7 +407,9 @@ impl<'a> ShardedSweep<'a> {
             t,
             layout,
             workers,
+            engine,
             modes,
+            remap_memo: Mutex::new(HashMap::new()),
         }
     }
 
@@ -341,31 +417,101 @@ impl<'a> ShardedSweep<'a> {
         self.workers
     }
 
-    /// Simulated cycles of a full sweep under `cfg`: per mode, one
-    /// sequential Tensor-Remapper pass (the mode-sorted image the shard
-    /// traces assume has to be produced first; it owns the whole memory
-    /// system) plus the slowest shard's replay, each shard on its own
-    /// controller instance with its slice of the DRAM channels.
+    /// The sweep's default replay core.
+    pub fn engine(&self) -> EngineKind {
+        self.engine
+    }
+
+    /// Simulated cycles of a full sweep under `cfg` with the sweep's
+    /// default engine: per mode, one sequential Tensor-Remapper pass
+    /// (the mode-sorted image the shard traces assume has to be
+    /// produced first; it owns the whole memory system) plus the
+    /// slowest shard's replay, each shard on its own controller
+    /// instance with its slice of the DRAM channels.
     pub fn makespan(&self, cfg: &ControllerConfig) -> u64 {
+        self.makespan_with(cfg, self.engine)
+    }
+
+    /// [`ShardedSweep::makespan`] under an explicit replay core.  Both
+    /// cores return the same value; `Event` gets there faster (batched
+    /// replay, concurrent shards, memoized remap passes).
+    pub fn makespan_with(&self, cfg: &ControllerConfig, engine: EngineKind) -> u64 {
         let wcfg = worker_cfg(cfg, self.workers);
         let mut total = 0u64;
         for (mode, (_plan, traces)) in self.modes.iter().enumerate() {
-            let mut remap_ctl = MemoryController::new(cfg.clone());
-            let remap_cycles = remap_ctl.remap_pass(
-                self.t.mode_col(mode),
-                self.t.dims()[mode],
-                &self.layout,
-                0,
-                1,
-            );
-            let worst = traces
-                .iter()
-                .map(|tr| MemoryController::new(wcfg.clone()).replay(tr))
-                .max()
-                .unwrap_or(0);
+            let (remap_cycles, worst) = match engine {
+                EngineKind::Lockstep => {
+                    let remap = self.remap_cycles(mode, cfg);
+                    let worst = traces
+                        .iter()
+                        .map(|tr| MemoryController::new(wcfg.clone()).replay(tr.raw()))
+                        .max()
+                        .unwrap_or(0);
+                    (remap, worst)
+                }
+                EngineKind::Event => {
+                    let key: RemapKey = (mode, cfg.dram.clone(), cfg.remapper);
+                    let remap = {
+                        let memo = self.remap_memo.lock().expect("remap memo poisoned");
+                        memo.get(&key).copied()
+                    };
+                    let remap = match remap {
+                        Some(cycles) => cycles,
+                        None => {
+                            let cycles = self.remap_cycles(mode, cfg);
+                            self.remap_memo
+                                .lock()
+                                .expect("remap memo poisoned")
+                                .insert(key, cycles);
+                            cycles
+                        }
+                    };
+                    let worst = if traces.len() > 1 {
+                        thread::scope(|scope| {
+                            let handles: Vec<_> = traces
+                                .iter()
+                                .map(|tr| {
+                                    let cfg = wcfg.clone();
+                                    scope.spawn(move || {
+                                        MemoryController::new(cfg).replay_events(tr.compressed())
+                                    })
+                                })
+                                .collect();
+                            handles
+                                .into_iter()
+                                .map(|h| h.join().expect("shard replay worker panicked"))
+                                .max()
+                                .unwrap_or(0)
+                        })
+                    } else {
+                        traces
+                            .iter()
+                            .map(|tr| {
+                                MemoryController::new(wcfg.clone())
+                                    .replay_events(tr.compressed())
+                            })
+                            .max()
+                            .unwrap_or(0)
+                    };
+                    (remap, worst)
+                }
+            };
             total += remap_cycles + worst;
         }
         total
+    }
+
+    /// One mode's remap-pass cycles under `cfg`, on a fresh controller
+    /// (exactly how both engines account the sequential remap phase).
+    fn remap_cycles(&self, mode: usize, cfg: &ControllerConfig) -> u64 {
+        let mut remap_ctl = MemoryController::new(cfg.clone());
+        remap_ctl.remap_pass(
+            self.t.mode_col(mode),
+            self.t.dims()[mode],
+            &self.layout,
+            0,
+            1,
+        )
     }
 }
 

@@ -29,7 +29,8 @@ pub mod exec;
 
 pub use backend::ParallelBackend;
 pub use exec::{
-    mttkrp_planned, mttkrp_sharded, shard_trace, sweep_makespan, ShardedRun, ShardedSweep,
+    mttkrp_planned, mttkrp_planned_with_engine, mttkrp_sharded, mttkrp_sharded_with_engine,
+    shard_trace, sweep_makespan, ShardedRun, ShardedSweep,
 };
 
 use crate::controller::{CacheStats, ControllerStats, DmaStats, MemoryController, RemapperStats};

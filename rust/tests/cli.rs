@@ -132,6 +132,82 @@ fn explore_reports_best_config() {
 }
 
 #[test]
+fn engine_option_accepts_both_cores_and_they_agree() {
+    // simulate under both replay cores: accepted, and the simulated
+    // cycle totals must be bit-identical (the engines differ only in
+    // execution strategy).
+    let lockstep = run(&[&["simulate"], SMALL, &["--rank", "8", "--engine", "lockstep"]].concat());
+    let event = run(&[&["simulate"], SMALL, &["--rank", "8", "--engine", "event"]].concat());
+    assert!(lockstep.0, "{}", lockstep.1);
+    assert!(event.0, "{}", event.1);
+    assert!(lockstep.1.contains("engine: lockstep"), "{}", lockstep.1);
+    assert!(event.1.contains("engine: event"), "{}", event.1);
+    let total_line = |text: &str| -> String {
+        text.lines()
+            .find(|l| l.starts_with("total cycles:"))
+            .expect("total cycles line")
+            .to_string()
+    };
+    assert_eq!(
+        total_line(&lockstep.1),
+        total_line(&event.1),
+        "engines must report identical cycle totals"
+    );
+}
+
+#[test]
+fn engine_option_rejects_unknown_value() {
+    let (ok, text) = run(&[&["simulate"], SMALL, &["--engine", "bogus"]].concat());
+    assert!(!ok);
+    assert!(text.contains("--engine"), "{text}");
+    assert!(text.contains("lockstep|event"), "{text}");
+}
+
+#[test]
+fn explore_sharded_reports_engine_for_both_cores() {
+    for engine in ["event", "lockstep"] {
+        let (ok, text) = run(&[
+            &["explore"],
+            SMALL,
+            &["--evaluator", "sharded", "--workers", "2", "--engine", engine],
+        ]
+        .concat());
+        assert!(ok, "{text}");
+        assert!(text.contains(&format!("engine: {engine}")), "{text}");
+        assert!(text.contains("best:"), "{text}");
+    }
+}
+
+#[test]
+fn shard_plan_report_has_expected_shape() {
+    let (ok, text) = run(&[&["shard"], SMALL, &["--workers", "3", "--mode", "1"]].concat());
+    assert!(ok, "{text}");
+    // Header + one imbalance line + one line per shard with ranges,
+    // row counts, nnz counts, and percentage shares.
+    assert!(text.contains("3 workers"), "{text}");
+    assert_eq!(text.matches("imbalance").count(), 1, "{text}");
+    assert_eq!(text.matches("coords [").count(), 3, "{text}");
+    assert_eq!(text.matches("rows)").count(), 3, "{text}");
+    assert_eq!(text.matches("nnz (").count(), 3, "{text}");
+    assert_eq!(text.matches('%').count(), 3, "{text}");
+    // Shard nnz shares must sum to the workload's nnz.
+    let total: usize = text
+        .lines()
+        .filter(|l| l.contains("nnz ("))
+        .map(|l| {
+            let before = l.split(" nnz (").next().unwrap();
+            before
+                .rsplit(' ')
+                .next()
+                .unwrap()
+                .parse::<usize>()
+                .expect("nnz count")
+        })
+        .sum();
+    assert_eq!(total, 5000, "{text}");
+}
+
+#[test]
 fn unknown_flag_fails_loudly() {
     let (ok, text) = run(&["stats", "--bogus", "1"]);
     assert!(!ok);

@@ -1,0 +1,260 @@
+//! Differential test harness for the simulation engines: on a seeded
+//! corpus of synthetic tensors (varying mode counts, nnz, and Zipf
+//! skew) and a small grid of controller configurations, the event
+//! engine and the lockstep engine must produce **identical** completion
+//! cycles and statistics — `ControllerStats`, `CacheStats`, `DmaStats`,
+//! and DRAM stats including row activations.  The compressed trace must
+//! also be a lossless encoding of the raw trace.
+
+use ptmc::controller::{
+    Access, CacheConfig, ControllerConfig, DmaConfig, MemLayout, MemoryController,
+};
+use ptmc::engine::{CompressedTrace, EngineKind, PreparedTrace, SimEngine};
+use ptmc::mttkrp::{approach1, Tracing};
+use ptmc::shard::{partition_indices, shard_trace, ShardPlan, ShardedSweep};
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+use ptmc::tensor::SparseTensor;
+use ptmc::testkit::{forall, Rng};
+
+/// A random synthetic tensor: 3 or 4 modes, varying nnz and skew.
+fn random_tensor(rng: &mut Rng) -> SparseTensor {
+    let n_modes = rng.range(3, 5);
+    let dims: Vec<usize> = (0..n_modes).map(|_| rng.range(30, 300)).collect();
+    let space: usize = dims.iter().product();
+    let nnz = rng.range(1, 2_000).min(space / 4).max(1);
+    let profile = match rng.below(3) {
+        0 => Profile::Uniform,
+        1 => Profile::Zipf {
+            alpha_milli: 1_050 + rng.below(500) as u32,
+        },
+        _ => Profile::Clustered {
+            block: 8,
+            blocks: 20,
+        },
+    };
+    generate(&SynthConfig {
+        dims,
+        nnz,
+        profile,
+        seed: rng.next_u64(),
+    })
+}
+
+/// The small configuration grid every trace is replayed under.
+fn config_grid(elem_bytes: usize) -> Vec<ControllerConfig> {
+    let mut grid = Vec::new();
+    for (num_lines, assoc) in [(64usize, 1usize), (1024, 4)] {
+        for (num_dmas, buffer_bytes) in [(1usize, 1024usize), (2, 4096)] {
+            let mut cfg = ControllerConfig::default_for(elem_bytes);
+            cfg.cache = CacheConfig {
+                line_bytes: 64,
+                num_lines,
+                assoc,
+                hit_latency: 2,
+            };
+            cfg.dma = DmaConfig {
+                num_dmas,
+                buffers_per_dma: 2,
+                buffer_bytes,
+                setup_cycles: 8,
+            };
+            grid.push(cfg);
+        }
+    }
+    grid
+}
+
+/// Replay `prepared` under both engines on fresh controllers of `cfg`;
+/// assert completion cycle and every counter match bit-for-bit.
+fn assert_engines_identical(prepared: &PreparedTrace, cfg: &ControllerConfig, what: &str) {
+    let mut lockstep = MemoryController::new(cfg.clone());
+    let mut event = MemoryController::new(cfg.clone());
+    let tl = EngineKind::Lockstep.replay(&mut lockstep, prepared);
+    let te = EngineKind::Event.replay(&mut event, prepared);
+    assert_eq!(tl, te, "{what}: completion cycles diverged");
+    assert_eq!(lockstep.now(), event.now(), "{what}: clocks diverged");
+    assert_eq!(
+        lockstep.stats(),
+        event.stats(),
+        "{what}: ControllerStats diverged"
+    );
+    assert_eq!(
+        lockstep.cache_stats(),
+        event.cache_stats(),
+        "{what}: CacheStats diverged"
+    );
+    assert_eq!(
+        lockstep.dma_stats(),
+        event.dma_stats(),
+        "{what}: DmaStats diverged"
+    );
+    assert_eq!(
+        lockstep.dram_stats(),
+        event.dram_stats(),
+        "{what}: DramStats diverged"
+    );
+    assert_eq!(
+        lockstep.dram_stats().activations(),
+        event.dram_stats().activations(),
+        "{what}: row activations diverged"
+    );
+}
+
+#[test]
+fn event_engine_is_bit_identical_on_shard_traces() {
+    forall("event_vs_lockstep_shard_traces", 12, |rng| {
+        let t = random_tensor(rng);
+        let rank = [4usize, 8, 16][rng.range(0, 3)];
+        let mode = rng.range(0, t.n_modes());
+        let workers = rng.range(1, 5);
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+        let plan = ShardPlan::balance(&t, mode, workers);
+        let parts = partition_indices(&t, &plan);
+        let mut offset = 0usize;
+        for (spec, zs) in plan.shards.iter().zip(&parts) {
+            let trace = shard_trace(&t, rank, mode, &layout, spec, zs, offset);
+            offset += spec.nnz;
+            let prepared = PreparedTrace::new(trace.clone());
+            assert_eq!(
+                prepared.compressed().expand(),
+                trace,
+                "compress/expand must be lossless"
+            );
+            for cfg in config_grid(t.record_bytes()) {
+                assert_engines_identical(&prepared, &cfg, "shard trace");
+            }
+        }
+    });
+}
+
+#[test]
+fn event_engine_is_bit_identical_on_approach1_traces() {
+    forall("event_vs_lockstep_approach1", 8, |rng| {
+        let t = random_tensor(rng);
+        let rank = [4usize, 8][rng.range(0, 2)];
+        let mode = rng.range(0, t.n_modes());
+        let factors: Vec<_> = t
+            .dims()
+            .iter()
+            .map(|&d| ptmc::cpd::linalg::Mat::randn(d, rank, rng.next_u64()))
+            .collect();
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+        let mut t = t;
+        t.sort_by_mode(mode);
+        let run = approach1::run(&t, &factors, mode, &layout, Tracing::On);
+        let prepared = PreparedTrace::new(run.trace);
+        for cfg in config_grid(t.record_bytes()) {
+            assert_engines_identical(&prepared, &cfg, "approach1 trace");
+        }
+    });
+}
+
+#[test]
+fn event_engine_is_bit_identical_on_adversarial_access_mixes() {
+    // Cold classes (Element / CachedStore), width changes mid-run,
+    // unaligned addresses, and far-apart cached addresses all exercise
+    // the compressor's fallback paths.
+    forall("event_vs_lockstep_adversarial", 16, |rng| {
+        let n = rng.range(1, 600);
+        let mut trace = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            let a = match rng.below(8) {
+                0 => Access::Stream {
+                    addr: i * 4096,
+                    bytes: 4096,
+                },
+                1 => Access::Stream {
+                    addr: rng.below(1 << 30),
+                    bytes: 1 + rng.below(8192) as usize,
+                },
+                2 => Access::Cached {
+                    addr: (8 << 20) + rng.below(1 << 14) * 64,
+                    bytes: 64,
+                },
+                3 => Access::Cached {
+                    // Unaligned and variable width.
+                    addr: rng.below(1 << 26),
+                    bytes: 1 + rng.below(256) as usize,
+                },
+                4 => Access::Cached {
+                    // Far beyond the u32 delta window.
+                    addr: (1 << 40) + rng.below(1 << 20) * 64,
+                    bytes: 64,
+                },
+                5 => Access::Element {
+                    addr: rng.below(1 << 32),
+                    bytes: 16,
+                },
+                6 => Access::CachedStore {
+                    addr: rng.below(1 << 24) * 16,
+                    bytes: 16,
+                },
+                _ => Access::Stream {
+                    addr: (2 << 30) + (i % 7) * 64,
+                    bytes: 64,
+                },
+            };
+            trace.push(a);
+        }
+        let prepared = PreparedTrace::new(trace.clone());
+        assert_eq!(prepared.compressed().expand(), trace);
+        assert_eq!(
+            CompressedTrace::compress(&trace).len(),
+            trace.len(),
+            "request count must be preserved"
+        );
+        for cfg in config_grid(16) {
+            assert_engines_identical(&prepared, &cfg, "adversarial trace");
+        }
+    });
+}
+
+#[test]
+fn sharded_sweep_makespans_agree_across_engines() {
+    // The full DSE scoring path: remap memoization and concurrent
+    // shard replay on the event side must not change the score.
+    forall("sweep_makespan_engines_agree", 6, |rng| {
+        let t = random_tensor(rng);
+        let workers = rng.range(1, 5);
+        let sweep = ShardedSweep::prepare(&t, 8, workers);
+        for cfg in config_grid(t.record_bytes()).into_iter().take(2) {
+            let lockstep = sweep.makespan_with(&cfg, EngineKind::Lockstep);
+            let event = sweep.makespan_with(&cfg, EngineKind::Event);
+            assert_eq!(lockstep, event, "sweep makespan diverged");
+            // Scoring twice must be deterministic (memo hit path).
+            assert_eq!(event, sweep.makespan_with(&cfg, EngineKind::Event));
+        }
+    });
+}
+
+#[test]
+fn engine_trait_objects_replay_identically() {
+    // The SimEngine trait surface itself: both engines behind dyn
+    // references, driven the same way.
+    let t = generate(&SynthConfig {
+        dims: vec![200, 150, 100],
+        nnz: 3_000,
+        profile: Profile::Zipf { alpha_milli: 1200 },
+        seed: 77,
+    });
+    let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 16);
+    let plan = ShardPlan::balance(&t, 0, 2);
+    let parts = partition_indices(&t, &plan);
+    let trace = shard_trace(&t, 16, 0, &layout, &plan.shards[0], &parts[0], 0);
+    let prepared = PreparedTrace::new(trace);
+    let cfg = ControllerConfig::default_for(t.record_bytes());
+    let engines: [&dyn SimEngine; 2] = [
+        EngineKind::Lockstep.engine(),
+        EngineKind::Event.engine(),
+    ];
+    let results: Vec<u64> = engines
+        .iter()
+        .map(|e| {
+            let mut ctl = MemoryController::new(cfg.clone());
+            e.replay(&mut ctl, &prepared)
+        })
+        .collect();
+    assert_eq!(results[0], results[1]);
+    assert_eq!(engines[0].name(), "lockstep");
+    assert_eq!(engines[1].name(), "event");
+}

@@ -1,0 +1,165 @@
+//! Property tests for the FROSTT `.tns` reader/writer: write→read
+//! identity, 1-based coordinate handling, tolerance for comments and
+//! blank lines, and exact `Parse` line numbers on malformed input.
+
+use ptmc::tensor::frostt::{read_tns, write_tns, TnsError};
+use ptmc::tensor::{Coord, SparseTensor};
+use ptmc::testkit::{forall, Rng};
+
+/// Random tensor whose dims equal the per-mode coordinate maxima + 1 —
+/// the exact shape `.tns` reconstructs (the format stores no dims).
+fn tight_random_tensor(rng: &mut Rng) -> SparseTensor {
+    let n_modes = rng.range(2, 6);
+    let nnz = rng.range(1, 200);
+    let mut cols: Vec<Vec<Coord>> = vec![Vec::with_capacity(nnz); n_modes];
+    let mut vals: Vec<f32> = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        for col in cols.iter_mut() {
+            col.push(rng.below(50) as Coord);
+        }
+        let mut v = (rng.f32() - 0.5) * 200.0;
+        if v == 0.0 {
+            v = 1.0;
+        }
+        vals.push(v);
+    }
+    let dims: Vec<usize> = cols
+        .iter()
+        .map(|col| *col.iter().max().unwrap() as usize + 1)
+        .collect();
+    SparseTensor::from_columns(dims, cols, vals, ptmc::tensor::SortOrder::Unsorted)
+}
+
+fn assert_same_tensor(a: &SparseTensor, b: &SparseTensor) {
+    assert_eq!(a.n_modes(), b.n_modes());
+    assert_eq!(a.dims(), b.dims());
+    assert_eq!(a.nnz(), b.nnz());
+    assert_eq!(a.values(), b.values(), "values must round-trip exactly");
+    for m in 0..a.n_modes() {
+        assert_eq!(a.mode_col(m), b.mode_col(m), "mode {m} columns diverged");
+    }
+}
+
+#[test]
+fn write_read_is_the_identity() {
+    forall("tns_write_read_identity", 32, |rng| {
+        let t = tight_random_tensor(rng);
+        let mut buf = Vec::new();
+        write_tns(&t, &mut buf).expect("write to memory");
+        let back = read_tns(&buf[..]).expect("read own output");
+        assert_same_tensor(&t, &back);
+    });
+}
+
+#[test]
+fn written_coordinates_are_1_based() {
+    forall("tns_one_based_output", 16, |rng| {
+        let t = tight_random_tensor(rng);
+        let mut buf = Vec::new();
+        write_tns(&t, &mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        for (z, line) in text.lines().enumerate() {
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            assert_eq!(fields.len(), t.n_modes() + 1);
+            for (m, f) in fields[..t.n_modes()].iter().enumerate() {
+                let c: u64 = f.parse().expect("integer coordinate");
+                assert!(c >= 1, "coordinate must be 1-based");
+                assert_eq!(c, t.mode_col(m)[z] as u64 + 1, "off-by-one in writer");
+            }
+        }
+    });
+}
+
+#[test]
+fn comments_and_blank_lines_are_tolerated_anywhere() {
+    forall("tns_comment_blank_tolerance", 24, |rng| {
+        let t = tight_random_tensor(rng);
+        let mut buf = Vec::new();
+        write_tns(&t, &mut buf).unwrap();
+        let clean = String::from_utf8(buf).unwrap();
+
+        // Re-assemble with random noise lines interleaved and random
+        // trailing comments appended to data lines.
+        let mut noisy = String::new();
+        for line in clean.lines() {
+            while rng.below(3) == 0 {
+                match rng.below(3) {
+                    0 => noisy.push_str("# a comment line\n"),
+                    1 => noisy.push('\n'),
+                    _ => noisy.push_str("   \n"),
+                }
+            }
+            noisy.push_str(line);
+            if rng.below(4) == 0 {
+                noisy.push_str(" # trailing comment");
+            }
+            noisy.push('\n');
+        }
+        while rng.below(2) == 0 {
+            noisy.push_str("# trailing file comment\n");
+        }
+
+        let back = read_tns(noisy.as_bytes()).expect("noisy file must parse");
+        assert_same_tensor(&t, &back);
+    });
+}
+
+#[test]
+fn parse_errors_carry_the_exact_line_number() {
+    forall("tns_parse_error_line_numbers", 32, |rng| {
+        let t = tight_random_tensor(rng);
+        let mut buf = Vec::new();
+        write_tns(&t, &mut buf).unwrap();
+        let clean = String::from_utf8(buf).unwrap();
+
+        // Keep a random prefix of valid lines (plus comment padding so
+        // physical line numbers differ from data-line counts), then
+        // append one malformed line.
+        let keep = rng.range(0, t.nnz().min(20) + 1);
+        let mut text = String::new();
+        let mut physical_lines = 0usize;
+        for line in clean.lines().take(keep) {
+            if rng.below(3) == 0 {
+                text.push_str("# padding\n");
+                physical_lines += 1;
+            }
+            text.push_str(line);
+            text.push('\n');
+            physical_lines += 1;
+        }
+        let arity = t.n_modes();
+        let bad_line = match rng.below(4) {
+            // 0-based coordinate.
+            0 => format!("0{}", " 1".repeat(arity - 1) + " 1.0"),
+            // Garbage value.
+            1 => format!("{}abc", "1 ".repeat(arity)),
+            // Wrong arity (only an error when a first line fixed it).
+            2 if keep > 0 => format!("{}1.0", "1 ".repeat(arity + 1)),
+            // Too few fields.
+            _ => "1 1".to_string(),
+        };
+        text.push_str(&bad_line);
+        text.push('\n');
+
+        let err = read_tns(text.as_bytes()).expect_err("malformed line must fail");
+        match err {
+            TnsError::Parse(line, msg) => {
+                assert_eq!(
+                    line,
+                    physical_lines + 1,
+                    "wrong line number for {bad_line:?}: {msg}"
+                );
+            }
+            other => panic!("expected Parse error, got {other}"),
+        }
+    });
+}
+
+#[test]
+fn empty_and_comment_only_files_are_rejected_as_empty() {
+    assert!(matches!(read_tns("".as_bytes()).unwrap_err(), TnsError::Empty));
+    assert!(matches!(
+        read_tns("# only\n\n# comments\n".as_bytes()).unwrap_err(),
+        TnsError::Empty
+    ));
+}

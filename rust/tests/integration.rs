@@ -6,6 +6,7 @@ use ptmc::controller::{Access, ControllerConfig, MemLayout, MemoryController};
 use ptmc::cpd::linalg::Mat;
 use ptmc::cpd::{cp_als, AlsConfig, MttkrpBackend, NativeBackend, SimBackend};
 use ptmc::dse::{explore, Evaluator, Grids};
+use ptmc::engine::EngineKind;
 use ptmc::fpga::Device;
 use ptmc::mttkrp::{approach1, oracle, remap_exec, Tracing};
 use ptmc::pms::{self, TensorProfile};
@@ -104,6 +105,7 @@ fn dse_winner_beats_loser_when_resimulated() {
     let sim = Evaluator::CycleSim {
         tensor: &t,
         factors: &factors,
+        engine: EngineKind::Event,
     };
     let best_cycles = sim.score(&ex.best.cfg, &dev).unwrap();
     let mut bad = base.clone();
@@ -130,6 +132,7 @@ fn pms_tracks_simulator_on_fresh_tensor() {
     let sim = Evaluator::CycleSim {
         tensor: &t,
         factors: &factors,
+        engine: EngineKind::Lockstep,
     }
     .score(&cfg, &dev)
     .unwrap();

@@ -1,0 +1,162 @@
+//! Property tests for the shard planner's invariants: every plan is an
+//! output-disjoint exact cover (each nnz assigned to exactly one shard,
+//! each coordinate owned by exactly one contiguous range), conserves
+//! the nnz count, and respects the greedy balance bound — across worker
+//! counts 1–8, including degenerate plans with more workers than
+//! distinct output coordinates.
+
+use ptmc::shard::{partition_indices, ShardPlan};
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+use ptmc::tensor::SparseTensor;
+use ptmc::testkit::{forall, Rng};
+
+fn random_tensor(rng: &mut Rng) -> SparseTensor {
+    let n_modes = rng.range(3, 5);
+    let dims: Vec<usize> = (0..n_modes).map(|_| rng.range(3, 200)).collect();
+    let space: usize = dims.iter().product();
+    let nnz = rng.range(1, 4_000).min(space / 3).max(1);
+    let profile = if rng.below(2) == 0 {
+        Profile::Uniform
+    } else {
+        Profile::Zipf {
+            alpha_milli: 1_050 + rng.below(600) as u32,
+        }
+    };
+    generate(&SynthConfig {
+        dims,
+        nnz,
+        profile,
+        seed: rng.next_u64(),
+    })
+}
+
+/// Cover + disjointness + conservation, phrased on the plan alone.
+fn assert_plan_invariants(plan: &ShardPlan, mode_len: usize, total_nnz: usize, k: usize) {
+    assert_eq!(plan.k(), k, "plan must have exactly k shards");
+    let mut expect_lo = 0u32;
+    for s in &plan.shards {
+        assert_eq!(s.coord_lo, expect_lo, "ranges must tile contiguously");
+        assert!(s.coord_lo <= s.coord_hi, "ranges must be non-negative");
+        expect_lo = s.coord_hi;
+    }
+    assert_eq!(
+        expect_lo as usize, mode_len,
+        "ranges must cover the whole coordinate axis"
+    );
+    assert_eq!(plan.total_nnz(), total_nnz, "nnz must be conserved");
+}
+
+#[test]
+fn plans_are_output_disjoint_exact_covers_for_1_to_8_workers() {
+    forall("shard_plan_cover_k1_8", 16, |rng| {
+        let t = random_tensor(rng);
+        let mode = rng.range(0, t.n_modes());
+        for k in 1..=8usize {
+            let plan = ShardPlan::balance(&t, mode, k);
+            assert_plan_invariants(&plan, t.dims()[mode], t.nnz(), k);
+
+            // Every nnz lands in exactly one shard, inside its range.
+            let parts = partition_indices(&t, &plan);
+            let mut seen = vec![false; t.nnz()];
+            for (sid, zs) in parts.iter().enumerate() {
+                assert_eq!(zs.len(), plan.shards[sid].nnz, "partition/plan nnz mismatch");
+                for &z in zs {
+                    assert!(!seen[z], "nnz {z} assigned twice");
+                    seen[z] = true;
+                    let c = t.mode_col(mode)[z];
+                    assert_eq!(plan.shard_of(c), sid, "owner lookup disagrees");
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "some nnz unassigned");
+        }
+    });
+}
+
+#[test]
+fn balance_bound_holds_for_random_histograms() {
+    // Greedy prefix partition bound: no shard exceeds its proportional
+    // share by more than one un-splittable fiber — max_shard_nnz <=
+    // floor(total/k) + max_fiber.  (A coordinate is never split, so the
+    // heaviest fiber is the irreducible overshoot.)
+    forall("shard_balance_bound", 48, |rng| {
+        let n_coords = rng.range(1, 400);
+        let counts: Vec<usize> = (0..n_coords)
+            .map(|_| {
+                if rng.below(10) == 0 {
+                    rng.range(0, 5_000) // occasional hot fiber
+                } else {
+                    rng.range(0, 40)
+                }
+            })
+            .collect();
+        let total: usize = counts.iter().sum();
+        let max_fiber = counts.iter().copied().max().unwrap_or(0);
+        for k in 1..=8usize {
+            let plan = ShardPlan::from_counts(0, &counts, k);
+            assert_plan_invariants(&plan, n_coords, total, k);
+            let heaviest = plan.shards.iter().map(|s| s.nnz).max().unwrap_or(0);
+            assert!(
+                heaviest <= total / k + max_fiber,
+                "k={k}: heaviest shard {heaviest} exceeds {}/{k} + {max_fiber}",
+                total
+            );
+        }
+    });
+}
+
+#[test]
+fn more_workers_than_distinct_coordinates_degrades_gracefully() {
+    forall("shard_plan_tiny_axes", 32, |rng| {
+        // Axes with very few (possibly zero-count) coordinates, k up
+        // to 8 — far more workers than distinct output coordinates.
+        let n_coords = rng.range(1, 6);
+        let counts: Vec<usize> = (0..n_coords).map(|_| rng.range(0, 50)).collect();
+        let total: usize = counts.iter().sum();
+        let distinct = counts.iter().filter(|&&c| c > 0).count();
+        for k in 1..=8usize {
+            let plan = ShardPlan::from_counts(1, &counts, k);
+            assert_plan_invariants(&plan, n_coords, total, k);
+            let nonempty = plan.shards.iter().filter(|s| s.nnz > 0).count();
+            assert!(
+                nonempty <= distinct.max(1),
+                "k={k}: {nonempty} non-empty shards for {distinct} used coords"
+            );
+            // Ranges with rows own their coordinates exclusively.
+            for (sid, s) in plan.shards.iter().enumerate() {
+                if s.rows() > 0 {
+                    assert_eq!(plan.shard_of(s.coord_lo), sid);
+                    assert_eq!(plan.shard_of(s.coord_hi - 1), sid);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn imbalance_is_bounded_and_exact_on_known_histograms() {
+    // imbalance = heaviest / (total/k): 1.0 means perfect balance, k
+    // means everything on one shard; both extremes must be reachable.
+    let uniform = vec![10usize; 64];
+    let plan = ShardPlan::from_counts(0, &uniform, 4);
+    assert!((plan.imbalance() - 1.0).abs() < 1e-9, "{}", plan.imbalance());
+
+    let mut hot = vec![0usize; 64];
+    hot[17] = 1_000;
+    let plan = ShardPlan::from_counts(0, &hot, 4);
+    assert!((plan.imbalance() - 4.0).abs() < 1e-9, "{}", plan.imbalance());
+
+    forall("shard_imbalance_range", 24, |rng| {
+        let counts: Vec<usize> = (0..rng.range(1, 200)).map(|_| rng.below(100) as usize).collect();
+        let total: usize = counts.iter().sum();
+        for k in 1..=8usize {
+            let plan = ShardPlan::from_counts(0, &counts, k);
+            let imb = plan.imbalance();
+            if total > 0 {
+                assert!(imb >= 1.0 - 1e-9, "imbalance {imb} below 1");
+                assert!(imb <= k as f64 + 1e-9, "imbalance {imb} above k={k}");
+            } else {
+                assert_eq!(imb, 1.0, "empty histogram is trivially balanced");
+            }
+        }
+    });
+}

@@ -1,20 +1,26 @@
 //! E11 — simulation-engine comparison on the DSE scoring hot path: a
-//! sharded sweep ([`ptmc::shard::ShardedSweep`]) scores a grid of
-//! controller candidates under the legacy lockstep core and under the
-//! event-driven batched core, on the same prepared traces.
+//! sharded sweep ([`ptmc::shard::ShardedSweep`]) scores a cache-module
+//! grid and a DMA grid under the legacy lockstep core, the event-driven
+//! batched core, and — for the cache module — the one-pass grid core
+//! (stack-distance classification + miss-only replay,
+//! `ptmc::engine::grid`), all on the same prepared traces.
 //!
-//! The event core wins three ways, all structural: (1) delta-encoded
-//! compressed traces stream ~6x less trace data per replay, (2) the K
-//! per-shard replays run on concurrent host threads (independent fresh
-//! controller instances), and (3) the sequential remap pass — identical
-//! for every candidate sharing (DRAM, remapper) knobs, i.e. the whole
-//! cache/DMA grid — is memoized instead of re-simulated per candidate.
-//! Scores are asserted bit-identical; only wall-clock differs.  Target:
-//! >= 3x on the candidate-scoring loop.
+//! The event core wins over lockstep three ways (compressed traces,
+//! concurrent shard replay, memoized remap — see PR 2).  The grid core
+//! wins over event structurally on the cache module: instead of
+//! replaying every trace once **per candidate**, one classification
+//! pass scores all `(num_lines, assoc)` candidates simultaneously
+//! (Mattson inclusion over per-set LRU stacks), and each candidate then
+//! replays only its ~miss stream plus the DMA runs, with hit runs
+//! folded to `n * hit_latency` in closed form.  Scores are asserted
+//! bit-identical across all three cores; only wall-clock differs.
+//! Target: grid >= 5x over event on the cache-module sweep.
 //!
-//! Emits `bench_results/dse_engines.csv` and a machine-readable
-//! `bench_results/engine_speedup.json` line for the bench trajectory.
+//! Emits `bench_results/dse_engines.csv`,
+//! `bench_results/engine_speedup.json`, and a repo-root `BENCH_dse.json`
+//! so the bench trajectory is machine-readable across PRs.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use ptmc::bench::{fmt_cycles, fmt_speedup, sized, smoke, Table};
@@ -23,22 +29,28 @@ use ptmc::engine::EngineKind;
 use ptmc::shard::ShardedSweep;
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
 
-/// The candidate grid: a cache sweep plus a DMA sweep, holding the
-/// remapper fixed — exactly the per-module DSE shape (§5.3).
-fn grid(elem_bytes: usize) -> Vec<ControllerConfig> {
+/// The cache-module grid (§5.3 module 1 shape): line width fixed,
+/// capacity x associativity swept — 16 candidates.
+fn cache_grid(elem_bytes: usize) -> (ControllerConfig, Vec<CacheConfig>) {
+    let base = ControllerConfig::default_for(elem_bytes);
     let mut grid = Vec::new();
     for &num_lines in &[256usize, 1024, 4096, 16384] {
-        for &assoc in &[2usize, 4] {
-            let mut cfg = ControllerConfig::default_for(elem_bytes);
-            cfg.cache = CacheConfig {
+        for &assoc in &[1usize, 2, 4, 8] {
+            grid.push(CacheConfig {
                 line_bytes: 64,
                 num_lines,
                 assoc,
-                hit_latency: 2,
-            };
-            grid.push(cfg);
+                hit_latency: base.cache.hit_latency,
+            });
         }
     }
+    (base, grid)
+}
+
+/// The DMA-module grid — 6 candidates (scored per candidate under all
+/// engines; the grid core specializes the cache module only).
+fn dma_grid(elem_bytes: usize) -> Vec<ControllerConfig> {
+    let mut grid = Vec::new();
     for &num_dmas in &[1usize, 2, 4] {
         for &buffer_bytes in &[1024usize, 8192] {
             let mut cfg = ControllerConfig::default_for(elem_bytes);
@@ -52,6 +64,21 @@ fn grid(elem_bytes: usize) -> Vec<ControllerConfig> {
         }
     }
     grid
+}
+
+/// Walk up from the current directory to the repo root (the directory
+/// holding ROADMAP.md) so BENCH_dse.json lands in one canonical place
+/// regardless of where cargo runs the bench binary.
+fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        }
+    }
 }
 
 fn main() {
@@ -69,87 +96,225 @@ fn main() {
         profile: Profile::Zipf { alpha_milli: 1250 },
         seed: 2026,
     });
-    let grid = grid(t.record_bytes());
+    let (base, caches) = cache_grid(t.record_bytes());
+    let dmas = dma_grid(t.record_bytes());
+    let cache_cfgs: Vec<ControllerConfig> = caches
+        .iter()
+        .map(|cc| {
+            let mut cfg = base.clone();
+            cfg.cache = *cc;
+            cfg
+        })
+        .collect();
 
     println!(
-        "preparing {workers}-worker sweep ({} candidate configs)...",
-        grid.len()
+        "preparing {workers}-worker sweeps ({} cache + {} DMA candidates)...",
+        caches.len(),
+        dmas.len()
     );
-    let sweep = ShardedSweep::prepare(&t, rank, workers);
 
-    // Warm both paths once (allocator, page cache) outside the clock.
-    let warm_cfg = ControllerConfig::default_for(t.record_bytes());
-    let warm_lockstep = sweep.makespan_with(&warm_cfg, EngineKind::Lockstep);
-    let warm_event = sweep.makespan_with(&warm_cfg, EngineKind::Event);
+    // Warm allocator and page cache once on a scratch sweep, asserting
+    // bit-identity before any timing means anything.  Every *timed*
+    // path below then runs on its own freshly prepared sweep so each
+    // engine pays its own remap-memo warm-up inside its clock (the
+    // PR 2 methodology): lockstep re-simulates remap per candidate by
+    // design, event and grid each warm the memo once per mode.
+    {
+        let scratch = ShardedSweep::prepare(&t, rank, workers);
+        let warm_lockstep = scratch.makespan_with(&base, EngineKind::Lockstep);
+        let warm_event = scratch.makespan_with(&base, EngineKind::Event);
+        assert_eq!(
+            warm_lockstep, warm_event,
+            "engines must be bit-identical before timing means anything"
+        );
+    }
+
+    // --- Cache-module sweep: the grid core's home turf. ---
+    let (cache_lockstep, cache_lockstep_wall, dma_lockstep, dma_lockstep_wall) = {
+        let sweep = ShardedSweep::prepare(&t, rank, workers);
+        let t0 = Instant::now();
+        let cache: Vec<u64> = cache_cfgs
+            .iter()
+            .map(|cfg| sweep.makespan_with(cfg, EngineKind::Lockstep))
+            .collect();
+        let cache_wall = t0.elapsed();
+        let t1 = Instant::now();
+        let dma: Vec<u64> = dmas
+            .iter()
+            .map(|cfg| sweep.makespan_with(cfg, EngineKind::Lockstep))
+            .collect();
+        (cache, cache_wall, dma, t1.elapsed())
+    };
+
+    let (cache_event, cache_event_wall, dma_event, dma_event_wall) = {
+        let sweep = ShardedSweep::prepare(&t, rank, workers);
+        let t0 = Instant::now();
+        let cache: Vec<u64> = cache_cfgs
+            .iter()
+            .map(|cfg| sweep.makespan_with(cfg, EngineKind::Event))
+            .collect();
+        let cache_wall = t0.elapsed();
+        let t1 = Instant::now();
+        let dma: Vec<u64> = dmas
+            .iter()
+            .map(|cfg| sweep.makespan_with(cfg, EngineKind::Event))
+            .collect();
+        (cache, cache_wall, dma, t1.elapsed())
+    };
+
+    let (cache_grid_scores, cache_grid_wall) = {
+        let sweep = ShardedSweep::prepare(&t, rank, workers);
+        let t2 = Instant::now();
+        (sweep.makespans_for_cache_grid(&base, &caches), t2.elapsed())
+    };
+
     assert_eq!(
-        warm_lockstep, warm_event,
-        "engines must be bit-identical before timing means anything"
+        cache_lockstep, cache_event,
+        "cache-module scores must be bit-identical (lockstep vs event)"
     );
-
-    // Fresh sweep for the timed event run so the remap memo starts
-    // cold and its warm-up is charged to the event side fairly.
-    let timed_sweep = ShardedSweep::prepare(&t, rank, workers);
-
-    let t0 = Instant::now();
-    let lockstep_scores: Vec<u64> = grid
-        .iter()
-        .map(|cfg| timed_sweep.makespan_with(cfg, EngineKind::Lockstep))
-        .collect();
-    let lockstep_wall = t0.elapsed();
-
-    let t1 = Instant::now();
-    let event_scores: Vec<u64> = grid
-        .iter()
-        .map(|cfg| timed_sweep.makespan_with(cfg, EngineKind::Event))
-        .collect();
-    let event_wall = t1.elapsed();
+    assert_eq!(
+        cache_event, cache_grid_scores,
+        "cache-module scores must be bit-identical (event vs grid)"
+    );
+    let best_idx = (0..cache_event.len())
+        .min_by_key(|&i| cache_event[i])
+        .unwrap();
+    let best_idx_grid = (0..cache_grid_scores.len())
+        .min_by_key(|&i| cache_grid_scores[i])
+        .unwrap();
+    assert_eq!(
+        best_idx, best_idx_grid,
+        "grid and event must select the same best cache configuration"
+    );
 
     assert_eq!(
-        lockstep_scores, event_scores,
-        "per-candidate scores must be bit-identical"
+        dma_lockstep, dma_event,
+        "DMA-module scores must be bit-identical"
     );
 
-    let mut tbl = Table::new(&["engine", "configs", "wall ms", "speedup", "best cycles"]);
-    let best = *lockstep_scores.iter().min().unwrap();
-    let speedup = lockstep_wall.as_secs_f64() / event_wall.as_secs_f64();
+    let event_speedup =
+        (cache_lockstep_wall + dma_lockstep_wall).as_secs_f64()
+            / (cache_event_wall + dma_event_wall).as_secs_f64();
+    let grid_speedup = cache_event_wall.as_secs_f64() / cache_grid_wall.as_secs_f64();
+
+    let mut tbl = Table::new(&["sweep", "engine", "configs", "wall ms", "speedup", "best cycles"]);
+    let ms = |d: std::time::Duration| format!("{:.0}", d.as_secs_f64() * 1e3);
+    let best_cache = *cache_event.iter().min().unwrap();
     tbl.row(&[
-        "lockstep (legacy)".into(),
-        grid.len().to_string(),
-        format!("{:.0}", lockstep_wall.as_secs_f64() * 1e3),
-        "1.00x".into(),
-        fmt_cycles(best),
+        "cache".into(),
+        "lockstep".into(),
+        caches.len().to_string(),
+        ms(cache_lockstep_wall),
+        fmt_speedup(cache_lockstep_wall.as_secs_f64() / cache_lockstep_wall.as_secs_f64()),
+        fmt_cycles(best_cache),
     ]);
     tbl.row(&[
-        "event (batched)".into(),
-        grid.len().to_string(),
-        format!("{:.0}", event_wall.as_secs_f64() * 1e3),
-        fmt_speedup(speedup),
-        fmt_cycles(*event_scores.iter().min().unwrap()),
+        "cache".into(),
+        "event".into(),
+        caches.len().to_string(),
+        ms(cache_event_wall),
+        fmt_speedup(cache_lockstep_wall.as_secs_f64() / cache_event_wall.as_secs_f64()),
+        fmt_cycles(best_cache),
+    ]);
+    tbl.row(&[
+        "cache".into(),
+        "grid (one-pass)".into(),
+        caches.len().to_string(),
+        ms(cache_grid_wall),
+        fmt_speedup(cache_lockstep_wall.as_secs_f64() / cache_grid_wall.as_secs_f64()),
+        fmt_cycles(best_cache),
+    ]);
+    let best_dma = *dma_event.iter().min().unwrap();
+    tbl.row(&[
+        "dma".into(),
+        "lockstep".into(),
+        dmas.len().to_string(),
+        ms(dma_lockstep_wall),
+        "1.00x".into(),
+        fmt_cycles(best_dma),
+    ]);
+    tbl.row(&[
+        "dma".into(),
+        "event".into(),
+        dmas.len().to_string(),
+        ms(dma_event_wall),
+        fmt_speedup(dma_lockstep_wall.as_secs_f64() / dma_event_wall.as_secs_f64()),
+        fmt_cycles(best_dma),
     ]);
     tbl.emit(
-        "E11 — DSE sweep scoring: lockstep vs event engine (identical scores)",
+        "E11 — DSE sweep scoring: lockstep vs event vs one-pass grid (identical scores)",
         Some(std::path::Path::new("bench_results/dse_engines.csv")),
     );
 
+    // Machine-readable trajectory: legacy engine_speedup.json line plus
+    // the richer repo-root BENCH_dse.json.
+    let per_candidate: Vec<String> = cache_event.iter().map(|c| c.to_string()).collect();
     let json = format!(
         "{{\"bench\":\"dse_engines\",\"nnz\":{nnz},\"workers\":{workers},\
          \"configs\":{},\"lockstep_ms\":{:.1},\"event_ms\":{:.1},\
-         \"speedup\":{speedup:.2}}}\n",
-        grid.len(),
-        lockstep_wall.as_secs_f64() * 1e3,
-        event_wall.as_secs_f64() * 1e3,
+         \"speedup\":{event_speedup:.2}}}\n",
+        caches.len() + dmas.len(),
+        (cache_lockstep_wall + dma_lockstep_wall).as_secs_f64() * 1e3,
+        (cache_event_wall + dma_event_wall).as_secs_f64() * 1e3,
+    );
+    let bench_json = format!(
+        "{{\n  \"bench\": \"dse_engines\",\n  \"pr\": 3,\n  \"nnz\": {nnz},\n  \
+         \"workers\": {workers},\n  \"rank\": {rank},\n  \"smoke\": {},\n  \
+         \"cache_sweep\": {{\n    \"configs\": {},\n    \
+         \"lockstep_ms\": {:.1},\n    \"event_ms\": {:.1},\n    \
+         \"grid_ms\": {:.1},\n    \"grid_vs_event_speedup\": {grid_speedup:.2},\n    \
+         \"best_index\": {best_idx},\n    \"per_candidate_cycles\": [{}]\n  }},\n  \
+         \"dma_sweep\": {{\n    \"configs\": {},\n    \"lockstep_ms\": {:.1},\n    \
+         \"event_ms\": {:.1}\n  }},\n  \
+         \"event_vs_lockstep_speedup\": {event_speedup:.2}\n}}\n",
+        smoke(),
+        caches.len(),
+        cache_lockstep_wall.as_secs_f64() * 1e3,
+        cache_event_wall.as_secs_f64() * 1e3,
+        cache_grid_wall.as_secs_f64() * 1e3,
+        per_candidate.join(", "),
+        dmas.len(),
+        dma_lockstep_wall.as_secs_f64() * 1e3,
+        dma_event_wall.as_secs_f64() * 1e3,
     );
     let _ = std::fs::create_dir_all("bench_results");
     if let Err(e) = std::fs::write("bench_results/engine_speedup.json", &json) {
         eprintln!("warning: failed to write engine_speedup.json: {e}");
     }
+    let bench_path = repo_root().join("BENCH_dse.json");
+    if let Err(e) = std::fs::write(&bench_path, &bench_json) {
+        eprintln!("warning: failed to write {}: {e}", bench_path.display());
+    } else {
+        println!("[bench trajectory written to {}]", bench_path.display());
+    }
     print!("{json}");
+    println!(
+        "cache sweep: grid {grid_speedup:.2}x over event; \
+         full sweep: event {event_speedup:.2}x over lockstep"
+    );
 
     if !smoke() {
-        if speedup < 3.0 {
-            println!("WARNING: event engine below the 3x target on this host ({speedup:.2}x)");
+        // The PR 3 acceptance claim.  Wall-clock ratios are host
+        // noise on loaded or low-core machines, so a shortfall warns
+        // by default and only fails under PTMC_BENCH_ENFORCE=1 (set it
+        // for acceptance runs on a quiet multi-core host).
+        if grid_speedup < 5.0 {
+            let msg =
+                format!("grid core below the 5x cache-sweep target: {grid_speedup:.2}x over event");
+            assert!(
+                std::env::var_os("PTMC_BENCH_ENFORCE").is_none(),
+                "{msg}"
+            );
+            println!("WARNING: {msg}");
         } else {
-            println!("event engine >= 3x target met ({speedup:.2}x). OK");
+            println!("grid core >= 5x cache-sweep target met ({grid_speedup:.2}x). OK");
+        }
+        if event_speedup < 3.0 {
+            println!(
+                "WARNING: event engine below the 3x target on this host ({event_speedup:.2}x)"
+            );
+        } else {
+            println!("event engine >= 3x target met ({event_speedup:.2}x). OK");
         }
     }
 }

@@ -32,11 +32,7 @@ fn main() {
         profile: &profile,
         rank,
     };
-    let sim_eval = Evaluator::CycleSim {
-        tensor: &t,
-        factors: &factors,
-        engine: EngineKind::Event,
-    };
+    let sim_eval = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
 
     // Grid: cache geometry x pointer budget (the params with the largest
     // time impact).

@@ -42,7 +42,12 @@ impl CacheConfig {
         self.num_lines / self.assoc
     }
 
-    fn validate(&self) {
+    /// The index/tag geometry of this configuration ([`LineGeom`]).
+    pub fn geom(&self) -> LineGeom {
+        LineGeom::new(self.line_bytes, self.num_sets())
+    }
+
+    pub(crate) fn validate(&self) {
         assert!(self.line_bytes.is_power_of_two(), "line_bytes must be 2^k");
         assert!(self.assoc >= 1 && self.assoc <= self.num_lines);
         assert_eq!(
@@ -54,6 +59,65 @@ impl CacheConfig {
             self.num_sets().is_power_of_two(),
             "num_sets must be a power of two"
         );
+    }
+}
+
+/// Power-of-two index/tag arithmetic of a cache geometry, shared by the
+/// scalar path ([`CacheEngine::load`]), the batched event kernel
+/// ([`CacheEngine::load_run`]), and the one-pass grid classifier
+/// ([`crate::engine::grid`]) so the three cores cannot disagree on
+/// which set and tag an address maps to.  All divisions/modulos the
+/// validated configuration performs are exactly these shifts and masks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LineGeom {
+    line_shift: u32,
+    set_mask: u64,
+    tag_shift: u32,
+}
+
+impl LineGeom {
+    /// Geometry for `line_bytes`-wide lines over `num_sets` sets (both
+    /// must be powers of two).
+    pub fn new(line_bytes: usize, num_sets: usize) -> Self {
+        assert!(line_bytes.is_power_of_two(), "line_bytes must be 2^k");
+        assert!(num_sets.is_power_of_two(), "num_sets must be 2^k");
+        LineGeom {
+            line_shift: line_bytes.trailing_zeros(),
+            set_mask: num_sets as u64 - 1,
+            tag_shift: num_sets.trailing_zeros(),
+        }
+    }
+
+    /// First line index a `addr` access touches (`addr / line_bytes`).
+    pub fn first_line(&self, addr: u64) -> u64 {
+        addr >> self.line_shift
+    }
+
+    /// Last line index an `addr`/`bytes` access touches
+    /// (`(addr + bytes - 1) / line_bytes`; `bytes` must be > 0).
+    pub fn last_line(&self, addr: u64, bytes: usize) -> u64 {
+        (addr + bytes as u64 - 1) >> self.line_shift
+    }
+
+    /// Number of lines an `addr`/`bytes` access touches.
+    pub fn line_count(&self, addr: u64, bytes: usize) -> u64 {
+        self.last_line(addr, bytes) - self.first_line(addr) + 1
+    }
+
+    /// Set index of a line (`line % num_sets`).
+    pub fn set(&self, line: u64) -> usize {
+        (line & self.set_mask) as usize
+    }
+
+    /// Tag of a line (`line / num_sets`).
+    pub fn tag(&self, line: u64) -> u64 {
+        line >> self.tag_shift
+    }
+
+    /// Rebuild a line index from its set and tag
+    /// (`tag * num_sets + set`) — the writeback address math.
+    pub fn line_of(&self, set: usize, tag: u64) -> u64 {
+        (tag << self.tag_shift) | set as u64
     }
 }
 
@@ -160,9 +224,9 @@ impl CacheEngine {
 
     fn transfer(&mut self, dram: &mut Dram, addr: u64, bytes: usize, now: u64, write: bool) -> u64 {
         assert!(bytes > 0);
-        let lb = self.cfg.line_bytes as u64;
-        let first = addr / lb;
-        let last = (addr + bytes as u64 - 1) / lb;
+        let geom = self.cfg.geom();
+        let first = geom.first_line(addr);
+        let last = geom.last_line(addr, bytes);
         let mut t = now;
         for line in first..=last {
             t = self.access_line(dram, line, t, write);
@@ -187,20 +251,18 @@ impl CacheEngine {
     ) -> u64 {
         assert!(bytes > 0);
         // line_bytes and num_sets are validated powers of two, so the
-        // scalar path's `/` and `%` are exactly these shifts and masks.
-        let line_shift = self.cfg.line_bytes.trailing_zeros();
-        let set_mask = (self.cfg.num_sets() as u64) - 1;
-        let set_shift = (self.cfg.num_sets() as u64).trailing_zeros();
-        let span = (bytes - 1) as u64;
+        // scalar path's `/` and `%` are exactly the [`LineGeom`] shifts
+        // and masks (the same arithmetic the grid classifier uses).
+        let geom = self.cfg.geom();
         let mut t = now;
         for &w in words {
             let addr = base + 4 * w as u64;
-            let first = addr >> line_shift;
-            let last = (addr + span) >> line_shift;
+            let first = geom.first_line(addr);
+            let last = geom.last_line(addr, bytes);
             let mut line = first;
             loop {
-                let set = (line & set_mask) as usize;
-                let tag = line >> set_shift;
+                let set = geom.set(line);
+                let tag = geom.tag(line);
                 t = self.serve_line(dram, line, set, tag, t, false);
                 if line == last {
                     break;
@@ -213,9 +275,9 @@ impl CacheEngine {
 
     /// Access one line; returns completion cycle.
     fn access_line(&mut self, dram: &mut Dram, line_idx: u64, now: u64, write: bool) -> u64 {
-        let n_sets = self.cfg.num_sets() as u64;
-        let set = (line_idx % n_sets) as usize;
-        let tag = line_idx / n_sets;
+        let geom = self.cfg.geom();
+        let set = geom.set(line_idx);
+        let tag = geom.tag(line_idx);
         self.serve_line(dram, line_idx, set, tag, now, write)
     }
 
@@ -254,7 +316,7 @@ impl CacheEngine {
             self.stats.evictions += 1;
             if victim.dirty {
                 // Writeback: the victim's line goes out before the fill.
-                let victim_line = victim.tag * self.cfg.num_sets() as u64 + set as u64;
+                let victim_line = self.cfg.geom().line_of(set, victim.tag);
                 t = dram.access(
                     victim_line * self.cfg.line_bytes as u64,
                     self.cfg.line_bytes,

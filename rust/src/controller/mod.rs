@@ -13,7 +13,7 @@ pub mod cache;
 pub mod dma;
 pub mod remapper;
 
-pub use cache::{CacheConfig, CacheEngine, CacheStats};
+pub use cache::{CacheConfig, CacheEngine, CacheStats, LineGeom};
 pub use dma::{DmaConfig, DmaEngine, DmaStats};
 pub use remapper::{RemapperConfig, RemapperStats, TensorRemapper};
 

@@ -8,14 +8,110 @@
 //! exactly the paper's proposal), scoring each candidate with either the
 //! fast analytic PMS or the cycle-level simulator, and rejecting
 //! configurations that do not fit the device ([`crate::fpga`]).
+//!
+//! Candidates within one module sweep are independent, so
+//! [`explore`] scores each module's grid as a batch
+//! ([`Evaluator::score_batch`]): candidates fan out across host threads,
+//! and — under the grid engine ([`EngineKind::Grid`]) — the whole
+//! cache-module grid is classified in **one trace pass** by the
+//! stack-distance grid core ([`crate::engine::grid`]), leaving only each
+//! candidate's miss stream to be timed.  Scores are bit-identical to
+//! per-candidate scoring under either classic engine.
 
-use crate::controller::{CacheConfig, ControllerConfig, DmaConfig, MemLayout, MemoryController};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use crate::controller::{
+    CacheConfig, ControllerConfig, DmaConfig, MemLayout, MemoryController, RemapperConfig,
+};
 use crate::cpd::linalg::Mat;
-use crate::engine::EngineKind;
+use crate::dram::DramConfig;
+use crate::engine::{EngineKind, GridClassification, PreparedTrace};
 use crate::fpga::{self, Device};
 use crate::mttkrp::{approach1, Tracing};
 use crate::pms::{self, TensorProfile};
-use crate::tensor::SparseTensor;
+use crate::tensor::{remap, Coord, SparseTensor};
+
+/// Key of one memoized remap-pass simulation (see
+/// [`crate::shard::ShardedSweep`], which uses the same keying).
+type RemapKey = (usize, DramConfig, RemapperConfig);
+
+/// Per-mode precomputation of a CycleSim scoring pass under one
+/// remapper pointer budget: the mode column the (simulated) remap pass
+/// reads — a snapshot of the tensor *before* this mode's host remap —
+/// and the compiled Approach-1 trace of the remapped tensor.
+struct ModePrep {
+    remap_col: Vec<Coord>,
+    trace: PreparedTrace,
+}
+
+/// Interior-mutable memo shared by every scoring of one
+/// [`Evaluator::CycleSim`]: the remapped tensor is cloned and
+/// re-remapped **once** instead of once per candidate (the host
+/// permutation `remap` applies is a counting sort — independent of
+/// every controller knob, including the pointer budget, which only
+/// changes the *simulated* pointer traffic), and the remap-pass
+/// simulation — identical for every candidate sharing (mode, DRAM,
+/// remapper) knobs, i.e. the whole cache/DMA grid — runs once per key
+/// (mirroring `ShardedSweep::remap_memo`).
+#[derive(Default)]
+pub struct SimMemo {
+    prep: Mutex<Option<Arc<Vec<ModePrep>>>>,
+    remap: Mutex<HashMap<RemapKey, u64>>,
+}
+
+impl SimMemo {
+    /// The per-mode traces + remap columns, built on first use: one
+    /// tensor clone, remapped mode by mode in sweep order (the state
+    /// the original per-candidate loop reproduced from scratch for
+    /// every single candidate).
+    fn prep(&self, t: &SparseTensor, factors: &[Mat], layout: &MemLayout) -> Arc<Vec<ModePrep>> {
+        if let Some(p) = self.prep.lock().expect("prep memo poisoned").as_ref() {
+            return Arc::clone(p);
+        }
+        let mut tt = t.clone();
+        let n = tt.n_modes();
+        let built: Vec<ModePrep> = (0..n)
+            .map(|mode| {
+                let remap_col = tt.mode_col(mode).to_vec();
+                // The budget does not affect the data movement, only
+                // the (separately simulated) pointer traffic.
+                remap::remap(&mut tt, mode, usize::MAX);
+                let run = approach1::run(&tt, factors, mode, layout, Tracing::On);
+                ModePrep {
+                    remap_col,
+                    trace: PreparedTrace::new(run.trace),
+                }
+            })
+            .collect();
+        let mut memo = self.prep.lock().expect("prep memo poisoned");
+        Arc::clone(memo.get_or_insert_with(|| Arc::new(built)))
+    }
+
+    /// One mode's remap-pass cycles under `cfg`, on a fresh controller,
+    /// memoized per (mode, DRAM, remapper) key.
+    fn remap_cycles(
+        &self,
+        p: &ModePrep,
+        mode: usize,
+        mode_len: usize,
+        layout: &MemLayout,
+        cfg: &ControllerConfig,
+    ) -> u64 {
+        let key = (mode, cfg.dram.clone(), cfg.remapper);
+        if let Some(&c) = self.remap.lock().expect("remap memo poisoned").get(&key) {
+            return c;
+        }
+        let mut ctl = MemoryController::new(cfg.clone());
+        let cycles = ctl.remap_pass(&p.remap_col, mode_len, layout, 0, 1);
+        self.remap
+            .lock()
+            .expect("remap memo poisoned")
+            .insert(key, cycles);
+        cycles
+    }
+}
 
 /// How candidates are scored.
 pub enum Evaluator<'a> {
@@ -25,14 +121,20 @@ pub enum Evaluator<'a> {
         rank: usize,
     },
     /// Cycle-level simulation of a full Approach-1 sweep over a concrete
-    /// tensor (slow but exact; used to validate the PMS ranking).
-    /// `engine` selects the replay core ([`crate::engine`]): both
-    /// produce identical scores; `Event` replays the compiled trace
-    /// through the batched kernels.
+    /// tensor (slow but exact; used to validate the PMS ranking).  The
+    /// score is the sum over modes of a fresh-controller remap pass plus
+    /// a fresh-controller trace replay — the same phase model
+    /// [`crate::shard::ShardedSweep::makespan`] uses — so both phases
+    /// memoize across candidates ([`SimMemo`]).  `engine` selects the
+    /// replay core ([`crate::engine`]): all cores produce identical
+    /// scores; `Grid` additionally scores whole cache-module batches in
+    /// one classification pass ([`Evaluator::score_batch`]).  Construct
+    /// with [`Evaluator::cycle_sim`] (or supply `SimMemo::default()`).
     CycleSim {
         tensor: &'a SparseTensor,
         factors: &'a [Mat],
         engine: EngineKind,
+        memo: SimMemo,
     },
     /// Sharded cycle-level simulation ([`crate::shard`]): every candidate
     /// configuration is evaluated as K per-shard controller instances
@@ -47,36 +149,30 @@ pub enum Evaluator<'a> {
     },
 }
 
+impl<'a> Evaluator<'a> {
+    /// A [`Evaluator::CycleSim`] with a fresh memo.
+    pub fn cycle_sim(
+        tensor: &'a SparseTensor,
+        factors: &'a [Mat],
+        engine: EngineKind,
+    ) -> Evaluator<'a> {
+        Evaluator::CycleSim {
+            tensor,
+            factors,
+            engine,
+            memo: SimMemo::default(),
+        }
+    }
+}
+
 impl Evaluator<'_> {
-    /// Score = estimated/measured total cycles (lower is better), or
-    /// `None` if the configuration does not fit `dev`.
-    pub fn score(&self, cfg: &ControllerConfig, dev: &Device) -> Option<f64> {
+    /// True when `cfg` is realizable on `dev` under this evaluator's
+    /// deployment model.
+    pub fn feasible(&self, cfg: &ControllerConfig, dev: &Device) -> bool {
         if !fpga::estimate(cfg, dev).fits {
-            return None;
+            return false;
         }
         match self {
-            Evaluator::Pms { profile, rank } => {
-                Some(pms::estimate_with_rank(profile, cfg, dev, *rank).total_cycles())
-            }
-            Evaluator::CycleSim {
-                tensor,
-                factors,
-                engine,
-            } => {
-                let rank = factors[0].cols();
-                let layout =
-                    MemLayout::plan(tensor.dims(), tensor.nnz(), tensor.record_bytes(), rank);
-                let mut ctl = MemoryController::new(cfg.clone());
-                let mut total = 0u64;
-                let mut t = (*tensor).clone();
-                for mode in 0..t.n_modes() {
-                    ctl.remap_pass(t.mode_col(mode), t.dims()[mode], &layout, 0, 1);
-                    crate::tensor::remap::remap(&mut t, mode, cfg.remapper.max_pointers);
-                    let run = approach1::run(&t, factors, mode, &layout, Tracing::On);
-                    total = engine.replay_raw(&mut ctl, &run.trace);
-                }
-                Some(total as f64)
-            }
             Evaluator::ShardedSim { sweep } => {
                 // K concurrent controller instances must *all* fit the
                 // device: each needs a 1/K slice of the block budget
@@ -86,20 +182,270 @@ impl Evaluator<'_> {
                 // the configured bus must exist on the board.
                 let w = sweep.workers();
                 if w > dev.dram_channels || cfg.dram.channels > dev.dram_channels {
-                    return None;
+                    return false;
                 }
                 let slice = Device {
                     bram36: dev.bram36 / w,
                     uram: dev.uram / w,
                     ..*dev
                 };
-                if !fpga::estimate(cfg, &slice).fits {
-                    return None;
-                }
-                Some(sweep.makespan(cfg) as f64)
+                fpga::estimate(cfg, &slice).fits
             }
+            _ => true,
         }
     }
+
+    /// Score = estimated/measured total cycles (lower is better), or
+    /// `None` if the configuration does not fit `dev`.
+    pub fn score(&self, cfg: &ControllerConfig, dev: &Device) -> Option<f64> {
+        if !self.feasible(cfg, dev) {
+            return None;
+        }
+        Some(match self {
+            Evaluator::Pms { profile, rank } => {
+                pms::estimate_with_rank(profile, cfg, dev, *rank).total_cycles()
+            }
+            Evaluator::CycleSim {
+                tensor,
+                factors,
+                engine,
+                memo,
+            } => cycle_sim_score(tensor, factors, *engine, memo, cfg) as f64,
+            Evaluator::ShardedSim { sweep } => sweep.makespan(cfg) as f64,
+        })
+    }
+
+    /// Score a batch of candidate configurations; returns one score per
+    /// candidate in input order (`None` = does not fit the device).
+    /// Candidates are independent, so the generic path fans them out
+    /// across host threads; a **cache-module sweep** (all candidates
+    /// sharing DRAM/DMA/remapper knobs) under the grid engine is scored
+    /// by the one-pass grid core instead — same scores, one trace
+    /// classification for the whole batch.
+    pub fn score_batch(&self, cfgs: &[ControllerConfig], dev: &Device) -> Vec<Option<f64>> {
+        if cfgs.is_empty() {
+            return Vec::new();
+        }
+        if cfgs.len() >= 2 && cache_module_sweep(cfgs) {
+            match self {
+                Evaluator::CycleSim {
+                    tensor,
+                    factors,
+                    engine: EngineKind::Grid,
+                    memo,
+                } => return cycle_sim_grid_batch(tensor, factors, memo, cfgs, dev),
+                Evaluator::ShardedSim { sweep } if sweep.engine() == EngineKind::Grid => {
+                    return self.sharded_grid_batch(sweep, cfgs, dev)
+                }
+                _ => {}
+            }
+        }
+        // Prime the CycleSim memos sequentially — traces AND the
+        // remap-pass cycles of every key the batch will need — so the
+        // concurrent scorers below only ever hit the memo; otherwise N
+        // threads would race the check-then-insert and each re-simulate
+        // the identical remap pass.
+        if let Evaluator::CycleSim {
+            tensor,
+            factors,
+            memo,
+            ..
+        } = self
+        {
+            let rank = factors[0].cols();
+            let layout = MemLayout::plan(tensor.dims(), tensor.nnz(), tensor.record_bytes(), rank);
+            let mut primed: Vec<(DramConfig, RemapperConfig)> = Vec::new();
+            for cfg in cfgs {
+                if !self.feasible(cfg, dev) {
+                    continue;
+                }
+                let key = (cfg.dram.clone(), cfg.remapper);
+                if primed.contains(&key) {
+                    continue;
+                }
+                primed.push(key);
+                let prep = memo.prep(tensor, factors, &layout);
+                for (mode, p) in prep.iter().enumerate() {
+                    memo.remap_cycles(p, mode, tensor.dims()[mode], &layout, cfg);
+                }
+            }
+        }
+        // A sharded makespan already fans out one thread per shard;
+        // adding an outer candidate layer would only oversubscribe the
+        // host, so ShardedSim keeps the sequential candidate loop.
+        if matches!(self, Evaluator::ShardedSim { .. }) {
+            return cfgs.iter().map(|c| self.score(c, dev)).collect();
+        }
+        parallel_indexed(cfgs.len(), |i| self.score(&cfgs[i], dev))
+    }
+
+    /// Cache-module batch under the sharded evaluator: feasibility per
+    /// candidate, then one grid classification per shard trace
+    /// ([`crate::shard::ShardedSweep::makespans_for_cache_grid`]).
+    fn sharded_grid_batch(
+        &self,
+        sweep: &crate::shard::ShardedSweep<'_>,
+        cfgs: &[ControllerConfig],
+        dev: &Device,
+    ) -> Vec<Option<f64>> {
+        let feasible: Vec<bool> = cfgs.iter().map(|c| self.feasible(c, dev)).collect();
+        let caches: Vec<CacheConfig> = cfgs
+            .iter()
+            .zip(&feasible)
+            .filter(|&(_, &ok)| ok)
+            .map(|(c, _)| c.cache)
+            .collect();
+        if caches.is_empty() {
+            return vec![None; cfgs.len()];
+        }
+        let base = cfgs
+            .iter()
+            .zip(&feasible)
+            .find(|&(_, &ok)| ok)
+            .map(|(c, _)| c.clone())
+            .expect("at least one feasible candidate");
+        let scores = sweep.makespans_for_cache_grid(&base, &caches);
+        let mut it = scores.into_iter();
+        feasible
+            .iter()
+            .map(|&ok| {
+                if ok {
+                    Some(it.next().expect("one grid score per feasible candidate") as f64)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+}
+
+/// CycleSim score of one configuration: Σ over modes of (memoized
+/// fresh-controller remap pass + fresh-controller trace replay).
+fn cycle_sim_score(
+    tensor: &SparseTensor,
+    factors: &[Mat],
+    engine: EngineKind,
+    memo: &SimMemo,
+    cfg: &ControllerConfig,
+) -> u64 {
+    let rank = factors[0].cols();
+    let layout = MemLayout::plan(tensor.dims(), tensor.nnz(), tensor.record_bytes(), rank);
+    let prep = memo.prep(tensor, factors, &layout);
+    let mut total = 0u64;
+    for (mode, p) in prep.iter().enumerate() {
+        total += memo.remap_cycles(p, mode, tensor.dims()[mode], &layout, cfg);
+        let mut ctl = MemoryController::new(cfg.clone());
+        total += match engine {
+            EngineKind::Lockstep => ctl.replay(p.trace.raw()),
+            EngineKind::Event | EngineKind::Grid => ctl.replay_events(p.trace.compressed()),
+        };
+    }
+    total
+}
+
+/// Cache-module batch under CycleSim + grid engine: one classification
+/// pass per mode trace scores every feasible candidate; per-candidate
+/// miss-only replays fan out across host threads.
+fn cycle_sim_grid_batch(
+    tensor: &SparseTensor,
+    factors: &[Mat],
+    memo: &SimMemo,
+    cfgs: &[ControllerConfig],
+    dev: &Device,
+) -> Vec<Option<f64>> {
+    let feasible: Vec<bool> = cfgs.iter().map(|c| fpga::estimate(c, dev).fits).collect();
+    let caches: Vec<CacheConfig> = cfgs
+        .iter()
+        .zip(&feasible)
+        .filter(|&(_, &ok)| ok)
+        .map(|(c, _)| c.cache)
+        .collect();
+    if caches.is_empty() {
+        return vec![None; cfgs.len()];
+    }
+    let base = cfgs
+        .iter()
+        .zip(&feasible)
+        .find(|&(_, &ok)| ok)
+        .map(|(c, _)| c.clone())
+        .expect("at least one feasible candidate");
+    let rank = factors[0].cols();
+    let layout = MemLayout::plan(tensor.dims(), tensor.nnz(), tensor.record_bytes(), rank);
+    let prep = memo.prep(tensor, factors, &layout);
+    // The remap pass never touches the Cache Engine: one memoized value
+    // serves the entire batch.
+    let remap_total: u64 = prep
+        .iter()
+        .enumerate()
+        .map(|(mode, p)| memo.remap_cycles(p, mode, tensor.dims()[mode], &layout, &base))
+        .sum();
+    let mut compute = vec![0u64; caches.len()];
+    for p in prep.iter() {
+        let cls = GridClassification::classify(p.trace.compressed(), &caches);
+        let per: Vec<u64> = parallel_indexed(caches.len(), |ci| {
+            let mut cfg = base.clone();
+            cfg.cache = caches[ci];
+            cls.replay(ci, p.trace.compressed(), &cfg).cycles
+        });
+        for (t, c) in compute.iter_mut().zip(per) {
+            *t += c;
+        }
+    }
+    let mut it = compute.into_iter();
+    feasible
+        .iter()
+        .map(|&ok| {
+            if ok {
+                Some((remap_total + it.next().expect("one score per feasible candidate")) as f64)
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// True when every candidate shares the non-cache knobs of the first —
+/// the shape of a cache-module sweep.
+fn cache_module_sweep(cfgs: &[ControllerConfig]) -> bool {
+    let base = &cfgs[0];
+    cfgs.iter()
+        .all(|c| c.dram == base.dram && c.dma == base.dma && c.remapper == base.remapper)
+}
+
+/// Run `f(i)` for `i in 0..n` on up to `available_parallelism` scoped
+/// host threads (contiguous chunks); results come back in index order,
+/// so callers are deterministic regardless of thread timing.
+fn parallel_indexed<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let f = &f;
+    let chunks: Vec<Vec<T>> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .step_by(chunk)
+            .map(|start| {
+                let end = (start + chunk).min(n);
+                scope.spawn(move || (start..end).map(f).collect::<Vec<T>>())
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("dse scoring worker panicked"))
+            .collect()
+    });
+    chunks.into_iter().flatten().collect()
 }
 
 /// One explored point.
@@ -146,98 +492,109 @@ impl Default for Grids {
     }
 }
 
+/// A visited point with its device usage attached.
+fn point_at(cfg: ControllerConfig, cycles: f64, dev: &Device) -> Point {
+    let usage = fpga::estimate(&cfg, dev);
+    Point {
+        cfg,
+        cycles,
+        bram36: usage.bram36_used,
+        uram: usage.uram_used,
+    }
+}
+
+/// Batch-score one module's candidate list, recording visits/rejections
+/// and lowering the incumbent (first strictly-better candidate wins
+/// ties exactly like the sequential sweep did).
+fn sweep_module(
+    eval: &Evaluator<'_>,
+    dev: &Device,
+    cands: Vec<ControllerConfig>,
+    best: &mut Point,
+    visited: &mut Vec<Point>,
+    rejected: &mut usize,
+) {
+    let scores = eval.score_batch(&cands, dev);
+    for (cfg, score) in cands.into_iter().zip(scores) {
+        match score {
+            None => *rejected += 1,
+            Some(cycles) => {
+                let p = point_at(cfg, cycles, dev);
+                visited.push(p.clone());
+                if cycles < best.cycles {
+                    *best = p;
+                }
+            }
+        }
+    }
+}
+
 /// Run the module-by-module exhaustive search starting from `base`.
 /// Order: Cache Engine grid, then DMA Engine, then Tensor Remapper —
-/// each module fixed to its best before the next is swept.
+/// each module fixed to its best before the next is swept.  Every
+/// module's grid is scored as one batch ([`Evaluator::score_batch`]).
 pub fn explore(
     base: &ControllerConfig,
     grids: &Grids,
     dev: &Device,
     eval: &Evaluator<'_>,
 ) -> Exploration {
-    let mut best_cfg = base.clone();
     let mut visited = Vec::new();
     let mut rejected = 0usize;
 
-    let consider =
-        |cfg: ControllerConfig, visited: &mut Vec<Point>, rejected: &mut usize| -> Option<Point> {
-            let usage = fpga::estimate(&cfg, dev);
-            match eval.score(&cfg, dev) {
-                None => {
-                    *rejected += 1;
-                    None
-                }
-                Some(cycles) => {
-                    let p = Point {
-                        cfg,
-                        cycles,
-                        bram36: usage.bram36_used,
-                        uram: usage.uram_used,
-                    };
-                    visited.push(p.clone());
-                    Some(p)
-                }
-            }
-        };
-
-    let mut best_point = consider(best_cfg.clone(), &mut visited, &mut rejected)
+    let base_cycles = eval
+        .score(base, dev)
         .expect("base configuration must fit the device");
+    let mut best_point = point_at(base.clone(), base_cycles, dev);
+    visited.push(best_point.clone());
 
     // --- Module 1: Cache Engine ---
+    let mut cands = Vec::new();
     for &line_bytes in &grids.cache_line_bytes {
         for &num_lines in &grids.cache_num_lines {
             for &assoc in &grids.cache_assoc {
                 if num_lines % assoc != 0 || !(num_lines / assoc).is_power_of_two() {
                     continue;
                 }
-                let mut cfg = best_cfg.clone();
+                let mut cfg = best_point.cfg.clone();
                 cfg.cache = CacheConfig {
                     line_bytes,
                     num_lines,
                     assoc,
                     hit_latency: cfg.cache.hit_latency,
                 };
-                if let Some(p) = consider(cfg, &mut visited, &mut rejected) {
-                    if p.cycles < best_point.cycles {
-                        best_point = p;
-                    }
-                }
+                cands.push(cfg);
             }
         }
     }
-    best_cfg = best_point.cfg.clone();
+    sweep_module(eval, dev, cands, &mut best_point, &mut visited, &mut rejected);
 
     // --- Module 2: DMA Engine ---
+    let mut cands = Vec::new();
     for &num_dmas in &grids.dma_num {
         for &buffers_per_dma in &grids.dma_buffers {
             for &buffer_bytes in &grids.dma_buffer_bytes {
-                let mut cfg = best_cfg.clone();
+                let mut cfg = best_point.cfg.clone();
                 cfg.dma = DmaConfig {
                     num_dmas,
                     buffers_per_dma,
                     buffer_bytes,
                     setup_cycles: cfg.dma.setup_cycles,
                 };
-                if let Some(p) = consider(cfg, &mut visited, &mut rejected) {
-                    if p.cycles < best_point.cycles {
-                        best_point = p;
-                    }
-                }
+                cands.push(cfg);
             }
         }
     }
-    best_cfg = best_point.cfg.clone();
+    sweep_module(eval, dev, cands, &mut best_point, &mut visited, &mut rejected);
 
     // --- Module 3: Tensor Remapper ---
+    let mut cands = Vec::new();
     for &max_pointers in &grids.remap_max_pointers {
-        let mut cfg = best_cfg.clone();
+        let mut cfg = best_point.cfg.clone();
         cfg.remapper.max_pointers = max_pointers;
-        if let Some(p) = consider(cfg, &mut visited, &mut rejected) {
-            if p.cycles < best_point.cycles {
-                best_point = p;
-            }
-        }
+        cands.push(cfg);
     }
+    sweep_module(eval, dev, cands, &mut best_point, &mut visited, &mut rejected);
 
     Exploration {
         best: best_point,
@@ -294,6 +651,32 @@ mod tests {
     }
 
     #[test]
+    fn score_batch_matches_sequential_scores() {
+        let t = tensor();
+        let profile = TensorProfile::measure(&t);
+        let eval = Evaluator::Pms {
+            profile: &profile,
+            rank: 16,
+        };
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let mut cands = Vec::new();
+        for &buffer_bytes in &[1024usize, 4096, 16384] {
+            let mut cfg = base.clone();
+            cfg.dma.buffer_bytes = buffer_bytes;
+            cands.push(cfg);
+        }
+        let mut big = base.clone();
+        big.cache.num_lines = 1 << 22; // never fits
+        big.cache.assoc = 1;
+        cands.push(big);
+        let batch = eval.score_batch(&cands, &dev);
+        let seq: Vec<Option<f64>> = cands.iter().map(|c| eval.score(c, &dev)).collect();
+        assert_eq!(batch, seq);
+        assert!(batch[3].is_none(), "oversized cache must be rejected");
+    }
+
+    #[test]
     fn cycle_sim_exploration_small_grid() {
         // Dims large enough that 256 cache lines thrash while 4096 hold
         // the zipf-hot factor rows (rank 16 -> one 64B line per row).
@@ -304,11 +687,7 @@ mod tests {
             seed: 78,
         });
         let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 16, 1)).collect();
-        let eval = Evaluator::CycleSim {
-            tensor: &t,
-            factors: &factors,
-            engine: crate::engine::EngineKind::Event,
-        };
+        let eval = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
         let base = ControllerConfig::default_for(t.record_bytes());
         let dev = Device::alveo_u250();
         let grids = Grids {
@@ -377,9 +756,9 @@ mod tests {
 
     #[test]
     fn cycle_sim_engines_score_identically() {
-        // The event core is an execution strategy, not a model change:
-        // the same configuration must score to the exact same cycle
-        // count under both engines, including remap phases.
+        // The event and grid cores are execution strategies, not model
+        // changes: the same configuration must score to the exact same
+        // cycle count under every engine, including remap phases.
         let t = tensor();
         let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 2)).collect();
         let dev = Device::alveo_u250();
@@ -387,22 +766,91 @@ mod tests {
         cfg.cache.num_lines = 512;
         for max_pointers in [1usize << 4, 1 << 18] {
             cfg.remapper.max_pointers = max_pointers;
-            let lockstep = Evaluator::CycleSim {
-                tensor: &t,
-                factors: &factors,
-                engine: crate::engine::EngineKind::Lockstep,
-            }
-            .score(&cfg, &dev)
-            .unwrap();
-            let event = Evaluator::CycleSim {
-                tensor: &t,
-                factors: &factors,
-                engine: crate::engine::EngineKind::Event,
-            }
-            .score(&cfg, &dev)
-            .unwrap();
-            assert_eq!(lockstep, event, "engines diverged at {max_pointers} pointers");
+            let scores: Vec<f64> = [EngineKind::Lockstep, EngineKind::Event, EngineKind::Grid]
+                .iter()
+                .map(|&e| {
+                    Evaluator::cycle_sim(&t, &factors, e)
+                        .score(&cfg, &dev)
+                        .unwrap()
+                })
+                .collect();
+            assert_eq!(scores[0], scores[1], "event diverged at {max_pointers}");
+            assert_eq!(scores[0], scores[2], "grid diverged at {max_pointers}");
         }
+    }
+
+    #[test]
+    fn grid_exploration_matches_event_exploration_exactly() {
+        // The one-pass cache-grid batch must not change a single score:
+        // full explore() under the grid engine returns the same visited
+        // points and the same winner as under the event engine.
+        let t = tensor();
+        let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 3)).collect();
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let grids = Grids {
+            cache_line_bytes: vec![32, 64],
+            cache_num_lines: vec![256, 1024],
+            cache_assoc: vec![2, 4],
+            dma_num: vec![1, 2],
+            dma_buffers: vec![2],
+            dma_buffer_bytes: vec![4096],
+            remap_max_pointers: vec![1 << 10, 1 << 18],
+        };
+        let ev_event = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
+        let ev_grid = Evaluator::cycle_sim(&t, &factors, EngineKind::Grid);
+        let ex_event = explore(&base, &grids, &dev, &ev_event);
+        let ex_grid = explore(&base, &grids, &dev, &ev_grid);
+        assert_eq!(ex_event.visited.len(), ex_grid.visited.len());
+        assert_eq!(ex_event.rejected, ex_grid.rejected);
+        for (a, b) in ex_event.visited.iter().zip(&ex_grid.visited) {
+            assert_eq!(a.cycles, b.cycles, "scores diverged between engines");
+        }
+        assert_eq!(ex_event.best.cycles, ex_grid.best.cycles);
+        assert_eq!(ex_event.best.cfg.cache, ex_grid.best.cfg.cache);
+        assert_eq!(ex_event.best.cfg.dma, ex_grid.best.cfg.dma);
+    }
+
+    #[test]
+    fn sharded_grid_engine_matches_event_scores() {
+        let t = generate(&SynthConfig {
+            dims: vec![500, 400, 300],
+            nnz: 6_000,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed: 81,
+        });
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let sweep_grid = crate::shard::ShardedSweep::prepare_with_engine(
+            &t,
+            8,
+            2,
+            EngineKind::Grid,
+        );
+        let sweep_event = crate::shard::ShardedSweep::prepare_with_engine(
+            &t,
+            8,
+            2,
+            EngineKind::Event,
+        );
+        let ev_grid = Evaluator::ShardedSim { sweep: &sweep_grid };
+        let ev_event = Evaluator::ShardedSim { sweep: &sweep_event };
+        let mut cands = Vec::new();
+        for &num_lines in &[256usize, 1024, 4096] {
+            let mut cfg = base.clone();
+            cfg.cache.num_lines = num_lines;
+            cands.push(cfg);
+        }
+        // One infeasible candidate mid-batch keeps the index mapping
+        // honest.
+        let mut big = base.clone();
+        big.cache.num_lines = 1 << 22;
+        big.cache.assoc = 1;
+        cands.insert(1, big);
+        let grid_scores = ev_grid.score_batch(&cands, &dev);
+        let event_scores = ev_event.score_batch(&cands, &dev);
+        assert_eq!(grid_scores, event_scores);
+        assert!(grid_scores[1].is_none());
     }
 
     #[test]

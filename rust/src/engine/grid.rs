@@ -1,0 +1,685 @@
+//! Grid simulation core (S20): single-pass multi-configuration cache
+//! classification + miss-only timing replay — the DSE cache-module
+//! sweep's fast path.
+//!
+//! The insight: for a set-associative cache with true-LRU replacement,
+//! whether an access hits is **timing-independent** and obeys Mattson's
+//! inclusion property — the content of an A-way set is exactly the A
+//! most-recently-used distinct lines mapping to that set.  So one pass
+//! over the trace's cache-class accesses, maintaining a per-set LRU
+//! *stack* (recency-ordered distinct lines), classifies every
+//! `(num_lines, assoc)` candidate **simultaneously**: a candidate with
+//! `S = num_lines / assoc` sets and associativity `A` hits exactly when
+//! the accessed line sits at stack depth `< A` in its `S`-set stack.
+//! One pass is needed per distinct `line_bytes` value (the line-index
+//! sequence changes), and candidates sharing a set count share a stack.
+//!
+//! The pass records, per candidate, only the **miss stream**: for each
+//! miss, how many hits preceded it, the line to fill, and — because the
+//! stack entry at depth `A-1` is precisely the A-way set's LRU victim —
+//! whether the miss evicts and whether the victim is dirty (writeback).
+//! Dirty state is tracked per candidate as a bitmask on each stack
+//! entry, so `CachedStore` write-allocate/write-back traffic classifies
+//! exactly too.
+//!
+//! [`GridClassification::replay`] then reproduces a candidate's full
+//! controller timing by driving **only** that miss stream (plus the
+//! cache-independent DMA runs) through the real [`Dram`] and
+//! [`DmaEngine`] models, folding every run of `n` hits into
+//! `n * hit_latency` in closed form.  The replay performs the identical
+//! DRAM access sequence the lockstep core would — same misses, same
+//! writeback-before-fill ordering, same FIFO clock threading — so its
+//! cycle count and every statistics counter are **bit-identical** to
+//! [`MemoryController::replay`](crate::controller::MemoryController)
+//! (enforced on a randomized corpus by `tests/differential.rs` and
+//! `tests/grid_props.rs`).
+
+use super::trace::Run;
+use super::CompressedTrace;
+use crate::controller::{
+    Access, CacheConfig, CacheStats, ControllerConfig, ControllerStats, DmaEngine, DmaStats,
+    LineGeom,
+};
+use crate::dram::{Dram, DramStats};
+
+/// One recorded miss of one candidate configuration: the `hits_before`
+/// cache-class line accesses since the previous miss all hit (and cost
+/// `hit_latency` each); this access misses on `line`, evicting the
+/// candidate set's LRU victim (`victim_line`) if the set was full, with
+/// a dirty-victim writeback preceding the fill when `writeback` is set.
+#[derive(Debug, Clone, Copy)]
+struct MissRec {
+    hits_before: u64,
+    line: u64,
+    victim_line: u64,
+    evicted: bool,
+    writeback: bool,
+}
+
+/// One candidate's classification result: its miss stream plus the
+/// counters a full replay would have accumulated.
+#[derive(Debug, Clone, Default)]
+struct MissStream {
+    recs: Vec<MissRec>,
+    /// Hits since the last recorded miss (classification scratch; the
+    /// replay derives trailing hits from the pass's total line count).
+    open_hits: u64,
+    evictions: u64,
+    writebacks: u64,
+}
+
+/// One classification pass: everything that depends only on
+/// `line_bytes`, shared by all candidates with that line width.
+#[derive(Debug, Clone)]
+struct PassInfo {
+    line_bytes: usize,
+    /// Per compressed-trace run index: cache-class line accesses inside
+    /// that run (meaningful for `Run::Cached`; verbatim runs are walked
+    /// per access at replay time).
+    run_lines: Vec<u64>,
+    /// Total cache-class line accesses in the trace.
+    total_lines: u64,
+}
+
+/// All candidates sharing one `(line_bytes, num_sets)` pair: one LRU
+/// stack array serves every associativity at this set count.  Stacks
+/// are truncated to the largest candidate associativity (`cap`) —
+/// deeper entries are misses for every candidate by inclusion.
+struct SetGroup {
+    geom: LineGeom,
+    cap: usize,
+    /// `(assoc, global candidate index, dirty-mask bit)` per candidate.
+    cands: Vec<(usize, usize, u32)>,
+    /// Per stack depth `d`: dirty-mask bits of candidates with
+    /// `assoc > d` (the candidates that *hit* at depth `d`).
+    gt_mask: Vec<u32>,
+    all_mask: u32,
+    /// Flattened per-set stacks: `tags[set * cap + depth]`.
+    tags: Vec<u64>,
+    /// Per-entry dirty bitmask, one bit per candidate in this group.
+    dirty: Vec<u32>,
+    /// Current stack depth per set.
+    lens: Vec<u32>,
+}
+
+impl SetGroup {
+    fn new(line_bytes: usize, num_sets: usize, assocs: &[(usize, usize)]) -> Self {
+        assert!(
+            assocs.len() <= 32,
+            "at most 32 candidates may share one (line_bytes, num_sets) group"
+        );
+        let cap = assocs.iter().map(|&(a, _)| a).max().expect("non-empty");
+        let cands: Vec<(usize, usize, u32)> = assocs
+            .iter()
+            .enumerate()
+            .map(|(bit, &(assoc, ci))| (assoc, ci, 1u32 << bit))
+            .collect();
+        let gt_mask: Vec<u32> = (0..cap)
+            .map(|d| {
+                cands
+                    .iter()
+                    .filter(|&&(a, _, _)| a > d)
+                    .map(|&(_, _, bit)| bit)
+                    .fold(0u32, |m, b| m | b)
+            })
+            .collect();
+        let all_mask = cands.iter().map(|&(_, _, bit)| bit).fold(0u32, |m, b| m | b);
+        SetGroup {
+            geom: LineGeom::new(line_bytes, num_sets),
+            cap,
+            cands,
+            gt_mask,
+            all_mask,
+            tags: vec![0; num_sets * cap],
+            dirty: vec![0; num_sets * cap],
+            lens: vec![0; num_sets],
+        }
+    }
+
+    /// Classify one cache-class line access for every candidate in the
+    /// group, recording miss events, then update the LRU stack.
+    fn access(&mut self, line: u64, write: bool, streams: &mut [MissStream]) {
+        let set = self.geom.set(line);
+        let tag = self.geom.tag(line);
+        let base = set * self.cap;
+        let len = self.lens[set] as usize;
+        let found = self.tags[base..base + len].iter().position(|&t| t == tag);
+
+        for &(assoc, ci, bit) in &self.cands {
+            if let Some(d) = found {
+                if d < assoc {
+                    streams[ci].open_hits += 1;
+                    continue;
+                }
+            }
+            // Miss for this candidate.  The A-way set's LRU victim is
+            // the stack entry at depth A-1; the set is full (a real
+            // eviction) exactly when the stack already holds >= A
+            // distinct lines.
+            let evicted = len >= assoc;
+            let (victim_line, writeback) = if evicted {
+                let vt = self.tags[base + assoc - 1];
+                let wb = self.dirty[base + assoc - 1] & bit != 0;
+                (self.geom.line_of(set, vt), wb)
+            } else {
+                (0, false)
+            };
+            let s = &mut streams[ci];
+            s.recs.push(MissRec {
+                hits_before: s.open_hits,
+                line,
+                victim_line,
+                evicted,
+                writeback,
+            });
+            s.open_hits = 0;
+            if evicted {
+                s.evictions += 1;
+            }
+            if writeback {
+                s.writebacks += 1;
+            }
+        }
+
+        // LRU stack update: accessed line moves to the front.  Dirty
+        // bits: candidates that hit (assoc > depth) keep the line's
+        // dirty state (|= write); candidates that missed refill it with
+        // dirty = write — for a store both collapse to "all dirty".
+        match found {
+            Some(d) => {
+                let old_dirty = self.dirty[base + d];
+                self.tags.copy_within(base..base + d, base + 1);
+                self.dirty.copy_within(base..base + d, base + 1);
+                self.tags[base] = tag;
+                self.dirty[base] = if write {
+                    self.all_mask
+                } else {
+                    old_dirty & self.gt_mask[d]
+                };
+            }
+            None => {
+                let new_len = (len + 1).min(self.cap);
+                self.tags.copy_within(base..base + new_len - 1, base + 1);
+                self.dirty.copy_within(base..base + new_len - 1, base + 1);
+                self.tags[base] = tag;
+                self.dirty[base] = if write { self.all_mask } else { 0 };
+                self.lens[set] = new_len as u32;
+            }
+        }
+    }
+}
+
+/// Result of replaying one candidate's miss stream: completion cycle
+/// and the full statistics bundle a [`MemoryController`] replay of the
+/// same trace under the same configuration would report.
+///
+/// [`MemoryController`]: crate::controller::MemoryController
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GridRun {
+    pub cycles: u64,
+    pub stats: ControllerStats,
+    pub cache: CacheStats,
+    pub dma: DmaStats,
+    pub dram: DramStats,
+}
+
+/// The single-pass classification of one trace against a whole cache
+/// grid (see module docs).  Build with [`GridClassification::classify`],
+/// then score any candidate with [`GridClassification::replay`] — each
+/// replay touches only the candidate's miss stream and the trace's DMA
+/// runs, never the hit-dominated cache loop.
+pub struct GridClassification {
+    configs: Vec<CacheConfig>,
+    streams: Vec<MissStream>,
+    passes: Vec<PassInfo>,
+    /// Candidate index -> index into `passes`.
+    pass_of: Vec<usize>,
+}
+
+impl GridClassification {
+    /// Classify `trace` for every cache candidate in `configs`: one
+    /// trace pass per distinct `line_bytes` value, all `(num_lines,
+    /// assoc)` candidates of that width classified simultaneously.
+    pub fn classify(trace: &CompressedTrace, configs: &[CacheConfig]) -> Self {
+        assert!(!configs.is_empty(), "need at least one cache candidate");
+        for c in configs {
+            c.validate();
+        }
+        let mut streams = vec![MissStream::default(); configs.len()];
+        let mut passes: Vec<PassInfo> = Vec::new();
+        let mut pass_of = vec![0usize; configs.len()];
+
+        // Group candidates by line width, preserving first-seen order.
+        let mut widths: Vec<usize> = Vec::new();
+        for c in configs {
+            if !widths.contains(&c.line_bytes) {
+                widths.push(c.line_bytes);
+            }
+        }
+        for lb in widths {
+            let idxs: Vec<usize> = (0..configs.len())
+                .filter(|&i| configs[i].line_bytes == lb)
+                .collect();
+            for &i in &idxs {
+                pass_of[i] = passes.len();
+            }
+            let info = classify_pass(trace, lb, &idxs, configs, &mut streams);
+            passes.push(info);
+        }
+        GridClassification {
+            configs: configs.to_vec(),
+            streams,
+            passes,
+            pass_of,
+        }
+    }
+
+    /// Number of classified candidates.
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    /// True when no candidates were classified (never: `classify`
+    /// rejects an empty grid).
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    /// The classified candidate configurations, in input order.
+    pub fn configs(&self) -> &[CacheConfig] {
+        &self.configs
+    }
+
+    /// Cache-class line accesses candidate `idx` serves (equals the
+    /// replayed `CacheStats::accesses`).
+    pub fn accesses(&self, idx: usize) -> u64 {
+        self.passes[self.pass_of[idx]].total_lines
+    }
+
+    /// Misses of candidate `idx`.
+    pub fn misses(&self, idx: usize) -> u64 {
+        self.streams[idx].recs.len() as u64
+    }
+
+    /// Hits of candidate `idx`.
+    pub fn hits(&self, idx: usize) -> u64 {
+        self.accesses(idx) - self.misses(idx)
+    }
+
+    /// The full Cache Engine counter set candidate `idx` would report
+    /// after a real replay of the classified trace.
+    pub fn cache_stats(&self, idx: usize) -> CacheStats {
+        let s = &self.streams[idx];
+        CacheStats {
+            accesses: self.accesses(idx),
+            hits: self.hits(idx),
+            misses: self.misses(idx),
+            evictions: s.evictions,
+            writebacks: s.writebacks,
+        }
+    }
+
+    /// Miss-only timing replay of candidate `idx` under the full
+    /// controller configuration `cfg` (whose `cache` must equal the
+    /// classified candidate): hit runs fold to `n * hit_latency`; only
+    /// misses, writebacks, and DMA-class runs drive the [`Dram`] /
+    /// [`DmaEngine`] models.  `trace` must be the trace that was
+    /// classified.  Returns the completion cycle (from 0, i.e. a fresh
+    /// controller) plus every statistics counter — bit-identical to a
+    /// lockstep or event replay of the same trace.
+    pub fn replay(&self, idx: usize, trace: &CompressedTrace, cfg: &ControllerConfig) -> GridRun {
+        assert_eq!(
+            cfg.cache, self.configs[idx],
+            "cfg.cache must be the classified candidate"
+        );
+        let pass = &self.passes[self.pass_of[idx]];
+        let geom = LineGeom::new(pass.line_bytes, 1);
+        let lb = pass.line_bytes;
+        let hl = cfg.cache.hit_latency;
+        let mut dram = Dram::new(cfg.dram.clone());
+        let mut dma = DmaEngine::new(cfg.dma);
+        let mut cur = Cursor {
+            recs: &self.streams[idx].recs,
+            i: 0,
+            taken: 0,
+        };
+        let mut now = 0u64;
+        for (ri, run) in trace.runs().iter().enumerate() {
+            match *run {
+                Run::Stream {
+                    base,
+                    chunk,
+                    count,
+                    tail,
+                } => {
+                    now = dma.stream_run(
+                        &mut dram,
+                        base,
+                        chunk as usize,
+                        count,
+                        tail as usize,
+                        now,
+                    );
+                }
+                Run::Cached { .. } => {
+                    now = cur.consume(pass.run_lines[ri], &mut dram, lb, hl, now);
+                }
+                Run::Verbatim { off, count } => {
+                    for &a in trace.raw_at(off, count) {
+                        match a {
+                            Access::Stream { addr, bytes } => {
+                                now = dma.stream(&mut dram, addr, bytes, now);
+                            }
+                            Access::Element { addr, bytes } => {
+                                now = dma.element(&mut dram, addr, bytes, now);
+                            }
+                            Access::Cached { addr, bytes }
+                            | Access::CachedStore { addr, bytes } => {
+                                let n = geom.line_count(addr, bytes);
+                                now = cur.consume(n, &mut dram, lb, hl, now);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(
+            cur.i,
+            cur.recs.len(),
+            "replay must consume the whole miss stream"
+        );
+        GridRun {
+            cycles: now,
+            stats: ControllerStats {
+                requests: trace.requests(),
+                total_bytes: trace.total_bytes(),
+            },
+            cache: self.cache_stats(idx),
+            dma: dma.stats().clone(),
+            dram: dram.stats().clone(),
+        }
+    }
+}
+
+/// Replay cursor over one candidate's miss stream.
+struct Cursor<'a> {
+    recs: &'a [MissRec],
+    i: usize,
+    /// Hits of `recs[i].hits_before` already consumed.
+    taken: u64,
+}
+
+impl Cursor<'_> {
+    /// Advance the clock over `lines` cache-class line accesses: whole
+    /// hit runs fold to `n * hit_latency`; each miss performs exactly
+    /// the DRAM sequence the real Cache Engine would (dirty-victim
+    /// writeback, then line fill, then the hit-latency service).
+    fn consume(
+        &mut self,
+        mut lines: u64,
+        dram: &mut Dram,
+        lb: usize,
+        hl: u64,
+        mut now: u64,
+    ) -> u64 {
+        while lines > 0 {
+            match self.recs.get(self.i) {
+                None => {
+                    // Everything after the last miss hits.
+                    now += lines * hl;
+                    lines = 0;
+                }
+                Some(r) => {
+                    let avail = r.hits_before - self.taken;
+                    if avail >= lines {
+                        now += lines * hl;
+                        self.taken += lines;
+                        lines = 0;
+                    } else {
+                        now += avail * hl;
+                        lines -= avail + 1;
+                        self.taken = 0;
+                        if r.writeback {
+                            now = dram.access(r.victim_line * lb as u64, lb, now);
+                        }
+                        now = dram.access(r.line * lb as u64, lb, now) + hl;
+                        self.i += 1;
+                    }
+                }
+            }
+        }
+        now
+    }
+}
+
+/// One classification pass at line width `lb` over the candidates in
+/// `idxs`, appending miss events to `streams`.
+fn classify_pass(
+    trace: &CompressedTrace,
+    lb: usize,
+    idxs: &[usize],
+    configs: &[CacheConfig],
+    streams: &mut [MissStream],
+) -> PassInfo {
+    // Group this width's candidates by set count: one LRU stack array
+    // per distinct num_sets, every associativity sharing it.
+    let mut groups: Vec<SetGroup> = Vec::new();
+    {
+        let mut set_counts: Vec<usize> = Vec::new();
+        for &i in idxs {
+            let s = configs[i].num_sets();
+            if !set_counts.contains(&s) {
+                set_counts.push(s);
+            }
+        }
+        for s in set_counts {
+            let assocs: Vec<(usize, usize)> = idxs
+                .iter()
+                .filter(|&&i| configs[i].num_sets() == s)
+                .map(|&i| (configs[i].assoc, i))
+                .collect();
+            groups.push(SetGroup::new(lb, s, &assocs));
+        }
+    }
+
+    let geom = LineGeom::new(lb, 1);
+    let mut run_lines = Vec::with_capacity(trace.runs().len());
+    let mut total = 0u64;
+    let mut serve = |addr: u64, bytes: usize, write: bool, groups: &mut [SetGroup]| -> u64 {
+        let first = geom.first_line(addr);
+        let last = geom.last_line(addr, bytes);
+        let mut line = first;
+        loop {
+            for g in groups.iter_mut() {
+                g.access(line, write, streams);
+            }
+            if line == last {
+                break;
+            }
+            line += 1;
+        }
+        last - first + 1
+    };
+    for run in trace.runs() {
+        let mut lines = 0u64;
+        match *run {
+            Run::Stream { .. } => {}
+            Run::Cached {
+                base,
+                bytes,
+                off,
+                count,
+            } => {
+                for &w in trace.words_at(off, count) {
+                    lines += serve(base + 4 * w as u64, bytes as usize, false, &mut groups);
+                }
+            }
+            Run::Verbatim { off, count } => {
+                for &a in trace.raw_at(off, count) {
+                    match a {
+                        Access::Cached { addr, bytes } => {
+                            lines += serve(addr, bytes, false, &mut groups);
+                        }
+                        Access::CachedStore { addr, bytes } => {
+                            lines += serve(addr, bytes, true, &mut groups);
+                        }
+                        Access::Stream { .. } | Access::Element { .. } => {}
+                    }
+                }
+            }
+        }
+        run_lines.push(lines);
+        total += lines;
+    }
+    PassInfo {
+        line_bytes: lb,
+        run_lines,
+        total_lines: total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::{ControllerConfig, MemoryController};
+    use crate::engine::PreparedTrace;
+    use crate::testkit::Rng;
+
+    fn cache_heavy_trace(seed: u64, n: usize) -> Vec<Access> {
+        let mut rng = Rng::new(seed);
+        let mut trace = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            match rng.below(6) {
+                0 => trace.push(Access::Stream {
+                    addr: i * 4096,
+                    bytes: 1024 + rng.below(4096) as usize,
+                }),
+                1 => trace.push(Access::Element {
+                    addr: (1 << 30) + rng.below(1 << 20) * 16,
+                    bytes: 16,
+                }),
+                2 => trace.push(Access::CachedStore {
+                    addr: (2 << 28) + rng.below(1 << 12) * 16,
+                    bytes: 16,
+                }),
+                _ => trace.push(Access::Cached {
+                    addr: (8 << 20) + rng.below(1 << 12) * 64,
+                    bytes: 64,
+                }),
+            }
+        }
+        trace
+    }
+
+    fn small_grid() -> Vec<CacheConfig> {
+        let mut grid = Vec::new();
+        for &line_bytes in &[32usize, 64, 128] {
+            for &num_lines in &[64usize, 256, 1024] {
+                for &assoc in &[1usize, 2, 4] {
+                    grid.push(CacheConfig {
+                        line_bytes,
+                        num_lines,
+                        assoc,
+                        hit_latency: 2,
+                    });
+                }
+            }
+        }
+        grid
+    }
+
+    #[test]
+    fn grid_replay_matches_lockstep_for_every_candidate() {
+        let raw = cache_heavy_trace(9, 3_000);
+        let prepared = PreparedTrace::new(raw);
+        let grid = small_grid();
+        let cls = GridClassification::classify(prepared.compressed(), &grid);
+        assert_eq!(cls.len(), grid.len());
+        for (i, cc) in grid.iter().enumerate() {
+            let mut cfg = ControllerConfig::default_for(16);
+            cfg.cache = *cc;
+            let mut ctl = MemoryController::new(cfg.clone());
+            let want = ctl.replay(prepared.raw());
+            let run = cls.replay(i, prepared.compressed(), &cfg);
+            assert_eq!(run.cycles, want, "cycles diverged for {cc:?}");
+            assert_eq!(run.stats, *ctl.stats(), "{cc:?}");
+            assert_eq!(run.cache, *ctl.cache_stats(), "{cc:?}");
+            assert_eq!(run.dma, *ctl.dma_stats(), "{cc:?}");
+            assert_eq!(run.dram, *ctl.dram_stats(), "{cc:?}");
+        }
+    }
+
+    #[test]
+    fn classification_is_independent_of_grid_company() {
+        // A candidate's miss stream must not depend on which other
+        // candidates share the classification pass.
+        let raw = cache_heavy_trace(11, 2_000);
+        let prepared = PreparedTrace::new(raw);
+        let grid = small_grid();
+        let all = GridClassification::classify(prepared.compressed(), &grid);
+        for (i, cc) in grid.iter().enumerate() {
+            let alone = GridClassification::classify(prepared.compressed(), &[*cc]);
+            assert_eq!(all.cache_stats(i), alone.cache_stats(0), "{cc:?}");
+        }
+    }
+
+    #[test]
+    fn hit_miss_counts_are_monotone_in_capacity() {
+        // Mattson inclusion: at fixed line width and set count, more
+        // ways can only add hits.
+        let raw = cache_heavy_trace(13, 4_000);
+        let prepared = PreparedTrace::new(raw);
+        let grid: Vec<CacheConfig> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&assoc| CacheConfig {
+                line_bytes: 64,
+                num_lines: 128 * assoc,
+                assoc,
+                hit_latency: 2,
+            })
+            .collect();
+        let cls = GridClassification::classify(prepared.compressed(), &grid);
+        for w in 1..grid.len() {
+            assert!(
+                cls.hits(w) >= cls.hits(w - 1),
+                "hits must be monotone in associativity at fixed sets"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_cache_class_trace_scores_hit_free() {
+        let raw = vec![
+            Access::Stream {
+                addr: 0,
+                bytes: 8192,
+            },
+            Access::Element {
+                addr: 1 << 20,
+                bytes: 16,
+            },
+        ];
+        let prepared = PreparedTrace::new(raw);
+        let cc = CacheConfig::default_64k();
+        let cls = GridClassification::classify(prepared.compressed(), &[cc]);
+        assert_eq!(cls.accesses(0), 0);
+        let mut cfg = ControllerConfig::default_for(16);
+        cfg.cache = cc;
+        let mut ctl = MemoryController::new(cfg.clone());
+        let want = ctl.replay(prepared.raw());
+        let run = cls.replay(0, prepared.compressed(), &cfg);
+        assert_eq!(run.cycles, want);
+        assert_eq!(run.cache, *ctl.cache_stats());
+    }
+
+    #[test]
+    #[should_panic(expected = "classified candidate")]
+    fn replay_rejects_mismatched_config() {
+        let prepared = PreparedTrace::new(cache_heavy_trace(3, 50));
+        let cls =
+            GridClassification::classify(prepared.compressed(), &[CacheConfig::default_64k()]);
+        let mut cfg = ControllerConfig::default_for(16);
+        cfg.cache.num_lines = 512;
+        cls.replay(0, prepared.compressed(), &cfg);
+    }
+}

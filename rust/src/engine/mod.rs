@@ -23,9 +23,19 @@
 //! shard replays) and `Lockstep` when debugging the model or when a
 //! third-party trace is replayed once and compression would not pay
 //! for itself.
+//!
+//! A third core, the **grid core** ([`grid`], selected as
+//! [`EngineKind::Grid`]), targets batch DSE scoring: one stack-distance
+//! classification pass over a trace yields exact hit/miss outcomes for
+//! an entire `(num_lines, assoc)` cache grid at once (Mattson
+//! inclusion), and each candidate is then timed from its miss stream
+//! alone — also bit-identical to the other cores, also enforced by the
+//! differential harness.
 
+pub mod grid;
 pub mod trace;
 
+pub use grid::{GridClassification, GridRun};
 pub use trace::CompressedTrace;
 
 use std::fmt;
@@ -41,6 +51,15 @@ pub enum EngineKind {
     /// Event-driven batched replay of the compressed trace.
     #[default]
     Event,
+    /// Grid core ([`grid`]): batch DSE scoring via the single-pass
+    /// stack-distance classifier + miss-only timing replay.  Selecting
+    /// it tells batch scorers ([`crate::dse::Evaluator::score_batch`],
+    /// [`crate::shard::ShardedSweep`]) to classify a whole cache-module
+    /// grid in one trace pass; a *single-trace* replay under this kind
+    /// is served by the event core — the grid core is bit-identical to
+    /// it (enforced by `tests/differential.rs`), so there is nothing to
+    /// gain from classifying a trace that is scored exactly once.
+    Grid,
 }
 
 impl EngineKind {
@@ -49,6 +68,7 @@ impl EngineKind {
         match self {
             EngineKind::Lockstep => &LockstepEngine,
             EngineKind::Event => &EventEngine,
+            EngineKind::Grid => &GridEngine,
         }
     }
 
@@ -67,7 +87,9 @@ impl EngineKind {
     pub fn replay_raw(self, ctl: &mut MemoryController, trace: &[Access]) -> u64 {
         match self {
             EngineKind::Lockstep => ctl.replay(trace),
-            EngineKind::Event => ctl.replay_events(&CompressedTrace::compress(trace)),
+            EngineKind::Event | EngineKind::Grid => {
+                ctl.replay_events(&CompressedTrace::compress(trace))
+            }
         }
     }
 }
@@ -79,7 +101,8 @@ impl FromStr for EngineKind {
         match s {
             "lockstep" => Ok(EngineKind::Lockstep),
             "event" => Ok(EngineKind::Event),
-            other => Err(format!("unknown engine {other:?} (lockstep|event)")),
+            "grid" => Ok(EngineKind::Grid),
+            other => Err(format!("unknown engine {other:?} (lockstep|event|grid)")),
         }
     }
 }
@@ -89,6 +112,7 @@ impl fmt::Display for EngineKind {
         f.write_str(match self {
             EngineKind::Lockstep => "lockstep",
             EngineKind::Event => "event",
+            EngineKind::Grid => "grid",
         })
     }
 }
@@ -170,6 +194,23 @@ impl SimEngine for EventEngine {
     }
 }
 
+/// Grid batch-scoring core ([`grid`]).  A single-trace replay has no
+/// grid to amortize over, so it is served by the (bit-identical) event
+/// kernels; the classifier + miss-only replay engage on the batch
+/// scoring paths ([`crate::dse::Evaluator::score_batch`],
+/// [`crate::shard::ShardedSweep::makespans_for_cache_grid`]).
+pub struct GridEngine;
+
+impl SimEngine for GridEngine {
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+
+    fn replay(&self, ctl: &mut MemoryController, trace: &PreparedTrace) -> u64 {
+        ctl.replay_events(trace.compressed())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,12 +247,27 @@ mod tests {
     fn kind_parses_and_displays() {
         assert_eq!("lockstep".parse::<EngineKind>().unwrap(), EngineKind::Lockstep);
         assert_eq!("event".parse::<EngineKind>().unwrap(), EngineKind::Event);
+        assert_eq!("grid".parse::<EngineKind>().unwrap(), EngineKind::Grid);
         assert!("bogus".parse::<EngineKind>().is_err());
         assert_eq!(EngineKind::Event.to_string(), "event");
         assert_eq!(EngineKind::Lockstep.to_string(), "lockstep");
+        assert_eq!(EngineKind::Grid.to_string(), "grid");
         assert_eq!(EngineKind::default(), EngineKind::Event);
         assert_eq!(EngineKind::Event.engine().name(), "event");
         assert_eq!(EngineKind::Lockstep.engine().name(), "lockstep");
+        assert_eq!(EngineKind::Grid.engine().name(), "grid");
+    }
+
+    #[test]
+    fn grid_kind_single_replay_matches_other_cores() {
+        let prepared = PreparedTrace::new(random_trace(31, 1_000));
+        let mut a = MemoryController::new(ControllerConfig::default_for(16));
+        let mut b = MemoryController::new(ControllerConfig::default_for(16));
+        let ta = EngineKind::Lockstep.replay(&mut a, &prepared);
+        let tb = EngineKind::Grid.replay(&mut b, &prepared);
+        assert_eq!(ta, tb);
+        assert_eq!(a.stats(), b.stats());
+        assert_eq!(a.dram_stats(), b.dram_stats());
     }
 
     #[test]

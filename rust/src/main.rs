@@ -15,9 +15,11 @@
 //! Workload selection (all subcommands): `--input file.tns` or
 //! `--synth zipf|uniform|clustered --dims AxBxC --nnz N --seed S`.
 //! Controller parameters come from `--config ptmc.toml` plus overrides
-//! (`--cache-lines`, `--dma-buffers`, ...).  `--engine lockstep|event`
-//! picks the trace-replay core for `simulate` and `explore`
-//! (bit-identical results; `event` is the batched fast path).
+//! (`--cache-lines`, `--dma-buffers`, ...).  `--engine
+//! lockstep|event|grid` picks the trace-replay core for `simulate` and
+//! `explore` (bit-identical results; `event` is the batched fast path,
+//! `grid` additionally scores whole cache-module grids in one
+//! classification pass on `explore`).
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -70,9 +72,11 @@ fn usage() {
          controller:--config ptmc.toml --cache-lines N --cache-line-bytes B\n\
          \x20          --cache-assoc A --dma-num N --dma-buffers K\n\
          \x20          --dma-buffer-bytes B --max-pointers P --channels C\n\
-         dse:       --device u250|u280|vu9p --evaluator pms|sim|sharded\n\
-         sim core:  --engine lockstep|event (bit-identical; default event\n\
-         \x20          on explore for sweep throughput, lockstep on simulate)\n"
+         dse:       --device u250|u280|vu9p --evaluator pms|sim|sharded|grid\n\
+         sim core:  --engine lockstep|event|grid (bit-identical; default\n\
+         \x20          event on explore for sweep throughput, lockstep on\n\
+         \x20          simulate; grid scores whole cache-module grids in\n\
+         \x20          one classification pass)\n"
     );
 }
 
@@ -331,7 +335,19 @@ fn cmd_pms(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let t = workload::tensor_from_args(args)?;
     let rank = args.usize_or("rank", 16)?;
-    let engine = engine_kind(args, EngineKind::Event)?;
+    let evaluator = args.str_or("evaluator", "pms");
+    // `--evaluator grid` is shorthand for the cycle evaluator pinned to
+    // the grid batch core; a conflicting explicit --engine would
+    // silently lose, so reject it and default the header to grid.
+    let mut engine = engine_kind(args, EngineKind::Event)?;
+    if evaluator == "grid" {
+        if engine != EngineKind::Grid && args.get("engine").is_some() {
+            return Err(Box::new(CliError(format!(
+                "--evaluator grid pins --engine grid (got --engine {engine})"
+            ))));
+        }
+        engine = EngineKind::Grid;
+    }
     let base = controller_config(args, t.record_bytes())?;
     let dev = device(args)?;
     let profile = TensorProfile::measure(&t);
@@ -342,16 +358,19 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         .collect();
     println!("engine: {engine}");
     let sweep;
-    let eval = match args.str_or("evaluator", "pms") {
+    let eval = match evaluator {
         "pms" => Evaluator::Pms {
             profile: &profile,
             rank,
         },
-        "sim" => Evaluator::CycleSim {
-            tensor: &t,
-            factors: &factors,
-            engine,
-        },
+        "sim" => Evaluator::cycle_sim(&t, &factors, engine),
+        // The cache-module sweep is classified in one trace pass
+        // (stack-distance classifier + miss-only replay) instead of
+        // replaying the trace once per candidate.
+        "grid" => {
+            println!("grid evaluator: one-pass cache-module scoring");
+            Evaluator::cycle_sim(&t, &factors, engine)
+        }
         "sharded" => {
             let workers = args.usize_or("workers", 4)?.max(1);
             println!("sharded evaluator: {workers} concurrent controller instances");
@@ -360,7 +379,7 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         }
         other => {
             return Err(Box::new(CliError(format!(
-                "unknown --evaluator {other:?} (pms|sim|sharded)"
+                "unknown --evaluator {other:?} (pms|sim|sharded|grid)"
             ))))
         }
     };

@@ -18,11 +18,13 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use super::{partition_indices, AggregateStats, ShardPlan, ShardSpec};
-use crate::controller::{Access, ControllerConfig, MemLayout, MemoryController, RemapperConfig};
+use crate::controller::{
+    Access, CacheConfig, ControllerConfig, MemLayout, MemoryController, RemapperConfig,
+};
 use crate::coordinator::Metrics;
 use crate::cpd::linalg::Mat;
 use crate::dram::DramConfig;
-use crate::engine::{EngineKind, PreparedTrace};
+use crate::engine::{EngineKind, GridClassification, PreparedTrace};
 use crate::mttkrp::{oracle, STREAM_CHUNK_ELEMS};
 use crate::tensor::{Coord, SparseTensor};
 
@@ -449,23 +451,11 @@ impl<'a> ShardedSweep<'a> {
                         .unwrap_or(0);
                     (remap, worst)
                 }
-                EngineKind::Event => {
-                    let key: RemapKey = (mode, cfg.dram.clone(), cfg.remapper);
-                    let remap = {
-                        let memo = self.remap_memo.lock().expect("remap memo poisoned");
-                        memo.get(&key).copied()
-                    };
-                    let remap = match remap {
-                        Some(cycles) => cycles,
-                        None => {
-                            let cycles = self.remap_cycles(mode, cfg);
-                            self.remap_memo
-                                .lock()
-                                .expect("remap memo poisoned")
-                                .insert(key, cycles);
-                            cycles
-                        }
-                    };
+                // A single-configuration makespan has no grid to
+                // amortize, so `Grid` scores it exactly like `Event`;
+                // the one-pass path is `makespans_for_cache_grid`.
+                EngineKind::Event | EngineKind::Grid => {
+                    let remap = self.remap_cycles_memoized(mode, cfg);
                     let worst = if traces.len() > 1 {
                         thread::scope(|scope| {
                             let handles: Vec<_> = traces
@@ -499,6 +489,89 @@ impl<'a> ShardedSweep<'a> {
             total += remap_cycles + worst;
         }
         total
+    }
+
+    /// Score a whole cache-module grid in one pass per shard trace:
+    /// classify every `(line_bytes, num_lines, assoc)` candidate
+    /// simultaneously with the stack-distance grid core
+    /// ([`GridClassification`]), then time each candidate by replaying
+    /// only its miss stream.  `base` supplies the fixed DRAM / DMA /
+    /// remapper knobs (the remap pass is cache-independent, so the
+    /// whole grid shares one memoized remap simulation per mode).
+    /// Returns one makespan per candidate, in `caches` order — each
+    /// bit-identical to `makespan_with` of the same full configuration
+    /// under either classic engine.
+    pub fn makespans_for_cache_grid(
+        &self,
+        base: &ControllerConfig,
+        caches: &[CacheConfig],
+    ) -> Vec<u64> {
+        let wcfg = worker_cfg(base, self.workers);
+        let mut totals = vec![0u64; caches.len()];
+        if caches.is_empty() {
+            return totals;
+        }
+        for (mode, (_plan, traces)) in self.modes.iter().enumerate() {
+            let remap = self.remap_cycles_memoized(mode, base);
+            // Per shard: one classification pass, then the per-candidate
+            // miss-only replays.  Shards are independent controller
+            // instances — classify and replay them on concurrent host
+            // threads, exactly like the event path replays them.
+            let replay_shard = |tr: &PreparedTrace| -> Vec<u64> {
+                let cls = GridClassification::classify(tr.compressed(), caches);
+                caches
+                    .iter()
+                    .enumerate()
+                    .map(|(ci, cc)| {
+                        let mut cfg = wcfg.clone();
+                        cfg.cache = *cc;
+                        cls.replay(ci, tr.compressed(), &cfg).cycles
+                    })
+                    .collect()
+            };
+            let replay_shard = &replay_shard;
+            let per_shard: Vec<Vec<u64>> = if traces.len() > 1 {
+                thread::scope(|scope| {
+                    let handles: Vec<_> = traces
+                        .iter()
+                        .map(|tr| scope.spawn(move || replay_shard(tr)))
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("grid shard worker panicked"))
+                        .collect()
+                })
+            } else {
+                traces.iter().map(replay_shard).collect()
+            };
+            for (ci, total) in totals.iter_mut().enumerate() {
+                let worst = per_shard.iter().map(|v| v[ci]).max().unwrap_or(0);
+                *total += remap + worst;
+            }
+        }
+        totals
+    }
+
+    /// Memoized [`ShardedSweep::remap_cycles`]: the remap pass depends
+    /// only on (mode, DRAM, remapper), so every candidate sharing those
+    /// knobs — the entire cache/DMA grid — reuses one simulation.
+    fn remap_cycles_memoized(&self, mode: usize, cfg: &ControllerConfig) -> u64 {
+        let key: RemapKey = (mode, cfg.dram.clone(), cfg.remapper);
+        let cached = {
+            let memo = self.remap_memo.lock().expect("remap memo poisoned");
+            memo.get(&key).copied()
+        };
+        match cached {
+            Some(cycles) => cycles,
+            None => {
+                let cycles = self.remap_cycles(mode, cfg);
+                self.remap_memo
+                    .lock()
+                    .expect("remap memo poisoned")
+                    .insert(key, cycles);
+                cycles
+            }
+        }
     }
 
     /// One mode's remap-pass cycles under `cfg`, on a fresh controller
@@ -698,6 +771,39 @@ mod tests {
         let sweep = ShardedSweep::prepare(&t, 8, 2);
         assert_eq!(sweep.workers(), 2);
         assert_eq!(total, sweep.makespan(&cfg));
+    }
+
+    #[test]
+    fn cache_grid_makespans_match_per_candidate_scoring() {
+        use crate::controller::ControllerConfig;
+        // The one-pass grid path must return exactly what scoring each
+        // candidate individually returns, for every candidate.
+        let (t, _factors) = setup(19, 3_000);
+        let sweep = ShardedSweep::prepare(&t, 8, 3);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let mut caches = Vec::new();
+        for &(line_bytes, num_lines, assoc) in
+            &[(64usize, 256usize, 2usize), (64, 1024, 4), (128, 512, 4), (32, 4096, 8)]
+        {
+            caches.push(CacheConfig {
+                line_bytes,
+                num_lines,
+                assoc,
+                hit_latency: base.cache.hit_latency,
+            });
+        }
+        let grid_scores = sweep.makespans_for_cache_grid(&base, &caches);
+        assert_eq!(grid_scores.len(), caches.len());
+        for (cc, &got) in caches.iter().zip(&grid_scores) {
+            let mut cfg = base.clone();
+            cfg.cache = *cc;
+            assert_eq!(
+                got,
+                sweep.makespan_with(&cfg, EngineKind::Event),
+                "grid makespan diverged for {cc:?}"
+            );
+            assert_eq!(got, sweep.makespan_with(&cfg, EngineKind::Lockstep));
+        }
     }
 
     #[test]

@@ -156,6 +156,87 @@ fn engine_option_accepts_both_cores_and_they_agree() {
 }
 
 #[test]
+fn grid_engine_simulate_matches_lockstep_totals() {
+    // `--engine grid` on a single-trace replay is served by the event
+    // kernels — totals must match lockstep exactly.
+    let lockstep = run(&[&["simulate"], SMALL, &["--rank", "8", "--engine", "lockstep"]].concat());
+    let grid = run(&[&["simulate"], SMALL, &["--rank", "8", "--engine", "grid"]].concat());
+    assert!(lockstep.0, "{}", lockstep.1);
+    assert!(grid.0, "{}", grid.1);
+    assert!(grid.1.contains("engine: grid"), "{}", grid.1);
+    let total_line = |text: &str| -> String {
+        text.lines()
+            .find(|l| l.starts_with("total cycles:"))
+            .expect("total cycles line")
+            .to_string()
+    };
+    assert_eq!(total_line(&lockstep.1), total_line(&grid.1));
+}
+
+#[test]
+fn explore_grid_evaluator_matches_sim_evaluator() {
+    // `--evaluator grid` (one-pass cache-module scoring) must pick the
+    // same best configuration at the same score as `--evaluator sim`.
+    let sim = run(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "sim", "--rank", "8", "--engine", "event"],
+    ]
+    .concat());
+    let grid = run(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "grid", "--rank", "8"],
+    ]
+    .concat());
+    assert!(sim.0, "{}", sim.1);
+    assert!(grid.0, "{}", grid.1);
+    assert!(grid.1.contains("one-pass cache-module scoring"), "{}", grid.1);
+    let line = |text: &str, prefix: &str| -> String {
+        text.lines()
+            .find(|l| l.trim_start().starts_with(prefix))
+            .unwrap_or_else(|| panic!("missing {prefix:?} in {text}"))
+            .to_string()
+    };
+    assert_eq!(line(&sim.1, "best:"), line(&grid.1, "best:"));
+    assert_eq!(line(&sim.1, "cache:"), line(&grid.1, "cache:"));
+}
+
+#[test]
+fn grid_evaluator_rejects_conflicting_engine() {
+    let (ok, text) = run(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "grid", "--engine", "lockstep"],
+    ]
+    .concat());
+    assert!(!ok);
+    assert!(text.contains("pins --engine grid"), "{text}");
+    // An explicit matching --engine grid is fine.
+    let (ok, text) = run(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "grid", "--engine", "grid", "--rank", "4"],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("engine: grid"), "{text}");
+}
+
+#[test]
+fn explore_sharded_accepts_grid_engine() {
+    let (ok, text) = run(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "sharded", "--workers", "2", "--engine", "grid"],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("engine: grid"), "{text}");
+    assert!(text.contains("best:"), "{text}");
+}
+
+#[test]
 fn engine_option_rejects_unknown_value() {
     let (ok, text) = run(&[&["simulate"], SMALL, &["--engine", "bogus"]].concat());
     assert!(!ok);

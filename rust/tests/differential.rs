@@ -1,15 +1,17 @@
 //! Differential test harness for the simulation engines: on a seeded
 //! corpus of synthetic tensors (varying mode counts, nnz, and Zipf
 //! skew) and a small grid of controller configurations, the event
-//! engine and the lockstep engine must produce **identical** completion
-//! cycles and statistics — `ControllerStats`, `CacheStats`, `DmaStats`,
-//! and DRAM stats including row activations.  The compressed trace must
-//! also be a lossless encoding of the raw trace.
+//! engine, the lockstep engine, and the grid core (stack-distance
+//! classification + miss-only replay, `ptmc::engine::grid`) must
+//! produce **identical** completion cycles and statistics —
+//! `ControllerStats`, `CacheStats`, `DmaStats`, and DRAM stats
+//! including row activations.  The compressed trace must also be a
+//! lossless encoding of the raw trace.
 
 use ptmc::controller::{
     Access, CacheConfig, ControllerConfig, DmaConfig, MemLayout, MemoryController,
 };
-use ptmc::engine::{CompressedTrace, EngineKind, PreparedTrace, SimEngine};
+use ptmc::engine::{CompressedTrace, EngineKind, GridClassification, PreparedTrace, SimEngine};
 use ptmc::mttkrp::{approach1, Tracing};
 use ptmc::shard::{partition_indices, shard_trace, ShardPlan, ShardedSweep};
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
@@ -97,6 +99,33 @@ fn assert_engines_identical(prepared: &PreparedTrace, cfg: &ControllerConfig, wh
         lockstep.dram_stats().activations(),
         event.dram_stats().activations(),
         "{what}: row activations diverged"
+    );
+
+    // The grid core: classify this configuration's cache alone, then
+    // time it with the miss-only replay — cycle count and every counter
+    // must match the lockstep controller bit-for-bit.
+    let cls = GridClassification::classify(prepared.compressed(), &[cfg.cache]);
+    let run = cls.replay(0, prepared.compressed(), cfg);
+    assert_eq!(run.cycles, tl, "{what}: grid-core cycles diverged");
+    assert_eq!(
+        run.stats,
+        *lockstep.stats(),
+        "{what}: grid ControllerStats diverged"
+    );
+    assert_eq!(
+        run.cache,
+        *lockstep.cache_stats(),
+        "{what}: grid CacheStats diverged"
+    );
+    assert_eq!(
+        run.dma,
+        *lockstep.dma_stats(),
+        "{what}: grid DmaStats diverged"
+    );
+    assert_eq!(
+        run.dram,
+        *lockstep.dram_stats(),
+        "{what}: grid DramStats diverged"
     );
 }
 
@@ -209,6 +238,74 @@ fn event_engine_is_bit_identical_on_adversarial_access_mixes() {
     });
 }
 
+/// The cache grid the batch-classification tests score at once.
+fn cache_grid() -> Vec<CacheConfig> {
+    let mut grid = Vec::new();
+    for &line_bytes in &[32usize, 64, 128] {
+        for &(num_lines, assoc) in &[(64usize, 1usize), (256, 2), (1024, 4), (4096, 8)] {
+            grid.push(CacheConfig {
+                line_bytes,
+                num_lines,
+                assoc,
+                hit_latency: 2,
+            });
+        }
+    }
+    grid
+}
+
+#[test]
+fn grid_core_scores_whole_cache_grid_bit_identically() {
+    // One classification pass, twelve candidates: every candidate's
+    // miss-only replay must equal a dedicated lockstep controller run
+    // in cycles and all statistics.
+    forall("grid_batch_vs_lockstep", 8, |rng| {
+        let t = random_tensor(rng);
+        let rank = [4usize, 8, 16][rng.range(0, 3)];
+        let mode = rng.range(0, t.n_modes());
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+        let plan = ShardPlan::balance(&t, mode, 2);
+        let parts = partition_indices(&t, &plan);
+        let trace = shard_trace(&t, rank, mode, &layout, &plan.shards[0], &parts[0], 0);
+        let prepared = PreparedTrace::new(trace);
+        let grid = cache_grid();
+        let cls = GridClassification::classify(prepared.compressed(), &grid);
+        for (ci, cc) in grid.iter().enumerate() {
+            let mut cfg = ControllerConfig::default_for(t.record_bytes());
+            cfg.cache = *cc;
+            let mut ctl = MemoryController::new(cfg.clone());
+            let want = EngineKind::Lockstep.replay(&mut ctl, &prepared);
+            let run = cls.replay(ci, prepared.compressed(), &cfg);
+            assert_eq!(run.cycles, want, "candidate {cc:?}");
+            assert_eq!(run.cache, *ctl.cache_stats(), "candidate {cc:?}");
+            assert_eq!(run.dram, *ctl.dram_stats(), "candidate {cc:?}");
+            assert_eq!(run.dma, *ctl.dma_stats(), "candidate {cc:?}");
+            assert_eq!(run.stats, *ctl.stats(), "candidate {cc:?}");
+        }
+    });
+}
+
+#[test]
+fn sharded_sweep_cache_grid_matches_per_candidate_makespans() {
+    // The full one-pass DSE path: per-shard grid classification +
+    // memoized remap must reproduce the event/lockstep makespan of
+    // every candidate exactly.
+    forall("sweep_cache_grid_vs_event", 5, |rng| {
+        let t = random_tensor(rng);
+        let workers = rng.range(1, 4);
+        let sweep = ShardedSweep::prepare(&t, 8, workers);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let caches: Vec<CacheConfig> = cache_grid().into_iter().take(6).collect();
+        let grid_scores = sweep.makespans_for_cache_grid(&base, &caches);
+        for (cc, &got) in caches.iter().zip(&grid_scores) {
+            let mut cfg = base.clone();
+            cfg.cache = *cc;
+            assert_eq!(got, sweep.makespan_with(&cfg, EngineKind::Event));
+            assert_eq!(got, sweep.makespan_with(&cfg, EngineKind::Lockstep));
+        }
+    });
+}
+
 #[test]
 fn sharded_sweep_makespans_agree_across_engines() {
     // The full DSE scoring path: remap memoization and concurrent
@@ -221,6 +318,9 @@ fn sharded_sweep_makespans_agree_across_engines() {
             let lockstep = sweep.makespan_with(&cfg, EngineKind::Lockstep);
             let event = sweep.makespan_with(&cfg, EngineKind::Event);
             assert_eq!(lockstep, event, "sweep makespan diverged");
+            // A single-config grid makespan is served by the event
+            // kernels — same number by construction.
+            assert_eq!(event, sweep.makespan_with(&cfg, EngineKind::Grid));
             // Scoring twice must be deterministic (memo hit path).
             assert_eq!(event, sweep.makespan_with(&cfg, EngineKind::Event));
         }

@@ -1,0 +1,179 @@
+//! Property tests for the grid classifier (`ptmc::engine::grid`): on
+//! random cache-class traces, the single-pass stack-distance
+//! classification must report, for **every** `(line_bytes, num_lines,
+//! assoc)` combination in `Grids::default()`, exactly the hit/miss/
+//! eviction/writeback counts a fresh `CacheEngine` replay of the same
+//! trace produces — Mattson inclusion made executable.
+
+use ptmc::controller::{Access, CacheConfig, CacheEngine};
+use ptmc::dram::{Dram, DramConfig};
+use ptmc::dse::Grids;
+use ptmc::engine::{CompressedTrace, GridClassification};
+use ptmc::testkit::{forall, Rng};
+
+/// Every valid cache candidate of the default DSE grid (the same
+/// power-of-two-sets filter `dse::explore` applies).
+fn default_grid_configs() -> Vec<CacheConfig> {
+    let g = Grids::default();
+    let mut configs = Vec::new();
+    for &line_bytes in &g.cache_line_bytes {
+        for &num_lines in &g.cache_num_lines {
+            for &assoc in &g.cache_assoc {
+                if num_lines % assoc != 0 || !(num_lines / assoc).is_power_of_two() {
+                    continue;
+                }
+                configs.push(CacheConfig {
+                    line_bytes,
+                    num_lines,
+                    assoc,
+                    hit_latency: 2,
+                });
+            }
+        }
+    }
+    configs
+}
+
+/// A random cache-class trace: loads and stores, hot zipf rows plus
+/// cold uniform addresses, mixed widths, occasional line-straddling and
+/// unaligned accesses.
+fn random_cache_trace(rng: &mut Rng) -> Vec<Access> {
+    let n = rng.range(50, 1_500);
+    let mut trace = Vec::with_capacity(n);
+    for _ in 0..n {
+        let addr = match rng.below(4) {
+            0 => rng.zipf(4096, 1.2) * 64,          // hot rows
+            1 => rng.below(1 << 22),                 // cold, unaligned
+            2 => (8 << 20) + rng.below(1 << 10) * 256, // small working set
+            _ => rng.below(1 << 16) * 64,            // medium working set
+        };
+        let bytes = match rng.below(4) {
+            0 => 16,
+            1 => 64,
+            2 => 1 + rng.below(300) as usize, // straddles lines
+            _ => 4,
+        };
+        if rng.below(4) == 0 {
+            trace.push(Access::CachedStore { addr, bytes });
+        } else {
+            trace.push(Access::Cached { addr, bytes });
+        }
+    }
+    trace
+}
+
+/// Replay the cache-class trace through a real `CacheEngine`.
+fn engine_replay(trace: &[Access], cfg: CacheConfig) -> ptmc::controller::CacheStats {
+    let mut dram = Dram::new(DramConfig::default_ddr4());
+    let mut cache = CacheEngine::new(cfg);
+    let mut t = 0u64;
+    for a in trace {
+        t = match *a {
+            Access::Cached { addr, bytes } => cache.load(&mut dram, addr, bytes, t),
+            Access::CachedStore { addr, bytes } => cache.store(&mut dram, addr, bytes, t),
+            _ => t,
+        };
+    }
+    cache.stats().clone()
+}
+
+#[test]
+fn classifier_matches_cache_engine_on_the_default_grid() {
+    let configs = default_grid_configs();
+    assert!(
+        configs.len() >= 32,
+        "the default grid should contribute plenty of candidates"
+    );
+    forall("grid_classifier_vs_cache_engine", 10, |rng| {
+        let trace = random_cache_trace(rng);
+        let ct = CompressedTrace::compress(&trace);
+        let cls = GridClassification::classify(&ct, &configs);
+        for (i, cfg) in configs.iter().enumerate() {
+            let want = engine_replay(&trace, *cfg);
+            assert_eq!(
+                cls.cache_stats(i),
+                want,
+                "classifier diverged from CacheEngine for {cfg:?}"
+            );
+            assert_eq!(cls.hits(i), want.hits, "{cfg:?}");
+            assert_eq!(cls.misses(i), want.misses, "{cfg:?}");
+            assert_eq!(cls.accesses(i), want.accesses, "{cfg:?}");
+        }
+    });
+}
+
+#[test]
+fn classifier_obeys_mattson_inclusion_across_the_grid() {
+    // At a fixed line width and set count, hits are monotone in
+    // associativity; at fixed width and associativity, monotone in the
+    // number of lines.  (These orderings are what makes the one-pass
+    // classification possible at all, so pin them as properties.)
+    forall("grid_classifier_inclusion", 8, |rng| {
+        let trace = random_cache_trace(rng);
+        let ct = CompressedTrace::compress(&trace);
+
+        let assoc_chain: Vec<CacheConfig> = [1usize, 2, 4, 8]
+            .iter()
+            .map(|&assoc| CacheConfig {
+                line_bytes: 64,
+                num_lines: 256 * assoc,
+                assoc,
+                hit_latency: 2,
+            })
+            .collect();
+        let cls = GridClassification::classify(&ct, &assoc_chain);
+        for i in 1..assoc_chain.len() {
+            assert!(
+                cls.hits(i) >= cls.hits(i - 1),
+                "hits must grow with ways at fixed sets"
+            );
+        }
+
+        let size_chain: Vec<CacheConfig> = [256usize, 1024, 4096, 16384]
+            .iter()
+            .map(|&num_lines| CacheConfig {
+                line_bytes: 64,
+                num_lines,
+                assoc: 4,
+                hit_latency: 2,
+            })
+            .collect();
+        let cls = GridClassification::classify(&ct, &size_chain);
+        for i in 1..size_chain.len() {
+            assert!(
+                cls.hits(i) >= cls.hits(i - 1),
+                "hits must grow with capacity at fixed assoc"
+            );
+        }
+    });
+}
+
+#[test]
+fn store_dirty_state_tracks_per_candidate() {
+    // A dirty line evicted from a small cache but resident in a large
+    // one must write back only for the small candidate.
+    let small = CacheConfig {
+        line_bytes: 64,
+        num_lines: 2,
+        assoc: 2,
+        hit_latency: 1,
+    };
+    let large = CacheConfig {
+        line_bytes: 64,
+        num_lines: 8,
+        assoc: 8,
+        hit_latency: 1,
+    };
+    let trace = vec![
+        Access::CachedStore { addr: 0, bytes: 16 }, // dirty A
+        Access::Cached { addr: 64, bytes: 16 },     // B
+        Access::Cached { addr: 128, bytes: 16 },    // C evicts A in `small`
+        Access::Cached { addr: 0, bytes: 16 },      // A: miss small, hit large
+    ];
+    let ct = CompressedTrace::compress(&trace);
+    let cls = GridClassification::classify(&ct, &[small, large]);
+    assert_eq!(cls.cache_stats(0), engine_replay(&trace, small));
+    assert_eq!(cls.cache_stats(1), engine_replay(&trace, large));
+    assert_eq!(cls.cache_stats(0).writebacks, 1, "small cache writes A back");
+    assert_eq!(cls.cache_stats(1).writebacks, 0, "large cache keeps A dirty");
+}

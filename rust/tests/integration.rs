@@ -102,11 +102,7 @@ fn dse_winner_beats_loser_when_resimulated() {
         },
     );
     // Re-simulate best + a deliberately bad config with the cycle model.
-    let sim = Evaluator::CycleSim {
-        tensor: &t,
-        factors: &factors,
-        engine: EngineKind::Event,
-    };
+    let sim = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
     let best_cycles = sim.score(&ex.best.cfg, &dev).unwrap();
     let mut bad = base.clone();
     bad.cache.num_lines = 64;
@@ -129,13 +125,9 @@ fn pms_tracks_simulator_on_fresh_tensor() {
     let dev = Device::alveo_u250();
     let cfg = ControllerConfig::default_for(t.record_bytes());
     let est = pms::estimate_with_rank(&profile, &cfg, &dev, 16).total_cycles();
-    let sim = Evaluator::CycleSim {
-        tensor: &t,
-        factors: &factors,
-        engine: EngineKind::Lockstep,
-    }
-    .score(&cfg, &dev)
-    .unwrap();
+    let sim = Evaluator::cycle_sim(&t, &factors, EngineKind::Lockstep)
+        .score(&cfg, &dev)
+        .unwrap();
     let rel = (est - sim).abs() / sim;
     assert!(rel < 0.30, "PMS {est:.3e} vs sim {sim:.3e} ({rel:.2})");
 }

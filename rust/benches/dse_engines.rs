@@ -1,20 +1,24 @@
 //! E11 — simulation-engine comparison on the DSE scoring hot path: a
 //! sharded sweep ([`ptmc::shard::ShardedSweep`]) scores a cache-module
-//! grid and a DMA grid under the legacy lockstep core, the event-driven
-//! batched core, and — for the cache module — the one-pass grid core
-//! (stack-distance classification + miss-only replay,
-//! `ptmc::engine::grid`), all on the same prepared traces.
+//! grid, a DMA grid, and a DRAM/DMA timing grid under the legacy
+//! lockstep core, the event-driven batched core, and the two one-pass
+//! cores — the cache grid classifier (`ptmc::engine::grid`) and the
+//! vectorized timing core (`ptmc::engine::timing`) — all on the same
+//! prepared traces.
 //!
 //! The event core wins over lockstep three ways (compressed traces,
 //! concurrent shard replay, memoized remap — see PR 2).  The grid core
-//! wins over event structurally on the cache module: instead of
-//! replaying every trace once **per candidate**, one classification
+//! wins over event structurally on the cache module: one classification
 //! pass scores all `(num_lines, assoc)` candidates simultaneously
-//! (Mattson inclusion over per-set LRU stacks), and each candidate then
-//! replays only its ~miss stream plus the DMA runs, with hit runs
-//! folded to `n * hit_latency` in closed form.  Scores are asserted
-//! bit-identical across all three cores; only wall-clock differs.
-//! Target: grid >= 5x over event on the cache-module sweep.
+//! (Mattson inclusion), each candidate then replaying only its miss
+//! stream (PR 3).  The timing core wins the same way on the DRAM/DMA
+//! module sweep (PR 4): the cache candidate is fixed across that sweep,
+//! so one classification + op-queue extraction per shard feeds a single
+//! multi-lane walk that times every DRAM/DMA candidate at once — the
+//! hit-dominated cache loop runs once instead of once per candidate.
+//! Scores are asserted bit-identical across all cores; only wall-clock
+//! differs.  Targets: grid >= 5x over event on the cache-module sweep,
+//! timing core >= 4x over event on the DRAM/DMA sweep.
 //!
 //! Emits `bench_results/dse_engines.csv`,
 //! `bench_results/engine_speedup.json`, and a repo-root `BENCH_dse.json`
@@ -25,6 +29,7 @@ use std::time::Instant;
 
 use ptmc::bench::{fmt_cycles, fmt_speedup, sized, smoke, Table};
 use ptmc::controller::{CacheConfig, ControllerConfig, DmaConfig};
+use ptmc::dram::RowPolicy;
 use ptmc::engine::EngineKind;
 use ptmc::shard::ShardedSweep;
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
@@ -61,6 +66,30 @@ fn dma_grid(elem_bytes: usize) -> Vec<ControllerConfig> {
                 setup_cycles: 8,
             };
             grid.push(cfg);
+        }
+    }
+    grid
+}
+
+/// The DRAM/DMA timing grid (the PR 4 sweep): the base cache module is
+/// fixed while 3 DRAM timing variants (channels x row policy) cross 9
+/// DMA shapes — 27 candidates, 3 distinct remap-memo keys.
+fn timing_grid(elem_bytes: usize) -> Vec<ControllerConfig> {
+    let mut grid = Vec::new();
+    for &(channels, row_policy) in &[
+        (1usize, RowPolicy::Open),
+        (4, RowPolicy::Open),
+        (4, RowPolicy::Closed),
+    ] {
+        for &num_dmas in &[1usize, 2, 4] {
+            for &buffer_bytes in &[1024usize, 4096, 16384] {
+                let mut cfg = ControllerConfig::default_for(elem_bytes);
+                cfg.dram.channels = channels;
+                cfg.dram.row_policy = row_policy;
+                cfg.dma.num_dmas = num_dmas;
+                cfg.dma.buffer_bytes = buffer_bytes;
+                grid.push(cfg);
+            }
         }
     }
     grid
@@ -107,10 +136,12 @@ fn main() {
         })
         .collect();
 
+    let timing_count = timing_grid(t.record_bytes()).len();
     println!(
-        "preparing {workers}-worker sweeps ({} cache + {} DMA candidates)...",
+        "preparing {workers}-worker sweeps ({} cache + {} DMA + {} DRAM/DMA candidates)...",
         caches.len(),
-        dmas.len()
+        dmas.len(),
+        timing_count,
     );
 
     // Warm allocator and page cache once on a scratch sweep, asserting
@@ -168,6 +199,43 @@ fn main() {
         (sweep.makespans_for_cache_grid(&base, &caches), t2.elapsed())
     };
 
+    // --- DRAM/DMA timing sweep: the vectorized timing core's home
+    // turf (PR 4).  Each side gets a fresh sweep so it pays its own
+    // remap-memo warm-up inside its clock.
+    let timing_cfgs = timing_grid(t.record_bytes());
+    let (timing_event_scores, timing_event_wall) = {
+        let sweep = ShardedSweep::prepare(&t, rank, workers);
+        let t0 = Instant::now();
+        let scores: Vec<u64> = timing_cfgs
+            .iter()
+            .map(|cfg| sweep.makespan_with(cfg, EngineKind::Event))
+            .collect();
+        (scores, t0.elapsed())
+    };
+    let (timing_core_scores, timing_core_wall) = {
+        let sweep = ShardedSweep::prepare(&t, rank, workers);
+        let t0 = Instant::now();
+        (
+            sweep.makespans_for_timing_grid(&base, &timing_cfgs),
+            t0.elapsed(),
+        )
+    };
+
+    assert_eq!(
+        timing_event_scores, timing_core_scores,
+        "DRAM/DMA-sweep scores must be bit-identical (event vs timing core)"
+    );
+    let timing_best = (0..timing_event_scores.len())
+        .min_by_key(|&i| timing_event_scores[i])
+        .unwrap();
+    let timing_best_core = (0..timing_core_scores.len())
+        .min_by_key(|&i| timing_core_scores[i])
+        .unwrap();
+    assert_eq!(
+        timing_best, timing_best_core,
+        "timing core and event must select the same best DRAM/DMA configuration"
+    );
+
     assert_eq!(
         cache_lockstep, cache_event,
         "cache-module scores must be bit-identical (lockstep vs event)"
@@ -196,6 +264,7 @@ fn main() {
         (cache_lockstep_wall + dma_lockstep_wall).as_secs_f64()
             / (cache_event_wall + dma_event_wall).as_secs_f64();
     let grid_speedup = cache_event_wall.as_secs_f64() / cache_grid_wall.as_secs_f64();
+    let timing_speedup = timing_event_wall.as_secs_f64() / timing_core_wall.as_secs_f64();
 
     let mut tbl = Table::new(&["sweep", "engine", "configs", "wall ms", "speedup", "best cycles"]);
     let ms = |d: std::time::Duration| format!("{:.0}", d.as_secs_f64() * 1e3);
@@ -241,8 +310,26 @@ fn main() {
         fmt_speedup(dma_lockstep_wall.as_secs_f64() / dma_event_wall.as_secs_f64()),
         fmt_cycles(best_dma),
     ]);
+    let best_timing = *timing_event_scores.iter().min().unwrap();
+    tbl.row(&[
+        "dram+dma".into(),
+        "event".into(),
+        timing_cfgs.len().to_string(),
+        ms(timing_event_wall),
+        "1.00x".into(),
+        fmt_cycles(best_timing),
+    ]);
+    tbl.row(&[
+        "dram+dma".into(),
+        "timing (one-walk)".into(),
+        timing_cfgs.len().to_string(),
+        ms(timing_core_wall),
+        fmt_speedup(timing_speedup),
+        fmt_cycles(best_timing),
+    ]);
     tbl.emit(
-        "E11 — DSE sweep scoring: lockstep vs event vs one-pass grid (identical scores)",
+        "E11 — DSE sweep scoring: lockstep vs event vs one-pass grid/timing cores \
+         (identical scores)",
         Some(std::path::Path::new("bench_results/dse_engines.csv")),
     );
 
@@ -258,7 +345,7 @@ fn main() {
         (cache_event_wall + dma_event_wall).as_secs_f64() * 1e3,
     );
     let bench_json = format!(
-        "{{\n  \"bench\": \"dse_engines\",\n  \"pr\": 3,\n  \"nnz\": {nnz},\n  \
+        "{{\n  \"bench\": \"dse_engines\",\n  \"pr\": 4,\n  \"nnz\": {nnz},\n  \
          \"workers\": {workers},\n  \"rank\": {rank},\n  \"smoke\": {},\n  \
          \"cache_sweep\": {{\n    \"configs\": {},\n    \
          \"lockstep_ms\": {:.1},\n    \"event_ms\": {:.1},\n    \
@@ -266,6 +353,10 @@ fn main() {
          \"best_index\": {best_idx},\n    \"per_candidate_cycles\": [{}]\n  }},\n  \
          \"dma_sweep\": {{\n    \"configs\": {},\n    \"lockstep_ms\": {:.1},\n    \
          \"event_ms\": {:.1}\n  }},\n  \
+         \"timing_sweep\": {{\n    \"configs\": {},\n    \"event_ms\": {:.1},\n    \
+         \"timing_core_ms\": {:.1},\n    \
+         \"timing_vs_event_speedup\": {timing_speedup:.2},\n    \
+         \"best_index\": {timing_best},\n    \"per_candidate_cycles\": [{}]\n  }},\n  \
          \"event_vs_lockstep_speedup\": {event_speedup:.2}\n}}\n",
         smoke(),
         caches.len(),
@@ -276,6 +367,14 @@ fn main() {
         dmas.len(),
         dma_lockstep_wall.as_secs_f64() * 1e3,
         dma_event_wall.as_secs_f64() * 1e3,
+        timing_cfgs.len(),
+        timing_event_wall.as_secs_f64() * 1e3,
+        timing_core_wall.as_secs_f64() * 1e3,
+        timing_event_scores
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(", "),
     );
     let _ = std::fs::create_dir_all("bench_results");
     if let Err(e) = std::fs::write("bench_results/engine_speedup.json", &json) {
@@ -290,11 +389,12 @@ fn main() {
     print!("{json}");
     println!(
         "cache sweep: grid {grid_speedup:.2}x over event; \
+         dram+dma sweep: timing core {timing_speedup:.2}x over event; \
          full sweep: event {event_speedup:.2}x over lockstep"
     );
 
     if !smoke() {
-        // The PR 3 acceptance claim.  Wall-clock ratios are host
+        // The PR 3/4 acceptance claims.  Wall-clock ratios are host
         // noise on loaded or low-core machines, so a shortfall warns
         // by default and only fails under PTMC_BENCH_ENFORCE=1 (set it
         // for acceptance runs on a quiet multi-core host).
@@ -308,6 +408,21 @@ fn main() {
             println!("WARNING: {msg}");
         } else {
             println!("grid core >= 5x cache-sweep target met ({grid_speedup:.2}x). OK");
+        }
+        if timing_speedup < 4.0 {
+            let msg = format!(
+                "timing core below the 4x DRAM/DMA-sweep target: \
+                 {timing_speedup:.2}x over event"
+            );
+            assert!(
+                std::env::var_os("PTMC_BENCH_ENFORCE").is_none(),
+                "{msg}"
+            );
+            println!("WARNING: {msg}");
+        } else {
+            println!(
+                "timing core >= 4x DRAM/DMA-sweep target met ({timing_speedup:.2}x). OK"
+            );
         }
         if event_speedup < 3.0 {
             println!(

@@ -192,6 +192,13 @@ impl Config {
             self.usize_or("remapper", "buffer_bytes", c.remapper.buffer_bytes);
         c.dram.channels = self.usize_or("dram", "channels", c.dram.channels);
         c.dram.banks = self.usize_or("dram", "banks", c.dram.banks);
+        if let Some(policy) = self
+            .get("dram", "row_policy")
+            .and_then(Value::as_str)
+            .and_then(|p| p.parse().ok())
+        {
+            c.dram.row_policy = policy;
+        }
         c
     }
 
@@ -246,6 +253,18 @@ line_bytes = 128
         assert_eq!(als.rank, 32);
         assert_eq!(als.max_iters, 20); // default
         assert!((als.tol - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dram_row_policy_key_parses() {
+        let c = Config::parse("[dram]\nrow_policy = \"closed\"\nbanks = 8\n").unwrap();
+        let ctl = c.controller(16);
+        assert_eq!(ctl.dram.row_policy, crate::dram::RowPolicy::Closed);
+        assert_eq!(ctl.dram.banks, 8);
+        // Unknown policy strings fall back to the default silently,
+        // like every other defaulted config key.
+        let c = Config::parse("[dram]\nrow_policy = \"adaptive\"\n").unwrap();
+        assert_eq!(c.controller(16).dram.row_policy, crate::dram::RowPolicy::Open);
     }
 
     #[test]

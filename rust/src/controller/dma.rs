@@ -74,11 +74,18 @@ impl DmaStats {
 }
 
 /// The DMA Engine simulator.
+///
+/// In-flight buffer state is one flat queue-depth vector over all
+/// (dma, slot) pairs (`slots[dma * buffers_per_dma + slot]`) — the
+/// structure-of-arrays form the vectorized multi-candidate timing core
+/// ([`crate::engine::timing`]) relies on to keep per-candidate engines
+/// allocation-flat.
 #[derive(Debug, Clone)]
 pub struct DmaEngine {
     cfg: DmaConfig,
-    /// Completion time of each in-flight buffer slot, per DMA.
-    slots: Vec<Vec<u64>>,
+    /// Completion time of each in-flight buffer slot, flattened over
+    /// DMAs with stride `buffers_per_dma`.
+    slots: Vec<u64>,
     stats: DmaStats,
     /// Round-robin cursor for stream-to-DMA assignment.
     next_dma: usize,
@@ -89,7 +96,7 @@ impl DmaEngine {
         cfg.validate();
         DmaEngine {
             cfg,
-            slots: vec![vec![0; cfg.buffers_per_dma]; cfg.num_dmas],
+            slots: vec![0; cfg.buffers_per_dma * cfg.num_dmas],
             stats: DmaStats::default(),
             next_dma: 0,
         }
@@ -104,9 +111,7 @@ impl DmaEngine {
     }
 
     pub fn reset(&mut self) {
-        for s in &mut self.slots {
-            s.iter_mut().for_each(|t| *t = 0);
-        }
+        self.slots.iter_mut().for_each(|t| *t = 0);
         self.stats = DmaStats::default();
         self.next_dma = 0;
     }
@@ -122,6 +127,7 @@ impl DmaEngine {
         self.stats.stream_bytes += bytes as u64;
         let dma = self.next_dma;
         self.next_dma = (self.next_dma + 1) % self.cfg.num_dmas;
+        let slot_base = dma * self.cfg.buffers_per_dma;
 
         let mut done = now;
         let mut off = 0usize;
@@ -129,10 +135,10 @@ impl DmaEngine {
         while off < bytes {
             let chunk = (bytes - off).min(self.cfg.buffer_bytes);
             // The chunk may issue as soon as its buffer slot is free.
-            let slot_free = self.slots[dma][slot];
+            let slot_free = self.slots[slot_base + slot];
             let start = now.max(slot_free) + self.cfg.setup_cycles;
             let t = dram.access(addr + off as u64, chunk, start);
-            self.slots[dma][slot] = t;
+            self.slots[slot_base + slot] = t;
             done = done.max(t);
             self.stats.chunks += 1;
             off += chunk;

@@ -79,6 +79,7 @@ mod tests {
             t_rp: 1,
             t_cl: 1,
             t_burst: 1,
+            row_policy: crate::dram::RowPolicy::Open,
         }
     }
 

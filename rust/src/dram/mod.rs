@@ -8,7 +8,14 @@
 //! time. It is due to the characteristics of the DRAM").  This module
 //! reproduces exactly that asymmetry with a bank/row-buffer state model
 //! driven by request traces: per-bank open row, tRCD / tRP / tCL / tBURST
-//! timing classes, and multi-channel parallelism.
+//! timing classes, multi-channel parallelism, and an open- vs
+//! closed-page row policy.
+//!
+//! Device state is kept in flat structure-of-arrays form — one
+//! row-state vector and one ready-clock vector over all (channel, bank)
+//! pairs plus one bus clock per channel — so the vectorized
+//! multi-candidate timing core ([`crate::engine::timing`]) can hold an
+//! array of per-candidate devices without nested allocations.
 //!
 //! Times are in *memory-controller cycles*; [`DramConfig::default_ddr4`]
 //! maps to DDR4-2400-class timings at the controller clock.
@@ -16,6 +23,45 @@
 pub mod address;
 
 pub use address::{AddressMap, Mapped};
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Row-buffer management policy (one of the paper's §2 memory-controller
+/// parameters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RowPolicy {
+    /// Open page: rows stay open after an access; subsequent same-row
+    /// bursts hit (tCL only), different-row bursts pay a precharge
+    /// conflict (tRP + tRCD + tCL).  Wins on streaming locality.
+    #[default]
+    Open,
+    /// Closed page (auto-precharge): every burst re-activates its row
+    /// (tRCD + tCL) but never pays a precharge on the critical path.
+    /// Wins on locality-free random access.
+    Closed,
+}
+
+impl FromStr for RowPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "open" => Ok(RowPolicy::Open),
+            "closed" => Ok(RowPolicy::Closed),
+            other => Err(format!("unknown row policy {other:?} (open|closed)")),
+        }
+    }
+}
+
+impl fmt::Display for RowPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            RowPolicy::Open => "open",
+            RowPolicy::Closed => "closed",
+        })
+    }
+}
 
 /// DRAM timing / geometry parameters.  `Hash` so configuration tuples
 /// can key memoization tables (the event engine's remap-pass memo,
@@ -38,12 +84,14 @@ pub struct DramConfig {
     pub t_cl: u64,
     /// Data transfer time of one burst (cycles).
     pub t_burst: u64,
+    /// Row-buffer management policy (open vs closed page).
+    pub row_policy: RowPolicy,
 }
 
 impl DramConfig {
     /// DDR4-2400-like single-DIMM config at a 300 MHz controller clock:
     /// 16 banks, 8 KiB rows, 64 B bursts, tRCD=tRP=tCL≈5 controller
-    /// cycles, burst occupies the bus for 2 cycles.
+    /// cycles, burst occupies the bus for 2 cycles, open-page policy.
     pub fn default_ddr4() -> Self {
         DramConfig {
             channels: 1,
@@ -54,6 +102,7 @@ impl DramConfig {
             t_rp: 5,
             t_cl: 5,
             t_burst: 2,
+            row_policy: RowPolicy::Open,
         }
     }
 
@@ -71,12 +120,13 @@ impl DramConfig {
     }
 }
 
-/// Outcome class of one burst access (row-buffer policy: open page).
+/// Outcome class of one burst access.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RowOutcome {
     /// Row already open: tCL + tBURST.
     Hit,
-    /// Bank idle (no open row): tRCD + tCL + tBURST.
+    /// Bank idle (no open row): tRCD + tCL + tBURST.  Under the closed
+    /// policy every burst lands here after the auto-precharge.
     Miss,
     /// Different row open: tRP + tRCD + tCL + tBURST.
     Conflict,
@@ -119,47 +169,42 @@ impl DramStats {
     }
 }
 
-/// Bank state: the open row, if any.
-#[derive(Debug, Clone, Copy, Default)]
-struct Bank {
-    open_row: Option<u64>,
-    /// Cycle at which this bank finishes its last operation.
-    ready_at: u64,
-}
-
-/// One DRAM channel: banks + a shared data bus.
-#[derive(Debug, Clone)]
-struct Channel {
-    banks: Vec<Bank>,
-    /// Cycle at which the data bus is next free.
-    bus_free_at: u64,
-}
+/// Sentinel row value marking a precharged (no open row) bank in the
+/// flat row-state vector.  Real row indices are addresses shifted right
+/// by at least the burst bits, so they can never reach `u64::MAX`.
+const NO_OPEN_ROW: u64 = u64::MAX;
 
 /// The DRAM device model.  Drive it with [`Dram::access`] calls carrying
 /// absolute byte addresses and lengths; it splits them into bursts,
 /// updates bank state, and advances per-channel time.  `now` lets the
 /// caller model idle gaps; the device never goes back in time.
+///
+/// State lives in flat vectors (see module docs): `open_rows` /
+/// `bank_ready` are indexed by `channel * banks + bank`, `bus_free` by
+/// channel.
 #[derive(Debug, Clone)]
 pub struct Dram {
     cfg: DramConfig,
     map: AddressMap,
-    channels: Vec<Channel>,
+    /// Open row per (channel, bank), `NO_OPEN_ROW` when precharged.
+    open_rows: Vec<u64>,
+    /// Cycle at which each (channel, bank) can issue its next command.
+    bank_ready: Vec<u64>,
+    /// Cycle at which each channel's data bus is next free.
+    bus_free: Vec<u64>,
     stats: DramStats,
 }
 
 impl Dram {
     pub fn new(cfg: DramConfig) -> Self {
         let map = AddressMap::new(&cfg);
-        let channels = (0..cfg.channels)
-            .map(|_| Channel {
-                banks: vec![Bank::default(); cfg.banks],
-                bus_free_at: 0,
-            })
-            .collect();
+        let slots = cfg.channels * cfg.banks;
         Dram {
+            open_rows: vec![NO_OPEN_ROW; slots],
+            bank_ready: vec![0; slots],
+            bus_free: vec![0; cfg.channels],
             cfg,
             map,
-            channels,
             stats: DramStats::default(),
         }
     }
@@ -174,12 +219,9 @@ impl Dram {
 
     /// Reset bank/bus state and statistics (fresh epoch).
     pub fn reset(&mut self) {
-        for ch in &mut self.channels {
-            ch.bus_free_at = 0;
-            for b in &mut ch.banks {
-                *b = Bank::default();
-            }
-        }
+        self.open_rows.iter_mut().for_each(|r| *r = NO_OPEN_ROW);
+        self.bank_ready.iter_mut().for_each(|t| *t = 0);
+        self.bus_free.iter_mut().for_each(|t| *t = 0);
         self.stats = DramStats::default();
     }
 
@@ -201,13 +243,15 @@ impl Dram {
     /// One burst access; returns completion cycle.
     fn access_burst(&mut self, addr: u64, start: u64) -> u64 {
         let m = self.map.map(addr);
-        let ch = &mut self.channels[m.channel];
-        let bank = &mut ch.banks[m.bank];
+        let slot = m.channel * self.cfg.banks + m.bank;
 
-        let outcome = match bank.open_row {
-            Some(r) if r == m.row => RowOutcome::Hit,
-            Some(_) => RowOutcome::Conflict,
-            None => RowOutcome::Miss,
+        let open = self.open_rows[slot];
+        let outcome = if open == m.row {
+            RowOutcome::Hit
+        } else if open == NO_OPEN_ROW {
+            RowOutcome::Miss
+        } else {
+            RowOutcome::Conflict
         };
         let (lat_pre, class) = match outcome {
             RowOutcome::Hit => (self.cfg.t_cl, &mut self.stats.row_hits),
@@ -223,18 +267,30 @@ impl Dram {
 
         // Command issues when both the bank and the caller are ready;
         // data needs the bus after the access latency.
-        let issue = start.max(bank.ready_at);
-        let data_start = (issue + lat_pre).max(ch.bus_free_at);
+        let issue = start.max(self.bank_ready[slot]);
+        let data_start = (issue + lat_pre).max(self.bus_free[m.channel]);
         let done = data_start + self.cfg.t_burst;
-        bank.open_row = Some(m.row);
-        bank.ready_at = data_start; // next access to this bank can overlap CAS
-        ch.bus_free_at = done;
+        match self.cfg.row_policy {
+            RowPolicy::Open => {
+                // Row stays open; the next access to this bank can
+                // overlap its CAS with this burst's data phase.
+                self.open_rows[slot] = m.row;
+                self.bank_ready[slot] = data_start;
+            }
+            RowPolicy::Closed => {
+                // Auto-precharge: the bank closes behind the burst and
+                // can re-activate once the data phase completes.
+                self.open_rows[slot] = NO_OPEN_ROW;
+                self.bank_ready[slot] = done;
+            }
+        }
+        self.bus_free[m.channel] = done;
         done
     }
 
     /// Current makespan: max completion across channels.
     pub fn makespan(&self) -> u64 {
-        self.channels.iter().map(|c| c.bus_free_at).max().unwrap_or(0)
+        self.bus_free.iter().copied().max().unwrap_or(0)
     }
 }
 
@@ -252,6 +308,7 @@ mod tests {
             t_rp: 5,
             t_cl: 5,
             t_burst: 2,
+            row_policy: RowPolicy::Open,
         }
     }
 
@@ -366,5 +423,75 @@ mod tests {
     fn peak_bandwidth_formula() {
         let cfg = DramConfig::default_ddr4();
         assert!((cfg.peak_bytes_per_cycle() - 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_policy_parses_and_displays() {
+        assert_eq!("open".parse::<RowPolicy>().unwrap(), RowPolicy::Open);
+        assert_eq!("closed".parse::<RowPolicy>().unwrap(), RowPolicy::Closed);
+        assert!("adaptive".parse::<RowPolicy>().is_err());
+        assert_eq!(RowPolicy::Open.to_string(), "open");
+        assert_eq!(RowPolicy::Closed.to_string(), "closed");
+        assert_eq!(RowPolicy::default(), RowPolicy::Open);
+    }
+
+    #[test]
+    fn closed_policy_never_hits_or_conflicts() {
+        let mut cfg = one_bank_cfg();
+        cfg.row_policy = RowPolicy::Closed;
+        let mut d = Dram::new(cfg);
+        let mut t = 0;
+        for i in 0..8u64 {
+            // Alternate rows: under open page these would conflict.
+            t = d.access((i % 2) * 4096, 64, t);
+        }
+        assert_eq!(d.stats().row_hits, 0);
+        assert_eq!(d.stats().row_conflicts, 0);
+        assert_eq!(d.stats().row_misses, 8);
+    }
+
+    #[test]
+    fn closed_policy_beats_open_on_row_conflicts() {
+        // Ping-pong between two rows of one bank: open page pays tRP on
+        // every access, closed page pre-charges for free in the shadow
+        // of the burst.
+        let run = |policy: RowPolicy| {
+            let mut cfg = one_bank_cfg();
+            cfg.row_policy = policy;
+            let mut d = Dram::new(cfg);
+            let mut t = 0;
+            for i in 0..64u64 {
+                t = d.access((i % 2) * 4096, 64, t);
+            }
+            t
+        };
+        let open = run(RowPolicy::Open);
+        let closed = run(RowPolicy::Closed);
+        assert!(
+            closed < open,
+            "closed {closed} must beat open {open} on conflict-heavy access"
+        );
+    }
+
+    #[test]
+    fn open_policy_beats_closed_on_streaming() {
+        // Sequential bursts within one row: open page hits after the
+        // first activate, closed page re-activates every burst.
+        let run = |policy: RowPolicy| {
+            let mut cfg = one_bank_cfg();
+            cfg.row_policy = policy;
+            let mut d = Dram::new(cfg);
+            let mut t = 0;
+            for i in 0..16u64 {
+                t = d.access(i * 64, 64, t);
+            }
+            t
+        };
+        let open = run(RowPolicy::Open);
+        let closed = run(RowPolicy::Closed);
+        assert!(
+            open < closed,
+            "open {open} must beat closed {closed} on streaming"
+        );
     }
 }

@@ -12,26 +12,31 @@
 //! Candidates within one module sweep are independent, so
 //! [`explore`] scores each module's grid as a batch
 //! ([`Evaluator::score_batch`]): candidates fan out across host threads,
-//! and — under the grid engine ([`EngineKind::Grid`]) — the whole
-//! cache-module grid is classified in **one trace pass** by the
-//! stack-distance grid core ([`crate::engine::grid`]), leaving only each
-//! candidate's miss stream to be timed.  Scores are bit-identical to
-//! per-candidate scoring under either classic engine.
+//! and — under the grid engine ([`EngineKind::Grid`]) — the cross
+//! product factorizes.  The whole cache-module grid is classified in
+//! **one trace pass** by the stack-distance grid core
+//! ([`crate::engine::grid`]), leaving only each candidate's miss stream
+//! to be timed; and a DRAM/DMA (timing-module) sweep runs through the
+//! vectorized timing core ([`crate::engine::timing`]) — classify once
+//! per line geometry, extract the miss/stream op queue once per cache
+//! candidate, then time all DRAM/DMA candidates in one walk of that
+//! queue.  Scores are bit-identical to per-candidate scoring under
+//! either classic engine.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
-use std::thread;
 
 use crate::controller::{
     CacheConfig, ControllerConfig, DmaConfig, MemLayout, MemoryController, RemapperConfig,
 };
 use crate::cpd::linalg::Mat;
-use crate::dram::DramConfig;
-use crate::engine::{EngineKind, GridClassification, PreparedTrace};
+use crate::dram::{DramConfig, RowPolicy};
+use crate::engine::{EngineKind, GridClassification, PreparedTrace, TimingCandidate, TimingOps};
 use crate::fpga::{self, Device};
 use crate::mttkrp::{approach1, Tracing};
 use crate::pms::{self, TensorProfile};
 use crate::tensor::{remap, Coord, SparseTensor};
+use crate::util::parallel_indexed;
 
 /// Key of one memoized remap-pass simulation (see
 /// [`crate::shard::ShardedSweep`], which uses the same keying).
@@ -169,7 +174,7 @@ impl Evaluator<'_> {
     /// True when `cfg` is realizable on `dev` under this evaluator's
     /// deployment model.
     pub fn feasible(&self, cfg: &ControllerConfig, dev: &Device) -> bool {
-        if !fpga::estimate(cfg, dev).fits {
+        if !device_feasible(cfg, dev) {
             return false;
         }
         match self {
@@ -178,10 +183,10 @@ impl Evaluator<'_> {
                 // device: each needs a 1/K slice of the block budget
                 // (the whole-device check above only covers one
                 // instance), and each instance owns a DRAM channel
-                // group, so the device must have K channel groups and
-                // the configured bus must exist on the board.
+                // group, so the device must have K channel groups
+                // (channels-vs-board itself is device_feasible's job).
                 let w = sweep.workers();
-                if w > dev.dram_channels || cfg.dram.channels > dev.dram_channels {
+                if w > dev.dram_channels {
                     return false;
                 }
                 let slice = Device {
@@ -218,10 +223,14 @@ impl Evaluator<'_> {
     /// Score a batch of candidate configurations; returns one score per
     /// candidate in input order (`None` = does not fit the device).
     /// Candidates are independent, so the generic path fans them out
-    /// across host threads; a **cache-module sweep** (all candidates
-    /// sharing DRAM/DMA/remapper knobs) under the grid engine is scored
-    /// by the one-pass grid core instead — same scores, one trace
-    /// classification for the whole batch.
+    /// across host threads.  Under the grid engine the cross product is
+    /// factorized instead: a **cache-module sweep** (all candidates
+    /// sharing DRAM/DMA/remapper knobs) is scored by the one-pass grid
+    /// core — one trace classification for the whole batch — and a
+    /// **timing-module sweep** (all candidates sharing the cache
+    /// module; DRAM/DMA/remapper free) by the vectorized timing core —
+    /// classify once, extract the miss/stream op queue once, then time
+    /// every DRAM/DMA candidate in one walk.  Same scores either way.
     pub fn score_batch(&self, cfgs: &[ControllerConfig], dev: &Device) -> Vec<Option<f64>> {
         if cfgs.is_empty() {
             return Vec::new();
@@ -236,6 +245,19 @@ impl Evaluator<'_> {
                 } => return cycle_sim_grid_batch(tensor, factors, memo, cfgs, dev),
                 Evaluator::ShardedSim { sweep } if sweep.engine() == EngineKind::Grid => {
                     return self.sharded_grid_batch(sweep, cfgs, dev)
+                }
+                _ => {}
+            }
+        } else if cfgs.len() >= 2 && timing_module_sweep(cfgs) {
+            match self {
+                Evaluator::CycleSim {
+                    tensor,
+                    factors,
+                    engine: EngineKind::Grid,
+                    memo,
+                } => return cycle_sim_timing_batch(tensor, factors, memo, cfgs, dev),
+                Evaluator::ShardedSim { sweep } if sweep.engine() == EngineKind::Grid => {
+                    return self.sharded_timing_batch(sweep, cfgs, dev)
                 }
                 _ => {}
             }
@@ -317,6 +339,41 @@ impl Evaluator<'_> {
             })
             .collect()
     }
+
+    /// Timing-module batch under the sharded evaluator: feasibility per
+    /// candidate, then one classification + op-queue walk per shard
+    /// trace times every feasible candidate's lanes simultaneously
+    /// ([`crate::shard::ShardedSweep::makespans_for_timing_grid`]).
+    fn sharded_timing_batch(
+        &self,
+        sweep: &crate::shard::ShardedSweep<'_>,
+        cfgs: &[ControllerConfig],
+        dev: &Device,
+    ) -> Vec<Option<f64>> {
+        let feasible: Vec<bool> = cfgs.iter().map(|c| self.feasible(c, dev)).collect();
+        let live: Vec<ControllerConfig> = cfgs
+            .iter()
+            .zip(&feasible)
+            .filter(|&(_, &ok)| ok)
+            .map(|(c, _)| c.clone())
+            .collect();
+        if live.is_empty() {
+            return vec![None; cfgs.len()];
+        }
+        let base = live[0].clone();
+        let scores = sweep.makespans_for_timing_grid(&base, &live);
+        let mut it = scores.into_iter();
+        feasible
+            .iter()
+            .map(|&ok| {
+                if ok {
+                    Some(it.next().expect("one timing score per feasible candidate") as f64)
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
 }
 
 /// CycleSim score of one configuration: Σ over modes of (memoized
@@ -353,7 +410,7 @@ fn cycle_sim_grid_batch(
     cfgs: &[ControllerConfig],
     dev: &Device,
 ) -> Vec<Option<f64>> {
-    let feasible: Vec<bool> = cfgs.iter().map(|c| fpga::estimate(c, dev).fits).collect();
+    let feasible: Vec<bool> = cfgs.iter().map(|c| device_feasible(c, dev)).collect();
     let caches: Vec<CacheConfig> = cfgs
         .iter()
         .zip(&feasible)
@@ -404,6 +461,79 @@ fn cycle_sim_grid_batch(
         .collect()
 }
 
+/// DRAM/DMA (and remapper) module batch under CycleSim + grid engine:
+/// the cache module is fixed across the batch, so **one**
+/// single-candidate classification per mode trace feeds the vectorized
+/// timing core ([`crate::engine::timing`]) — the hit-dominated cache
+/// loop runs once per mode and every candidate is then timed from the
+/// shared miss/stream op queue in one walk.  Remap totals are
+/// candidate-dependent (keyed (mode, DRAM, remapper)) but memoized, so
+/// each distinct key simulates once for the whole batch.
+fn cycle_sim_timing_batch(
+    tensor: &SparseTensor,
+    factors: &[Mat],
+    memo: &SimMemo,
+    cfgs: &[ControllerConfig],
+    dev: &Device,
+) -> Vec<Option<f64>> {
+    let feasible: Vec<bool> = cfgs.iter().map(|c| device_feasible(c, dev)).collect();
+    let live: Vec<&ControllerConfig> = cfgs
+        .iter()
+        .zip(&feasible)
+        .filter(|&(_, &ok)| ok)
+        .map(|(c, _)| c)
+        .collect();
+    if live.is_empty() {
+        return vec![None; cfgs.len()];
+    }
+    let rank = factors[0].cols();
+    let layout = MemLayout::plan(tensor.dims(), tensor.nnz(), tensor.record_bytes(), rank);
+    let prep = memo.prep(tensor, factors, &layout);
+    let remap_totals: Vec<u64> = live
+        .iter()
+        .map(|cfg| {
+            prep.iter()
+                .enumerate()
+                .map(|(mode, p)| memo.remap_cycles(p, mode, tensor.dims()[mode], &layout, cfg))
+                .sum()
+        })
+        .collect();
+    // Candidates differing only in remapper knobs share a lane: time
+    // each distinct (DRAM, DMA) pair once.
+    let (lanes, lane_of) =
+        TimingCandidate::dedup(live.iter().map(|c| TimingCandidate::of(c)).collect());
+    let cache = cfgs[0].cache;
+    let mut compute = vec![0u64; live.len()];
+    for p in prep.iter() {
+        let cls = GridClassification::classify(p.trace.compressed(), &[cache]);
+        let ops = TimingOps::extract(&cls, 0, p.trace.compressed());
+        let runs = ops.time_grid_parallel(&lanes);
+        for (total, &lane) in compute.iter_mut().zip(&lane_of) {
+            *total += runs[lane].cycles;
+        }
+    }
+    let mut it = remap_totals.into_iter().zip(compute);
+    feasible
+        .iter()
+        .map(|&ok| {
+            if ok {
+                let (remap, comp) = it.next().expect("one score per feasible candidate");
+                Some((remap + comp) as f64)
+            } else {
+                None
+            }
+        })
+        .collect()
+}
+
+/// Device-level feasibility shared by every evaluator: the on-chip
+/// blocks must fit the device budget, and the configured DRAM bus must
+/// exist on the board (a sweep over channel counts must not "win" with
+/// channels the device does not have).
+fn device_feasible(cfg: &ControllerConfig, dev: &Device) -> bool {
+    fpga::estimate(cfg, dev).fits && cfg.dram.channels <= dev.dram_channels
+}
+
 /// True when every candidate shares the non-cache knobs of the first —
 /// the shape of a cache-module sweep.
 fn cache_module_sweep(cfgs: &[ControllerConfig]) -> bool {
@@ -412,40 +542,12 @@ fn cache_module_sweep(cfgs: &[ControllerConfig]) -> bool {
         .all(|c| c.dram == base.dram && c.dma == base.dma && c.remapper == base.remapper)
 }
 
-/// Run `f(i)` for `i in 0..n` on up to `available_parallelism` scoped
-/// host threads (contiguous chunks); results come back in index order,
-/// so callers are deterministic regardless of thread timing.
-fn parallel_indexed<T, F>(n: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    if n == 0 {
-        return Vec::new();
-    }
-    let threads = thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(n);
-    if threads <= 1 {
-        return (0..n).map(f).collect();
-    }
-    let chunk = n.div_ceil(threads);
-    let f = &f;
-    let chunks: Vec<Vec<T>> = thread::scope(|scope| {
-        let handles: Vec<_> = (0..n)
-            .step_by(chunk)
-            .map(|start| {
-                let end = (start + chunk).min(n);
-                scope.spawn(move || (start..end).map(f).collect::<Vec<T>>())
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("dse scoring worker panicked"))
-            .collect()
-    });
-    chunks.into_iter().flatten().collect()
+/// True when every candidate shares the first's cache module — the
+/// shape of a DRAM / DMA / remapper (timing-dimension) sweep, which the
+/// vectorized timing core scores from one shared op queue.
+fn timing_module_sweep(cfgs: &[ControllerConfig]) -> bool {
+    let base = &cfgs[0];
+    cfgs.iter().all(|c| c.cache == base.cache)
 }
 
 /// One explored point.
@@ -467,7 +569,8 @@ pub struct Exploration {
     pub rejected: usize,
 }
 
-/// Default sweep grids (§5.2.1 parameters).
+/// Default sweep grids (§5.2.1 parameters plus the paper's §2 DRAM
+/// knobs: channel/bank counts and the row-buffer policy).
 pub struct Grids {
     pub cache_line_bytes: Vec<usize>,
     pub cache_num_lines: Vec<usize>,
@@ -475,6 +578,13 @@ pub struct Grids {
     pub dma_num: Vec<usize>,
     pub dma_buffers: Vec<usize>,
     pub dma_buffer_bytes: Vec<usize>,
+    /// DRAM channels (power of two; candidates beyond the device's
+    /// channel count are rejected as infeasible).
+    pub dram_channels: Vec<usize>,
+    /// Banks per DRAM channel (power of two).
+    pub dram_banks: Vec<usize>,
+    /// Open- vs closed-page row policy.
+    pub dram_row_policy: Vec<RowPolicy>,
     pub remap_max_pointers: Vec<usize>,
 }
 
@@ -487,6 +597,9 @@ impl Default for Grids {
             dma_num: vec![1, 2, 4],
             dma_buffers: vec![1, 2, 4],
             dma_buffer_bytes: vec![1024, 4096, 16384],
+            dram_channels: vec![1, 2, 4],
+            dram_banks: vec![8, 16],
+            dram_row_policy: vec![RowPolicy::Open, RowPolicy::Closed],
             remap_max_pointers: vec![1 << 10, 1 << 14, 1 << 18, 1 << 22],
         }
     }
@@ -530,9 +643,13 @@ fn sweep_module(
 }
 
 /// Run the module-by-module exhaustive search starting from `base`.
-/// Order: Cache Engine grid, then DMA Engine, then Tensor Remapper —
-/// each module fixed to its best before the next is swept.  Every
-/// module's grid is scored as one batch ([`Evaluator::score_batch`]).
+/// Order: Cache Engine grid, then DMA Engine, then DRAM timing
+/// (channels/banks/row policy), then Tensor Remapper — each module
+/// fixed to its best before the next is swept.  Every module's grid is
+/// scored as one batch ([`Evaluator::score_batch`]), so under the grid
+/// engine the cross product factorizes: the cache sweep classifies all
+/// cache candidates in one trace pass, and the DMA/DRAM sweeps each
+/// vector-time all their candidates from one shared op queue.
 pub fn explore(
     base: &ControllerConfig,
     grids: &Grids,
@@ -587,7 +704,29 @@ pub fn explore(
     }
     sweep_module(eval, dev, cands, &mut best_point, &mut visited, &mut rejected);
 
-    // --- Module 3: Tensor Remapper ---
+    // --- Module 3: DRAM timing (channels x banks x row policy) ---
+    // Under the grid engine this whole sweep is a timing-module batch:
+    // one cache classification pass per mode feeds the vectorized
+    // timing core, which walks the shared op queue once for all
+    // candidates.
+    let mut cands = Vec::new();
+    for &channels in &grids.dram_channels {
+        for &banks in &grids.dram_banks {
+            for &row_policy in &grids.dram_row_policy {
+                if !channels.is_power_of_two() || !banks.is_power_of_two() {
+                    continue;
+                }
+                let mut cfg = best_point.cfg.clone();
+                cfg.dram.channels = channels;
+                cfg.dram.banks = banks;
+                cfg.dram.row_policy = row_policy;
+                cands.push(cfg);
+            }
+        }
+    }
+    sweep_module(eval, dev, cands, &mut best_point, &mut visited, &mut rejected);
+
+    // --- Module 4: Tensor Remapper ---
     let mut cands = Vec::new();
     for &max_pointers in &grids.remap_max_pointers {
         let mut cfg = best_point.cfg.clone();
@@ -697,6 +836,9 @@ mod tests {
             dma_num: vec![2],
             dma_buffers: vec![2],
             dma_buffer_bytes: vec![4096],
+            dram_channels: vec![1],
+            dram_banks: vec![16],
+            dram_row_policy: vec![RowPolicy::Open],
             remap_max_pointers: vec![1 << 18],
         };
         let ex = explore(&base, &grids, &dev, &eval);
@@ -795,6 +937,9 @@ mod tests {
             dma_num: vec![1, 2],
             dma_buffers: vec![2],
             dma_buffer_bytes: vec![4096],
+            dram_channels: vec![1, 2],
+            dram_banks: vec![16],
+            dram_row_policy: vec![RowPolicy::Open, RowPolicy::Closed],
             remap_max_pointers: vec![1 << 10, 1 << 18],
         };
         let ev_event = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
@@ -809,6 +954,92 @@ mod tests {
         assert_eq!(ex_event.best.cycles, ex_grid.best.cycles);
         assert_eq!(ex_event.best.cfg.cache, ex_grid.best.cfg.cache);
         assert_eq!(ex_event.best.cfg.dma, ex_grid.best.cfg.dma);
+        assert_eq!(ex_event.best.cfg.dram, ex_grid.best.cfg.dram);
+    }
+
+    #[test]
+    fn timing_batch_scores_match_event_engine() {
+        // A DRAM/DMA module sweep under the grid engine routes through
+        // the vectorized timing core; every score — including the
+        // infeasible hole for a channel count the device lacks — must
+        // equal the event engine's per-candidate scoring exactly.
+        let t = tensor();
+        let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 4)).collect();
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let mut cands = Vec::new();
+        for &(channels, banks, policy) in &[
+            (1usize, 16usize, RowPolicy::Open),
+            (4, 8, RowPolicy::Open),
+            (2, 16, RowPolicy::Closed),
+        ] {
+            for &num_dmas in &[1usize, 2] {
+                let mut cfg = base.clone();
+                cfg.dram.channels = channels;
+                cfg.dram.banks = banks;
+                cfg.dram.row_policy = policy;
+                cfg.dma.num_dmas = num_dmas;
+                cands.push(cfg);
+            }
+        }
+        // u250 has 4 DRAM channels: an 8-channel candidate mid-batch
+        // must come back None and keep the index mapping honest.
+        let mut wide = base.clone();
+        wide.dram.channels = 8;
+        cands.insert(2, wide);
+        let ev_grid = Evaluator::cycle_sim(&t, &factors, EngineKind::Grid);
+        let ev_event = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
+        let grid_scores = ev_grid.score_batch(&cands, &dev);
+        let event_scores = ev_event.score_batch(&cands, &dev);
+        assert_eq!(grid_scores, event_scores);
+        assert!(grid_scores[2].is_none(), "8 channels must not fit u250");
+        assert!(grid_scores.iter().filter(|s| s.is_some()).count() >= 6);
+    }
+
+    #[test]
+    fn sharded_timing_batch_matches_event_scores() {
+        let t = generate(&SynthConfig {
+            dims: vec![500, 400, 300],
+            nnz: 6_000,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed: 82,
+        });
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let sweep_grid = crate::shard::ShardedSweep::prepare_with_engine(
+            &t,
+            8,
+            2,
+            EngineKind::Grid,
+        );
+        let sweep_event = crate::shard::ShardedSweep::prepare_with_engine(
+            &t,
+            8,
+            2,
+            EngineKind::Event,
+        );
+        let ev_grid = Evaluator::ShardedSim { sweep: &sweep_grid };
+        let ev_event = Evaluator::ShardedSim { sweep: &sweep_event };
+        let mut cands = Vec::new();
+        for &(channels, policy, buffer_bytes) in &[
+            (1usize, RowPolicy::Open, 1024usize),
+            (4, RowPolicy::Open, 4096),
+            (2, RowPolicy::Closed, 4096),
+        ] {
+            let mut cfg = base.clone();
+            cfg.dram.channels = channels;
+            cfg.dram.row_policy = policy;
+            cfg.dma.buffer_bytes = buffer_bytes;
+            cands.push(cfg);
+        }
+        // Infeasible mid-batch: more channels than the board has.
+        let mut wide = base.clone();
+        wide.dram.channels = 8;
+        cands.insert(1, wide);
+        let grid_scores = ev_grid.score_batch(&cands, &dev);
+        let event_scores = ev_event.score_batch(&cands, &dev);
+        assert_eq!(grid_scores, event_scores);
+        assert!(grid_scores[1].is_none());
     }
 
     #[test]
@@ -870,6 +1101,9 @@ mod tests {
             dma_num: vec![base.dma.num_dmas],
             dma_buffers: vec![base.dma.buffers_per_dma],
             dma_buffer_bytes: vec![base.dma.buffer_bytes],
+            dram_channels: vec![base.dram.channels],
+            dram_banks: vec![base.dram.banks],
+            dram_row_policy: vec![base.dram.row_policy],
             remap_max_pointers: vec![base.remapper.max_pointers],
             ..Grids::default()
         };

@@ -48,12 +48,12 @@ use crate::dram::{Dram, DramStats};
 /// candidate set's LRU victim (`victim_line`) if the set was full, with
 /// a dirty-victim writeback preceding the fill when `writeback` is set.
 #[derive(Debug, Clone, Copy)]
-struct MissRec {
-    hits_before: u64,
-    line: u64,
-    victim_line: u64,
-    evicted: bool,
-    writeback: bool,
+pub(crate) struct MissRec {
+    pub(crate) hits_before: u64,
+    pub(crate) line: u64,
+    pub(crate) victim_line: u64,
+    pub(crate) evicted: bool,
+    pub(crate) writeback: bool,
 }
 
 /// One candidate's classification result: its miss stream plus the
@@ -71,14 +71,14 @@ struct MissStream {
 /// One classification pass: everything that depends only on
 /// `line_bytes`, shared by all candidates with that line width.
 #[derive(Debug, Clone)]
-struct PassInfo {
-    line_bytes: usize,
+pub(crate) struct PassInfo {
+    pub(crate) line_bytes: usize,
     /// Per compressed-trace run index: cache-class line accesses inside
     /// that run (meaningful for `Run::Cached`; verbatim runs are walked
     /// per access at replay time).
-    run_lines: Vec<u64>,
+    pub(crate) run_lines: Vec<u64>,
     /// Total cache-class line accesses in the trace.
-    total_lines: u64,
+    pub(crate) total_lines: u64,
 }
 
 /// All candidates sharing one `(line_bytes, num_sets)` pair: one LRU
@@ -288,6 +288,19 @@ impl GridClassification {
     /// The classified candidate configurations, in input order.
     pub fn configs(&self) -> &[CacheConfig] {
         &self.configs
+    }
+
+    /// Candidate `idx`'s recorded miss stream (crate-internal: the
+    /// vectorized timing core's extraction input,
+    /// [`crate::engine::timing`]).
+    pub(crate) fn miss_stream(&self, idx: usize) -> &[MissRec] {
+        &self.streams[idx].recs
+    }
+
+    /// Candidate `idx`'s classification-pass info (crate-internal, see
+    /// [`GridClassification::miss_stream`]).
+    pub(crate) fn pass_info(&self, idx: usize) -> &PassInfo {
+        &self.passes[self.pass_of[idx]]
     }
 
     /// Cache-class line accesses candidate `idx` serves (equals the

@@ -31,11 +31,21 @@
 //! inclusion), and each candidate is then timed from its miss stream
 //! alone — also bit-identical to the other cores, also enforced by the
 //! differential harness.
+//!
+//! Its timing-dimension sibling is the **vectorized timing core**
+//! ([`timing`], engaged by the same [`EngineKind::Grid`] selection on
+//! DRAM/DMA module sweeps): one cache classification pass feeds an
+//! extracted miss/stream op queue, and a single walk of that queue
+//! advances an array of per-candidate DRAM/DMA lanes in
+//! structure-of-arrays form — every DRAM and DMA candidate timed
+//! simultaneously, bit-identically to per-candidate replay.
 
 pub mod grid;
+pub mod timing;
 pub mod trace;
 
 pub use grid::{GridClassification, GridRun};
+pub use timing::{TimingCandidate, TimingOps, TimingRun};
 pub use trace::CompressedTrace;
 
 use std::fmt;

@@ -1,0 +1,540 @@
+//! Vectorized multi-configuration DRAM/DMA timing core (S21): one walk
+//! of a trace's miss/stream op queue times **every** DRAM and DMA
+//! candidate simultaneously — the DSE timing-module sweep's fast path,
+//! completing the one-pass story the cache grid core
+//! ([`super::grid`]) started.
+//!
+//! The insight mirrors the grid core's: for a *fixed* cache candidate,
+//! which requests reach memory — the miss stream, the dirty-victim
+//! writebacks, the DMA stream/element runs, and the folded hit runs —
+//! is entirely **timing-independent**.  DRAM and DMA knobs (channels,
+//! banks, row policy, DMA count/depth/buffer size) change *when* those
+//! requests complete, never *which* requests occur.  So the trace's
+//! run-queue is walked **once**: a single cache classification pass
+//! ([`GridClassification`]) feeds an op-queue extraction
+//! ([`TimingOps::extract`]) that folds every hit run to a closed-form
+//! clock advance and keeps only the timing-relevant events.  Timing a
+//! candidate then never touches the trace again.
+//!
+//! [`TimingOps::time_grid`] walks that op queue once with an array of
+//! per-candidate **lanes** in structure-of-arrays form: each lane owns
+//! flat per-candidate bank/row-open vectors and channel clocks
+//! ([`Dram`]) plus flat DMA queue-depth slots ([`DmaEngine`]) and a
+//! FIFO clock.  Every op applies to each lane through the *same*
+//! [`Dram::access`] / [`DmaEngine::stream`] state machines the scalar
+//! engines use, so completion cycles and every statistics counter are
+//! **bit-identical** to a fresh per-candidate lockstep/event replay
+//! (enforced on a randomized corpus by `tests/timing_props.rs` and the
+//! timing-grid column of `tests/differential.rs`).
+
+use super::grid::GridClassification;
+use super::trace::Run;
+use super::CompressedTrace;
+use crate::controller::{
+    Access, CacheStats, ControllerConfig, ControllerStats, DmaConfig, DmaEngine, DmaStats,
+    LineGeom,
+};
+use crate::dram::{Dram, DramConfig, DramStats};
+use crate::util::parallel_indexed;
+
+/// One timing-relevant event of the extracted op queue.  Addresses and
+/// byte counts are cache-classified facts; how long each op takes is
+/// the per-lane question the timing walk answers.
+#[derive(Debug, Clone, Copy)]
+enum TimingOp {
+    /// `count` contiguous DMA stream requests: request `i` covers
+    /// `chunk` bytes at `base + i*chunk`, the last covers `tail`
+    /// (chunking *within* each request is a DMA-candidate property,
+    /// applied per lane at timing time).
+    StreamRun {
+        base: u64,
+        chunk: u32,
+        count: u32,
+        tail: u32,
+    },
+    /// A single (verbatim-encoded) stream request.
+    Stream { addr: u64, bytes: usize },
+    /// An element-wise DMA request.
+    Element { addr: u64, bytes: usize },
+    /// `count` consecutive cache hits: the clock advances
+    /// `count * hit_latency`; no memory traffic.
+    Hits { count: u64 },
+    /// Dirty-victim writeback preceding a fill: one full-line DRAM
+    /// access at `line * line_bytes`.
+    Writeback { line: u64 },
+    /// Miss fill: one full-line DRAM access, then the hit-latency
+    /// service of the missing request.
+    Fill { line: u64 },
+}
+
+/// Result of timing one candidate lane: completion cycle plus the full
+/// statistics bundle a fresh [`MemoryController`] replay of the same
+/// trace under the same configuration would report.
+///
+/// [`MemoryController`]: crate::controller::MemoryController
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimingRun {
+    pub cycles: u64,
+    pub stats: ControllerStats,
+    pub cache: CacheStats,
+    pub dma: DmaStats,
+    pub dram: DramStats,
+}
+
+/// One DRAM/DMA candidate of a timing-module sweep: the two knob sets
+/// that change request *timing* without changing the request sequence.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TimingCandidate {
+    pub dram: DramConfig,
+    pub dma: DmaConfig,
+}
+
+impl TimingCandidate {
+    /// The timing knobs of a full controller configuration.
+    pub fn of(cfg: &ControllerConfig) -> Self {
+        TimingCandidate {
+            dram: cfg.dram.clone(),
+            dma: cfg.dma,
+        }
+    }
+
+    /// Deduplicate a candidate list: returns the distinct lanes plus,
+    /// per input candidate, the index of its lane.  Candidates that
+    /// share every timing knob (e.g. a remapper-only sweep, or channel
+    /// counts that collapse to the same per-worker split) would walk
+    /// identical lanes — time each distinct lane once and fan the
+    /// results back out instead.
+    pub fn dedup(cands: Vec<TimingCandidate>) -> (Vec<TimingCandidate>, Vec<usize>) {
+        let mut uniq: Vec<TimingCandidate> = Vec::new();
+        let lane_of = cands
+            .into_iter()
+            .map(|c| match uniq.iter().position(|u| *u == c) {
+                Some(i) => i,
+                None => {
+                    uniq.push(c);
+                    uniq.len() - 1
+                }
+            })
+            .collect();
+        (uniq, lane_of)
+    }
+}
+
+/// One candidate's live state during the op walk: its own flat-vector
+/// DRAM device (per-bank open rows + ready clocks, per-channel bus
+/// clocks), flat DMA queue slots, and the FIFO clock.
+struct Lane {
+    dram: Dram,
+    dma: DmaEngine,
+    now: u64,
+}
+
+impl Lane {
+    fn new(cand: &TimingCandidate) -> Self {
+        Lane {
+            dram: Dram::new(cand.dram.clone()),
+            dma: DmaEngine::new(cand.dma),
+            now: 0,
+        }
+    }
+
+    /// Apply one op, advancing this lane's clock exactly as the scalar
+    /// replay would (`lb` = line bytes, `hl` = hit latency of the
+    /// classified cache candidate).
+    fn apply(&mut self, op: &TimingOp, lb: usize, hl: u64) {
+        match *op {
+            TimingOp::StreamRun {
+                base,
+                chunk,
+                count,
+                tail,
+            } => {
+                self.now = self.dma.stream_run(
+                    &mut self.dram,
+                    base,
+                    chunk as usize,
+                    count,
+                    tail as usize,
+                    self.now,
+                );
+            }
+            TimingOp::Stream { addr, bytes } => {
+                self.now = self.dma.stream(&mut self.dram, addr, bytes, self.now);
+            }
+            TimingOp::Element { addr, bytes } => {
+                self.now = self.dma.element(&mut self.dram, addr, bytes, self.now);
+            }
+            TimingOp::Hits { count } => {
+                self.now += count * hl;
+            }
+            TimingOp::Writeback { line } => {
+                self.now = self.dram.access(line * lb as u64, lb, self.now);
+            }
+            TimingOp::Fill { line } => {
+                self.now = self.dram.access(line * lb as u64, lb, self.now) + hl;
+            }
+        }
+    }
+}
+
+/// Builds the op queue from one candidate's miss stream, mirroring the
+/// grid core's replay cursor ([`super::grid`]) but emitting ops instead
+/// of driving a device.
+struct OpBuilder<'a> {
+    ops: Vec<TimingOp>,
+    recs: &'a [super::grid::MissRec],
+    i: usize,
+    /// Hits of `recs[i].hits_before` already consumed.
+    taken: u64,
+}
+
+impl OpBuilder<'_> {
+    /// Emit `n` hits, coalescing with a directly preceding hit run (hit
+    /// folding is purely additive, so merging across run boundaries
+    /// cannot change any lane's clock).
+    fn hits(&mut self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        if let Some(TimingOp::Hits { count }) = self.ops.last_mut() {
+            *count += n;
+            return;
+        }
+        self.ops.push(TimingOp::Hits { count: n });
+    }
+
+    /// Consume `lines` cache-class line accesses: whole hit runs fold
+    /// to one `Hits` op; each miss emits its writeback (if dirty) and
+    /// fill ops in the exact order the scalar Cache Engine performs
+    /// them.
+    fn consume(&mut self, mut lines: u64) {
+        while lines > 0 {
+            match self.recs.get(self.i) {
+                None => {
+                    // Everything after the last miss hits.
+                    self.hits(lines);
+                    lines = 0;
+                }
+                Some(r) => {
+                    let avail = r.hits_before - self.taken;
+                    if avail >= lines {
+                        self.hits(lines);
+                        self.taken += lines;
+                        lines = 0;
+                    } else {
+                        self.hits(avail);
+                        lines -= avail + 1;
+                        self.taken = 0;
+                        if r.writeback {
+                            self.ops.push(TimingOp::Writeback {
+                                line: r.victim_line,
+                            });
+                        }
+                        self.ops.push(TimingOp::Fill { line: r.line });
+                        self.i += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The extracted, cache-classified op queue of one trace under one
+/// cache candidate: everything the timing walk needs, with the
+/// hit-dominated cache loop already folded away.  Build once per
+/// (trace, cache candidate) with [`TimingOps::extract`], then time any
+/// number of DRAM/DMA candidates with [`TimingOps::time_grid`].
+pub struct TimingOps {
+    ops: Vec<TimingOp>,
+    line_bytes: usize,
+    hit_latency: u64,
+    requests: u64,
+    total_bytes: u64,
+    cache: CacheStats,
+}
+
+impl TimingOps {
+    /// Extract the op queue of candidate `idx` of `cls` over `trace`
+    /// (the trace that was classified).  One linear walk of the
+    /// compressed run-queue; after it, timing never touches the trace.
+    pub fn extract(cls: &GridClassification, idx: usize, trace: &CompressedTrace) -> TimingOps {
+        let pass = cls.pass_info(idx);
+        let line_bytes = pass.line_bytes;
+        let geom = LineGeom::new(line_bytes, 1);
+        let mut b = OpBuilder {
+            ops: Vec::new(),
+            recs: cls.miss_stream(idx),
+            i: 0,
+            taken: 0,
+        };
+        for (ri, run) in trace.runs().iter().enumerate() {
+            match *run {
+                Run::Stream {
+                    base,
+                    chunk,
+                    count,
+                    tail,
+                } => {
+                    b.ops.push(TimingOp::StreamRun {
+                        base,
+                        chunk,
+                        count,
+                        tail,
+                    });
+                }
+                Run::Cached { .. } => {
+                    b.consume(pass.run_lines[ri]);
+                }
+                Run::Verbatim { off, count } => {
+                    for &a in trace.raw_at(off, count) {
+                        match a {
+                            Access::Stream { addr, bytes } => {
+                                b.ops.push(TimingOp::Stream { addr, bytes });
+                            }
+                            Access::Element { addr, bytes } => {
+                                b.ops.push(TimingOp::Element { addr, bytes });
+                            }
+                            Access::Cached { addr, bytes }
+                            | Access::CachedStore { addr, bytes } => {
+                                b.consume(geom.line_count(addr, bytes));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(
+            b.i,
+            b.recs.len(),
+            "extraction must consume the whole miss stream"
+        );
+        TimingOps {
+            ops: b.ops,
+            line_bytes,
+            hit_latency: cls.configs()[idx].hit_latency,
+            requests: trace.requests(),
+            total_bytes: trace.total_bytes(),
+            cache: cls.cache_stats(idx),
+        }
+    }
+
+    /// Number of ops in the queue (after hit folding).
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True when the queue is empty (an empty trace).
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// The classified cache candidate's counters every lane reports
+    /// (cache behaviour is shared across the whole timing grid).
+    pub fn cache_stats(&self) -> &CacheStats {
+        &self.cache
+    }
+
+    /// Time every candidate in one walk of the op queue: op-outer,
+    /// lane-inner, so the queue is decoded once while each lane's flat
+    /// state advances.  Returns one [`TimingRun`] per candidate in
+    /// input order — each bit-identical to a fresh per-candidate
+    /// lockstep/event replay of the classified trace.
+    pub fn time_grid(&self, cands: &[TimingCandidate]) -> Vec<TimingRun> {
+        let mut lanes: Vec<Lane> = cands.iter().map(Lane::new).collect();
+        for op in &self.ops {
+            for lane in lanes.iter_mut() {
+                lane.apply(op, self.line_bytes, self.hit_latency);
+            }
+        }
+        lanes
+            .into_iter()
+            .map(|l| TimingRun {
+                cycles: l.now,
+                stats: ControllerStats {
+                    requests: self.requests,
+                    total_bytes: self.total_bytes,
+                },
+                cache: self.cache.clone(),
+                dma: l.dma.stats().clone(),
+                dram: l.dram.stats().clone(),
+            })
+            .collect()
+    }
+
+    /// [`TimingOps::time_grid`] with the lanes chunked across host
+    /// threads: each thread performs its own op walk over a contiguous
+    /// lane subset (lanes are independent, so the result is identical).
+    pub fn time_grid_parallel(&self, cands: &[TimingCandidate]) -> Vec<TimingRun> {
+        /// Lanes per thread-chunk: small enough to spread a typical
+        /// module grid over the host, large enough to amortize the op
+        /// walk per thread.
+        const LANES_PER_CHUNK: usize = 4;
+        if cands.len() <= LANES_PER_CHUNK {
+            return self.time_grid(cands);
+        }
+        let n_chunks = cands.len().div_ceil(LANES_PER_CHUNK);
+        let per_chunk: Vec<Vec<TimingRun>> = parallel_indexed(n_chunks, |ci| {
+            let lo = ci * LANES_PER_CHUNK;
+            let hi = (lo + LANES_PER_CHUNK).min(cands.len());
+            self.time_grid(&cands[lo..hi])
+        });
+        per_chunk.into_iter().flatten().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::{CacheConfig, ControllerConfig, MemoryController};
+    use crate::dram::RowPolicy;
+    use crate::engine::{EngineKind, PreparedTrace};
+    use crate::testkit::Rng;
+
+    fn mixed_trace(seed: u64, n: usize) -> Vec<Access> {
+        let mut rng = Rng::new(seed);
+        let mut trace = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            match rng.below(6) {
+                0 => trace.push(Access::Stream {
+                    addr: i * 4096,
+                    bytes: 1024 + rng.below(4096) as usize,
+                }),
+                1 => trace.push(Access::Element {
+                    addr: (1 << 30) + rng.below(1 << 20) * 16,
+                    bytes: 16,
+                }),
+                2 => trace.push(Access::CachedStore {
+                    addr: (2 << 28) + rng.below(1 << 12) * 16,
+                    bytes: 16,
+                }),
+                _ => trace.push(Access::Cached {
+                    addr: (8 << 20) + rng.below(1 << 12) * 64,
+                    bytes: 64,
+                }),
+            }
+        }
+        trace
+    }
+
+    fn dram_dma_grid(base: &ControllerConfig) -> Vec<TimingCandidate> {
+        let mut cands = Vec::new();
+        for &(channels, banks, policy) in &[
+            (1usize, 16usize, RowPolicy::Open),
+            (2, 8, RowPolicy::Open),
+            (4, 16, RowPolicy::Closed),
+        ] {
+            for &(num_dmas, buffer_bytes) in &[(1usize, 1024usize), (2, 4096), (4, 16384)] {
+                let mut dram = base.dram.clone();
+                dram.channels = channels;
+                dram.banks = banks;
+                dram.row_policy = policy;
+                let mut dma = base.dma;
+                dma.num_dmas = num_dmas;
+                dma.buffer_bytes = buffer_bytes;
+                cands.push(TimingCandidate { dram, dma });
+            }
+        }
+        cands
+    }
+
+    #[test]
+    fn timing_grid_matches_fresh_event_replay_for_every_candidate() {
+        let prepared = PreparedTrace::new(mixed_trace(5, 2_000));
+        let base = ControllerConfig::default_for(16);
+        let cls = GridClassification::classify(prepared.compressed(), &[base.cache]);
+        let ops = TimingOps::extract(&cls, 0, prepared.compressed());
+        let cands = dram_dma_grid(&base);
+        let runs = ops.time_grid(&cands);
+        assert_eq!(runs.len(), cands.len());
+        for (cand, run) in cands.iter().zip(&runs) {
+            let mut cfg = base.clone();
+            cfg.dram = cand.dram.clone();
+            cfg.dma = cand.dma;
+            let mut ctl = MemoryController::new(cfg);
+            let want = EngineKind::Event.replay(&mut ctl, &prepared);
+            assert_eq!(run.cycles, want, "cycles diverged for {cand:?}");
+            assert_eq!(run.stats, *ctl.stats(), "{cand:?}");
+            assert_eq!(run.cache, *ctl.cache_stats(), "{cand:?}");
+            assert_eq!(run.dma, *ctl.dma_stats(), "{cand:?}");
+            assert_eq!(run.dram, *ctl.dram_stats(), "{cand:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_walk_is_identical_to_single_walk() {
+        let prepared = PreparedTrace::new(mixed_trace(7, 1_500));
+        let base = ControllerConfig::default_for(16);
+        let cls = GridClassification::classify(prepared.compressed(), &[base.cache]);
+        let ops = TimingOps::extract(&cls, 0, prepared.compressed());
+        let cands = dram_dma_grid(&base);
+        assert_eq!(ops.time_grid(&cands), ops.time_grid_parallel(&cands));
+    }
+
+    #[test]
+    fn extraction_is_independent_of_classification_company() {
+        // The op queue of a cache candidate must not depend on which
+        // other cache candidates shared the classification pass.
+        let prepared = PreparedTrace::new(mixed_trace(9, 1_200));
+        let base = ControllerConfig::default_for(16);
+        let mut other = base.cache;
+        other.num_lines = 64;
+        other.assoc = 1;
+        let both = GridClassification::classify(prepared.compressed(), &[base.cache, other]);
+        let alone = GridClassification::classify(prepared.compressed(), &[base.cache]);
+        let cands = dram_dma_grid(&base);
+        let a = TimingOps::extract(&both, 0, prepared.compressed());
+        let b = TimingOps::extract(&alone, 0, prepared.compressed());
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.time_grid(&cands), b.time_grid(&cands));
+    }
+
+    #[test]
+    fn dedup_collapses_identical_lanes() {
+        let base = ControllerConfig::default_for(16);
+        let mut other = base.clone();
+        other.dram.channels = 4;
+        let cands = vec![
+            TimingCandidate::of(&base),
+            TimingCandidate::of(&other),
+            TimingCandidate::of(&base),
+        ];
+        let (uniq, lane_of) = TimingCandidate::dedup(cands);
+        assert_eq!(uniq.len(), 2);
+        assert_eq!(lane_of, vec![0, 1, 0]);
+    }
+
+    #[test]
+    fn empty_trace_times_to_zero() {
+        let prepared = PreparedTrace::new(Vec::new());
+        let cc = CacheConfig::default_64k();
+        let cls = GridClassification::classify(prepared.compressed(), &[cc]);
+        let ops = TimingOps::extract(&cls, 0, prepared.compressed());
+        assert!(ops.is_empty());
+        let base = ControllerConfig::default_for(16);
+        let runs = ops.time_grid(&[TimingCandidate::of(&base)]);
+        assert_eq!(runs[0].cycles, 0);
+        assert_eq!(runs[0].stats.requests, 0);
+    }
+
+    #[test]
+    fn hit_folding_compresses_the_op_queue() {
+        // A hot single-line loop: one fill plus one folded hit run.
+        let trace: Vec<Access> = (0..500)
+            .map(|_| Access::Cached {
+                addr: 8 << 20,
+                bytes: 16,
+            })
+            .collect();
+        let prepared = PreparedTrace::new(trace);
+        let cc = CacheConfig::default_64k();
+        let cls = GridClassification::classify(prepared.compressed(), &[cc]);
+        let ops = TimingOps::extract(&cls, 0, prepared.compressed());
+        assert!(
+            ops.len() <= 2,
+            "1 fill + 1 folded hit run expected, got {} ops",
+            ops.len()
+        );
+        assert_eq!(ops.cache_stats().hits, 499);
+        assert_eq!(ops.cache_stats().misses, 1);
+    }
+}

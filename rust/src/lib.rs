@@ -19,8 +19,10 @@
 //!   mode sort / remap, access-pattern statistics. (S1)
 //! * [`dram`] — bank / row-buffer DRAM timing model. (S2)
 //! * [`engine`] — lockstep vs event-driven simulation cores behind one
-//!   [`engine::SimEngine`] trait, plus the delta-encoded
-//!   [`engine::CompressedTrace`] both replay. (S19)
+//!   [`engine::SimEngine`] trait, the delta-encoded
+//!   [`engine::CompressedTrace`] both replay (S19), the one-pass cache
+//!   grid classifier [`engine::grid`] (S20), and the vectorized
+//!   multi-candidate DRAM/DMA timing core [`engine::timing`] (S21)
 //! * [`controller`] — Cache Engine, DMA Engine, Tensor Remapper, and the
 //!   memory-controller top that routes the paper's three transfer types.
 //!   (S3–S6)
@@ -40,6 +42,7 @@
 //! * [`testkit`] — PRNG + mini property-test harness (no proptest). (S15)
 //! * [`bench`] — timing harness + table emitters (no criterion). (S16)
 //! * [`error`] — vendored minimal error type (no anyhow). (S18)
+//! * [`util`] — shared scoped-thread fan-out helper. (S22)
 
 pub mod bench;
 pub mod cli;
@@ -58,3 +61,4 @@ pub mod runtime;
 pub mod shard;
 pub mod tensor;
 pub mod testkit;
+pub mod util;

@@ -15,11 +15,13 @@
 //! Workload selection (all subcommands): `--input file.tns` or
 //! `--synth zipf|uniform|clustered --dims AxBxC --nnz N --seed S`.
 //! Controller parameters come from `--config ptmc.toml` plus overrides
-//! (`--cache-lines`, `--dma-buffers`, ...).  `--engine
-//! lockstep|event|grid` picks the trace-replay core for `simulate` and
-//! `explore` (bit-identical results; `event` is the batched fast path,
-//! `grid` additionally scores whole cache-module grids in one
-//! classification pass on `explore`).
+//! (`--cache-lines`, `--dma-buffers`, `--channels`, `--dram-banks`,
+//! `--row-policy`, ...).  `--engine lockstep|event|grid` picks the
+//! trace-replay core for `simulate` and `explore` (bit-identical
+//! results; `event` is the batched fast path, `grid` additionally
+//! scores whole cache-module grids in one classification pass and
+//! DRAM/DMA module sweeps in one vectorized op-queue walk on
+//! `explore`).
 
 use std::path::Path;
 use std::process::ExitCode;
@@ -42,7 +44,8 @@ const OPTS: &[&str] = &[
     "config", "rank", "iters", "tol", "backend", "device", "evaluator", "seg",
     "workers", "mode", "engine", // sharded execution + replay core
     "cache-lines", "cache-line-bytes", "cache-assoc", "dma-buffers", "dma-num",
-    "dma-buffer-bytes", "max-pointers", "channels", "artifacts",
+    "dma-buffer-bytes", "max-pointers", "channels", "dram-banks", "row-policy",
+    "artifacts",
 ];
 const FLAGS: &[&str] = &["help", "verbose", "csv"];
 
@@ -72,11 +75,15 @@ fn usage() {
          controller:--config ptmc.toml --cache-lines N --cache-line-bytes B\n\
          \x20          --cache-assoc A --dma-num N --dma-buffers K\n\
          \x20          --dma-buffer-bytes B --max-pointers P --channels C\n\
+         \x20          --dram-banks B --row-policy open|closed\n\
          dse:       --device u250|u280|vu9p --evaluator pms|sim|sharded|grid\n\
+         \x20          (explore sweeps cache, DMA, DRAM timing — channels x\n\
+         \x20          banks x row policy — then remapper grids)\n\
          sim core:  --engine lockstep|event|grid (bit-identical; default\n\
          \x20          event on explore for sweep throughput, lockstep on\n\
          \x20          simulate; grid scores whole cache-module grids in\n\
-         \x20          one classification pass)\n"
+         \x20          one classification pass and DRAM/DMA module sweeps\n\
+         \x20          in one vectorized walk of the shared op queue)\n"
     );
 }
 
@@ -116,6 +123,12 @@ fn controller_config(
     cfg.dma.buffer_bytes = args.usize_or("dma-buffer-bytes", cfg.dma.buffer_bytes)?;
     cfg.remapper.max_pointers = args.usize_or("max-pointers", cfg.remapper.max_pointers)?;
     cfg.dram.channels = args.usize_or("channels", cfg.dram.channels)?;
+    cfg.dram.banks = args.usize_or("dram-banks", cfg.dram.banks)?;
+    if let Some(p) = args.get("row-policy") {
+        cfg.dram.row_policy = p
+            .parse()
+            .map_err(|e| CliError(format!("--row-policy: {e}")))?;
+    }
     Ok(cfg)
 }
 

@@ -17,7 +17,7 @@
 //! ample to rank configurations.
 
 use crate::controller::ControllerConfig;
-use crate::dram::DramConfig;
+use crate::dram::{DramConfig, RowPolicy};
 use crate::fpga::{self, Device, Usage};
 use crate::tensor::{stats, SparseTensor};
 
@@ -176,18 +176,34 @@ impl Estimate {
 // ---- DRAM service-time primitives --------------------------------------
 
 /// Effective streaming bandwidth in bytes/cycle: peak derated by the
-/// fraction of bursts that still pay activations (one per row).
+/// row-policy cost.  Open page pays one activation per row; closed page
+/// re-activates every burst but overlaps the activates across banks, so
+/// its per-burst time is the activate latency divided by the bank-level
+/// parallelism, floored at the bus occupancy.
 fn stream_bytes_per_cycle(d: &DramConfig) -> f64 {
-    let bursts_per_row = (d.row_bytes / d.burst_bytes) as f64;
     let hit_time = d.t_burst as f64;
-    let miss_time = (d.t_rp + d.t_rcd + d.t_cl + d.t_burst) as f64;
-    let avg = (miss_time + (bursts_per_row - 1.0) * hit_time) / bursts_per_row;
+    let avg = match d.row_policy {
+        RowPolicy::Open => {
+            let bursts_per_row = (d.row_bytes / d.burst_bytes) as f64;
+            let miss_time = (d.t_rp + d.t_rcd + d.t_cl + d.t_burst) as f64;
+            (miss_time + (bursts_per_row - 1.0) * hit_time) / bursts_per_row
+        }
+        RowPolicy::Closed => {
+            let act_time = (d.t_rcd + d.t_cl + d.t_burst) as f64;
+            hit_time.max(act_time / (d.banks as f64).max(1.0))
+        }
+    };
     d.channels as f64 * d.burst_bytes as f64 / avg
 }
 
-/// Latency of one isolated random access (row conflict assumed).
+/// Latency of one isolated random access: open page assumes a row
+/// conflict (precharge on the critical path); closed page auto-
+/// precharged behind the previous burst, so only the activate remains.
 fn random_access_cycles(d: &DramConfig) -> f64 {
-    (d.t_rp + d.t_rcd + d.t_cl + d.t_burst) as f64
+    match d.row_policy {
+        RowPolicy::Open => (d.t_rp + d.t_rcd + d.t_cl + d.t_burst) as f64,
+        RowPolicy::Closed => (d.t_rcd + d.t_cl + d.t_burst) as f64,
+    }
 }
 
 // ---- The model -----------------------------------------------------------
@@ -309,6 +325,21 @@ mod tests {
         for m in &e.per_mode {
             assert!(m.remap_cycles > 0.0);
         }
+    }
+
+    #[test]
+    fn row_policy_moves_the_estimate() {
+        // The PMS must see the row-policy knob the DSE now sweeps:
+        // closed page trades streaming bandwidth for cheaper random
+        // access, so the two estimates cannot coincide.
+        let p = profile();
+        let open = estimate(&p, &base_cfg(), &Device::alveo_u250());
+        let mut cfg = base_cfg();
+        cfg.dram.row_policy = crate::dram::RowPolicy::Closed;
+        let closed = estimate(&p, &cfg, &Device::alveo_u250());
+        assert_ne!(open.total_cycles(), closed.total_cycles());
+        // Closed page never pays a precharge on the random path.
+        assert!(random_access_cycles(&cfg.dram) < random_access_cycles(&base_cfg().dram));
     }
 
     #[test]

@@ -14,7 +14,6 @@
 
 use std::collections::HashMap;
 use std::sync::Mutex;
-use std::thread;
 use std::time::{Duration, Instant};
 
 use super::{partition_indices, AggregateStats, ShardPlan, ShardSpec};
@@ -24,9 +23,10 @@ use crate::controller::{
 use crate::coordinator::Metrics;
 use crate::cpd::linalg::Mat;
 use crate::dram::DramConfig;
-use crate::engine::{EngineKind, GridClassification, PreparedTrace};
+use crate::engine::{EngineKind, GridClassification, PreparedTrace, TimingCandidate, TimingOps};
 use crate::mttkrp::{oracle, STREAM_CHUNK_ELEMS};
 use crate::tensor::{Coord, SparseTensor};
+use crate::util::parallel_indexed;
 
 /// Result of one sharded MTTKRP mode execution.
 #[derive(Debug)]
@@ -297,21 +297,10 @@ pub fn mttkrp_planned_with_engine(
         _ => None,
     };
 
-    let results: Vec<(Mat, Metrics, Option<MemoryController>)> = thread::scope(|scope| {
-        let handles: Vec<_> = plan
-            .shards
-            .iter()
-            .zip(parts)
-            .zip(&offsets)
-            .map(|((spec, zs), &off)| {
-                scope.spawn(move || worker(t, factors, mode, spec, zs, off, sim_w))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("shard worker panicked"))
-            .collect()
-    });
+    let results: Vec<(Mat, Metrics, Option<MemoryController>)> =
+        parallel_indexed(plan.shards.len(), |i| {
+            worker(t, factors, mode, &plan.shards[i], &parts[i], offsets[i], sim_w)
+        });
 
     let mut output = Mat::zeros(t.dims()[mode], r);
     let mut metrics = Metrics::default();
@@ -456,34 +445,13 @@ impl<'a> ShardedSweep<'a> {
                 // the one-pass path is `makespans_for_cache_grid`.
                 EngineKind::Event | EngineKind::Grid => {
                     let remap = self.remap_cycles_memoized(mode, cfg);
-                    let worst = if traces.len() > 1 {
-                        thread::scope(|scope| {
-                            let handles: Vec<_> = traces
-                                .iter()
-                                .map(|tr| {
-                                    let cfg = wcfg.clone();
-                                    scope.spawn(move || {
-                                        MemoryController::new(cfg).replay_events(tr.compressed())
-                                    })
-                                })
-                                .collect();
-                            handles
-                                .into_iter()
-                                .map(|h| h.join().expect("shard replay worker panicked"))
-                                .max()
-                                .unwrap_or(0)
-                        })
-                    } else {
-                        traces
-                            .iter()
-                            .map(|tr| {
-                                MemoryController::new(wcfg.clone())
-                                    .replay_events(tr.compressed())
-                            })
-                            .max()
-                            .unwrap_or(0)
-                    };
-                    (remap, worst)
+                    // Shards are independent fresh controller instances;
+                    // the max is order-invariant, so the concurrent
+                    // fan-out cannot change the score.
+                    let per_shard = parallel_indexed(traces.len(), |i| {
+                        MemoryController::new(wcfg.clone()).replay_events(traces[i].compressed())
+                    });
+                    (remap, per_shard.into_iter().max().unwrap_or(0))
                 }
             };
             total += remap_cycles + worst;
@@ -529,24 +497,76 @@ impl<'a> ShardedSweep<'a> {
                     })
                     .collect()
             };
-            let replay_shard = &replay_shard;
-            let per_shard: Vec<Vec<u64>> = if traces.len() > 1 {
-                thread::scope(|scope| {
-                    let handles: Vec<_> = traces
-                        .iter()
-                        .map(|tr| scope.spawn(move || replay_shard(tr)))
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("grid shard worker panicked"))
-                        .collect()
-                })
-            } else {
-                traces.iter().map(replay_shard).collect()
-            };
+            let per_shard: Vec<Vec<u64>> =
+                parallel_indexed(traces.len(), |i| replay_shard(&traces[i]));
             for (ci, total) in totals.iter_mut().enumerate() {
                 let worst = per_shard.iter().map(|v| v[ci]).max().unwrap_or(0);
                 *total += remap + worst;
+            }
+        }
+        totals
+    }
+
+    /// Score a whole DRAM/DMA timing grid in one walk per shard trace:
+    /// classify the (fixed) `base.cache` once per shard, extract its
+    /// miss/stream op queue, then advance every candidate's DRAM/DMA
+    /// lane simultaneously with the vectorized timing core
+    /// ([`crate::engine::timing`]).  `cands` are full configurations
+    /// whose `cache` must equal `base.cache`; their DRAM, DMA, and
+    /// remapper knobs may all differ (the per-candidate remap pass is
+    /// memoized per (mode, DRAM, remapper) key, and each candidate's
+    /// worker lanes model its own channel split).  Shards classify and
+    /// time on concurrent host threads, exactly like the event path
+    /// replays them.  Returns one makespan per candidate, in `cands`
+    /// order — each bit-identical to `makespan_with` of the same
+    /// configuration under either classic engine.
+    pub fn makespans_for_timing_grid(
+        &self,
+        base: &ControllerConfig,
+        cands: &[ControllerConfig],
+    ) -> Vec<u64> {
+        let mut totals = vec![0u64; cands.len()];
+        if cands.is_empty() {
+            return totals;
+        }
+        for c in cands {
+            assert_eq!(
+                c.cache, base.cache,
+                "timing-grid candidates must share the classified cache module"
+            );
+        }
+        // Each candidate's lane models a *worker instance*: its slice
+        // of the candidate's own DRAM channels plus its DMA engine.
+        // Candidates that collapse to the same worker lane (remapper
+        // variants, channel counts with the same per-worker split)
+        // are timed once and fanned back out.
+        let (lanes, lane_of) = TimingCandidate::dedup(
+            cands
+                .iter()
+                .map(|c| TimingCandidate::of(&worker_cfg(c, self.workers)))
+                .collect(),
+        );
+        for (mode, (_plan, traces)) in self.modes.iter().enumerate() {
+            let single_shard = traces.len() == 1;
+            let time_shard = |tr: &PreparedTrace| -> Vec<u64> {
+                let cls = GridClassification::classify(tr.compressed(), &[base.cache]);
+                let ops = TimingOps::extract(&cls, 0, tr.compressed());
+                // With one shard the host threads are free for the
+                // lanes themselves; with many shards the shard fan-out
+                // below already saturates them.
+                let runs = if single_shard {
+                    ops.time_grid_parallel(&lanes)
+                } else {
+                    ops.time_grid(&lanes)
+                };
+                runs.into_iter().map(|r| r.cycles).collect()
+            };
+            let per_shard: Vec<Vec<u64>> =
+                parallel_indexed(traces.len(), |i| time_shard(&traces[i]));
+            for (ci, total) in totals.iter_mut().enumerate() {
+                let lane = lane_of[ci];
+                let worst = per_shard.iter().map(|v| v[lane]).max().unwrap_or(0);
+                *total += self.remap_cycles_memoized(mode, &cands[ci]) + worst;
             }
         }
         totals
@@ -803,6 +823,50 @@ mod tests {
                 "grid makespan diverged for {cc:?}"
             );
             assert_eq!(got, sweep.makespan_with(&cfg, EngineKind::Lockstep));
+        }
+    }
+
+    #[test]
+    fn timing_grid_makespans_match_per_candidate_scoring() {
+        use crate::controller::ControllerConfig;
+        use crate::dram::RowPolicy;
+        // The one-walk DRAM/DMA path must return exactly what scoring
+        // each candidate individually returns — including candidates
+        // whose channel count splits differently across workers and
+        // candidates that vary the remapper (distinct remap-memo keys).
+        let (t, _factors) = setup(20, 3_000);
+        let sweep = ShardedSweep::prepare(&t, 8, 3);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let mut cands = Vec::new();
+        for &(channels, banks, policy) in &[
+            (1usize, 16usize, RowPolicy::Open),
+            (4, 8, RowPolicy::Open),
+            (2, 16, RowPolicy::Closed),
+        ] {
+            for &(num_dmas, buffer_bytes) in &[(1usize, 1024usize), (2, 4096)] {
+                let mut cfg = base.clone();
+                cfg.dram.channels = channels;
+                cfg.dram.banks = banks;
+                cfg.dram.row_policy = policy;
+                cfg.dma.num_dmas = num_dmas;
+                cfg.dma.buffer_bytes = buffer_bytes;
+                cands.push(cfg);
+            }
+        }
+        let mut spilly = base.clone();
+        spilly.remapper.max_pointers = 4;
+        cands.push(spilly);
+        let grid_scores = sweep.makespans_for_timing_grid(&base, &cands);
+        assert_eq!(grid_scores.len(), cands.len());
+        for (cfg, &got) in cands.iter().zip(&grid_scores) {
+            assert_eq!(
+                got,
+                sweep.makespan_with(cfg, EngineKind::Event),
+                "timing makespan diverged for {:?}/{:?}",
+                cfg.dram,
+                cfg.dma
+            );
+            assert_eq!(got, sweep.makespan_with(cfg, EngineKind::Lockstep));
         }
     }
 

@@ -1,0 +1,6 @@
+//! Small shared utilities (S22): the scoped-thread fan-out helper used
+//! by every batch-parallel path in the crate.
+
+pub mod par;
+
+pub use par::parallel_indexed;

@@ -1,0 +1,81 @@
+//! Indexed scoped-thread fan-out.
+//!
+//! One helper replaces the hand-rolled `thread::scope` blocks that used
+//! to live in `dse::score_batch`, the shard worker launch, the
+//! concurrent shard replays, and the per-shard grid classification
+//! ([`crate::shard`], [`crate::dse`]): run an indexed closure over
+//! `0..n` on up to `available_parallelism` scoped host threads and
+//! return the results in index order, so callers are deterministic
+//! regardless of thread timing.
+
+use std::thread;
+
+/// Run `f(i)` for `i in 0..n` on up to `available_parallelism` scoped
+/// host threads (contiguous chunks); results come back in index order.
+/// `n <= 1` (or a single-core host) runs inline with no threads spawned.
+pub fn parallel_indexed<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let f = &f;
+    let chunks: Vec<Vec<T>> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .step_by(chunk)
+            .map(|start| {
+                let end = (start + chunk).min(n);
+                scope.spawn(move || (start..end).map(f).collect::<Vec<T>>())
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel_indexed worker panicked"))
+            .collect()
+    });
+    chunks.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_singleton() {
+        assert_eq!(parallel_indexed(0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_indexed(1, |i| i * 7), vec![0]);
+    }
+
+    #[test]
+    fn results_come_back_in_index_order() {
+        // Odd count over many threads: chunk boundaries must not
+        // scramble or drop indices.
+        let got = parallel_indexed(1_003, |i| i * 2);
+        assert_eq!(got.len(), 1_003);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, i * 2);
+        }
+    }
+
+    #[test]
+    fn closure_sees_every_index_exactly_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let calls = AtomicUsize::new(0);
+        let got = parallel_indexed(64, |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), 64);
+        assert_eq!(got, (0..64).collect::<Vec<_>>());
+    }
+}

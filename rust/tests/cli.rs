@@ -237,6 +237,48 @@ fn explore_sharded_accepts_grid_engine() {
 }
 
 #[test]
+fn row_policy_option_parses_and_is_validated() {
+    // The DRAM row-policy knob: accepted values steer the simulator
+    // (closed page loses the streaming row hits, so the totals differ),
+    // unknown values fail loudly.
+    let open = run(&[&["simulate"], SMALL, &["--rank", "8", "--row-policy", "open"]].concat());
+    let closed = run(&[&["simulate"], SMALL, &["--rank", "8", "--row-policy", "closed"]].concat());
+    assert!(open.0, "{}", open.1);
+    assert!(closed.0, "{}", closed.1);
+    let total_line = |text: &str| -> String {
+        text.lines()
+            .find(|l| l.starts_with("total cycles:"))
+            .expect("total cycles line")
+            .to_string()
+    };
+    assert_ne!(
+        total_line(&open.1),
+        total_line(&closed.1),
+        "row policy must move the simulated total"
+    );
+    let (ok, text) = run(&[&["simulate"], SMALL, &["--row-policy", "adaptive"]].concat());
+    assert!(!ok);
+    assert!(text.contains("row-policy"), "{text}");
+    assert!(text.contains("open|closed"), "{text}");
+}
+
+#[test]
+fn dram_banks_option_is_accepted() {
+    let (ok, text) = run(&[&["simulate"], SMALL, &["--rank", "8", "--dram-banks", "8"]].concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("total cycles:"), "{text}");
+}
+
+#[test]
+fn help_mentions_dram_timing_knobs() {
+    let (ok, text) = run(&["--help"]);
+    assert!(ok);
+    assert!(text.contains("--row-policy"), "{text}");
+    assert!(text.contains("--dram-banks"), "{text}");
+    assert!(text.contains("DRAM timing"), "{text}");
+}
+
+#[test]
 fn engine_option_rejects_unknown_value() {
     let (ok, text) = run(&[&["simulate"], SMALL, &["--engine", "bogus"]].concat());
     assert!(!ok);

@@ -11,7 +11,11 @@
 use ptmc::controller::{
     Access, CacheConfig, ControllerConfig, DmaConfig, MemLayout, MemoryController,
 };
-use ptmc::engine::{CompressedTrace, EngineKind, GridClassification, PreparedTrace, SimEngine};
+use ptmc::dram::RowPolicy;
+use ptmc::engine::{
+    CompressedTrace, EngineKind, GridClassification, PreparedTrace, SimEngine, TimingCandidate,
+    TimingOps,
+};
 use ptmc::mttkrp::{approach1, Tracing};
 use ptmc::shard::{partition_indices, shard_trace, ShardPlan, ShardedSweep};
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
@@ -126,6 +130,35 @@ fn assert_engines_identical(prepared: &PreparedTrace, cfg: &ControllerConfig, wh
         run.dram,
         *lockstep.dram_stats(),
         "{what}: grid DramStats diverged"
+    );
+
+    // The timing-grid column: extract the configuration's miss/stream
+    // op queue from the same classification and time it as a one-lane
+    // grid — cycles and every counter must match the lockstep
+    // controller bit-for-bit too.
+    let ops = TimingOps::extract(&cls, 0, prepared.compressed());
+    let truns = ops.time_grid(&[TimingCandidate::of(cfg)]);
+    assert_eq!(truns.len(), 1);
+    assert_eq!(truns[0].cycles, tl, "{what}: timing-core cycles diverged");
+    assert_eq!(
+        truns[0].stats,
+        *lockstep.stats(),
+        "{what}: timing ControllerStats diverged"
+    );
+    assert_eq!(
+        truns[0].cache,
+        *lockstep.cache_stats(),
+        "{what}: timing CacheStats diverged"
+    );
+    assert_eq!(
+        truns[0].dma,
+        *lockstep.dma_stats(),
+        "{what}: timing DmaStats diverged"
+    );
+    assert_eq!(
+        truns[0].dram,
+        *lockstep.dram_stats(),
+        "{what}: timing DramStats diverged"
     );
 }
 
@@ -302,6 +335,50 @@ fn sharded_sweep_cache_grid_matches_per_candidate_makespans() {
             cfg.cache = *cc;
             assert_eq!(got, sweep.makespan_with(&cfg, EngineKind::Event));
             assert_eq!(got, sweep.makespan_with(&cfg, EngineKind::Lockstep));
+        }
+    });
+}
+
+#[test]
+fn sharded_sweep_timing_grid_matches_per_candidate_makespans() {
+    // The one-walk DRAM/DMA DSE path: per-shard classification +
+    // op-queue extraction + multi-lane timing must reproduce the
+    // event/lockstep makespan of every timing candidate exactly,
+    // including candidates whose channel count splits differently
+    // across workers and closed-row-policy candidates.
+    forall("sweep_timing_grid_vs_event", 4, |rng| {
+        let t = random_tensor(rng);
+        let workers = rng.range(1, 4);
+        let sweep = ShardedSweep::prepare(&t, 8, workers);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let mut cands = Vec::new();
+        for &(channels, banks, policy) in &[
+            (1usize, 16usize, RowPolicy::Open),
+            (4, 8, RowPolicy::Open),
+            (2, 16, RowPolicy::Closed),
+        ] {
+            for &(num_dmas, buffer_bytes) in &[(1usize, 1024usize), (2, 4096)] {
+                let mut cfg = base.clone();
+                cfg.dram.channels = channels;
+                cfg.dram.banks = banks;
+                cfg.dram.row_policy = policy;
+                cfg.dma.num_dmas = num_dmas;
+                cfg.dma.buffer_bytes = buffer_bytes;
+                cands.push(cfg);
+            }
+        }
+        let got = sweep.makespans_for_timing_grid(&base, &cands);
+        for (cfg, &score) in cands.iter().zip(&got) {
+            assert_eq!(
+                score,
+                sweep.makespan_with(cfg, EngineKind::Event),
+                "timing-grid makespan diverged from event"
+            );
+            assert_eq!(
+                score,
+                sweep.makespan_with(cfg, EngineKind::Lockstep),
+                "timing-grid makespan diverged from lockstep"
+            );
         }
     });
 }

@@ -1,0 +1,246 @@
+//! Property tests for the vectorized timing core
+//! (`ptmc::engine::timing`): on randomized tensors, shard traces, and
+//! adversarial access mixes, one classification + op-queue extraction
+//! followed by a single multi-lane walk must produce, for **every**
+//! DRAM/DMA candidate of the full default DSE grids, exactly the
+//! completion cycles and statistics a fresh per-candidate event replay
+//! of the same trace produces — the timing-dimension counterpart of
+//! `grid_props.rs`.
+
+use ptmc::controller::{Access, ControllerConfig, MemLayout, MemoryController};
+use ptmc::dram::RowPolicy;
+use ptmc::dse::Grids;
+use ptmc::engine::{EngineKind, GridClassification, PreparedTrace, TimingCandidate, TimingOps};
+use ptmc::shard::{partition_indices, shard_trace, ShardPlan};
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+use ptmc::tensor::SparseTensor;
+use ptmc::testkit::{forall, Rng};
+
+/// A random synthetic tensor: 3 or 4 modes, varying nnz and skew.
+fn random_tensor(rng: &mut Rng) -> SparseTensor {
+    let n_modes = rng.range(3, 5);
+    let dims: Vec<usize> = (0..n_modes).map(|_| rng.range(30, 300)).collect();
+    let space: usize = dims.iter().product();
+    let nnz = rng.range(1, 1_500).min(space / 4).max(1);
+    let profile = match rng.below(3) {
+        0 => Profile::Uniform,
+        1 => Profile::Zipf {
+            alpha_milli: 1_050 + rng.below(500) as u32,
+        },
+        _ => Profile::Clustered {
+            block: 8,
+            blocks: 20,
+        },
+    };
+    generate(&SynthConfig {
+        dims,
+        nnz,
+        profile,
+        seed: rng.next_u64(),
+    })
+}
+
+/// Every DRAM/DMA candidate of the **full default DSE grids**: the
+/// cross product `Grids::default()` sweeps in the DMA and DRAM modules,
+/// folded into one lane list (DMA grid at base DRAM + DRAM grid at
+/// base DMA — exactly the candidates `explore` scores).
+fn default_timing_grid(base: &ControllerConfig) -> Vec<TimingCandidate> {
+    let g = Grids::default();
+    let mut cands = Vec::new();
+    for &num_dmas in &g.dma_num {
+        for &buffers_per_dma in &g.dma_buffers {
+            for &buffer_bytes in &g.dma_buffer_bytes {
+                let mut cfg = base.clone();
+                cfg.dma.num_dmas = num_dmas;
+                cfg.dma.buffers_per_dma = buffers_per_dma;
+                cfg.dma.buffer_bytes = buffer_bytes;
+                cands.push(TimingCandidate::of(&cfg));
+            }
+        }
+    }
+    for &channels in &g.dram_channels {
+        for &banks in &g.dram_banks {
+            for &row_policy in &g.dram_row_policy {
+                let mut cfg = base.clone();
+                cfg.dram.channels = channels;
+                cfg.dram.banks = banks;
+                cfg.dram.row_policy = row_policy;
+                cands.push(TimingCandidate::of(&cfg));
+            }
+        }
+    }
+    cands
+}
+
+/// Assert: timing the whole candidate grid from one extracted op queue
+/// equals a fresh per-candidate event replay, in cycles and every
+/// statistics counter.
+fn assert_timing_grid_identical(prepared: &PreparedTrace, base: &ControllerConfig, what: &str) {
+    let cands = default_timing_grid(base);
+    let cls = GridClassification::classify(prepared.compressed(), &[base.cache]);
+    let ops = TimingOps::extract(&cls, 0, prepared.compressed());
+    let runs = ops.time_grid(&cands);
+    assert_eq!(runs.len(), cands.len());
+    for (cand, run) in cands.iter().zip(&runs) {
+        let mut cfg = base.clone();
+        cfg.dram = cand.dram.clone();
+        cfg.dma = cand.dma;
+        let mut ctl = MemoryController::new(cfg);
+        let want = EngineKind::Event.replay(&mut ctl, prepared);
+        assert_eq!(run.cycles, want, "{what}: cycles diverged for {cand:?}");
+        assert_eq!(
+            run.stats,
+            *ctl.stats(),
+            "{what}: ControllerStats diverged for {cand:?}"
+        );
+        assert_eq!(
+            run.cache,
+            *ctl.cache_stats(),
+            "{what}: CacheStats diverged for {cand:?}"
+        );
+        assert_eq!(
+            run.dma,
+            *ctl.dma_stats(),
+            "{what}: DmaStats diverged for {cand:?}"
+        );
+        assert_eq!(
+            run.dram,
+            *ctl.dram_stats(),
+            "{what}: DramStats diverged for {cand:?}"
+        );
+    }
+    // The chunked-parallel walk is the same computation on lane
+    // subsets; it must not change a single cycle.
+    assert_eq!(runs, ops.time_grid_parallel(&cands), "{what}: parallel walk diverged");
+}
+
+#[test]
+fn timing_core_is_bit_identical_on_shard_traces() {
+    forall("timing_grid_vs_event_shard_traces", 6, |rng| {
+        let t = random_tensor(rng);
+        let rank = [4usize, 8, 16][rng.range(0, 3)];
+        let mode = rng.range(0, t.n_modes());
+        let workers = rng.range(1, 4);
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+        let plan = ShardPlan::balance(&t, mode, workers);
+        let parts = partition_indices(&t, &plan);
+        let mut base = ControllerConfig::default_for(t.record_bytes());
+        // Vary the classified cache too: the op queue must be exact for
+        // any cache candidate, not just the default.
+        base.cache.num_lines = [64usize, 1024][rng.range(0, 2)];
+        base.cache.assoc = [1usize, 4][rng.range(0, 2)];
+        let mut offset = 0usize;
+        for (spec, zs) in plan.shards.iter().zip(&parts) {
+            let trace = shard_trace(&t, rank, mode, &layout, spec, zs, offset);
+            offset += spec.nnz;
+            let prepared = PreparedTrace::new(trace);
+            assert_timing_grid_identical(&prepared, &base, "shard trace");
+        }
+    });
+}
+
+#[test]
+fn timing_core_is_bit_identical_on_adversarial_access_mixes() {
+    // Cold classes, unaligned addresses, width changes, and far-apart
+    // cached addresses exercise the verbatim-run path of the op
+    // extraction.
+    forall("timing_grid_vs_event_adversarial", 8, |rng| {
+        let n = rng.range(1, 500);
+        let mut trace = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            let a = match rng.below(8) {
+                0 => Access::Stream {
+                    addr: i * 4096,
+                    bytes: 4096,
+                },
+                1 => Access::Stream {
+                    addr: rng.below(1 << 30),
+                    bytes: 1 + rng.below(8192) as usize,
+                },
+                2 => Access::Cached {
+                    addr: (8 << 20) + rng.below(1 << 14) * 64,
+                    bytes: 64,
+                },
+                3 => Access::Cached {
+                    addr: rng.below(1 << 26),
+                    bytes: 1 + rng.below(256) as usize,
+                },
+                4 => Access::Cached {
+                    addr: (1 << 40) + rng.below(1 << 20) * 64,
+                    bytes: 64,
+                },
+                5 => Access::Element {
+                    addr: rng.below(1 << 32),
+                    bytes: 16,
+                },
+                6 => Access::CachedStore {
+                    addr: rng.below(1 << 24) * 16,
+                    bytes: 16,
+                },
+                _ => Access::Stream {
+                    addr: (2 << 30) + (i % 7) * 64,
+                    bytes: 64,
+                },
+            };
+            trace.push(a);
+        }
+        let prepared = PreparedTrace::new(trace);
+        let base = ControllerConfig::default_for(16);
+        assert_timing_grid_identical(&prepared, &base, "adversarial trace");
+    });
+}
+
+#[test]
+fn op_queue_is_reusable_across_walks() {
+    // Timing is a pure function of (ops, candidates): walking the same
+    // queue twice, or in a different candidate order, changes nothing.
+    forall("timing_ops_reusable", 4, |rng| {
+        let t = random_tensor(rng);
+        let rank = 8;
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+        let plan = ShardPlan::balance(&t, 0, 2);
+        let parts = partition_indices(&t, &plan);
+        let trace = shard_trace(&t, rank, 0, &layout, &plan.shards[0], &parts[0], 0);
+        let prepared = PreparedTrace::new(trace);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let cls = GridClassification::classify(prepared.compressed(), &[base.cache]);
+        let ops = TimingOps::extract(&cls, 0, prepared.compressed());
+        let mut cands = default_timing_grid(&base);
+        let first = ops.time_grid(&cands);
+        assert_eq!(first, ops.time_grid(&cands), "second walk diverged");
+        cands.reverse();
+        let reversed = ops.time_grid(&cands);
+        for (i, run) in reversed.iter().enumerate() {
+            assert_eq!(*run, first[first.len() - 1 - i], "order dependence");
+        }
+    });
+}
+
+#[test]
+fn closed_policy_lanes_report_activate_only_traffic() {
+    // Sanity on the new DRAM knob through the timing core: a closed-
+    // page lane must report zero row hits and zero conflicts while
+    // moving the same bytes as its open-page twin.
+    let t = generate(&SynthConfig {
+        dims: vec![300, 200, 150],
+        nnz: 4_000,
+        profile: Profile::Zipf { alpha_milli: 1200 },
+        seed: 11,
+    });
+    let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 8);
+    let plan = ShardPlan::balance(&t, 0, 1);
+    let parts = partition_indices(&t, &plan);
+    let trace = shard_trace(&t, 8, 0, &layout, &plan.shards[0], &parts[0], 0);
+    let prepared = PreparedTrace::new(trace);
+    let base = ControllerConfig::default_for(t.record_bytes());
+    let cls = GridClassification::classify(prepared.compressed(), &[base.cache]);
+    let ops = TimingOps::extract(&cls, 0, prepared.compressed());
+    let mut closed = base.clone();
+    closed.dram.row_policy = RowPolicy::Closed;
+    let runs = ops.time_grid(&[TimingCandidate::of(&base), TimingCandidate::of(&closed)]);
+    assert_eq!(runs[1].dram.row_hits, 0);
+    assert_eq!(runs[1].dram.row_conflicts, 0);
+    assert_eq!(runs[1].dram.row_misses, runs[1].dram.bursts);
+    assert_eq!(runs[0].dram.bytes, runs[1].dram.bytes);
+    assert!(runs[0].dram.row_hits > 0, "open page must hit on streams");
+}

@@ -1,10 +1,11 @@
 //! E11 — simulation-engine comparison on the DSE scoring hot path: a
 //! sharded sweep ([`ptmc::shard::ShardedSweep`]) scores a cache-module
-//! grid, a DMA grid, and a DRAM/DMA timing grid under the legacy
-//! lockstep core, the event-driven batched core, and the two one-pass
-//! cores — the cache grid classifier (`ptmc::engine::grid`) and the
-//! vectorized timing core (`ptmc::engine::timing`) — all on the same
-//! prepared traces.
+//! grid, a DMA grid, a DRAM/DMA timing grid, and a full joint cross
+//! product under the legacy lockstep core, the event-driven batched
+//! core, and the one-pass cores — the cache grid classifier
+//! (`ptmc::engine::grid`), the vectorized timing core
+//! (`ptmc::engine::timing`), and the hierarchical joint sweep core
+//! (`ptmc::engine::sweep`) — all on the same prepared traces.
 //!
 //! The event core wins over lockstep three ways (compressed traces,
 //! concurrent shard replay, memoized remap — see PR 2).  The grid core
@@ -16,9 +17,19 @@
 //! so one classification + op-queue extraction per shard feeds a single
 //! multi-lane walk that times every DRAM/DMA candidate at once — the
 //! hit-dominated cache loop runs once instead of once per candidate.
-//! Scores are asserted bit-identical across all cores; only wall-clock
-//! differs.  Targets: grid >= 5x over event on the cache-module sweep,
-//! timing core >= 4x over event on the DRAM/DMA sweep.
+//! The joint core composes both (PR 5): a cache x DRAM x DMA cross
+//! product classifies per line width, extracts per cache candidate,
+//! and walks each cache's lane set once — per-candidate event replay
+//! pays the full trace per joint point instead.  Scores are asserted
+//! bit-identical across all cores (including equal best points); only
+//! wall-clock differs.  Targets: grid >= 5x over event on the
+//! cache-module sweep, timing core >= 4x over event on the DRAM/DMA
+//! sweep, joint core >= 5x over event on the joint sweep.
+//!
+//! The bench also runs `explore` under the coordinate and joint search
+//! strategies on a single-module (cache-only) space — where coordinate
+//! descent is itself exhaustive, so the two must agree exactly — and
+//! asserts equal best score and equal best configuration.
 //!
 //! Emits `bench_results/dse_engines.csv`,
 //! `bench_results/engine_speedup.json`, and a repo-root `BENCH_dse.json`
@@ -30,7 +41,9 @@ use std::time::Instant;
 use ptmc::bench::{fmt_cycles, fmt_speedup, sized, smoke, Table};
 use ptmc::controller::{CacheConfig, ControllerConfig, DmaConfig};
 use ptmc::dram::RowPolicy;
+use ptmc::dse::{explore, explore_with, Evaluator, Grids, SearchOptions, SearchStrategy};
 use ptmc::engine::EngineKind;
+use ptmc::fpga::Device;
 use ptmc::shard::ShardedSweep;
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
 
@@ -95,6 +108,41 @@ fn timing_grid(elem_bytes: usize) -> Vec<ControllerConfig> {
     grid
 }
 
+/// The joint cross-product grid (the PR 5 sweep): cache geometry x
+/// DRAM timing x DMA shape all free at once — 72 joint candidates over
+/// 8 distinct caches spanning 2 line widths, so every level of the
+/// hierarchical core (classify per width, extract per cache, one walk
+/// per lane set) is exercised.
+fn joint_grid(elem_bytes: usize) -> Vec<ControllerConfig> {
+    let mut grid = Vec::new();
+    for &line_bytes in &[32usize, 64] {
+        for &num_lines in &[1024usize, 4096] {
+            for &assoc in &[2usize, 4] {
+                for &(channels, row_policy) in &[
+                    (1usize, RowPolicy::Open),
+                    (4, RowPolicy::Open),
+                    (4, RowPolicy::Closed),
+                ] {
+                    for &(num_dmas, buffer_bytes) in
+                        &[(1usize, 1024usize), (2, 4096), (4, 16384)]
+                    {
+                        let mut cfg = ControllerConfig::default_for(elem_bytes);
+                        cfg.cache.line_bytes = line_bytes;
+                        cfg.cache.num_lines = num_lines;
+                        cfg.cache.assoc = assoc;
+                        cfg.dram.channels = channels;
+                        cfg.dram.row_policy = row_policy;
+                        cfg.dma.num_dmas = num_dmas;
+                        cfg.dma.buffer_bytes = buffer_bytes;
+                        grid.push(cfg);
+                    }
+                }
+            }
+        }
+    }
+    grid
+}
+
 /// Walk up from the current directory to the repo root (the directory
 /// holding ROADMAP.md) so BENCH_dse.json lands in one canonical place
 /// regardless of where cargo runs the bench binary.
@@ -137,11 +185,14 @@ fn main() {
         .collect();
 
     let timing_count = timing_grid(t.record_bytes()).len();
+    let joint_count = joint_grid(t.record_bytes()).len();
     println!(
-        "preparing {workers}-worker sweeps ({} cache + {} DMA + {} DRAM/DMA candidates)...",
+        "preparing {workers}-worker sweeps \
+         ({} cache + {} DMA + {} DRAM/DMA + {} joint candidates)...",
         caches.len(),
         dmas.len(),
         timing_count,
+        joint_count,
     );
 
     // Warm allocator and page cache once on a scratch sweep, asserting
@@ -236,6 +287,90 @@ fn main() {
         "timing core and event must select the same best DRAM/DMA configuration"
     );
 
+    // --- Joint cross-product sweep: the hierarchical sweep core's
+    // home turf (PR 5).  The event side pays a full per-candidate
+    // replay per joint point; the joint core classifies per line
+    // width, extracts per cache, and walks each cache's DRAM/DMA lane
+    // set once.  Each side gets a fresh sweep so it pays its own
+    // remap-memo warm-up inside its clock.
+    let joint_cfgs = joint_grid(t.record_bytes());
+    println!("joint sweep: {} candidates...", joint_cfgs.len());
+    let (joint_event_scores, joint_event_wall) = {
+        let sweep = ShardedSweep::prepare(&t, rank, workers);
+        let t0 = Instant::now();
+        let scores: Vec<u64> = joint_cfgs
+            .iter()
+            .map(|cfg| sweep.makespan_with(cfg, EngineKind::Event))
+            .collect();
+        (scores, t0.elapsed())
+    };
+    let (joint_core_scores, joint_core_wall) = {
+        let sweep = ShardedSweep::prepare(&t, rank, workers);
+        let t0 = Instant::now();
+        (sweep.makespans_for_joint_grid(&joint_cfgs), t0.elapsed())
+    };
+    assert_eq!(
+        joint_event_scores, joint_core_scores,
+        "joint-sweep scores must be bit-identical (event vs joint core)"
+    );
+    let joint_best = (0..joint_event_scores.len())
+        .min_by_key(|&i| joint_event_scores[i])
+        .unwrap();
+    let joint_best_core = (0..joint_core_scores.len())
+        .min_by_key(|&i| joint_core_scores[i])
+        .unwrap();
+    assert_eq!(
+        joint_best, joint_best_core,
+        "joint core and event must select the same best joint configuration"
+    );
+
+    // --- Search-strategy agreement: on a single-module (cache-only)
+    // space coordinate descent is itself exhaustive, so `explore` under
+    // the coordinate and joint strategies must agree exactly — same
+    // best score, same best configuration.
+    {
+        let sweep = ShardedSweep::prepare_with_engine(&t, rank, workers, EngineKind::Grid);
+        let eval = Evaluator::ShardedSim { sweep: &sweep };
+        let dev = Device::alveo_u250();
+        let base_cfg = ControllerConfig::default_for(t.record_bytes());
+        let cache_only = Grids {
+            cache_line_bytes: vec![32, 64],
+            cache_num_lines: vec![1024, 4096],
+            cache_assoc: vec![2, 4],
+            dma_num: vec![base_cfg.dma.num_dmas],
+            dma_buffers: vec![base_cfg.dma.buffers_per_dma],
+            dma_buffer_bytes: vec![base_cfg.dma.buffer_bytes],
+            dram_channels: vec![base_cfg.dram.channels],
+            dram_banks: vec![base_cfg.dram.banks],
+            dram_row_policy: vec![base_cfg.dram.row_policy],
+            remap_max_pointers: vec![base_cfg.remapper.max_pointers],
+        };
+        let ex_coord = explore(&base_cfg, &cache_only, &dev, &eval);
+        let ex_joint = explore_with(
+            &base_cfg,
+            &cache_only,
+            &dev,
+            &eval,
+            &SearchOptions {
+                strategy: SearchStrategy::Joint,
+                top_k: 3,
+            },
+        );
+        assert_eq!(
+            ex_joint.best.cycles, ex_coord.best.cycles,
+            "joint and coordinate must agree on a single-module space"
+        );
+        assert_eq!(
+            ex_joint.best.cfg, ex_coord.best.cfg,
+            "joint and coordinate must pick the same configuration"
+        );
+        println!(
+            "explore agreement: coordinate == joint on the cache-only space \
+             ({:.3e} cycles). OK",
+            ex_joint.best.cycles
+        );
+    }
+
     assert_eq!(
         cache_lockstep, cache_event,
         "cache-module scores must be bit-identical (lockstep vs event)"
@@ -265,6 +400,7 @@ fn main() {
             / (cache_event_wall + dma_event_wall).as_secs_f64();
     let grid_speedup = cache_event_wall.as_secs_f64() / cache_grid_wall.as_secs_f64();
     let timing_speedup = timing_event_wall.as_secs_f64() / timing_core_wall.as_secs_f64();
+    let joint_speedup = joint_event_wall.as_secs_f64() / joint_core_wall.as_secs_f64();
 
     let mut tbl = Table::new(&["sweep", "engine", "configs", "wall ms", "speedup", "best cycles"]);
     let ms = |d: std::time::Duration| format!("{:.0}", d.as_secs_f64() * 1e3);
@@ -327,9 +463,26 @@ fn main() {
         fmt_speedup(timing_speedup),
         fmt_cycles(best_timing),
     ]);
+    let best_joint = *joint_event_scores.iter().min().unwrap();
+    tbl.row(&[
+        "joint".into(),
+        "event".into(),
+        joint_cfgs.len().to_string(),
+        ms(joint_event_wall),
+        "1.00x".into(),
+        fmt_cycles(best_joint),
+    ]);
+    tbl.row(&[
+        "joint".into(),
+        "sweep (hierarchical)".into(),
+        joint_cfgs.len().to_string(),
+        ms(joint_core_wall),
+        fmt_speedup(joint_speedup),
+        fmt_cycles(best_joint),
+    ]);
     tbl.emit(
         "E11 — DSE sweep scoring: lockstep vs event vs one-pass grid/timing cores \
-         (identical scores)",
+         vs hierarchical joint core (identical scores)",
         Some(std::path::Path::new("bench_results/dse_engines.csv")),
     );
 
@@ -345,7 +498,7 @@ fn main() {
         (cache_event_wall + dma_event_wall).as_secs_f64() * 1e3,
     );
     let bench_json = format!(
-        "{{\n  \"bench\": \"dse_engines\",\n  \"pr\": 4,\n  \"nnz\": {nnz},\n  \
+        "{{\n  \"bench\": \"dse_engines\",\n  \"pr\": 5,\n  \"nnz\": {nnz},\n  \
          \"workers\": {workers},\n  \"rank\": {rank},\n  \"smoke\": {},\n  \
          \"cache_sweep\": {{\n    \"configs\": {},\n    \
          \"lockstep_ms\": {:.1},\n    \"event_ms\": {:.1},\n    \
@@ -357,6 +510,12 @@ fn main() {
          \"timing_core_ms\": {:.1},\n    \
          \"timing_vs_event_speedup\": {timing_speedup:.2},\n    \
          \"best_index\": {timing_best},\n    \"per_candidate_cycles\": [{}]\n  }},\n  \
+         \"joint_sweep\": {{\n    \"configs\": {},\n    \"event_ms\": {:.1},\n    \
+         \"joint_core_ms\": {:.1},\n    \
+         \"joint_vs_event_speedup\": {joint_speedup:.2},\n    \
+         \"best_index\": {joint_best},\n    \
+         \"explore_joint_equals_coordinate_on_separable_space\": true,\n    \
+         \"per_candidate_cycles\": [{}]\n  }},\n  \
          \"event_vs_lockstep_speedup\": {event_speedup:.2}\n}}\n",
         smoke(),
         caches.len(),
@@ -371,6 +530,14 @@ fn main() {
         timing_event_wall.as_secs_f64() * 1e3,
         timing_core_wall.as_secs_f64() * 1e3,
         timing_event_scores
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(", "),
+        joint_cfgs.len(),
+        joint_event_wall.as_secs_f64() * 1e3,
+        joint_core_wall.as_secs_f64() * 1e3,
+        joint_event_scores
             .iter()
             .map(|c| c.to_string())
             .collect::<Vec<_>>()
@@ -390,6 +557,7 @@ fn main() {
     println!(
         "cache sweep: grid {grid_speedup:.2}x over event; \
          dram+dma sweep: timing core {timing_speedup:.2}x over event; \
+         joint sweep: hierarchical core {joint_speedup:.2}x over event; \
          full sweep: event {event_speedup:.2}x over lockstep"
     );
 
@@ -423,6 +591,19 @@ fn main() {
             println!(
                 "timing core >= 4x DRAM/DMA-sweep target met ({timing_speedup:.2}x). OK"
             );
+        }
+        if joint_speedup < 5.0 {
+            let msg = format!(
+                "joint core below the 5x joint-sweep target: \
+                 {joint_speedup:.2}x over event"
+            );
+            assert!(
+                std::env::var_os("PTMC_BENCH_ENFORCE").is_none(),
+                "{msg}"
+            );
+            println!("WARNING: {msg}");
+        } else {
+            println!("joint core >= 5x joint-sweep target met ({joint_speedup:.2}x). OK");
         }
         if event_speedup < 3.0 {
             println!(

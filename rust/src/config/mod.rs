@@ -25,7 +25,14 @@
 //!
 //! [dram]
 //! channels = 4
+//!
+//! [dse]
+//! search = "joint"   # coordinate | joint | beam
+//! top_k = 5
 //! ```
+//!
+//! The `[dse]` section configures the explore subcommand's search
+//! layer (overridden by `--search` / `--top-k` on the command line).
 
 use std::collections::HashMap;
 
@@ -265,6 +272,19 @@ line_bytes = 128
         // like every other defaulted config key.
         let c = Config::parse("[dram]\nrow_policy = \"adaptive\"\n").unwrap();
         assert_eq!(c.controller(16).dram.row_policy, crate::dram::RowPolicy::Open);
+    }
+
+    #[test]
+    fn dse_search_section_parses() {
+        // The explore subcommand reads these exact keys; keep the
+        // accessor contract pinned here.
+        let c = Config::parse("[dse]\nsearch = \"joint\"\ntop_k = 5\n").unwrap();
+        assert_eq!(c.str_or("dse", "search", "coordinate"), "joint");
+        assert_eq!(c.usize_or("dse", "top_k", 1), 5);
+        // Unset keys fall back to the coordinate/top-1 defaults.
+        let c = Config::parse("[cache]\nnum_lines = 64\n").unwrap();
+        assert_eq!(c.str_or("dse", "search", "coordinate"), "coordinate");
+        assert_eq!(c.usize_or("dse", "top_k", 1), 1);
     }
 
     #[test]

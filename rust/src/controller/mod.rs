@@ -48,7 +48,9 @@ impl Access {
 }
 
 /// Full controller configuration: one knob set per module (§5.2).
-#[derive(Debug, Clone)]
+/// Equality is knob-for-knob — the DSE search layers dedup candidate
+/// configurations with it before scoring.
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ControllerConfig {
     pub dram: DramConfig,
     pub cache: CacheConfig,

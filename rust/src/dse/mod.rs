@@ -3,27 +3,36 @@
 //! proposed to identify the optimal parameters for the memory
 //! controller."
 //!
-//! The explorer sweeps one module's grid at a time while holding the
-//! others at their current best (coordinate descent over module grids —
-//! exactly the paper's proposal), scoring each candidate with either the
-//! fast analytic PMS or the cycle-level simulator, and rejecting
-//! configurations that do not fit the device ([`crate::fpga`]).
+//! The search layer is pluggable ([`SearchStrategy`]):
 //!
-//! Candidates within one module sweep are independent, so
-//! [`explore`] scores each module's grid as a batch
-//! ([`Evaluator::score_batch`]): candidates fan out across host threads,
-//! and — under the grid engine ([`EngineKind::Grid`]) — the cross
-//! product factorizes.  The whole cache-module grid is classified in
+//! * `Coordinate` — the paper's proposal and the legacy default: sweep
+//!   one module's grid at a time while holding the others at their
+//!   current best.  Fast, but it can miss jointly-optimal points.
+//! * `Joint` — exhaustive search of the **joint** cross product
+//!   `remapper × line_bytes × (num_lines, assoc) × DRAM × DMA`
+//!   (unioned per dimension with the base configuration's values, so
+//!   its best is never worse than coordinate descent's).  Infeasible
+//!   points are pruned with the device check *before* any simulation.
+//! * `Beam` — the middle ground: keep the best `width` incumbents
+//!   after each module sweep and sweep the next module from each.
+//!
+//! Every strategy reports a Pareto frontier (cycles vs on-chip blocks)
+//! and the top-k points ([`Exploration`]) on top of the single winner.
+//!
+//! Candidates within one batch are independent, so all strategies score
+//! through [`Evaluator::score_batch`]: candidates fan out across host
+//! threads, and — under the grid engine ([`EngineKind::Grid`]) — the
+//! cross product factorizes.  A cache-module sweep is classified in
 //! **one trace pass** by the stack-distance grid core
-//! ([`crate::engine::grid`]), leaving only each candidate's miss stream
-//! to be timed; and a DRAM/DMA (timing-module) sweep runs through the
-//! vectorized timing core ([`crate::engine::timing`]) — classify once
-//! per line geometry, extract the miss/stream op queue once per cache
-//! candidate, then time all DRAM/DMA candidates in one walk of that
-//! queue.  Scores are bit-identical to per-candidate scoring under
-//! either classic engine.
+//! ([`crate::engine::grid`]); a DRAM/DMA (timing-module) sweep runs
+//! through the vectorized timing core ([`crate::engine::timing`]); and
+//! a genuinely **joint** batch — cache AND timing knobs both varying,
+//! the `Joint` strategy's shape — runs through the hierarchical sweep
+//! core ([`crate::engine::sweep`]): classify per line width, extract
+//! the miss/stream op queue per cache candidate, then walk each
+//! cache's DRAM/DMA lane set once.  Scores are bit-identical to
+//! per-candidate scoring under either classic engine.
 
-use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::controller::{
@@ -31,16 +40,14 @@ use crate::controller::{
 };
 use crate::cpd::linalg::Mat;
 use crate::dram::{DramConfig, RowPolicy};
-use crate::engine::{EngineKind, GridClassification, PreparedTrace, TimingCandidate, TimingOps};
+use crate::engine::{
+    EngineKind, GridClassification, JointIndex, PreparedTrace, TimingCandidate, TimingOps,
+};
 use crate::fpga::{self, Device};
 use crate::mttkrp::{approach1, Tracing};
 use crate::pms::{self, TensorProfile};
 use crate::tensor::{remap, Coord, SparseTensor};
-use crate::util::parallel_indexed;
-
-/// Key of one memoized remap-pass simulation (see
-/// [`crate::shard::ShardedSweep`], which uses the same keying).
-type RemapKey = (usize, DramConfig, RemapperConfig);
+use crate::util::{parallel_indexed, RemapMemo};
 
 /// Per-mode precomputation of a CycleSim scoring pass under one
 /// remapper pointer budget: the mode column the (simulated) remap pass
@@ -58,12 +65,14 @@ struct ModePrep {
 /// every controller knob, including the pointer budget, which only
 /// changes the *simulated* pointer traffic), and the remap-pass
 /// simulation — identical for every candidate sharing (mode, DRAM,
-/// remapper) knobs, i.e. the whole cache/DMA grid — runs once per key
-/// (mirroring `ShardedSweep::remap_memo`).
+/// remapper) knobs, i.e. the whole cache/DMA grid and every joint-sweep
+/// cell — runs once per key through the shared
+/// [`crate::util::RemapMemo`] (the same type `ShardedSweep` keys its
+/// remap memo with).
 #[derive(Default)]
 pub struct SimMemo {
     prep: Mutex<Option<Arc<Vec<ModePrep>>>>,
-    remap: Mutex<HashMap<RemapKey, u64>>,
+    remap: RemapMemo,
 }
 
 impl SimMemo {
@@ -95,7 +104,7 @@ impl SimMemo {
     }
 
     /// One mode's remap-pass cycles under `cfg`, on a fresh controller,
-    /// memoized per (mode, DRAM, remapper) key.
+    /// memoized per (mode, DRAM, remapper) key ([`RemapMemo`]).
     fn remap_cycles(
         &self,
         p: &ModePrep,
@@ -104,17 +113,10 @@ impl SimMemo {
         layout: &MemLayout,
         cfg: &ControllerConfig,
     ) -> u64 {
-        let key = (mode, cfg.dram.clone(), cfg.remapper);
-        if let Some(&c) = self.remap.lock().expect("remap memo poisoned").get(&key) {
-            return c;
-        }
-        let mut ctl = MemoryController::new(cfg.clone());
-        let cycles = ctl.remap_pass(&p.remap_col, mode_len, layout, 0, 1);
-        self.remap
-            .lock()
-            .expect("remap memo poisoned")
-            .insert(key, cycles);
-        cycles
+        self.remap.cycles(mode, cfg, || {
+            let mut ctl = MemoryController::new(cfg.clone());
+            ctl.remap_pass(&p.remap_col, mode_len, layout, 0, 1)
+        })
     }
 }
 
@@ -226,11 +228,14 @@ impl Evaluator<'_> {
     /// across host threads.  Under the grid engine the cross product is
     /// factorized instead: a **cache-module sweep** (all candidates
     /// sharing DRAM/DMA/remapper knobs) is scored by the one-pass grid
-    /// core — one trace classification for the whole batch — and a
+    /// core — one trace classification for the whole batch — a
     /// **timing-module sweep** (all candidates sharing the cache
     /// module; DRAM/DMA/remapper free) by the vectorized timing core —
     /// classify once, extract the miss/stream op queue once, then time
-    /// every DRAM/DMA candidate in one walk.  Same scores either way.
+    /// every DRAM/DMA candidate in one walk — and a genuinely
+    /// **joint** batch (cache AND timing knobs both varying) by the
+    /// hierarchical sweep core ([`crate::engine::sweep`]).  Same
+    /// scores every way.
     pub fn score_batch(&self, cfgs: &[ControllerConfig], dev: &Device) -> Vec<Option<f64>> {
         if cfgs.is_empty() {
             return Vec::new();
@@ -258,6 +263,23 @@ impl Evaluator<'_> {
                 } => return cycle_sim_timing_batch(tensor, factors, memo, cfgs, dev),
                 Evaluator::ShardedSim { sweep } if sweep.engine() == EngineKind::Grid => {
                     return self.sharded_timing_batch(sweep, cfgs, dev)
+                }
+                _ => {}
+            }
+        } else if cfgs.len() >= 2 {
+            // A genuinely joint batch — cache AND timing knobs both
+            // vary (the `Joint` search strategy's shape): under the
+            // grid engine, the hierarchical sweep core scores it in one
+            // structured traversal per trace.
+            match self {
+                Evaluator::CycleSim {
+                    tensor,
+                    factors,
+                    engine: EngineKind::Grid,
+                    memo,
+                } => return cycle_sim_joint_batch(tensor, factors, memo, cfgs, dev),
+                Evaluator::ShardedSim { sweep } if sweep.engine() == EngineKind::Grid => {
+                    return self.sharded_joint_batch(sweep, cfgs, dev)
                 }
                 _ => {}
             }
@@ -327,17 +349,7 @@ impl Evaluator<'_> {
             .map(|(c, _)| c.clone())
             .expect("at least one feasible candidate");
         let scores = sweep.makespans_for_cache_grid(&base, &caches);
-        let mut it = scores.into_iter();
-        feasible
-            .iter()
-            .map(|&ok| {
-                if ok {
-                    Some(it.next().expect("one grid score per feasible candidate") as f64)
-                } else {
-                    None
-                }
-            })
-            .collect()
+        scatter_feasible(&feasible, scores)
     }
 
     /// Timing-module batch under the sharded evaluator: feasibility per
@@ -362,17 +374,31 @@ impl Evaluator<'_> {
         }
         let base = live[0].clone();
         let scores = sweep.makespans_for_timing_grid(&base, &live);
-        let mut it = scores.into_iter();
-        feasible
+        scatter_feasible(&feasible, scores)
+    }
+
+    /// Joint cross-product batch under the sharded evaluator:
+    /// feasibility per candidate, then the hierarchical sweep core
+    /// traverses every shard trace once for the whole batch
+    /// ([`crate::shard::ShardedSweep::makespans_for_joint_grid`]).
+    fn sharded_joint_batch(
+        &self,
+        sweep: &crate::shard::ShardedSweep<'_>,
+        cfgs: &[ControllerConfig],
+        dev: &Device,
+    ) -> Vec<Option<f64>> {
+        let feasible: Vec<bool> = cfgs.iter().map(|c| self.feasible(c, dev)).collect();
+        let live: Vec<ControllerConfig> = cfgs
             .iter()
-            .map(|&ok| {
-                if ok {
-                    Some(it.next().expect("one timing score per feasible candidate") as f64)
-                } else {
-                    None
-                }
-            })
-            .collect()
+            .zip(&feasible)
+            .filter(|&(_, &ok)| ok)
+            .map(|(c, _)| c.clone())
+            .collect();
+        if live.is_empty() {
+            return vec![None; cfgs.len()];
+        }
+        let scores = sweep.makespans_for_joint_grid(&live);
+        scatter_feasible(&feasible, scores)
     }
 }
 
@@ -448,17 +474,7 @@ fn cycle_sim_grid_batch(
             *t += c;
         }
     }
-    let mut it = compute.into_iter();
-    feasible
-        .iter()
-        .map(|&ok| {
-            if ok {
-                Some((remap_total + it.next().expect("one score per feasible candidate")) as f64)
-            } else {
-                None
-            }
-        })
-        .collect()
+    scatter_feasible(&feasible, compute.into_iter().map(|c| remap_total + c))
 }
 
 /// DRAM/DMA (and remapper) module batch under CycleSim + grid engine:
@@ -512,18 +528,66 @@ fn cycle_sim_timing_batch(
             *total += runs[lane].cycles;
         }
     }
-    let mut it = remap_totals.into_iter().zip(compute);
-    feasible
+    scatter_feasible(
+        &feasible,
+        remap_totals.into_iter().zip(compute).map(|(r, c)| r + c),
+    )
+}
+
+/// Joint cross-product batch under CycleSim + grid engine: candidates
+/// free in **every** module are factorized by the hierarchical sweep
+/// core ([`crate::engine::sweep`]) — per mode trace, one classification
+/// pass per distinct line width, one op-queue extraction per distinct
+/// cache candidate, one multi-lane walk per cache's DRAM/DMA lane set —
+/// while the remap phase stays memoized per (mode, DRAM, remapper) key.
+/// Candidates collapsing to the same (cache, lane) cell (remapper-only
+/// variants) are simulated once and fanned back out.
+fn cycle_sim_joint_batch(
+    tensor: &SparseTensor,
+    factors: &[Mat],
+    memo: &SimMemo,
+    cfgs: &[ControllerConfig],
+    dev: &Device,
+) -> Vec<Option<f64>> {
+    let feasible: Vec<bool> = cfgs.iter().map(|c| device_feasible(c, dev)).collect();
+    let live: Vec<&ControllerConfig> = cfgs
         .iter()
-        .map(|&ok| {
-            if ok {
-                let (remap, comp) = it.next().expect("one score per feasible candidate");
-                Some((remap + comp) as f64)
-            } else {
-                None
-            }
+        .zip(&feasible)
+        .filter(|&(_, &ok)| ok)
+        .map(|(c, _)| c)
+        .collect();
+    if live.is_empty() {
+        return vec![None; cfgs.len()];
+    }
+    let rank = factors[0].cols();
+    let layout = MemLayout::plan(tensor.dims(), tensor.nnz(), tensor.record_bytes(), rank);
+    let prep = memo.prep(tensor, factors, &layout);
+    let remap_totals: Vec<u64> = live
+        .iter()
+        .map(|cfg| {
+            prep.iter()
+                .enumerate()
+                .map(|(mode, p)| memo.remap_cycles(p, mode, tensor.dims()[mode], &layout, cfg))
+                .sum()
         })
-        .collect()
+        .collect();
+    let pairs: Vec<(CacheConfig, TimingCandidate)> = live
+        .iter()
+        .map(|c| (c.cache, TimingCandidate::of(c)))
+        .collect();
+    let index = JointIndex::build(&pairs);
+    // One flattened (mode x cache) fan-out for all mode traces at once.
+    let refs: Vec<_> = prep.iter().map(|p| p.trace.compressed()).collect();
+    let mut compute = vec![0u64; live.len()];
+    for per in index.sweep_many(&refs) {
+        for (total, c) in compute.iter_mut().zip(per) {
+            *total += c;
+        }
+    }
+    scatter_feasible(
+        &feasible,
+        remap_totals.into_iter().zip(compute).map(|(r, c)| r + c),
+    )
 }
 
 /// Device-level feasibility shared by every evaluator: the on-chip
@@ -532,6 +596,25 @@ fn cycle_sim_timing_batch(
 /// channels the device does not have).
 fn device_feasible(cfg: &ControllerConfig, dev: &Device) -> bool {
     fpga::estimate(cfg, dev).fits && cfg.dram.channels <= dev.dram_channels
+}
+
+/// Scatter the scores of the feasible ("live") candidates back onto
+/// the full candidate list: `scores` holds one cycle count per `true`
+/// in `feasible`, in order; infeasible slots come back `None`.  Every
+/// batch scorer funnels through this so the candidate/score alignment
+/// rule lives in exactly one place.
+fn scatter_feasible<I: IntoIterator<Item = u64>>(feasible: &[bool], scores: I) -> Vec<Option<f64>> {
+    let mut it = scores.into_iter();
+    feasible
+        .iter()
+        .map(|&ok| {
+            if ok {
+                Some(it.next().expect("one score per feasible candidate") as f64)
+            } else {
+                None
+            }
+        })
+        .collect()
 }
 
 /// True when every candidate shares the non-cache knobs of the first —
@@ -559,6 +642,60 @@ pub struct Point {
     pub uram: usize,
 }
 
+impl Point {
+    /// Total on-chip blocks (BRAM36 + URAM) — the resource axis the
+    /// Pareto frontier trades against cycles.
+    pub fn blocks(&self) -> usize {
+        self.bram36 + self.uram
+    }
+}
+
+/// How the configuration space is searched (see [`explore_with`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchStrategy {
+    /// Module-by-module coordinate descent (the paper's §5.3 proposal
+    /// and the legacy default): sweep one module's grid while holding
+    /// the others at the incumbent best.  Cheap, but greedy — it can
+    /// miss jointly-optimal configurations.
+    Coordinate,
+    /// Exhaustive search of the joint cross product
+    /// `remapper × line_bytes × (num_lines, assoc) × DRAM × DMA`, each
+    /// dimension unioned with the base configuration's value so the
+    /// joint space contains every point coordinate descent could visit
+    /// (its best is therefore never worse).  Infeasible points are
+    /// pruned with the device check *before* any simulation; under the
+    /// grid engine the whole space scores through the hierarchical
+    /// sweep core ([`crate::engine::sweep`]).
+    Joint,
+    /// Beam search over the module sequence: keep the best `width`
+    /// incumbents after each module sweep and sweep the next module
+    /// from each of them.  `width = 1` degenerates to greedy
+    /// coordinate descent; wider beams recover cross-module couplings
+    /// at a fraction of the joint space's cost.
+    Beam {
+        /// Incumbents kept between module sweeps (clamped to >= 1).
+        width: usize,
+    },
+}
+
+/// Search-layer options for [`explore_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct SearchOptions {
+    pub strategy: SearchStrategy,
+    /// How many best points [`Exploration::top`] reports (clamped to
+    /// >= 1; `top[0]` is always the winner).
+    pub top_k: usize,
+}
+
+impl Default for SearchOptions {
+    fn default() -> Self {
+        SearchOptions {
+            strategy: SearchStrategy::Coordinate,
+            top_k: 1,
+        }
+    }
+}
+
 /// Result of a full exploration.
 #[derive(Debug, Clone)]
 pub struct Exploration {
@@ -567,6 +704,16 @@ pub struct Exploration {
     pub visited: Vec<Point>,
     /// Candidates rejected for not fitting the device.
     pub rejected: usize,
+    /// The Pareto frontier of the visited points under (cycles,
+    /// on-chip blocks): no frontier member is beaten on both axes by
+    /// any visited point.  Ascending in cycles, so strictly descending
+    /// in blocks; `pareto[0]` always has the winner's cycle count
+    /// (on a cycles tie it may be a smaller-footprint config than
+    /// `best`, which keeps the first-visited point).
+    pub pareto: Vec<Point>,
+    /// The `top_k` best distinct configurations by cycles, ascending;
+    /// `top[0]` equals `best`.
+    pub top: Vec<Point>,
 }
 
 /// Default sweep grids (§5.2.1 parameters plus the paper's §2 DRAM
@@ -616,9 +763,11 @@ fn point_at(cfg: ControllerConfig, cycles: f64, dev: &Device) -> Point {
     }
 }
 
-/// Batch-score one module's candidate list, recording visits/rejections
-/// and lowering the incumbent (first strictly-better candidate wins
-/// ties exactly like the sequential sweep did).
+/// Batch-score one candidate list, recording visits/rejections and
+/// lowering the incumbent (first strictly-better candidate wins ties
+/// exactly like the original sequential sweep did).  Returns the fresh
+/// feasible points in candidate order (the beam strategy's selection
+/// pool).
 fn sweep_module(
     eval: &Evaluator<'_>,
     dev: &Device,
@@ -626,8 +775,9 @@ fn sweep_module(
     best: &mut Point,
     visited: &mut Vec<Point>,
     rejected: &mut usize,
-) {
+) -> Vec<Point> {
     let scores = eval.score_batch(&cands, dev);
+    let mut fresh = Vec::new();
     for (cfg, score) in cands.into_iter().zip(scores) {
         match score {
             None => *rejected += 1,
@@ -635,37 +785,17 @@ fn sweep_module(
                 let p = point_at(cfg, cycles, dev);
                 visited.push(p.clone());
                 if cycles < best.cycles {
-                    *best = p;
+                    *best = p.clone();
                 }
+                fresh.push(p);
             }
         }
     }
+    fresh
 }
 
-/// Run the module-by-module exhaustive search starting from `base`.
-/// Order: Cache Engine grid, then DMA Engine, then DRAM timing
-/// (channels/banks/row policy), then Tensor Remapper — each module
-/// fixed to its best before the next is swept.  Every module's grid is
-/// scored as one batch ([`Evaluator::score_batch`]), so under the grid
-/// engine the cross product factorizes: the cache sweep classifies all
-/// cache candidates in one trace pass, and the DMA/DRAM sweeps each
-/// vector-time all their candidates from one shared op queue.
-pub fn explore(
-    base: &ControllerConfig,
-    grids: &Grids,
-    dev: &Device,
-    eval: &Evaluator<'_>,
-) -> Exploration {
-    let mut visited = Vec::new();
-    let mut rejected = 0usize;
-
-    let base_cycles = eval
-        .score(base, dev)
-        .expect("base configuration must fit the device");
-    let mut best_point = point_at(base.clone(), base_cycles, dev);
-    visited.push(best_point.clone());
-
-    // --- Module 1: Cache Engine ---
+/// The Cache Engine module grid swept from `from` (module 1).
+fn cache_candidates(grids: &Grids, from: &ControllerConfig) -> Vec<ControllerConfig> {
     let mut cands = Vec::new();
     for &line_bytes in &grids.cache_line_bytes {
         for &num_lines in &grids.cache_num_lines {
@@ -673,7 +803,7 @@ pub fn explore(
                 if num_lines % assoc != 0 || !(num_lines / assoc).is_power_of_two() {
                     continue;
                 }
-                let mut cfg = best_point.cfg.clone();
+                let mut cfg = from.clone();
                 cfg.cache = CacheConfig {
                     line_bytes,
                     num_lines,
@@ -684,14 +814,16 @@ pub fn explore(
             }
         }
     }
-    sweep_module(eval, dev, cands, &mut best_point, &mut visited, &mut rejected);
+    cands
+}
 
-    // --- Module 2: DMA Engine ---
+/// The DMA Engine module grid swept from `from` (module 2).
+fn dma_candidates(grids: &Grids, from: &ControllerConfig) -> Vec<ControllerConfig> {
     let mut cands = Vec::new();
     for &num_dmas in &grids.dma_num {
         for &buffers_per_dma in &grids.dma_buffers {
             for &buffer_bytes in &grids.dma_buffer_bytes {
-                let mut cfg = best_point.cfg.clone();
+                let mut cfg = from.clone();
                 cfg.dma = DmaConfig {
                     num_dmas,
                     buffers_per_dma,
@@ -702,13 +834,12 @@ pub fn explore(
             }
         }
     }
-    sweep_module(eval, dev, cands, &mut best_point, &mut visited, &mut rejected);
+    cands
+}
 
-    // --- Module 3: DRAM timing (channels x banks x row policy) ---
-    // Under the grid engine this whole sweep is a timing-module batch:
-    // one cache classification pass per mode feeds the vectorized
-    // timing core, which walks the shared op queue once for all
-    // candidates.
+/// The DRAM timing module grid (channels x banks x row policy) swept
+/// from `from` (module 3).
+fn dram_candidates(grids: &Grids, from: &ControllerConfig) -> Vec<ControllerConfig> {
     let mut cands = Vec::new();
     for &channels in &grids.dram_channels {
         for &banks in &grids.dram_banks {
@@ -716,7 +847,7 @@ pub fn explore(
                 if !channels.is_power_of_two() || !banks.is_power_of_two() {
                     continue;
                 }
-                let mut cfg = best_point.cfg.clone();
+                let mut cfg = from.clone();
                 cfg.dram.channels = channels;
                 cfg.dram.banks = banks;
                 cfg.dram.row_policy = row_policy;
@@ -724,21 +855,302 @@ pub fn explore(
             }
         }
     }
-    sweep_module(eval, dev, cands, &mut best_point, &mut visited, &mut rejected);
+    cands
+}
 
-    // --- Module 4: Tensor Remapper ---
-    let mut cands = Vec::new();
-    for &max_pointers in &grids.remap_max_pointers {
-        let mut cfg = best_point.cfg.clone();
-        cfg.remapper.max_pointers = max_pointers;
-        cands.push(cfg);
+/// The Tensor Remapper module grid swept from `from` (module 4).
+fn remapper_candidates(grids: &Grids, from: &ControllerConfig) -> Vec<ControllerConfig> {
+    grids
+        .remap_max_pointers
+        .iter()
+        .map(|&max_pointers| {
+            let mut cfg = from.clone();
+            cfg.remapper.max_pointers = max_pointers;
+            cfg
+        })
+        .collect()
+}
+
+/// One module's candidates from one incumbent, by module index (the
+/// fixed §5.3 sweep order).
+fn module_candidates(
+    stage: usize,
+    grids: &Grids,
+    from: &ControllerConfig,
+) -> Vec<ControllerConfig> {
+    match stage {
+        0 => cache_candidates(grids, from),
+        1 => dma_candidates(grids, from),
+        2 => dram_candidates(grids, from),
+        _ => remapper_candidates(grids, from),
     }
-    sweep_module(eval, dev, cands, &mut best_point, &mut visited, &mut rejected);
+}
 
+/// Number of module stages the coordinate / beam strategies sweep.
+const MODULE_STAGES: usize = 4;
+
+/// The full joint cross product of `grids`, each dimension unioned with
+/// `base`'s knob value: every configuration coordinate descent could
+/// ever visit takes each knob from either `base` or its grid, so the
+/// union guarantees the joint space is a superset of the coordinate
+/// search space (and the joint optimum is never worse).  Invalid
+/// geometry combinations (non-power-of-two set counts, channels or
+/// banks) are skipped, mirroring the per-module generators — but the
+/// validity filters exempt `base`'s own values: coordinate descent can
+/// keep an off-grid base knob as an incumbent whatever its shape, so
+/// dropping it here would break the superset guarantee.
+fn joint_candidates(base: &ControllerConfig, grids: &Grids) -> Vec<ControllerConfig> {
+    fn with<T: PartialEq + Copy>(mut v: Vec<T>, b: T) -> Vec<T> {
+        if !v.contains(&b) {
+            v.push(b);
+        }
+        v
+    }
+    let line_bytes = with(grids.cache_line_bytes.clone(), base.cache.line_bytes);
+    let num_lines = with(grids.cache_num_lines.clone(), base.cache.num_lines);
+    let assocs = with(grids.cache_assoc.clone(), base.cache.assoc);
+    let dma_num = with(grids.dma_num.clone(), base.dma.num_dmas);
+    let dma_buffers = with(grids.dma_buffers.clone(), base.dma.buffers_per_dma);
+    let dma_bytes = with(grids.dma_buffer_bytes.clone(), base.dma.buffer_bytes);
+    let channels = with(grids.dram_channels.clone(), base.dram.channels);
+    let banks = with(grids.dram_banks.clone(), base.dram.banks);
+    let policies = with(grids.dram_row_policy.clone(), base.dram.row_policy);
+    let pointers = with(grids.remap_max_pointers.clone(), base.remapper.max_pointers);
+
+    let mut cands = Vec::new();
+    for &max_pointers in &pointers {
+        for &lb in &line_bytes {
+            if lb != base.cache.line_bytes && !lb.is_power_of_two() {
+                continue;
+            }
+            for &nl in &num_lines {
+                for &assoc in &assocs {
+                    let base_geom = nl == base.cache.num_lines && assoc == base.cache.assoc;
+                    if !base_geom && (nl % assoc != 0 || !(nl / assoc).is_power_of_two()) {
+                        continue;
+                    }
+                    for &ch in &channels {
+                        if ch != base.dram.channels && !ch.is_power_of_two() {
+                            continue;
+                        }
+                        for &bk in &banks {
+                            if bk != base.dram.banks && !bk.is_power_of_two() {
+                                continue;
+                            }
+                            for &policy in &policies {
+                                for &num_dmas in &dma_num {
+                                    for &buffers_per_dma in &dma_buffers {
+                                        for &buffer_bytes in &dma_bytes {
+                                            let mut cfg = base.clone();
+                                            cfg.cache.line_bytes = lb;
+                                            cfg.cache.num_lines = nl;
+                                            cfg.cache.assoc = assoc;
+                                            cfg.dram.channels = ch;
+                                            cfg.dram.banks = bk;
+                                            cfg.dram.row_policy = policy;
+                                            cfg.dma.num_dmas = num_dmas;
+                                            cfg.dma.buffers_per_dma = buffers_per_dma;
+                                            cfg.dma.buffer_bytes = buffer_bytes;
+                                            cfg.remapper.max_pointers = max_pointers;
+                                            cands.push(cfg);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    cands
+}
+
+/// The non-dominated subset of `visited` under (cycles, on-chip
+/// blocks): a point is dominated when another visited point is no
+/// worse on both axes and strictly better on at least one.  Returned
+/// ascending in cycles / strictly descending in blocks; coincident
+/// (cycles, blocks) pairs keep the first-visited point.
+fn pareto_frontier(visited: &[Point]) -> Vec<Point> {
+    let mut order: Vec<usize> = (0..visited.len()).collect();
+    order.sort_by(|&a, &b| {
+        visited[a]
+            .cycles
+            .total_cmp(&visited[b].cycles)
+            .then_with(|| visited[a].blocks().cmp(&visited[b].blocks()))
+            .then(a.cmp(&b))
+    });
+    let mut out: Vec<Point> = Vec::new();
+    let mut best_blocks = usize::MAX;
+    for i in order {
+        if visited[i].blocks() < best_blocks {
+            best_blocks = visited[i].blocks();
+            out.push(visited[i].clone());
+        }
+    }
+    out
+}
+
+/// The `k` best distinct configurations of `visited` by cycles,
+/// ascending (earliest-visited wins ties, matching the incumbent
+/// rule).
+fn top_points(visited: &[Point], k: usize) -> Vec<Point> {
+    let mut order: Vec<usize> = (0..visited.len()).collect();
+    order.sort_by(|&a, &b| {
+        visited[a]
+            .cycles
+            .total_cmp(&visited[b].cycles)
+            .then(a.cmp(&b))
+    });
+    let mut out: Vec<Point> = Vec::new();
+    for i in order {
+        if out.iter().any(|p| p.cfg == visited[i].cfg) {
+            continue;
+        }
+        out.push(visited[i].clone());
+        if out.len() == k {
+            break;
+        }
+    }
+    out
+}
+
+/// Module-by-module coordinate descent (the legacy search): each
+/// module's grid is swept from the incumbent best, which is fixed
+/// before the next module.  Behavior — visit order, tie-breaking,
+/// re-scored incumbents included — is exactly the pre-strategy
+/// `explore`.
+fn search_coordinate(
+    grids: &Grids,
+    dev: &Device,
+    eval: &Evaluator<'_>,
+    best: &mut Point,
+    visited: &mut Vec<Point>,
+    rejected: &mut usize,
+) {
+    for stage in 0..MODULE_STAGES {
+        let cands = module_candidates(stage, grids, &best.cfg);
+        sweep_module(eval, dev, cands, best, visited, rejected);
+    }
+}
+
+/// Beam search over the module sequence: after each module sweep the
+/// best `width` points seen so far (old beam plus this sweep's fresh
+/// points, stable on ties) seed the next module's candidates.  Already
+/// scored configurations are not re-scored.
+fn search_beam(
+    grids: &Grids,
+    dev: &Device,
+    eval: &Evaluator<'_>,
+    width: usize,
+    best: &mut Point,
+    visited: &mut Vec<Point>,
+    rejected: &mut usize,
+) {
+    let width = width.max(1);
+    let mut beam: Vec<Point> = vec![best.clone()];
+    let mut scored: Vec<ControllerConfig> = vec![best.cfg.clone()];
+    for stage in 0..MODULE_STAGES {
+        let mut cands: Vec<ControllerConfig> = Vec::new();
+        for p in &beam {
+            for cfg in module_candidates(stage, grids, &p.cfg) {
+                if scored.contains(&cfg) || cands.contains(&cfg) {
+                    continue;
+                }
+                cands.push(cfg);
+            }
+        }
+        scored.extend(cands.iter().cloned());
+        let fresh = sweep_module(eval, dev, cands, best, visited, rejected);
+        let mut pool = beam;
+        pool.extend(fresh);
+        // Stable sort: the old beam precedes this sweep's points, so a
+        // tie keeps the incumbent — width 1 reproduces the greedy
+        // coordinate-descent winner.
+        pool.sort_by(|a, b| a.cycles.total_cmp(&b.cycles));
+        pool.truncate(width);
+        beam = pool;
+    }
+}
+
+/// Exhaustive joint cross-product search: enumerate
+/// `remapper × cache × DRAM × DMA` ([`joint_candidates`]) and score it
+/// as one batch.  The batch scorer prunes infeasible points with the
+/// evaluator's device feasibility **before** any simulation (they come
+/// back `None` and count as rejections), and the grid engine routes
+/// the survivors through the hierarchical sweep core.
+fn search_joint(
+    base: &ControllerConfig,
+    grids: &Grids,
+    dev: &Device,
+    eval: &Evaluator<'_>,
+    best: &mut Point,
+    visited: &mut Vec<Point>,
+    rejected: &mut usize,
+) {
+    let cands: Vec<ControllerConfig> = joint_candidates(base, grids)
+        .into_iter()
+        .filter(|cfg| cfg != base) // base is already scored as the starting point
+        .collect();
+    sweep_module(eval, dev, cands, best, visited, rejected);
+}
+
+/// [`explore_with`] under the default options (coordinate descent,
+/// top-1) — the legacy module-by-module search, byte-for-byte.
+pub fn explore(
+    base: &ControllerConfig,
+    grids: &Grids,
+    dev: &Device,
+    eval: &Evaluator<'_>,
+) -> Exploration {
+    explore_with(base, grids, dev, eval, &SearchOptions::default())
+}
+
+/// Run a design-space search starting from `base` under the chosen
+/// [`SearchStrategy`].  Every strategy scores candidates in batches
+/// ([`Evaluator::score_batch`]), so under the grid engine the cross
+/// product factorizes: module sweeps hit the one-pass cache grid /
+/// vectorized timing cores, and the joint strategy's full cross
+/// product runs through the hierarchical sweep core
+/// ([`crate::engine::sweep`]).  The returned [`Exploration`] carries
+/// the winner, the Pareto frontier (cycles vs on-chip blocks), and the
+/// `top_k` best points.
+pub fn explore_with(
+    base: &ControllerConfig,
+    grids: &Grids,
+    dev: &Device,
+    eval: &Evaluator<'_>,
+    opts: &SearchOptions,
+) -> Exploration {
+    let mut visited = Vec::new();
+    let mut rejected = 0usize;
+
+    let base_cycles = eval
+        .score(base, dev)
+        .expect("base configuration must fit the device");
+    let mut best = point_at(base.clone(), base_cycles, dev);
+    visited.push(best.clone());
+
+    match opts.strategy {
+        SearchStrategy::Coordinate => {
+            search_coordinate(grids, dev, eval, &mut best, &mut visited, &mut rejected)
+        }
+        SearchStrategy::Beam { width } => {
+            search_beam(grids, dev, eval, width, &mut best, &mut visited, &mut rejected)
+        }
+        SearchStrategy::Joint => {
+            search_joint(base, grids, dev, eval, &mut best, &mut visited, &mut rejected)
+        }
+    }
+
+    let pareto = pareto_frontier(&visited);
+    let top = top_points(&visited, opts.top_k.max(1));
     Exploration {
-        best: best_point,
+        best,
         visited,
         rejected,
+        pareto,
+        top,
     }
 }
 
@@ -1113,5 +1525,239 @@ mod tests {
             ex_full.best.cfg.cache, ex_cache.best.cfg.cache,
             "full search must keep the cache module's winner"
         );
+    }
+
+    /// A small joint space every cycle-level strategy test shares.
+    fn small_grids() -> Grids {
+        Grids {
+            cache_line_bytes: vec![32, 64],
+            cache_num_lines: vec![256, 1024],
+            cache_assoc: vec![2, 4],
+            dma_num: vec![1, 2],
+            dma_buffers: vec![2],
+            dma_buffer_bytes: vec![4096],
+            dram_channels: vec![1, 2],
+            dram_banks: vec![16],
+            dram_row_policy: vec![RowPolicy::Open],
+            remap_max_pointers: vec![1 << 10, 1 << 18],
+        }
+    }
+
+    #[test]
+    fn joint_search_never_scores_worse_than_coordinate() {
+        // The joint space is a per-dimension superset of everything
+        // coordinate descent can visit, so its winner must be at least
+        // as good — under every evaluator.
+        let t = tensor();
+        let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 5)).collect();
+        let profile = TensorProfile::measure(&t);
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let grids = small_grids();
+        let joint = SearchOptions {
+            strategy: SearchStrategy::Joint,
+            top_k: 3,
+        };
+        let evals = [
+            Evaluator::Pms {
+                profile: &profile,
+                rank: 16,
+            },
+            Evaluator::cycle_sim(&t, &factors, EngineKind::Event),
+            Evaluator::cycle_sim(&t, &factors, EngineKind::Grid),
+        ];
+        for (i, eval) in evals.iter().enumerate() {
+            let ex_coord = explore(&base, &grids, &dev, eval);
+            let ex_joint = explore_with(&base, &grids, &dev, eval, &joint);
+            assert!(
+                ex_joint.best.cycles <= ex_coord.best.cycles,
+                "evaluator {i}: joint {} must be <= coordinate {}",
+                ex_joint.best.cycles,
+                ex_coord.best.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn joint_search_grid_engine_matches_event_engine_exactly() {
+        // The hierarchical sweep core must not change a single score:
+        // the joint strategy under the grid engine returns the same
+        // visited points, the same rejections, and the same winner as
+        // per-candidate scoring under the event engine.
+        let t = tensor();
+        let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 6)).collect();
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let grids = small_grids();
+        let joint = SearchOptions {
+            strategy: SearchStrategy::Joint,
+            top_k: 5,
+        };
+        let ev_event = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
+        let ev_grid = Evaluator::cycle_sim(&t, &factors, EngineKind::Grid);
+        let ex_event = explore_with(&base, &grids, &dev, &ev_event, &joint);
+        let ex_grid = explore_with(&base, &grids, &dev, &ev_grid, &joint);
+        assert_eq!(ex_event.visited.len(), ex_grid.visited.len());
+        assert_eq!(ex_event.rejected, ex_grid.rejected);
+        for (a, b) in ex_event.visited.iter().zip(&ex_grid.visited) {
+            assert_eq!(a.cycles, b.cycles, "joint scores diverged between engines");
+            assert_eq!(a.cfg, b.cfg);
+        }
+        assert_eq!(ex_event.best.cycles, ex_grid.best.cycles);
+        assert_eq!(ex_event.best.cfg, ex_grid.best.cfg);
+        assert_eq!(ex_event.top.len(), ex_grid.top.len());
+        for (a, b) in ex_event.top.iter().zip(&ex_grid.top) {
+            assert_eq!(a.cfg, b.cfg);
+        }
+    }
+
+    #[test]
+    fn beam_width_one_matches_coordinate_winner() {
+        let t = tensor();
+        let profile = TensorProfile::measure(&t);
+        let eval = Evaluator::Pms {
+            profile: &profile,
+            rank: 16,
+        };
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let ex_coord = explore(&base, &Grids::default(), &dev, &eval);
+        let ex_beam = explore_with(
+            &base,
+            &Grids::default(),
+            &dev,
+            &eval,
+            &SearchOptions {
+                strategy: SearchStrategy::Beam { width: 1 },
+                top_k: 1,
+            },
+        );
+        assert_eq!(ex_beam.best.cycles, ex_coord.best.cycles);
+        assert_eq!(ex_beam.best.cfg, ex_coord.best.cfg);
+    }
+
+    #[test]
+    fn joint_dominates_both_module_searches() {
+        // Every configuration coordinate descent or a beam search can
+        // visit takes each knob from {base} ∪ its grid, so the joint
+        // space is a superset of both search spaces and the joint
+        // winner can never be worse than either.  (Beam-vs-coordinate
+        // has no such guarantee — a beam may prune the greedy
+        // incumbent — so only the joint dominance is asserted.)
+        let t = tensor();
+        let profile = TensorProfile::measure(&t);
+        let eval = Evaluator::Pms {
+            profile: &profile,
+            rank: 16,
+        };
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let grids = Grids::default();
+        let run = |strategy| {
+            explore_with(
+                &base,
+                &grids,
+                &dev,
+                &eval,
+                &SearchOptions { strategy, top_k: 1 },
+            )
+            .best
+            .cycles
+        };
+        let coord = run(SearchStrategy::Coordinate);
+        let beam = run(SearchStrategy::Beam { width: 4 });
+        let joint = run(SearchStrategy::Joint);
+        assert!(joint <= coord, "joint {joint} must be <= coordinate {coord}");
+        assert!(joint <= beam, "joint {joint} must be <= beam(4) {beam}");
+    }
+
+    #[test]
+    fn pareto_and_top_k_report_shapes() {
+        let t = tensor();
+        let profile = TensorProfile::measure(&t);
+        let eval = Evaluator::Pms {
+            profile: &profile,
+            rank: 16,
+        };
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let ex = explore_with(
+            &base,
+            &Grids::default(),
+            &dev,
+            &eval,
+            &SearchOptions {
+                strategy: SearchStrategy::Joint,
+                top_k: 5,
+            },
+        );
+        // Top-k: ascending cycles, distinct configs, winner first.
+        assert_eq!(ex.top.len(), 5);
+        assert_eq!(ex.top[0].cycles, ex.best.cycles);
+        assert_eq!(ex.top[0].cfg, ex.best.cfg);
+        for w in ex.top.windows(2) {
+            assert!(w[0].cycles <= w[1].cycles, "top-k must be ascending");
+            assert!(w[0].cfg != w[1].cfg, "top-k must be distinct configs");
+        }
+        // Pareto: ascending cycles, strictly descending blocks, winner
+        // first, and no visited point dominates a frontier member.
+        assert!(!ex.pareto.is_empty());
+        assert_eq!(ex.pareto[0].cycles, ex.best.cycles);
+        for w in ex.pareto.windows(2) {
+            assert!(w[0].cycles <= w[1].cycles);
+            assert!(
+                w[0].blocks() > w[1].blocks(),
+                "frontier blocks must strictly descend"
+            );
+        }
+        for p in &ex.pareto {
+            assert!(
+                !ex.visited.iter().any(|v| v.cycles <= p.cycles
+                    && v.blocks() <= p.blocks()
+                    && (v.cycles < p.cycles || v.blocks() < p.blocks())),
+                "frontier member is dominated by a visited point"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_joint_batch_matches_event_scores() {
+        let t = generate(&SynthConfig {
+            dims: vec![500, 400, 300],
+            nnz: 6_000,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed: 83,
+        });
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let sweep_grid =
+            crate::shard::ShardedSweep::prepare_with_engine(&t, 8, 2, EngineKind::Grid);
+        let sweep_event =
+            crate::shard::ShardedSweep::prepare_with_engine(&t, 8, 2, EngineKind::Event);
+        let ev_grid = Evaluator::ShardedSim { sweep: &sweep_grid };
+        let ev_event = Evaluator::ShardedSim { sweep: &sweep_event };
+        // A genuinely joint batch: cache AND dram/dma/remapper all vary.
+        let mut cands = Vec::new();
+        for &(num_lines, channels, max_pointers) in &[
+            (256usize, 1usize, 1usize << 10),
+            (1024, 2, 1 << 18),
+            (4096, 1, 1 << 10),
+        ] {
+            let mut cfg = base.clone();
+            cfg.cache.num_lines = num_lines;
+            cfg.dram.channels = channels;
+            cfg.remapper.max_pointers = max_pointers;
+            cands.push(cfg);
+        }
+        // Infeasible mid-batch keeps the index mapping honest.
+        let mut wide = base.clone();
+        wide.dram.channels = 8;
+        wide.cache.num_lines = 256;
+        cands.insert(1, wide);
+        let grid_scores = ev_grid.score_batch(&cands, &dev);
+        let event_scores = ev_event.score_batch(&cands, &dev);
+        assert_eq!(grid_scores, event_scores);
+        assert!(grid_scores[1].is_none());
+        assert!(grid_scores.iter().filter(|s| s.is_some()).count() == 3);
     }
 }

@@ -39,12 +39,22 @@
 //! advances an array of per-candidate DRAM/DMA lanes in
 //! structure-of-arrays form — every DRAM and DMA candidate timed
 //! simultaneously, bit-identically to per-candidate replay.
+//!
+//! The two one-pass cores compose hierarchically in the **joint sweep
+//! core** ([`sweep`], also engaged by [`EngineKind::Grid`]): a whole
+//! `line_bytes × (num_lines, assoc) × DRAM × DMA` cross product is
+//! scored in one structured traversal — classify per line width,
+//! extract per cache candidate, walk each cache's DRAM/DMA lane set
+//! once — so a *joint* DSE search pays for distinct `(cache, lane)`
+//! cells instead of full replays per candidate, still bit-identically.
 
 pub mod grid;
+pub mod sweep;
 pub mod timing;
 pub mod trace;
 
 pub use grid::{GridClassification, GridRun};
+pub use sweep::JointIndex;
 pub use timing::{TimingCandidate, TimingOps, TimingRun};
 pub use trace::CompressedTrace;
 

@@ -1,0 +1,374 @@
+//! Hierarchical joint cross-product sweep core (S24): one structured
+//! traversal of a trace scores the **entire** `line_bytes ×
+//! (num_lines, assoc) × DRAM × DMA` joint space — the composition the
+//! cache grid core ([`super::grid`]) and the vectorized timing core
+//! ([`super::timing`]) were built for, finally driven as one tree
+//! instead of module-by-module.
+//!
+//! The share-one-level-up principle: every level of the joint space
+//! reuses the most expensive artifact of the level above it.
+//!
+//! * The **trace** is shared by everything (and, one level higher
+//!   still, the host remap that produced it is shared across the whole
+//!   sweep — the callers' [`RemapMemo`](crate::util::RemapMemo) keys
+//!   the remap-*pass* cycles per (mode, DRAM, remapper)).
+//! * Per distinct **`line_bytes`**, one stack-distance classification
+//!   pass serves every `(num_lines, assoc)` candidate of that width
+//!   ([`GridClassification::classify`] already groups passes by width,
+//!   so handing it the deduplicated cache list *is* this level).
+//! * Per distinct **cache candidate**, one op-queue extraction
+//!   ([`TimingOps::extract`]) folds the hit-dominated cache loop away.
+//! * Per cache candidate's **DRAM × DMA lane set**, one walk of that op
+//!   queue advances all lanes simultaneously
+//!   ([`TimingOps::time_grid`]).
+//!
+//! A joint point is a `(cache, DRAM×DMA lane)` **cell**; candidates
+//! that collapse to the same cell (e.g. remapper-only variants, or
+//! channel counts with the same per-worker split) are timed once and
+//! fanned back out.  Every candidate's cycle count is **bit-identical**
+//! to a fresh per-candidate lockstep/event replay of the same trace:
+//! a candidate's classification does not depend on which other
+//! candidates share its pass, its extracted op queue does not depend
+//! on which candidates shared the classification (the grid/timing
+//! cores' "company independence" properties), and lanes are walked by
+//! the exact scalar [`Dram`](crate::dram::Dram) /
+//! [`DmaEngine`](crate::controller::DmaEngine) state machines — as
+//! enforced on a randomized corpus by `tests/sweep_props.rs` and the
+//! joint-grid column of `tests/differential.rs`.
+
+use super::grid::GridClassification;
+use super::timing::{TimingCandidate, TimingOps};
+use super::CompressedTrace;
+use crate::controller::CacheConfig;
+use crate::util::parallel_indexed;
+
+/// A deduplicated joint candidate list: the distinct cache candidates,
+/// each with the distinct DRAM×DMA lanes it must be timed against, plus
+/// the map from every input candidate to its `(cache, lane)` cell.
+/// Build once per candidate list with [`JointIndex::build`], then score
+/// any number of traces with [`JointIndex::sweep`].
+#[derive(Debug, Clone)]
+pub struct JointIndex {
+    caches: Vec<CacheConfig>,
+    lane_sets: Vec<Vec<TimingCandidate>>,
+    /// Per input candidate: (index into `caches`, index into that
+    /// cache's lane set).
+    cell_of: Vec<(usize, usize)>,
+}
+
+impl JointIndex {
+    /// Index a joint candidate list given as `(cache, timing)` pairs —
+    /// one pair per candidate, in scoring order.  Duplicate caches
+    /// share a classification + extraction; duplicate `(cache, lane)`
+    /// cells share the timing walk entirely.
+    pub fn build(pairs: &[(CacheConfig, TimingCandidate)]) -> JointIndex {
+        let mut caches: Vec<CacheConfig> = Vec::new();
+        let mut lane_sets: Vec<Vec<TimingCandidate>> = Vec::new();
+        let mut cell_of = Vec::with_capacity(pairs.len());
+        for (cc, lane) in pairs {
+            let ci = match caches.iter().position(|c| c == cc) {
+                Some(i) => i,
+                None => {
+                    caches.push(*cc);
+                    lane_sets.push(Vec::new());
+                    caches.len() - 1
+                }
+            };
+            let li = match lane_sets[ci].iter().position(|l| l == lane) {
+                Some(i) => i,
+                None => {
+                    lane_sets[ci].push(lane.clone());
+                    lane_sets[ci].len() - 1
+                }
+            };
+            cell_of.push((ci, li));
+        }
+        JointIndex {
+            caches,
+            lane_sets,
+            cell_of,
+        }
+    }
+
+    /// Number of input candidates.
+    pub fn len(&self) -> usize {
+        self.cell_of.len()
+    }
+
+    /// True when the index holds no candidates.
+    pub fn is_empty(&self) -> bool {
+        self.cell_of.is_empty()
+    }
+
+    /// The distinct cache candidates (classification targets).
+    pub fn caches(&self) -> &[CacheConfig] {
+        &self.caches
+    }
+
+    /// Number of distinct `(cache, lane)` cells actually simulated —
+    /// the sweep's real work, `<= len()`.
+    pub fn cells(&self) -> usize {
+        self.lane_sets.iter().map(Vec::len).sum()
+    }
+
+    /// Completion cycles of every candidate over `trace`, in input
+    /// order: one classification pass per distinct `line_bytes`, one
+    /// op-queue extraction per distinct cache, one multi-lane walk per
+    /// cache's lane set — each bit-identical to a fresh per-candidate
+    /// lockstep/event replay.
+    pub fn sweep(&self, trace: &CompressedTrace) -> Vec<u64> {
+        self.run(trace, false)
+    }
+
+    /// [`JointIndex::sweep`] with the per-cache extraction + walk
+    /// fanned out across host threads (cells are independent, so the
+    /// result is identical).
+    pub fn sweep_parallel(&self, trace: &CompressedTrace) -> Vec<u64> {
+        self.run(trace, true)
+    }
+
+    /// Sweep several traces (e.g. one per shard) with one flattened
+    /// `(trace × cache)` fan-out: classifications run concurrently per
+    /// trace, then every (trace, cache) row extracts and walks on its
+    /// own thread slot — saturating the host even when either
+    /// dimension alone is smaller than the core count.  Returns one
+    /// per-candidate cycle vector per trace, each identical to
+    /// [`JointIndex::sweep`] of that trace.
+    pub fn sweep_many(&self, traces: &[&CompressedTrace]) -> Vec<Vec<u64>> {
+        if self.caches.is_empty() || traces.is_empty() {
+            return traces.iter().map(|_| Vec::new()).collect();
+        }
+        let classifications: Vec<GridClassification> = parallel_indexed(traces.len(), |ti| {
+            GridClassification::classify(traces[ti], &self.caches)
+        });
+        let nc = self.caches.len();
+        let rows: Vec<Vec<u64>> = parallel_indexed(traces.len() * nc, |k| {
+            self.cell_cycles(&classifications[k / nc], k % nc, traces[k / nc])
+        });
+        (0..traces.len())
+            .map(|ti| {
+                self.cell_of
+                    .iter()
+                    .map(|&(ci, li)| rows[ti * nc + ci][li])
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn run(&self, trace: &CompressedTrace, parallel: bool) -> Vec<u64> {
+        if self.caches.is_empty() {
+            return Vec::new();
+        }
+        let cls = GridClassification::classify(trace, &self.caches);
+        let cells: Vec<Vec<u64>> = if parallel && self.caches.len() > 1 {
+            parallel_indexed(self.caches.len(), |ci| self.cell_cycles(&cls, ci, trace))
+        } else if parallel {
+            // One cache: the lanes themselves are the only parallelism.
+            let ops = TimingOps::extract(&cls, 0, trace);
+            vec![ops
+                .time_grid_parallel(&self.lane_sets[0])
+                .into_iter()
+                .map(|r| r.cycles)
+                .collect()]
+        } else {
+            (0..self.caches.len())
+                .map(|ci| self.cell_cycles(&cls, ci, trace))
+                .collect()
+        };
+        self.cell_of.iter().map(|&(ci, li)| cells[ci][li]).collect()
+    }
+
+    /// One cache candidate's row of cells: extract its op queue, walk
+    /// its lane set once.
+    fn cell_cycles(
+        &self,
+        cls: &GridClassification,
+        ci: usize,
+        trace: &CompressedTrace,
+    ) -> Vec<u64> {
+        let ops = TimingOps::extract(cls, ci, trace);
+        ops.time_grid(&self.lane_sets[ci])
+            .into_iter()
+            .map(|r| r.cycles)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::{Access, ControllerConfig, MemoryController};
+    use crate::dram::RowPolicy;
+    use crate::engine::{EngineKind, PreparedTrace};
+    use crate::testkit::Rng;
+
+    fn mixed_trace(seed: u64, n: usize) -> Vec<Access> {
+        let mut rng = Rng::new(seed);
+        let mut trace = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            match rng.below(6) {
+                0 => trace.push(Access::Stream {
+                    addr: i * 4096,
+                    bytes: 1024 + rng.below(4096) as usize,
+                }),
+                1 => trace.push(Access::Element {
+                    addr: (1 << 30) + rng.below(1 << 20) * 16,
+                    bytes: 16,
+                }),
+                2 => trace.push(Access::CachedStore {
+                    addr: (2 << 28) + rng.below(1 << 12) * 16,
+                    bytes: 16,
+                }),
+                _ => trace.push(Access::Cached {
+                    addr: (8 << 20) + rng.below(1 << 12) * 64,
+                    bytes: 64,
+                }),
+            }
+        }
+        trace
+    }
+
+    /// A small joint cross product: 2 line widths x 2 geometries x
+    /// 3 DRAM timings x 2 DMA shapes, plus full configurations to
+    /// verify against.
+    fn joint_grid(base: &ControllerConfig) -> Vec<ControllerConfig> {
+        let mut cfgs = Vec::new();
+        for &(line_bytes, num_lines, assoc) in
+            &[(32usize, 256usize, 2usize), (64, 256, 2), (64, 1024, 4)]
+        {
+            for &(channels, policy) in &[
+                (1usize, RowPolicy::Open),
+                (2, RowPolicy::Closed),
+                (4, RowPolicy::Open),
+            ] {
+                for &(num_dmas, buffer_bytes) in &[(1usize, 1024usize), (2, 4096)] {
+                    let mut cfg = base.clone();
+                    cfg.cache.line_bytes = line_bytes;
+                    cfg.cache.num_lines = num_lines;
+                    cfg.cache.assoc = assoc;
+                    cfg.dram.channels = channels;
+                    cfg.dram.row_policy = policy;
+                    cfg.dma.num_dmas = num_dmas;
+                    cfg.dma.buffer_bytes = buffer_bytes;
+                    cfgs.push(cfg);
+                }
+            }
+        }
+        cfgs
+    }
+
+    #[test]
+    fn joint_sweep_matches_fresh_event_replay_for_every_candidate() {
+        let prepared = PreparedTrace::new(mixed_trace(41, 2_000));
+        let base = ControllerConfig::default_for(16);
+        let cfgs = joint_grid(&base);
+        let pairs: Vec<(crate::controller::CacheConfig, TimingCandidate)> = cfgs
+            .iter()
+            .map(|c| (c.cache, TimingCandidate::of(c)))
+            .collect();
+        let index = JointIndex::build(&pairs);
+        assert_eq!(index.len(), cfgs.len());
+        let got = index.sweep(prepared.compressed());
+        for (cfg, &cycles) in cfgs.iter().zip(&got) {
+            let mut ctl = MemoryController::new(cfg.clone());
+            let want = EngineKind::Event.replay(&mut ctl, &prepared);
+            assert_eq!(cycles, want, "joint sweep diverged for {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_sweep_is_identical_to_sequential() {
+        let prepared = PreparedTrace::new(mixed_trace(43, 1_500));
+        let base = ControllerConfig::default_for(16);
+        let cfgs = joint_grid(&base);
+        let pairs: Vec<_> = cfgs
+            .iter()
+            .map(|c| (c.cache, TimingCandidate::of(c)))
+            .collect();
+        let index = JointIndex::build(&pairs);
+        assert_eq!(
+            index.sweep(prepared.compressed()),
+            index.sweep_parallel(prepared.compressed())
+        );
+    }
+
+    #[test]
+    fn duplicate_candidates_share_cells() {
+        let base = ControllerConfig::default_for(16);
+        let mut other = base.clone();
+        other.dram.channels = 4;
+        let mut remapper_only = base.clone();
+        remapper_only.remapper.max_pointers = 4;
+        let pairs: Vec<_> = [&base, &other, &base, &remapper_only]
+            .iter()
+            .map(|c| (c.cache, TimingCandidate::of(c)))
+            .collect();
+        let index = JointIndex::build(&pairs);
+        assert_eq!(index.len(), 4);
+        // One cache, two distinct lanes: the base cell serves the
+        // duplicate AND the remapper-only variant.
+        assert_eq!(index.caches().len(), 1);
+        assert_eq!(index.cells(), 2);
+        let prepared = PreparedTrace::new(mixed_trace(45, 400));
+        let got = index.sweep(prepared.compressed());
+        assert_eq!(got[0], got[2]);
+        assert_eq!(got[0], got[3]);
+        assert_ne!(got[0], got[1], "4-channel lane must time differently");
+    }
+
+    #[test]
+    fn single_cache_parallel_path_matches() {
+        let base = ControllerConfig::default_for(16);
+        let mut cfgs = Vec::new();
+        for &channels in &[1usize, 2, 4] {
+            for &num_dmas in &[1usize, 2, 4] {
+                let mut cfg = base.clone();
+                cfg.dram.channels = channels;
+                cfg.dma.num_dmas = num_dmas;
+                cfgs.push(cfg);
+            }
+        }
+        let pairs: Vec<_> = cfgs
+            .iter()
+            .map(|c| (c.cache, TimingCandidate::of(c)))
+            .collect();
+        let index = JointIndex::build(&pairs);
+        assert_eq!(index.caches().len(), 1);
+        let prepared = PreparedTrace::new(mixed_trace(47, 1_200));
+        assert_eq!(
+            index.sweep(prepared.compressed()),
+            index.sweep_parallel(prepared.compressed())
+        );
+    }
+
+    #[test]
+    fn sweep_many_matches_per_trace_sweeps() {
+        let base = ControllerConfig::default_for(16);
+        let cfgs = joint_grid(&base);
+        let pairs: Vec<_> = cfgs
+            .iter()
+            .map(|c| (c.cache, TimingCandidate::of(c)))
+            .collect();
+        let index = JointIndex::build(&pairs);
+        let prepared: Vec<PreparedTrace> = [(49u64, 800usize), (51, 1), (53, 1_200)]
+            .iter()
+            .map(|&(seed, n)| PreparedTrace::new(mixed_trace(seed, n)))
+            .collect();
+        let traces: Vec<_> = prepared.iter().map(|p| p.compressed()).collect();
+        let many = index.sweep_many(&traces);
+        assert_eq!(many.len(), traces.len());
+        for (trace, got) in traces.iter().zip(&many) {
+            assert_eq!(*got, index.sweep(trace));
+        }
+        assert!(index.sweep_many(&[]).is_empty());
+    }
+
+    #[test]
+    fn empty_index_sweeps_to_nothing() {
+        let index = JointIndex::build(&[]);
+        assert!(index.is_empty());
+        assert_eq!(index.cells(), 0);
+        let prepared = PreparedTrace::new(Vec::new());
+        assert!(index.sweep(prepared.compressed()).is_empty());
+    }
+}

@@ -9,7 +9,11 @@
 //! * `shard`     — report the output-disjoint shard plan (per-shard
 //!   coordinate ranges, nnz shares, load imbalance) for `--workers K`.
 //! * `pms`       — analytic PMS estimate for a (tensor, config) pair.
-//! * `explore`   — module-by-module design-space search (paper §5.3).
+//! * `explore`   — design-space search (paper §5.3): coordinate descent
+//!   (the default), exhaustive joint cross-product search, or beam
+//!   search (`--search coordinate|joint|beam`), reporting the winner,
+//!   the top-k points (`--top-k`), and the Pareto frontier of cycles
+//!   vs on-chip blocks.
 //! * `stats`     — Table-2-style characteristics of a tensor.
 //!
 //! Workload selection (all subcommands): `--input file.tns` or
@@ -31,7 +35,7 @@ use ptmc::config::Config;
 use ptmc::controller::{ControllerConfig, MemLayout, MemoryController};
 use ptmc::coordinator::{PjrtCoordinator, SegMode};
 use ptmc::cpd::{cp_als, linalg::Mat, AlsConfig, NativeBackend, SimBackend};
-use ptmc::dse::{explore, Evaluator, Grids};
+use ptmc::dse::{explore_with, Evaluator, Grids, SearchOptions, SearchStrategy};
 use ptmc::engine::EngineKind;
 use ptmc::fpga::Device;
 use ptmc::pms::{self, TensorProfile};
@@ -43,6 +47,7 @@ const OPTS: &[&str] = &[
     "input", "synth", "dims", "nnz", "seed", "alpha", // workload
     "config", "rank", "iters", "tol", "backend", "device", "evaluator", "seg",
     "workers", "mode", "engine", // sharded execution + replay core
+    "search", "top-k", // DSE search strategy + report depth
     "cache-lines", "cache-line-bytes", "cache-assoc", "dma-buffers", "dma-num",
     "dma-buffer-bytes", "max-pointers", "channels", "dram-banks", "row-policy",
     "artifacts",
@@ -77,8 +82,15 @@ fn usage() {
          \x20          --dma-buffer-bytes B --max-pointers P --channels C\n\
          \x20          --dram-banks B --row-policy open|closed\n\
          dse:       --device u250|u280|vu9p --evaluator pms|sim|sharded|grid\n\
-         \x20          (explore sweeps cache, DMA, DRAM timing — channels x\n\
-         \x20          banks x row policy — then remapper grids)\n\
+         \x20          --search coordinate|joint|beam --top-k N\n\
+         \x20          (coordinate sweeps cache, DMA, DRAM timing — channels\n\
+         \x20          x banks x row policy — then remapper grids, one module\n\
+         \x20          at a time; joint scores the full cross product through\n\
+         \x20          the hierarchical sweep core; beam keeps the top-k\n\
+         \x20          incumbents between module sweeps.  Every search also\n\
+         \x20          reports the top-k points and the Pareto frontier of\n\
+         \x20          cycles vs on-chip blocks.  Config-file equivalents:\n\
+         \x20          [dse] search / top_k)\n\
          sim core:  --engine lockstep|event|grid (bit-identical; default\n\
          \x20          event on explore for sweep throughput, lockstep on\n\
          \x20          simulate; grid scores whole cache-module grids in\n\
@@ -111,8 +123,23 @@ fn controller_config(
     args: &Args,
     elem_bytes: usize,
 ) -> Result<ControllerConfig, Box<dyn std::error::Error>> {
-    let mut cfg = match args.get("config") {
-        Some(path) => Config::load(Path::new(path))?.controller(elem_bytes),
+    let file_cfg = match args.get("config") {
+        Some(path) => Some(Config::load(Path::new(path))?),
+        None => None,
+    };
+    controller_config_with(args, elem_bytes, file_cfg.as_ref())
+}
+
+/// [`controller_config`] with an already-loaded `--config` file, so
+/// callers that need other sections of the same file (explore's
+/// `[dse]` keys) parse it exactly once.
+fn controller_config_with(
+    args: &Args,
+    elem_bytes: usize,
+    file_cfg: Option<&Config>,
+) -> Result<ControllerConfig, Box<dyn std::error::Error>> {
+    let mut cfg = match file_cfg {
+        Some(c) => c.controller(elem_bytes),
         None => ControllerConfig::default_for(elem_bytes),
     };
     cfg.cache.num_lines = args.usize_or("cache-lines", cfg.cache.num_lines)?;
@@ -345,10 +372,58 @@ fn cmd_pms(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
+/// One-line knob summary of a configuration for the explore report.
+fn cfg_summary(cfg: &ControllerConfig) -> String {
+    format!(
+        "cache {}x{}B {}-way | dma {}x{}x{}B | dram {}ch x{} {} | ptr {}",
+        cfg.cache.num_lines,
+        cfg.cache.line_bytes,
+        cfg.cache.assoc,
+        cfg.dma.num_dmas,
+        cfg.dma.buffers_per_dma,
+        cfg.dma.buffer_bytes,
+        cfg.dram.channels,
+        cfg.dram.banks,
+        cfg.dram.row_policy,
+        cfg.remapper.max_pointers
+    )
+}
+
 fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     let t = workload::tensor_from_args(args)?;
     let rank = args.usize_or("rank", 16)?;
     let evaluator = args.str_or("evaluator", "pms");
+    // Search layer: --search / --top-k override the config file's
+    // `[dse]` section; the default is the legacy coordinate descent
+    // with a single winner.
+    let file_cfg = match args.get("config") {
+        Some(path) => Some(Config::load(Path::new(path))?),
+        None => None,
+    };
+    let search_default = file_cfg
+        .as_ref()
+        .map(|c| c.str_or("dse", "search", "coordinate").to_string())
+        .unwrap_or_else(|| "coordinate".to_string());
+    let top_k_default = file_cfg
+        .as_ref()
+        .map_or(1, |c| c.usize_or("dse", "top_k", 1));
+    let top_k = args.usize_or("top-k", top_k_default)?.max(1);
+    let search = args.str_or("search", &search_default);
+    let strategy = match search {
+        "coordinate" => SearchStrategy::Coordinate,
+        "joint" => SearchStrategy::Joint,
+        // The beam keeps as many incumbents as the report shows (at
+        // least 2 — width 1 would just be coordinate descent again).
+        "beam" => SearchStrategy::Beam {
+            width: top_k.max(2),
+        },
+        other => {
+            return Err(Box::new(CliError(format!(
+                "unknown --search {other:?} (coordinate|joint|beam)"
+            ))))
+        }
+    };
+    let opts = SearchOptions { strategy, top_k };
     // `--evaluator grid` is shorthand for the cycle evaluator pinned to
     // the grid batch core; a conflicting explicit --engine would
     // silently lose, so reject it and default the header to grid.
@@ -361,7 +436,7 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         }
         engine = EngineKind::Grid;
     }
-    let base = controller_config(args, t.record_bytes())?;
+    let base = controller_config_with(args, t.record_bytes(), file_cfg.as_ref())?;
     let dev = device(args)?;
     let profile = TensorProfile::measure(&t);
     let factors: Vec<Mat> = t
@@ -396,7 +471,8 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             ))))
         }
     };
-    let ex = explore(&base, &Grids::default(), &dev, &eval);
+    println!("search: {search} (top-k {top_k})");
+    let ex = explore_with(&base, &Grids::default(), &dev, &eval, &opts);
     println!(
         "explored {} feasible configs ({} rejected as not fitting {})",
         ex.visited.len(),
@@ -416,6 +492,33 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         b.cfg.remapper.max_pointers
     );
     println!("  resources: {} BRAM36 + {} URAM", b.bram36, b.uram);
+    if ex.top.len() > 1 {
+        println!("top-{} points:", ex.top.len());
+        for (i, p) in ex.top.iter().enumerate() {
+            println!(
+                "  {}: {:.3e} cycles | {} | {} blocks",
+                i + 1,
+                p.cycles,
+                cfg_summary(&p.cfg),
+                p.blocks()
+            );
+        }
+    }
+    println!(
+        "pareto frontier (cycles vs on-chip blocks): {} points",
+        ex.pareto.len()
+    );
+    for p in ex.pareto.iter().take(8) {
+        println!(
+            "  {:.3e} cycles @ {} blocks | {}",
+            p.cycles,
+            p.blocks(),
+            cfg_summary(&p.cfg)
+        );
+    }
+    if ex.pareto.len() > 8 {
+        println!("  ... {} more on the frontier", ex.pareto.len() - 8);
+    }
     Ok(())
 }
 

@@ -12,21 +12,18 @@
 //! simulated time of a mode is the *slowest* worker's makespan while
 //! statistics are the *sum* over workers ([`AggregateStats`]).
 
-use std::collections::HashMap;
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::{partition_indices, AggregateStats, ShardPlan, ShardSpec};
-use crate::controller::{
-    Access, CacheConfig, ControllerConfig, MemLayout, MemoryController, RemapperConfig,
-};
+use crate::controller::{Access, CacheConfig, ControllerConfig, MemLayout, MemoryController};
 use crate::coordinator::Metrics;
 use crate::cpd::linalg::Mat;
-use crate::dram::DramConfig;
-use crate::engine::{EngineKind, GridClassification, PreparedTrace, TimingCandidate, TimingOps};
+use crate::engine::{
+    EngineKind, GridClassification, JointIndex, PreparedTrace, TimingCandidate, TimingOps,
+};
 use crate::mttkrp::{oracle, STREAM_CHUNK_ELEMS};
 use crate::tensor::{Coord, SparseTensor};
-use crate::util::parallel_indexed;
+use crate::util::{parallel_indexed, RemapMemo};
 
 /// Result of one sharded MTTKRP mode execution.
 #[derive(Debug)]
@@ -326,12 +323,6 @@ pub fn mttkrp_planned_with_engine(
     }
 }
 
-/// Key of one memoized remap-pass simulation: the remap's cost under a
-/// configuration depends only on these knobs (the pass runs on a fresh
-/// controller, and neither the Cache Engine nor the DMA Engine touches
-/// it), so every candidate sharing them reuses the same cycle count.
-type RemapKey = (usize, DramConfig, RemapperConfig);
-
 /// Precomputed, configuration-independent inputs of a sharded DSE
 /// sweep: per-mode shard plans and prepared access traces (raw +
 /// delta-encoded, [`PreparedTrace`]).  Trace addresses depend only on
@@ -356,8 +347,10 @@ pub struct ShardedSweep<'a> {
     engine: EngineKind,
     /// Per mode: the shard plan and each shard's prepared trace.
     modes: Vec<(ShardPlan, Vec<PreparedTrace>)>,
-    /// Event-engine memo of remap-pass cycles per configuration key.
-    remap_memo: Mutex<HashMap<RemapKey, u64>>,
+    /// Shared memo of remap-pass cycles per (mode, DRAM, remapper) key
+    /// ([`crate::util::RemapMemo`] — the same type the single-controller
+    /// DSE evaluator uses).
+    remap_memo: RemapMemo,
 }
 
 impl<'a> ShardedSweep<'a> {
@@ -400,7 +393,7 @@ impl<'a> ShardedSweep<'a> {
             workers,
             engine,
             modes,
-            remap_memo: Mutex::new(HashMap::new()),
+            remap_memo: RemapMemo::new(),
         }
     }
 
@@ -572,26 +565,52 @@ impl<'a> ShardedSweep<'a> {
         totals
     }
 
-    /// Memoized [`ShardedSweep::remap_cycles`]: the remap pass depends
-    /// only on (mode, DRAM, remapper), so every candidate sharing those
-    /// knobs — the entire cache/DMA grid — reuses one simulation.
-    fn remap_cycles_memoized(&self, mode: usize, cfg: &ControllerConfig) -> u64 {
-        let key: RemapKey = (mode, cfg.dram.clone(), cfg.remapper);
-        let cached = {
-            let memo = self.remap_memo.lock().expect("remap memo poisoned");
-            memo.get(&key).copied()
-        };
-        match cached {
-            Some(cycles) => cycles,
-            None => {
-                let cycles = self.remap_cycles(mode, cfg);
-                self.remap_memo
-                    .lock()
-                    .expect("remap memo poisoned")
-                    .insert(key, cycles);
-                cycles
+    /// Score an arbitrary **joint** cross product — candidates free in
+    /// cache, DRAM, DMA, *and* remapper knobs — with the hierarchical
+    /// sweep core ([`crate::engine::sweep`]): per shard trace, one
+    /// classification pass per distinct `line_bytes`, one op-queue
+    /// extraction per distinct cache candidate, one multi-lane walk per
+    /// cache's DRAM/DMA lane set.  Each candidate's lane models its own
+    /// worker instance (its channel split under this sweep's worker
+    /// count), candidates collapsing to the same `(cache, lane)` cell
+    /// are timed once, and the per-candidate remap pass is memoized per
+    /// (mode, DRAM, remapper) key.  The traversal fans out over the
+    /// flattened (shard x cache) task grid, so the host saturates even
+    /// when one dimension is small.  Returns one makespan per
+    /// candidate, in `cands` order — each bit-identical to
+    /// `makespan_with` of the same configuration under either classic
+    /// engine.
+    pub fn makespans_for_joint_grid(&self, cands: &[ControllerConfig]) -> Vec<u64> {
+        let mut totals = vec![0u64; cands.len()];
+        if cands.is_empty() {
+            return totals;
+        }
+        let pairs: Vec<(CacheConfig, TimingCandidate)> = cands
+            .iter()
+            .map(|c| (c.cache, TimingCandidate::of(&worker_cfg(c, self.workers))))
+            .collect();
+        let index = JointIndex::build(&pairs);
+        for (mode, (_plan, traces)) in self.modes.iter().enumerate() {
+            // One flattened (shard x cache) fan-out per mode: neither
+            // the shard count nor the cache count alone has to cover
+            // the host's cores ([`JointIndex::sweep_many`]).
+            let refs: Vec<_> = traces.iter().map(|t| t.compressed()).collect();
+            let per_shard = index.sweep_many(&refs);
+            for (ci, total) in totals.iter_mut().enumerate() {
+                let worst = per_shard.iter().map(|v| v[ci]).max().unwrap_or(0);
+                *total += self.remap_cycles_memoized(mode, &cands[ci]) + worst;
             }
         }
+        totals
+    }
+
+    /// Memoized [`ShardedSweep::remap_cycles`]: the remap pass depends
+    /// only on (mode, DRAM, remapper), so every candidate sharing those
+    /// knobs — the entire cache/DMA grid, and every joint-sweep cell —
+    /// reuses one simulation ([`RemapMemo`]).
+    fn remap_cycles_memoized(&self, mode: usize, cfg: &ControllerConfig) -> u64 {
+        self.remap_memo
+            .cycles(mode, cfg, || self.remap_cycles(mode, cfg))
     }
 
     /// One mode's remap-pass cycles under `cfg`, on a fresh controller
@@ -867,6 +886,51 @@ mod tests {
                 cfg.dma
             );
             assert_eq!(got, sweep.makespan_with(cfg, EngineKind::Lockstep));
+        }
+    }
+
+    #[test]
+    fn joint_grid_makespans_match_per_candidate_scoring() {
+        use crate::controller::ControllerConfig;
+        use crate::dram::RowPolicy;
+        // The hierarchical joint path must return exactly what scoring
+        // each full (cache x DRAM x DMA x remapper) candidate
+        // individually returns — candidates vary every module at once,
+        // including worker channel splits and distinct remap-memo keys.
+        let (t, _factors) = setup(21, 3_000);
+        let sweep = ShardedSweep::prepare(&t, 8, 3);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let mut cands = Vec::new();
+        for &(line_bytes, num_lines, assoc) in
+            &[(64usize, 256usize, 2usize), (32, 1024, 4), (128, 512, 4)]
+        {
+            for &(channels, policy, num_dmas) in &[
+                (1usize, RowPolicy::Open, 1usize),
+                (4, RowPolicy::Closed, 2),
+            ] {
+                let mut cfg = base.clone();
+                cfg.cache.line_bytes = line_bytes;
+                cfg.cache.num_lines = num_lines;
+                cfg.cache.assoc = assoc;
+                cfg.dram.channels = channels;
+                cfg.dram.row_policy = policy;
+                cfg.dma.num_dmas = num_dmas;
+                cands.push(cfg);
+            }
+        }
+        let mut spilly = base.clone();
+        spilly.remapper.max_pointers = 4;
+        cands.push(spilly);
+        let got = sweep.makespans_for_joint_grid(&cands);
+        assert_eq!(got.len(), cands.len());
+        for (cfg, &score) in cands.iter().zip(&got) {
+            assert_eq!(
+                score,
+                sweep.makespan_with(cfg, EngineKind::Event),
+                "joint makespan diverged for {:?}",
+                cfg.cache
+            );
+            assert_eq!(score, sweep.makespan_with(cfg, EngineKind::Lockstep));
         }
     }
 

@@ -1,6 +1,10 @@
 //! Small shared utilities (S22): the scoped-thread fan-out helper used
-//! by every batch-parallel path in the crate.
+//! by every batch-parallel path in the crate, and the shared
+//! remap-pass cycle memo the DSE evaluators key per
+//! (mode, DRAM, remapper).
 
 pub mod par;
+pub mod remap_memo;
 
 pub use par::parallel_indexed;
+pub use remap_memo::{RemapKey, RemapMemo};

@@ -1,0 +1,124 @@
+//! Shared remap-pass memoization (S23): one type for the
+//! per-(mode, DRAM, remapper) cycle memo that the single-controller DSE
+//! evaluator ([`crate::dse::SimMemo`]) and the sharded sweep
+//! ([`crate::shard::ShardedSweep`]) each used to hand-roll.
+//!
+//! The Tensor-Remapper pass runs on a fresh controller and never
+//! touches the Cache Engine or the DMA Engine, so its simulated cycle
+//! count depends only on the mode being remapped, the DRAM timing
+//! knobs, and the remapper knobs.  Every candidate of a cache / DMA
+//! grid — and every cell of a joint cross-product sweep that shares
+//! those knobs — therefore reuses one simulation.  How the pass is
+//! simulated differs per call site (the DSE evaluator replays a
+//! snapshot column, the sharded sweep replays the live tensor column),
+//! so the memo takes the simulation as a closure and owns only the
+//! keying and the interior-mutable map.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::controller::{ControllerConfig, RemapperConfig};
+use crate::dram::DramConfig;
+
+/// Key of one memoized remap-pass simulation: the only knobs the pass
+/// is sensitive to.
+pub type RemapKey = (usize, DramConfig, RemapperConfig);
+
+/// Interior-mutable memo of remap-pass cycles per [`RemapKey`], shared
+/// across every candidate a sweep scores.
+#[derive(Debug, Default)]
+pub struct RemapMemo {
+    map: Mutex<HashMap<RemapKey, u64>>,
+}
+
+impl RemapMemo {
+    /// An empty memo.
+    pub fn new() -> Self {
+        RemapMemo::default()
+    }
+
+    /// The remap-pass cycles of `mode` under `cfg`'s DRAM / remapper
+    /// knobs, running `simulate` only on the first request for this
+    /// key.  Concurrent first requests may both simulate; they compute
+    /// the identical (deterministic) value, so last-insert-wins is
+    /// harmless — the lock is never held across the simulation.
+    pub fn cycles(
+        &self,
+        mode: usize,
+        cfg: &ControllerConfig,
+        simulate: impl FnOnce() -> u64,
+    ) -> u64 {
+        let key: RemapKey = (mode, cfg.dram.clone(), cfg.remapper);
+        if let Some(&c) = self.map.lock().expect("remap memo poisoned").get(&key) {
+            return c;
+        }
+        let cycles = simulate();
+        self.map
+            .lock()
+            .expect("remap memo poisoned")
+            .insert(key, cycles);
+        cycles
+    }
+
+    /// Number of distinct keys simulated so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("remap memo poisoned").len()
+    }
+
+    /// True when nothing has been memoized yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memo_simulates_once_per_key() {
+        let memo = RemapMemo::new();
+        let cfg = ControllerConfig::default_for(16);
+        let mut calls = 0u32;
+        let a = memo.cycles(0, &cfg, || {
+            calls += 1;
+            42
+        });
+        let b = memo.cycles(0, &cfg, || {
+            calls += 1;
+            unreachable!("second lookup must hit the memo")
+        });
+        assert_eq!((a, b), (42, 42));
+        assert_eq!(calls, 1);
+        assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn distinct_modes_and_knobs_key_separately() {
+        let memo = RemapMemo::new();
+        let cfg = ControllerConfig::default_for(16);
+        let mut spilly = cfg.clone();
+        spilly.remapper.max_pointers = 4;
+        let mut wide = cfg.clone();
+        wide.dram.channels = 4;
+        assert_eq!(memo.cycles(0, &cfg, || 1), 1);
+        assert_eq!(memo.cycles(1, &cfg, || 2), 2);
+        assert_eq!(memo.cycles(0, &spilly, || 3), 3);
+        assert_eq!(memo.cycles(0, &wide, || 4), 4);
+        // Cache / DMA knobs are NOT part of the key: a candidate that
+        // differs only there reuses the memoized pass.
+        let mut cachey = cfg.clone();
+        cachey.cache.num_lines = 64;
+        cachey.dma.num_dmas = 4;
+        assert_eq!(memo.cycles(0, &cachey, || unreachable!()), 1);
+        assert_eq!(memo.len(), 4);
+    }
+
+    #[test]
+    fn empty_and_len_track_inserts() {
+        let memo = RemapMemo::new();
+        assert!(memo.is_empty());
+        memo.cycles(2, &ControllerConfig::default_for(16), || 9);
+        assert!(!memo.is_empty());
+    }
+}

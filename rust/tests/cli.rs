@@ -237,6 +237,124 @@ fn explore_sharded_accepts_grid_engine() {
 }
 
 #[test]
+fn explore_search_and_top_k_flags_shape_the_report() {
+    let (ok, text) = run(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "pms", "--search", "joint", "--top-k", "3"],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("search: joint (top-k 3)"), "{text}");
+    assert!(text.contains("top-3 points:"), "{text}");
+    for i in 1..=3 {
+        assert!(text.contains(&format!("  {i}: ")), "missing top entry {i}: {text}");
+    }
+    assert!(
+        text.contains("pareto frontier (cycles vs on-chip blocks):"),
+        "{text}"
+    );
+    assert!(text.contains("best:"), "{text}");
+    assert!(text.contains("blocks"), "{text}");
+}
+
+#[test]
+fn explore_defaults_to_coordinate_with_single_winner() {
+    let (ok, text) = run(&[&["explore"], SMALL, &["--evaluator", "pms"]].concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("search: coordinate (top-k 1)"), "{text}");
+    // Single-winner report: no top-k section, but the frontier is
+    // always there.
+    assert!(!text.contains("points:\n  1: "), "{text}");
+    assert!(text.contains("pareto frontier"), "{text}");
+}
+
+#[test]
+fn explore_rejects_unknown_search() {
+    let (ok, text) = run(&[&["explore"], SMALL, &["--search", "bogus"]].concat());
+    assert!(!ok);
+    assert!(text.contains("coordinate|joint|beam"), "{text}");
+}
+
+#[test]
+fn explore_joint_never_reports_worse_best_than_coordinate() {
+    let best_cycles = |text: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with("best: "))
+            .expect("best line")
+            .strip_prefix("best: ")
+            .unwrap()
+            .split(' ')
+            .next()
+            .unwrap()
+            .parse()
+            .expect("parse best cycles")
+    };
+    let coord = run(&[&["explore"], SMALL, &["--evaluator", "pms"]].concat());
+    let joint = run(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "pms", "--search", "joint"],
+    ]
+    .concat());
+    assert!(coord.0, "{}", coord.1);
+    assert!(joint.0, "{}", joint.1);
+    assert!(
+        best_cycles(&joint.1) <= best_cycles(&coord.1),
+        "joint best must be <= coordinate best:\n{}\n{}",
+        joint.1,
+        coord.1
+    );
+}
+
+#[test]
+fn explore_beam_search_runs_and_reports() {
+    let (ok, text) = run(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "pms", "--search", "beam", "--top-k", "2"],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("search: beam (top-k 2)"), "{text}");
+    assert!(text.contains("top-2 points:"), "{text}");
+    assert!(text.contains("best:"), "{text}");
+}
+
+#[test]
+fn config_file_dse_section_sets_search_defaults() {
+    let dir = std::env::temp_dir().join("ptmc_cli_dse_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("ptmc.toml");
+    std::fs::write(&cfg, "[dse]\nsearch = \"joint\"\ntop_k = 2\n").unwrap();
+    let (ok, text) = run(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "pms", "--config", cfg.to_str().unwrap()],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("search: joint (top-k 2)"), "{text}");
+    assert!(text.contains("top-2 points:"), "{text}");
+    // Explicit flags override the file.
+    let (ok, text) = run(&[
+        &["explore"],
+        SMALL,
+        &[
+            "--evaluator",
+            "pms",
+            "--config",
+            cfg.to_str().unwrap(),
+            "--search",
+            "coordinate",
+        ],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("search: coordinate (top-k 2)"), "{text}");
+}
+
+#[test]
 fn row_policy_option_parses_and_is_validated() {
     // The DRAM row-policy knob: accepted values steer the simulator
     // (closed page loses the streaming row hits, so the totals differ),

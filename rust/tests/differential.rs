@@ -13,8 +13,8 @@ use ptmc::controller::{
 };
 use ptmc::dram::RowPolicy;
 use ptmc::engine::{
-    CompressedTrace, EngineKind, GridClassification, PreparedTrace, SimEngine, TimingCandidate,
-    TimingOps,
+    CompressedTrace, EngineKind, GridClassification, JointIndex, PreparedTrace, SimEngine,
+    TimingCandidate, TimingOps,
 };
 use ptmc::mttkrp::{approach1, Tracing};
 use ptmc::shard::{partition_indices, shard_trace, ShardPlan, ShardedSweep};
@@ -159,6 +159,16 @@ fn assert_engines_identical(prepared: &PreparedTrace, cfg: &ControllerConfig, wh
         truns[0].dram,
         *lockstep.dram_stats(),
         "{what}: timing DramStats diverged"
+    );
+
+    // The joint-grid column: the same configuration as a one-cell
+    // hierarchical joint sweep (classify → extract → lane walk) must
+    // complete at the identical cycle.
+    let jidx = JointIndex::build(&[(cfg.cache, TimingCandidate::of(cfg))]);
+    assert_eq!(
+        jidx.sweep(prepared.compressed()),
+        vec![tl],
+        "{what}: joint-core cycles diverged"
     );
 }
 
@@ -378,6 +388,53 @@ fn sharded_sweep_timing_grid_matches_per_candidate_makespans() {
                 score,
                 sweep.makespan_with(cfg, EngineKind::Lockstep),
                 "timing-grid makespan diverged from lockstep"
+            );
+        }
+    });
+}
+
+#[test]
+fn joint_sweep_core_scores_cross_products_bit_identically() {
+    // The hierarchical joint core over a full cache x DRAM x DMA cross
+    // product: every joint point's cycle count must equal a dedicated
+    // lockstep controller run on the same trace.
+    forall("joint_cross_product_vs_lockstep", 5, |rng| {
+        let t = random_tensor(rng);
+        let rank = [4usize, 8][rng.range(0, 2)];
+        let mode = rng.range(0, t.n_modes());
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+        let plan = ShardPlan::balance(&t, mode, 2);
+        let parts = partition_indices(&t, &plan);
+        let trace = shard_trace(&t, rank, mode, &layout, &plan.shards[0], &parts[0], 0);
+        let prepared = PreparedTrace::new(trace);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let mut cfgs = Vec::new();
+        for cc in cache_grid().into_iter().take(4) {
+            for &(channels, policy, num_dmas) in &[
+                (1usize, RowPolicy::Open, 2usize),
+                (4, RowPolicy::Closed, 1),
+            ] {
+                let mut cfg = base.clone();
+                cfg.cache = cc;
+                cfg.dram.channels = channels;
+                cfg.dram.row_policy = policy;
+                cfg.dma.num_dmas = num_dmas;
+                cfgs.push(cfg);
+            }
+        }
+        let pairs: Vec<_> = cfgs
+            .iter()
+            .map(|c| (c.cache, TimingCandidate::of(c)))
+            .collect();
+        let index = JointIndex::build(&pairs);
+        let got = index.sweep(prepared.compressed());
+        for (cfg, &cycles) in cfgs.iter().zip(&got) {
+            let mut ctl = MemoryController::new(cfg.clone());
+            let want = EngineKind::Lockstep.replay(&mut ctl, &prepared);
+            assert_eq!(
+                cycles, want,
+                "joint point diverged: {:?}/{:?}",
+                cfg.cache, cfg.dram
             );
         }
     });

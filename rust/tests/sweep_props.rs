@@ -1,0 +1,273 @@
+//! Property suite for the hierarchical joint sweep core
+//! (`ptmc::engine::sweep`): on a seeded corpus of random tensors,
+//! shard traces, and adversarial access mixes, scoring a subsampled
+//! `cache × DRAM × DMA × remapper` joint cross product through
+//! `JointIndex::sweep` must be **bit-identical** to a fresh
+//! per-candidate event replay of the same trace; the sharded joint
+//! path (`ShardedSweep::makespans_for_joint_grid`) must reproduce
+//! `makespan_with` exactly, remap phase included; and the joint search
+//! strategy must never report a worse winner than coordinate descent.
+
+use ptmc::controller::{Access, ControllerConfig, MemLayout, MemoryController};
+use ptmc::cpd::linalg::Mat;
+use ptmc::dram::RowPolicy;
+use ptmc::dse::{explore, explore_with, Evaluator, Grids, SearchOptions, SearchStrategy};
+use ptmc::engine::{EngineKind, JointIndex, PreparedTrace, TimingCandidate};
+use ptmc::fpga::Device;
+use ptmc::shard::{partition_indices, shard_trace, ShardPlan, ShardedSweep};
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+use ptmc::tensor::SparseTensor;
+use ptmc::testkit::{forall, Rng};
+
+/// A random synthetic tensor: 3 or 4 modes, varying nnz and skew.
+fn random_tensor(rng: &mut Rng) -> SparseTensor {
+    let n_modes = rng.range(3, 5);
+    let dims: Vec<usize> = (0..n_modes).map(|_| rng.range(30, 300)).collect();
+    let space: usize = dims.iter().product();
+    let nnz = rng.range(1, 2_000).min(space / 4).max(1);
+    let profile = match rng.below(3) {
+        0 => Profile::Uniform,
+        1 => Profile::Zipf {
+            alpha_milli: 1_050 + rng.below(500) as u32,
+        },
+        _ => Profile::Clustered {
+            block: 8,
+            blocks: 20,
+        },
+    };
+    generate(&SynthConfig {
+        dims,
+        nnz,
+        profile,
+        seed: rng.next_u64(),
+    })
+}
+
+/// A subsampled joint grid: every candidate draws its cache geometry,
+/// DRAM timing, DMA shape, and remapper budget independently, so the
+/// batch is a genuinely joint cross-product sample (cache AND timing
+/// knobs both vary).
+fn random_joint_grid(rng: &mut Rng, base: &ControllerConfig) -> Vec<ControllerConfig> {
+    const LINE_BYTES: [usize; 3] = [32, 64, 128];
+    const GEOMS: [(usize, usize); 4] = [(64, 1), (256, 2), (1024, 4), (4096, 8)];
+    const DRAMS: [(usize, usize, RowPolicy); 3] = [
+        (1, 16, RowPolicy::Open),
+        (2, 8, RowPolicy::Open),
+        (4, 16, RowPolicy::Closed),
+    ];
+    const DMAS: [(usize, usize); 3] = [(1, 1024), (2, 4096), (4, 16384)];
+    const POINTERS: [usize; 3] = [4, 1 << 10, 1 << 18];
+    let n = rng.range(4, 10);
+    (0..n)
+        .map(|_| {
+            let (num_lines, assoc) = GEOMS[rng.range(0, GEOMS.len())];
+            let (channels, banks, policy) = DRAMS[rng.range(0, DRAMS.len())];
+            let (num_dmas, buffer_bytes) = DMAS[rng.range(0, DMAS.len())];
+            let mut cfg = base.clone();
+            cfg.cache.line_bytes = LINE_BYTES[rng.range(0, LINE_BYTES.len())];
+            cfg.cache.num_lines = num_lines;
+            cfg.cache.assoc = assoc;
+            cfg.dram.channels = channels;
+            cfg.dram.banks = banks;
+            cfg.dram.row_policy = policy;
+            cfg.dma.num_dmas = num_dmas;
+            cfg.dma.buffer_bytes = buffer_bytes;
+            cfg.remapper.max_pointers = POINTERS[rng.range(0, POINTERS.len())];
+            cfg
+        })
+        .collect()
+}
+
+/// Fresh per-candidate event replay — the ground truth every joint
+/// cell must reproduce bit-for-bit.
+fn event_cycles(prepared: &PreparedTrace, cfg: &ControllerConfig) -> u64 {
+    let mut ctl = MemoryController::new(cfg.clone());
+    EngineKind::Event.replay(&mut ctl, prepared)
+}
+
+#[test]
+fn joint_sweep_is_bit_identical_on_shard_traces() {
+    forall("joint_sweep_shard_traces", 8, |rng| {
+        let t = random_tensor(rng);
+        let rank = [4usize, 8, 16][rng.range(0, 3)];
+        let mode = rng.range(0, t.n_modes());
+        let workers = rng.range(1, 4);
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+        let plan = ShardPlan::balance(&t, mode, workers);
+        let parts = partition_indices(&t, &plan);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let cfgs = random_joint_grid(rng, &base);
+        let pairs: Vec<_> = cfgs
+            .iter()
+            .map(|c| (c.cache, TimingCandidate::of(c)))
+            .collect();
+        let index = JointIndex::build(&pairs);
+        let mut offset = 0usize;
+        for (spec, zs) in plan.shards.iter().zip(&parts) {
+            let trace = shard_trace(&t, rank, mode, &layout, spec, zs, offset);
+            offset += spec.nnz;
+            let prepared = PreparedTrace::new(trace);
+            let got = index.sweep(prepared.compressed());
+            assert_eq!(got.len(), cfgs.len());
+            for (cfg, &cycles) in cfgs.iter().zip(&got) {
+                assert_eq!(
+                    cycles,
+                    event_cycles(&prepared, cfg),
+                    "joint sweep diverged from event replay for {:?}/{:?}/{:?}",
+                    cfg.cache,
+                    cfg.dram,
+                    cfg.dma
+                );
+            }
+            // The thread-chunked walk is the same computation.
+            assert_eq!(got, index.sweep_parallel(prepared.compressed()));
+        }
+    });
+}
+
+#[test]
+fn joint_sweep_is_bit_identical_on_adversarial_mixes() {
+    // Cold classes, width changes, unaligned addresses, and far-apart
+    // cached addresses exercise the compressor's fallback paths under
+    // the classify → extract → multi-lane-walk composition.
+    forall("joint_sweep_adversarial", 10, |rng| {
+        let n = rng.range(1, 600);
+        let mut trace = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            let a = match rng.below(8) {
+                0 => Access::Stream {
+                    addr: i * 4096,
+                    bytes: 4096,
+                },
+                1 => Access::Stream {
+                    addr: rng.below(1 << 30),
+                    bytes: 1 + rng.below(8192) as usize,
+                },
+                2 => Access::Cached {
+                    addr: (8 << 20) + rng.below(1 << 14) * 64,
+                    bytes: 64,
+                },
+                3 => Access::Cached {
+                    addr: rng.below(1 << 26),
+                    bytes: 1 + rng.below(256) as usize,
+                },
+                4 => Access::Cached {
+                    addr: (1 << 40) + rng.below(1 << 20) * 64,
+                    bytes: 64,
+                },
+                5 => Access::Element {
+                    addr: rng.below(1 << 32),
+                    bytes: 16,
+                },
+                6 => Access::CachedStore {
+                    addr: rng.below(1 << 24) * 16,
+                    bytes: 16,
+                },
+                _ => Access::Stream {
+                    addr: (2 << 30) + (i % 7) * 64,
+                    bytes: 64,
+                },
+            };
+            trace.push(a);
+        }
+        let prepared = PreparedTrace::new(trace);
+        let base = ControllerConfig::default_for(16);
+        let cfgs = random_joint_grid(rng, &base);
+        let pairs: Vec<_> = cfgs
+            .iter()
+            .map(|c| (c.cache, TimingCandidate::of(c)))
+            .collect();
+        let index = JointIndex::build(&pairs);
+        let got = index.sweep(prepared.compressed());
+        for (cfg, &cycles) in cfgs.iter().zip(&got) {
+            assert_eq!(
+                cycles,
+                event_cycles(&prepared, cfg),
+                "adversarial joint sweep diverged for {:?}/{:?}",
+                cfg.cache,
+                cfg.dram
+            );
+        }
+    });
+}
+
+#[test]
+fn sharded_joint_grid_matches_per_candidate_makespans() {
+    // The full sharded joint path: per-shard hierarchical traversal +
+    // memoized remap must reproduce the event/lockstep makespan of
+    // every joint candidate exactly — including candidates whose
+    // channel counts split differently across workers and candidates
+    // that only differ in the remapper budget.
+    forall("sharded_joint_grid_vs_event", 4, |rng| {
+        let t = random_tensor(rng);
+        let workers = rng.range(1, 4);
+        let sweep = ShardedSweep::prepare(&t, 8, workers);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let cands = random_joint_grid(rng, &base);
+        let got = sweep.makespans_for_joint_grid(&cands);
+        assert_eq!(got.len(), cands.len());
+        for (cfg, &score) in cands.iter().zip(&got) {
+            assert_eq!(
+                score,
+                sweep.makespan_with(cfg, EngineKind::Event),
+                "sharded joint makespan diverged from event"
+            );
+            assert_eq!(
+                score,
+                sweep.makespan_with(cfg, EngineKind::Lockstep),
+                "sharded joint makespan diverged from lockstep"
+            );
+        }
+    });
+}
+
+#[test]
+fn joint_explore_never_worse_than_coordinate_on_random_tensors() {
+    // The acceptance property behind `--search joint`: on every test
+    // grid the joint winner's score is <= coordinate descent's, and
+    // the grid engine's hierarchical scoring agrees with per-candidate
+    // event scoring point for point.
+    forall("joint_explore_vs_coordinate", 3, |rng| {
+        let t = random_tensor(rng);
+        let rank = 8usize;
+        let factors: Vec<Mat> = t
+            .dims()
+            .iter()
+            .map(|&d| Mat::randn(d, rank, rng.next_u64()))
+            .collect();
+        let dev = Device::alveo_u250();
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let grids = Grids {
+            cache_line_bytes: vec![32, 64],
+            cache_num_lines: vec![256, 1024],
+            cache_assoc: vec![2, 4],
+            dma_num: vec![1, 2],
+            dma_buffers: vec![2],
+            dma_buffer_bytes: vec![4096],
+            dram_channels: vec![1, 2],
+            dram_banks: vec![16],
+            dram_row_policy: vec![RowPolicy::Open],
+            remap_max_pointers: vec![1 << 10, 1 << 18],
+        };
+        let joint = SearchOptions {
+            strategy: SearchStrategy::Joint,
+            top_k: 3,
+        };
+        let ev_grid = Evaluator::cycle_sim(&t, &factors, EngineKind::Grid);
+        let ev_event = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
+        let ex_coord = explore(&base, &grids, &dev, &ev_grid);
+        let ex_joint = explore_with(&base, &grids, &dev, &ev_grid, &joint);
+        assert!(
+            ex_joint.best.cycles <= ex_coord.best.cycles,
+            "joint {} must be <= coordinate {}",
+            ex_joint.best.cycles,
+            ex_coord.best.cycles
+        );
+        let ex_joint_event = explore_with(&base, &grids, &dev, &ev_event, &joint);
+        assert_eq!(ex_joint.visited.len(), ex_joint_event.visited.len());
+        for (a, b) in ex_joint.visited.iter().zip(&ex_joint_event.visited) {
+            assert_eq!(a.cycles, b.cycles, "joint scores diverged between engines");
+        }
+        assert_eq!(ex_joint.best.cfg, ex_joint_event.best.cfg);
+    });
+}

@@ -31,6 +31,11 @@
 //! descent is itself exhaustive, so the two must agree exactly — and
 //! asserts equal best score and equal best configuration.
 //!
+//! A memory-technology sweep (PR 6) scores the same sharded workload
+//! across DDR4, HBM2, and optical SRAM through the `MemoryDevice`
+//! trait, asserting the DDR4 instance reproduces the legacy base-path
+//! score bit for bit.
+//!
 //! Emits `bench_results/dse_engines.csv`,
 //! `bench_results/engine_speedup.json`, and a repo-root `BENCH_dse.json`
 //! so the bench trajectory is machine-readable across PRs.
@@ -44,6 +49,7 @@ use ptmc::dram::RowPolicy;
 use ptmc::dse::{explore, explore_with, Evaluator, Grids, SearchOptions, SearchStrategy};
 use ptmc::engine::EngineKind;
 use ptmc::fpga::Device;
+use ptmc::mem::MemTech;
 use ptmc::shard::ShardedSweep;
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
 
@@ -97,8 +103,11 @@ fn timing_grid(elem_bytes: usize) -> Vec<ControllerConfig> {
         for &num_dmas in &[1usize, 2, 4] {
             for &buffer_bytes in &[1024usize, 4096, 16384] {
                 let mut cfg = ControllerConfig::default_for(elem_bytes);
-                cfg.dram.channels = channels;
-                cfg.dram.row_policy = row_policy;
+                {
+                    let dram = cfg.mem.ddr4_mut();
+                    dram.channels = channels;
+                    dram.row_policy = row_policy;
+                }
                 cfg.dma.num_dmas = num_dmas;
                 cfg.dma.buffer_bytes = buffer_bytes;
                 grid.push(cfg);
@@ -130,8 +139,11 @@ fn joint_grid(elem_bytes: usize) -> Vec<ControllerConfig> {
                         cfg.cache.line_bytes = line_bytes;
                         cfg.cache.num_lines = num_lines;
                         cfg.cache.assoc = assoc;
-                        cfg.dram.channels = channels;
-                        cfg.dram.row_policy = row_policy;
+                        {
+                            let dram = cfg.mem.ddr4_mut();
+                            dram.channels = channels;
+                            dram.row_policy = row_policy;
+                        }
                         cfg.dma.num_dmas = num_dmas;
                         cfg.dma.buffer_bytes = buffer_bytes;
                         grid.push(cfg);
@@ -324,6 +336,39 @@ fn main() {
         "joint core and event must select the same best joint configuration"
     );
 
+    // --- Memory-technology sweep (PR 6): the same sharded workload
+    // scored across DDR4, HBM2, and optical SRAM through the
+    // `MemoryDevice` trait.  DDR4's `default_config()` is exactly the
+    // pre-refactor base configuration, so its score must reproduce the
+    // legacy base-path makespan bit for bit.
+    let mem_techs = [MemTech::Ddr4, MemTech::Hbm2, MemTech::Osram];
+    let (mem_tech_scores, mem_tech_legacy, mem_tech_wall) = {
+        let sweep = ShardedSweep::prepare(&t, rank, workers);
+        let t0 = Instant::now();
+        let scores: Vec<u64> = mem_techs
+            .iter()
+            .map(|&tech| {
+                let mut cfg = base.clone();
+                cfg.mem = tech.default_config();
+                sweep.makespan_with(&cfg, EngineKind::Event)
+            })
+            .collect();
+        let wall = t0.elapsed();
+        let legacy = sweep.makespan_with(&base, EngineKind::Event);
+        (scores, legacy, wall)
+    };
+    if mem_tech_scores[0] != mem_tech_legacy {
+        let msg = format!(
+            "DDR4 through the memory-tech axis scored {} but the legacy \
+             base path scored {}",
+            mem_tech_scores[0], mem_tech_legacy
+        );
+        assert!(std::env::var_os("PTMC_BENCH_ENFORCE").is_none(), "{msg}");
+        println!("WARNING: {msg}");
+    } else {
+        println!("mem-tech DDR4 score == legacy base-path score. OK");
+    }
+
     // --- Search-strategy agreement: on a single-module (cache-only)
     // space coordinate descent is itself exhaustive, so `explore` under
     // the coordinate and joint strategies must agree exactly — same
@@ -333,6 +378,7 @@ fn main() {
         let eval = Evaluator::ShardedSim { sweep: &sweep };
         let dev = Device::alveo_u250();
         let base_cfg = ControllerConfig::default_for(t.record_bytes());
+        let base_dram = base_cfg.mem.ddr4().expect("default base is DDR4").clone();
         let cache_only = Grids {
             cache_line_bytes: vec![32, 64],
             cache_num_lines: vec![1024, 4096],
@@ -340,10 +386,11 @@ fn main() {
             dma_num: vec![base_cfg.dma.num_dmas],
             dma_buffers: vec![base_cfg.dma.buffers_per_dma],
             dma_buffer_bytes: vec![base_cfg.dma.buffer_bytes],
-            dram_channels: vec![base_cfg.dram.channels],
-            dram_banks: vec![base_cfg.dram.banks],
-            dram_row_policy: vec![base_cfg.dram.row_policy],
+            dram_channels: vec![base_dram.channels],
+            dram_banks: vec![base_dram.banks],
+            dram_row_policy: vec![base_dram.row_policy],
             remap_max_pointers: vec![base_cfg.remapper.max_pointers],
+            mem_techs: vec![MemTech::Ddr4],
         };
         let ex_coord = explore(&base_cfg, &cache_only, &dev, &eval);
         let ex_joint = explore_with(
@@ -480,6 +527,16 @@ fn main() {
         fmt_speedup(joint_speedup),
         fmt_cycles(best_joint),
     ]);
+    for (tech, &score) in mem_techs.iter().zip(&mem_tech_scores) {
+        tbl.row(&[
+            "mem_tech".into(),
+            format!("event ({tech})"),
+            "1".into(),
+            ms(mem_tech_wall),
+            format!("{} mW", tech.default_config().power_proxy_mw()),
+            fmt_cycles(score),
+        ]);
+    }
     tbl.emit(
         "E11 — DSE sweep scoring: lockstep vs event vs one-pass grid/timing cores \
          vs hierarchical joint core (identical scores)",
@@ -498,7 +555,7 @@ fn main() {
         (cache_event_wall + dma_event_wall).as_secs_f64() * 1e3,
     );
     let bench_json = format!(
-        "{{\n  \"bench\": \"dse_engines\",\n  \"pr\": 5,\n  \"nnz\": {nnz},\n  \
+        "{{\n  \"bench\": \"dse_engines\",\n  \"pr\": 6,\n  \"nnz\": {nnz},\n  \
          \"workers\": {workers},\n  \"rank\": {rank},\n  \"smoke\": {},\n  \
          \"cache_sweep\": {{\n    \"configs\": {},\n    \
          \"lockstep_ms\": {:.1},\n    \"event_ms\": {:.1},\n    \
@@ -516,6 +573,9 @@ fn main() {
          \"best_index\": {joint_best},\n    \
          \"explore_joint_equals_coordinate_on_separable_space\": true,\n    \
          \"per_candidate_cycles\": [{}]\n  }},\n  \
+         \"mem_tech\": {{\n    \"techs\": [{}],\n    \"cycles\": [{}],\n    \
+         \"power_proxy_mw\": [{}],\n    \"event_ms\": {:.1},\n    \
+         \"ddr4_matches_legacy_path\": {}\n  }},\n  \
          \"event_vs_lockstep_speedup\": {event_speedup:.2}\n}}\n",
         smoke(),
         caches.len(),
@@ -542,6 +602,23 @@ fn main() {
             .map(|c| c.to_string())
             .collect::<Vec<_>>()
             .join(", "),
+        mem_techs
+            .iter()
+            .map(|tech| format!("\"{tech}\""))
+            .collect::<Vec<_>>()
+            .join(", "),
+        mem_tech_scores
+            .iter()
+            .map(|c| c.to_string())
+            .collect::<Vec<_>>()
+            .join(", "),
+        mem_techs
+            .iter()
+            .map(|tech| tech.default_config().power_proxy_mw().to_string())
+            .collect::<Vec<_>>()
+            .join(", "),
+        mem_tech_wall.as_secs_f64() * 1e3,
+        mem_tech_scores[0] == mem_tech_legacy,
     );
     let _ = std::fs::create_dir_all("bench_results");
     if let Err(e) = std::fs::write("bench_results/engine_speedup.json", &json) {

@@ -6,7 +6,7 @@
 use ptmc::bench::{sized, smoke, Table};
 use ptmc::controller::{CacheConfig, ControllerConfig};
 use ptmc::cpd::linalg::Mat;
-use ptmc::dse::Evaluator;
+use ptmc::dse::{Evaluator, EvaluatorBuilder};
 use ptmc::engine::EngineKind;
 use ptmc::fpga::Device;
 use ptmc::pms::TensorProfile;
@@ -32,7 +32,9 @@ fn main() {
         profile: &profile,
         rank,
     };
-    let sim_eval = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
+    let sim_eval = EvaluatorBuilder::new()
+        .engine(EngineKind::Event)
+        .cycle_sim(&t, &factors);
 
     // Grid: cache geometry x pointer budget (the params with the largest
     // time impact).

@@ -23,6 +23,9 @@
 //! [remapper]
 //! max_pointers = 65536
 //!
+//! [memory]
+//! tech = "ddr4"      # ddr4 | hbm2 | osram
+//!
 //! [dram]
 //! channels = 4
 //!
@@ -38,6 +41,7 @@ use std::collections::HashMap;
 
 use crate::controller::ControllerConfig;
 use crate::cpd::AlsConfig;
+use crate::mem::MemTech;
 
 /// A parsed scalar value.
 #[derive(Debug, Clone, PartialEq)]
@@ -182,7 +186,14 @@ impl Config {
     }
 
     /// Build a [`ControllerConfig`] from the `[cache]`, `[dma]`,
-    /// `[remapper]` and `[dram]` sections, defaulting unset keys.
+    /// `[remapper]`, `[memory]` and `[dram]` sections, defaulting
+    /// unset keys.  `[memory] tech = "ddr4" | "hbm2" | "osram"`
+    /// selects the external-memory technology (default DDR4, at each
+    /// technology's default knob set); the `[dram]` keys shape the
+    /// DDR4 configuration and — like every other defaulted key in this
+    /// parser — are ignored when another technology is selected.  (The
+    /// CLI is stricter: `--dram-*` flags combined with a non-DDR4
+    /// `--memory-tech` are rejected with an error.)
     pub fn controller(&self, elem_bytes: usize) -> ControllerConfig {
         let mut c = ControllerConfig::default_for(elem_bytes);
         c.cache.line_bytes = self.usize_or("cache", "line_bytes", c.cache.line_bytes);
@@ -197,14 +208,24 @@ impl Config {
             self.usize_or("remapper", "max_pointers", c.remapper.max_pointers);
         c.remapper.buffer_bytes =
             self.usize_or("remapper", "buffer_bytes", c.remapper.buffer_bytes);
-        c.dram.channels = self.usize_or("dram", "channels", c.dram.channels);
-        c.dram.banks = self.usize_or("dram", "banks", c.dram.banks);
-        if let Some(policy) = self
-            .get("dram", "row_policy")
+        if let Some(tech) = self
+            .get("memory", "tech")
             .and_then(Value::as_str)
-            .and_then(|p| p.parse().ok())
+            .and_then(|s| s.parse::<MemTech>().ok())
         {
-            c.dram.row_policy = policy;
+            c.mem = tech.default_config();
+        }
+        if c.mem.tech() == MemTech::Ddr4 {
+            let dram = c.mem.ddr4_mut();
+            dram.channels = self.usize_or("dram", "channels", dram.channels);
+            dram.banks = self.usize_or("dram", "banks", dram.banks);
+            if let Some(policy) = self
+                .get("dram", "row_policy")
+                .and_then(Value::as_str)
+                .and_then(|p| p.parse().ok())
+            {
+                dram.row_policy = policy;
+            }
         }
         c
     }
@@ -266,12 +287,36 @@ line_bytes = 128
     fn dram_row_policy_key_parses() {
         let c = Config::parse("[dram]\nrow_policy = \"closed\"\nbanks = 8\n").unwrap();
         let ctl = c.controller(16);
-        assert_eq!(ctl.dram.row_policy, crate::dram::RowPolicy::Closed);
-        assert_eq!(ctl.dram.banks, 8);
+        let dram = ctl.mem.ddr4().expect("default tech is DDR4");
+        assert_eq!(dram.row_policy, crate::dram::RowPolicy::Closed);
+        assert_eq!(dram.banks, 8);
         // Unknown policy strings fall back to the default silently,
         // like every other defaulted config key.
         let c = Config::parse("[dram]\nrow_policy = \"adaptive\"\n").unwrap();
-        assert_eq!(c.controller(16).dram.row_policy, crate::dram::RowPolicy::Open);
+        assert_eq!(
+            c.controller(16).mem.ddr4().unwrap().row_policy,
+            crate::dram::RowPolicy::Open
+        );
+    }
+
+    #[test]
+    fn memory_tech_key_selects_technology() {
+        let c = Config::parse("[memory]\ntech = \"hbm2\"\n").unwrap();
+        assert_eq!(c.controller(16).mem.tech(), MemTech::Hbm2);
+        // [dram] keys shape DDR4 only; under another tech they are
+        // ignored like any other inapplicable key.
+        let c = Config::parse("[memory]\ntech = \"osram\"\n[dram]\nchannels = 4\n").unwrap();
+        assert_eq!(c.controller(16).mem.tech(), MemTech::Osram);
+        let c = Config::parse("[memory]\ntech = \"ddr4\"\n[dram]\nchannels = 4\n").unwrap();
+        assert_eq!(c.controller(16).mem.ddr4().unwrap().channels, 4);
+        // Unknown tech strings fall back to the DDR4 default silently.
+        let c = Config::parse("[memory]\ntech = \"mram\"\n").unwrap();
+        assert_eq!(c.controller(16).mem.tech(), MemTech::Ddr4);
+        // No [memory] section at all: the legacy DDR4 path, untouched.
+        let c = Config::parse("[dram]\nchannels = 2\n").unwrap();
+        let ctl = c.controller(16);
+        assert_eq!(ctl.mem.tech(), MemTech::Ddr4);
+        assert_eq!(ctl.mem.ddr4().unwrap().channels, 2);
     }
 
     #[test]

@@ -4,9 +4,11 @@
 //!
 //! Set-associative with true-LRU replacement.  All three §5.2.1
 //! parameters are programmable: line width, number of lines, and
-//! associativity.  Backing fetches go to the shared [`Dram`] model.
+//! associativity.  Backing fetches go to the shared external-memory
+//! device (any [`MemoryDevice`]: DDR4, HBM2, or the optical-SRAM
+//! scratchpad).
 
-use crate::dram::Dram;
+use crate::mem::MemoryDevice;
 
 /// Programmable Cache Engine parameters (paper §5.2.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -210,7 +212,7 @@ impl CacheEngine {
 
     /// Serve a load of `bytes` at `addr` starting at cycle `now`; fetches
     /// missing lines from `dram`.  Returns the completion cycle.
-    pub fn load(&mut self, dram: &mut Dram, addr: u64, bytes: usize, now: u64) -> u64 {
+    pub fn load<M: MemoryDevice>(&mut self, dram: &mut M, addr: u64, bytes: usize, now: u64) -> u64 {
         self.transfer(dram, addr, bytes, now, false)
     }
 
@@ -218,11 +220,18 @@ impl CacheEngine {
     /// partial-line writes fetch the line on a miss, dirty lines cost a
     /// DRAM writeback when evicted.  This is what the paper's §5.1.2(b)
     /// warns about when scattered stores go through the Cache Engine.
-    pub fn store(&mut self, dram: &mut Dram, addr: u64, bytes: usize, now: u64) -> u64 {
+    pub fn store<M: MemoryDevice>(&mut self, dram: &mut M, addr: u64, bytes: usize, now: u64) -> u64 {
         self.transfer(dram, addr, bytes, now, true)
     }
 
-    fn transfer(&mut self, dram: &mut Dram, addr: u64, bytes: usize, now: u64, write: bool) -> u64 {
+    fn transfer<M: MemoryDevice>(
+        &mut self,
+        dram: &mut M,
+        addr: u64,
+        bytes: usize,
+        now: u64,
+        write: bool,
+    ) -> u64 {
         assert!(bytes > 0);
         let geom = self.cfg.geom();
         let first = geom.first_line(addr);
@@ -241,9 +250,9 @@ impl CacheEngine {
     /// is shared ([`CacheEngine::serve_line`]); only the line/set/tag
     /// arithmetic is hoisted out of the loop (shift/mask forms of the
     /// same power-of-two divisions the scalar path performs).
-    pub fn load_run(
+    pub fn load_run<M: MemoryDevice>(
         &mut self,
-        dram: &mut Dram,
+        dram: &mut M,
         base: u64,
         words: &[u32],
         bytes: usize,
@@ -274,7 +283,13 @@ impl CacheEngine {
     }
 
     /// Access one line; returns completion cycle.
-    fn access_line(&mut self, dram: &mut Dram, line_idx: u64, now: u64, write: bool) -> u64 {
+    fn access_line<M: MemoryDevice>(
+        &mut self,
+        dram: &mut M,
+        line_idx: u64,
+        now: u64,
+        write: bool,
+    ) -> u64 {
         let geom = self.cfg.geom();
         let set = geom.set(line_idx);
         let tag = geom.tag(line_idx);
@@ -283,9 +298,9 @@ impl CacheEngine {
 
     /// The per-line state machine shared by the scalar and batched
     /// paths: lookup, LRU update, miss fill, dirty-victim writeback.
-    fn serve_line(
+    fn serve_line<M: MemoryDevice>(
         &mut self,
-        dram: &mut Dram,
+        dram: &mut M,
         line_idx: u64,
         set: usize,
         tag: u64,
@@ -337,7 +352,7 @@ impl CacheEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dram::DramConfig;
+    use crate::dram::{Dram, DramConfig};
     use crate::testkit::Rng;
 
     fn dram() -> Dram {

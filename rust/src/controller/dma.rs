@@ -12,7 +12,7 @@
 //! All §5.2.1 parameters are programmable: number of DMAs, buffers per
 //! DMA, and buffer size.
 
-use crate::dram::Dram;
+use crate::mem::MemoryDevice;
 
 /// Programmable DMA Engine parameters (paper §5.2.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -121,7 +121,7 @@ impl DmaEngine {
     /// transfer into buffer-sized DMA requests; up to `buffers_per_dma`
     /// chunks are outstanding, so DRAM latency of the next chunk hides
     /// behind the drain of the previous one.  Returns completion cycle.
-    pub fn stream(&mut self, dram: &mut Dram, addr: u64, bytes: usize, now: u64) -> u64 {
+    pub fn stream<M: MemoryDevice>(&mut self, dram: &mut M, addr: u64, bytes: usize, now: u64) -> u64 {
         assert!(bytes > 0);
         self.stats.stream_requests += 1;
         self.stats.stream_bytes += bytes as u64;
@@ -154,9 +154,9 @@ impl DmaEngine {
     /// as the controller threads it between per-access
     /// [`DmaEngine::stream`] calls.  Bit-identical by construction: it
     /// delegates each request to [`DmaEngine::stream`].
-    pub fn stream_run(
+    pub fn stream_run<M: MemoryDevice>(
         &mut self,
-        dram: &mut Dram,
+        dram: &mut M,
         base: u64,
         chunk: usize,
         count: u32,
@@ -173,7 +173,7 @@ impl DmaEngine {
 
     /// Element-wise transfer: one request of `bytes` at `addr` with full
     /// per-request setup (paper §4 transfer type 3 — no locality).
-    pub fn element(&mut self, dram: &mut Dram, addr: u64, bytes: usize, now: u64) -> u64 {
+    pub fn element<M: MemoryDevice>(&mut self, dram: &mut M, addr: u64, bytes: usize, now: u64) -> u64 {
         assert!(bytes > 0);
         self.stats.element_requests += 1;
         self.stats.element_bytes += bytes as u64;
@@ -184,7 +184,7 @@ impl DmaEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dram::DramConfig;
+    use crate::dram::{Dram, DramConfig};
 
     fn dram() -> Dram {
         Dram::new(DramConfig::default_ddr4())

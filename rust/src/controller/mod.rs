@@ -17,7 +17,8 @@ pub use cache::{CacheConfig, CacheEngine, CacheStats, LineGeom};
 pub use dma::{DmaConfig, DmaEngine, DmaStats};
 pub use remapper::{RemapperConfig, RemapperStats, TensorRemapper};
 
-use crate::dram::{Dram, DramConfig, DramStats};
+use crate::dram::DramStats;
+use crate::mem::{MemDevice, MemTechConfig};
 use crate::tensor::Coord;
 
 /// One memory request, tagged with the §4 transfer type that serves it.
@@ -47,12 +48,14 @@ impl Access {
     }
 }
 
-/// Full controller configuration: one knob set per module (§5.2).
+/// Full controller configuration: one knob set per module (§5.2),
+/// including the external-memory *technology* ([`MemTechConfig`]).
 /// Equality is knob-for-knob — the DSE search layers dedup candidate
 /// configurations with it before scoring.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ControllerConfig {
-    pub dram: DramConfig,
+    /// External-memory technology + knobs (DDR4 / HBM2 / optical SRAM).
+    pub mem: MemTechConfig,
     pub cache: CacheConfig,
     pub dma: DmaConfig,
     pub remapper: RemapperConfig,
@@ -62,7 +65,7 @@ impl ControllerConfig {
     /// Default configuration for a tensor with `elem_bytes`-wide records.
     pub fn default_for(elem_bytes: usize) -> Self {
         ControllerConfig {
-            dram: DramConfig::default_ddr4(),
+            mem: MemTechConfig::default_ddr4(),
             cache: CacheConfig::default_64k(),
             dma: DmaConfig::default_2x4k(),
             remapper: RemapperConfig::default_16k(elem_bytes),
@@ -152,7 +155,7 @@ impl ControllerStats {
 #[derive(Debug, Clone)]
 pub struct MemoryController {
     cfg: ControllerConfig,
-    dram: Dram,
+    mem: MemDevice,
     cache: CacheEngine,
     dma: DmaEngine,
     remapper: TensorRemapper,
@@ -164,7 +167,7 @@ pub struct MemoryController {
 impl MemoryController {
     pub fn new(cfg: ControllerConfig) -> Self {
         MemoryController {
-            dram: Dram::new(cfg.dram.clone()),
+            mem: MemDevice::new(&cfg.mem),
             cache: CacheEngine::new(cfg.cache),
             dma: DmaEngine::new(cfg.dma),
             remapper: TensorRemapper::new(cfg.remapper),
@@ -194,8 +197,10 @@ impl MemoryController {
         self.remapper.stats()
     }
 
+    /// External-memory device statistics (the field keeps its historic
+    /// name; all technologies share the [`DramStats`] counter set).
     pub fn dram_stats(&self) -> &DramStats {
-        self.dram.stats()
+        self.mem.stats()
     }
 
     pub fn stats(&self) -> &ControllerStats {
@@ -204,7 +209,7 @@ impl MemoryController {
 
     /// Reset time, engine state, and statistics.
     pub fn reset(&mut self) {
-        self.dram.reset();
+        self.mem.reset();
         self.cache.reset();
         self.dma.reset();
         self.remapper.reset();
@@ -219,11 +224,11 @@ impl MemoryController {
     /// cores cannot diverge.
     fn dispatch(&mut self, access: Access, now: u64) -> u64 {
         match access {
-            Access::Stream { addr, bytes } => self.dma.stream(&mut self.dram, addr, bytes, now),
-            Access::Element { addr, bytes } => self.dma.element(&mut self.dram, addr, bytes, now),
-            Access::Cached { addr, bytes } => self.cache.load(&mut self.dram, addr, bytes, now),
+            Access::Stream { addr, bytes } => self.dma.stream(&mut self.mem, addr, bytes, now),
+            Access::Element { addr, bytes } => self.dma.element(&mut self.mem, addr, bytes, now),
+            Access::Cached { addr, bytes } => self.cache.load(&mut self.mem, addr, bytes, now),
             Access::CachedStore { addr, bytes } => {
-                self.cache.store(&mut self.dram, addr, bytes, now)
+                self.cache.store(&mut self.mem, addr, bytes, now)
             }
         }
     }
@@ -266,7 +271,7 @@ impl MemoryController {
                     tail,
                 } => {
                     now = self.dma.stream_run(
-                        &mut self.dram,
+                        &mut self.mem,
                         base,
                         chunk as usize,
                         count,
@@ -281,7 +286,7 @@ impl MemoryController {
                     count,
                 } => {
                     now = self.cache.load_run(
-                        &mut self.dram,
+                        &mut self.mem,
                         base,
                         trace.words_at(off, count),
                         bytes as usize,
@@ -310,7 +315,7 @@ impl MemoryController {
         dst: usize,
     ) -> u64 {
         self.now = self.remapper.run(
-            &mut self.dram,
+            &mut self.mem,
             mode_col,
             mode_len,
             layout.tensor_base[src],

@@ -8,7 +8,7 @@
 //! goal); the rest spill to external memory and cost a pointer load +
 //! store per affected element.
 
-use crate::dram::Dram;
+use crate::mem::MemoryDevice;
 use crate::tensor::Coord;
 
 /// Programmable Tensor Remapper parameters (paper §5.2.1: buffer size,
@@ -107,9 +107,9 @@ impl TensorRemapper {
     /// * `ptr_base` — base of the spilled pointer-table region.
     ///
     /// Returns the completion cycle.
-    pub fn run(
+    pub fn run<M: MemoryDevice>(
         &mut self,
-        dram: &mut Dram,
+        dram: &mut M,
         mode_col: &[Coord],
         mode_len: usize,
         src_base: u64,
@@ -180,7 +180,7 @@ impl TensorRemapper {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dram::DramConfig;
+    use crate::dram::{Dram, DramConfig};
     use crate::tensor::synth::{generate, Profile, SynthConfig};
 
     fn dram() -> Dram {

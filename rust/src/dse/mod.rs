@@ -9,15 +9,22 @@
 //!   one module's grid at a time while holding the others at their
 //!   current best.  Fast, but it can miss jointly-optimal points.
 //! * `Joint` — exhaustive search of the **joint** cross product
-//!   `remapper × line_bytes × (num_lines, assoc) × DRAM × DMA`
+//!   `remapper × line_bytes × (num_lines, assoc) × memory × DMA`
 //!   (unioned per dimension with the base configuration's values, so
 //!   its best is never worse than coordinate descent's).  Infeasible
 //!   points are pruned with the device check *before* any simulation.
 //! * `Beam` — the middle ground: keep the best `width` incumbents
 //!   after each module sweep and sweep the next module from each.
 //!
-//! Every strategy reports a Pareto frontier (cycles vs on-chip blocks)
-//! and the top-k points ([`Exploration`]) on top of the single winner.
+//! The external-memory module is a first-class search axis: the
+//! memory grid spans **technologies** ([`Grids::mem_techs`] —
+//! DDR4 / HBM2 / optical SRAM, [`crate::mem`]) as well as per-tech
+//! knobs, so a joint exploration over a board that hosts several
+//! technologies compares them head to head.
+//!
+//! Every strategy reports a Pareto frontier (cycles vs on-chip blocks
+//! vs memory-device power proxy) and the top-k points
+//! ([`Exploration`]) on top of the single winner.
 //!
 //! Candidates within one batch are independent, so all strategies score
 //! through [`Evaluator::score_batch`]: candidates fan out across host
@@ -44,6 +51,7 @@ use crate::engine::{
     EngineKind, GridClassification, JointIndex, PreparedTrace, TimingCandidate, TimingOps,
 };
 use crate::fpga::{self, Device};
+use crate::mem::{MemTech, MemTechConfig};
 use crate::mttkrp::{approach1, Tracing};
 use crate::pms::{self, TensorProfile};
 use crate::tensor::{remap, Coord, SparseTensor};
@@ -158,17 +166,94 @@ pub enum Evaluator<'a> {
 
 impl<'a> Evaluator<'a> {
     /// A [`Evaluator::CycleSim`] with a fresh memo.
+    #[deprecated(note = "use `EvaluatorBuilder::new().engine(engine).cycle_sim(tensor, factors)`")]
     pub fn cycle_sim(
         tensor: &'a SparseTensor,
         factors: &'a [Mat],
         engine: EngineKind,
     ) -> Evaluator<'a> {
+        EvaluatorBuilder::new().engine(engine).cycle_sim(tensor, factors)
+    }
+}
+
+/// The one entry point for constructing an [`Evaluator`] — shared
+/// defaults first, then one terminal call per scoring model:
+///
+/// ```text
+/// EvaluatorBuilder::new()            defaults: Grid engine, rank 16
+///     .engine(EngineKind::Event)     replay core for the sim paths
+///     .rank(32)                      factor rank for the PMS path
+///     .pms(&profile)        -> Evaluator::Pms        (analytic, µs/config)
+///     .cycle_sim(&t, &f)    -> Evaluator::CycleSim   (exact, fresh memo)
+///     .sharded(&sweep)      -> Evaluator::ShardedSim (K instances)
+/// ```
+///
+/// The three `Evaluator` variants remain public as the data
+/// representation (`match` sites need them), but new code should
+/// construct through the builder: it owns the defaults, and the legacy
+/// free-standing constructors ([`Evaluator::cycle_sim`]) are
+/// deprecated shims over it.
+#[derive(Debug, Clone, Copy)]
+pub struct EvaluatorBuilder {
+    engine: EngineKind,
+    rank: usize,
+}
+
+impl Default for EvaluatorBuilder {
+    fn default() -> Self {
+        EvaluatorBuilder::new()
+    }
+}
+
+impl EvaluatorBuilder {
+    /// Defaults: the grid replay core (fastest; bit-identical scores to
+    /// the classic engines) and PMS rank 16.
+    pub fn new() -> Self {
+        EvaluatorBuilder {
+            engine: EngineKind::Grid,
+            rank: 16,
+        }
+    }
+
+    /// Replay core for the simulation paths ([`Evaluator::CycleSim`];
+    /// a sharded sweep carries its own engine choice from
+    /// [`crate::shard::ShardedSweep::prepare_with_engine`]).
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Factor-matrix rank the analytic PMS path estimates with.
+    pub fn rank(mut self, rank: usize) -> Self {
+        self.rank = rank;
+        self
+    }
+
+    /// Analytic PMS evaluator over a measured tensor profile
+    /// (microseconds per configuration).
+    pub fn pms<'a>(&self, profile: &'a TensorProfile) -> Evaluator<'a> {
+        Evaluator::Pms {
+            profile,
+            rank: self.rank,
+        }
+    }
+
+    /// Cycle-level simulation of a full Approach-1 sweep over a
+    /// concrete tensor, with a fresh cross-candidate memo.
+    pub fn cycle_sim<'a>(&self, tensor: &'a SparseTensor, factors: &'a [Mat]) -> Evaluator<'a> {
         Evaluator::CycleSim {
             tensor,
             factors,
-            engine,
+            engine: self.engine,
             memo: SimMemo::default(),
         }
+    }
+
+    /// Sharded multi-instance simulation over a prepared sweep (the
+    /// sweep was prepared with its own engine choice, which this
+    /// evaluator inherits).
+    pub fn sharded<'a>(&self, sweep: &'a crate::shard::ShardedSweep<'a>) -> Evaluator<'a> {
+        Evaluator::ShardedSim { sweep }
     }
 }
 
@@ -184,11 +269,18 @@ impl Evaluator<'_> {
                 // K concurrent controller instances must *all* fit the
                 // device: each needs a 1/K slice of the block budget
                 // (the whole-device check above only covers one
-                // instance), and each instance owns a DRAM channel
-                // group, so the device must have K channel groups
-                // (channels-vs-board itself is device_feasible's job).
+                // instance), and each instance owns a group of the
+                // configured technology's parallel units (DDR4
+                // channels / HBM2 pseudo-channels / oSRAM ports), so
+                // the board must have K such groups (per-config
+                // capacity itself is device_feasible's job).
                 let w = sweep.workers();
-                if w > dev.dram_channels {
+                let units = match cfg.mem.tech() {
+                    MemTech::Ddr4 => dev.dram_channels,
+                    MemTech::Hbm2 => dev.hbm_pseudo_channels,
+                    MemTech::Osram => dev.osram_ports,
+                };
+                if w > units {
                     return false;
                 }
                 let slice = Device {
@@ -298,12 +390,12 @@ impl Evaluator<'_> {
         {
             let rank = factors[0].cols();
             let layout = MemLayout::plan(tensor.dims(), tensor.nnz(), tensor.record_bytes(), rank);
-            let mut primed: Vec<(DramConfig, RemapperConfig)> = Vec::new();
+            let mut primed: Vec<(MemTechConfig, RemapperConfig)> = Vec::new();
             for cfg in cfgs {
                 if !self.feasible(cfg, dev) {
                     continue;
                 }
-                let key = (cfg.dram.clone(), cfg.remapper);
+                let key = (cfg.mem.clone(), cfg.remapper);
                 if primed.contains(&key) {
                     continue;
                 }
@@ -591,11 +683,12 @@ fn cycle_sim_joint_batch(
 }
 
 /// Device-level feasibility shared by every evaluator: the on-chip
-/// blocks must fit the device budget, and the configured DRAM bus must
-/// exist on the board (a sweep over channel counts must not "win" with
-/// channels the device does not have).
+/// blocks must fit the device budget, and the board must host the
+/// configured memory technology at the configured capacity
+/// ([`Device::supports`] — a sweep must not "win" with DDR4 channels,
+/// HBM2 pseudo-channels, or oSRAM ports the device does not have).
 fn device_feasible(cfg: &ControllerConfig, dev: &Device) -> bool {
-    fpga::estimate(cfg, dev).fits && cfg.dram.channels <= dev.dram_channels
+    fpga::estimate(cfg, dev).fits && dev.supports(&cfg.mem)
 }
 
 /// Scatter the scores of the feasible ("live") candidates back onto
@@ -622,7 +715,7 @@ fn scatter_feasible<I: IntoIterator<Item = u64>>(feasible: &[bool], scores: I) -
 fn cache_module_sweep(cfgs: &[ControllerConfig]) -> bool {
     let base = &cfgs[0];
     cfgs.iter()
-        .all(|c| c.dram == base.dram && c.dma == base.dma && c.remapper == base.remapper)
+        .all(|c| c.mem == base.mem && c.dma == base.dma && c.remapper == base.remapper)
 }
 
 /// True when every candidate shares the first's cache module — the
@@ -648,6 +741,14 @@ impl Point {
     pub fn blocks(&self) -> usize {
         self.bram36 + self.uram
     }
+
+    /// Memory-device power proxy in mW
+    /// ([`MemTechConfig::power_proxy_mw`]) — the third Pareto axis,
+    /// which separates memory technologies whose on-chip footprints
+    /// coincide.
+    pub fn power_mw(&self) -> u64 {
+        self.cfg.mem.power_proxy_mw()
+    }
 }
 
 /// How the configuration space is searched (see [`explore_with`]).
@@ -659,7 +760,9 @@ pub enum SearchStrategy {
     /// miss jointly-optimal configurations.
     Coordinate,
     /// Exhaustive search of the joint cross product
-    /// `remapper × line_bytes × (num_lines, assoc) × DRAM × DMA`, each
+    /// `remapper × line_bytes × (num_lines, assoc) × memory × DMA`
+    /// (the memory dimension spans technologies when
+    /// [`Grids::mem_techs`] does), each
     /// dimension unioned with the base configuration's value so the
     /// joint space contains every point coordinate descent could visit
     /// (its best is therefore never worse).  Infeasible points are
@@ -705,10 +808,14 @@ pub struct Exploration {
     /// Candidates rejected for not fitting the device.
     pub rejected: usize,
     /// The Pareto frontier of the visited points under (cycles,
-    /// on-chip blocks): no frontier member is beaten on both axes by
-    /// any visited point.  Ascending in cycles, so strictly descending
-    /// in blocks; `pareto[0]` always has the winner's cycle count
-    /// (on a cycles tie it may be a smaller-footprint config than
+    /// on-chip blocks, memory-device power proxy): no frontier member
+    /// is dominated — beaten or tied on every axis and strictly beaten
+    /// on at least one — by any visited point.  When the search spans
+    /// memory technologies ([`Grids::mem_techs`]) this is the
+    /// cross-technology frontier: an HBM2 point may hold the cycles
+    /// end while DDR4/oSRAM points hold the blocks and power ends.
+    /// Ascending in cycles; `pareto[0]` always has the winner's cycle
+    /// count (on a cycles tie it may be a different config than
     /// `best`, which keeps the first-visited point).
     pub pareto: Vec<Point>,
     /// The `top_k` best distinct configurations by cycles, ascending;
@@ -717,7 +824,8 @@ pub struct Exploration {
 }
 
 /// Default sweep grids (§5.2.1 parameters plus the paper's §2 DRAM
-/// knobs: channel/bank counts and the row-buffer policy).
+/// knobs: channel/bank counts and the row-buffer policy), extended
+/// with the memory **technology** axis ([`Grids::mem_techs`]).
 pub struct Grids {
     pub cache_line_bytes: Vec<usize>,
     pub cache_num_lines: Vec<usize>,
@@ -725,12 +833,19 @@ pub struct Grids {
     pub dma_num: Vec<usize>,
     pub dma_buffers: Vec<usize>,
     pub dma_buffer_bytes: Vec<usize>,
-    /// DRAM channels (power of two; candidates beyond the device's
+    /// Memory technologies the external-memory module sweeps over.
+    /// DDR4 expands to the `dram_*` grids below; HBM2 and oSRAM
+    /// contribute their default device shapes
+    /// ([`MemTech::default_config`] — their geometry is a package
+    /// property, not a board-level knob).  Defaults to `[Ddr4]`, which
+    /// keeps every legacy exploration's candidate list identical.
+    pub mem_techs: Vec<MemTech>,
+    /// DDR4 channels (power of two; candidates beyond the device's
     /// channel count are rejected as infeasible).
     pub dram_channels: Vec<usize>,
-    /// Banks per DRAM channel (power of two).
+    /// Banks per DDR4 channel (power of two).
     pub dram_banks: Vec<usize>,
-    /// Open- vs closed-page row policy.
+    /// Open- vs closed-page row policy (DDR4).
     pub dram_row_policy: Vec<RowPolicy>,
     pub remap_max_pointers: Vec<usize>,
 }
@@ -744,10 +859,22 @@ impl Default for Grids {
             dma_num: vec![1, 2, 4],
             dma_buffers: vec![1, 2, 4],
             dma_buffer_bytes: vec![1024, 4096, 16384],
+            mem_techs: vec![MemTech::Ddr4],
             dram_channels: vec![1, 2, 4],
             dram_banks: vec![8, 16],
             dram_row_policy: vec![RowPolicy::Open, RowPolicy::Closed],
             remap_max_pointers: vec![1 << 10, 1 << 14, 1 << 18, 1 << 22],
+        }
+    }
+}
+
+impl Grids {
+    /// The default grids with every memory technology in the sweep —
+    /// the cross-technology search space.
+    pub fn all_mem_techs() -> Self {
+        Grids {
+            mem_techs: vec![MemTech::Ddr4, MemTech::Hbm2, MemTech::Osram],
+            ..Grids::default()
         }
     }
 }
@@ -837,25 +964,59 @@ fn dma_candidates(grids: &Grids, from: &ControllerConfig) -> Vec<ControllerConfi
     cands
 }
 
-/// The DRAM timing module grid (channels x banks x row policy) swept
-/// from `from` (module 3).
-fn dram_candidates(grids: &Grids, from: &ControllerConfig) -> Vec<ControllerConfig> {
-    let mut cands = Vec::new();
-    for &channels in &grids.dram_channels {
-        for &banks in &grids.dram_banks {
-            for &row_policy in &grids.dram_row_policy {
-                if !channels.is_power_of_two() || !banks.is_power_of_two() {
-                    continue;
+/// The external-memory module candidates of one grid, as bare
+/// [`MemTechConfig`]s: DDR4 expands to the full
+/// channels × banks × row-policy grid (timing fields inherited from
+/// `from` when it is DDR4-configured, so a tuned base keeps its
+/// timings); HBM2 and oSRAM contribute their default device shapes.
+/// With the default `mem_techs = [Ddr4]` this enumerates exactly the
+/// legacy DRAM-module grid, in the same order.
+fn mem_candidates(grids: &Grids, from: &ControllerConfig) -> Vec<MemTechConfig> {
+    let mut out = Vec::new();
+    for &tech in &grids.mem_techs {
+        match tech {
+            MemTech::Ddr4 => {
+                let base = match from.mem.ddr4() {
+                    Some(d) => d.clone(),
+                    None => DramConfig::default_ddr4(),
+                };
+                for &channels in &grids.dram_channels {
+                    for &banks in &grids.dram_banks {
+                        for &row_policy in &grids.dram_row_policy {
+                            if !channels.is_power_of_two() || !banks.is_power_of_two() {
+                                continue;
+                            }
+                            let mut d = base.clone();
+                            d.channels = channels;
+                            d.banks = banks;
+                            d.row_policy = row_policy;
+                            out.push(MemTechConfig::Ddr4(d));
+                        }
+                    }
                 }
-                let mut cfg = from.clone();
-                cfg.dram.channels = channels;
-                cfg.dram.banks = banks;
-                cfg.dram.row_policy = row_policy;
-                cands.push(cfg);
+            }
+            MemTech::Hbm2 | MemTech::Osram => {
+                let cand = tech.default_config();
+                if !out.contains(&cand) {
+                    out.push(cand);
+                }
             }
         }
     }
-    cands
+    out
+}
+
+/// The external-memory module grid (technology × per-tech knobs,
+/// [`mem_candidates`]) swept from `from` (module 3).
+fn dram_candidates(grids: &Grids, from: &ControllerConfig) -> Vec<ControllerConfig> {
+    mem_candidates(grids, from)
+        .into_iter()
+        .map(|mem| {
+            let mut cfg = from.clone();
+            cfg.mem = mem;
+            cfg
+        })
+        .collect()
 }
 
 /// The Tensor Remapper module grid swept from `from` (module 4).
@@ -889,16 +1050,19 @@ fn module_candidates(
 /// Number of module stages the coordinate / beam strategies sweep.
 const MODULE_STAGES: usize = 4;
 
-/// The full joint cross product of `grids`, each dimension unioned with
-/// `base`'s knob value: every configuration coordinate descent could
-/// ever visit takes each knob from either `base` or its grid, so the
-/// union guarantees the joint space is a superset of the coordinate
-/// search space (and the joint optimum is never worse).  Invalid
-/// geometry combinations (non-power-of-two set counts, channels or
-/// banks) are skipped, mirroring the per-module generators — but the
-/// validity filters exempt `base`'s own values: coordinate descent can
-/// keep an off-grid base knob as an incumbent whatever its shape, so
-/// dropping it here would break the superset guarantee.
+/// The full joint cross product of `grids` —
+/// `remapper × line_bytes × (num_lines, assoc) × memory × DMA` — each
+/// dimension unioned with `base`'s knob value: every configuration
+/// coordinate descent could ever visit takes each knob from either
+/// `base` or its grid, so the union guarantees the joint space is a
+/// superset of the coordinate search space (and the joint optimum is
+/// never worse).  The memory dimension spans technologies when
+/// `grids.mem_techs` does.  Invalid geometry combinations
+/// (non-power-of-two set counts, DDR4 channels or banks) are skipped,
+/// mirroring the per-module generators — but the validity filters
+/// exempt `base`'s own values: coordinate descent can keep an off-grid
+/// base knob as an incumbent whatever its shape, so dropping it here
+/// would break the superset guarantee.
 fn joint_candidates(base: &ControllerConfig, grids: &Grids) -> Vec<ControllerConfig> {
     fn with<T: PartialEq + Copy>(mut v: Vec<T>, b: T) -> Vec<T> {
         if !v.contains(&b) {
@@ -912,9 +1076,15 @@ fn joint_candidates(base: &ControllerConfig, grids: &Grids) -> Vec<ControllerCon
     let dma_num = with(grids.dma_num.clone(), base.dma.num_dmas);
     let dma_buffers = with(grids.dma_buffers.clone(), base.dma.buffers_per_dma);
     let dma_bytes = with(grids.dma_buffer_bytes.clone(), base.dma.buffer_bytes);
-    let channels = with(grids.dram_channels.clone(), base.dram.channels);
-    let banks = with(grids.dram_banks.clone(), base.dram.banks);
-    let policies = with(grids.dram_row_policy.clone(), base.dram.row_policy);
+    // The memory dimension: every technology candidate the module grid
+    // generates ([`mem_candidates`] — DDR4 validity filters included),
+    // unioned with the base's own memory configuration whatever its
+    // shape (the same off-grid-incumbent exemption the scalar knobs
+    // get from `with`).
+    let mut mems = mem_candidates(grids, base);
+    if !mems.contains(&base.mem) {
+        mems.push(base.mem.clone());
+    }
     let pointers = with(grids.remap_max_pointers.clone(), base.remapper.max_pointers);
 
     let mut cands = Vec::new();
@@ -929,32 +1099,20 @@ fn joint_candidates(base: &ControllerConfig, grids: &Grids) -> Vec<ControllerCon
                     if !base_geom && (nl % assoc != 0 || !(nl / assoc).is_power_of_two()) {
                         continue;
                     }
-                    for &ch in &channels {
-                        if ch != base.dram.channels && !ch.is_power_of_two() {
-                            continue;
-                        }
-                        for &bk in &banks {
-                            if bk != base.dram.banks && !bk.is_power_of_two() {
-                                continue;
-                            }
-                            for &policy in &policies {
-                                for &num_dmas in &dma_num {
-                                    for &buffers_per_dma in &dma_buffers {
-                                        for &buffer_bytes in &dma_bytes {
-                                            let mut cfg = base.clone();
-                                            cfg.cache.line_bytes = lb;
-                                            cfg.cache.num_lines = nl;
-                                            cfg.cache.assoc = assoc;
-                                            cfg.dram.channels = ch;
-                                            cfg.dram.banks = bk;
-                                            cfg.dram.row_policy = policy;
-                                            cfg.dma.num_dmas = num_dmas;
-                                            cfg.dma.buffers_per_dma = buffers_per_dma;
-                                            cfg.dma.buffer_bytes = buffer_bytes;
-                                            cfg.remapper.max_pointers = max_pointers;
-                                            cands.push(cfg);
-                                        }
-                                    }
+                    for mem in &mems {
+                        for &num_dmas in &dma_num {
+                            for &buffers_per_dma in &dma_buffers {
+                                for &buffer_bytes in &dma_bytes {
+                                    let mut cfg = base.clone();
+                                    cfg.cache.line_bytes = lb;
+                                    cfg.cache.num_lines = nl;
+                                    cfg.cache.assoc = assoc;
+                                    cfg.mem = mem.clone();
+                                    cfg.dma.num_dmas = num_dmas;
+                                    cfg.dma.buffers_per_dma = buffers_per_dma;
+                                    cfg.dma.buffer_bytes = buffer_bytes;
+                                    cfg.remapper.max_pointers = max_pointers;
+                                    cands.push(cfg);
                                 }
                             }
                         }
@@ -966,11 +1124,20 @@ fn joint_candidates(base: &ControllerConfig, grids: &Grids) -> Vec<ControllerCon
     cands
 }
 
+/// True when `a` Pareto-dominates `b` under (cycles, on-chip blocks,
+/// memory-device power proxy): no worse on every axis and strictly
+/// better on at least one.
+fn dominates(a: &Point, b: &Point) -> bool {
+    a.cycles <= b.cycles
+        && a.blocks() <= b.blocks()
+        && a.power_mw() <= b.power_mw()
+        && (a.cycles < b.cycles || a.blocks() < b.blocks() || a.power_mw() < b.power_mw())
+}
+
 /// The non-dominated subset of `visited` under (cycles, on-chip
-/// blocks): a point is dominated when another visited point is no
-/// worse on both axes and strictly better on at least one.  Returned
-/// ascending in cycles / strictly descending in blocks; coincident
-/// (cycles, blocks) pairs keep the first-visited point.
+/// blocks, power proxy) — see [`dominates`].  Returned ascending in
+/// cycles (then blocks, then power); coincident (cycles, blocks,
+/// power) triples keep the first-visited point.
 fn pareto_frontier(visited: &[Point]) -> Vec<Point> {
     let mut order: Vec<usize> = (0..visited.len()).collect();
     order.sort_by(|&a, &b| {
@@ -978,14 +1145,22 @@ fn pareto_frontier(visited: &[Point]) -> Vec<Point> {
             .cycles
             .total_cmp(&visited[b].cycles)
             .then_with(|| visited[a].blocks().cmp(&visited[b].blocks()))
+            .then_with(|| visited[a].power_mw().cmp(&visited[b].power_mw()))
             .then(a.cmp(&b))
     });
+    // Any dominator of a point sorts strictly before it (it is no
+    // worse on every sort key and better on one), and dominance is
+    // transitive, so scanning in sort order and testing against the
+    // kept set alone is exact.
     let mut out: Vec<Point> = Vec::new();
-    let mut best_blocks = usize::MAX;
     for i in order {
-        if visited[i].blocks() < best_blocks {
-            best_blocks = visited[i].blocks();
-            out.push(visited[i].clone());
+        let p = &visited[i];
+        let covered = out.iter().any(|q| {
+            dominates(q, p)
+                || (q.cycles == p.cycles && q.blocks() == p.blocks() && q.power_mw() == p.power_mw())
+        });
+        if !covered {
+            out.push(p.clone());
         }
     }
     out
@@ -1074,7 +1249,7 @@ fn search_beam(
 }
 
 /// Exhaustive joint cross-product search: enumerate
-/// `remapper × cache × DRAM × DMA` ([`joint_candidates`]) and score it
+/// `remapper × cache × memory × DMA` ([`joint_candidates`]) and score it
 /// as one batch.  The batch scorer prunes infeasible points with the
 /// evaluator's device feasibility **before** any simulation (they come
 /// back `None` and count as rejections), and the grid engine routes
@@ -1113,8 +1288,8 @@ pub fn explore(
 /// vectorized timing cores, and the joint strategy's full cross
 /// product runs through the hierarchical sweep core
 /// ([`crate::engine::sweep`]).  The returned [`Exploration`] carries
-/// the winner, the Pareto frontier (cycles vs on-chip blocks), and the
-/// `top_k` best points.
+/// the winner, the Pareto frontier (cycles vs on-chip blocks vs
+/// memory-device power proxy), and the `top_k` best points.
 pub fn explore_with(
     base: &ControllerConfig,
     grids: &Grids,
@@ -1238,7 +1413,9 @@ mod tests {
             seed: 78,
         });
         let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 16, 1)).collect();
-        let eval = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
+        let eval = EvaluatorBuilder::new()
+            .engine(EngineKind::Event)
+            .cycle_sim(&t, &factors);
         let base = ControllerConfig::default_for(t.record_bytes());
         let dev = Device::alveo_u250();
         let grids = Grids {
@@ -1248,6 +1425,7 @@ mod tests {
             dma_num: vec![2],
             dma_buffers: vec![2],
             dma_buffer_bytes: vec![4096],
+            mem_techs: vec![MemTech::Ddr4],
             dram_channels: vec![1],
             dram_banks: vec![16],
             dram_row_policy: vec![RowPolicy::Open],
@@ -1323,7 +1501,9 @@ mod tests {
             let scores: Vec<f64> = [EngineKind::Lockstep, EngineKind::Event, EngineKind::Grid]
                 .iter()
                 .map(|&e| {
-                    Evaluator::cycle_sim(&t, &factors, e)
+                    EvaluatorBuilder::new()
+                        .engine(e)
+                        .cycle_sim(&t, &factors)
                         .score(&cfg, &dev)
                         .unwrap()
                 })
@@ -1349,13 +1529,18 @@ mod tests {
             dma_num: vec![1, 2],
             dma_buffers: vec![2],
             dma_buffer_bytes: vec![4096],
+            mem_techs: vec![MemTech::Ddr4],
             dram_channels: vec![1, 2],
             dram_banks: vec![16],
             dram_row_policy: vec![RowPolicy::Open, RowPolicy::Closed],
             remap_max_pointers: vec![1 << 10, 1 << 18],
         };
-        let ev_event = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
-        let ev_grid = Evaluator::cycle_sim(&t, &factors, EngineKind::Grid);
+        let ev_event = EvaluatorBuilder::new()
+            .engine(EngineKind::Event)
+            .cycle_sim(&t, &factors);
+        let ev_grid = EvaluatorBuilder::new()
+            .engine(EngineKind::Grid)
+            .cycle_sim(&t, &factors);
         let ex_event = explore(&base, &grids, &dev, &ev_event);
         let ex_grid = explore(&base, &grids, &dev, &ev_grid);
         assert_eq!(ex_event.visited.len(), ex_grid.visited.len());
@@ -1366,7 +1551,7 @@ mod tests {
         assert_eq!(ex_event.best.cycles, ex_grid.best.cycles);
         assert_eq!(ex_event.best.cfg.cache, ex_grid.best.cfg.cache);
         assert_eq!(ex_event.best.cfg.dma, ex_grid.best.cfg.dma);
-        assert_eq!(ex_event.best.cfg.dram, ex_grid.best.cfg.dram);
+        assert_eq!(ex_event.best.cfg.mem, ex_grid.best.cfg.mem);
     }
 
     #[test]
@@ -1387,9 +1572,12 @@ mod tests {
         ] {
             for &num_dmas in &[1usize, 2] {
                 let mut cfg = base.clone();
-                cfg.dram.channels = channels;
-                cfg.dram.banks = banks;
-                cfg.dram.row_policy = policy;
+                {
+                    let dram = cfg.mem.ddr4_mut();
+                    dram.channels = channels;
+                    dram.banks = banks;
+                    dram.row_policy = policy;
+                }
                 cfg.dma.num_dmas = num_dmas;
                 cands.push(cfg);
             }
@@ -1397,10 +1585,14 @@ mod tests {
         // u250 has 4 DRAM channels: an 8-channel candidate mid-batch
         // must come back None and keep the index mapping honest.
         let mut wide = base.clone();
-        wide.dram.channels = 8;
+        wide.mem.ddr4_mut().channels = 8;
         cands.insert(2, wide);
-        let ev_grid = Evaluator::cycle_sim(&t, &factors, EngineKind::Grid);
-        let ev_event = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
+        let ev_grid = EvaluatorBuilder::new()
+            .engine(EngineKind::Grid)
+            .cycle_sim(&t, &factors);
+        let ev_event = EvaluatorBuilder::new()
+            .engine(EngineKind::Event)
+            .cycle_sim(&t, &factors);
         let grid_scores = ev_grid.score_batch(&cands, &dev);
         let event_scores = ev_event.score_batch(&cands, &dev);
         assert_eq!(grid_scores, event_scores);
@@ -1439,14 +1631,17 @@ mod tests {
             (2, RowPolicy::Closed, 4096),
         ] {
             let mut cfg = base.clone();
-            cfg.dram.channels = channels;
-            cfg.dram.row_policy = policy;
+            {
+                let dram = cfg.mem.ddr4_mut();
+                dram.channels = channels;
+                dram.row_policy = policy;
+            }
             cfg.dma.buffer_bytes = buffer_bytes;
             cands.push(cfg);
         }
         // Infeasible mid-batch: more channels than the board has.
         let mut wide = base.clone();
-        wide.dram.channels = 8;
+        wide.mem.ddr4_mut().channels = 8;
         cands.insert(1, wide);
         let grid_scores = ev_grid.score_batch(&cands, &dev);
         let event_scores = ev_event.score_batch(&cands, &dev);
@@ -1509,13 +1704,14 @@ mod tests {
         };
         let base = ControllerConfig::default_for(t.record_bytes());
         let dev = Device::alveo_u250();
+        let base_dram = base.mem.ddr4().expect("base is DDR4").clone();
         let cache_only = Grids {
             dma_num: vec![base.dma.num_dmas],
             dma_buffers: vec![base.dma.buffers_per_dma],
             dma_buffer_bytes: vec![base.dma.buffer_bytes],
-            dram_channels: vec![base.dram.channels],
-            dram_banks: vec![base.dram.banks],
-            dram_row_policy: vec![base.dram.row_policy],
+            dram_channels: vec![base_dram.channels],
+            dram_banks: vec![base_dram.banks],
+            dram_row_policy: vec![base_dram.row_policy],
             remap_max_pointers: vec![base.remapper.max_pointers],
             ..Grids::default()
         };
@@ -1536,6 +1732,7 @@ mod tests {
             dma_num: vec![1, 2],
             dma_buffers: vec![2],
             dma_buffer_bytes: vec![4096],
+            mem_techs: vec![MemTech::Ddr4],
             dram_channels: vec![1, 2],
             dram_banks: vec![16],
             dram_row_policy: vec![RowPolicy::Open],
@@ -1559,12 +1756,13 @@ mod tests {
             top_k: 3,
         };
         let evals = [
-            Evaluator::Pms {
-                profile: &profile,
-                rank: 16,
-            },
-            Evaluator::cycle_sim(&t, &factors, EngineKind::Event),
-            Evaluator::cycle_sim(&t, &factors, EngineKind::Grid),
+            EvaluatorBuilder::new().rank(16).pms(&profile),
+            EvaluatorBuilder::new()
+                .engine(EngineKind::Event)
+                .cycle_sim(&t, &factors),
+            EvaluatorBuilder::new()
+                .engine(EngineKind::Grid)
+                .cycle_sim(&t, &factors),
         ];
         for (i, eval) in evals.iter().enumerate() {
             let ex_coord = explore(&base, &grids, &dev, eval);
@@ -1593,8 +1791,12 @@ mod tests {
             strategy: SearchStrategy::Joint,
             top_k: 5,
         };
-        let ev_event = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
-        let ev_grid = Evaluator::cycle_sim(&t, &factors, EngineKind::Grid);
+        let ev_event = EvaluatorBuilder::new()
+            .engine(EngineKind::Event)
+            .cycle_sim(&t, &factors);
+        let ev_grid = EvaluatorBuilder::new()
+            .engine(EngineKind::Grid)
+            .cycle_sim(&t, &factors);
         let ex_event = explore_with(&base, &grids, &dev, &ev_event, &joint);
         let ex_grid = explore_with(&base, &grids, &dev, &ev_grid, &joint);
         assert_eq!(ex_event.visited.len(), ex_grid.visited.len());
@@ -1699,23 +1901,41 @@ mod tests {
             assert!(w[0].cycles <= w[1].cycles, "top-k must be ascending");
             assert!(w[0].cfg != w[1].cfg, "top-k must be distinct configs");
         }
-        // Pareto: ascending cycles, strictly descending blocks, winner
-        // first, and no visited point dominates a frontier member.
+        // Pareto: ascending cycles, winner first, mutually
+        // non-dominated under (cycles, blocks, power), and no visited
+        // point dominates a frontier member.
         assert!(!ex.pareto.is_empty());
         assert_eq!(ex.pareto[0].cycles, ex.best.cycles);
         for w in ex.pareto.windows(2) {
-            assert!(w[0].cycles <= w[1].cycles);
+            assert!(w[0].cycles <= w[1].cycles, "frontier cycles must ascend");
+        }
+        let dominates = |a: &Point, b: &Point| {
+            a.cycles <= b.cycles
+                && a.blocks() <= b.blocks()
+                && a.power_mw() <= b.power_mw()
+                && (a.cycles < b.cycles || a.blocks() < b.blocks() || a.power_mw() < b.power_mw())
+        };
+        for (i, p) in ex.pareto.iter().enumerate() {
+            for (j, q) in ex.pareto.iter().enumerate() {
+                assert!(
+                    i == j || !dominates(q, p),
+                    "frontier members must be mutually non-dominated"
+                );
+            }
             assert!(
-                w[0].blocks() > w[1].blocks(),
-                "frontier blocks must strictly descend"
+                !ex.visited.iter().any(|v| dominates(v, p)),
+                "frontier member is dominated by a visited point"
             );
         }
-        for p in &ex.pareto {
+        // Every visited point is represented: dominated or tied by
+        // some frontier member.
+        for v in &ex.visited {
             assert!(
-                !ex.visited.iter().any(|v| v.cycles <= p.cycles
-                    && v.blocks() <= p.blocks()
-                    && (v.cycles < p.cycles || v.blocks() < p.blocks())),
-                "frontier member is dominated by a visited point"
+                ex.pareto.iter().any(|p| dominates(p, v)
+                    || (p.cycles == v.cycles
+                        && p.blocks() == v.blocks()
+                        && p.power_mw() == v.power_mw())),
+                "visited point escapes the frontier's cover"
             );
         }
     }
@@ -1745,13 +1965,13 @@ mod tests {
         ] {
             let mut cfg = base.clone();
             cfg.cache.num_lines = num_lines;
-            cfg.dram.channels = channels;
+            cfg.mem.ddr4_mut().channels = channels;
             cfg.remapper.max_pointers = max_pointers;
             cands.push(cfg);
         }
         // Infeasible mid-batch keeps the index mapping honest.
         let mut wide = base.clone();
-        wide.dram.channels = 8;
+        wide.mem.ddr4_mut().channels = 8;
         wide.cache.num_lines = 256;
         cands.insert(1, wide);
         let grid_scores = ev_grid.score_batch(&cands, &dev);
@@ -1759,5 +1979,154 @@ mod tests {
         assert_eq!(grid_scores, event_scores);
         assert!(grid_scores[1].is_none());
         assert!(grid_scores.iter().filter(|s| s.is_some()).count() == 3);
+    }
+
+    #[test]
+    fn default_grids_stay_ddr4_only() {
+        // Legacy explorations must see the identical candidate list:
+        // the default memory grid sweeps DDR4 alone, and the module
+        // generator enumerates exactly channels x banks x row-policy.
+        let grids = Grids::default();
+        assert_eq!(grids.mem_techs, vec![MemTech::Ddr4]);
+        let base = ControllerConfig::default_for(16);
+        let cands = dram_candidates(&grids, &base);
+        assert_eq!(
+            cands.len(),
+            grids.dram_channels.len() * grids.dram_banks.len() * grids.dram_row_policy.len()
+        );
+        assert!(cands.iter().all(|c| c.mem.tech() == MemTech::Ddr4));
+    }
+
+    #[test]
+    fn joint_search_reports_cross_technology_pareto_frontier() {
+        // A joint exploration whose memory grid spans all three
+        // technologies on an HBM-bearing board must put more than one
+        // technology on the (cycles, blocks, power) frontier: DDR4
+        // pays zero PHY blocks, oSRAM has the lowest device power, and
+        // HBM2's pseudo-channels buy bandwidth — no single technology
+        // dominates the other two on every axis.
+        let t = tensor();
+        let profile = TensorProfile::measure(&t);
+        let eval = EvaluatorBuilder::new().rank(16).pms(&profile);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let dev = Device::alveo_u280();
+        let grids = Grids {
+            cache_line_bytes: vec![64],
+            cache_num_lines: vec![1024],
+            cache_assoc: vec![4],
+            dma_num: vec![2],
+            dma_buffers: vec![2],
+            dma_buffer_bytes: vec![4096],
+            mem_techs: vec![MemTech::Ddr4, MemTech::Hbm2, MemTech::Osram],
+            dram_channels: vec![1, 2],
+            dram_banks: vec![16],
+            dram_row_policy: vec![RowPolicy::Open],
+            remap_max_pointers: vec![1 << 14],
+        };
+        let ex = explore_with(
+            &base,
+            &grids,
+            &dev,
+            &eval,
+            &SearchOptions {
+                strategy: SearchStrategy::Joint,
+                top_k: 3,
+            },
+        );
+        let visited_techs: Vec<MemTech> = [MemTech::Ddr4, MemTech::Hbm2, MemTech::Osram]
+            .into_iter()
+            .filter(|&tech| ex.visited.iter().any(|p| p.cfg.mem.tech() == tech))
+            .collect();
+        assert_eq!(visited_techs.len(), 3, "all technologies must be scored");
+        let frontier_techs: Vec<MemTech> = [MemTech::Ddr4, MemTech::Hbm2, MemTech::Osram]
+            .into_iter()
+            .filter(|&tech| ex.pareto.iter().any(|p| p.cfg.mem.tech() == tech))
+            .collect();
+        assert!(
+            frontier_techs.len() >= 2,
+            "frontier must span technologies, got {frontier_techs:?}"
+        );
+        // The min-blocks and min-power ends of the frontier belong to
+        // the technologies that own those axes.
+        let min_blocks = ex.pareto.iter().map(|p| p.blocks()).min().unwrap();
+        assert!(ex
+            .pareto
+            .iter()
+            .any(|p| p.blocks() == min_blocks && p.cfg.mem.tech() == MemTech::Ddr4));
+        let min_power = ex.pareto.iter().map(|p| p.power_mw()).min().unwrap();
+        assert!(ex
+            .pareto
+            .iter()
+            .any(|p| p.power_mw() == min_power && p.cfg.mem.tech() == MemTech::Osram));
+    }
+
+    #[test]
+    fn coordinate_search_crosses_technologies_too() {
+        // The module-3 sweep carries the technology axis in every
+        // strategy, not just the joint one: with all techs in the grid
+        // the coordinate search must score HBM2 and oSRAM candidates.
+        let t = tensor();
+        let profile = TensorProfile::measure(&t);
+        let eval = EvaluatorBuilder::new().rank(16).pms(&profile);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let dev = Device::alveo_u280();
+        let ex = explore(&base, &Grids::all_mem_techs(), &dev, &eval);
+        for tech in [MemTech::Ddr4, MemTech::Hbm2, MemTech::Osram] {
+            assert!(
+                ex.visited.iter().any(|p| p.cfg.mem.tech() == tech),
+                "{tech:?} never visited"
+            );
+        }
+    }
+
+    #[test]
+    fn hbm_candidates_are_infeasible_on_hbm_less_boards() {
+        // On a board without HBM stacks the HBM2 grid point must be
+        // rejected, not silently scored.
+        let t = tensor();
+        let profile = TensorProfile::measure(&t);
+        let eval = EvaluatorBuilder::new().rank(16).pms(&profile);
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let dev = Device::alveo_u250();
+        let mut hbm = base.clone();
+        hbm.mem = MemTech::Hbm2.default_config();
+        assert!(eval.score(&hbm, &dev).is_none());
+        let ex = explore(&base, &Grids::all_mem_techs(), &dev, &eval);
+        assert!(ex.rejected > 0);
+        assert!(ex
+            .visited
+            .iter()
+            .all(|p| p.cfg.mem.tech() != MemTech::Hbm2));
+    }
+
+    #[test]
+    fn builder_matches_legacy_constructors() {
+        // The builder is a new front door, not a new model: every
+        // evaluator it constructs scores identically to the legacy
+        // construction path it wraps.
+        let t = tensor();
+        let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 9)).collect();
+        let profile = TensorProfile::measure(&t);
+        let dev = Device::alveo_u250();
+        let cfg = ControllerConfig::default_for(t.record_bytes());
+        let legacy_pms = Evaluator::Pms {
+            profile: &profile,
+            rank: 16,
+        };
+        let built_pms = EvaluatorBuilder::new().rank(16).pms(&profile);
+        assert_eq!(legacy_pms.score(&cfg, &dev), built_pms.score(&cfg, &dev));
+        #[allow(deprecated)]
+        let legacy_sim = Evaluator::cycle_sim(&t, &factors, EngineKind::Grid);
+        let built_sim = EvaluatorBuilder::new()
+            .engine(EngineKind::Grid)
+            .cycle_sim(&t, &factors);
+        assert_eq!(legacy_sim.score(&cfg, &dev), built_sim.score(&cfg, &dev));
+        let sweep = crate::shard::ShardedSweep::prepare(&t, 8, 2);
+        let legacy_sharded = Evaluator::ShardedSim { sweep: &sweep };
+        let built_sharded = EvaluatorBuilder::new().sharded(&sweep);
+        assert_eq!(
+            legacy_sharded.score(&cfg, &dev),
+            built_sharded.score(&cfg, &dev)
+        );
     }
 }

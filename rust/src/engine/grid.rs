@@ -24,8 +24,9 @@
 //!
 //! [`GridClassification::replay`] then reproduces a candidate's full
 //! controller timing by driving **only** that miss stream (plus the
-//! cache-independent DMA runs) through the real [`Dram`] and
-//! [`DmaEngine`] models, folding every run of `n` hits into
+//! cache-independent DMA runs) through the real memory-device
+//! ([`MemDevice`]) and [`DmaEngine`] models, folding every run of `n`
+//! hits into
 //! `n * hit_latency` in closed form.  The replay performs the identical
 //! DRAM access sequence the lockstep core would — same misses, same
 //! writeback-before-fill ordering, same FIFO clock threading — so its
@@ -40,7 +41,8 @@ use crate::controller::{
     Access, CacheConfig, CacheStats, ControllerConfig, ControllerStats, DmaEngine, DmaStats,
     LineGeom,
 };
-use crate::dram::{Dram, DramStats};
+use crate::dram::DramStats;
+use crate::mem::MemDevice;
 
 /// One recorded miss of one candidate configuration: the `hits_before`
 /// cache-class line accesses since the previous miss all hit (and cost
@@ -335,7 +337,7 @@ impl GridClassification {
     /// Miss-only timing replay of candidate `idx` under the full
     /// controller configuration `cfg` (whose `cache` must equal the
     /// classified candidate): hit runs fold to `n * hit_latency`; only
-    /// misses, writebacks, and DMA-class runs drive the [`Dram`] /
+    /// misses, writebacks, and DMA-class runs drive the [`MemDevice`] /
     /// [`DmaEngine`] models.  `trace` must be the trace that was
     /// classified.  Returns the completion cycle (from 0, i.e. a fresh
     /// controller) plus every statistics counter — bit-identical to a
@@ -349,7 +351,7 @@ impl GridClassification {
         let geom = LineGeom::new(pass.line_bytes, 1);
         let lb = pass.line_bytes;
         let hl = cfg.cache.hit_latency;
-        let mut dram = Dram::new(cfg.dram.clone());
+        let mut dram = MemDevice::new(&cfg.mem);
         let mut dma = DmaEngine::new(cfg.dma);
         let mut cur = Cursor {
             recs: &self.streams[idx].recs,
@@ -430,7 +432,7 @@ impl Cursor<'_> {
     fn consume(
         &mut self,
         mut lines: u64,
-        dram: &mut Dram,
+        dram: &mut MemDevice,
         lb: usize,
         hl: u64,
         mut now: u64,

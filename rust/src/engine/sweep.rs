@@ -31,7 +31,7 @@
 //! candidates share its pass, its extracted op queue does not depend
 //! on which candidates shared the classification (the grid/timing
 //! cores' "company independence" properties), and lanes are walked by
-//! the exact scalar [`Dram`](crate::dram::Dram) /
+//! the exact scalar [`MemDevice`](crate::mem::MemDevice) /
 //! [`DmaEngine`](crate::controller::DmaEngine) state machines — as
 //! enforced on a randomized corpus by `tests/sweep_props.rs` and the
 //! joint-grid column of `tests/differential.rs`.
@@ -246,8 +246,8 @@ mod tests {
                     cfg.cache.line_bytes = line_bytes;
                     cfg.cache.num_lines = num_lines;
                     cfg.cache.assoc = assoc;
-                    cfg.dram.channels = channels;
-                    cfg.dram.row_policy = policy;
+                    cfg.mem.ddr4_mut().channels = channels;
+                    cfg.mem.ddr4_mut().row_policy = policy;
                     cfg.dma.num_dmas = num_dmas;
                     cfg.dma.buffer_bytes = buffer_bytes;
                     cfgs.push(cfg);
@@ -296,7 +296,7 @@ mod tests {
     fn duplicate_candidates_share_cells() {
         let base = ControllerConfig::default_for(16);
         let mut other = base.clone();
-        other.dram.channels = 4;
+        other.mem.ddr4_mut().channels = 4;
         let mut remapper_only = base.clone();
         remapper_only.remapper.max_pointers = 4;
         let pairs: Vec<_> = [&base, &other, &base, &remapper_only]
@@ -323,7 +323,7 @@ mod tests {
         for &channels in &[1usize, 2, 4] {
             for &num_dmas in &[1usize, 2, 4] {
                 let mut cfg = base.clone();
-                cfg.dram.channels = channels;
+                cfg.mem.ddr4_mut().channels = channels;
                 cfg.dma.num_dmas = num_dmas;
                 cfgs.push(cfg);
             }

@@ -18,10 +18,11 @@
 //!
 //! [`TimingOps::time_grid`] walks that op queue once with an array of
 //! per-candidate **lanes** in structure-of-arrays form: each lane owns
-//! flat per-candidate bank/row-open vectors and channel clocks
-//! ([`Dram`]) plus flat DMA queue-depth slots ([`DmaEngine`]) and a
-//! FIFO clock.  Every op applies to each lane through the *same*
-//! [`Dram::access`] / [`DmaEngine::stream`] state machines the scalar
+//! its own flat-state memory device ([`MemDevice`]: DDR4 bank/row-open
+//! vectors, HBM2 pseudo-channel state, or oSRAM port clocks) plus flat
+//! DMA queue-depth slots ([`DmaEngine`]) and a FIFO clock.  Every op
+//! applies to each lane through the *same* [`MemDevice::access`] /
+//! [`DmaEngine::stream`] state machines the scalar
 //! engines use, so completion cycles and every statistics counter are
 //! **bit-identical** to a fresh per-candidate lockstep/event replay
 //! (enforced on a randomized corpus by `tests/timing_props.rs` and the
@@ -34,7 +35,8 @@ use crate::controller::{
     Access, CacheStats, ControllerConfig, ControllerStats, DmaConfig, DmaEngine, DmaStats,
     LineGeom,
 };
-use crate::dram::{Dram, DramConfig, DramStats};
+use crate::dram::DramStats;
+use crate::mem::{MemDevice, MemTechConfig};
 use crate::util::parallel_indexed;
 
 /// One timing-relevant event of the extracted op queue.  Addresses and
@@ -81,11 +83,13 @@ pub struct TimingRun {
     pub dram: DramStats,
 }
 
-/// One DRAM/DMA candidate of a timing-module sweep: the two knob sets
-/// that change request *timing* without changing the request sequence.
+/// One memory-device/DMA candidate of a timing-module sweep: the two
+/// knob sets that change request *timing* without changing the request
+/// sequence.  The memory side is a full [`MemTechConfig`], so a timing
+/// grid can mix DDR4, HBM2, and oSRAM lanes in one walk.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TimingCandidate {
-    pub dram: DramConfig,
+    pub mem: MemTechConfig,
     pub dma: DmaConfig,
 }
 
@@ -93,7 +97,7 @@ impl TimingCandidate {
     /// The timing knobs of a full controller configuration.
     pub fn of(cfg: &ControllerConfig) -> Self {
         TimingCandidate {
-            dram: cfg.dram.clone(),
+            mem: cfg.mem.clone(),
             dma: cfg.dma,
         }
     }
@@ -120,11 +124,12 @@ impl TimingCandidate {
     }
 }
 
-/// One candidate's live state during the op walk: its own flat-vector
-/// DRAM device (per-bank open rows + ready clocks, per-channel bus
-/// clocks), flat DMA queue slots, and the FIFO clock.
+/// One candidate's live state during the op walk: its own flat-state
+/// memory device (per-bank open rows + ready clocks and per-channel bus
+/// clocks for DRAM-class devices, port clocks for oSRAM), flat DMA
+/// queue slots, and the FIFO clock.
 struct Lane {
-    dram: Dram,
+    dram: MemDevice,
     dma: DmaEngine,
     now: u64,
 }
@@ -132,7 +137,7 @@ struct Lane {
 impl Lane {
     fn new(cand: &TimingCandidate) -> Self {
         Lane {
-            dram: Dram::new(cand.dram.clone()),
+            dram: MemDevice::new(&cand.mem),
             dma: DmaEngine::new(cand.dma),
             now: 0,
         }
@@ -424,14 +429,17 @@ mod tests {
             (4, 16, RowPolicy::Closed),
         ] {
             for &(num_dmas, buffer_bytes) in &[(1usize, 1024usize), (2, 4096), (4, 16384)] {
-                let mut dram = base.dram.clone();
-                dram.channels = channels;
-                dram.banks = banks;
-                dram.row_policy = policy;
+                let mut mem = base.mem.clone();
+                {
+                    let dram = mem.ddr4_mut();
+                    dram.channels = channels;
+                    dram.banks = banks;
+                    dram.row_policy = policy;
+                }
                 let mut dma = base.dma;
                 dma.num_dmas = num_dmas;
                 dma.buffer_bytes = buffer_bytes;
-                cands.push(TimingCandidate { dram, dma });
+                cands.push(TimingCandidate { mem, dma });
             }
         }
         cands
@@ -448,7 +456,7 @@ mod tests {
         assert_eq!(runs.len(), cands.len());
         for (cand, run) in cands.iter().zip(&runs) {
             let mut cfg = base.clone();
-            cfg.dram = cand.dram.clone();
+            cfg.mem = cand.mem.clone();
             cfg.dma = cand.dma;
             let mut ctl = MemoryController::new(cfg);
             let want = EngineKind::Event.replay(&mut ctl, &prepared);
@@ -492,7 +500,7 @@ mod tests {
     fn dedup_collapses_identical_lanes() {
         let base = ControllerConfig::default_for(16);
         let mut other = base.clone();
-        other.dram.channels = 4;
+        other.mem.ddr4_mut().channels = 4;
         let cands = vec![
             TimingCandidate::of(&base),
             TimingCandidate::of(&other),

@@ -10,42 +10,55 @@
 //! against each other in the DSE.
 
 use crate::controller::ControllerConfig;
+use crate::mem::MemTechConfig;
 
 /// One BRAM36 block: 36 Kbit = 4.5 KiB usable as 4 KiB data + parity.
 pub const BRAM36_BYTES: usize = 4 * 1024;
 /// One URAM288 block: 288 Kbit = 36 KiB.
 pub const URAM_BYTES: usize = 36 * 1024;
 
-/// An FPGA device's memory resources.
+/// An FPGA device's memory resources, including which external-memory
+/// technologies the board can host and at what capacity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Device {
     pub name: &'static str,
     pub bram36: usize,
     pub uram: usize,
-    /// DRAM channels on the board (bounds `DramConfig::channels`).
+    /// DDR4 channels on the board (bounds `DramConfig::channels`).
     pub dram_channels: usize,
+    /// HBM2 pseudo-channels on the package (0 = no HBM stacks).
+    pub hbm_pseudo_channels: usize,
+    /// Optical-SRAM-class scratchpad ports attachable through the
+    /// board's transceivers (0 = no such attachment).
+    pub osram_ports: usize,
 }
 
 impl Device {
     /// Xilinx Alveo U250 (paper's reference platform family): 2,000
-    /// BRAM36 + 1,280 URAM, 4 DDR4 channels.
+    /// BRAM36 + 1,280 URAM, 4 DDR4 channels, no HBM; a
+    /// transceiver-attached optical scratchpad of up to 16 ports.
     pub fn alveo_u250() -> Self {
         Device {
             name: "alveo-u250",
             bram36: 2000,
             uram: 1280,
             dram_channels: 4,
+            hbm_pseudo_channels: 0,
+            osram_ports: 16,
         }
     }
 
-    /// Alveo U280: 1,824 BRAM36 + 960 URAM (plus HBM: 32 pseudo-channels,
-    /// modeled as dram_channels=8 at this abstraction).
+    /// Alveo U280: 1,824 BRAM36 + 960 URAM, and the package HBM2 —
+    /// 2 stacks exposing 32 pseudo-channels (modeled as dram_channels=8
+    /// when driven through the legacy DDR4-shaped path).
     pub fn alveo_u280() -> Self {
         Device {
             name: "alveo-u280",
             bram36: 1824,
             uram: 960,
             dram_channels: 8,
+            hbm_pseudo_channels: 32,
+            osram_ports: 16,
         }
     }
 
@@ -56,12 +69,26 @@ impl Device {
             bram36: 2160,
             uram: 960,
             dram_channels: 1,
+            hbm_pseudo_channels: 0,
+            osram_ports: 8,
         }
     }
 
     /// Total on-chip memory bytes.
     pub fn total_bytes(&self) -> usize {
         self.bram36 * BRAM36_BYTES + self.uram * URAM_BYTES
+    }
+
+    /// Can this board host `mem` at the configured capacity?  Each
+    /// technology is bounded by its own attachment resource: DDR4 by
+    /// board channels, HBM2 by package pseudo-channels, oSRAM by
+    /// transceiver ports.
+    pub fn supports(&self, mem: &MemTechConfig) -> bool {
+        match mem {
+            MemTechConfig::Ddr4(c) => c.channels <= self.dram_channels,
+            MemTechConfig::Hbm2(h) => h.total_pseudo_channels() <= self.hbm_pseudo_channels,
+            MemTechConfig::Osram(o) => o.banks <= self.osram_ports,
+        }
     }
 }
 
@@ -89,6 +116,20 @@ impl Usage {
 /// the FPGA on-chip memory".
 pub const MC_BUDGET_FRACTION: f64 = 0.5;
 
+/// BRAM36 blocks the memory-side PHY/interconnect claims per
+/// technology.  DDR4 controllers are hardened (or budgeted outside
+/// `MC_BUDGET_FRACTION`), so DDR4 charges **zero** here — keeping every
+/// pre-refactor resource number byte-identical.  HBM2 needs an AXI
+/// switch buffer per active pseudo-channel; an optical scratchpad needs
+/// a transceiver elastic buffer per port.
+fn phy_bram36(mem: &MemTechConfig) -> usize {
+    match mem {
+        MemTechConfig::Ddr4(_) => 0,
+        MemTechConfig::Hbm2(h) => 2 * h.total_pseudo_channels(),
+        MemTechConfig::Osram(o) => o.banks,
+    }
+}
+
 /// Map a controller configuration onto `dev`'s block budget.
 ///
 /// Allocation policy (typical synthesis outcome):
@@ -96,6 +137,7 @@ pub const MC_BUDGET_FRACTION: f64 = 0.5;
 ///   tags add ~8 bytes/line.
 /// * DMA buffers -> URAM first (deep sequential FIFOs), overflow to BRAM.
 /// * Remapper pointer table + stream buffer -> URAM first, overflow BRAM.
+/// * Memory-PHY interconnect buffers -> BRAM ([`phy_bram36`]; 0 for DDR4).
 pub fn estimate(cfg: &ControllerConfig, dev: &Device) -> Usage {
     let bram_budget = (dev.bram36 as f64 * MC_BUDGET_FRACTION) as usize;
     let uram_budget = (dev.uram as f64 * MC_BUDGET_FRACTION) as usize;
@@ -111,7 +153,7 @@ pub fn estimate(cfg: &ControllerConfig, dev: &Device) -> Usage {
 
     // URAM overflow was re-homed to BRAM above, so fitting reduces to
     // the BRAM budget (uram_used is clamped to the budget by construction).
-    let bram36_used = bram_for_cache + bram_overflow;
+    let bram36_used = bram_for_cache + bram_overflow + phy_bram36(&cfg.mem);
     Usage {
         bram36_used,
         uram_used,
@@ -127,7 +169,7 @@ mod tests {
 
     fn cfg(cache_lines: usize, max_pointers: usize) -> ControllerConfig {
         ControllerConfig {
-            dram: DramConfig::default_ddr4(),
+            mem: MemTechConfig::Ddr4(DramConfig::default_ddr4()),
             cache: CacheConfig {
                 line_bytes: 64,
                 num_lines: cache_lines,
@@ -183,6 +225,44 @@ mod tests {
         let a = estimate(&cfg(256, 1024), &dev).utilization(&dev);
         let b = estimate(&cfg(4096, 1024), &dev).utilization(&dev);
         assert!(b > a);
+    }
+
+    #[test]
+    fn devices_support_their_own_memory_technologies() {
+        use crate::mem::MemTech;
+        let ddr4 = MemTech::Ddr4.default_config();
+        let hbm2 = MemTech::Hbm2.default_config();
+        let osram = MemTech::Osram.default_config();
+        assert!(Device::alveo_u250().supports(&ddr4));
+        assert!(!Device::alveo_u250().supports(&hbm2), "U250 has no HBM");
+        assert!(Device::alveo_u250().supports(&osram));
+        assert!(Device::alveo_u280().supports(&hbm2));
+        assert!(Device::vu9p().supports(&ddr4));
+        assert!(!Device::vu9p().supports(&hbm2));
+        // Capacity bounds, not just presence flags.
+        let mut wide = crate::dram::DramConfig::default_ddr4();
+        wide.channels = 8;
+        assert!(!Device::alveo_u250().supports(&MemTechConfig::Ddr4(wide)));
+        let mut many = crate::mem::OsramConfig::default_16p();
+        many.banks = 32;
+        assert!(!Device::alveo_u280().supports(&MemTechConfig::Osram(many)));
+    }
+
+    #[test]
+    fn ddr4_pays_no_phy_blocks_but_hbm2_and_osram_do() {
+        use crate::mem::MemTech;
+        let dev = Device::alveo_u280();
+        let base = cfg(1024, 1024);
+        let ddr4 = estimate(&base, &dev);
+        let mut hbm = base.clone();
+        hbm.mem = MemTech::Hbm2.default_config();
+        let mut os = base.clone();
+        os.mem = MemTech::Osram.default_config();
+        // DDR4 charges zero PHY blocks: byte-identical to pre-refactor.
+        assert_eq!(phy_bram36(&base.mem), 0);
+        assert!(estimate(&hbm, &dev).bram36_used > ddr4.bram36_used);
+        assert!(estimate(&os, &dev).bram36_used > ddr4.bram36_used);
+        assert_eq!(estimate(&hbm, &dev).uram_used, ddr4.uram_used);
     }
 
     #[test]

@@ -26,6 +26,9 @@
 //! * [`controller`] — Cache Engine, DMA Engine, Tensor Remapper, and the
 //!   memory-controller top that routes the paper's three transfer types.
 //!   (S3–S6)
+//! * [`mem`] — the [`mem::MemoryDevice`] trait and [`mem::MemDevice`]
+//!   dispatcher behind which the DDR4, HBM2, and optical-SRAM external
+//!   memory models live; memory technology as a DSE axis. (S24)
 //! * [`fpga`] — BRAM/URAM resource accounting and device catalog. (S7)
 //! * [`mttkrp`] — Approach 1 / Approach 2 / Approach-1-with-remap compute
 //!   engines and their memory-trace generators. (S8)
@@ -55,6 +58,7 @@ pub mod dse;
 pub mod engine;
 pub mod error;
 pub mod fpga;
+pub mod mem;
 pub mod mttkrp;
 pub mod pms;
 pub mod runtime;

@@ -11,16 +11,19 @@
 //! * `pms`       — analytic PMS estimate for a (tensor, config) pair.
 //! * `explore`   — design-space search (paper §5.3): coordinate descent
 //!   (the default), exhaustive joint cross-product search, or beam
-//!   search (`--search coordinate|joint|beam`), reporting the winner,
+//!   search (`--search coordinate|joint|beam`), optionally across
+//!   memory technologies (`--mem-techs all`), reporting the winner,
 //!   the top-k points (`--top-k`), and the Pareto frontier of cycles
-//!   vs on-chip blocks.
+//!   vs on-chip blocks vs memory-device power.
 //! * `stats`     — Table-2-style characteristics of a tensor.
 //!
 //! Workload selection (all subcommands): `--input file.tns` or
 //! `--synth zipf|uniform|clustered --dims AxBxC --nnz N --seed S`.
 //! Controller parameters come from `--config ptmc.toml` plus overrides
-//! (`--cache-lines`, `--dma-buffers`, `--channels`, `--dram-banks`,
-//! `--row-policy`, ...).  `--engine lockstep|event|grid` picks the
+//! (`--cache-lines`, `--dma-buffers`, `--memory-tech ddr4|hbm2|osram`,
+//! `--channels`, `--dram-banks`, `--row-policy`, ...; the `--dram-*`
+//! flags shape the DDR4 configuration and are rejected under another
+//! `--memory-tech`).  `--engine lockstep|event|grid` picks the
 //! trace-replay core for `simulate` and `explore` (bit-identical
 //! results; `event` is the batched fast path, `grid` additionally
 //! scores whole cache-module grids in one classification pass and
@@ -35,9 +38,10 @@ use ptmc::config::Config;
 use ptmc::controller::{ControllerConfig, MemLayout, MemoryController};
 use ptmc::coordinator::{PjrtCoordinator, SegMode};
 use ptmc::cpd::{cp_als, linalg::Mat, AlsConfig, NativeBackend, SimBackend};
-use ptmc::dse::{explore_with, Evaluator, Grids, SearchOptions, SearchStrategy};
+use ptmc::dse::{explore_with, EvaluatorBuilder, Grids, SearchOptions, SearchStrategy};
 use ptmc::engine::EngineKind;
 use ptmc::fpga::Device;
+use ptmc::mem::MemTech;
 use ptmc::pms::{self, TensorProfile};
 use ptmc::runtime::Runtime;
 use ptmc::shard::{ParallelBackend, ShardPlan, ShardedSweep};
@@ -49,8 +53,8 @@ const OPTS: &[&str] = &[
     "workers", "mode", "engine", // sharded execution + replay core
     "search", "top-k", // DSE search strategy + report depth
     "cache-lines", "cache-line-bytes", "cache-assoc", "dma-buffers", "dma-num",
-    "dma-buffer-bytes", "max-pointers", "channels", "dram-banks", "row-policy",
-    "artifacts",
+    "dma-buffer-bytes", "max-pointers", "memory-tech", "channels", "dram-banks",
+    "row-policy", "mem-techs", "artifacts",
 ];
 const FLAGS: &[&str] = &["help", "verbose", "csv"];
 
@@ -79,17 +83,23 @@ fn usage() {
          shard:     --workers 4 [--mode M]  (plan report; default: all modes)\n\
          controller:--config ptmc.toml --cache-lines N --cache-line-bytes B\n\
          \x20          --cache-assoc A --dma-num N --dma-buffers K\n\
-         \x20          --dma-buffer-bytes B --max-pointers P --channels C\n\
-         \x20          --dram-banks B --row-policy open|closed\n\
+         \x20          --dma-buffer-bytes B --max-pointers P\n\
+         \x20          --memory-tech ddr4|hbm2|osram ([memory] tech in the\n\
+         \x20          config file; DDR4-only knobs: --channels C\n\
+         \x20          --dram-banks B --row-policy open|closed — rejected\n\
+         \x20          under another --memory-tech)\n\
          dse:       --device u250|u280|vu9p --evaluator pms|sim|sharded|grid\n\
          \x20          --search coordinate|joint|beam --top-k N\n\
-         \x20          (coordinate sweeps cache, DMA, DRAM timing — channels\n\
-         \x20          x banks x row policy — then remapper grids, one module\n\
-         \x20          at a time; joint scores the full cross product through\n\
-         \x20          the hierarchical sweep core; beam keeps the top-k\n\
-         \x20          incumbents between module sweeps.  Every search also\n\
-         \x20          reports the top-k points and the Pareto frontier of\n\
-         \x20          cycles vs on-chip blocks.  Config-file equivalents:\n\
+         \x20          --mem-techs all|ddr4,hbm2,osram (memory technologies\n\
+         \x20          in the sweep; default: the base config's tech)\n\
+         \x20          (coordinate sweeps cache, DMA, memory — technology x\n\
+         \x20          channels x banks x row policy — then remapper grids,\n\
+         \x20          one module at a time; joint scores the full cross\n\
+         \x20          product through the hierarchical sweep core; beam\n\
+         \x20          keeps the top-k incumbents between module sweeps.\n\
+         \x20          Every search also reports the top-k points and the\n\
+         \x20          Pareto frontier of cycles vs on-chip blocks vs\n\
+         \x20          memory-device power.  Config-file equivalents:\n\
          \x20          [dse] search / top_k)\n\
          sim core:  --engine lockstep|event|grid (bit-identical; default\n\
          \x20          event on explore for sweep throughput, lockstep on\n\
@@ -149,12 +159,38 @@ fn controller_config_with(
     cfg.dma.buffers_per_dma = args.usize_or("dma-buffers", cfg.dma.buffers_per_dma)?;
     cfg.dma.buffer_bytes = args.usize_or("dma-buffer-bytes", cfg.dma.buffer_bytes)?;
     cfg.remapper.max_pointers = args.usize_or("max-pointers", cfg.remapper.max_pointers)?;
-    cfg.dram.channels = args.usize_or("channels", cfg.dram.channels)?;
-    cfg.dram.banks = args.usize_or("dram-banks", cfg.dram.banks)?;
-    if let Some(p) = args.get("row-policy") {
-        cfg.dram.row_policy = p
+    // Memory technology first (CLI wins over the config file), then
+    // the DDR4-shaped knobs — which only make sense on DDR4, so a
+    // non-DDR4 tech combined with any of them is a hard error rather
+    // than a silently ignored flag.
+    if let Some(raw) = args.get("memory-tech") {
+        let tech: MemTech = raw
             .parse()
-            .map_err(|e| CliError(format!("--row-policy: {e}")))?;
+            .map_err(|e| CliError(format!("--memory-tech: {e}")))?;
+        if tech != cfg.mem.tech() {
+            cfg.mem = tech.default_config();
+        }
+    }
+    let ddr4_flags: Vec<&str> = ["channels", "dram-banks", "row-policy"]
+        .into_iter()
+        .filter(|f| args.get(f).is_some())
+        .collect();
+    if cfg.mem.tech() == MemTech::Ddr4 {
+        let dram = cfg.mem.ddr4_mut();
+        dram.channels = args.usize_or("channels", dram.channels)?;
+        dram.banks = args.usize_or("dram-banks", dram.banks)?;
+        if let Some(p) = args.get("row-policy") {
+            dram.row_policy = p
+                .parse()
+                .map_err(|e| CliError(format!("--row-policy: {e}")))?;
+        }
+    } else if !ddr4_flags.is_empty() {
+        return Err(Box::new(CliError(format!(
+            "--{} shapes the DDR4 configuration, but the memory tech is {}; \
+             drop the flag or use --memory-tech ddr4",
+            ddr4_flags[0],
+            cfg.mem.tech()
+        ))));
     }
     Ok(cfg)
 }
@@ -278,10 +314,13 @@ fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         .enumerate()
         .map(|(m, &d)| Mat::randn(d, rank, m as u64))
         .collect();
+    let mem_tech = cfg.mem.tech();
+    let mem_power = cfg.mem.power_proxy_mw();
     let mut ctl = MemoryController::new(cfg);
 
     println!("simulate: dims {:?}, nnz {}, rank {rank}", t.dims(), t.nnz());
     println!("engine: {engine}");
+    println!("memory: {mem_tech} ({mem_power} mW proxy)");
     let mut total = 0u64;
     for mode in 0..t.n_modes() {
         let run = ptmc::mttkrp::remap_exec::run_with_engine(
@@ -375,16 +414,14 @@ fn cmd_pms(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
 /// One-line knob summary of a configuration for the explore report.
 fn cfg_summary(cfg: &ControllerConfig) -> String {
     format!(
-        "cache {}x{}B {}-way | dma {}x{}x{}B | dram {}ch x{} {} | ptr {}",
+        "cache {}x{}B {}-way | dma {}x{}x{}B | {} | ptr {}",
         cfg.cache.num_lines,
         cfg.cache.line_bytes,
         cfg.cache.assoc,
         cfg.dma.num_dmas,
         cfg.dma.buffers_per_dma,
         cfg.dma.buffer_bytes,
-        cfg.dram.channels,
-        cfg.dram.banks,
-        cfg.dram.row_policy,
+        cfg.mem,
         cfg.remapper.max_pointers
     )
 }
@@ -445,25 +482,23 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         .map(|&d| Mat::randn(d, rank, 3))
         .collect();
     println!("engine: {engine}");
+    let builder = EvaluatorBuilder::new().engine(engine).rank(rank);
     let sweep;
     let eval = match evaluator {
-        "pms" => Evaluator::Pms {
-            profile: &profile,
-            rank,
-        },
-        "sim" => Evaluator::cycle_sim(&t, &factors, engine),
+        "pms" => builder.pms(&profile),
+        "sim" => builder.cycle_sim(&t, &factors),
         // The cache-module sweep is classified in one trace pass
         // (stack-distance classifier + miss-only replay) instead of
         // replaying the trace once per candidate.
         "grid" => {
             println!("grid evaluator: one-pass cache-module scoring");
-            Evaluator::cycle_sim(&t, &factors, engine)
+            builder.cycle_sim(&t, &factors)
         }
         "sharded" => {
             let workers = args.usize_or("workers", 4)?.max(1);
             println!("sharded evaluator: {workers} concurrent controller instances");
             sweep = ShardedSweep::prepare_with_engine(&t, rank, workers, engine);
-            Evaluator::ShardedSim { sweep: &sweep }
+            builder.sharded(&sweep)
         }
         other => {
             return Err(Box::new(CliError(format!(
@@ -471,8 +506,24 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             ))))
         }
     };
+    // The memory-technology axis of the sweep: default to the base
+    // configuration's technology (a pure-DDR4 grid reproduces the
+    // legacy search exactly), `--mem-techs all` or a comma list opens
+    // the cross-technology space.
+    let grids = Grids {
+        mem_techs: match args.get("mem-techs") {
+            None => vec![base.mem.tech()],
+            Some("all") => vec![MemTech::Ddr4, MemTech::Hbm2, MemTech::Osram],
+            Some(list) => list
+                .split(',')
+                .map(|s| s.trim().parse::<MemTech>())
+                .collect::<Result<Vec<_>, _>>()
+                .map_err(|e| CliError(format!("--mem-techs: {e}")))?,
+        },
+        ..Grids::default()
+    };
     println!("search: {search} (top-k {top_k})");
-    let ex = explore_with(&base, &Grids::default(), &dev, &eval, &opts);
+    let ex = explore_with(&base, &grids, &dev, &eval, &opts);
     println!(
         "explored {} feasible configs ({} rejected as not fitting {})",
         ex.visited.len(),
@@ -491,6 +542,7 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         b.cfg.dma.buffer_bytes,
         b.cfg.remapper.max_pointers
     );
+    println!("  memory: {} ({} mW proxy)", b.cfg.mem, b.power_mw());
     println!("  resources: {} BRAM36 + {} URAM", b.bram36, b.uram);
     if ex.top.len() > 1 {
         println!("top-{} points:", ex.top.len());
@@ -505,14 +557,15 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         }
     }
     println!(
-        "pareto frontier (cycles vs on-chip blocks): {} points",
+        "pareto frontier (cycles vs on-chip blocks vs memory power): {} points",
         ex.pareto.len()
     );
     for p in ex.pareto.iter().take(8) {
         println!(
-            "  {:.3e} cycles @ {} blocks | {}",
+            "  {:.3e} cycles @ {} blocks, {} mW | {}",
             p.cycles,
             p.blocks(),
+            p.power_mw(),
             cfg_summary(&p.cfg)
         );
     }

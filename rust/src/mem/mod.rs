@@ -1,0 +1,775 @@
+//! Memory-technology abstraction (S24): external memory behind one
+//! [`MemoryDevice`] trait so the memory *technology* — not just the
+//! timing knobs of one DDR4-shaped device — is a programmable
+//! controller parameter and a first-class DSE axis.
+//!
+//! Three implementations live behind the [`MemDevice`] dispatcher:
+//!
+//! * **DDR4** — the existing bank/row-buffer model
+//!   ([`crate::dram::Dram`]), unchanged; the trait instance is
+//!   bit-identical to the pre-refactor direct path (enforced by
+//!   `tests/memtech_props.rs` and the differential suites).
+//! * **HBM2** — a multi-stack model (stacks × channels ×
+//!   pseudo-channels) with shorter rows and narrower bursts.  Each
+//!   pseudo-channel owns independent bank state, which is exactly the
+//!   flat `(channel, bank)` state the DRAM engine already keeps — so
+//!   HBM2 composes over [`Dram`] driven by a derived flat
+//!   [`DramConfig`] ([`Hbm2Config::flat_dram`]).
+//! * **Optical-SRAM-class scratchpad** — flat low access latency, no
+//!   row-buffer dynamics at all (activate/precharge are never charged,
+//!   so [`DramStats::activations`] stays 0), bandwidth-limited by
+//!   per-port word occupancy ([`OpticalSram`]); cf. "Performance
+//!   Modeling Sparse MTTKRP Using Optical SRAM on FPGA" (PAPERS.md).
+//!
+//! All three share [`DramStats`] as the universal device-statistics
+//! type so per-shard aggregation ([`DramStats::merge`]) and every
+//! report keep working unchanged; technologies without row buffers
+//! simply never touch the row counters.
+//!
+//! The configuration side is [`MemTechConfig`], a closed enum carrying
+//! each technology's knob set.  It is `Hash`/`Eq` so it can key the
+//! remap-pass memo ([`crate::util::remap_memo::RemapKey`]) and dedup
+//! DSE candidates, and it carries the analytic PMS counterparts
+//! ([`MemTechConfig::stream_bytes_per_cycle`],
+//! [`MemTechConfig::random_access_cycles`]) plus an FPGA power proxy
+//! ([`MemTechConfig::power_proxy_mw`]) so `Exploration::pareto` can
+//! report cross-technology frontiers.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::dram::{Dram, DramConfig, DramStats, RowPolicy};
+
+/// External-memory device model: the one interface every simulation
+/// core drives.  Implementations MUST be deterministic — the DSE
+/// layers memoize and differentially compare their outputs.
+pub trait MemoryDevice {
+    /// Access `len` bytes at `addr` starting no earlier than `start`;
+    /// returns the completion cycle.
+    fn access(&mut self, addr: u64, len: usize, start: u64) -> u64;
+
+    /// Aggregate device statistics since the last reset.
+    fn stats(&self) -> &DramStats;
+
+    /// Reset device state and statistics (fresh epoch).
+    fn reset(&mut self);
+
+    /// Max completion cycle across the device's parallel units.
+    fn makespan(&self) -> u64;
+}
+
+/// Memory technology selector (CLI `--memory-tech`, config
+/// `[memory] tech = ...`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum MemTech {
+    /// Board-attached DDR4 DIMMs (the paper's reference platform).
+    #[default]
+    Ddr4,
+    /// On-package HBM2 stacks (Alveo U280-class).
+    Hbm2,
+    /// Optical-SRAM-class external scratchpad.
+    Osram,
+}
+
+impl MemTech {
+    /// Default knob set for this technology.
+    pub fn default_config(self) -> MemTechConfig {
+        match self {
+            MemTech::Ddr4 => MemTechConfig::Ddr4(DramConfig::default_ddr4()),
+            MemTech::Hbm2 => MemTechConfig::Hbm2(Hbm2Config::default_u280()),
+            MemTech::Osram => MemTechConfig::Osram(OsramConfig::default_16p()),
+        }
+    }
+}
+
+impl FromStr for MemTech {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "ddr4" => Ok(MemTech::Ddr4),
+            "hbm2" => Ok(MemTech::Hbm2),
+            "osram" => Ok(MemTech::Osram),
+            other => Err(format!(
+                "unknown memory tech {other:?} (ddr4|hbm2|osram)"
+            )),
+        }
+    }
+}
+
+impl fmt::Display for MemTech {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            MemTech::Ddr4 => "ddr4",
+            MemTech::Hbm2 => "hbm2",
+            MemTech::Osram => "osram",
+        })
+    }
+}
+
+/// HBM2 geometry/timing knobs.  The stack hierarchy flattens into the
+/// DRAM engine's channel dimension ([`Self::flat_dram`]): every
+/// pseudo-channel is an independent half-width bus with its own bank
+/// state, which is the semantics the flat `(channel, bank)` vectors
+/// already model.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Hbm2Config {
+    /// HBM stacks on the package.
+    pub stacks: usize,
+    /// Channels per stack.
+    pub channels_per_stack: usize,
+    /// Pseudo-channels per channel (HBM2 splits each 128-bit channel
+    /// into two independent 64-bit pseudo-channels).
+    pub pseudo_channels: usize,
+    /// Banks per pseudo-channel.
+    pub banks: usize,
+    /// Row-buffer size in bytes — much shorter than DDR4 pages.
+    pub row_bytes: usize,
+    /// Bytes per burst on one pseudo-channel (half-width bus).
+    pub burst_bytes: usize,
+    pub t_rcd: u64,
+    pub t_rp: u64,
+    pub t_cl: u64,
+    pub t_burst: u64,
+    pub row_policy: RowPolicy,
+}
+
+impl Hbm2Config {
+    /// Alveo U280-like dual-stack HBM2: 2 stacks x 8 channels x 2
+    /// pseudo-channels = 32 independent pseudo-channels, 1 KiB rows,
+    /// 32 B bursts, slightly longer bank timings than DDR4 at the
+    /// controller clock.
+    pub fn default_u280() -> Self {
+        Hbm2Config {
+            stacks: 2,
+            channels_per_stack: 8,
+            pseudo_channels: 2,
+            banks: 8,
+            row_bytes: 1024,
+            burst_bytes: 32,
+            t_rcd: 7,
+            t_rp: 7,
+            t_cl: 7,
+            t_burst: 2,
+            row_policy: RowPolicy::Open,
+        }
+    }
+
+    /// Total independent pseudo-channels across the package.
+    pub fn total_pseudo_channels(&self) -> usize {
+        self.stacks * self.channels_per_stack * self.pseudo_channels
+    }
+
+    /// The equivalent flat DRAM geometry driving the shared engine:
+    /// one engine channel per pseudo-channel, per-pseudo-channel bank
+    /// state, HBM row/burst/timing knobs.
+    pub fn flat_dram(&self) -> DramConfig {
+        DramConfig {
+            channels: self.total_pseudo_channels().max(1),
+            banks: self.banks,
+            row_bytes: self.row_bytes,
+            burst_bytes: self.burst_bytes,
+            t_rcd: self.t_rcd,
+            t_rp: self.t_rp,
+            t_cl: self.t_cl,
+            t_burst: self.t_burst,
+            row_policy: self.row_policy,
+        }
+    }
+}
+
+/// Optical-SRAM-class scratchpad knobs: no rows, no activate or
+/// precharge — a flat access latency plus per-port word occupancy.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct OsramConfig {
+    /// Independent ports (banks); each serializes its own words.
+    pub banks: usize,
+    /// Transfer granularity per port in bytes.
+    pub word_bytes: usize,
+    /// Flat access latency in cycles (pipelined across words).
+    pub t_access: u64,
+    /// Port occupancy per word in cycles (bounds sustained bandwidth
+    /// at `banks * word_bytes / t_word`).
+    pub t_word: u64,
+}
+
+impl OsramConfig {
+    /// 16-port scratchpad, 64 B words, 2-cycle flat latency, one word
+    /// per port per cycle — 1 KiB/cycle peak.
+    pub fn default_16p() -> Self {
+        OsramConfig {
+            banks: 16,
+            word_bytes: 64,
+            t_access: 2,
+            t_word: 1,
+        }
+    }
+}
+
+/// Per-technology configuration: the swept DSE dimension.  `Hash`/`Eq`
+/// so it can key memo tables and dedup candidates.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum MemTechConfig {
+    Ddr4(DramConfig),
+    Hbm2(Hbm2Config),
+    Osram(OsramConfig),
+}
+
+impl MemTechConfig {
+    /// The default DDR4 instance (the pre-refactor controller default).
+    pub fn default_ddr4() -> Self {
+        MemTechConfig::Ddr4(DramConfig::default_ddr4())
+    }
+
+    /// Which technology this knob set belongs to.
+    pub fn tech(&self) -> MemTech {
+        match self {
+            MemTechConfig::Ddr4(_) => MemTech::Ddr4,
+            MemTechConfig::Hbm2(_) => MemTech::Hbm2,
+            MemTechConfig::Osram(_) => MemTech::Osram,
+        }
+    }
+
+    /// The DDR4 knob set, if this is the DDR4 technology.
+    pub fn ddr4(&self) -> Option<&DramConfig> {
+        match self {
+            MemTechConfig::Ddr4(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    /// Mutable DDR4 knob set; panics on other technologies.  For call
+    /// sites (CLI `--dram-*` overrides, tests, benches) that are
+    /// DDR4-specific by construction.
+    pub fn ddr4_mut(&mut self) -> &mut DramConfig {
+        match self {
+            MemTechConfig::Ddr4(c) => c,
+            other => panic!(
+                "DDR4 knob applied to {} memory technology",
+                other.tech()
+            ),
+        }
+    }
+
+    /// Independent parallel units the device exposes: DDR4 channels,
+    /// HBM2 pseudo-channels, oSRAM ports.  Bounds device feasibility
+    /// and the sharded per-worker split.
+    pub fn parallel_units(&self) -> usize {
+        match self {
+            MemTechConfig::Ddr4(c) => c.channels,
+            MemTechConfig::Hbm2(h) => h.total_pseudo_channels(),
+            MemTechConfig::Osram(o) => o.banks,
+        }
+    }
+
+    /// Peak bandwidth in bytes/cycle (all units streaming).
+    pub fn peak_bytes_per_cycle(&self) -> f64 {
+        match self {
+            MemTechConfig::Ddr4(c) => c.peak_bytes_per_cycle(),
+            MemTechConfig::Hbm2(h) => h.flat_dram().peak_bytes_per_cycle(),
+            MemTechConfig::Osram(o) => {
+                o.banks as f64 * o.word_bytes as f64 / o.t_word.max(1) as f64
+            }
+        }
+    }
+
+    /// Analytic PMS counterpart: effective *streaming* bandwidth in
+    /// bytes/cycle.  Row-buffer technologies amortize one activation
+    /// per row (open page) or pay one per burst spread over the banks
+    /// (closed page); the scratchpad streams at its port-limited peak.
+    pub fn stream_bytes_per_cycle(&self) -> f64 {
+        match self {
+            MemTechConfig::Ddr4(c) => dram_stream_bytes_per_cycle(c),
+            MemTechConfig::Hbm2(h) => dram_stream_bytes_per_cycle(&h.flat_dram()),
+            MemTechConfig::Osram(_) => self.peak_bytes_per_cycle(),
+        }
+    }
+
+    /// Analytic PMS counterpart: cycles for one isolated random
+    /// element access (no locality).
+    pub fn random_access_cycles(&self) -> f64 {
+        match self {
+            MemTechConfig::Ddr4(c) => dram_random_access_cycles(c),
+            MemTechConfig::Hbm2(h) => dram_random_access_cycles(&h.flat_dram()),
+            MemTechConfig::Osram(o) => (o.t_access + o.t_word) as f64,
+        }
+    }
+
+    /// Analytic PMS counterpart: bus/port occupancy of one burst —
+    /// the back-to-back service time a store pays once its row (if any)
+    /// is open.
+    pub fn burst_occupancy_cycles(&self) -> f64 {
+        match self {
+            MemTechConfig::Ddr4(c) => c.t_burst as f64,
+            MemTechConfig::Hbm2(h) => h.t_burst as f64,
+            MemTechConfig::Osram(o) => o.t_word as f64,
+        }
+    }
+
+    /// Device power proxy in mW for the Pareto frontier's third axis:
+    /// a static PHY/background term plus a per-unit I/O term.  These
+    /// are coarse proxies for relative cross-technology comparison
+    /// (DDR4 DIMM interfaces burn the most energy per unit, HBM2's
+    /// short in-package traces much less per pseudo-channel, optical
+    /// SRAM the least) — not calibrated absolute numbers.
+    pub fn power_proxy_mw(&self) -> u64 {
+        match self {
+            MemTechConfig::Ddr4(c) => 150 + 170 * c.channels as u64,
+            MemTechConfig::Hbm2(h) => 400 + 28 * h.total_pseudo_channels() as u64,
+            MemTechConfig::Osram(o) => 60 + 6 * o.banks as u64,
+        }
+    }
+
+    /// Per-worker slice of this technology's parallel units for the
+    /// sharded backend: each of `k` concurrent controllers gets
+    /// `units / k` floored to a power of two (at least one), mirroring
+    /// the pre-refactor DDR4 channel split.
+    pub fn split_for_workers(&self, k: usize) -> Self {
+        let share = split_units(self.parallel_units(), k);
+        match self {
+            MemTechConfig::Ddr4(c) => {
+                let mut c = c.clone();
+                c.channels = share;
+                MemTechConfig::Ddr4(c)
+            }
+            MemTechConfig::Hbm2(h) => {
+                // Slice the stack hierarchy by collapsing it: one
+                // worker sees `share` pseudo-channels as 1 stack x
+                // `share` channels x 1 pseudo-channel of identical
+                // timing — the flat engine geometry is what matters.
+                let mut h = h.clone();
+                h.stacks = 1;
+                h.channels_per_stack = share;
+                h.pseudo_channels = 1;
+                MemTechConfig::Hbm2(h)
+            }
+            MemTechConfig::Osram(o) => {
+                let mut o = o.clone();
+                o.banks = share;
+                MemTechConfig::Osram(o)
+            }
+        }
+    }
+}
+
+impl Default for MemTechConfig {
+    fn default() -> Self {
+        MemTechConfig::default_ddr4()
+    }
+}
+
+impl fmt::Display for MemTechConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MemTechConfig::Ddr4(c) => {
+                write!(f, "ddr4 {}ch x{} {}", c.channels, c.banks, c.row_policy)
+            }
+            MemTechConfig::Hbm2(h) => write!(
+                f,
+                "hbm2 {}x{}x{}pc x{} {}",
+                h.stacks, h.channels_per_stack, h.pseudo_channels, h.banks, h.row_policy
+            ),
+            MemTechConfig::Osram(o) => {
+                write!(f, "osram {}p x{}B", o.banks, o.word_bytes)
+            }
+        }
+    }
+}
+
+/// `units / k` floored to a power of two, at least 1 — the per-worker
+/// resource split shared by all technologies.
+fn split_units(units: usize, k: usize) -> usize {
+    let share = (units / k.max(1)).max(1);
+    let mut p = 1usize;
+    while p * 2 <= share {
+        p *= 2;
+    }
+    p
+}
+
+/// Effective streaming bandwidth of a row-buffer device in bytes/cycle:
+/// peak derated by the row-policy cost.  Open page pays one activation
+/// per row; closed page re-activates every burst but overlaps the
+/// activates across banks, so its per-burst time is the activate
+/// latency divided by the bank-level parallelism, floored at the bus
+/// occupancy.  (Formulas unchanged from the pre-refactor PMS — the
+/// DDR4 analytic path stays bit-identical.)
+fn dram_stream_bytes_per_cycle(c: &DramConfig) -> f64 {
+    let hit_time = c.t_burst as f64;
+    let avg = match c.row_policy {
+        RowPolicy::Open => {
+            let bursts_per_row = (c.row_bytes / c.burst_bytes) as f64;
+            let miss_time = (c.t_rp + c.t_rcd + c.t_cl + c.t_burst) as f64;
+            (miss_time + (bursts_per_row - 1.0) * hit_time) / bursts_per_row
+        }
+        RowPolicy::Closed => {
+            let act_time = (c.t_rcd + c.t_cl + c.t_burst) as f64;
+            hit_time.max(act_time / (c.banks as f64).max(1.0))
+        }
+    };
+    c.channels as f64 * c.burst_bytes as f64 / avg
+}
+
+/// Latency of one isolated random access on a row-buffer device: open
+/// page assumes a row conflict (precharge on the critical path); closed
+/// page auto-precharged behind the previous burst, so only the activate
+/// remains.  (Formulas unchanged from the pre-refactor PMS.)
+fn dram_random_access_cycles(c: &DramConfig) -> f64 {
+    match c.row_policy {
+        RowPolicy::Open => (c.t_rp + c.t_rcd + c.t_cl + c.t_burst) as f64,
+        RowPolicy::Closed => (c.t_rcd + c.t_cl + c.t_burst) as f64,
+    }
+}
+
+/// HBM2 device: the shared DRAM engine over the flattened
+/// pseudo-channel geometry, so every pseudo-channel keeps independent
+/// per-bank row state and an independent data bus.
+#[derive(Debug, Clone)]
+pub struct Hbm2 {
+    cfg: Hbm2Config,
+    inner: Dram,
+}
+
+impl Hbm2 {
+    pub fn new(cfg: Hbm2Config) -> Self {
+        let inner = Dram::new(cfg.flat_dram());
+        Hbm2 { cfg, inner }
+    }
+
+    pub fn config(&self) -> &Hbm2Config {
+        &self.cfg
+    }
+}
+
+impl MemoryDevice for Hbm2 {
+    fn access(&mut self, addr: u64, len: usize, start: u64) -> u64 {
+        self.inner.access(addr, len, start)
+    }
+
+    fn stats(&self) -> &DramStats {
+        self.inner.stats()
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+
+    fn makespan(&self) -> u64 {
+        self.inner.makespan()
+    }
+}
+
+/// Optical-SRAM-class scratchpad device: words route to ports by
+/// address interleave, each port serializes its words at `t_word`
+/// occupancy, and every word completes a flat `t_access` later — no
+/// row state, so the row counters in [`DramStats`] stay 0 forever.
+#[derive(Debug, Clone)]
+pub struct OpticalSram {
+    cfg: OsramConfig,
+    /// Cycle at which each port can accept its next word.
+    port_free: Vec<u64>,
+    /// Max completion cycle seen (ports pipeline, so completion can
+    /// trail port availability by `t_access`).
+    horizon: u64,
+    stats: DramStats,
+}
+
+impl OpticalSram {
+    pub fn new(cfg: OsramConfig) -> Self {
+        assert!(cfg.banks > 0, "osram needs at least one port");
+        assert!(cfg.word_bytes > 0, "osram needs a positive word size");
+        OpticalSram {
+            port_free: vec![0; cfg.banks],
+            horizon: 0,
+            cfg,
+            stats: DramStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &OsramConfig {
+        &self.cfg
+    }
+}
+
+impl MemoryDevice for OpticalSram {
+    fn access(&mut self, addr: u64, len: usize, start: u64) -> u64 {
+        assert!(len > 0, "zero-length memory access");
+        let wb = self.cfg.word_bytes as u64;
+        let first = addr / wb;
+        let last = (addr + len as u64 - 1) / wb;
+        let mut done = start;
+        for word in first..=last {
+            let port = (word % self.cfg.banks as u64) as usize;
+            let issue = start.max(self.port_free[port]);
+            self.port_free[port] = issue + self.cfg.t_word;
+            let word_done = issue + self.cfg.t_access + self.cfg.t_word;
+            done = done.max(word_done);
+            self.stats.bursts += 1;
+            self.stats.bytes += wb;
+        }
+        self.horizon = self.horizon.max(done);
+        done
+    }
+
+    fn stats(&self) -> &DramStats {
+        &self.stats
+    }
+
+    fn reset(&mut self) {
+        self.port_free.iter_mut().for_each(|t| *t = 0);
+        self.horizon = 0;
+        self.stats = DramStats::default();
+    }
+
+    fn makespan(&self) -> u64 {
+        self.horizon
+    }
+}
+
+impl MemoryDevice for Dram {
+    fn access(&mut self, addr: u64, len: usize, start: u64) -> u64 {
+        Dram::access(self, addr, len, start)
+    }
+
+    fn stats(&self) -> &DramStats {
+        Dram::stats(self)
+    }
+
+    fn reset(&mut self) {
+        Dram::reset(self);
+    }
+
+    fn makespan(&self) -> u64 {
+        Dram::makespan(self)
+    }
+}
+
+/// The concrete device dispatcher every simulation core holds.  An
+/// enum (not a trait object) so devices stay `Clone`-able flat state —
+/// the vectorized timing core keeps arrays of per-candidate devices —
+/// and so dispatch is a match, not a vtable, on the burst-level hot
+/// path.
+#[derive(Debug, Clone)]
+pub enum MemDevice {
+    Ddr4(Dram),
+    Hbm2(Hbm2),
+    Osram(OpticalSram),
+}
+
+impl MemDevice {
+    /// Instantiate the device a technology config describes.
+    pub fn new(cfg: &MemTechConfig) -> Self {
+        match cfg {
+            MemTechConfig::Ddr4(c) => MemDevice::Ddr4(Dram::new(c.clone())),
+            MemTechConfig::Hbm2(h) => MemDevice::Hbm2(Hbm2::new(h.clone())),
+            MemTechConfig::Osram(o) => MemDevice::Osram(OpticalSram::new(o.clone())),
+        }
+    }
+
+    /// Access `len` bytes at `addr` starting no earlier than `start`;
+    /// returns the completion cycle (inherent mirror of the trait so
+    /// hot paths need no trait import).
+    pub fn access(&mut self, addr: u64, len: usize, start: u64) -> u64 {
+        match self {
+            MemDevice::Ddr4(d) => d.access(addr, len, start),
+            MemDevice::Hbm2(h) => MemoryDevice::access(h, addr, len, start),
+            MemDevice::Osram(o) => MemoryDevice::access(o, addr, len, start),
+        }
+    }
+
+    pub fn stats(&self) -> &DramStats {
+        match self {
+            MemDevice::Ddr4(d) => d.stats(),
+            MemDevice::Hbm2(h) => MemoryDevice::stats(h),
+            MemDevice::Osram(o) => MemoryDevice::stats(o),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        match self {
+            MemDevice::Ddr4(d) => d.reset(),
+            MemDevice::Hbm2(h) => MemoryDevice::reset(h),
+            MemDevice::Osram(o) => MemoryDevice::reset(o),
+        }
+    }
+
+    pub fn makespan(&self) -> u64 {
+        match self {
+            MemDevice::Ddr4(d) => d.makespan(),
+            MemDevice::Hbm2(h) => MemoryDevice::makespan(h),
+            MemDevice::Osram(o) => MemoryDevice::makespan(o),
+        }
+    }
+}
+
+impl MemoryDevice for MemDevice {
+    fn access(&mut self, addr: u64, len: usize, start: u64) -> u64 {
+        MemDevice::access(self, addr, len, start)
+    }
+
+    fn stats(&self) -> &DramStats {
+        MemDevice::stats(self)
+    }
+
+    fn reset(&mut self) {
+        MemDevice::reset(self);
+    }
+
+    fn makespan(&self) -> u64 {
+        MemDevice::makespan(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tech_parses_and_displays() {
+        assert_eq!("ddr4".parse::<MemTech>().unwrap(), MemTech::Ddr4);
+        assert_eq!("hbm2".parse::<MemTech>().unwrap(), MemTech::Hbm2);
+        assert_eq!("osram".parse::<MemTech>().unwrap(), MemTech::Osram);
+        assert!("sram".parse::<MemTech>().is_err());
+        assert_eq!(MemTech::Ddr4.to_string(), "ddr4");
+        assert_eq!(MemTech::Hbm2.to_string(), "hbm2");
+        assert_eq!(MemTech::Osram.to_string(), "osram");
+        assert_eq!(MemTech::default(), MemTech::Ddr4);
+    }
+
+    #[test]
+    fn ddr4_device_matches_raw_dram_exactly() {
+        let cfg = DramConfig::default_ddr4();
+        let mut raw = Dram::new(cfg.clone());
+        let mut dev = MemDevice::new(&MemTechConfig::Ddr4(cfg));
+        let mut rng = crate::testkit::Rng::new(9);
+        let (mut ta, mut tb) = (0u64, 0u64);
+        for _ in 0..2_000 {
+            let addr = rng.below(1 << 26);
+            let len = 1 + rng.below(512) as usize;
+            ta = raw.access(addr, len, ta);
+            tb = dev.access(addr, len, tb);
+            assert_eq!(ta, tb);
+        }
+        assert_eq!(raw.stats(), dev.stats());
+        assert_eq!(Dram::makespan(&raw), dev.makespan());
+    }
+
+    #[test]
+    fn hbm2_flattens_to_pseudo_channel_geometry() {
+        let h = Hbm2Config::default_u280();
+        assert_eq!(h.total_pseudo_channels(), 32);
+        let flat = h.flat_dram();
+        assert_eq!(flat.channels, 32);
+        assert_eq!(flat.banks, h.banks);
+        assert_eq!(flat.row_bytes, 1024);
+    }
+
+    #[test]
+    fn hbm2_streams_faster_than_ddr4() {
+        let ddr = MemTechConfig::default_ddr4();
+        let hbm = MemTechConfig::Hbm2(Hbm2Config::default_u280());
+        assert!(hbm.peak_bytes_per_cycle() > ddr.peak_bytes_per_cycle());
+        assert!(hbm.stream_bytes_per_cycle() > ddr.stream_bytes_per_cycle());
+
+        // And the cycle model agrees on an actual 1 MiB stream.
+        let run = |cfg: &MemTechConfig| {
+            let mut dev = MemDevice::new(cfg);
+            let mut t = 0;
+            for off in (0u64..1 << 20).step_by(64) {
+                t = dev.access(off, 64, t);
+            }
+            dev.makespan()
+        };
+        assert!(run(&hbm) < run(&ddr));
+    }
+
+    #[test]
+    fn osram_never_touches_row_counters() {
+        let mut dev = MemDevice::new(&MemTechConfig::Osram(OsramConfig::default_16p()));
+        let mut rng = crate::testkit::Rng::new(3);
+        let mut t = 0;
+        for _ in 0..4_000 {
+            t = dev.access(rng.below(1 << 26), 1 + rng.below(300) as usize, t);
+        }
+        let s = dev.stats();
+        assert!(s.bursts > 0 && s.bytes > 0);
+        assert_eq!(s.activations(), 0);
+        assert_eq!(s.row_hits, 0);
+        assert_eq!(s.row_misses, 0);
+        assert_eq!(s.row_conflicts, 0);
+        assert_eq!(s.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn osram_random_equals_stream_per_word() {
+        // No row dynamics: a random word costs the same as a
+        // sequential word, unlike any row-buffer device.
+        let cfg = MemTechConfig::Osram(OsramConfig::default_16p());
+        let mut seq = MemDevice::new(&cfg);
+        let mut t = 0;
+        for i in 0u64..1_000 {
+            t = seq.access(i * 64, 64, t);
+        }
+        let mut rnd = MemDevice::new(&cfg);
+        let mut rng = crate::testkit::Rng::new(11);
+        let mut t = 0;
+        for _ in 0..1_000 {
+            t = rnd.access(rng.below(1 << 24) / 64 * 64, 64, t);
+        }
+        // FIFO chaining serializes both identically; the port spread
+        // differs only by interleave, so the totals stay close.
+        let (a, b) = (seq.makespan(), rnd.makespan());
+        assert!(a.abs_diff(b) <= a / 2, "seq {a} vs random {b}");
+    }
+
+    #[test]
+    fn osram_reset_restores_fresh_state() {
+        let mut dev = OpticalSram::new(OsramConfig::default_16p());
+        MemoryDevice::access(&mut dev, 0, 4096, 0);
+        MemoryDevice::reset(&mut dev);
+        assert_eq!(MemoryDevice::stats(&dev), &DramStats::default());
+        assert_eq!(MemoryDevice::makespan(&dev), 0);
+    }
+
+    #[test]
+    fn split_for_workers_matches_legacy_channel_split() {
+        let mut quad = DramConfig::default_ddr4();
+        quad.channels = 4;
+        let cfg = MemTechConfig::Ddr4(quad);
+        assert_eq!(cfg.split_for_workers(1).parallel_units(), 4);
+        assert_eq!(cfg.split_for_workers(2).parallel_units(), 2);
+        assert_eq!(cfg.split_for_workers(3).parallel_units(), 1);
+        assert_eq!(cfg.split_for_workers(8).parallel_units(), 1);
+
+        let hbm = MemTechConfig::Hbm2(Hbm2Config::default_u280());
+        assert_eq!(hbm.split_for_workers(4).parallel_units(), 8);
+        let os = MemTechConfig::Osram(OsramConfig::default_16p());
+        assert_eq!(os.split_for_workers(4).parallel_units(), 4);
+    }
+
+    #[test]
+    fn power_proxy_orders_technologies_sensibly() {
+        let ddr = MemTechConfig::default_ddr4();
+        let hbm = MemTechConfig::Hbm2(Hbm2Config::default_u280());
+        let os = MemTechConfig::Osram(OsramConfig::default_16p());
+        // Per unit of peak bandwidth, DDR4 pays the most and the
+        // scratchpad the least.
+        let per_bw = |c: &MemTechConfig| c.power_proxy_mw() as f64 / c.peak_bytes_per_cycle();
+        assert!(per_bw(&ddr) > per_bw(&hbm));
+        assert!(per_bw(&hbm) > per_bw(&os));
+        assert!(os.power_proxy_mw() < ddr.power_proxy_mw());
+    }
+
+    #[test]
+    fn display_summaries_name_the_tech() {
+        assert!(MemTechConfig::default_ddr4().to_string().starts_with("ddr4"));
+        assert!(MemTech::Hbm2
+            .default_config()
+            .to_string()
+            .starts_with("hbm2"));
+        assert!(MemTech::Osram
+            .default_config()
+            .to_string()
+            .starts_with("osram"));
+    }
+}

@@ -17,7 +17,6 @@
 //! ample to rank configurations.
 
 use crate::controller::ControllerConfig;
-use crate::dram::{DramConfig, RowPolicy};
 use crate::fpga::{self, Device, Usage};
 use crate::tensor::{stats, SparseTensor};
 
@@ -173,40 +172,14 @@ impl Estimate {
     }
 }
 
-// ---- DRAM service-time primitives --------------------------------------
-
-/// Effective streaming bandwidth in bytes/cycle: peak derated by the
-/// row-policy cost.  Open page pays one activation per row; closed page
-/// re-activates every burst but overlaps the activates across banks, so
-/// its per-burst time is the activate latency divided by the bank-level
-/// parallelism, floored at the bus occupancy.
-fn stream_bytes_per_cycle(d: &DramConfig) -> f64 {
-    let hit_time = d.t_burst as f64;
-    let avg = match d.row_policy {
-        RowPolicy::Open => {
-            let bursts_per_row = (d.row_bytes / d.burst_bytes) as f64;
-            let miss_time = (d.t_rp + d.t_rcd + d.t_cl + d.t_burst) as f64;
-            (miss_time + (bursts_per_row - 1.0) * hit_time) / bursts_per_row
-        }
-        RowPolicy::Closed => {
-            let act_time = (d.t_rcd + d.t_cl + d.t_burst) as f64;
-            hit_time.max(act_time / (d.banks as f64).max(1.0))
-        }
-    };
-    d.channels as f64 * d.burst_bytes as f64 / avg
-}
-
-/// Latency of one isolated random access: open page assumes a row
-/// conflict (precharge on the critical path); closed page auto-
-/// precharged behind the previous burst, so only the activate remains.
-fn random_access_cycles(d: &DramConfig) -> f64 {
-    match d.row_policy {
-        RowPolicy::Open => (d.t_rp + d.t_rcd + d.t_cl + d.t_burst) as f64,
-        RowPolicy::Closed => (d.t_rcd + d.t_cl + d.t_burst) as f64,
-    }
-}
-
 // ---- The model -----------------------------------------------------------
+//
+// The external-memory service-time primitives (streaming bandwidth,
+// random-access latency, burst occupancy) live on
+// [`crate::mem::MemTechConfig`] as the analytic counterparts of each
+// device model — DDR4 keeps the exact pre-refactor formulas, HBM2
+// applies them to its flattened pseudo-channel geometry, and the
+// optical-SRAM scratchpad has no row dynamics at all.
 
 /// Estimate one full MTTKRP sweep (all modes, Approach 1 with remapping)
 /// for `profile` under `cfg` on `dev` with factor rank 16 (the FROSTT
@@ -223,9 +196,8 @@ pub fn estimate_with_rank(
     dev: &Device,
     rank: usize,
 ) -> Estimate {
-    let d = &cfg.dram;
-    let sbw = stream_bytes_per_cycle(d);
-    let rand_lat = random_access_cycles(d);
+    let sbw = cfg.mem.stream_bytes_per_cycle();
+    let rand_lat = cfg.mem.random_access_cycles();
     let row_bytes = cfg.remapper.elem_bytes; // record width
     let nnz = profile.nnz as f64;
 
@@ -237,8 +209,9 @@ pub fn estimate_with_rank(
         let stream_in = nnz * row_bytes as f64 / sbw;
         // Element-wise stores: per-request setup plus a mostly-conflict
         // DRAM access (the interleaved stream loads keep closing rows).
-        let store_each =
-            cfg.remapper.store_setup_cycles as f64 + 0.9 * rand_lat + 0.1 * d.t_burst as f64;
+        let store_each = cfg.remapper.store_setup_cycles as f64
+            + 0.9 * rand_lat
+            + 0.1 * cfg.mem.burst_occupancy_cycles();
         // Pointer spill: densest-first allocation means the spilled
         // *element* fraction is 1 - coverage(top max_pointers coords).
         let spill_frac = 1.0 - coverage_at(&profile.coverage[mode], cfg.remapper.max_pointers);
@@ -335,11 +308,36 @@ mod tests {
         let p = profile();
         let open = estimate(&p, &base_cfg(), &Device::alveo_u250());
         let mut cfg = base_cfg();
-        cfg.dram.row_policy = crate::dram::RowPolicy::Closed;
+        cfg.mem.ddr4_mut().row_policy = crate::dram::RowPolicy::Closed;
         let closed = estimate(&p, &cfg, &Device::alveo_u250());
         assert_ne!(open.total_cycles(), closed.total_cycles());
         // Closed page never pays a precharge on the random path.
-        assert!(random_access_cycles(&cfg.dram) < random_access_cycles(&base_cfg().dram));
+        assert!(cfg.mem.random_access_cycles() < base_cfg().mem.random_access_cycles());
+    }
+
+    #[test]
+    fn memory_technology_moves_the_estimate() {
+        // Each technology's analytic primitives differ, so swapping the
+        // device under an otherwise identical controller must move the
+        // estimate — memory tech is a real PMS input, not a label.
+        use crate::mem::MemTech;
+        let p = profile();
+        let dev = Device::alveo_u250();
+        let per_tech: Vec<f64> = [MemTech::Ddr4, MemTech::Hbm2, MemTech::Osram]
+            .iter()
+            .map(|&tech| {
+                let mut cfg = base_cfg();
+                cfg.mem = tech.default_config();
+                estimate(&p, &cfg, &dev).total_cycles()
+            })
+            .collect();
+        assert_ne!(per_tech[0], per_tech[1]);
+        assert_ne!(per_tech[0], per_tech[2]);
+        assert_ne!(per_tech[1], per_tech[2]);
+        // The scratchpad has no row-conflict path, so its random-access
+        // latency — the factor-miss driver — beats both DRAM techs.
+        let os = crate::mem::MemTech::Osram.default_config();
+        assert!(os.random_access_cycles() < base_cfg().mem.random_access_cycles());
     }
 
     #[test]
@@ -387,10 +385,10 @@ mod tests {
 
     #[test]
     fn stream_bandwidth_between_half_and_full_peak() {
-        let d = DramConfig::default_ddr4();
-        let s = stream_bytes_per_cycle(&d);
-        assert!(s > 0.5 * d.peak_bytes_per_cycle());
-        assert!(s <= d.peak_bytes_per_cycle());
+        let cfg = crate::mem::MemTechConfig::default_ddr4();
+        let s = cfg.stream_bytes_per_cycle();
+        assert!(s > 0.5 * cfg.peak_bytes_per_cycle());
+        assert!(s <= cfg.peak_bytes_per_cycle());
     }
 
     #[test]

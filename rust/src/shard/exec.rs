@@ -131,24 +131,19 @@ fn shard_mttkrp(
     out
 }
 
-/// Per-worker controller configuration.  A configured multi-channel
-/// bus is split equally across the K instances (rounded down to a
-/// power of two for the address map); once the split reaches one
-/// channel, each further instance models its *own* single-channel
-/// group — the paper's multi-SLR scale-out layout (one DIMM per SLR),
-/// not K instances time-sharing one bus.  Deployments on a fixed
-/// device must therefore bound K by the device's channel count, which
-/// is exactly what [`crate::dse::Evaluator::ShardedSim`] enforces.
-/// Every other knob models per-instance on-chip resources and stays
-/// as configured.
+/// Per-worker controller configuration.  The memory device's parallel
+/// units (DDR4 channels, HBM2 pseudo-channels, oSRAM ports) are split
+/// equally across the K instances (rounded down to a power of two for
+/// the address map); once the split reaches one unit, each further
+/// instance models its *own* single-unit group — the paper's multi-SLR
+/// scale-out layout (one DIMM per SLR), not K instances time-sharing
+/// one bus.  Deployments on a fixed device must therefore bound K by
+/// the device's unit count, which is exactly what
+/// [`crate::dse::Evaluator::ShardedSim`] enforces.  Every other knob
+/// models per-instance on-chip resources and stays as configured.
 fn worker_cfg(cfg: &ControllerConfig, k: usize) -> ControllerConfig {
     let mut c = cfg.clone();
-    let share = (c.dram.channels / k.max(1)).max(1);
-    c.dram.channels = if share.is_power_of_two() {
-        share
-    } else {
-        share.next_power_of_two() / 2
-    };
+    c.mem = c.mem.split_for_workers(k);
     c
 }
 
@@ -774,14 +769,14 @@ mod tests {
         // explicitly single-channel controller — not on the full bus.
         let (t, factors) = setup(18, 4_000);
         let mut cfg = ControllerConfig::default_for(t.record_bytes());
-        cfg.dram.channels = 4;
+        cfg.mem.ddr4_mut().channels = 4;
         let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), 8);
         let run = mttkrp_sharded(&t, &factors, 0, 4, Some((&cfg, &layout)));
 
         let plan = ShardPlan::balance(&t, 0, 4);
         let parts = partition_indices(&t, &plan);
         let mut single = cfg.clone();
-        single.dram.channels = 1;
+        single.mem.ddr4_mut().channels = 1;
         let mut want = 0u64;
         let mut offset = 0usize;
         for (spec, zs) in plan.shards.iter().zip(&parts) {
@@ -864,9 +859,12 @@ mod tests {
         ] {
             for &(num_dmas, buffer_bytes) in &[(1usize, 1024usize), (2, 4096)] {
                 let mut cfg = base.clone();
-                cfg.dram.channels = channels;
-                cfg.dram.banks = banks;
-                cfg.dram.row_policy = policy;
+                {
+                    let dram = cfg.mem.ddr4_mut();
+                    dram.channels = channels;
+                    dram.banks = banks;
+                    dram.row_policy = policy;
+                }
                 cfg.dma.num_dmas = num_dmas;
                 cfg.dma.buffer_bytes = buffer_bytes;
                 cands.push(cfg);
@@ -882,7 +880,7 @@ mod tests {
                 got,
                 sweep.makespan_with(cfg, EngineKind::Event),
                 "timing makespan diverged for {:?}/{:?}",
-                cfg.dram,
+                cfg.mem,
                 cfg.dma
             );
             assert_eq!(got, sweep.makespan_with(cfg, EngineKind::Lockstep));
@@ -912,8 +910,8 @@ mod tests {
                 cfg.cache.line_bytes = line_bytes;
                 cfg.cache.num_lines = num_lines;
                 cfg.cache.assoc = assoc;
-                cfg.dram.channels = channels;
-                cfg.dram.row_policy = policy;
+                cfg.mem.ddr4_mut().channels = channels;
+                cfg.mem.ddr4_mut().row_policy = policy;
                 cfg.dma.num_dmas = num_dmas;
                 cands.push(cfg);
             }

@@ -18,11 +18,11 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 
 use crate::controller::{ControllerConfig, RemapperConfig};
-use crate::dram::DramConfig;
+use crate::mem::MemTechConfig;
 
 /// Key of one memoized remap-pass simulation: the only knobs the pass
 /// is sensitive to.
-pub type RemapKey = (usize, DramConfig, RemapperConfig);
+pub type RemapKey = (usize, MemTechConfig, RemapperConfig);
 
 /// Interior-mutable memo of remap-pass cycles per [`RemapKey`], shared
 /// across every candidate a sweep scores.
@@ -48,7 +48,7 @@ impl RemapMemo {
         cfg: &ControllerConfig,
         simulate: impl FnOnce() -> u64,
     ) -> u64 {
-        let key: RemapKey = (mode, cfg.dram.clone(), cfg.remapper);
+        let key: RemapKey = (mode, cfg.mem.clone(), cfg.remapper);
         if let Some(&c) = self.map.lock().expect("remap memo poisoned").get(&key) {
             return c;
         }
@@ -100,7 +100,7 @@ mod tests {
         let mut spilly = cfg.clone();
         spilly.remapper.max_pointers = 4;
         let mut wide = cfg.clone();
-        wide.dram.channels = 4;
+        wide.mem.ddr4_mut().channels = 4;
         assert_eq!(memo.cycles(0, &cfg, || 1), 1);
         assert_eq!(memo.cycles(1, &cfg, || 2), 2);
         assert_eq!(memo.cycles(0, &spilly, || 3), 3);

@@ -251,7 +251,7 @@ fn explore_search_and_top_k_flags_shape_the_report() {
         assert!(text.contains(&format!("  {i}: ")), "missing top entry {i}: {text}");
     }
     assert!(
-        text.contains("pareto frontier (cycles vs on-chip blocks):"),
+        text.contains("pareto frontier (cycles vs on-chip blocks vs memory power):"),
         "{text}"
     );
     assert!(text.contains("best:"), "{text}");
@@ -394,6 +394,80 @@ fn help_mentions_dram_timing_knobs() {
     assert!(text.contains("--row-policy"), "{text}");
     assert!(text.contains("--dram-banks"), "{text}");
     assert!(text.contains("DRAM timing"), "{text}");
+    assert!(text.contains("--memory-tech"), "{text}");
+    assert!(text.contains("--mem-techs"), "{text}");
+}
+
+#[test]
+fn memory_tech_option_selects_the_technology() {
+    // Each technology is accepted, reported in the config summary, and
+    // actually changes the simulated total (the devices time bursts
+    // differently by construction).
+    let mut totals = Vec::new();
+    for tech in ["ddr4", "hbm2", "osram"] {
+        let (ok, text) =
+            run(&[&["simulate"], SMALL, &["--rank", "8", "--memory-tech", tech]].concat());
+        assert!(ok, "{text}");
+        assert!(text.contains(tech), "summary must name the tech: {text}");
+        let total = text
+            .lines()
+            .find(|l| l.starts_with("total cycles:"))
+            .expect("total cycles line")
+            .to_string();
+        totals.push(total);
+    }
+    assert_ne!(totals[0], totals[1], "hbm2 must move the total vs ddr4");
+    assert_ne!(totals[0], totals[2], "osram must move the total vs ddr4");
+}
+
+#[test]
+fn memory_tech_rejects_unknown_and_conflicting_dram_flags() {
+    let (ok, text) = run(&[&["simulate"], SMALL, &["--memory-tech", "hbm3"]].concat());
+    assert!(!ok);
+    assert!(text.contains("ddr4|hbm2|osram"), "{text}");
+    // DDR4-shaped flags under a non-DDR4 technology are a clear error,
+    // not a silent ignore.
+    let (ok, text) = run(&[
+        &["simulate"],
+        SMALL,
+        &["--rank", "8", "--memory-tech", "osram", "--dram-banks", "8"],
+    ]
+    .concat());
+    assert!(!ok);
+    assert!(text.contains("--dram-banks"), "{text}");
+    assert!(text.contains("osram"), "{text}");
+    // The same flags under explicit DDR4 keep working.
+    let (ok, text) = run(&[
+        &["simulate"],
+        SMALL,
+        &["--rank", "8", "--memory-tech", "ddr4", "--dram-banks", "8"],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("total cycles:"), "{text}");
+}
+
+#[test]
+fn explore_mem_techs_all_reports_cross_technology_frontier() {
+    // Sweeping all three technologies on an HBM-capable board must
+    // produce a frontier and a best point that names its technology
+    // and power proxy.
+    let (ok, text) = run(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "pms", "--search", "joint", "--device", "u280", "--mem-techs", "all"],
+    ]
+    .concat());
+    assert!(ok, "{text}");
+    assert!(text.contains("memory:"), "{text}");
+    assert!(text.contains("mW"), "{text}");
+    assert!(
+        text.contains("pareto frontier (cycles vs on-chip blocks vs memory power):"),
+        "{text}"
+    );
+    let (ok, text) = run(&[&["explore"], SMALL, &["--mem-techs", "bogus"]].concat());
+    assert!(!ok);
+    assert!(text.contains("mem-techs"), "{text}");
 }
 
 #[test]

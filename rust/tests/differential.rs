@@ -369,9 +369,12 @@ fn sharded_sweep_timing_grid_matches_per_candidate_makespans() {
         ] {
             for &(num_dmas, buffer_bytes) in &[(1usize, 1024usize), (2, 4096)] {
                 let mut cfg = base.clone();
-                cfg.dram.channels = channels;
-                cfg.dram.banks = banks;
-                cfg.dram.row_policy = policy;
+                {
+                    let dram = cfg.mem.ddr4_mut();
+                    dram.channels = channels;
+                    dram.banks = banks;
+                    dram.row_policy = policy;
+                }
                 cfg.dma.num_dmas = num_dmas;
                 cfg.dma.buffer_bytes = buffer_bytes;
                 cands.push(cfg);
@@ -416,8 +419,11 @@ fn joint_sweep_core_scores_cross_products_bit_identically() {
             ] {
                 let mut cfg = base.clone();
                 cfg.cache = cc;
-                cfg.dram.channels = channels;
-                cfg.dram.row_policy = policy;
+                {
+                    let dram = cfg.mem.ddr4_mut();
+                    dram.channels = channels;
+                    dram.row_policy = policy;
+                }
                 cfg.dma.num_dmas = num_dmas;
                 cfgs.push(cfg);
             }
@@ -434,7 +440,7 @@ fn joint_sweep_core_scores_cross_products_bit_identically() {
             assert_eq!(
                 cycles, want,
                 "joint point diverged: {:?}/{:?}",
-                cfg.cache, cfg.dram
+                cfg.cache, cfg.mem
             );
         }
     });

@@ -5,7 +5,7 @@
 use ptmc::controller::{Access, ControllerConfig, MemLayout, MemoryController};
 use ptmc::cpd::linalg::Mat;
 use ptmc::cpd::{cp_als, AlsConfig, MttkrpBackend, NativeBackend, SimBackend};
-use ptmc::dse::{explore, Evaluator, Grids};
+use ptmc::dse::{explore, Evaluator, EvaluatorBuilder, Grids};
 use ptmc::engine::EngineKind;
 use ptmc::fpga::Device;
 use ptmc::mttkrp::{approach1, oracle, remap_exec, Tracing};
@@ -102,7 +102,9 @@ fn dse_winner_beats_loser_when_resimulated() {
         },
     );
     // Re-simulate best + a deliberately bad config with the cycle model.
-    let sim = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
+    let sim = EvaluatorBuilder::new()
+        .engine(EngineKind::Event)
+        .cycle_sim(&t, &factors);
     let best_cycles = sim.score(&ex.best.cfg, &dev).unwrap();
     let mut bad = base.clone();
     bad.cache.num_lines = 64;
@@ -125,7 +127,9 @@ fn pms_tracks_simulator_on_fresh_tensor() {
     let dev = Device::alveo_u250();
     let cfg = ControllerConfig::default_for(t.record_bytes());
     let est = pms::estimate_with_rank(&profile, &cfg, &dev, 16).total_cycles();
-    let sim = Evaluator::cycle_sim(&t, &factors, EngineKind::Lockstep)
+    let sim = EvaluatorBuilder::new()
+        .engine(EngineKind::Lockstep)
+        .cycle_sim(&t, &factors)
         .score(&cfg, &dev)
         .unwrap();
     let rel = (est - sim).abs() / sim;

@@ -11,9 +11,10 @@
 use ptmc::controller::{Access, ControllerConfig, MemLayout, MemoryController};
 use ptmc::cpd::linalg::Mat;
 use ptmc::dram::RowPolicy;
-use ptmc::dse::{explore, explore_with, Evaluator, Grids, SearchOptions, SearchStrategy};
+use ptmc::dse::{explore, explore_with, EvaluatorBuilder, Grids, SearchOptions, SearchStrategy};
 use ptmc::engine::{EngineKind, JointIndex, PreparedTrace, TimingCandidate};
 use ptmc::fpga::Device;
+use ptmc::mem::MemTech;
 use ptmc::shard::{partition_indices, shard_trace, ShardPlan, ShardedSweep};
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
 use ptmc::tensor::SparseTensor;
@@ -67,9 +68,12 @@ fn random_joint_grid(rng: &mut Rng, base: &ControllerConfig) -> Vec<ControllerCo
             cfg.cache.line_bytes = LINE_BYTES[rng.range(0, LINE_BYTES.len())];
             cfg.cache.num_lines = num_lines;
             cfg.cache.assoc = assoc;
-            cfg.dram.channels = channels;
-            cfg.dram.banks = banks;
-            cfg.dram.row_policy = policy;
+            {
+                let dram = cfg.mem.ddr4_mut();
+                dram.channels = channels;
+                dram.banks = banks;
+                dram.row_policy = policy;
+            }
             cfg.dma.num_dmas = num_dmas;
             cfg.dma.buffer_bytes = buffer_bytes;
             cfg.remapper.max_pointers = POINTERS[rng.range(0, POINTERS.len())];
@@ -115,7 +119,7 @@ fn joint_sweep_is_bit_identical_on_shard_traces() {
                     event_cycles(&prepared, cfg),
                     "joint sweep diverged from event replay for {:?}/{:?}/{:?}",
                     cfg.cache,
-                    cfg.dram,
+                    cfg.mem,
                     cfg.dma
                 );
             }
@@ -185,7 +189,7 @@ fn joint_sweep_is_bit_identical_on_adversarial_mixes() {
                 event_cycles(&prepared, cfg),
                 "adversarial joint sweep diverged for {:?}/{:?}",
                 cfg.cache,
-                cfg.dram
+                cfg.mem
             );
         }
     });
@@ -248,13 +252,18 @@ fn joint_explore_never_worse_than_coordinate_on_random_tensors() {
             dram_banks: vec![16],
             dram_row_policy: vec![RowPolicy::Open],
             remap_max_pointers: vec![1 << 10, 1 << 18],
+            mem_techs: vec![MemTech::Ddr4],
         };
         let joint = SearchOptions {
             strategy: SearchStrategy::Joint,
             top_k: 3,
         };
-        let ev_grid = Evaluator::cycle_sim(&t, &factors, EngineKind::Grid);
-        let ev_event = Evaluator::cycle_sim(&t, &factors, EngineKind::Event);
+        let ev_grid = EvaluatorBuilder::new()
+            .engine(EngineKind::Grid)
+            .cycle_sim(&t, &factors);
+        let ev_event = EvaluatorBuilder::new()
+            .engine(EngineKind::Event)
+            .cycle_sim(&t, &factors);
         let ex_coord = explore(&base, &grids, &dev, &ev_grid);
         let ex_joint = explore_with(&base, &grids, &dev, &ev_grid, &joint);
         assert!(

@@ -62,9 +62,12 @@ fn default_timing_grid(base: &ControllerConfig) -> Vec<TimingCandidate> {
         for &banks in &g.dram_banks {
             for &row_policy in &g.dram_row_policy {
                 let mut cfg = base.clone();
-                cfg.dram.channels = channels;
-                cfg.dram.banks = banks;
-                cfg.dram.row_policy = row_policy;
+                {
+                    let dram = cfg.mem.ddr4_mut();
+                    dram.channels = channels;
+                    dram.banks = banks;
+                    dram.row_policy = row_policy;
+                }
                 cands.push(TimingCandidate::of(&cfg));
             }
         }
@@ -83,7 +86,7 @@ fn assert_timing_grid_identical(prepared: &PreparedTrace, base: &ControllerConfi
     assert_eq!(runs.len(), cands.len());
     for (cand, run) in cands.iter().zip(&runs) {
         let mut cfg = base.clone();
-        cfg.dram = cand.dram.clone();
+        cfg.mem = cand.mem.clone();
         cfg.dma = cand.dma;
         let mut ctl = MemoryController::new(cfg);
         let want = EngineKind::Event.replay(&mut ctl, prepared);
@@ -236,7 +239,7 @@ fn closed_policy_lanes_report_activate_only_traffic() {
     let cls = GridClassification::classify(prepared.compressed(), &[base.cache]);
     let ops = TimingOps::extract(&cls, 0, prepared.compressed());
     let mut closed = base.clone();
-    closed.dram.row_policy = RowPolicy::Closed;
+    closed.mem.ddr4_mut().row_policy = RowPolicy::Closed;
     let runs = ops.time_grid(&[TimingCandidate::of(&base), TimingCandidate::of(&closed)]);
     assert_eq!(runs[1].dram.row_hits, 0);
     assert_eq!(runs[1].dram.row_conflicts, 0);

@@ -43,7 +43,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use ptmc::bench::{fmt_cycles, fmt_speedup, sized, smoke, Table};
+use ptmc::bench::{fmt_cycles, fmt_speedup, json_section, sized, smoke, upsert_json_section, Table};
 use ptmc::controller::{CacheConfig, ControllerConfig, DmaConfig};
 use ptmc::dram::RowPolicy;
 use ptmc::dse::{explore, explore_with, Evaluator, Grids, SearchOptions, SearchStrategy};
@@ -625,6 +625,15 @@ fn main() {
         eprintln!("warning: failed to write engine_speedup.json: {e}");
     }
     let bench_path = repo_root().join("BENCH_dse.json");
+    // This bench rebuilds the trajectory file wholesale; carry over the
+    // `streaming` section the streaming_scale bench owns, if present.
+    let bench_json = match std::fs::read_to_string(&bench_path)
+        .ok()
+        .and_then(|old| json_section(&old, "streaming"))
+    {
+        Some(streaming) => upsert_json_section(&bench_json, "streaming", &streaming),
+        None => bench_json,
+    };
     if let Err(e) = std::fs::write(&bench_path, &bench_json) {
         eprintln!("warning: failed to write {}: {e}", bench_path.display());
     } else {

@@ -1,0 +1,167 @@
+//! PR-7 out-of-core scaling bench: prove the bounded-memory pipeline
+//! at the paper's FROSTT scale (Table 2 tops out at 144M nnz).
+//!
+//! Full mode synthesizes a 100M-nnz Zipf tensor through the dedup-free
+//! streamed generator, plans shards from the one-pass coordinate
+//! histogram, runs one CP-ALS iteration (`decompose`), and a
+//! coordinate DSE (`explore`, analytic PMS evaluator) — asserting the
+//! process's peak RSS stays under the 4 GiB budget the CLI's
+//! `--memory-budget 4g` would enforce.  Smoke mode (`PTMC_BENCH_SMOKE`)
+//! shrinks to 2M nnz; the RSS assertion still runs (trivially) so the
+//! CI job exercises the same code path.
+//!
+//! Emits a `streaming` section (ingest nnz/s, peak RSS) into the
+//! repo-root `BENCH_dse.json`, preserving the sections the dse_engines
+//! bench owns.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use ptmc::bench::{json_section, sized, smoke, upsert_json_section};
+use ptmc::controller::ControllerConfig;
+use ptmc::cpd::{cp_als, AlsConfig, NativeBackend};
+use ptmc::dse::{explore_with, EvaluatorBuilder, Grids, SearchOptions, SearchStrategy};
+use ptmc::fpga::Device;
+use ptmc::mem::MemTech;
+use ptmc::pms::TensorProfile;
+use ptmc::shard::CoordHistogram;
+use ptmc::tensor::frostt::DEFAULT_BLOCK_NNZ;
+use ptmc::tensor::synth::{generate_streamed, Profile, SynthConfig};
+use ptmc::tensor::Coord;
+use ptmc::util::{format_size, peak_rss_bytes};
+
+/// The acceptance budget: 4 GiB peak RSS for the full 100M-nnz run.
+const BUDGET_BYTES: u64 = 4 << 30;
+
+fn repo_root() -> PathBuf {
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("ROADMAP.md").exists() {
+            return dir;
+        }
+        if !dir.pop() {
+            return std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        }
+    }
+}
+
+fn main() {
+    let nnz = sized(100_000_000, 2_000_000);
+    let rank = 16usize;
+    println!(
+        "streaming scale: {nnz} nnz, rank {rank}, budget {}",
+        format_size(BUDGET_BYTES)
+    );
+
+    // Phase 1: dedup-free streamed synthesis (the 100M-nnz ingest).
+    let t0 = Instant::now();
+    let mut t = generate_streamed(&SynthConfig {
+        dims: vec![1_000_000, 1_000_000, 1_000_000],
+        nnz,
+        profile: Profile::Zipf { alpha_milli: 1200 },
+        seed: 7,
+    });
+    let synth_s = t0.elapsed().as_secs_f64();
+    let nnz_per_s = nnz as f64 / synth_s;
+    println!("  synthesize: {synth_s:.1}s ({nnz_per_s:.3e} nnz/s)");
+
+    // Phase 2: shard planning from the one-pass histogram sketch, fed
+    // in ingestion-sized blocks as streamed parsing would.
+    let t0 = Instant::now();
+    let mut hist = CoordHistogram::new();
+    let mut at = 0;
+    while at < t.nnz() {
+        let hi = (at + DEFAULT_BLOCK_NNZ).min(t.nnz());
+        let cols: Vec<Vec<Coord>> = (0..t.n_modes())
+            .map(|m| t.mode_col(m)[at..hi].to_vec())
+            .collect();
+        hist.observe(&cols);
+        at = hi;
+    }
+    for mode in 0..t.n_modes() {
+        let plan = hist.plan_for_dim(mode, t.dims()[mode], 4);
+        println!(
+            "  shard plan mode {mode}: imbalance {:.3} over 4 shards",
+            plan.imbalance()
+        );
+    }
+    println!("  shard planning: {:.1}s", t0.elapsed().as_secs_f64());
+
+    // Phase 3: one CP-ALS iteration (the `decompose` acceptance leg).
+    let t0 = Instant::now();
+    let als = AlsConfig {
+        rank,
+        max_iters: 1,
+        tol: 0.0,
+        ..AlsConfig::default()
+    };
+    let model = cp_als(&mut t, &als, &mut NativeBackend);
+    let decompose_s = t0.elapsed().as_secs_f64();
+    println!(
+        "  decompose (1 iter, native): {decompose_s:.1}s, fit {:.4}",
+        model.final_fit()
+    );
+
+    // Phase 4: coordinate DSE over the analytic PMS evaluator (the
+    // `explore` acceptance leg; profile measurement is the O(nnz) part).
+    let t0 = Instant::now();
+    let profile = TensorProfile::measure(&t);
+    let base = ControllerConfig::default_for(t.record_bytes());
+    let dev = Device::alveo_u250();
+    let eval = EvaluatorBuilder::new()
+        .rank(rank)
+        .memory_budget(Some(BUDGET_BYTES))
+        .pms(&profile);
+    let grids = Grids {
+        mem_techs: vec![MemTech::Ddr4],
+        ..Grids::default()
+    };
+    let opts = SearchOptions {
+        strategy: SearchStrategy::Coordinate,
+        top_k: 1,
+    };
+    let ex = explore_with(&base, &grids, &dev, &eval, &opts);
+    let explore_s = t0.elapsed().as_secs_f64();
+    println!(
+        "  explore (coordinate, pms): {explore_s:.1}s, {} configs visited",
+        ex.visited.len()
+    );
+
+    // The acceptance assertion: the whole pipeline stayed under budget.
+    let peak = peak_rss_bytes();
+    match peak {
+        Some(p) => {
+            println!("  peak RSS: {} (budget {})", format_size(p), format_size(BUDGET_BYTES));
+            assert!(
+                p <= BUDGET_BYTES,
+                "peak RSS {} exceeded the {} out-of-core budget",
+                format_size(p),
+                format_size(BUDGET_BYTES)
+            );
+        }
+        None => println!("  peak RSS: unavailable on this platform (budget not checked)"),
+    }
+
+    let section = format!(
+        "{{\n    \"pr\": 7,\n    \"smoke\": {},\n    \"nnz\": {nnz},\n    \
+         \"rank\": {rank},\n    \"synth_s\": {synth_s:.1},\n    \
+         \"synth_nnz_per_s\": {nnz_per_s:.3e},\n    \
+         \"decompose_iters\": 1,\n    \"decompose_s\": {decompose_s:.1},\n    \
+         \"explore_s\": {explore_s:.1},\n    \"explore_configs\": {},\n    \
+         \"budget_bytes\": {BUDGET_BYTES},\n    \"peak_rss_bytes\": {},\n    \
+         \"within_budget\": {}\n  }}",
+        smoke(),
+        ex.visited.len(),
+        peak.map_or_else(|| "null".to_string(), |p| p.to_string()),
+        peak.map_or(true, |p| p <= BUDGET_BYTES),
+    );
+    let bench_path = repo_root().join("BENCH_dse.json");
+    let old = std::fs::read_to_string(&bench_path).unwrap_or_default();
+    let merged = upsert_json_section(&old, "streaming", &section);
+    debug_assert!(json_section(&merged, "streaming").is_some());
+    if let Err(e) = std::fs::write(&bench_path, &merged) {
+        eprintln!("warning: failed to write {}: {e}", bench_path.display());
+    } else {
+        println!("[streaming section written to {}]", bench_path.display());
+    }
+}

@@ -145,6 +145,134 @@ impl Table {
     }
 }
 
+/// Extract the value of a top-level `"key": <value>` member from a
+/// JSON object text, by balanced-brace scan (no JSON parser in the
+/// offline build).  Returns the raw value text (object, array, string,
+/// or scalar).  Used by the bench binaries that share one trajectory
+/// file (`BENCH_dse.json`) so each can preserve the sections the
+/// others own.
+pub fn json_section(text: &str, key: &str) -> Option<String> {
+    let trimmed = text.trim();
+    if !trimmed.starts_with('{') {
+        return None;
+    }
+    top_level_member(trimmed, key).map(|(s, e)| trimmed[s..e].to_string())
+}
+
+/// Insert or replace the top-level `"key": <value>` member of a JSON
+/// object text, preserving every other member verbatim.  A missing or
+/// non-object `text` produces a fresh one-member object.
+pub fn upsert_json_section(text: &str, key: &str, value: &str) -> String {
+    let trimmed = text.trim();
+    if trimmed.is_empty() || !trimmed.starts_with('{') {
+        return format!("{{\n  \"{key}\": {value}\n}}\n");
+    }
+    if let Some((vstart, vend)) = top_level_member(trimmed, key) {
+        return format!("{}{}{}\n", &trimmed[..vstart], value, &trimmed[vend..]);
+    }
+    let close = match trimmed.rfind('}') {
+        Some(c) => c,
+        None => return format!("{{\n  \"{key}\": {value}\n}}\n"),
+    };
+    let body = trimmed[..close].trim_end();
+    let comma = if body.ends_with('{') { "" } else { "," };
+    format!("{body}{comma}\n  \"{key}\": {value}\n}}\n")
+}
+
+/// Byte index one past the closing quote of the string starting at
+/// `start` (which must index a `"`), honoring backslash escapes.
+fn skip_string(b: &[u8], start: usize) -> usize {
+    let mut i = start + 1;
+    while i < b.len() {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    b.len()
+}
+
+/// Byte range `(start, end)` of the value of the top-level member
+/// named `key`, or None.
+fn top_level_member(text: &str, key: &str) -> Option<(usize, usize)> {
+    let b = text.as_bytes();
+    let mut i = 0usize;
+    let mut depth = 0i32;
+    while i < b.len() {
+        match b[i] {
+            b'"' => {
+                let end = skip_string(b, i);
+                if depth == 1 && &text[i + 1..end - 1] == key {
+                    let mut j = end;
+                    while j < b.len() && b[j].is_ascii_whitespace() {
+                        j += 1;
+                    }
+                    if j < b.len() && b[j] == b':' {
+                        let mut k = j + 1;
+                        while k < b.len() && b[k].is_ascii_whitespace() {
+                            k += 1;
+                        }
+                        return Some((k, value_end(b, k)));
+                    }
+                }
+                i = end;
+            }
+            b'{' | b'[' => {
+                depth += 1;
+                i += 1;
+            }
+            b'}' | b']' => {
+                depth -= 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+/// Byte index one past the value starting at `start`: a balanced
+/// object/array, a string, or a scalar running to the next top-level
+/// comma / closing brace.
+fn value_end(b: &[u8], start: usize) -> usize {
+    match b.get(start) {
+        Some(b'{') | Some(b'[') => {
+            let mut depth = 0i32;
+            let mut i = start;
+            while i < b.len() {
+                match b[i] {
+                    b'"' => {
+                        i = skip_string(b, i);
+                        continue;
+                    }
+                    b'{' | b'[' => depth += 1,
+                    b'}' | b']' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return i + 1;
+                        }
+                    }
+                    _ => {}
+                }
+                i += 1;
+            }
+            b.len()
+        }
+        Some(b'"') => skip_string(b, start),
+        _ => {
+            let mut i = start;
+            while i < b.len() && b[i] != b',' && b[i] != b'}' && b[i] != b'\n' {
+                i += 1;
+            }
+            while i > start && b[i - 1].is_ascii_whitespace() {
+                i -= 1;
+            }
+            i
+        }
+    }
+}
+
 /// Format a cycle count with thousands separators.
 pub fn fmt_cycles(c: u64) -> String {
     let s = c.to_string();
@@ -203,5 +331,42 @@ mod tests {
         assert_eq!(fmt_cycles(1234567), "1_234_567");
         assert_eq!(fmt_cycles(42), "42");
         assert_eq!(fmt_speedup(2.5), "2.50x");
+    }
+
+    #[test]
+    fn upsert_creates_object_from_nothing() {
+        let out = upsert_json_section("", "streaming", "{\n    \"nnz\": 5\n  }");
+        assert_eq!(json_section(&out, "streaming"), Some("{\n    \"nnz\": 5\n  }".into()));
+    }
+
+    #[test]
+    fn upsert_appends_to_existing_object_preserving_members() {
+        let base = "{\n  \"bench\": \"dse_engines\",\n  \"nested\": {\n    \"a\": [1, 2]\n  }\n}\n";
+        let out = upsert_json_section(base, "streaming", "{ \"nnz_per_s\": 1.5e6 }");
+        assert_eq!(json_section(&out, "bench"), Some("\"dse_engines\"".into()));
+        assert_eq!(
+            json_section(&out, "nested"),
+            Some("{\n    \"a\": [1, 2]\n  }".into())
+        );
+        assert_eq!(
+            json_section(&out, "streaming"),
+            Some("{ \"nnz_per_s\": 1.5e6 }".into())
+        );
+    }
+
+    #[test]
+    fn upsert_replaces_existing_section_in_place() {
+        let base = "{\n  \"streaming\": { \"old\": true },\n  \"keep\": 42\n}\n";
+        let out = upsert_json_section(base, "streaming", "{ \"new\": 1 }");
+        assert_eq!(json_section(&out, "streaming"), Some("{ \"new\": 1 }".into()));
+        assert_eq!(json_section(&out, "keep"), Some("42".into()));
+        assert!(!out.contains("old"), "stale section must be gone");
+    }
+
+    #[test]
+    fn section_lookup_ignores_nested_keys_and_brace_strings() {
+        let text = "{\n  \"outer\": { \"target\": \"inner{]\" },\n  \"target\": [1, {\"x\": 2}]\n}";
+        assert_eq!(json_section(text, "target"), Some("[1, {\"x\": 2}]".into()));
+        assert_eq!(json_section(text, "missing"), None);
     }
 }

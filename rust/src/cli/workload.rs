@@ -3,7 +3,7 @@
 //! tensor (`--synth uniform|zipf|clustered`, `--dims`, `--nnz`, `--seed`).
 
 use super::{Args, CliError};
-use crate::tensor::synth::{generate, Profile, SynthConfig};
+use crate::tensor::synth::{generate, generate_streamed, Profile, SynthConfig};
 use crate::tensor::{frostt, SparseTensor};
 
 /// Option names consumed by [`tensor_from_args`]; include them in the
@@ -23,6 +23,18 @@ pub fn parse_dims(s: &str) -> Result<Vec<usize>, CliError> {
 
 /// Build the tensor a subcommand should operate on.
 pub fn tensor_from_args(args: &Args) -> Result<SparseTensor, Box<dyn std::error::Error>> {
+    tensor_from_args_budgeted(args, None)
+}
+
+/// [`tensor_from_args`] with an optional memory budget (S24): under a
+/// budget, synthetic tensors are drawn through the dedup-free
+/// [`generate_streamed`] (the dedup set alone would dwarf a bounded
+/// budget at 100M nnz).  FROSTT `--input` files always go through the
+/// block-streamed parser ([`frostt::read_tns_file`]), budget or not.
+pub fn tensor_from_args_budgeted(
+    args: &Args,
+    budget: Option<u64>,
+) -> Result<SparseTensor, Box<dyn std::error::Error>> {
     if let Some(path) = args.get("input") {
         return Ok(frostt::read_tns_file(std::path::Path::new(path))?);
     }
@@ -41,12 +53,17 @@ pub fn tensor_from_args(args: &Args) -> Result<SparseTensor, Box<dyn std::error:
         },
         other => return Err(Box::new(CliError(format!("unknown --synth {other:?}")))),
     };
-    Ok(generate(&SynthConfig {
+    let cfg = SynthConfig {
         dims,
         nnz,
         profile,
         seed,
-    }))
+    };
+    Ok(if budget.is_some() {
+        generate_streamed(&cfg)
+    } else {
+        generate(&cfg)
+    })
 }
 
 #[cfg(test)]

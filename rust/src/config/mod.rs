@@ -36,6 +36,11 @@
 //!
 //! The `[dse]` section configures the explore subcommand's search
 //! layer (overridden by `--search` / `--top-k` on the command line).
+//!
+//! The parser is strict, mirroring the CLI's unknown-option handling:
+//! sections and keys outside the known schema are a [`ParseError`]
+//! naming the offending line, so typos fail loudly instead of running
+//! the experiment with silent defaults.
 
 use std::collections::HashMap;
 
@@ -76,10 +81,34 @@ impl Value {
     }
 }
 
+/// Known sections and their keys.  `Config::parse` rejects anything
+/// outside this table so a typo (`[dram] bank = 8`) fails loudly at
+/// parse time instead of silently running with defaults — mirroring the
+/// CLI's strict unknown-option handling.
+const SCHEMA: &[(&str, &[&str])] = &[
+    ("run", &["rank", "iters", "tol", "ridge", "seed", "backend", "verbose"]),
+    ("cache", &["line_bytes", "num_lines", "assoc", "hit_latency"]),
+    ("dma", &["num_dmas", "buffers_per_dma", "buffer_bytes"]),
+    ("remapper", &["max_pointers", "buffer_bytes"]),
+    ("memory", &["tech"]),
+    ("dram", &["channels", "banks", "row_policy"]),
+    ("dse", &["search", "top_k"]),
+];
+
+fn schema_keys(section: &str) -> Option<&'static [&'static str]> {
+    SCHEMA
+        .iter()
+        .find(|(s, _)| *s == section)
+        .map(|(_, keys)| *keys)
+}
+
 /// Parsed config: section -> key -> value.
 #[derive(Debug, Clone, Default)]
 pub struct Config {
     sections: HashMap<String, HashMap<String, Value>>,
+    /// Source line of each (section, key) pair, for post-parse
+    /// validation errors that must name the offending line.
+    key_lines: HashMap<(String, String), usize>,
 }
 
 /// Parse error with line number.
@@ -142,6 +171,16 @@ impl Config {
                     });
                 }
                 section = line[1..line.len() - 1].trim().to_string();
+                if schema_keys(&section).is_none() {
+                    let known: Vec<&str> = SCHEMA.iter().map(|(s, _)| *s).collect();
+                    return Err(ParseError {
+                        line: line_no,
+                        message: format!(
+                            "unknown section [{section}]; expected one of [{}]",
+                            known.join("], [")
+                        ),
+                    });
+                }
                 cfg.sections.entry(section.clone()).or_default();
                 continue;
             }
@@ -149,13 +188,41 @@ impl Config {
                 line: line_no,
                 message: format!("expected key = value, got {line:?}"),
             })?;
+            let key = k.trim().to_string();
+            match schema_keys(&section) {
+                None => {
+                    return Err(ParseError {
+                        line: line_no,
+                        message: format!("key {key:?} before any [section] header"),
+                    });
+                }
+                Some(keys) if !keys.contains(&key.as_str()) => {
+                    return Err(ParseError {
+                        line: line_no,
+                        message: format!(
+                            "unknown key {key:?} in [{section}]; expected one of {}",
+                            keys.join(", ")
+                        ),
+                    });
+                }
+                Some(_) => {}
+            }
             let value = parse_value(v, line_no)?;
+            cfg.key_lines.insert((section.clone(), key.clone()), line_no);
             cfg.sections
                 .entry(section.clone())
                 .or_default()
-                .insert(k.trim().to_string(), value);
+                .insert(key, value);
         }
         Ok(cfg)
+    }
+
+    /// Source line of a parsed key (1-based), for validation errors.
+    fn line_of(&self, section: &str, key: &str) -> usize {
+        self.key_lines
+            .get(&(section.to_string(), key.to_string()))
+            .copied()
+            .unwrap_or(0)
     }
 
     /// Load from a file path.
@@ -189,12 +256,12 @@ impl Config {
     /// `[remapper]`, `[memory]` and `[dram]` sections, defaulting
     /// unset keys.  `[memory] tech = "ddr4" | "hbm2" | "osram"`
     /// selects the external-memory technology (default DDR4, at each
-    /// technology's default knob set); the `[dram]` keys shape the
-    /// DDR4 configuration and — like every other defaulted key in this
-    /// parser — are ignored when another technology is selected.  (The
-    /// CLI is stricter: `--dram-*` flags combined with a non-DDR4
-    /// `--memory-tech` are rejected with an error.)
-    pub fn controller(&self, elem_bytes: usize) -> ControllerConfig {
+    /// technology's default knob set).  Misconfiguration is an error,
+    /// never a silent default: unknown `tech` / `row_policy` strings
+    /// are rejected, and `[dram]` keys combined with a non-DDR4
+    /// technology fail exactly like the equivalent `--dram-*` CLI
+    /// flags with a non-DDR4 `--memory-tech`.
+    pub fn controller(&self, elem_bytes: usize) -> Result<ControllerConfig, ParseError> {
         let mut c = ControllerConfig::default_for(elem_bytes);
         c.cache.line_bytes = self.usize_or("cache", "line_bytes", c.cache.line_bytes);
         c.cache.num_lines = self.usize_or("cache", "num_lines", c.cache.num_lines);
@@ -208,26 +275,52 @@ impl Config {
             self.usize_or("remapper", "max_pointers", c.remapper.max_pointers);
         c.remapper.buffer_bytes =
             self.usize_or("remapper", "buffer_bytes", c.remapper.buffer_bytes);
-        if let Some(tech) = self
-            .get("memory", "tech")
-            .and_then(Value::as_str)
-            .and_then(|s| s.parse::<MemTech>().ok())
-        {
+        if let Some(v) = self.get("memory", "tech") {
+            let raw = v.as_str().ok_or_else(|| ParseError {
+                line: self.line_of("memory", "tech"),
+                message: "memory tech must be a string: \"ddr4\" | \"hbm2\" | \"osram\""
+                    .to_string(),
+            })?;
+            let tech = raw.parse::<MemTech>().map_err(|_| ParseError {
+                line: self.line_of("memory", "tech"),
+                message: format!("unknown memory tech {raw:?}; expected ddr4 | hbm2 | osram"),
+            })?;
             c.mem = tech.default_config();
         }
         if c.mem.tech() == MemTech::Ddr4 {
             let dram = c.mem.ddr4_mut();
             dram.channels = self.usize_or("dram", "channels", dram.channels);
             dram.banks = self.usize_or("dram", "banks", dram.banks);
-            if let Some(policy) = self
-                .get("dram", "row_policy")
-                .and_then(Value::as_str)
-                .and_then(|p| p.parse().ok())
+            if let Some(v) = self.get("dram", "row_policy") {
+                let raw = v.as_str().ok_or_else(|| ParseError {
+                    line: self.line_of("dram", "row_policy"),
+                    message: "row_policy must be a string: \"open\" | \"closed\"".to_string(),
+                })?;
+                dram.row_policy = raw.parse().map_err(|_| ParseError {
+                    line: self.line_of("dram", "row_policy"),
+                    message: format!("unknown row_policy {raw:?}; expected open | closed"),
+                })?;
+            }
+        } else if let Some(keys) = self.sections.get("dram") {
+            // Same contract as the CLI (PR 6): a `--dram-*` flag under a
+            // non-DDR4 tech is an error, so a `[dram]` key must be too —
+            // not silently dropped.
+            if let Some(key) = keys
+                .keys()
+                .min_by_key(|k| self.line_of("dram", k))
+                .cloned()
             {
-                dram.row_policy = policy;
+                return Err(ParseError {
+                    line: self.line_of("dram", &key),
+                    message: format!(
+                        "[dram] {key} shapes the DDR4 configuration, but the memory tech \
+                         is {}; drop the key or set [memory] tech = \"ddr4\"",
+                        c.mem.tech()
+                    ),
+                });
             }
         }
-        c
+        Ok(c)
     }
 
     /// Build an [`AlsConfig`] from the `[run]` section.
@@ -273,7 +366,7 @@ line_bytes = 128
     #[test]
     fn defaults_fill_missing_keys() {
         let c = Config::parse(SAMPLE).unwrap();
-        let ctl = c.controller(16);
+        let ctl = c.controller(16).unwrap();
         assert_eq!(ctl.cache.num_lines, 4096);
         assert_eq!(ctl.cache.line_bytes, 128);
         assert_eq!(ctl.cache.assoc, 4); // default
@@ -286,37 +379,86 @@ line_bytes = 128
     #[test]
     fn dram_row_policy_key_parses() {
         let c = Config::parse("[dram]\nrow_policy = \"closed\"\nbanks = 8\n").unwrap();
-        let ctl = c.controller(16);
+        let ctl = c.controller(16).unwrap();
         let dram = ctl.mem.ddr4().expect("default tech is DDR4");
         assert_eq!(dram.row_policy, crate::dram::RowPolicy::Closed);
         assert_eq!(dram.banks, 8);
-        // Unknown policy strings fall back to the default silently,
-        // like every other defaulted config key.
-        let c = Config::parse("[dram]\nrow_policy = \"adaptive\"\n").unwrap();
-        assert_eq!(
-            c.controller(16).mem.ddr4().unwrap().row_policy,
-            crate::dram::RowPolicy::Open
-        );
+        // Unknown policy strings are an error naming the line — not a
+        // silent fall-back to the default (a typo'd policy used to run
+        // the whole sweep under open-page without a word).
+        let err = Config::parse("[dram]\nrow_policy = \"adaptive\"\n")
+            .unwrap()
+            .controller(16)
+            .unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.message.contains("adaptive"), "{}", err.message);
+        assert!(err.message.contains("open | closed"), "{}", err.message);
     }
 
     #[test]
     fn memory_tech_key_selects_technology() {
         let c = Config::parse("[memory]\ntech = \"hbm2\"\n").unwrap();
-        assert_eq!(c.controller(16).mem.tech(), MemTech::Hbm2);
-        // [dram] keys shape DDR4 only; under another tech they are
-        // ignored like any other inapplicable key.
-        let c = Config::parse("[memory]\ntech = \"osram\"\n[dram]\nchannels = 4\n").unwrap();
-        assert_eq!(c.controller(16).mem.tech(), MemTech::Osram);
+        assert_eq!(c.controller(16).unwrap().mem.tech(), MemTech::Hbm2);
         let c = Config::parse("[memory]\ntech = \"ddr4\"\n[dram]\nchannels = 4\n").unwrap();
-        assert_eq!(c.controller(16).mem.ddr4().unwrap().channels, 4);
-        // Unknown tech strings fall back to the DDR4 default silently.
-        let c = Config::parse("[memory]\ntech = \"mram\"\n").unwrap();
-        assert_eq!(c.controller(16).mem.tech(), MemTech::Ddr4);
+        assert_eq!(c.controller(16).unwrap().mem.ddr4().unwrap().channels, 4);
+        // Unknown tech strings are an error naming the line, not a
+        // silent fall-back to DDR4.
+        let err = Config::parse("[memory]\ntech = \"mram\"\n")
+            .unwrap()
+            .controller(16)
+            .unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.message.contains("mram"), "{}", err.message);
+        assert!(err.message.contains("ddr4 | hbm2 | osram"), "{}", err.message);
         // No [memory] section at all: the legacy DDR4 path, untouched.
         let c = Config::parse("[dram]\nchannels = 2\n").unwrap();
-        let ctl = c.controller(16);
+        let ctl = c.controller(16).unwrap();
         assert_eq!(ctl.mem.tech(), MemTech::Ddr4);
         assert_eq!(ctl.mem.ddr4().unwrap().channels, 2);
+    }
+
+    #[test]
+    fn dram_keys_under_non_ddr4_tech_error_like_the_cli() {
+        // PR 6 made `--dram-* --memory-tech osram` a CLI error; the
+        // config path used to drop the same keys silently.  Both now
+        // fail, with the config error naming the offending line.
+        let err = Config::parse("[memory]\ntech = \"osram\"\n[dram]\nchannels = 4\n")
+            .unwrap()
+            .controller(16)
+            .unwrap_err();
+        assert_eq!(err.line, 4);
+        assert!(err.message.contains("channels"), "{}", err.message);
+        assert!(err.message.contains("osram"), "{}", err.message);
+        assert!(
+            err.message.contains("shapes the DDR4 configuration"),
+            "{}",
+            err.message
+        );
+        // hbm2 too, and the earliest [dram] key is the one named.
+        let err = Config::parse("[memory]\ntech = \"hbm2\"\n[dram]\nbanks = 8\nchannels = 2\n")
+            .unwrap()
+            .controller(16)
+            .unwrap_err();
+        assert_eq!(err.line, 4);
+        assert!(err.message.contains("banks"), "{}", err.message);
+    }
+
+    #[test]
+    fn unknown_sections_and_keys_are_rejected_with_line_numbers() {
+        // The motivating typo: [dram] bank (no `s`) used to run the
+        // whole experiment with the default geometry, silently.
+        let err = Config::parse("[dram]\nbank = 8\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.message.contains("bank"), "{}", err.message);
+        assert!(err.message.contains("[dram]"), "{}", err.message);
+        // Unknown section names fail at the header line.
+        let err = Config::parse("\n[dramm]\nchannels = 4\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.message.contains("dramm"), "{}", err.message);
+        // Keys before any section header fail too.
+        let err = Config::parse("channels = 4\n").unwrap_err();
+        assert_eq!(err.line, 1);
+        assert!(err.message.contains("before any"), "{}", err.message);
     }
 
     #[test]
@@ -343,8 +485,8 @@ line_bytes = 128
 
     #[test]
     fn underscored_ints_parse() {
-        let c = Config::parse("[a]\nn = 1_000_000\n").unwrap();
-        assert_eq!(c.usize_or("a", "n", 0), 1_000_000);
+        let c = Config::parse("[cache]\nnum_lines = 1_000_000\n").unwrap();
+        assert_eq!(c.usize_or("cache", "num_lines", 0), 1_000_000);
     }
 
     #[test]

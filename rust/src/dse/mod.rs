@@ -48,21 +48,24 @@ use crate::controller::{
 use crate::cpd::linalg::Mat;
 use crate::dram::{DramConfig, RowPolicy};
 use crate::engine::{
-    EngineKind, GridClassification, JointIndex, PreparedTrace, TimingCandidate, TimingOps,
+    CompressedTrace, EngineKind, GridClassification, JointIndex, PreparedTrace, TimingCandidate,
+    TimingOps,
 };
 use crate::fpga::{self, Device};
 use crate::mem::{MemTech, MemTechConfig};
 use crate::mttkrp::{approach1, Tracing};
 use crate::pms::{self, TensorProfile};
-use crate::tensor::{remap, Coord, SparseTensor};
-use crate::util::{parallel_indexed, RemapMemo};
+use crate::tensor::{remap, SparseTensor};
+use crate::util::{parallel_indexed, RemapMemo, SpillCol};
 
 /// Per-mode precomputation of a CycleSim scoring pass under one
 /// remapper pointer budget: the mode column the (simulated) remap pass
 /// reads — a snapshot of the tensor *before* this mode's host remap —
-/// and the compiled Approach-1 trace of the remapped tensor.
+/// and the compiled Approach-1 trace of the remapped tensor.  Under a
+/// memory budget the column spills to disk ([`SpillCol`]) and the
+/// trace keeps only its compressed form.
 struct ModePrep {
-    remap_col: Vec<Coord>,
+    remap_col: SpillCol,
     trace: PreparedTrace,
 }
 
@@ -77,13 +80,44 @@ struct ModePrep {
 /// cell — runs once per key through the shared
 /// [`crate::util::RemapMemo`] (the same type `ShardedSweep` keys its
 /// remap memo with).
-#[derive(Default)]
 pub struct SimMemo {
     prep: Mutex<Option<Arc<Vec<ModePrep>>>>,
     remap: RemapMemo,
+    /// Memory policy (S24): `Some(budget)` enables the bounded-memory
+    /// prep — remap columns spill to disk and per-mode traces retain
+    /// only the compressed view (unless the replay core needs raw).
+    budget: Option<u64>,
+    /// Whether prep must retain the raw access list alongside the
+    /// compressed trace.  Only the Lockstep core replays raw; the
+    /// Event/Grid cores (and every batch path) consume the compressed
+    /// trace exclusively, so under a budget raw is dropped.
+    keep_raw: bool,
+}
+
+impl Default for SimMemo {
+    /// Unbudgeted: everything in RAM, raw traces retained.
+    fn default() -> Self {
+        SimMemo {
+            prep: Mutex::new(None),
+            remap: RemapMemo::new(),
+            budget: None,
+            keep_raw: true,
+        }
+    }
 }
 
 impl SimMemo {
+    /// A memo whose prep obeys `budget` for a sweep replayed by
+    /// `engine`.  `None` keeps everything in RAM (the historical
+    /// behaviour); `Some(_)` spills remap columns and drops raw traces
+    /// when `engine` permits.  Scores are bit-identical either way.
+    pub fn with_policy(budget: Option<u64>, engine: EngineKind) -> Self {
+        SimMemo {
+            keep_raw: budget.is_none() || engine == EngineKind::Lockstep,
+            budget,
+            ..SimMemo::default()
+        }
+    }
     /// The per-mode traces + remap columns, built on first use: one
     /// tensor clone, remapped mode by mode in sweep order (the state
     /// the original per-candidate loop reproduced from scratch for
@@ -96,15 +130,23 @@ impl SimMemo {
         let n = tt.n_modes();
         let built: Vec<ModePrep> = (0..n)
             .map(|mode| {
-                let remap_col = tt.mode_col(mode).to_vec();
+                let remap_col =
+                    SpillCol::new(tt.mode_col(mode).to_vec(), self.budget.is_some());
                 // The budget does not affect the data movement, only
                 // the (separately simulated) pointer traffic.
                 remap::remap(&mut tt, mode, usize::MAX);
                 let run = approach1::run(&tt, factors, mode, layout, Tracing::On);
-                ModePrep {
-                    remap_col,
-                    trace: PreparedTrace::new(run.trace),
-                }
+                // Under a memory budget the raw access list (the
+                // dominant retained allocation — tens of bytes per
+                // access) is compressed and dropped per mode; only the
+                // Lockstep core needs raw, and `with_policy` keeps it
+                // in that case.
+                let trace = if self.keep_raw {
+                    PreparedTrace::new(run.trace)
+                } else {
+                    PreparedTrace::from_compressed(CompressedTrace::compress(&run.trace))
+                };
+                ModePrep { remap_col, trace }
             })
             .collect();
         let mut memo = self.prep.lock().expect("prep memo poisoned");
@@ -123,7 +165,9 @@ impl SimMemo {
     ) -> u64 {
         self.remap.cycles(mode, cfg, || {
             let mut ctl = MemoryController::new(cfg.clone());
-            ctl.remap_pass(&p.remap_col, mode_len, layout, 0, 1)
+            // Re-reads the column from disk if spilled — rare (once
+            // per (mode, DRAM, remapper) key) and transient.
+            ctl.remap_pass(&p.remap_col.load(), mode_len, layout, 0, 1)
         })
     }
 }
@@ -197,6 +241,7 @@ impl<'a> Evaluator<'a> {
 pub struct EvaluatorBuilder {
     engine: EngineKind,
     rank: usize,
+    memory_budget: Option<u64>,
 }
 
 impl Default for EvaluatorBuilder {
@@ -212,7 +257,20 @@ impl EvaluatorBuilder {
         EvaluatorBuilder {
             engine: EngineKind::Grid,
             rank: 16,
+            memory_budget: None,
         }
+    }
+
+    /// Peak-memory target in bytes for the simulation paths (S24):
+    /// when set, [`Self::cycle_sim`] builds its memo with the
+    /// bounded-memory policy ([`SimMemo::with_policy`]) — per-mode
+    /// traces keep only the compressed view (for the Event/Grid cores)
+    /// and remap-column snapshots spill to disk.  Scores are
+    /// bit-identical with and without a budget.  `None` (the default)
+    /// keeps everything in RAM.
+    pub fn memory_budget(mut self, budget: Option<u64>) -> Self {
+        self.memory_budget = budget;
+        self
     }
 
     /// Replay core for the simulation paths ([`Evaluator::CycleSim`];
@@ -245,7 +303,7 @@ impl EvaluatorBuilder {
             tensor,
             factors,
             engine: self.engine,
-            memo: SimMemo::default(),
+            memo: SimMemo::with_policy(self.memory_budget, self.engine),
         }
     }
 
@@ -1510,6 +1568,57 @@ mod tests {
                 .collect();
             assert_eq!(scores[0], scores[1], "event diverged at {max_pointers}");
             assert_eq!(scores[0], scores[2], "grid diverged at {max_pointers}");
+        }
+    }
+
+    #[test]
+    fn memory_budget_does_not_change_scores() {
+        // The bounded-memory prep (S24: compressed-only traces, remap
+        // columns spilled to disk) is a storage policy, not a model
+        // change: every engine must score bit-identically with and
+        // without a budget, under both single scoring and the grid
+        // batch path.
+        let t = tensor();
+        let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 2)).collect();
+        let dev = Device::alveo_u250();
+        let mut cfg = ControllerConfig::default_for(t.record_bytes());
+        cfg.cache.num_lines = 512;
+        for engine in [EngineKind::Lockstep, EngineKind::Event, EngineKind::Grid] {
+            let base = EvaluatorBuilder::new().engine(engine);
+            let plain = base.cycle_sim(&t, &factors).score(&cfg, &dev).unwrap();
+            let tight = base
+                .memory_budget(Some(1)) // policy switch, not an RSS cap
+                .cycle_sim(&t, &factors)
+                .score(&cfg, &dev)
+                .unwrap();
+            assert_eq!(plain, tight, "{engine} diverged under a budget");
+        }
+        let grids = Grids {
+            cache_line_bytes: vec![32, 64],
+            cache_num_lines: vec![256, 1024],
+            cache_assoc: vec![2],
+            dma_num: vec![1],
+            dma_buffers: vec![2],
+            dma_buffer_bytes: vec![4096],
+            mem_techs: vec![MemTech::Ddr4],
+            dram_channels: vec![1],
+            dram_banks: vec![16],
+            dram_row_policy: vec![RowPolicy::Open],
+            remap_max_pointers: vec![1 << 18],
+        };
+        let base = ControllerConfig::default_for(t.record_bytes());
+        let plain = EvaluatorBuilder::new()
+            .engine(EngineKind::Grid)
+            .cycle_sim(&t, &factors);
+        let tight = EvaluatorBuilder::new()
+            .engine(EngineKind::Grid)
+            .memory_budget(Some(1))
+            .cycle_sim(&t, &factors);
+        let ex_plain = explore(&base, &grids, &dev, &plain);
+        let ex_tight = explore(&base, &grids, &dev, &tight);
+        assert_eq!(ex_plain.visited.len(), ex_tight.visited.len());
+        for (a, b) in ex_plain.visited.iter().zip(&ex_tight.visited) {
+            assert_eq!(a.cycles, b.cycles, "batch scores diverged under a budget");
         }
     }
 

@@ -35,6 +35,7 @@
 //! (enforced on a randomized corpus by `tests/differential.rs` and
 //! `tests/grid_props.rs`).
 
+use super::stream::{OneWindow, WindowSource};
 use super::trace::Run;
 use super::CompressedTrace;
 use crate::controller::{
@@ -243,12 +244,23 @@ impl GridClassification {
     /// trace pass per distinct `line_bytes` value, all `(num_lines,
     /// assoc)` candidates of that width classified simultaneously.
     pub fn classify(trace: &CompressedTrace, configs: &[CacheConfig]) -> Self {
+        Self::classify_source(&mut OneWindow(trace), configs)
+    }
+
+    /// Windowed classification (S24): one walk of the source classifies
+    /// every candidate — each window is fed to every width's pass state
+    /// in order, so peak memory is one window plus the per-set LRU
+    /// stacks, independent of total trace length.  Per-candidate
+    /// results are identical to the monolithic [`Self::classify`]
+    /// (which now delegates here): a candidate's miss stream depends
+    /// only on its own width's line-access sequence, and every width
+    /// sees the same ordered accesses either way.
+    pub fn classify_source(src: &mut dyn WindowSource, configs: &[CacheConfig]) -> Self {
         assert!(!configs.is_empty(), "need at least one cache candidate");
         for c in configs {
             c.validate();
         }
         let mut streams = vec![MissStream::default(); configs.len()];
-        let mut passes: Vec<PassInfo> = Vec::new();
         let mut pass_of = vec![0usize; configs.len()];
 
         // Group candidates by line width, preserving first-seen order.
@@ -258,20 +270,25 @@ impl GridClassification {
                 widths.push(c.line_bytes);
             }
         }
+        let mut states: Vec<PassState> = Vec::with_capacity(widths.len());
         for lb in widths {
             let idxs: Vec<usize> = (0..configs.len())
                 .filter(|&i| configs[i].line_bytes == lb)
                 .collect();
             for &i in &idxs {
-                pass_of[i] = passes.len();
+                pass_of[i] = states.len();
             }
-            let info = classify_pass(trace, lb, &idxs, configs, &mut streams);
-            passes.push(info);
+            states.push(PassState::new(lb, &idxs, configs));
         }
+        src.for_each_window(&mut |w| {
+            for st in states.iter_mut() {
+                st.feed(w, &mut streams);
+            }
+        });
         GridClassification {
             configs: configs.to_vec(),
             streams,
-            passes,
+            passes: states.into_iter().map(PassState::finish).collect(),
             pass_of,
         }
     }
@@ -343,6 +360,22 @@ impl GridClassification {
     /// controller) plus every statistics counter — bit-identical to a
     /// lockstep or event replay of the same trace.
     pub fn replay(&self, idx: usize, trace: &CompressedTrace, cfg: &ControllerConfig) -> GridRun {
+        self.replay_source(idx, &mut OneWindow(trace), cfg)
+    }
+
+    /// Windowed miss-only replay (S24): identical timing to
+    /// [`Self::replay`] — the miss cursor, device/DMA models, and clock
+    /// persist across windows, and run-line counts are consumed by
+    /// global run index — but only one window is resident at a time.
+    /// `src` must yield the exact window sequence that was classified
+    /// (same accesses, same boundaries), or the run indices go out of
+    /// step.
+    pub fn replay_source(
+        &self,
+        idx: usize,
+        src: &mut dyn WindowSource,
+        cfg: &ControllerConfig,
+    ) -> GridRun {
         assert_eq!(
             cfg.cache, self.configs[idx],
             "cfg.cache must be the classified candidate"
@@ -359,55 +392,70 @@ impl GridClassification {
             taken: 0,
         };
         let mut now = 0u64;
-        for (ri, run) in trace.runs().iter().enumerate() {
-            match *run {
-                Run::Stream {
-                    base,
-                    chunk,
-                    count,
-                    tail,
-                } => {
-                    now = dma.stream_run(
-                        &mut dram,
+        // Run index, global across windows: `pass.run_lines` is flat
+        // over every window's runs in classification order.
+        let mut ri = 0usize;
+        let mut requests = 0u64;
+        let mut total_bytes = 0u64;
+        src.for_each_window(&mut |trace| {
+            requests += trace.requests();
+            total_bytes += trace.total_bytes();
+            for run in trace.runs() {
+                match *run {
+                    Run::Stream {
                         base,
-                        chunk as usize,
+                        chunk,
                         count,
-                        tail as usize,
-                        now,
-                    );
-                }
-                Run::Cached { .. } => {
-                    now = cur.consume(pass.run_lines[ri], &mut dram, lb, hl, now);
-                }
-                Run::Verbatim { off, count } => {
-                    for &a in trace.raw_at(off, count) {
-                        match a {
-                            Access::Stream { addr, bytes } => {
-                                now = dma.stream(&mut dram, addr, bytes, now);
-                            }
-                            Access::Element { addr, bytes } => {
-                                now = dma.element(&mut dram, addr, bytes, now);
-                            }
-                            Access::Cached { addr, bytes }
-                            | Access::CachedStore { addr, bytes } => {
-                                let n = geom.line_count(addr, bytes);
-                                now = cur.consume(n, &mut dram, lb, hl, now);
+                        tail,
+                    } => {
+                        now = dma.stream_run(
+                            &mut dram,
+                            base,
+                            chunk as usize,
+                            count,
+                            tail as usize,
+                            now,
+                        );
+                    }
+                    Run::Cached { .. } => {
+                        now = cur.consume(pass.run_lines[ri], &mut dram, lb, hl, now);
+                    }
+                    Run::Verbatim { off, count } => {
+                        for &a in trace.raw_at(off, count) {
+                            match a {
+                                Access::Stream { addr, bytes } => {
+                                    now = dma.stream(&mut dram, addr, bytes, now);
+                                }
+                                Access::Element { addr, bytes } => {
+                                    now = dma.element(&mut dram, addr, bytes, now);
+                                }
+                                Access::Cached { addr, bytes }
+                                | Access::CachedStore { addr, bytes } => {
+                                    let n = geom.line_count(addr, bytes);
+                                    now = cur.consume(n, &mut dram, lb, hl, now);
+                                }
                             }
                         }
                     }
                 }
+                ri += 1;
             }
-        }
+        });
         debug_assert_eq!(
             cur.i,
             cur.recs.len(),
             "replay must consume the whole miss stream"
         );
+        debug_assert_eq!(
+            ri,
+            pass.run_lines.len(),
+            "replay must walk the exact classified run sequence"
+        );
         GridRun {
             cycles: now,
             stats: ControllerStats {
-                requests: trace.requests(),
-                total_bytes: trace.total_bytes(),
+                requests,
+                total_bytes,
             },
             cache: self.cache_stats(idx),
             dma: dma.stats().clone(),
@@ -467,19 +515,23 @@ impl Cursor<'_> {
     }
 }
 
-/// One classification pass at line width `lb` over the candidates in
-/// `idxs`, appending miss events to `streams`.
-fn classify_pass(
-    trace: &CompressedTrace,
+/// Classification state for one line width `lb`, persistent across
+/// windows: the per-set LRU stack groups plus the per-run line counts
+/// accumulated so far.  [`PassState::feed`] appends one window's runs;
+/// [`PassState::finish`] freezes the result into a [`PassInfo`].
+struct PassState {
     lb: usize,
-    idxs: &[usize],
-    configs: &[CacheConfig],
-    streams: &mut [MissStream],
-) -> PassInfo {
-    // Group this width's candidates by set count: one LRU stack array
-    // per distinct num_sets, every associativity sharing it.
-    let mut groups: Vec<SetGroup> = Vec::new();
-    {
+    geom: LineGeom,
+    /// This width's candidates grouped by set count: one LRU stack
+    /// array per distinct num_sets, every associativity sharing it.
+    groups: Vec<SetGroup>,
+    run_lines: Vec<u64>,
+    total: u64,
+}
+
+impl PassState {
+    fn new(lb: usize, idxs: &[usize], configs: &[CacheConfig]) -> Self {
+        let mut groups: Vec<SetGroup> = Vec::new();
         let mut set_counts: Vec<usize> = Vec::new();
         for &i in idxs {
             let s = configs[i].num_sets();
@@ -495,17 +547,23 @@ fn classify_pass(
                 .collect();
             groups.push(SetGroup::new(lb, s, &assocs));
         }
+        PassState {
+            lb,
+            geom: LineGeom::new(lb, 1),
+            groups,
+            run_lines: Vec::new(),
+            total: 0,
+        }
     }
 
-    let geom = LineGeom::new(lb, 1);
-    let mut run_lines = Vec::with_capacity(trace.runs().len());
-    let mut total = 0u64;
-    let mut serve = |addr: u64, bytes: usize, write: bool, groups: &mut [SetGroup]| -> u64 {
-        let first = geom.first_line(addr);
-        let last = geom.last_line(addr, bytes);
+    /// Classify one cache-class access (every line it touches) for
+    /// every candidate at this width; returns the line count.
+    fn serve(&mut self, addr: u64, bytes: usize, write: bool, streams: &mut [MissStream]) -> u64 {
+        let first = self.geom.first_line(addr);
+        let last = self.geom.last_line(addr, bytes);
         let mut line = first;
         loop {
-            for g in groups.iter_mut() {
+            for g in self.groups.iter_mut() {
                 g.access(line, write, streams);
             }
             if line == last {
@@ -514,42 +572,51 @@ fn classify_pass(
             line += 1;
         }
         last - first + 1
-    };
-    for run in trace.runs() {
-        let mut lines = 0u64;
-        match *run {
-            Run::Stream { .. } => {}
-            Run::Cached {
-                base,
-                bytes,
-                off,
-                count,
-            } => {
-                for &w in trace.words_at(off, count) {
-                    lines += serve(base + 4 * w as u64, bytes as usize, false, &mut groups);
+    }
+
+    /// Classify one window's runs, continuing from the stack state the
+    /// previous windows left behind.
+    fn feed(&mut self, trace: &CompressedTrace, streams: &mut [MissStream]) {
+        self.run_lines.reserve(trace.runs().len());
+        for run in trace.runs() {
+            let mut lines = 0u64;
+            match *run {
+                Run::Stream { .. } => {}
+                Run::Cached {
+                    base,
+                    bytes,
+                    off,
+                    count,
+                } => {
+                    for &w in trace.words_at(off, count) {
+                        lines += self.serve(base + 4 * w as u64, bytes as usize, false, streams);
+                    }
                 }
-            }
-            Run::Verbatim { off, count } => {
-                for &a in trace.raw_at(off, count) {
-                    match a {
-                        Access::Cached { addr, bytes } => {
-                            lines += serve(addr, bytes, false, &mut groups);
+                Run::Verbatim { off, count } => {
+                    for &a in trace.raw_at(off, count) {
+                        match a {
+                            Access::Cached { addr, bytes } => {
+                                lines += self.serve(addr, bytes, false, streams);
+                            }
+                            Access::CachedStore { addr, bytes } => {
+                                lines += self.serve(addr, bytes, true, streams);
+                            }
+                            Access::Stream { .. } | Access::Element { .. } => {}
                         }
-                        Access::CachedStore { addr, bytes } => {
-                            lines += serve(addr, bytes, true, &mut groups);
-                        }
-                        Access::Stream { .. } | Access::Element { .. } => {}
                     }
                 }
             }
+            self.run_lines.push(lines);
+            self.total += lines;
         }
-        run_lines.push(lines);
-        total += lines;
     }
-    PassInfo {
-        line_bytes: lb,
-        run_lines,
-        total_lines: total,
+
+    fn finish(self) -> PassInfo {
+        PassInfo {
+            line_bytes: self.lb,
+            run_lines: self.run_lines,
+            total_lines: self.total,
+        }
     }
 }
 
@@ -685,6 +752,27 @@ mod tests {
         let run = cls.replay(0, prepared.compressed(), &cfg);
         assert_eq!(run.cycles, want);
         assert_eq!(run.cache, *ctl.cache_stats());
+    }
+
+    #[test]
+    fn windowed_classify_and_replay_match_monolithic() {
+        use crate::engine::stream::ChunkedWindows;
+        let raw = cache_heavy_trace(17, 3_000);
+        let prepared = PreparedTrace::new(raw.clone());
+        let grid = small_grid();
+        let mono = GridClassification::classify(prepared.compressed(), &grid);
+        for window in [1usize, 251, 4_096] {
+            let cls =
+                GridClassification::classify_source(&mut ChunkedWindows::new(&raw, window), &grid);
+            for (i, cc) in grid.iter().enumerate() {
+                let mut cfg = ControllerConfig::default_for(16);
+                cfg.cache = *cc;
+                let want = mono.replay(i, prepared.compressed(), &cfg);
+                let got =
+                    cls.replay_source(i, &mut ChunkedWindows::new(&raw, window), &cfg);
+                assert_eq!(got, want, "{cc:?} window {window}");
+            }
+        }
     }
 
     #[test]

@@ -49,11 +49,13 @@
 //! cells instead of full replays per candidate, still bit-identically.
 
 pub mod grid;
+pub mod stream;
 pub mod sweep;
 pub mod timing;
 pub mod trace;
 
 pub use grid::{GridClassification, GridRun};
+pub use stream::{replay_events_source, ChunkedWindows, OneWindow, WindowSource};
 pub use sweep::JointIndex;
 pub use timing::{TimingCandidate, TimingOps, TimingRun};
 pub use trace::CompressedTrace;
@@ -154,7 +156,22 @@ impl PreparedTrace {
         PreparedTrace { raw, compressed }
     }
 
-    /// The raw access list.
+    /// Prepare from an already-compressed trace, dropping the raw view
+    /// — the bounded-memory variant (S24): under a `--memory-budget`,
+    /// per-mode traces keep only the delta-encoded form (typically an
+    /// order of magnitude smaller on MTTKRP traffic).  [`Self::raw`]
+    /// returns an empty slice, so such a trace must be replayed by the
+    /// Event or Grid core; the budget plumbing in [`crate::dse`]
+    /// enforces that before building one.
+    pub fn from_compressed(compressed: CompressedTrace) -> Self {
+        PreparedTrace {
+            raw: Vec::new(),
+            compressed,
+        }
+    }
+
+    /// The raw access list (empty for a compressed-only trace, see
+    /// [`Self::from_compressed`]).
     pub fn raw(&self) -> &[Access] {
         &self.raw
     }
@@ -164,14 +181,19 @@ impl PreparedTrace {
         &self.compressed
     }
 
+    /// True when the raw view was dropped to save memory.
+    pub fn raw_dropped(&self) -> bool {
+        self.raw.is_empty() && !self.compressed.is_empty()
+    }
+
     /// Number of accesses.
     pub fn len(&self) -> usize {
-        self.raw.len()
+        self.compressed.len()
     }
 
     /// True when the trace has no accesses.
     pub fn is_empty(&self) -> bool {
-        self.raw.is_empty()
+        self.compressed.is_empty()
     }
 }
 

@@ -1,0 +1,168 @@
+//! Bounded-window trace streaming (S24): the out-of-core replay
+//! substrate.  A full compressed trace for a 100M-nnz mode is tens of
+//! gigabytes of access records — far past any laptop-class budget — yet
+//! every simulation core only ever walks its trace *in order*.  This
+//! module turns that walk into a pull of bounded windows:
+//!
+//! * [`WindowSource`] — a re-iterable producer of [`CompressedTrace`]
+//!   windows.  Each call to [`WindowSource::for_each_window`] must
+//!   yield the identical window sequence from the start; sources
+//!   regenerate deterministically (from the tensor, from a file, or
+//!   from a borrowed in-RAM trace), so the cores that need several
+//!   passes (grid classify + per-candidate replay, timing extraction)
+//!   simply walk the source again.
+//! * [`replay_events_source`] — the event core over windows: each
+//!   window drives [`MemoryController::replay_events`], which threads
+//!   the FIFO clock through `ctl.now()` and accumulates statistics, so
+//!   back-to-back windowed replay is **bit-identical to one monolithic
+//!   replay by construction** (the continuation property pinned by
+//!   `engine::tests::event_replay_continues_from_now_like_lockstep`,
+//!   and end-to-end by `tests/streaming_props.rs`).
+//! * The grid/timing cores gain `_source` variants
+//!   ([`super::grid::GridClassification::classify_source`],
+//!   [`super::grid::GridClassification::replay_source`],
+//!   [`super::timing::TimingOps::extract_source`]) that thread their
+//!   per-set LRU stacks, miss cursors, and lane clocks across windows —
+//!   the monolithic entry points are now the single-window special case
+//!   of the same code, so the two paths cannot diverge.
+//!
+//! Peak replay memory drops from O(trace) to O(window): the window in
+//! flight, the per-set stacks, and the miss streams (O(misses), which
+//! the grid core already required).
+
+use super::trace::CompressedTrace;
+use crate::controller::{Access, MemoryController};
+
+/// A re-iterable producer of bounded trace windows.
+///
+/// Contract: every call to [`Self::for_each_window`] restarts from the
+/// beginning and yields the **identical** window sequence — same
+/// accesses, same window boundaries.  The grid core relies on this:
+/// classification records per-run line counts that replay consumes by
+/// global run index, so the runs must line up walk-to-walk.
+pub trait WindowSource {
+    /// Walk the trace from the start, invoking `f` on each bounded
+    /// window in order.
+    fn for_each_window(&mut self, f: &mut dyn FnMut(&CompressedTrace));
+}
+
+/// Borrowed in-RAM access list chunked into bounded windows, each
+/// delta-compressed on the fly.  The migration adapter: lets every
+/// in-RAM caller stream through the same windowed code path, and the
+/// property suite compare windowed against monolithic execution at
+/// arbitrary window sizes.
+pub struct ChunkedWindows<'a> {
+    accesses: &'a [Access],
+    window: usize,
+}
+
+impl<'a> ChunkedWindows<'a> {
+    /// Window granularity `window` accesses (> 0).
+    pub fn new(accesses: &'a [Access], window: usize) -> Self {
+        assert!(window > 0, "window must be positive");
+        ChunkedWindows { accesses, window }
+    }
+}
+
+impl WindowSource for ChunkedWindows<'_> {
+    fn for_each_window(&mut self, f: &mut dyn FnMut(&CompressedTrace)) {
+        for chunk in self.accesses.chunks(self.window) {
+            f(&CompressedTrace::compress(chunk));
+        }
+    }
+}
+
+/// A single already-compressed trace as a one-window source — the
+/// adapter that makes the monolithic `classify`/`replay`/`extract`
+/// entry points run through the windowed implementations.
+pub struct OneWindow<'a>(pub &'a CompressedTrace);
+
+impl WindowSource for OneWindow<'_> {
+    fn for_each_window(&mut self, f: &mut dyn FnMut(&CompressedTrace)) {
+        f(self.0);
+    }
+}
+
+/// Event-core streaming replay: drive each window through the batched
+/// kernels in order, continuing from `ctl.now()`.  Returns the
+/// completion cycle.  Bit-identical to replaying the concatenated
+/// trace in one call — `replay_events` threads the clock and
+/// accumulates every statistics counter across calls.
+pub fn replay_events_source(ctl: &mut MemoryController, src: &mut dyn WindowSource) -> u64 {
+    let mut end = ctl.now();
+    src.for_each_window(&mut |w| {
+        end = ctl.replay_events(w);
+    });
+    end
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::controller::ControllerConfig;
+    use crate::testkit::Rng;
+
+    fn mixed_trace(seed: u64, n: usize) -> Vec<Access> {
+        let mut rng = Rng::new(seed);
+        let mut trace = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            match rng.below(6) {
+                0 => trace.push(Access::Stream {
+                    addr: i * 4096,
+                    bytes: 1024 + rng.below(4096) as usize,
+                }),
+                1 => trace.push(Access::Element {
+                    addr: (1 << 30) + rng.below(1 << 20) * 16,
+                    bytes: 16,
+                }),
+                2 => trace.push(Access::CachedStore {
+                    addr: (2 << 28) + rng.below(1 << 12) * 16,
+                    bytes: 16,
+                }),
+                _ => trace.push(Access::Cached {
+                    addr: (8 << 20) + rng.below(1 << 12) * 64,
+                    bytes: 64,
+                }),
+            }
+        }
+        trace
+    }
+
+    #[test]
+    fn chunked_windows_cover_the_trace_and_reiterate_identically() {
+        let raw = mixed_trace(3, 1_000);
+        let mut src = ChunkedWindows::new(&raw, 137);
+        let mut first: Vec<Vec<Access>> = Vec::new();
+        src.for_each_window(&mut |w| first.push(w.expand()));
+        let flat: Vec<Access> = first.iter().flatten().copied().collect();
+        assert_eq!(flat, raw, "windows must concatenate to the trace");
+        let mut second: Vec<Vec<Access>> = Vec::new();
+        src.for_each_window(&mut |w| second.push(w.expand()));
+        assert_eq!(first, second, "re-iteration must be identical");
+    }
+
+    #[test]
+    fn windowed_event_replay_is_bit_identical_to_monolithic() {
+        let raw = mixed_trace(7, 2_000);
+        let mono = CompressedTrace::compress(&raw);
+        for window in [1usize, 3, 64, 999, 2_000, 100_000] {
+            let mut a = MemoryController::new(ControllerConfig::default_for(16));
+            let mut b = MemoryController::new(ControllerConfig::default_for(16));
+            let ta = a.replay_events(&mono);
+            let tb = replay_events_source(&mut b, &mut ChunkedWindows::new(&raw, window));
+            assert_eq!(ta, tb, "window {window}");
+            assert_eq!(a.stats(), b.stats(), "window {window}");
+            assert_eq!(a.cache_stats(), b.cache_stats(), "window {window}");
+            assert_eq!(a.dma_stats(), b.dma_stats(), "window {window}");
+            assert_eq!(a.dram_stats(), b.dram_stats(), "window {window}");
+        }
+    }
+
+    #[test]
+    fn empty_source_replays_to_current_clock() {
+        let raw: Vec<Access> = Vec::new();
+        let mut ctl = MemoryController::new(ControllerConfig::default_for(16));
+        let t = replay_events_source(&mut ctl, &mut ChunkedWindows::new(&raw, 16));
+        assert_eq!(t, 0);
+    }
+}

@@ -29,6 +29,7 @@
 //! timing-grid column of `tests/differential.rs`).
 
 use super::grid::GridClassification;
+use super::stream::{OneWindow, WindowSource};
 use super::trace::Run;
 use super::CompressedTrace;
 use crate::controller::{
@@ -263,6 +264,22 @@ impl TimingOps {
     /// (the trace that was classified).  One linear walk of the
     /// compressed run-queue; after it, timing never touches the trace.
     pub fn extract(cls: &GridClassification, idx: usize, trace: &CompressedTrace) -> TimingOps {
+        Self::extract_source(cls, idx, &mut OneWindow(trace))
+    }
+
+    /// Windowed extraction (S24): identical op queue to
+    /// [`Self::extract`] — the miss cursor persists across windows and
+    /// run-line counts are consumed by global run index, while hit
+    /// coalescing across window boundaries is additive and cannot
+    /// change any lane's clock.  `src` must yield the exact window
+    /// sequence that was classified.  The op queue itself stays in RAM
+    /// (it is miss-bounded, like the miss streams), but the trace never
+    /// is.
+    pub fn extract_source(
+        cls: &GridClassification,
+        idx: usize,
+        src: &mut dyn WindowSource,
+    ) -> TimingOps {
         let pass = cls.pass_info(idx);
         let line_bytes = pass.line_bytes;
         let geom = LineGeom::new(line_bytes, 1);
@@ -272,53 +289,68 @@ impl TimingOps {
             i: 0,
             taken: 0,
         };
-        for (ri, run) in trace.runs().iter().enumerate() {
-            match *run {
-                Run::Stream {
-                    base,
-                    chunk,
-                    count,
-                    tail,
-                } => {
-                    b.ops.push(TimingOp::StreamRun {
+        // Run index, global across windows: `pass.run_lines` is flat
+        // over every window's runs in classification order.
+        let mut ri = 0usize;
+        let mut requests = 0u64;
+        let mut total_bytes = 0u64;
+        src.for_each_window(&mut |trace| {
+            requests += trace.requests();
+            total_bytes += trace.total_bytes();
+            for run in trace.runs() {
+                match *run {
+                    Run::Stream {
                         base,
                         chunk,
                         count,
                         tail,
-                    });
-                }
-                Run::Cached { .. } => {
-                    b.consume(pass.run_lines[ri]);
-                }
-                Run::Verbatim { off, count } => {
-                    for &a in trace.raw_at(off, count) {
-                        match a {
-                            Access::Stream { addr, bytes } => {
-                                b.ops.push(TimingOp::Stream { addr, bytes });
-                            }
-                            Access::Element { addr, bytes } => {
-                                b.ops.push(TimingOp::Element { addr, bytes });
-                            }
-                            Access::Cached { addr, bytes }
-                            | Access::CachedStore { addr, bytes } => {
-                                b.consume(geom.line_count(addr, bytes));
+                    } => {
+                        b.ops.push(TimingOp::StreamRun {
+                            base,
+                            chunk,
+                            count,
+                            tail,
+                        });
+                    }
+                    Run::Cached { .. } => {
+                        b.consume(pass.run_lines[ri]);
+                    }
+                    Run::Verbatim { off, count } => {
+                        for &a in trace.raw_at(off, count) {
+                            match a {
+                                Access::Stream { addr, bytes } => {
+                                    b.ops.push(TimingOp::Stream { addr, bytes });
+                                }
+                                Access::Element { addr, bytes } => {
+                                    b.ops.push(TimingOp::Element { addr, bytes });
+                                }
+                                Access::Cached { addr, bytes }
+                                | Access::CachedStore { addr, bytes } => {
+                                    b.consume(geom.line_count(addr, bytes));
+                                }
                             }
                         }
                     }
                 }
+                ri += 1;
             }
-        }
+        });
         debug_assert_eq!(
             b.i,
             b.recs.len(),
             "extraction must consume the whole miss stream"
         );
+        debug_assert_eq!(
+            ri,
+            pass.run_lines.len(),
+            "extraction must walk the exact classified run sequence"
+        );
         TimingOps {
             ops: b.ops,
             line_bytes,
             hit_latency: cls.configs()[idx].hit_latency,
-            requests: trace.requests(),
-            total_bytes: trace.total_bytes(),
+            requests,
+            total_bytes,
             cache: cls.cache_stats(idx),
         }
     }
@@ -494,6 +526,29 @@ mod tests {
         let b = TimingOps::extract(&alone, 0, prepared.compressed());
         assert_eq!(a.len(), b.len());
         assert_eq!(a.time_grid(&cands), b.time_grid(&cands));
+    }
+
+    #[test]
+    fn windowed_extraction_times_identically_to_monolithic() {
+        use crate::engine::stream::ChunkedWindows;
+        let raw = mixed_trace(21, 2_000);
+        let prepared = PreparedTrace::new(raw.clone());
+        let base = ControllerConfig::default_for(16);
+        let cands = dram_dma_grid(&base);
+        let mono_cls = GridClassification::classify(prepared.compressed(), &[base.cache]);
+        let mono = TimingOps::extract(&mono_cls, 0, prepared.compressed());
+        for window in [1usize, 173, 5_000] {
+            let cls = GridClassification::classify_source(
+                &mut ChunkedWindows::new(&raw, window),
+                &[base.cache],
+            );
+            let ops = TimingOps::extract_source(&cls, 0, &mut ChunkedWindows::new(&raw, window));
+            assert_eq!(
+                mono.time_grid(&cands),
+                ops.time_grid(&cands),
+                "window {window}"
+            );
+        }
     }
 
     #[test]

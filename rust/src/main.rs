@@ -54,7 +54,7 @@ const OPTS: &[&str] = &[
     "search", "top-k", // DSE search strategy + report depth
     "cache-lines", "cache-line-bytes", "cache-assoc", "dma-buffers", "dma-num",
     "dma-buffer-bytes", "max-pointers", "memory-tech", "channels", "dram-banks",
-    "row-policy", "mem-techs", "artifacts",
+    "row-policy", "mem-techs", "artifacts", "memory-budget",
 ];
 const FLAGS: &[&str] = &["help", "verbose", "csv"];
 
@@ -105,7 +105,12 @@ fn usage() {
          \x20          event on explore for sweep throughput, lockstep on\n\
          \x20          simulate; grid scores whole cache-module grids in\n\
          \x20          one classification pass and DRAM/DMA module sweeps\n\
-         \x20          in one vectorized walk of the shared op queue)\n"
+         \x20          in one vectorized walk of the shared op queue)\n\
+         memory:    --memory-budget 4g (decompose/explore: bound host\n\
+         \x20          peak RSS — dedup-free streamed synthesis, spilled\n\
+         \x20          remap columns, compressed-only traces; results are\n\
+         \x20          bit-identical; peak RSS is reported and enforced\n\
+         \x20          at exit)\n"
     );
 }
 
@@ -149,7 +154,7 @@ fn controller_config_with(
     file_cfg: Option<&Config>,
 ) -> Result<ControllerConfig, Box<dyn std::error::Error>> {
     let mut cfg = match file_cfg {
-        Some(c) => c.controller(elem_bytes),
+        Some(c) => c.controller(elem_bytes)?,
         None => ControllerConfig::default_for(elem_bytes),
     };
     cfg.cache.num_lines = args.usize_or("cache-lines", cfg.cache.num_lines)?;
@@ -232,8 +237,47 @@ fn device(args: &Args) -> Result<Device, CliError> {
     }
 }
 
+/// `--memory-budget 4g` parsed to bytes (None when absent).
+fn memory_budget(args: &Args) -> Result<Option<u64>, Box<dyn std::error::Error>> {
+    match args.get("memory-budget") {
+        None => Ok(None),
+        Some(raw) => ptmc::util::parse_size(raw)
+            .map(Some)
+            .map_err(|e| Box::new(CliError(format!("--memory-budget: {e}"))) as _),
+    }
+}
+
+/// Report the process's peak RSS and, when a budget was requested,
+/// fail the run if the peak exceeded it — the out-of-core contract is
+/// observable, not advisory.
+fn enforce_budget(budget: Option<u64>) -> Result<(), Box<dyn std::error::Error>> {
+    let Some(peak) = ptmc::util::peak_rss_bytes() else {
+        if budget.is_some() {
+            println!("peak RSS: unavailable on this platform (budget not checked)");
+        }
+        return Ok(());
+    };
+    match budget {
+        None => {}
+        Some(b) if peak <= b => println!(
+            "peak RSS: {} (within budget {})",
+            ptmc::util::format_size(peak),
+            ptmc::util::format_size(b)
+        ),
+        Some(b) => {
+            return Err(Box::new(CliError(format!(
+                "peak RSS {} exceeded --memory-budget {}",
+                ptmc::util::format_size(peak),
+                ptmc::util::format_size(b)
+            ))))
+        }
+    }
+    Ok(())
+}
+
 fn cmd_decompose(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
-    let mut t = workload::tensor_from_args(args)?;
+    let budget = memory_budget(args)?;
+    let mut t = workload::tensor_from_args_budgeted(args, budget)?;
     let als = als_config(args)?;
     let backend_name = args.str_or("backend", "native");
     println!(
@@ -299,7 +343,7 @@ fn cmd_decompose(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         println!("simulated memory cycles: {}", model.cycles);
     }
     println!("wall time: {wall:?}");
-    Ok(())
+    enforce_budget(budget)
 }
 
 fn cmd_simulate(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
@@ -427,7 +471,8 @@ fn cfg_summary(cfg: &ControllerConfig) -> String {
 }
 
 fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
-    let t = workload::tensor_from_args(args)?;
+    let budget = memory_budget(args)?;
+    let t = workload::tensor_from_args_budgeted(args, budget)?;
     let rank = args.usize_or("rank", 16)?;
     let evaluator = args.str_or("evaluator", "pms");
     // Search layer: --search / --top-k override the config file's
@@ -482,7 +527,10 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         .map(|&d| Mat::randn(d, rank, 3))
         .collect();
     println!("engine: {engine}");
-    let builder = EvaluatorBuilder::new().engine(engine).rank(rank);
+    let builder = EvaluatorBuilder::new()
+        .engine(engine)
+        .rank(rank)
+        .memory_budget(budget);
     let sweep;
     let eval = match evaluator {
         "pms" => builder.pms(&profile),
@@ -572,7 +620,7 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     if ex.pareto.len() > 8 {
         println!("  ... {} more on the frontier", ex.pareto.len() - 8);
     }
-    Ok(())
+    enforce_budget(budget)
 }
 
 fn cmd_stats(args: &Args) -> Result<(), Box<dyn std::error::Error>> {

@@ -70,9 +70,14 @@ fn coverage_curve(col: &[u32], mode_len: usize) -> Vec<(usize, f64)> {
 
 /// Interpolate a coverage curve at pointer budget `k` (log-linear).
 fn coverage_at(curve: &[(usize, f64)], k: usize) -> f64 {
-    if curve.is_empty() {
-        return 1.0;
-    }
+    // Hand-built or averaged profiles can carry a zero first knot; the
+    // linear ramp below would then divide by zero and the NaN silently
+    // poisons every PMS score downstream.  Skip past zero-k knots (a
+    // zero pointer budget covers nothing) before interpolating.
+    let curve = match curve.iter().position(|&(k0, _)| k0 > 0) {
+        Some(i) => &curve[i..],
+        None => return 1.0, // empty or all-zero knots: degenerate curve
+    };
     if k >= curve.last().unwrap().0 {
         return 1.0;
     }
@@ -351,6 +356,24 @@ mod tests {
         assert_eq!(coverage_at(&curve, 100), 1.0);
         let mid = coverage_at(&curve, 2);
         assert!(mid > 8.0 / 15.0 && mid < 1.0);
+    }
+
+    #[test]
+    fn zero_first_knot_never_yields_nan() {
+        // Regression: a zero first knot used to divide by zero in the
+        // `k <= curve[0].0` ramp and leak NaN into PMS scores.
+        let curve = vec![(0usize, 0.0f64), (4, 0.5), (16, 1.0)];
+        for k in [0usize, 1, 2, 4, 8, 16, 100] {
+            let c = coverage_at(&curve, k);
+            assert!(c.is_finite(), "coverage_at(k={k}) = {c} must be finite");
+            assert!((0.0..=1.0).contains(&c), "coverage_at(k={k}) = {c}");
+        }
+        // Degenerate all-zero curves fall back to full coverage rather
+        // than NaN (matches the empty-curve convention).
+        assert_eq!(coverage_at(&[(0, 0.3)], 5), 1.0);
+        assert_eq!(coverage_at(&[], 5), 1.0);
+        // A zero pointer budget covers nothing on a well-formed curve.
+        assert_eq!(coverage_at(&[(1, 0.4), (4, 1.0)], 0), 0.0);
     }
 
     #[test]

@@ -150,6 +150,88 @@ impl ShardPlan {
     }
 }
 
+/// One-pass coordinate-histogram sketch for out-of-core shard planning:
+/// per-mode fiber-length counts accumulated block by block from a
+/// streamed ingestion pass ([`crate::tensor::frostt::TnsBlockReader`]),
+/// so a [`ShardPlan`] can be built without ever materializing (or
+/// sorting) the tensor.  Memory is O(sum of mode lengths), independent
+/// of nnz.
+///
+/// [`ShardPlan::balance`] is exactly `CoordHistogram::observe` over the
+/// materialized columns followed by [`ShardPlan::from_counts`], so the
+/// streamed plan is bit-identical to the in-RAM plan by construction
+/// (pinned by `tests/streaming_props.rs`).
+#[derive(Debug, Clone, Default)]
+pub struct CoordHistogram {
+    /// Per-mode fiber-length counts, grown on demand as coordinates
+    /// appear (the `.tns` format declares no dims up front).
+    counts: Vec<Vec<usize>>,
+    nnz: usize,
+}
+
+impl CoordHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one block of per-mode coordinate columns into the sketch.
+    /// All columns must have equal length (one entry per nonzero).
+    pub fn observe(&mut self, cols: &[Vec<Coord>]) {
+        if cols.is_empty() {
+            return;
+        }
+        if self.counts.len() < cols.len() {
+            self.counts.resize_with(cols.len(), Vec::new);
+        }
+        for (m, col) in cols.iter().enumerate() {
+            debug_assert_eq!(col.len(), cols[0].len(), "ragged coordinate block");
+            let counts = &mut self.counts[m];
+            for &c in col {
+                let c = c as usize;
+                if c >= counts.len() {
+                    counts.resize(c + 1, 0);
+                }
+                counts[c] += 1;
+            }
+        }
+        self.nnz += cols[0].len();
+    }
+
+    /// Nonzeros observed so far.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Mode lengths observed so far (coordinate maxima + 1).
+    pub fn dims(&self) -> Vec<usize> {
+        self.counts.iter().map(Vec::len).collect()
+    }
+
+    /// Fiber-length histogram of one mode.
+    pub fn mode_counts(&self, mode: usize) -> &[usize] {
+        &self.counts[mode]
+    }
+
+    /// Build the K-shard plan for `mode` from the sketch alone.
+    pub fn plan(&self, mode: usize, k: usize) -> ShardPlan {
+        ShardPlan::from_counts(mode, &self.counts[mode], k)
+    }
+
+    /// Like [`Self::plan`], but padding the axis to `dim` coordinates —
+    /// for tensors whose declared mode length exceeds the observed
+    /// coordinate maximum (trailing empty fibers carry no nnz, so the
+    /// plan matches [`ShardPlan::balance`] on the materialized tensor).
+    pub fn plan_for_dim(&self, mode: usize, dim: usize, k: usize) -> ShardPlan {
+        let counts = &self.counts[mode];
+        if counts.len() >= dim {
+            return ShardPlan::from_counts(mode, counts, k);
+        }
+        let mut padded = counts.clone();
+        padded.resize(dim, 0);
+        ShardPlan::from_counts(mode, &padded, k)
+    }
+}
+
 /// Per-shard nnz storage indices, in storage order — so each worker's
 /// per-row accumulation order matches the sequential oracle exactly
 /// (bit-identical floating-point results).
@@ -325,6 +407,33 @@ mod tests {
                 assert_eq!(plan.shard_of(s.coord_hi - 1), sid);
             }
         }
+    }
+
+    #[test]
+    fn histogram_sketch_plans_match_balance() {
+        forall("coord_histogram_plan_identity", 16, |rng| {
+            let t = tensor(rng.next_u64(), rng.range(1, 4_000));
+            // Feed the sketch in random-sized blocks, as the streamed
+            // ingestion path would.
+            let mut hist = CoordHistogram::new();
+            let mut z = 0;
+            while z < t.nnz() {
+                let end = (z + rng.range(1, 700)).min(t.nnz());
+                let block: Vec<Vec<Coord>> = (0..t.n_modes())
+                    .map(|m| t.mode_col(m)[z..end].to_vec())
+                    .collect();
+                hist.observe(&block);
+                z = end;
+            }
+            assert_eq!(hist.nnz(), t.nnz());
+            for mode in 0..t.n_modes() {
+                for k in [1, 3, 6] {
+                    let streamed = hist.plan_for_dim(mode, t.dims()[mode], k);
+                    let in_ram = ShardPlan::balance(&t, mode, k);
+                    assert_eq!(streamed.shards, in_ram.shards, "mode {mode} k {k}");
+                }
+            }
+        });
     }
 
     #[test]

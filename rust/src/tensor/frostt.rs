@@ -37,24 +37,93 @@ impl From<std::io::Error> for TnsError {
     }
 }
 
-/// Parse a `.tns` stream.  All data lines must have the same arity.
-pub fn read_tns<R: Read>(reader: R) -> Result<SparseTensor, TnsError> {
-    let reader = BufReader::new(reader);
-    let mut n_modes: Option<usize> = None;
-    let mut cols: Vec<Vec<Coord>> = Vec::new();
-    let mut vals: Vec<f32> = Vec::new();
-    let mut maxima: Vec<Coord> = Vec::new();
+/// Default block granularity for streamed ingestion (nonzeros per
+/// block): 1M entries ≈ 16 MB of COO columns for a 3-mode tensor —
+/// large enough to amortize per-block overheads, small enough that a
+/// pipeline holding two blocks stays far under any sane budget.
+pub const DEFAULT_BLOCK_NNZ: usize = 1 << 20;
 
-    for (lineno, line) in reader.lines().enumerate() {
-        let lineno = lineno + 1;
-        let line = line?;
-        let data = match line.find('#') {
-            Some(pos) => &line[..pos],
-            None => &line[..],
+/// One bounded block of parsed COO entries (column-major, 0-based).
+#[derive(Debug, Clone)]
+pub struct TnsBlock {
+    /// Per-mode coordinate columns, each `nnz()` long.
+    pub cols: Vec<Vec<Coord>>,
+    pub vals: Vec<f32>,
+}
+
+impl TnsBlock {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+/// Incremental `.tns` parser yielding fixed-size COO blocks, never a
+/// whole-file `Vec` — the out-of-core ingestion primitive.  Parse
+/// semantics (comment stripping, blank-line tolerance, 1-based
+/// coordinates, arity locking to the first data line, exact `Parse`
+/// line numbers) are identical to [`read_tns`], which is itself built
+/// on this reader, so the two cannot drift.
+///
+/// Peak memory is one block (`block_nnz` entries) plus the per-mode
+/// maxima — independent of file size.
+pub struct TnsBlockReader<R: BufRead> {
+    reader: R,
+    block_nnz: usize,
+    lineno: usize,
+    n_modes: Option<usize>,
+    maxima: Vec<Coord>,
+    total_nnz: usize,
+    /// Reused line buffer: one allocation for the whole file.
+    line: String,
+    eof: bool,
+}
+
+impl<R: BufRead> TnsBlockReader<R> {
+    pub fn new(reader: R, block_nnz: usize) -> Self {
+        assert!(block_nnz > 0, "block_nnz must be positive");
+        TnsBlockReader {
+            reader,
+            block_nnz,
+            lineno: 0,
+            n_modes: None,
+            maxima: Vec::new(),
+            total_nnz: 0,
+            line: String::new(),
+            eof: false,
+        }
+    }
+
+    /// Arity, once the first data line has fixed it.
+    pub fn n_modes(&self) -> Option<usize> {
+        self.n_modes
+    }
+
+    /// Nonzeros yielded so far.
+    pub fn total_nnz(&self) -> usize {
+        self.total_nnz
+    }
+
+    /// Mode lengths observed so far (per-mode coordinate maxima + 1).
+    /// Final only after the last block has been consumed — the format
+    /// stores no dims, so they cannot be known earlier.
+    pub fn dims(&self) -> Vec<usize> {
+        self.maxima.iter().map(|&m| m as usize + 1).collect()
+    }
+
+    /// Parse and append one line; `Ok(true)` if it carried a data entry.
+    fn parse_line(
+        &mut self,
+        cols: &mut Vec<Vec<Coord>>,
+        vals: &mut Vec<f32>,
+    ) -> Result<bool, TnsError> {
+        let lineno = self.lineno;
+        let data = match self.line.find('#') {
+            Some(pos) => &self.line[..pos],
+            None => &self.line[..],
         };
         let fields: Vec<&str> = data.split_whitespace().collect();
         if fields.is_empty() {
-            continue;
+            return Ok(false);
         }
         if fields.len() < 3 {
             return Err(TnsError::Parse(
@@ -63,11 +132,10 @@ pub fn read_tns<R: Read>(reader: R) -> Result<SparseTensor, TnsError> {
             ));
         }
         let arity = fields.len() - 1;
-        match n_modes {
+        match self.n_modes {
             None => {
-                n_modes = Some(arity);
-                cols = vec![Vec::new(); arity];
-                maxima = vec![0; arity];
+                self.n_modes = Some(arity);
+                self.maxima = vec![0; arity];
             }
             Some(n) if n != arity => {
                 return Err(TnsError::Parse(
@@ -76,6 +144,9 @@ pub fn read_tns<R: Read>(reader: R) -> Result<SparseTensor, TnsError> {
                 ));
             }
             _ => {}
+        }
+        if cols.len() != arity {
+            cols.resize_with(arity, Vec::new);
         }
         for (m, f) in fields[..arity].iter().enumerate() {
             let c: u64 = f
@@ -88,21 +159,88 @@ pub fn read_tns<R: Read>(reader: R) -> Result<SparseTensor, TnsError> {
                 ));
             }
             let c0 = (c - 1) as Coord;
-            maxima[m] = maxima[m].max(c0);
+            self.maxima[m] = self.maxima[m].max(c0);
             cols[m].push(c0);
         }
         let v: f32 = fields[arity]
             .parse()
             .map_err(|e| TnsError::Parse(lineno, format!("bad value {:?}: {e}", fields[arity])))?;
         vals.push(v);
+        Ok(true)
     }
 
+    /// Parse the next block of at most `block_nnz` entries; `Ok(None)`
+    /// at end of input.  Comments and blank lines may straddle block
+    /// boundaries freely — they consume input lines, not block slots.
+    pub fn next_block(&mut self) -> Result<Option<TnsBlock>, TnsError> {
+        if self.eof {
+            return Ok(None);
+        }
+        // Cap pre-allocation: callers may pass a huge block_nnz to mean
+        // "one block"; grow on demand instead of reserving it all.
+        let reserve = self.block_nnz.min(DEFAULT_BLOCK_NNZ);
+        let mut cols: Vec<Vec<Coord>> = match self.n_modes {
+            Some(n) => {
+                let mut c = Vec::with_capacity(n);
+                c.resize_with(n, || Vec::with_capacity(reserve));
+                c
+            }
+            None => Vec::new(),
+        };
+        let mut vals: Vec<f32> = Vec::with_capacity(reserve);
+        while vals.len() < self.block_nnz {
+            self.line.clear();
+            if self.reader.read_line(&mut self.line)? == 0 {
+                self.eof = true;
+                break;
+            }
+            self.lineno += 1;
+            self.parse_line(&mut cols, &mut vals)?;
+        }
+        if vals.is_empty() {
+            return Ok(None);
+        }
+        self.total_nnz += vals.len();
+        Ok(Some(TnsBlock { cols, vals }))
+    }
+}
+
+/// Open a `.tns` file as a block reader for streamed ingestion.
+pub fn block_reader_file(
+    path: &Path,
+    block_nnz: usize,
+) -> Result<TnsBlockReader<BufReader<std::fs::File>>, TnsError> {
+    Ok(TnsBlockReader::new(
+        BufReader::new(std::fs::File::open(path)?),
+        block_nnz,
+    ))
+}
+
+/// Parse a `.tns` stream.  All data lines must have the same arity.
+///
+/// Built on [`TnsBlockReader`] — the in-RAM tensor is the concatenation
+/// of the streamed blocks, so the two paths are bit-identical by
+/// construction (and pinned by `tests/streaming_props.rs`).
+pub fn read_tns<R: Read>(reader: R) -> Result<SparseTensor, TnsError> {
+    let mut blocks = TnsBlockReader::new(BufReader::new(reader), DEFAULT_BLOCK_NNZ);
+    let mut cols: Vec<Vec<Coord>> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    while let Some(b) = blocks.next_block()? {
+        if cols.is_empty() {
+            cols = b.cols;
+            vals = b.vals;
+        } else {
+            for (col, mut bc) in cols.iter_mut().zip(b.cols) {
+                col.append(&mut bc);
+            }
+            vals.extend(b.vals);
+        }
+    }
     if vals.is_empty() {
         return Err(TnsError::Empty);
     }
-    let dims: Vec<usize> = maxima.iter().map(|&m| m as usize + 1).collect();
     Ok(SparseTensor::from_columns(
-        dims,
+        blocks.dims(),
         cols,
         vals,
         super::SortOrder::Unsorted,
@@ -182,6 +320,36 @@ mod tests {
         for m in 0..3 {
             assert_eq!(t2.mode_col(m), t.mode_col(m));
         }
+    }
+
+    #[test]
+    fn block_reader_yields_bounded_blocks_that_concatenate() {
+        let text = "1 1 1 1.0\n2 2 2 2.0\n# noise\n3 3 3 3.0\n\n4 4 4 4.0\n5 5 5 5.0\n";
+        let mut r = TnsBlockReader::new(text.as_bytes(), 2);
+        let mut sizes = Vec::new();
+        let mut all_vals = Vec::new();
+        while let Some(b) = r.next_block().unwrap() {
+            assert!(b.nnz() <= 2, "block overflowed: {}", b.nnz());
+            assert_eq!(b.cols.len(), 3);
+            sizes.push(b.nnz());
+            all_vals.extend(b.vals);
+        }
+        assert_eq!(sizes, vec![2, 2, 1], "5 entries at block_nnz=2");
+        assert_eq!(all_vals, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(r.total_nnz(), 5);
+        assert_eq!(r.dims(), vec![5, 5, 5]);
+        assert_eq!(r.n_modes(), Some(3));
+    }
+
+    #[test]
+    fn block_reader_propagates_errors_with_exact_line_numbers() {
+        // The bad line sits in the second block; the line number is
+        // still the physical file line.
+        let text = "1 1 1 1.0\n2 2 2 2.0\n0 1 1 9.0\n";
+        let mut r = TnsBlockReader::new(text.as_bytes(), 2);
+        assert_eq!(r.next_block().unwrap().unwrap().nnz(), 2);
+        let err = r.next_block().unwrap_err();
+        assert!(matches!(err, TnsError::Parse(3, _)), "{err}");
     }
 
     #[test]

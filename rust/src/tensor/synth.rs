@@ -58,6 +58,94 @@ impl SynthConfig {
     }
 }
 
+/// Profile-specific coordinate drawing, shared by the deduplicating
+/// [`generate`] and the bounded-memory [`generate_streamed`].  Both
+/// construct it after seeding the RNG and draw tuples in the same
+/// order, so the two generators consume the identical random sequence
+/// per accepted draw.
+struct CoordSampler<'a> {
+    cfg: &'a SynthConfig,
+    /// Cluster anchors for [`Profile::Clustered`].
+    anchors: Vec<Vec<Coord>>,
+    /// Per-mode random permutations for the Zipf profile so the "hub"
+    /// coordinates are scattered across the index range rather than
+    /// all being small numbers (which would fake spatial locality).
+    scatter: Vec<Vec<Coord>>,
+}
+
+impl<'a> CoordSampler<'a> {
+    fn new(cfg: &'a SynthConfig, rng: &mut Rng) -> Self {
+        let anchors: Vec<Vec<Coord>> = match cfg.profile {
+            Profile::Clustered { block, blocks } => (0..blocks)
+                .map(|_| {
+                    cfg.dims
+                        .iter()
+                        .map(|&d| {
+                            let hi = d.saturating_sub(block).max(1);
+                            rng.below(hi as u64) as Coord
+                        })
+                        .collect()
+                })
+                .collect(),
+            _ => Vec::new(),
+        };
+        let scatter: Vec<Vec<Coord>> = match cfg.profile {
+            Profile::Zipf { .. } => cfg
+                .dims
+                .iter()
+                .map(|&d| {
+                    let mut p: Vec<Coord> = (0..d as Coord).collect();
+                    rng.shuffle(&mut p);
+                    p
+                })
+                .collect(),
+            _ => Vec::new(),
+        };
+        CoordSampler {
+            cfg,
+            anchors,
+            scatter,
+        }
+    }
+
+    /// Draw one coordinate tuple into `out` (cleared first).
+    fn draw(&self, rng: &mut Rng, out: &mut Vec<Coord>) {
+        out.clear();
+        match self.cfg.profile {
+            Profile::Uniform => {
+                out.extend(self.cfg.dims.iter().map(|&d| rng.below(d as u64) as Coord))
+            }
+            Profile::Zipf { alpha_milli } => {
+                let alpha = alpha_milli as f64 / 1000.0;
+                out.extend(
+                    self.cfg
+                        .dims
+                        .iter()
+                        .enumerate()
+                        .map(|(m, &d)| self.scatter[m][rng.zipf(d as u64, alpha) as usize]),
+                )
+            }
+            Profile::Clustered { block, .. } => {
+                let a = &self.anchors[rng.range(0, self.anchors.len())];
+                out.extend(self.cfg.dims.iter().enumerate().map(|(m, &d)| {
+                    let c = a[m] as usize + rng.range(0, block);
+                    c.min(d - 1) as Coord
+                }))
+            }
+        }
+    }
+}
+
+/// Values in (-1, 1), excluding exact zero.
+fn draw_value(rng: &mut Rng) -> f32 {
+    let v = rng.f32() * 2.0 - 1.0;
+    if v == 0.0 {
+        0.5
+    } else {
+        v
+    }
+}
+
 /// Generate a tensor with *unique* coordinates and values in `(-1, 1)`.
 ///
 /// Panics if `nnz` exceeds 50% of the coordinate space (the rejection
@@ -71,80 +159,52 @@ pub fn generate(cfg: &SynthConfig) -> SparseTensor {
         cfg.dims
     );
     let mut rng = Rng::new(cfg.seed);
+    let sampler = CoordSampler::new(cfg, &mut rng);
     let mut seen: HashSet<Vec<Coord>> = HashSet::with_capacity(cfg.nnz * 2);
     let mut cols: Vec<Vec<Coord>> = vec![Vec::with_capacity(cfg.nnz); cfg.dims.len()];
     let mut vals = Vec::with_capacity(cfg.nnz);
-
-    // Pre-place cluster anchors for the clustered profile.
-    let anchors: Vec<Vec<Coord>> = match cfg.profile {
-        Profile::Clustered { block, blocks } => (0..blocks)
-            .map(|_| {
-                cfg.dims
-                    .iter()
-                    .map(|&d| {
-                        let hi = d.saturating_sub(block).max(1);
-                        rng.below(hi as u64) as Coord
-                    })
-                    .collect()
-            })
-            .collect(),
-        _ => Vec::new(),
-    };
-
-    // Per-mode random permutations for the Zipf profile so the "hub"
-    // coordinates are scattered across the index range rather than all
-    // being small numbers (which would fake spatial locality).
-    let scatter: Vec<Vec<Coord>> = match cfg.profile {
-        Profile::Zipf { .. } => cfg
-            .dims
-            .iter()
-            .map(|&d| {
-                let mut p: Vec<Coord> = (0..d as Coord).collect();
-                rng.shuffle(&mut p);
-                p
-            })
-            .collect(),
-        _ => Vec::new(),
-    };
+    let mut coords: Vec<Coord> = Vec::with_capacity(cfg.dims.len());
 
     while vals.len() < cfg.nnz {
-        let coords: Vec<Coord> = match cfg.profile {
-            Profile::Uniform => cfg
-                .dims
-                .iter()
-                .map(|&d| rng.below(d as u64) as Coord)
-                .collect(),
-            Profile::Zipf { alpha_milli } => {
-                let alpha = alpha_milli as f64 / 1000.0;
-                cfg.dims
-                    .iter()
-                    .enumerate()
-                    .map(|(m, &d)| scatter[m][rng.zipf(d as u64, alpha) as usize])
-                    .collect()
-            }
-            Profile::Clustered { block, .. } => {
-                let a = &anchors[rng.range(0, anchors.len())];
-                cfg.dims
-                    .iter()
-                    .enumerate()
-                    .map(|(m, &d)| {
-                        let c = a[m] as usize + rng.range(0, block);
-                        c.min(d - 1) as Coord
-                    })
-                    .collect()
-            }
-        };
+        sampler.draw(&mut rng, &mut coords);
         if seen.insert(coords.clone()) {
             for (m, &c) in coords.iter().enumerate() {
                 cols[m].push(c);
             }
-            // Values in (-1, 1), excluding exact zero.
-            let mut v = rng.f32() * 2.0 - 1.0;
-            if v == 0.0 {
-                v = 0.5;
-            }
-            vals.push(v);
+            vals.push(draw_value(&mut rng));
         }
+    }
+
+    SparseTensor::from_columns(cfg.dims.clone(), cols, vals, super::SortOrder::Unsorted)
+}
+
+/// [`generate`] without the coordinate-dedup set (S24): draws exactly
+/// `nnz` tuples and keeps every one.  The dedup `HashSet` holds an
+/// owned coordinate tuple per non-zero — at 100M nnz that is several
+/// gigabytes on top of the tensor itself — so the out-of-core path
+/// cannot afford it.  Duplicate coordinates may occur with probability
+/// ~`nnz² / (2·space)`; for the huge, hyper-sparse tensors this path
+/// exists for that is vanishingly rare, and the simulation pipeline
+/// (remap, Approach-1, replay) treats a duplicate as two co-located
+/// non-zeros, which is harmless for timing studies.  Peak memory is
+/// the COO columns + values and nothing else.
+///
+/// When no draw collides, the result is bit-identical to [`generate`]
+/// with the same config (both consume the same RNG sequence per
+/// accepted draw).
+pub fn generate_streamed(cfg: &SynthConfig) -> SparseTensor {
+    let mut rng = Rng::new(cfg.seed);
+    let sampler = CoordSampler::new(cfg, &mut rng);
+    let mut cols: Vec<Vec<Coord>> = vec![Vec::with_capacity(cfg.nnz); cfg.dims.len()];
+    let mut vals = Vec::with_capacity(cfg.nnz);
+    let mut coords: Vec<Coord> = Vec::with_capacity(cfg.dims.len());
+
+    for _ in 0..cfg.nnz {
+        sampler.draw(&mut rng, &mut coords);
+        for (m, &c) in coords.iter().enumerate() {
+            cols[m].push(c);
+        }
+        vals.push(draw_value(&mut rng));
     }
 
     SparseTensor::from_columns(cfg.dims.clone(), cols, vals, super::SortOrder::Unsorted)
@@ -279,6 +339,54 @@ mod tests {
         let b = generate(&SynthConfig { nnz: 2_000, ..cfg });
         assert_eq!(a.values(), b.values());
         assert_eq!(a.mode_col(0), b.mode_col(0));
+    }
+
+    #[test]
+    fn streamed_matches_generate_when_sparse_enough() {
+        // Space 1e12, nnz 2000: the dedup path accepts every draw, so
+        // both generators walk the identical RNG sequence and must
+        // produce the identical tensor (deterministic per seed).
+        for profile in [
+            Profile::Uniform,
+            Profile::Zipf { alpha_milli: 1200 },
+            Profile::Clustered {
+                block: 16,
+                blocks: 40,
+            },
+        ] {
+            let cfg = SynthConfig {
+                dims: vec![10_000, 10_000, 10_000],
+                nnz: 2_000,
+                profile,
+                seed: 11,
+            };
+            let a = generate(&cfg);
+            let b = generate_streamed(&cfg);
+            assert_eq!(a.nnz(), b.nnz(), "{profile:?}");
+            assert_eq!(a.values(), b.values(), "{profile:?}");
+            for m in 0..3 {
+                assert_eq!(a.mode_col(m), b.mode_col(m), "{profile:?} mode {m}");
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_is_deterministic_and_exact_nnz() {
+        let cfg = SynthConfig {
+            dims: vec![300, 200, 100],
+            nnz: 5_000,
+            profile: Profile::Zipf { alpha_milli: 1100 },
+            seed: 3,
+        };
+        let a = generate_streamed(&cfg);
+        let b = generate_streamed(&cfg);
+        assert_eq!(a.nnz(), 5_000);
+        assert_eq!(a.values(), b.values());
+        for m in 0..3 {
+            assert_eq!(a.mode_col(m), b.mode_col(m));
+            let &max = a.mode_col(m).iter().max().unwrap();
+            assert!((max as usize) < cfg.dims[m]);
+        }
     }
 
     #[test]

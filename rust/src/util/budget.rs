@@ -1,0 +1,122 @@
+//! Memory-budget plumbing (S24): parse human-readable size strings
+//! from `--memory-budget`, and observe the process's peak resident set
+//! so the CLI can prove an out-of-core run actually stayed under it.
+//!
+//! The budget is an *observable contract*, not an allocator limit: the
+//! streaming paths (block-streamed parse, windowed replay, spilled
+//! remap columns, compressed-only traces) are what keep the footprint
+//! bounded; [`peak_rss_bytes`] is the measurement that shows they did.
+
+/// Parse a human-readable byte size: a plain integer (bytes) or an
+/// integer with a `k`/`m`/`g`/`t` suffix (binary units, 1k = 1024),
+/// optionally followed by `b`/`ib` — `"4g"`, `"4GiB"`, `"512m"`,
+/// `"1048576"` all work, case-insensitively.
+pub fn parse_size(s: &str) -> Result<u64, String> {
+    let t = s.trim().to_ascii_lowercase();
+    if t.is_empty() {
+        return Err("empty size".into());
+    }
+    let digits_end = t
+        .find(|c: char| !c.is_ascii_digit())
+        .unwrap_or(t.len());
+    let (num, suffix) = t.split_at(digits_end);
+    let n: u64 = num
+        .parse()
+        .map_err(|_| format!("invalid size '{s}': expected digits first"))?;
+    let shift = match suffix {
+        "" | "b" => 0,
+        "k" | "kb" | "kib" => 10,
+        "m" | "mb" | "mib" => 20,
+        "g" | "gb" | "gib" => 30,
+        "t" | "tb" | "tib" => 40,
+        _ => {
+            return Err(format!(
+                "invalid size '{s}': unknown suffix '{suffix}' (use k/m/g/t)"
+            ))
+        }
+    };
+    n.checked_shl(shift)
+        .filter(|v| v >> shift == n)
+        .ok_or_else(|| format!("size '{s}' overflows u64"))
+}
+
+/// Render a byte count with a binary-unit suffix, e.g. `"3.72 GiB"`.
+pub fn format_size(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Peak resident set size of this process, in bytes (`VmHWM` from
+/// `/proc/self/status`).  `None` on platforms without procfs.
+pub fn peak_rss_bytes() -> Option<u64> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        for line in status.lines() {
+            if let Some(rest) = line.strip_prefix("VmHWM:") {
+                let kb: u64 = rest
+                    .trim()
+                    .trim_end_matches("kB")
+                    .trim()
+                    .parse()
+                    .ok()?;
+                return Some(kb * 1024);
+            }
+        }
+        None
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_bytes_and_suffixes() {
+        assert_eq!(parse_size("123"), Ok(123));
+        assert_eq!(parse_size("64k"), Ok(64 << 10));
+        assert_eq!(parse_size("512m"), Ok(512 << 20));
+        assert_eq!(parse_size("4g"), Ok(4 << 30));
+        assert_eq!(parse_size("4G"), Ok(4 << 30));
+        assert_eq!(parse_size("4GiB"), Ok(4 << 30));
+        assert_eq!(parse_size("2tb"), Ok(2 << 40));
+        assert_eq!(parse_size(" 8mb "), Ok(8 << 20));
+    }
+
+    #[test]
+    fn rejects_malformed_sizes() {
+        assert!(parse_size("").is_err());
+        assert!(parse_size("g4").is_err());
+        assert!(parse_size("4x").is_err());
+        assert!(parse_size("4.5g").is_err(), "fractions are not supported");
+        assert!(parse_size("99999999999g").is_err(), "overflow must error");
+    }
+
+    #[test]
+    fn formats_binary_units() {
+        assert_eq!(format_size(512), "512 B");
+        assert_eq!(format_size(4 << 30), "4.00 GiB");
+        assert_eq!(format_size((3 << 30) + (768 << 20)), "3.75 GiB");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn peak_rss_is_positive_on_linux() {
+        let rss = peak_rss_bytes().expect("procfs must expose VmHWM");
+        assert!(rss > 1 << 20, "peak RSS {rss} suspiciously small");
+    }
+}

@@ -1,10 +1,13 @@
 //! Small shared utilities (S22): the scoped-thread fan-out helper used
-//! by every batch-parallel path in the crate, and the shared
-//! remap-pass cycle memo the DSE evaluators key per
-//! (mode, DRAM, remapper).
+//! by every batch-parallel path in the crate, the shared remap-pass
+//! cycle memo the DSE evaluators key per (mode, DRAM, remapper), and
+//! the memory-budget plumbing (size parsing, peak-RSS observation,
+//! spill-to-disk coordinate columns) behind `--memory-budget` (S24).
 
+pub mod budget;
 pub mod par;
 pub mod remap_memo;
 
+pub use budget::{format_size, parse_size, peak_rss_bytes};
 pub use par::parallel_indexed;
-pub use remap_memo::{RemapKey, RemapMemo};
+pub use remap_memo::{RemapKey, RemapMemo, SpillCol};

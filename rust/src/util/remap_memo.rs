@@ -15,10 +15,15 @@
 //! keying and the interior-mutable map.
 
 use std::collections::HashMap;
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::controller::{ControllerConfig, RemapperConfig};
 use crate::mem::MemTechConfig;
+use crate::tensor::Coord;
 
 /// Key of one memoized remap-pass simulation: the only knobs the pass
 /// is sensitive to.
@@ -71,6 +76,103 @@ impl RemapMemo {
     }
 }
 
+/// Distinguishes concurrently-spilled columns within one process.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A per-mode coordinate column that can live on disk instead of in
+/// RAM (S24).  The DSE evaluator snapshots one mode-`m` coordinate
+/// column per tensor mode so the remap-pass simulation can replay it
+/// later; at 100M nnz each snapshot is ~400 MB, and N of them retained
+/// for the sweep's lifetime would eat most of a 4 GB budget on their
+/// own.  Under a memory budget the snapshot is written to a temp file
+/// (little-endian `u32`s) and re-read only on the rare, memoized
+/// remap-cycle simulation; without a budget it stays a plain `Vec`.
+#[derive(Debug)]
+pub enum SpillCol {
+    /// Column held in RAM (no budget, or spilling failed/was declined).
+    Ram(Vec<Coord>),
+    /// Column spilled to `path` (`len` little-endian `u32`s); the file
+    /// is removed on drop.
+    Disk { path: PathBuf, len: usize },
+}
+
+impl SpillCol {
+    /// Wrap `col`, spilling it to a temp file when `spill` is set.
+    /// Falls back to keeping the column in RAM if the spill write
+    /// fails (a budget is a goal, not a correctness requirement).
+    pub fn new(col: Vec<Coord>, spill: bool) -> Self {
+        if !spill {
+            return SpillCol::Ram(col);
+        }
+        match Self::write_spill(&col) {
+            Ok(path) => SpillCol::Disk {
+                path,
+                len: col.len(),
+            },
+            Err(_) => SpillCol::Ram(col),
+        }
+    }
+
+    fn write_spill(col: &[Coord]) -> io::Result<PathBuf> {
+        let path = std::env::temp_dir().join(format!(
+            "ptmc-spill-{}-{}.bin",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        let mut w = io::BufWriter::new(fs::File::create(&path)?);
+        for &c in col {
+            w.write_all(&c.to_le_bytes())?;
+        }
+        w.flush()?;
+        Ok(path)
+    }
+
+    /// The column, re-read from disk if spilled.
+    pub fn load(&self) -> Vec<Coord> {
+        match self {
+            SpillCol::Ram(col) => col.clone(),
+            SpillCol::Disk { path, len } => {
+                let mut r = io::BufReader::new(
+                    fs::File::open(path).expect("spilled column vanished"),
+                );
+                let mut col = Vec::with_capacity(*len);
+                let mut buf = [0u8; 4];
+                for _ in 0..*len {
+                    r.read_exact(&mut buf).expect("spilled column truncated");
+                    col.push(Coord::from_le_bytes(buf));
+                }
+                col
+            }
+        }
+    }
+
+    /// Number of coordinates in the column.
+    pub fn len(&self) -> usize {
+        match self {
+            SpillCol::Ram(col) => col.len(),
+            SpillCol::Disk { len, .. } => *len,
+        }
+    }
+
+    /// True when the column holds no coordinates.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the column lives on disk.
+    pub fn spilled(&self) -> bool {
+        matches!(self, SpillCol::Disk { .. })
+    }
+}
+
+impl Drop for SpillCol {
+    fn drop(&mut self) {
+        if let SpillCol::Disk { path, .. } = self {
+            let _ = fs::remove_file(path);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +222,38 @@ mod tests {
         assert!(memo.is_empty());
         memo.cycles(2, &ControllerConfig::default_for(16), || 9);
         assert!(!memo.is_empty());
+    }
+
+    #[test]
+    fn ram_column_round_trips_without_touching_disk() {
+        let col: Vec<Coord> = (0..1_000).rev().collect();
+        let s = SpillCol::new(col.clone(), false);
+        assert!(!s.spilled());
+        assert_eq!(s.len(), 1_000);
+        assert_eq!(s.load(), col);
+    }
+
+    #[test]
+    fn spilled_column_round_trips_and_cleans_up() {
+        let col: Vec<Coord> = vec![0, u32::MAX, 7, 0x0102_0304, 42];
+        let s = SpillCol::new(col.clone(), true);
+        assert!(s.spilled(), "temp dir must be writable in tests");
+        assert_eq!(s.len(), col.len());
+        assert_eq!(s.load(), col, "first load");
+        assert_eq!(s.load(), col, "load must be repeatable");
+        let path = match &s {
+            SpillCol::Disk { path, .. } => path.clone(),
+            SpillCol::Ram(_) => unreachable!(),
+        };
+        assert!(path.exists());
+        drop(s);
+        assert!(!path.exists(), "drop must remove the spill file");
+    }
+
+    #[test]
+    fn empty_column_spills_harmlessly() {
+        let s = SpillCol::new(Vec::new(), true);
+        assert!(s.is_empty());
+        assert_eq!(s.load(), Vec::<Coord>::new());
     }
 }

@@ -1,0 +1,268 @@
+//! S24 out-of-core property suite: the bounded-memory pipeline must be
+//! bit-identical to the in-RAM pipeline at every randomized boundary.
+//!
+//! * Block-streamed FROSTT ingestion ([`TnsBlockReader`]) vs the
+//!   whole-file parser, at random block sizes with comments and blank
+//!   lines straddling block boundaries.
+//! * Windowed event replay ([`replay_events_source`]) vs one
+//!   monolithic `replay_events`, on real Approach-1 traces at random
+//!   window sizes.
+//! * Windowed grid classification + replay
+//!   ([`GridClassification::classify_source`] / `replay_source`) vs
+//!   the monolithic entry points, full [`GridRun`] equality.
+//! * Windowed timing-op extraction ([`TimingOps::extract_source`]) vs
+//!   monolithic extraction, compared through `time_grid`.
+//! * Shard planning from the one-pass coordinate-histogram sketch fed
+//!   block by block vs [`ShardPlan::balance`] on the materialized
+//!   tensor.
+//! * The dedup-free streamed synthesizer vs [`generate`] on tensors
+//!   sparse enough that the dedup path accepts every draw.
+
+use ptmc::controller::{CacheConfig, ControllerConfig, MemLayout, MemoryController};
+use ptmc::cpd::linalg::Mat;
+use ptmc::engine::{
+    replay_events_source, ChunkedWindows, CompressedTrace, GridClassification, TimingCandidate,
+    TimingOps,
+};
+use ptmc::mttkrp::{approach1, Tracing};
+use ptmc::shard::{CoordHistogram, ShardPlan};
+use ptmc::tensor::frostt::{read_tns, write_tns, TnsBlockReader};
+use ptmc::tensor::synth::{generate, generate_streamed, Profile, SynthConfig};
+use ptmc::tensor::{Coord, SortOrder, SparseTensor};
+use ptmc::testkit::{forall, Rng};
+
+fn assert_same_tensor(a: &SparseTensor, b: &SparseTensor) {
+    assert_eq!(a.n_modes(), b.n_modes());
+    assert_eq!(a.dims(), b.dims());
+    assert_eq!(a.nnz(), b.nnz());
+    assert_eq!(a.values(), b.values(), "values diverged");
+    for m in 0..a.n_modes() {
+        assert_eq!(a.mode_col(m), b.mode_col(m), "mode {m} columns diverged");
+    }
+}
+
+/// A small random tensor and the real Approach-1 access trace of one
+/// of its modes — the trace shape the streaming cores exist for.
+fn approach1_trace(rng: &mut Rng) -> Vec<ptmc::controller::Access> {
+    let dims = vec![rng.range(20, 60), rng.range(20, 60), rng.range(20, 60)];
+    let mut t = generate(&SynthConfig {
+        dims,
+        nnz: rng.range(200, 1_200),
+        profile: Profile::Zipf { alpha_milli: 1200 },
+        seed: rng.next_u64(),
+    });
+    let rank = 8;
+    let factors: Vec<Mat> = t
+        .dims()
+        .iter()
+        .enumerate()
+        .map(|(m, &d)| Mat::randn(d, rank, m as u64))
+        .collect();
+    let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+    let mode = rng.range(0, 3);
+    t.sort_by_mode(mode);
+    approach1::run(&t, &factors, mode, &layout, Tracing::On).trace
+}
+
+#[test]
+fn block_streamed_parse_matches_in_ram_parse() {
+    forall("streamed_parse_equivalence", 24, |rng| {
+        // Random tensor -> .tns text with comments / blank lines
+        // interleaved so noise straddles block boundaries.
+        let n_modes = rng.range(2, 5);
+        let nnz = rng.range(1, 150);
+        let mut cols: Vec<Vec<Coord>> = vec![Vec::with_capacity(nnz); n_modes];
+        let mut vals: Vec<f32> = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            for col in cols.iter_mut() {
+                col.push(rng.below(40) as Coord);
+            }
+            let mut v = (rng.f32() - 0.5) * 100.0;
+            if v == 0.0 {
+                v = 1.0;
+            }
+            vals.push(v);
+        }
+        let dims: Vec<usize> = cols
+            .iter()
+            .map(|c| *c.iter().max().unwrap() as usize + 1)
+            .collect();
+        let t = SparseTensor::from_columns(dims, cols, vals, SortOrder::Unsorted);
+        let mut buf = Vec::new();
+        write_tns(&t, &mut buf).unwrap();
+        let mut noisy = String::new();
+        for line in String::from_utf8(buf).unwrap().lines() {
+            while rng.below(4) == 0 {
+                noisy.push_str(if rng.below(2) == 0 { "# noise\n" } else { "\n" });
+            }
+            noisy.push_str(line);
+            if rng.below(5) == 0 {
+                noisy.push_str(" # trailing");
+            }
+            noisy.push('\n');
+        }
+
+        let whole = read_tns(noisy.as_bytes()).expect("in-RAM parse");
+        let block_nnz = rng.range(1, 40);
+        let mut r = TnsBlockReader::new(noisy.as_bytes(), block_nnz);
+        let mut cols: Vec<Vec<Coord>> = Vec::new();
+        let mut vals: Vec<f32> = Vec::new();
+        while let Some(b) = r.next_block().expect("streamed parse") {
+            assert!(b.nnz() <= block_nnz, "block overflowed");
+            if cols.is_empty() {
+                cols = b.cols;
+                vals = b.vals;
+            } else {
+                for (c, mut bc) in cols.iter_mut().zip(b.cols) {
+                    c.append(&mut bc);
+                }
+                vals.extend(b.vals);
+            }
+        }
+        let streamed = SparseTensor::from_columns(r.dims(), cols, vals, SortOrder::Unsorted);
+        assert_same_tensor(&whole, &streamed);
+    });
+}
+
+#[test]
+fn windowed_event_replay_matches_monolithic_on_real_traces() {
+    forall("streamed_event_replay", 10, |rng| {
+        let trace = approach1_trace(rng);
+        let mono = CompressedTrace::compress(&trace);
+        let window = rng.range(1, trace.len() + 1);
+        let mut a = MemoryController::new(ControllerConfig::default_for(16));
+        let mut b = MemoryController::new(ControllerConfig::default_for(16));
+        let ta = a.replay_events(&mono);
+        let tb = replay_events_source(&mut b, &mut ChunkedWindows::new(&trace, window));
+        assert_eq!(ta, tb, "cycles diverged at window {window}");
+        assert_eq!(a.stats(), b.stats(), "window {window}");
+        assert_eq!(a.cache_stats(), b.cache_stats(), "window {window}");
+        assert_eq!(a.dma_stats(), b.dma_stats(), "window {window}");
+        assert_eq!(a.dram_stats(), b.dram_stats(), "window {window}");
+    });
+}
+
+fn random_cache_grid(rng: &mut Rng) -> Vec<CacheConfig> {
+    let mut grid = Vec::new();
+    for _ in 0..rng.range(2, 6) {
+        let assoc = 1usize << rng.range(0, 3);
+        let num_lines = assoc.max(64) << rng.range(0, 4);
+        grid.push(CacheConfig {
+            line_bytes: 16usize << rng.range(0, 4),
+            num_lines,
+            assoc,
+            hit_latency: rng.range(1, 4) as u64,
+        });
+    }
+    grid
+}
+
+#[test]
+fn windowed_grid_replay_matches_monolithic_on_real_traces() {
+    forall("streamed_grid_replay", 8, |rng| {
+        let trace = approach1_trace(rng);
+        let mono_trace = CompressedTrace::compress(&trace);
+        let grid = random_cache_grid(rng);
+        let window = rng.range(1, trace.len() + 1);
+        let mono = GridClassification::classify(&mono_trace, &grid);
+        let cls = GridClassification::classify_source(&mut ChunkedWindows::new(&trace, window), &grid);
+        for (i, cc) in grid.iter().enumerate() {
+            let mut cfg = ControllerConfig::default_for(16);
+            cfg.cache = *cc;
+            let want = mono.replay(i, &mono_trace, &cfg);
+            let got = cls.replay_source(i, &mut ChunkedWindows::new(&trace, window), &cfg);
+            assert_eq!(got, want, "{cc:?} diverged at window {window}");
+        }
+    });
+}
+
+#[test]
+fn windowed_timing_extraction_matches_monolithic_on_real_traces() {
+    forall("streamed_timing_extraction", 8, |rng| {
+        let trace = approach1_trace(rng);
+        let mono_trace = CompressedTrace::compress(&trace);
+        let cache = CacheConfig {
+            line_bytes: 32,
+            num_lines: 256,
+            assoc: 2,
+            hit_latency: 2,
+        };
+        let window = rng.range(1, trace.len() + 1);
+        let mono_cls = GridClassification::classify(&mono_trace, &[cache]);
+        let mono_ops = TimingOps::extract(&mono_cls, 0, &mono_trace);
+        let cls =
+            GridClassification::classify_source(&mut ChunkedWindows::new(&trace, window), &[cache]);
+        let ops = TimingOps::extract_source(&cls, 0, &mut ChunkedWindows::new(&trace, window));
+        // Time a few candidates through both op queues: identical
+        // queues must produce identical runs.
+        let mut cands = Vec::new();
+        for _ in 0..3 {
+            let mut cfg = ControllerConfig::default_for(16);
+            cfg.dma.num_dmas = 1 << rng.range(0, 3);
+            cfg.mem.ddr4_mut().channels = 1 << rng.range(0, 3);
+            cands.push(TimingCandidate::of(&cfg));
+        }
+        assert_eq!(
+            mono_ops.time_grid(&cands),
+            ops.time_grid(&cands),
+            "timing runs diverged at window {window}"
+        );
+    });
+}
+
+#[test]
+fn histogram_sketch_plans_match_materialized_balance_block_by_block() {
+    forall("streamed_shard_planning", 16, |rng| {
+        let n_modes = rng.range(2, 5);
+        let dims: Vec<usize> = (0..n_modes).map(|_| rng.range(10, 200)).collect();
+        let t = generate(&SynthConfig {
+            dims: dims.clone(),
+            nnz: rng.range(50, 2_000).min(
+                dims.iter().product::<usize>() / 2,
+            ),
+            profile: Profile::Uniform,
+            seed: rng.next_u64(),
+        });
+        // Feed the sketch in bounded blocks, as streamed ingestion would.
+        let block = rng.range(1, t.nnz() + 1);
+        let mut hist = CoordHistogram::new();
+        let mut at = 0;
+        while at < t.nnz() {
+            let hi = (at + block).min(t.nnz());
+            let cols: Vec<Vec<Coord>> = (0..n_modes)
+                .map(|m| t.mode_col(m)[at..hi].to_vec())
+                .collect();
+            hist.observe(&cols);
+            at = hi;
+        }
+        let k = rng.range(1, 9);
+        for mode in 0..n_modes {
+            let want = ShardPlan::balance(&t, mode, k);
+            let got = hist.plan_for_dim(mode, t.dims()[mode], k);
+            assert_eq!(got.mode, want.mode);
+            assert_eq!(
+                got.shards, want.shards,
+                "mode {mode} k {k} block {block} diverged"
+            );
+        }
+    });
+}
+
+#[test]
+fn streamed_synthesis_matches_dedup_synthesis_when_sparse() {
+    forall("streamed_synthesis_equivalence", 12, |rng| {
+        // Space >= 1e9, nnz <= 1000: the dedup generator accepts every
+        // draw, so both must walk the identical RNG sequence.
+        let cfg = SynthConfig {
+            dims: vec![1_000, 1_000, 1_000],
+            nnz: rng.range(1, 1_000),
+            profile: if rng.below(2) == 0 {
+                Profile::Uniform
+            } else {
+                Profile::Zipf { alpha_milli: 1200 }
+            },
+            seed: rng.next_u64(),
+        };
+        assert_same_tensor(&generate(&cfg), &generate_streamed(&cfg));
+    });
+}

@@ -401,6 +401,7 @@ fn main() {
             &SearchOptions {
                 strategy: SearchStrategy::Joint,
                 top_k: 3,
+                resume: false,
             },
         );
         assert_eq!(
@@ -626,14 +627,15 @@ fn main() {
     }
     let bench_path = repo_root().join("BENCH_dse.json");
     // This bench rebuilds the trajectory file wholesale; carry over the
-    // `streaming` section the streaming_scale bench owns, if present.
-    let bench_json = match std::fs::read_to_string(&bench_path)
-        .ok()
-        .and_then(|old| json_section(&old, "streaming"))
-    {
-        Some(streaming) => upsert_json_section(&bench_json, "streaming", &streaming),
-        None => bench_json,
-    };
+    // sections the streaming_scale and classify_kernel benches own.
+    let mut bench_json = bench_json;
+    if let Ok(old) = std::fs::read_to_string(&bench_path) {
+        for key in ["streaming", "classify_kernel"] {
+            if let Some(section) = json_section(&old, key) {
+                bench_json = upsert_json_section(&bench_json, key, &section);
+            }
+        }
+    }
     if let Err(e) = std::fs::write(&bench_path, &bench_json) {
         eprintln!("warning: failed to write {}: {e}", bench_path.display());
     } else {

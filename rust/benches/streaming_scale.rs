@@ -119,6 +119,7 @@ fn main() {
     let opts = SearchOptions {
         strategy: SearchStrategy::Coordinate,
         top_k: 1,
+        resume: false,
     };
     let ex = explore_with(&base, &grids, &dev, &eval, &opts);
     let explore_s = t0.elapsed().as_secs_f64();

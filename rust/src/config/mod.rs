@@ -92,7 +92,7 @@ const SCHEMA: &[(&str, &[&str])] = &[
     ("remapper", &["max_pointers", "buffer_bytes"]),
     ("memory", &["tech"]),
     ("dram", &["channels", "banks", "row_policy"]),
-    ("dse", &["search", "top_k"]),
+    ("dse", &["search", "top_k", "warm_cache"]),
 ];
 
 fn schema_keys(section: &str) -> Option<&'static [&'static str]> {

@@ -58,6 +58,10 @@ use crate::pms::{self, TensorProfile};
 use crate::tensor::{remap, SparseTensor};
 use crate::util::{parallel_indexed, RemapMemo, SpillCol};
 
+pub mod warm;
+
+pub use warm::{tensor_fingerprint, Fingerprint, KeyBuilder, WarmCache};
+
 /// Per-mode precomputation of a CycleSim scoring pass under one
 /// remapper pointer budget: the mode column the (simulated) remap pass
 /// reads — a snapshot of the tensor *before* this mode's host remap —
@@ -206,6 +210,20 @@ pub enum Evaluator<'a> {
     ShardedSim {
         sweep: &'a crate::shard::ShardedSweep<'a>,
     },
+    /// Warm-start wrapper (S28): serves scores and feasibility
+    /// verdicts from a persistent [`WarmCache`] keyed by the full
+    /// scoring context (tensor fingerprint, evaluator kind, engine,
+    /// rank, device, factors) and delegates only cache misses to the
+    /// wrapped evaluator.  Scores are bit-identical to the inner
+    /// evaluator's — per-candidate scores are deterministic pure
+    /// functions of the context, and the cache stores their exact
+    /// `f64` bits — so a warm `explore` returns byte-identical
+    /// results while re-scoring only the delta of unseen candidates.
+    /// Construct with [`EvaluatorBuilder::warm_cache`].
+    Warm {
+        inner: Box<Evaluator<'a>>,
+        cache: Arc<WarmCache>,
+    },
 }
 
 impl<'a> Evaluator<'a> {
@@ -237,11 +255,12 @@ impl<'a> Evaluator<'a> {
 /// construct through the builder: it owns the defaults, and the legacy
 /// free-standing constructors ([`Evaluator::cycle_sim`]) are
 /// deprecated shims over it.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct EvaluatorBuilder {
     engine: EngineKind,
     rank: usize,
     memory_budget: Option<u64>,
+    warm: Option<Arc<WarmCache>>,
 }
 
 impl Default for EvaluatorBuilder {
@@ -258,6 +277,29 @@ impl EvaluatorBuilder {
             engine: EngineKind::Grid,
             rank: 16,
             memory_budget: None,
+            warm: None,
+        }
+    }
+
+    /// Wrap every evaluator this builder produces in
+    /// [`Evaluator::Warm`] (S28): scores and feasibility verdicts are
+    /// served from `cache` and only misses reach the underlying
+    /// model.  The caller is responsible for opening the cache under
+    /// the right context key ([`warm::KeyBuilder`]) — a key that
+    /// omits a score-relevant input will serve stale scores.
+    pub fn warm_cache(mut self, cache: Option<Arc<WarmCache>>) -> Self {
+        self.warm = cache;
+        self
+    }
+
+    /// Apply the optional warm-start wrapper to a terminal evaluator.
+    fn wrap<'a>(&self, inner: Evaluator<'a>) -> Evaluator<'a> {
+        match &self.warm {
+            Some(cache) => Evaluator::Warm {
+                inner: Box::new(inner),
+                cache: Arc::clone(cache),
+            },
+            None => inner,
         }
     }
 
@@ -290,28 +332,28 @@ impl EvaluatorBuilder {
     /// Analytic PMS evaluator over a measured tensor profile
     /// (microseconds per configuration).
     pub fn pms<'a>(&self, profile: &'a TensorProfile) -> Evaluator<'a> {
-        Evaluator::Pms {
+        self.wrap(Evaluator::Pms {
             profile,
             rank: self.rank,
-        }
+        })
     }
 
     /// Cycle-level simulation of a full Approach-1 sweep over a
     /// concrete tensor, with a fresh cross-candidate memo.
     pub fn cycle_sim<'a>(&self, tensor: &'a SparseTensor, factors: &'a [Mat]) -> Evaluator<'a> {
-        Evaluator::CycleSim {
+        self.wrap(Evaluator::CycleSim {
             tensor,
             factors,
             engine: self.engine,
             memo: SimMemo::with_policy(self.memory_budget, self.engine),
-        }
+        })
     }
 
     /// Sharded multi-instance simulation over a prepared sweep (the
     /// sweep was prepared with its own engine choice, which this
     /// evaluator inherits).
     pub fn sharded<'a>(&self, sweep: &'a crate::shard::ShardedSweep<'a>) -> Evaluator<'a> {
-        Evaluator::ShardedSim { sweep }
+        self.wrap(Evaluator::ShardedSim { sweep })
     }
 }
 
@@ -319,6 +361,17 @@ impl Evaluator<'_> {
     /// True when `cfg` is realizable on `dev` under this evaluator's
     /// deployment model.
     pub fn feasible(&self, cfg: &ControllerConfig, dev: &Device) -> bool {
+        if let Evaluator::Warm { inner, cache } = self {
+            // Hoisted per-board feasibility (S28): the device is part
+            // of the cache's context key, so a verdict cached by any
+            // earlier query on this board short-circuits re-pruning.
+            if let Some(ok) = cache.lookup_feasible(cfg) {
+                return ok;
+            }
+            let ok = inner.feasible(cfg, dev);
+            cache.record_feasible(cfg, ok);
+            return ok;
+        }
         if !device_feasible(cfg, dev) {
             return false;
         }
@@ -355,6 +408,14 @@ impl Evaluator<'_> {
     /// Score = estimated/measured total cycles (lower is better), or
     /// `None` if the configuration does not fit `dev`.
     pub fn score(&self, cfg: &ControllerConfig, dev: &Device) -> Option<f64> {
+        if let Evaluator::Warm { inner, cache } = self {
+            if let Some(cached) = cache.lookup_score(cfg) {
+                return cached;
+            }
+            let s = inner.score(cfg, dev);
+            cache.record_score(cfg, s);
+            return s;
+        }
         if !self.feasible(cfg, dev) {
             return None;
         }
@@ -369,6 +430,7 @@ impl Evaluator<'_> {
                 memo,
             } => cycle_sim_score(tensor, factors, *engine, memo, cfg) as f64,
             Evaluator::ShardedSim { sweep } => sweep.makespan(cfg) as f64,
+            Evaluator::Warm { .. } => unreachable!("warm wrapper returned above"),
         })
     }
 
@@ -389,6 +451,34 @@ impl Evaluator<'_> {
     pub fn score_batch(&self, cfgs: &[ControllerConfig], dev: &Device) -> Vec<Option<f64>> {
         if cfgs.is_empty() {
             return Vec::new();
+        }
+        if let Evaluator::Warm { inner, cache } = self {
+            // Partition into cache hits and unseen candidates; only
+            // the unseen delta reaches the inner batch paths.  Scores
+            // are bit-identical either way: every batch routing below
+            // produces the same per-candidate score, and hits replay
+            // the exact f64 bits the inner evaluator produced.
+            let mut out: Vec<Option<f64>> = Vec::with_capacity(cfgs.len());
+            let mut miss_idx: Vec<usize> = Vec::new();
+            for (i, cfg) in cfgs.iter().enumerate() {
+                match cache.lookup_score(cfg) {
+                    Some(cached) => out.push(cached),
+                    None => {
+                        out.push(None);
+                        miss_idx.push(i);
+                    }
+                }
+            }
+            if !miss_idx.is_empty() {
+                let miss_cfgs: Vec<ControllerConfig> =
+                    miss_idx.iter().map(|&i| cfgs[i].clone()).collect();
+                let scored = inner.score_batch(&miss_cfgs, dev);
+                for (&i, s) in miss_idx.iter().zip(scored) {
+                    cache.record_score(&cfgs[i], s);
+                    out[i] = s;
+                }
+            }
+            return out;
         }
         if cfgs.len() >= 2 && cache_module_sweep(cfgs) {
             match self {
@@ -846,6 +936,14 @@ pub struct SearchOptions {
     /// How many best points [`Exploration::top`] reports (clamped to
     /// >= 1; `top[0]` is always the winner).
     pub top_k: usize,
+    /// Warm-start resume (S28): when the evaluator is
+    /// [`Evaluator::Warm`] and its cache holds a Pareto frontier from
+    /// an earlier exploration, seed [`SearchStrategy::Beam`] with the
+    /// stored frontier points so the search continues from where the
+    /// last session ended instead of rediscovering them.  Ignored for
+    /// other strategies and for cold caches; `false` (the default)
+    /// keeps every search byte-identical to a cold run.
+    pub resume: bool,
 }
 
 impl Default for SearchOptions {
@@ -853,6 +951,7 @@ impl Default for SearchOptions {
         SearchOptions {
             strategy: SearchStrategy::Coordinate,
             top_k: 1,
+            resume: false,
         }
     }
 }
@@ -1271,18 +1370,33 @@ fn search_coordinate(
 /// best `width` points seen so far (old beam plus this sweep's fresh
 /// points, stable on ties) seed the next module's candidates.  Already
 /// scored configurations are not re-scored.
+#[allow(clippy::too_many_arguments)]
 fn search_beam(
     grids: &Grids,
     dev: &Device,
     eval: &Evaluator<'_>,
     width: usize,
+    seeds: Vec<Point>,
     best: &mut Point,
     visited: &mut Vec<Point>,
     rejected: &mut usize,
 ) {
     let width = width.max(1);
     let mut beam: Vec<Point> = vec![best.clone()];
-    let mut scored: Vec<ControllerConfig> = vec![best.cfg.clone()];
+    // Warm-start resume (S28): frontier points from a previous
+    // session join the initial beam.  Empty seeds reproduce the cold
+    // search exactly.
+    for s in seeds {
+        if beam.iter().all(|b| b.cfg != s.cfg) {
+            beam.push(s);
+        }
+    }
+    beam.sort_by(|a, b| a.cycles.total_cmp(&b.cycles));
+    beam.truncate(width);
+    if beam[0].cycles < best.cycles {
+        *best = beam[0].clone();
+    }
+    let mut scored: Vec<ControllerConfig> = beam.iter().map(|p| p.cfg.clone()).collect();
     for stage in 0..MODULE_STAGES {
         let mut cands: Vec<ControllerConfig> = Vec::new();
         for p in &beam {
@@ -1364,13 +1478,39 @@ pub fn explore_with(
     let mut best = point_at(base.clone(), base_cycles, dev);
     visited.push(best.clone());
 
+    // Warm-start resume (S28): under `resume`, a warm evaluator seeds
+    // the beam with the Pareto frontier persisted by the previous
+    // exploration of this context.  Scoring the seeds is free — their
+    // scores are cache hits by construction.
+    let mut seeds: Vec<Point> = Vec::new();
+    if opts.resume && matches!(opts.strategy, SearchStrategy::Beam { .. }) {
+        if let Evaluator::Warm { cache, .. } = eval {
+            for cfg in cache.frontier() {
+                if &cfg == base {
+                    continue;
+                }
+                if let Some(c) = eval.score(&cfg, dev) {
+                    seeds.push(point_at(cfg, c, dev));
+                }
+            }
+        }
+    }
+    visited.extend(seeds.iter().cloned());
+
     match opts.strategy {
         SearchStrategy::Coordinate => {
             search_coordinate(grids, dev, eval, &mut best, &mut visited, &mut rejected)
         }
-        SearchStrategy::Beam { width } => {
-            search_beam(grids, dev, eval, width, &mut best, &mut visited, &mut rejected)
-        }
+        SearchStrategy::Beam { width } => search_beam(
+            grids,
+            dev,
+            eval,
+            width,
+            seeds,
+            &mut best,
+            &mut visited,
+            &mut rejected,
+        ),
         SearchStrategy::Joint => {
             search_joint(base, grids, dev, eval, &mut best, &mut visited, &mut rejected)
         }
@@ -1378,6 +1518,14 @@ pub fn explore_with(
 
     let pareto = pareto_frontier(&visited);
     let top = top_points(&visited, opts.top_k.max(1));
+    if let Evaluator::Warm { cache, .. } = eval {
+        // Persist this exploration's frontier (the next session's
+        // beam seeds) and the scored-point cache.
+        cache.set_frontier(&pareto);
+        if let Err(e) = cache.flush() {
+            eprintln!("warning: warm-cache flush failed: {e}");
+        }
+    }
     Exploration {
         best,
         visited,
@@ -1863,6 +2011,7 @@ mod tests {
         let joint = SearchOptions {
             strategy: SearchStrategy::Joint,
             top_k: 3,
+            resume: false,
         };
         let evals = [
             EvaluatorBuilder::new().rank(16).pms(&profile),
@@ -1899,6 +2048,7 @@ mod tests {
         let joint = SearchOptions {
             strategy: SearchStrategy::Joint,
             top_k: 5,
+            resume: false,
         };
         let ev_event = EvaluatorBuilder::new()
             .engine(EngineKind::Event)
@@ -1941,6 +2091,7 @@ mod tests {
             &SearchOptions {
                 strategy: SearchStrategy::Beam { width: 1 },
                 top_k: 1,
+                resume: false,
             },
         );
         assert_eq!(ex_beam.best.cycles, ex_coord.best.cycles);
@@ -1970,7 +2121,7 @@ mod tests {
                 &grids,
                 &dev,
                 &eval,
-                &SearchOptions { strategy, top_k: 1 },
+                &SearchOptions { strategy, top_k: 1, resume: false },
             )
             .best
             .cycles
@@ -2000,6 +2151,7 @@ mod tests {
             &SearchOptions {
                 strategy: SearchStrategy::Joint,
                 top_k: 5,
+                resume: false,
             },
         );
         // Top-k: ascending cycles, distinct configs, winner first.
@@ -2140,6 +2292,7 @@ mod tests {
             &SearchOptions {
                 strategy: SearchStrategy::Joint,
                 top_k: 3,
+                resume: false,
             },
         );
         let visited_techs: Vec<MemTech> = [MemTech::Ddr4, MemTech::Hbm2, MemTech::Osram]

@@ -1,0 +1,579 @@
+//! Warm-start incremental DSE search (S28).
+//!
+//! Re-running `explore` on the same tensor — or on an adjacent grid —
+//! re-scores every candidate from scratch even though per-candidate
+//! scores are pure functions of (tensor, factors, evaluator, device,
+//! configuration). This module persists those scores keyed by a
+//! *context key* so repeat queries only pay for the delta of unseen
+//! candidates:
+//!
+//! - [`Fingerprint`] folds a tensor's dims, nnz, coordinates, and
+//!   value bits into a 64-bit FNV-1a hash. It is incremental
+//!   ([`Fingerprint::push`]) so streaming ingestion can fold records
+//!   as they arrive, and order-dependent by design: record order
+//!   changes the traces the engines replay, so a reordered tensor is
+//!   a different tensor for caching purposes.
+//! - A context key ([`KeyBuilder`]) extends the fingerprint with
+//!   everything else a score depends on: evaluator kind, rank, engine,
+//!   shard worker count, device geometry, and factor matrices.
+//!   Changing any input invalidates the cache by changing the key.
+//! - [`WarmCache`] maps encoded [`ControllerConfig`]s
+//!   (`util::codec::encode_config`) to verdicts — infeasible,
+//!   feasible-unscored, or scored — plus the Pareto frontier of the
+//!   last exploration, and round-trips through a checksummed
+//!   zero-dependency on-disk format. A truncated or corrupt file is
+//!   indistinguishable from a cold cache: `open` never fails.
+//!
+//! The cache is wired in as `Evaluator::Warm`, a transparent wrapper
+//! constructed by `EvaluatorBuilder::warm_cache`; `explore_with`
+//! additionally seeds `SearchStrategy::Beam` from the stored frontier
+//! when `SearchOptions::resume` is set.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::controller::ControllerConfig;
+use crate::cpd::linalg::Mat;
+use crate::engine::EngineKind;
+use crate::fpga::Device;
+use crate::tensor::{Coord, SparseTensor};
+use crate::util::codec::{decode_config, encode_config, ByteReader, ByteWriter, Fnv1a};
+
+use super::Point;
+
+/// Incremental tensor fingerprint: dims up front, then one
+/// [`push`](Fingerprint::push) per record in storage order.
+#[derive(Debug, Clone, Copy)]
+pub struct Fingerprint {
+    h: Fnv1a,
+    records: u64,
+}
+
+impl Fingerprint {
+    /// Start a fingerprint for a tensor with the given mode sizes.
+    pub fn new(dims: &[usize]) -> Self {
+        let mut h = Fnv1a::new();
+        h.write(b"PTMC-FP-V1");
+        h.write_u64(dims.len() as u64);
+        for &d in dims {
+            h.write_u64(d as u64);
+        }
+        Fingerprint { h, records: 0 }
+    }
+
+    /// Fold one record (its coordinates and value) during ingestion.
+    pub fn push(&mut self, coords: &[Coord], value: f32) {
+        for &c in coords {
+            self.h.write_u32(c);
+        }
+        self.h.write_u32(value.to_bits());
+        self.records += 1;
+    }
+
+    /// Records folded so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// The 64-bit fingerprint. Non-destructive: records can keep
+    /// being pushed after a `finish` (used by streamed ingestion to
+    /// checkpoint per window).
+    pub fn finish(&self) -> u64 {
+        let mut h = self.h;
+        h.write_u64(self.records);
+        h.finish()
+    }
+}
+
+/// Fingerprint of a fully ingested tensor: record-major walk over the
+/// mode-major coordinate columns, matching what streamed ingestion
+/// folds record by record.
+pub fn tensor_fingerprint(t: &SparseTensor) -> u64 {
+    let mut fp = Fingerprint::new(t.dims());
+    let n = t.n_modes();
+    let cols: Vec<&[Coord]> = (0..n).map(|m| t.mode_col(m)).collect();
+    let vals = t.values();
+    let mut coords = vec![0 as Coord; n];
+    for r in 0..t.nnz() {
+        for (m, col) in cols.iter().enumerate() {
+            coords[m] = col[r];
+        }
+        fp.push(&coords, vals[r]);
+    }
+    fp.finish()
+}
+
+/// Folds every score-relevant input besides the controller
+/// configuration into the cache's context key. Each field is
+/// length-prefixed so adjacent strings cannot alias.
+#[derive(Debug, Clone, Copy)]
+pub struct KeyBuilder(Fnv1a);
+
+impl KeyBuilder {
+    /// Start a key from a tensor fingerprint.
+    pub fn new(tensor_fp: u64) -> Self {
+        let mut h = Fnv1a::new();
+        h.write(b"PTMC-WARM-KEY-V1");
+        h.write_u64(tensor_fp);
+        KeyBuilder(h)
+    }
+
+    fn str_field(mut self, s: &str) -> Self {
+        self.0.write_u64(s.len() as u64);
+        self.0.write(s.as_bytes());
+        self
+    }
+
+    /// Evaluator kind label (`"pms"`, `"sim"`, `"grid"`, `"sharded"`).
+    pub fn evaluator(self, label: &str) -> Self {
+        self.str_field(label)
+    }
+
+    /// Replay engine driving the cycle model.
+    pub fn engine(self, engine: EngineKind) -> Self {
+        self.str_field(&engine.to_string())
+    }
+
+    /// CP rank the evaluator scores at.
+    pub fn rank(mut self, rank: usize) -> Self {
+        self.0.write_u64(rank as u64);
+        self
+    }
+
+    /// Shard worker count (0 for unsharded evaluators).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.0.write_u64(workers as u64);
+        self
+    }
+
+    /// Target device geometry.
+    pub fn device(self, dev: &Device) -> Self {
+        let mut kb = self.str_field(dev.name);
+        kb.0.write_u64(dev.bram36 as u64);
+        kb.0.write_u64(dev.uram as u64);
+        kb.0.write_u64(dev.dram_channels as u64);
+        kb.0.write_u64(dev.hbm_pseudo_channels as u64);
+        kb.0.write_u64(dev.osram_ports as u64);
+        kb
+    }
+
+    /// Factor matrices (their exact f32 bits — cycle-sim traces
+    /// depend on them).
+    pub fn factors(mut self, factors: &[Mat]) -> Self {
+        self.0.write_u64(factors.len() as u64);
+        for m in factors {
+            self.0.write_u64(m.rows() as u64);
+            self.0.write_u64(m.cols() as u64);
+            for &v in m.data() {
+                self.0.write_u32(v.to_bits());
+            }
+        }
+        self
+    }
+
+    /// The finished 64-bit context key.
+    pub fn finish(self) -> u64 {
+        self.0.finish()
+    }
+}
+
+/// Cached verdict for one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Entry {
+    /// Fails `Evaluator::feasible` in this context.
+    Infeasible,
+    /// Passed feasibility, score not yet computed.
+    Feasible,
+    /// Scored; payload is the `f64` cycle count's bit pattern.
+    Scored(u64),
+}
+
+const TAG_INFEASIBLE: u8 = 0;
+const TAG_FEASIBLE: u8 = 1;
+const TAG_SCORED: u8 = 2;
+
+#[derive(Debug, Default)]
+struct State {
+    entries: HashMap<Vec<u8>, Entry>,
+    frontier: Vec<Vec<u8>>,
+}
+
+/// Persistent score cache for one (tensor, evaluator, device) context.
+///
+/// Thread-safe: lookups and recordings take an internal lock, and the
+/// hit/miss counters are atomics so the parallel batch paths can
+/// share one cache.
+#[derive(Debug)]
+pub struct WarmCache {
+    dir: PathBuf,
+    key: u64,
+    state: Mutex<State>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+const MAGIC: &[u8; 8] = b"PTMCWARM";
+const VERSION: u32 = 1;
+
+impl WarmCache {
+    /// Open (or cold-start) the cache for `key` under `dir`. Never
+    /// fails: a missing, truncated, corrupt, or mismatched file is
+    /// treated as an empty cache.
+    pub fn open(dir: impl Into<PathBuf>, key: u64) -> WarmCache {
+        let dir = dir.into();
+        let state = std::fs::read(Self::file_path(&dir, key))
+            .ok()
+            .and_then(|bytes| Self::parse(&bytes, key))
+            .unwrap_or_default();
+        WarmCache {
+            dir,
+            key,
+            state: Mutex::new(state),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn file_path(dir: &Path, key: u64) -> PathBuf {
+        dir.join(format!("warm_{key:016x}.bin"))
+    }
+
+    /// Path of this cache's backing file.
+    pub fn path(&self) -> PathBuf {
+        Self::file_path(&self.dir, self.key)
+    }
+
+    /// The context key this cache was opened with.
+    pub fn key(&self) -> u64 {
+        self.key
+    }
+
+    /// Number of cached configuration verdicts.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().entries.len()
+    }
+
+    /// True when no verdicts are cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups served from the cache this session.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that fell through to the inner evaluator this session.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Cached score for `cfg`: `None` = unseen (score it and call
+    /// [`record_score`](Self::record_score)), `Some(None)` = known
+    /// infeasible, `Some(Some(c))` = known cycle count.
+    pub fn lookup_score(&self, cfg: &ControllerConfig) -> Option<Option<f64>> {
+        let enc = encode_config(cfg);
+        let got = self.state.lock().unwrap().entries.get(&enc).copied();
+        match got {
+            Some(Entry::Infeasible) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(None)
+            }
+            Some(Entry::Scored(bits)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Some(f64::from_bits(bits)))
+            }
+            // Feasible-unscored still needs the inner evaluator.
+            Some(Entry::Feasible) | None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record the outcome of scoring `cfg` (`None` = infeasible).
+    pub fn record_score(&self, cfg: &ControllerConfig, score: Option<f64>) {
+        let entry = match score {
+            None => Entry::Infeasible,
+            Some(c) => Entry::Scored(c.to_bits()),
+        };
+        let mut st = self.state.lock().unwrap();
+        st.entries.insert(encode_config(cfg), entry);
+    }
+
+    /// Cached feasibility verdict for `cfg`, if any.
+    pub fn lookup_feasible(&self, cfg: &ControllerConfig) -> Option<bool> {
+        let enc = encode_config(cfg);
+        let got = self.state.lock().unwrap().entries.get(&enc).copied();
+        match got {
+            Some(Entry::Infeasible) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(false)
+            }
+            Some(Entry::Feasible) | Some(Entry::Scored(_)) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(true)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a feasibility verdict. Never downgrades a `Scored`
+    /// entry to `Feasible`.
+    pub fn record_feasible(&self, cfg: &ControllerConfig, ok: bool) {
+        let mut st = self.state.lock().unwrap();
+        let enc = encode_config(cfg);
+        match st.entries.get(&enc) {
+            Some(Entry::Scored(_)) if ok => {}
+            _ => {
+                let e = if ok { Entry::Feasible } else { Entry::Infeasible };
+                st.entries.insert(enc, e);
+            }
+        }
+    }
+
+    /// Replace the stored Pareto frontier with the configurations of
+    /// `pts` (beam resume seeds for the next session).
+    pub fn set_frontier(&self, pts: &[Point]) {
+        let mut st = self.state.lock().unwrap();
+        st.frontier = pts.iter().map(|p| encode_config(&p.cfg)).collect();
+    }
+
+    /// Decode the stored frontier, skipping entries that no longer
+    /// decode (future-proofing against codec changes).
+    pub fn frontier(&self) -> Vec<ControllerConfig> {
+        let st = self.state.lock().unwrap();
+        st.frontier.iter().filter_map(|e| decode_config(e)).collect()
+    }
+
+    /// Serialize the cache to its backing file (temp file + rename so
+    /// a crash never leaves a half-written cache behind).
+    pub fn flush(&self) -> std::io::Result<()> {
+        let bytes = {
+            let st = self.state.lock().unwrap();
+            let mut w = ByteWriter::new();
+            w.bytes(MAGIC);
+            w.u32(VERSION);
+            w.u64(self.key);
+            w.u64(st.entries.len() as u64);
+            // Deterministic file bytes regardless of HashMap order.
+            let mut keys: Vec<&Vec<u8>> = st.entries.keys().collect();
+            keys.sort();
+            for enc in keys {
+                w.u32(enc.len() as u32);
+                w.bytes(enc);
+                match st.entries[enc] {
+                    Entry::Infeasible => {
+                        w.u8(TAG_INFEASIBLE);
+                        w.u64(0);
+                    }
+                    Entry::Feasible => {
+                        w.u8(TAG_FEASIBLE);
+                        w.u64(0);
+                    }
+                    Entry::Scored(bits) => {
+                        w.u8(TAG_SCORED);
+                        w.u64(bits);
+                    }
+                }
+            }
+            w.u64(st.frontier.len() as u64);
+            for enc in st.frontier.iter() {
+                w.u32(enc.len() as u32);
+                w.bytes(enc);
+            }
+            let sum = crate::util::fnv1a(w.as_slice());
+            w.u64(sum);
+            w.into_bytes()
+        };
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.path();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, &bytes)?;
+        std::fs::rename(&tmp, &path)
+    }
+
+    fn parse(bytes: &[u8], key: u64) -> Option<State> {
+        if bytes.len() < 8 {
+            return None;
+        }
+        let (body, tail) = bytes.split_at(bytes.len() - 8);
+        let mut sum_r = ByteReader::new(tail);
+        if sum_r.u64()? != crate::util::fnv1a(body) {
+            return None;
+        }
+        let mut r = ByteReader::new(body);
+        if r.take(8)? != MAGIC {
+            return None;
+        }
+        if r.u32()? != VERSION || r.u64()? != key {
+            return None;
+        }
+        let n_entries = r.usize()?;
+        let mut entries = HashMap::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let len = r.u32()? as usize;
+            let enc = r.take(len)?.to_vec();
+            let tag = r.u8()?;
+            let payload = r.u64()?;
+            let entry = match tag {
+                TAG_INFEASIBLE => Entry::Infeasible,
+                TAG_FEASIBLE => Entry::Feasible,
+                TAG_SCORED => Entry::Scored(payload),
+                _ => return None,
+            };
+            entries.insert(enc, entry);
+        }
+        let n_frontier = r.usize()?;
+        let mut frontier = Vec::with_capacity(n_frontier);
+        for _ in 0..n_frontier {
+            let len = r.u32()? as usize;
+            frontier.push(r.take(len)?.to_vec());
+        }
+        if !r.is_empty() {
+            return None;
+        }
+        Some(State { entries, frontier })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::MemTechConfig;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ptmc_warm_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn cfg_with_lines(num_lines: usize) -> ControllerConfig {
+        let mut cfg = ControllerConfig::default_for(4);
+        cfg.cache.num_lines = num_lines;
+        cfg
+    }
+
+    #[test]
+    fn fingerprint_is_order_and_value_sensitive() {
+        let mut a = Fingerprint::new(&[8, 8, 8]);
+        a.push(&[1, 2, 3], 1.0);
+        a.push(&[4, 5, 6], 2.0);
+        let mut b = Fingerprint::new(&[8, 8, 8]);
+        b.push(&[4, 5, 6], 2.0);
+        b.push(&[1, 2, 3], 1.0);
+        assert_ne!(a.finish(), b.finish(), "record order must matter");
+
+        let mut c = Fingerprint::new(&[8, 8, 8]);
+        c.push(&[1, 2, 3], 1.0);
+        c.push(&[4, 5, 6], 2.5);
+        assert_ne!(a.finish(), c.finish(), "values must matter");
+
+        let mut d = Fingerprint::new(&[8, 8, 16]);
+        d.push(&[1, 2, 3], 1.0);
+        d.push(&[4, 5, 6], 2.0);
+        assert_ne!(a.finish(), d.finish(), "dims must matter");
+
+        let mut e = Fingerprint::new(&[8, 8, 8]);
+        e.push(&[1, 2, 3], 1.0);
+        e.push(&[4, 5, 6], 2.0);
+        assert_eq!(a.finish(), e.finish(), "same inputs, same fingerprint");
+    }
+
+    #[test]
+    fn key_builder_separates_contexts() {
+        let base = KeyBuilder::new(42).evaluator("grid").rank(16).finish();
+        let other_rank = KeyBuilder::new(42).evaluator("grid").rank(8).finish();
+        let other_eval = KeyBuilder::new(42).evaluator("pms").rank(16).finish();
+        let other_fp = KeyBuilder::new(43).evaluator("grid").rank(16).finish();
+        assert_ne!(base, other_rank);
+        assert_ne!(base, other_eval);
+        assert_ne!(base, other_fp);
+        let dev = Device::alveo_u250();
+        let with_dev = KeyBuilder::new(42).device(&dev).finish();
+        assert_ne!(with_dev, KeyBuilder::new(42).finish());
+    }
+
+    #[test]
+    fn cache_round_trips_through_disk() {
+        let dir = tmp_dir("roundtrip");
+        let cache = WarmCache::open(&dir, 7);
+        let a = cfg_with_lines(256);
+        let b = cfg_with_lines(1024);
+        let mut c = cfg_with_lines(4096);
+        c.mem = MemTechConfig::default_ddr4();
+        cache.record_score(&a, Some(1234.0));
+        cache.record_score(&b, None);
+        cache.record_feasible(&c, true);
+        cache.set_frontier(&[Point {
+            cfg: a.clone(),
+            cycles: 1234.0,
+            bram36: 1,
+            uram: 0,
+        }]);
+        cache.flush().unwrap();
+
+        let back = WarmCache::open(&dir, 7);
+        assert_eq!(back.len(), 3);
+        assert_eq!(back.lookup_score(&a), Some(Some(1234.0)));
+        assert_eq!(back.lookup_score(&b), Some(None));
+        assert_eq!(back.lookup_feasible(&c), Some(true));
+        assert_eq!(back.lookup_score(&c), None, "feasible-unscored misses");
+        let front = back.frontier();
+        assert_eq!(front.len(), 1);
+        assert_eq!(front[0], a);
+        assert_eq!(back.hits(), 3);
+        assert_eq!(back.misses(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_files_fall_back_cold() {
+        let dir = tmp_dir("corrupt");
+        let cache = WarmCache::open(&dir, 9);
+        cache.record_score(&cfg_with_lines(256), Some(5.0));
+        cache.flush().unwrap();
+        let path = cache.path();
+        let good = std::fs::read(&path).unwrap();
+
+        // Truncated file.
+        std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert!(WarmCache::open(&dir, 9).is_empty());
+
+        // Flipped byte in the body breaks the checksum.
+        let mut bad = good.clone();
+        bad[MAGIC.len() + 20] ^= 0xff;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(WarmCache::open(&dir, 9).is_empty());
+
+        // Wrong key: file content is valid but belongs elsewhere.
+        std::fs::write(WarmCache::open(&dir, 11).path(), &good).unwrap();
+        assert!(WarmCache::open(&dir, 11).is_empty());
+
+        // Pristine bytes still load.
+        std::fs::write(&path, &good).unwrap();
+        assert_eq!(WarmCache::open(&dir, 9).len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flush_is_deterministic() {
+        let dir = tmp_dir("determ");
+        let cache = WarmCache::open(&dir, 3);
+        for lines in [256usize, 512, 1024, 2048, 4096] {
+            cache.record_score(&cfg_with_lines(lines), Some(lines as f64));
+        }
+        cache.flush().unwrap();
+        let first = std::fs::read(cache.path()).unwrap();
+        let again = WarmCache::open(&dir, 3);
+        again.flush().unwrap();
+        let second = std::fs::read(again.path()).unwrap();
+        assert_eq!(first, second, "sorted serialization is reproducible");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -38,12 +38,44 @@
 use super::stream::{OneWindow, WindowSource};
 use super::trace::Run;
 use super::CompressedTrace;
+
+/// Which inner loop the classification pass runs (S28).  Both kernels
+/// produce **bit-identical** miss streams, counters, and replay cycles
+/// — enforced by `tests/classify_props.rs` across the full default DSE
+/// grid — so the choice is purely a throughput knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClassifyKernel {
+    /// The original per-access stack walk: data-dependent `position()`
+    /// search, a per-candidate hit/miss loop on **every** access, and
+    /// `copy_within` rotation.  Kept as the executable oracle the SoA
+    /// kernel is proven against.
+    Scalar,
+    /// Branch-light structure-of-arrays kernel (the default): stacks
+    /// are fixed-width (`cap` lanes, empty lanes hold a sentinel tag),
+    /// the depth search and LRU rotation are mask-selects over
+    /// contiguous lanes rustc can autovectorize, hits are accounted in
+    /// closed form from a pass-global line counter (per-candidate work
+    /// happens only on misses), and `Run::Cached` delta words are
+    /// expanded into a line buffer consumed in batches per set group.
+    #[default]
+    Soa,
+}
+
 use crate::controller::{
     Access, CacheConfig, CacheStats, ControllerConfig, ControllerStats, DmaEngine, DmaStats,
     LineGeom,
 };
 use crate::dram::DramStats;
 use crate::mem::MemDevice;
+
+/// Sentinel tag marking an empty SoA stack lane.  Real tags are line
+/// addresses shifted right by the set bits, so this value is
+/// unreachable for any address that is not within one cache line of
+/// `u64::MAX` (debug-asserted in the kernel).
+const TAG_EMPTY: u64 = u64::MAX;
+
+/// Lines buffered per SoA batch before the set groups consume them.
+const SOA_BATCH: usize = 4096;
 
 /// One recorded miss of one candidate configuration: the `hits_before`
 /// cache-class line accesses since the previous miss all hit (and cost
@@ -101,8 +133,14 @@ struct SetGroup {
     tags: Vec<u64>,
     /// Per-entry dirty bitmask, one bit per candidate in this group.
     dirty: Vec<u32>,
-    /// Current stack depth per set.
+    /// Current stack depth per set (scalar kernel only: the SoA kernel
+    /// derives fullness from the sentinel tag in the last lane).
     lens: Vec<u32>,
+    /// SoA kernel only: per candidate slot, the pass-global line index
+    /// one past the candidate's last miss — `lineno - last_line[slot]`
+    /// is the hit-run length preceding the current miss, so hits cost
+    /// no per-candidate work at all.
+    last_line: Vec<u64>,
 }
 
 impl SetGroup {
@@ -117,7 +155,11 @@ impl SetGroup {
             .enumerate()
             .map(|(bit, &(assoc, ci))| (assoc, ci, 1u32 << bit))
             .collect();
-        let gt_mask: Vec<u32> = (0..cap)
+        // One extra entry at depth `cap` (always 0): the SoA kernel
+        // indexes `gt_mask[found]` with `found == cap` meaning "miss
+        // for every candidate", collapsing the hit/miss split into one
+        // unconditional mask load.
+        let gt_mask: Vec<u32> = (0..=cap)
             .map(|d| {
                 cands
                     .iter()
@@ -127,15 +169,17 @@ impl SetGroup {
             })
             .collect();
         let all_mask = cands.iter().map(|&(_, _, bit)| bit).fold(0u32, |m, b| m | b);
+        let n_cands = cands.len();
         SetGroup {
             geom: LineGeom::new(line_bytes, num_sets),
             cap,
             cands,
             gt_mask,
             all_mask,
-            tags: vec![0; num_sets * cap],
+            tags: vec![TAG_EMPTY; num_sets * cap],
             dirty: vec![0; num_sets * cap],
             lens: vec![0; num_sets],
+            last_line: vec![0; n_cands],
         }
     }
 
@@ -210,6 +254,73 @@ impl SetGroup {
             }
         }
     }
+
+    /// Branch-light SoA classification of one line access (see
+    /// [`ClassifyKernel::Soa`]).  `lineno` is the pass-global index of
+    /// this cache-class line access; per-candidate hit runs are
+    /// reconstructed from it at miss time, so the hit path (the
+    /// overwhelmingly common case) does no per-candidate work.
+    ///
+    /// Invariant: each set's lanes are a prefix of live tags followed
+    /// by `TAG_EMPTY` sentinels, so "the A-way set is full" is exactly
+    /// "lane A-1 is live", and the full-width rotation below preserves
+    /// the prefix shape.
+    fn access_soa(&mut self, line: u64, write: bool, lineno: u64, streams: &mut [MissStream]) {
+        let set = self.geom.set(line);
+        let tag = self.geom.tag(line);
+        debug_assert_ne!(tag, TAG_EMPTY, "tag collides with the empty-lane sentinel");
+        let cap = self.cap;
+        let base = set * cap;
+        // Depth search over the fixed-width stack: live lanes hold
+        // distinct tags and empty lanes the sentinel, so at most one
+        // lane matches and the masked subtraction selects its depth
+        // (`found == cap` = present in no lane = miss everywhere).
+        let mut found = cap;
+        for (d, &t) in self.tags[base..base + cap].iter().enumerate() {
+            found -= (t == tag) as usize * (cap - d);
+        }
+        let hit_mask = self.gt_mask[found];
+        // Per-candidate work happens only on misses.
+        let mut m = self.all_mask & !hit_mask;
+        while m != 0 {
+            let slot = m.trailing_zeros() as usize;
+            m &= m - 1;
+            let (assoc, ci, bit) = self.cands[slot];
+            let vt = self.tags[base + assoc - 1];
+            let evicted = vt != TAG_EMPTY;
+            let writeback = evicted && self.dirty[base + assoc - 1] & bit != 0;
+            let victim_line = if evicted { self.geom.line_of(set, vt) } else { 0 };
+            let s = &mut streams[ci];
+            s.recs.push(MissRec {
+                hits_before: lineno - self.last_line[slot],
+                line,
+                victim_line,
+                evicted,
+                writeback,
+            });
+            s.evictions += evicted as u64;
+            s.writebacks += writeback as u64;
+            self.last_line[slot] = lineno + 1;
+        }
+        // Mask-select LRU rotation: lanes 1..=found shift down one (a
+        // miss has `found == cap`, rotating the whole stack and
+        // dropping the LRU tail), deeper lanes keep their entry.  The
+        // dirty word the accessed line carries to the front is read
+        // before the shift; on a miss the retained mask is 0, so the
+        // clamped stale read is harmless.
+        let old_dirty = self.dirty[base + found.min(cap - 1)];
+        for d in (1..cap).rev() {
+            let take = d <= found;
+            let t_shift = self.tags[base + d - 1];
+            let t_keep = self.tags[base + d];
+            self.tags[base + d] = if take { t_shift } else { t_keep };
+            let y_shift = self.dirty[base + d - 1];
+            let y_keep = self.dirty[base + d];
+            self.dirty[base + d] = if take { y_shift } else { y_keep };
+        }
+        self.tags[base] = tag;
+        self.dirty[base] = if write { self.all_mask } else { old_dirty & hit_mask };
+    }
 }
 
 /// Result of replaying one candidate's miss stream: completion cycle
@@ -247,6 +358,18 @@ impl GridClassification {
         Self::classify_source(&mut OneWindow(trace), configs)
     }
 
+    /// [`Self::classify`] with an explicit kernel choice (S28).  The
+    /// default entry points run [`ClassifyKernel::Soa`]; passing
+    /// [`ClassifyKernel::Scalar`] selects the oracle inner loop the SoA
+    /// kernel is proven bit-identical against.
+    pub fn classify_with(
+        trace: &CompressedTrace,
+        configs: &[CacheConfig],
+        kernel: ClassifyKernel,
+    ) -> Self {
+        Self::classify_source_with(&mut OneWindow(trace), configs, kernel)
+    }
+
     /// Windowed classification (S24): one walk of the source classifies
     /// every candidate — each window is fed to every width's pass state
     /// in order, so peak memory is one window plus the per-set LRU
@@ -256,6 +379,15 @@ impl GridClassification {
     /// only on its own width's line-access sequence, and every width
     /// sees the same ordered accesses either way.
     pub fn classify_source(src: &mut dyn WindowSource, configs: &[CacheConfig]) -> Self {
+        Self::classify_source_with(src, configs, ClassifyKernel::default())
+    }
+
+    /// [`Self::classify_source`] with an explicit kernel choice (S28).
+    pub fn classify_source_with(
+        src: &mut dyn WindowSource,
+        configs: &[CacheConfig],
+        kernel: ClassifyKernel,
+    ) -> Self {
         assert!(!configs.is_empty(), "need at least one cache candidate");
         for c in configs {
             c.validate();
@@ -278,7 +410,7 @@ impl GridClassification {
             for &i in &idxs {
                 pass_of[i] = states.len();
             }
-            states.push(PassState::new(lb, &idxs, configs));
+            states.push(PassState::new(lb, &idxs, configs, kernel));
         }
         src.for_each_window(&mut |w| {
             for st in states.iter_mut() {
@@ -527,10 +659,17 @@ struct PassState {
     groups: Vec<SetGroup>,
     run_lines: Vec<u64>,
     total: u64,
+    kernel: ClassifyKernel,
+    /// Pass-global cache-class line counter (the SoA kernel's hit
+    /// accounting clock; equals `total` at run boundaries but ticks per
+    /// line so batched and per-line paths stay in step).
+    lineno: u64,
+    /// Reused SoA batch buffer of expanded line indices.
+    buf: Vec<u64>,
 }
 
 impl PassState {
-    fn new(lb: usize, idxs: &[usize], configs: &[CacheConfig]) -> Self {
+    fn new(lb: usize, idxs: &[usize], configs: &[CacheConfig], kernel: ClassifyKernel) -> Self {
         let mut groups: Vec<SetGroup> = Vec::new();
         let mut set_counts: Vec<usize> = Vec::new();
         for &i in idxs {
@@ -553,6 +692,9 @@ impl PassState {
             groups,
             run_lines: Vec::new(),
             total: 0,
+            kernel,
+            lineno: 0,
+            buf: Vec::new(),
         }
     }
 
@@ -563,15 +705,67 @@ impl PassState {
         let last = self.geom.last_line(addr, bytes);
         let mut line = first;
         loop {
-            for g in self.groups.iter_mut() {
-                g.access(line, write, streams);
+            match self.kernel {
+                ClassifyKernel::Scalar => {
+                    for g in self.groups.iter_mut() {
+                        g.access(line, write, streams);
+                    }
+                }
+                ClassifyKernel::Soa => {
+                    let ln = self.lineno;
+                    for g in self.groups.iter_mut() {
+                        g.access_soa(line, write, ln, streams);
+                    }
+                }
             }
+            self.lineno += 1;
             if line == last {
                 break;
             }
             line += 1;
         }
         last - first + 1
+    }
+
+    /// SoA batched consumption of one `Run::Cached` delta-word run:
+    /// expand words into a contiguous line buffer in chunks, then let
+    /// each set group sweep the whole chunk before the next group runs
+    /// — the group's stacks stay hot and the inner loop is the
+    /// branch-light [`SetGroup::access_soa`] over contiguous lanes.
+    /// Group-major order is bit-identical to line-major: set groups
+    /// share no state, and each sees the same line/lineno sequence.
+    fn feed_cached_soa(
+        &mut self,
+        words: &[u32],
+        base: u64,
+        bytes: usize,
+        streams: &mut [MissStream],
+    ) -> u64 {
+        let mut lines = 0u64;
+        let mut i = 0usize;
+        while i < words.len() {
+            let mut buf = std::mem::take(&mut self.buf);
+            buf.clear();
+            while i < words.len() && buf.len() < SOA_BATCH {
+                let addr = base + 4 * words[i] as u64;
+                let first = self.geom.first_line(addr);
+                let last = self.geom.last_line(addr, bytes);
+                buf.extend(first..=last);
+                i += 1;
+            }
+            let base_ln = self.lineno;
+            for g in self.groups.iter_mut() {
+                let mut ln = base_ln;
+                for &l in buf.iter() {
+                    g.access_soa(l, false, ln, streams);
+                    ln += 1;
+                }
+            }
+            self.lineno += buf.len() as u64;
+            lines += buf.len() as u64;
+            self.buf = buf;
+        }
+        lines
     }
 
     /// Classify one window's runs, continuing from the stack state the
@@ -587,11 +781,22 @@ impl PassState {
                     bytes,
                     off,
                     count,
-                } => {
-                    for &w in trace.words_at(off, count) {
-                        lines += self.serve(base + 4 * w as u64, bytes as usize, false, streams);
+                } => match self.kernel {
+                    ClassifyKernel::Scalar => {
+                        for &w in trace.words_at(off, count) {
+                            lines +=
+                                self.serve(base + 4 * w as u64, bytes as usize, false, streams);
+                        }
                     }
-                }
+                    ClassifyKernel::Soa => {
+                        lines += self.feed_cached_soa(
+                            trace.words_at(off, count),
+                            base,
+                            bytes as usize,
+                            streams,
+                        );
+                    }
+                },
                 Run::Verbatim { off, count } => {
                     for &a in trace.raw_at(off, count) {
                         match a {
@@ -772,6 +977,27 @@ mod tests {
                     cls.replay_source(i, &mut ChunkedWindows::new(&raw, window), &cfg);
                 assert_eq!(got, want, "{cc:?} window {window}");
             }
+        }
+    }
+
+    #[test]
+    fn soa_kernel_is_bit_identical_to_scalar_oracle() {
+        let raw = cache_heavy_trace(21, 4_000);
+        let prepared = PreparedTrace::new(raw);
+        let grid = small_grid();
+        let scalar =
+            GridClassification::classify_with(prepared.compressed(), &grid, ClassifyKernel::Scalar);
+        let soa =
+            GridClassification::classify_with(prepared.compressed(), &grid, ClassifyKernel::Soa);
+        for (i, cc) in grid.iter().enumerate() {
+            assert_eq!(scalar.cache_stats(i), soa.cache_stats(i), "{cc:?}");
+            let mut cfg = ControllerConfig::default_for(16);
+            cfg.cache = *cc;
+            assert_eq!(
+                scalar.replay(i, prepared.compressed(), &cfg),
+                soa.replay(i, prepared.compressed(), &cfg),
+                "{cc:?}"
+            );
         }
     }
 

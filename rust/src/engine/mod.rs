@@ -54,8 +54,8 @@ pub mod sweep;
 pub mod timing;
 pub mod trace;
 
-pub use grid::{GridClassification, GridRun};
-pub use stream::{replay_events_source, ChunkedWindows, OneWindow, WindowSource};
+pub use grid::{ClassifyKernel, GridClassification, GridRun};
+pub use stream::{replay_events_source, ChunkedWindows, CoalescedWindows, OneWindow, WindowSource};
 pub use sweep::JointIndex;
 pub use timing::{TimingCandidate, TimingOps, TimingRun};
 pub use trace::CompressedTrace;

@@ -72,6 +72,46 @@ impl WindowSource for ChunkedWindows<'_> {
     }
 }
 
+/// Re-blocks an inner source's windows to at least `min` accesses per
+/// emitted window (except possibly the last).  The SoA classification
+/// kernel (S28, [`super::grid::ClassifyKernel::Soa`]) consumes the
+/// delta-word stream in fixed-size batches; a producer that streams
+/// tiny windows would starve those inner loops, so callers can wrap it
+/// here.  Deterministic — the same inner window sequence re-blocks to
+/// the same output sequence on every walk, preserving the
+/// [`WindowSource`] re-iteration contract — and order-preserving, so
+/// every core's result is unchanged (window boundaries are
+/// semantically invisible to the replay cores).
+pub struct CoalescedWindows<'a> {
+    inner: &'a mut dyn WindowSource,
+    min: usize,
+}
+
+impl<'a> CoalescedWindows<'a> {
+    /// Emit windows of at least `min` accesses (> 0).
+    pub fn new(inner: &'a mut dyn WindowSource, min: usize) -> Self {
+        assert!(min > 0, "min must be positive");
+        CoalescedWindows { inner, min }
+    }
+}
+
+impl WindowSource for CoalescedWindows<'_> {
+    fn for_each_window(&mut self, f: &mut dyn FnMut(&CompressedTrace)) {
+        let min = self.min;
+        let mut buf: Vec<Access> = Vec::new();
+        self.inner.for_each_window(&mut |w| {
+            buf.extend(w.expand());
+            if buf.len() >= min {
+                f(&CompressedTrace::compress(&buf));
+                buf.clear();
+            }
+        });
+        if !buf.is_empty() {
+            f(&CompressedTrace::compress(&buf));
+        }
+    }
+}
+
 /// A single already-compressed trace as a one-window source — the
 /// adapter that makes the monolithic `classify`/`replay`/`extract`
 /// entry points run through the windowed implementations.
@@ -155,6 +195,31 @@ mod tests {
             assert_eq!(a.cache_stats(), b.cache_stats(), "window {window}");
             assert_eq!(a.dma_stats(), b.dma_stats(), "window {window}");
             assert_eq!(a.dram_stats(), b.dram_stats(), "window {window}");
+        }
+    }
+
+    #[test]
+    fn coalesced_windows_reblock_without_changing_the_trace() {
+        let raw = mixed_trace(11, 1_000);
+        let mono = CompressedTrace::compress(&raw);
+        for min in [1usize, 10, 257, 5_000] {
+            let mut inner = ChunkedWindows::new(&raw, 3);
+            let mut src = CoalescedWindows::new(&mut inner, min);
+            let mut windows: Vec<Vec<Access>> = Vec::new();
+            src.for_each_window(&mut |w| windows.push(w.expand()));
+            let flat: Vec<Access> = windows.iter().flatten().copied().collect();
+            assert_eq!(flat, raw, "min {min}: windows must concatenate");
+            for w in &windows[..windows.len().saturating_sub(1)] {
+                assert!(w.len() >= min, "min {min}: emitted window too small");
+            }
+            let mut a = MemoryController::new(ControllerConfig::default_for(16));
+            let mut b = MemoryController::new(ControllerConfig::default_for(16));
+            let ta = a.replay_events(&mono);
+            let mut inner2 = ChunkedWindows::new(&raw, 3);
+            let mut co = CoalescedWindows::new(&mut inner2, min);
+            let tb = replay_events_source(&mut b, &mut co);
+            assert_eq!(ta, tb, "min {min}");
+            assert_eq!(a.stats(), b.stats(), "min {min}");
         }
     }
 

@@ -38,7 +38,10 @@ use ptmc::config::Config;
 use ptmc::controller::{ControllerConfig, MemLayout, MemoryController};
 use ptmc::coordinator::{PjrtCoordinator, SegMode};
 use ptmc::cpd::{cp_als, linalg::Mat, AlsConfig, NativeBackend, SimBackend};
-use ptmc::dse::{explore_with, EvaluatorBuilder, Grids, SearchOptions, SearchStrategy};
+use ptmc::dse::{
+    explore_with, tensor_fingerprint, EvaluatorBuilder, Grids, KeyBuilder, SearchOptions,
+    SearchStrategy, WarmCache,
+};
 use ptmc::engine::EngineKind;
 use ptmc::fpga::Device;
 use ptmc::mem::MemTech;
@@ -51,7 +54,7 @@ const OPTS: &[&str] = &[
     "input", "synth", "dims", "nnz", "seed", "alpha", // workload
     "config", "rank", "iters", "tol", "backend", "device", "evaluator", "seg",
     "workers", "mode", "engine", // sharded execution + replay core
-    "search", "top-k", // DSE search strategy + report depth
+    "search", "top-k", "warm-cache", // DSE search strategy + report depth + score cache
     "cache-lines", "cache-line-bytes", "cache-assoc", "dma-buffers", "dma-num",
     "dma-buffer-bytes", "max-pointers", "memory-tech", "channels", "dram-banks",
     "row-policy", "mem-techs", "artifacts", "memory-budget",
@@ -100,7 +103,12 @@ fn usage() {
          \x20          Every search also reports the top-k points and the\n\
          \x20          Pareto frontier of cycles vs on-chip blocks vs\n\
          \x20          memory-device power.  Config-file equivalents:\n\
-         \x20          [dse] search / top_k)\n\
+         \x20          [dse] search / top_k / warm_cache)\n\
+         \x20          --warm-cache DIR persists scored points + Pareto\n\
+         \x20          frontier per (tensor fingerprint, evaluator, device)\n\
+         \x20          context; repeat/adjacent explores re-score only\n\
+         \x20          unseen candidates and beam searches resume from\n\
+         \x20          the stored frontier ([dse] warm_cache)\n\
          sim core:  --engine lockstep|event|grid (bit-identical; default\n\
          \x20          event on explore for sweep throughput, lockstep on\n\
          \x20          simulate; grid scores whole cache-module grids in\n\
@@ -505,7 +513,24 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             ))))
         }
     };
-    let opts = SearchOptions { strategy, top_k };
+    // Warm-start score cache (S28): --warm-cache overrides the config
+    // file's `[dse] warm_cache`.  When active, beam searches also
+    // resume from the persisted Pareto frontier.
+    let warm_dir: Option<String> = args
+        .get("warm-cache")
+        .map(|s| s.to_string())
+        .or_else(|| {
+            file_cfg
+                .as_ref()
+                .and_then(|c| c.get("dse", "warm_cache"))
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+        });
+    let opts = SearchOptions {
+        strategy,
+        top_k,
+        resume: warm_dir.is_some(),
+    };
     // `--evaluator grid` is shorthand for the cycle evaluator pinned to
     // the grid batch core; a conflicting explicit --engine would
     // silently lose, so reject it and default the header to grid.
@@ -527,10 +552,33 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
         .map(|&d| Mat::randn(d, rank, 3))
         .collect();
     println!("engine: {engine}");
+    let workers = args.usize_or("workers", 4)?.max(1);
+    // The warm cache is keyed by the full scoring context: changing
+    // the tensor, evaluator, engine, rank, worker count, device, or
+    // factors lands on a different (cold) cache file.
+    let warm = warm_dir.as_ref().map(|dir| {
+        let key = KeyBuilder::new(tensor_fingerprint(&t))
+            .evaluator(evaluator)
+            .engine(engine)
+            .rank(rank)
+            .workers(if evaluator == "sharded" { workers } else { 0 })
+            .device(&dev)
+            .factors(&factors)
+            .finish();
+        std::sync::Arc::new(WarmCache::open(dir, key))
+    });
+    if let Some(w) = &warm {
+        println!(
+            "warm cache: {} ({} cached verdicts)",
+            w.path().display(),
+            w.len()
+        );
+    }
     let builder = EvaluatorBuilder::new()
         .engine(engine)
         .rank(rank)
-        .memory_budget(budget);
+        .memory_budget(budget)
+        .warm_cache(warm.clone());
     let sweep;
     let eval = match evaluator {
         "pms" => builder.pms(&profile),
@@ -543,7 +591,6 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             builder.cycle_sim(&t, &factors)
         }
         "sharded" => {
-            let workers = args.usize_or("workers", 4)?.max(1);
             println!("sharded evaluator: {workers} concurrent controller instances");
             sweep = ShardedSweep::prepare_with_engine(&t, rank, workers, engine);
             builder.sharded(&sweep)
@@ -572,6 +619,14 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     };
     println!("search: {search} (top-k {top_k})");
     let ex = explore_with(&base, &grids, &dev, &eval, &opts);
+    if let Some(w) = &warm {
+        println!(
+            "warm cache: hits={} misses={} entries={}",
+            w.hits(),
+            w.misses(),
+            w.len()
+        );
+    }
     println!(
         "explored {} feasible configs ({} rejected as not fitting {})",
         ex.visited.len(),

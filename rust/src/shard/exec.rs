@@ -339,6 +339,7 @@ pub struct ShardedSweep<'a> {
     t: &'a SparseTensor,
     layout: MemLayout,
     workers: usize,
+    rank: usize,
     engine: EngineKind,
     /// Per mode: the shard plan and each shard's prepared trace.
     modes: Vec<(ShardPlan, Vec<PreparedTrace>)>,
@@ -386,6 +387,7 @@ impl<'a> ShardedSweep<'a> {
             t,
             layout,
             workers,
+            rank,
             engine,
             modes,
             remap_memo: RemapMemo::new(),
@@ -394,6 +396,18 @@ impl<'a> ShardedSweep<'a> {
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Factor rank the traces were compiled for (part of the
+    /// warm-cache context key, [`crate::dse::warm::KeyBuilder`]).
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The tensor the sweep was prepared over (fingerprinted by the
+    /// warm-start layer, [`crate::dse::warm::tensor_fingerprint`]).
+    pub fn tensor(&self) -> &SparseTensor {
+        self.t
     }
 
     /// The sweep's default replay core.

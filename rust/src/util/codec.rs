@@ -1,0 +1,403 @@
+//! Zero-dependency byte codec (S28): little-endian writer/reader,
+//! FNV-1a hashing, and a binary serialization of [`ControllerConfig`]
+//! — the persistence layer behind the warm-start DSE cache
+//! ([`crate::dse::WarmCache`]).  The encoding is versioned at the file
+//! level by its consumer; here every field is written in declaration
+//! order as fixed-width little-endian words, so equal configurations
+//! encode to equal byte strings (the cache keys on the encoding).
+
+use crate::controller::{CacheConfig, ControllerConfig, DmaConfig, RemapperConfig};
+use crate::dram::{DramConfig, RowPolicy};
+use crate::mem::{Hbm2Config, MemTechConfig, OsramConfig};
+
+/// Append-only little-endian byte sink.
+#[derive(Debug, Default, Clone)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        ByteWriter::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` travels as `u64` so the encoding is
+    /// platform-independent.
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian byte source: every read returns
+/// `None` past the end instead of panicking, so truncated or corrupt
+/// inputs decode to a clean failure.
+#[derive(Debug, Clone)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        let b = *self.buf.get(self.pos)?;
+        self.pos += 1;
+        Some(b)
+    }
+
+    pub fn u32(&mut self) -> Option<u32> {
+        let b = self.take(4)?;
+        Some(u32::from_le_bytes(b.try_into().expect("4-byte slice")))
+    }
+
+    pub fn u64(&mut self) -> Option<u64> {
+        let b = self.take(8)?;
+        Some(u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+    }
+
+    pub fn usize(&mut self) -> Option<usize> {
+        Some(self.u64()? as usize)
+    }
+
+    /// The next `n` bytes, advancing past them.
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        let b = self.buf.get(self.pos..end)?;
+        self.pos = end;
+        Some(b)
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+/// FNV-1a 64-bit offset basis.
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
+pub const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a 64-bit hasher — the crate's fingerprint /
+/// checksum primitive (fast, zero-dependency, stable across runs and
+/// platforms; not cryptographic).
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a(FNV_OFFSET)
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a::default()
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.write(&v.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-1a of a byte string.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(bytes);
+    h.finish()
+}
+
+fn row_policy_tag(p: RowPolicy) -> u8 {
+    match p {
+        RowPolicy::Open => 0,
+        RowPolicy::Closed => 1,
+    }
+}
+
+fn row_policy_of(tag: u8) -> Option<RowPolicy> {
+    match tag {
+        0 => Some(RowPolicy::Open),
+        1 => Some(RowPolicy::Closed),
+        _ => None,
+    }
+}
+
+fn encode_dram(w: &mut ByteWriter, d: &DramConfig) {
+    w.usize(d.channels);
+    w.usize(d.banks);
+    w.usize(d.row_bytes);
+    w.usize(d.burst_bytes);
+    w.u64(d.t_rcd);
+    w.u64(d.t_rp);
+    w.u64(d.t_cl);
+    w.u64(d.t_burst);
+    w.u8(row_policy_tag(d.row_policy));
+}
+
+fn decode_dram(r: &mut ByteReader) -> Option<DramConfig> {
+    Some(DramConfig {
+        channels: r.usize()?,
+        banks: r.usize()?,
+        row_bytes: r.usize()?,
+        burst_bytes: r.usize()?,
+        t_rcd: r.u64()?,
+        t_rp: r.u64()?,
+        t_cl: r.u64()?,
+        t_burst: r.u64()?,
+        row_policy: row_policy_of(r.u8()?)?,
+    })
+}
+
+fn encode_hbm2(w: &mut ByteWriter, h: &Hbm2Config) {
+    w.usize(h.stacks);
+    w.usize(h.channels_per_stack);
+    w.usize(h.pseudo_channels);
+    w.usize(h.banks);
+    w.usize(h.row_bytes);
+    w.usize(h.burst_bytes);
+    w.u64(h.t_rcd);
+    w.u64(h.t_rp);
+    w.u64(h.t_cl);
+    w.u64(h.t_burst);
+    w.u8(row_policy_tag(h.row_policy));
+}
+
+fn decode_hbm2(r: &mut ByteReader) -> Option<Hbm2Config> {
+    Some(Hbm2Config {
+        stacks: r.usize()?,
+        channels_per_stack: r.usize()?,
+        pseudo_channels: r.usize()?,
+        banks: r.usize()?,
+        row_bytes: r.usize()?,
+        burst_bytes: r.usize()?,
+        t_rcd: r.u64()?,
+        t_rp: r.u64()?,
+        t_cl: r.u64()?,
+        t_burst: r.u64()?,
+        row_policy: row_policy_of(r.u8()?)?,
+    })
+}
+
+fn encode_osram(w: &mut ByteWriter, o: &OsramConfig) {
+    w.usize(o.banks);
+    w.usize(o.word_bytes);
+    w.u64(o.t_access);
+    w.u64(o.t_word);
+}
+
+fn decode_osram(r: &mut ByteReader) -> Option<OsramConfig> {
+    Some(OsramConfig {
+        banks: r.usize()?,
+        word_bytes: r.usize()?,
+        t_access: r.u64()?,
+        t_word: r.u64()?,
+    })
+}
+
+/// Serialize a full controller configuration.  Equal configurations
+/// produce equal byte strings (and vice versa: every field round-trips
+/// exactly), so the encoding doubles as a hash/equality key.
+pub fn encode_config(cfg: &ControllerConfig) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    match &cfg.mem {
+        MemTechConfig::Ddr4(d) => {
+            w.u8(0);
+            encode_dram(&mut w, d);
+        }
+        MemTechConfig::Hbm2(h) => {
+            w.u8(1);
+            encode_hbm2(&mut w, h);
+        }
+        MemTechConfig::Osram(o) => {
+            w.u8(2);
+            encode_osram(&mut w, o);
+        }
+    }
+    w.usize(cfg.cache.line_bytes);
+    w.usize(cfg.cache.num_lines);
+    w.usize(cfg.cache.assoc);
+    w.u64(cfg.cache.hit_latency);
+    w.usize(cfg.dma.num_dmas);
+    w.usize(cfg.dma.buffers_per_dma);
+    w.usize(cfg.dma.buffer_bytes);
+    w.u64(cfg.dma.setup_cycles);
+    w.usize(cfg.remapper.buffer_bytes);
+    w.usize(cfg.remapper.elem_bytes);
+    w.usize(cfg.remapper.max_pointers);
+    w.u64(cfg.remapper.store_setup_cycles);
+    w.into_bytes()
+}
+
+/// Deserialize [`encode_config`] output.  Returns `None` on a
+/// truncated buffer, an unknown tag, or trailing garbage.
+pub fn decode_config(bytes: &[u8]) -> Option<ControllerConfig> {
+    let mut r = ByteReader::new(bytes);
+    let mem = match r.u8()? {
+        0 => MemTechConfig::Ddr4(decode_dram(&mut r)?),
+        1 => MemTechConfig::Hbm2(decode_hbm2(&mut r)?),
+        2 => MemTechConfig::Osram(decode_osram(&mut r)?),
+        _ => return None,
+    };
+    let cfg = ControllerConfig {
+        mem,
+        cache: CacheConfig {
+            line_bytes: r.usize()?,
+            num_lines: r.usize()?,
+            assoc: r.usize()?,
+            hit_latency: r.u64()?,
+        },
+        dma: DmaConfig {
+            num_dmas: r.usize()?,
+            buffers_per_dma: r.usize()?,
+            buffer_bytes: r.usize()?,
+            setup_cycles: r.u64()?,
+        },
+        remapper: RemapperConfig {
+            buffer_bytes: r.usize()?,
+            elem_bytes: r.usize()?,
+            max_pointers: r.usize()?,
+            store_setup_cycles: r.u64()?,
+        },
+    };
+    if !r.is_empty() {
+        return None;
+    }
+    Some(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        assert_eq!(fnv1a(b""), FNV_OFFSET);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+        let mut inc = Fnv1a::new();
+        inc.write(b"foo");
+        inc.write(b"bar");
+        assert_eq!(inc.finish(), fnv1a(b"foobar"));
+    }
+
+    #[test]
+    fn writer_reader_round_trip_and_bounds() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xdead_beef);
+        w.u64(u64::MAX - 1);
+        w.usize(12345);
+        w.bytes(b"xyz");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8(), Some(7));
+        assert_eq!(r.u32(), Some(0xdead_beef));
+        assert_eq!(r.u64(), Some(u64::MAX - 1));
+        assert_eq!(r.usize(), Some(12345));
+        assert_eq!(r.take(3), Some(&b"xyz"[..]));
+        assert!(r.is_empty());
+        assert_eq!(r.u8(), None, "reads past the end must fail cleanly");
+        let mut t = ByteReader::new(&bytes[..5]);
+        assert_eq!(t.u8(), Some(7));
+        assert_eq!(t.u64(), None, "truncated read must fail, not panic");
+    }
+
+    #[test]
+    fn config_codec_round_trips_every_mem_tech() {
+        let mut cfgs = vec![ControllerConfig::default_for(16)];
+        let mut hbm = ControllerConfig::default_for(20);
+        hbm.mem = MemTechConfig::Hbm2(Hbm2Config::default_u280());
+        hbm.cache.num_lines = 4096;
+        hbm.dma.num_dmas = 4;
+        cfgs.push(hbm);
+        let mut osram = ControllerConfig::default_for(16);
+        osram.mem = MemTechConfig::Osram(OsramConfig::default_16p());
+        osram.remapper.max_pointers = 1 << 18;
+        cfgs.push(osram);
+        let mut closed = ControllerConfig::default_for(16);
+        if let MemTechConfig::Ddr4(d) = &mut closed.mem {
+            d.row_policy = RowPolicy::Closed;
+        }
+        cfgs.push(closed);
+        for cfg in &cfgs {
+            let enc = encode_config(cfg);
+            assert_eq!(decode_config(&enc).as_ref(), Some(cfg));
+        }
+        // Distinct configs must key differently.
+        for (i, a) in cfgs.iter().enumerate() {
+            for b in &cfgs[i + 1..] {
+                assert_ne!(encode_config(a), encode_config(b));
+            }
+        }
+    }
+
+    #[test]
+    fn config_decode_rejects_truncation_and_garbage() {
+        let enc = encode_config(&ControllerConfig::default_for(16));
+        for cut in [0, 1, 5, enc.len() - 1] {
+            assert_eq!(decode_config(&enc[..cut]), None, "cut at {cut}");
+        }
+        let mut long = enc.clone();
+        long.push(0);
+        assert_eq!(decode_config(&long), None, "trailing bytes must reject");
+        let mut bad = enc;
+        bad[0] = 9;
+        assert_eq!(decode_config(&bad), None, "unknown mem-tech tag");
+    }
+}

@@ -5,9 +5,11 @@
 //! spill-to-disk coordinate columns) behind `--memory-budget` (S24).
 
 pub mod budget;
+pub mod codec;
 pub mod par;
 pub mod remap_memo;
 
 pub use budget::{format_size, parse_size, peak_rss_bytes};
+pub use codec::{decode_config, encode_config, fnv1a, ByteReader, ByteWriter, Fnv1a};
 pub use par::parallel_indexed;
 pub use remap_memo::{RemapKey, RemapMemo, SpillCol};

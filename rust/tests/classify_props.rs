@@ -1,0 +1,203 @@
+//! Property tests for the branch-light SoA classification kernel
+//! (S28, `ptmc::engine::grid::ClassifyKernel::Soa`): on random,
+//! adversarial, shard-derived, and windowed traces, the SoA kernel
+//! must be **bit-identical** to the scalar oracle across the full
+//! `Grids::default()` cache candidate set — identical per-candidate
+//! hit/miss/eviction/writeback statistics *and* identical miss-only
+//! replays (cycles plus every controller counter).
+
+use ptmc::controller::{Access, CacheConfig, ControllerConfig, MemLayout};
+use ptmc::dse::Grids;
+use ptmc::engine::{
+    ChunkedWindows, ClassifyKernel, CoalescedWindows, CompressedTrace, GridClassification,
+};
+use ptmc::shard::{partition_indices, shard_trace, ShardPlan};
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+use ptmc::testkit::{forall, Rng};
+
+/// Every valid cache candidate of the default DSE grid (the same
+/// power-of-two-sets filter `dse::explore` applies).
+fn default_grid_configs() -> Vec<CacheConfig> {
+    let g = Grids::default();
+    let mut configs = Vec::new();
+    for &line_bytes in &g.cache_line_bytes {
+        for &num_lines in &g.cache_num_lines {
+            for &assoc in &g.cache_assoc {
+                if num_lines % assoc != 0 || !(num_lines / assoc).is_power_of_two() {
+                    continue;
+                }
+                configs.push(CacheConfig {
+                    line_bytes,
+                    num_lines,
+                    assoc,
+                    hit_latency: 2,
+                });
+            }
+        }
+    }
+    configs
+}
+
+/// Random cache-class trace: hot zipf rows, cold unaligned addresses,
+/// line-straddling widths, and stores mixed in.
+fn random_cache_trace(rng: &mut Rng) -> Vec<Access> {
+    let n = rng.range(50, 1_200);
+    let mut trace = Vec::with_capacity(n);
+    for _ in 0..n {
+        let addr = match rng.below(4) {
+            0 => rng.zipf(4096, 1.2) * 64,
+            1 => rng.below(1 << 22),
+            2 => (8 << 20) + rng.below(1 << 10) * 256,
+            _ => rng.below(1 << 16) * 64,
+        };
+        let bytes = match rng.below(4) {
+            0 => 16,
+            1 => 64,
+            2 => 1 + rng.below(300) as usize,
+            _ => 4,
+        };
+        if rng.below(4) == 0 {
+            trace.push(Access::CachedStore { addr, bytes });
+        } else {
+            trace.push(Access::Cached { addr, bytes });
+        }
+    }
+    trace
+}
+
+/// Assert the two kernels classify `trace` identically for every
+/// candidate: statistics and full miss-only replays.
+fn assert_kernels_identical(trace: &[Access], configs: &[CacheConfig], what: &str) {
+    let ct = CompressedTrace::compress(trace);
+    let scalar = GridClassification::classify_with(&ct, configs, ClassifyKernel::Scalar);
+    let soa = GridClassification::classify_with(&ct, configs, ClassifyKernel::Soa);
+    for (i, cc) in configs.iter().enumerate() {
+        assert_eq!(
+            scalar.cache_stats(i),
+            soa.cache_stats(i),
+            "{what}: stats diverged for {cc:?}"
+        );
+        let mut cfg = ControllerConfig::default_for(16);
+        cfg.cache = *cc;
+        assert_eq!(
+            scalar.replay(i, &ct, &cfg),
+            soa.replay(i, &ct, &cfg),
+            "{what}: replay diverged for {cc:?}"
+        );
+    }
+}
+
+#[test]
+fn soa_kernel_matches_scalar_oracle_on_the_default_grid() {
+    let configs = default_grid_configs();
+    assert!(configs.len() >= 32, "default grid should be non-trivial");
+    forall("soa_vs_scalar_default_grid", 8, |rng| {
+        let trace = random_cache_trace(rng);
+        assert_kernels_identical(&trace, &configs, "random trace");
+    });
+}
+
+#[test]
+fn soa_kernel_matches_scalar_oracle_on_adversarial_mixes() {
+    // Degenerate shapes the branchless lanes must still get right:
+    // single-set caches, repeated hits to one line, eviction storms
+    // cycling through exactly assoc+1 lines, dirty-line ping-pong, and
+    // addresses beyond the u32 delta window.
+    let configs = default_grid_configs();
+    forall("soa_vs_scalar_adversarial", 8, |rng| {
+        let n = rng.range(1, 500);
+        let mut trace = Vec::with_capacity(n);
+        for i in 0..n as u64 {
+            let a = match rng.below(6) {
+                0 => Access::Cached { addr: 0, bytes: 16 },
+                1 => Access::Cached {
+                    // Cycle assoc+1 lines of one set for 16384-line caches.
+                    addr: (i % 9) * (16384 / 8) * 256,
+                    bytes: 64,
+                },
+                2 => Access::CachedStore {
+                    addr: (i % 2) * (1 << 22),
+                    bytes: 16,
+                },
+                3 => Access::Cached {
+                    addr: (1 << 40) + rng.below(1 << 18) * 64,
+                    bytes: 64,
+                },
+                4 => Access::Cached {
+                    addr: rng.below(1 << 26),
+                    bytes: 1 + rng.below(700) as usize,
+                },
+                _ => Access::CachedStore {
+                    addr: rng.zipf(64, 1.4) * 32,
+                    bytes: 32,
+                },
+            };
+            trace.push(a);
+        }
+        assert_kernels_identical(&trace, &configs, "adversarial trace");
+    });
+}
+
+#[test]
+fn soa_kernel_matches_scalar_oracle_on_shard_traces() {
+    let configs = default_grid_configs();
+    forall("soa_vs_scalar_shard_traces", 4, |rng| {
+        let dims: Vec<usize> = (0..3).map(|_| rng.range(40, 200)).collect();
+        let space: usize = dims.iter().product();
+        let nnz = rng.range(100, 1_500).min(space / 4).max(1);
+        let t = generate(&SynthConfig {
+            dims,
+            nnz,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            seed: rng.next_u64(),
+        });
+        let rank = 8;
+        let mode = rng.range(0, t.n_modes());
+        let workers = rng.range(1, 4);
+        let layout = MemLayout::plan(t.dims(), t.nnz(), t.record_bytes(), rank);
+        let plan = ShardPlan::balance(&t, mode, workers);
+        let parts = partition_indices(&t, &plan);
+        let mut offset = 0usize;
+        for (spec, zs) in plan.shards.iter().zip(&parts) {
+            let trace = shard_trace(&t, rank, mode, &layout, spec, zs, offset);
+            offset += spec.nnz;
+            assert_kernels_identical(&trace, &configs, "shard trace");
+        }
+    });
+}
+
+#[test]
+fn soa_kernel_is_window_boundary_invariant() {
+    // Windowed classification threads the SoA stacks, the per-slot
+    // last-miss line counters, and the pass-global line number across
+    // windows; both kernels must agree at every window size, including
+    // after re-blocking through `CoalescedWindows`.
+    let configs = default_grid_configs();
+    forall("soa_vs_scalar_windowed", 6, |rng| {
+        let trace = random_cache_trace(rng);
+        let ct = CompressedTrace::compress(&trace);
+        let mono = GridClassification::classify_with(&ct, &configs, ClassifyKernel::Scalar);
+        for window in [1usize, 7, 64, 513, 100_000] {
+            let mut src = ChunkedWindows::new(&trace, window);
+            let win =
+                GridClassification::classify_source_with(&mut src, &configs, ClassifyKernel::Soa);
+            for (i, cc) in configs.iter().enumerate() {
+                assert_eq!(
+                    mono.cache_stats(i),
+                    win.cache_stats(i),
+                    "window {window}: {cc:?}"
+                );
+            }
+        }
+        let mut inner = ChunkedWindows::new(&trace, 3);
+        let mut coalesced = CoalescedWindows::new(&mut inner, 256);
+        let co = GridClassification::classify_source_with(
+            &mut coalesced,
+            &configs,
+            ClassifyKernel::Soa,
+        );
+        for (i, cc) in configs.iter().enumerate() {
+            assert_eq!(mono.cache_stats(i), co.cache_stats(i), "coalesced: {cc:?}");
+        }
+    });
+}

@@ -13,8 +13,8 @@ use ptmc::controller::{
 };
 use ptmc::dram::RowPolicy;
 use ptmc::engine::{
-    CompressedTrace, EngineKind, GridClassification, JointIndex, PreparedTrace, SimEngine,
-    TimingCandidate, TimingOps,
+    ClassifyKernel, CompressedTrace, EngineKind, GridClassification, JointIndex, PreparedTrace,
+    SimEngine, TimingCandidate, TimingOps,
 };
 use ptmc::mttkrp::{approach1, Tracing};
 use ptmc::shard::{partition_indices, shard_trace, ShardPlan, ShardedSweep};
@@ -130,6 +130,26 @@ fn assert_engines_identical(prepared: &PreparedTrace, cfg: &ControllerConfig, wh
         run.dram,
         *lockstep.dram_stats(),
         "{what}: grid DramStats diverged"
+    );
+
+    // The scalar classification kernel is the SoA kernel's oracle
+    // (S28): the default `classify` above ran SoA, so re-classifying
+    // with the scalar kernel must reproduce the identical statistics
+    // and the identical miss-only replay, bit for bit.
+    let scalar = GridClassification::classify_with(
+        prepared.compressed(),
+        &[cfg.cache],
+        ClassifyKernel::Scalar,
+    );
+    assert_eq!(
+        scalar.cache_stats(0),
+        cls.cache_stats(0),
+        "{what}: scalar/SoA kernel stats diverged"
+    );
+    assert_eq!(
+        scalar.replay(0, prepared.compressed(), cfg),
+        run,
+        "{what}: scalar/SoA kernel replay diverged"
     );
 
     // The timing-grid column: extract the configuration's miss/stream

@@ -8,7 +8,7 @@
 use ptmc::controller::{Access, CacheConfig, CacheEngine};
 use ptmc::dram::{Dram, DramConfig};
 use ptmc::dse::Grids;
-use ptmc::engine::{CompressedTrace, GridClassification};
+use ptmc::engine::{ClassifyKernel, CompressedTrace, GridClassification};
 use ptmc::testkit::{forall, Rng};
 
 /// Every valid cache candidate of the default DSE grid (the same
@@ -98,6 +98,25 @@ fn classifier_matches_cache_engine_on_the_default_grid() {
             assert_eq!(cls.hits(i), want.hits, "{cfg:?}");
             assert_eq!(cls.misses(i), want.misses, "{cfg:?}");
             assert_eq!(cls.accesses(i), want.accesses, "{cfg:?}");
+        }
+    });
+}
+
+#[test]
+fn both_kernels_match_the_cache_engine_on_the_default_grid() {
+    // The default entry points run the SoA kernel (S28); the scalar
+    // kernel is its oracle.  Both must agree with a real `CacheEngine`
+    // replay — and therefore with each other — for every candidate.
+    let configs = default_grid_configs();
+    forall("grid_kernels_vs_cache_engine", 6, |rng| {
+        let trace = random_cache_trace(rng);
+        let ct = CompressedTrace::compress(&trace);
+        let scalar = GridClassification::classify_with(&ct, &configs, ClassifyKernel::Scalar);
+        let soa = GridClassification::classify_with(&ct, &configs, ClassifyKernel::Soa);
+        for (i, cfg) in configs.iter().enumerate() {
+            let want = engine_replay(&trace, *cfg);
+            assert_eq!(scalar.cache_stats(i), want, "scalar vs engine: {cfg:?}");
+            assert_eq!(soa.cache_stats(i), want, "soa vs engine: {cfg:?}");
         }
     });
 }

@@ -257,6 +257,7 @@ fn joint_explore_never_worse_than_coordinate_on_random_tensors() {
         let joint = SearchOptions {
             strategy: SearchStrategy::Joint,
             top_k: 3,
+            resume: false,
         };
         let ev_grid = EvaluatorBuilder::new()
             .engine(EngineKind::Grid)

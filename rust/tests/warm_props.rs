@@ -1,0 +1,257 @@
+//! Property tests for the warm-start DSE layer (S28,
+//! `ptmc::dse::warm`): a warm-started `explore_with` must return a
+//! byte-identical `Exploration` to a cold run (first *and* repeat
+//! queries), a perturbed tensor must never hit a stale cache, and the
+//! on-disk cache must survive a round-trip while tolerating truncated
+//! or corrupt files by falling back to cold.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ptmc::controller::ControllerConfig;
+use ptmc::dram::RowPolicy;
+use ptmc::dse::{
+    explore_with, tensor_fingerprint, EvaluatorBuilder, Exploration, Grids, KeyBuilder, Point,
+    SearchOptions, SearchStrategy, WarmCache,
+};
+use ptmc::fpga::Device;
+use ptmc::mem::MemTech;
+use ptmc::pms::TensorProfile;
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+use ptmc::tensor::SparseTensor;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ptmc_warm_props_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn tensor(seed: u64) -> SparseTensor {
+    generate(&SynthConfig {
+        dims: vec![120, 90, 60],
+        nnz: 3_000,
+        profile: Profile::Zipf { alpha_milli: 1200 },
+        seed,
+    })
+}
+
+fn small_grids() -> Grids {
+    Grids {
+        cache_line_bytes: vec![32, 64],
+        cache_num_lines: vec![256, 1024],
+        cache_assoc: vec![2, 4],
+        dma_num: vec![1, 2],
+        dma_buffers: vec![2],
+        dma_buffer_bytes: vec![4096],
+        mem_techs: vec![MemTech::Ddr4],
+        dram_channels: vec![1, 2],
+        dram_banks: vec![16],
+        dram_row_policy: vec![RowPolicy::Open],
+        remap_max_pointers: vec![1 << 10, 1 << 18],
+    }
+}
+
+fn pms_key(t: &SparseTensor, dev: &Device) -> u64 {
+    KeyBuilder::new(tensor_fingerprint(t))
+        .evaluator("pms")
+        .rank(16)
+        .device(dev)
+        .finish()
+}
+
+fn assert_points_identical(a: &[Point], b: &[Point], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths diverged");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.cfg, y.cfg, "{what}: configs diverged");
+        assert_eq!(
+            x.cycles.to_bits(),
+            y.cycles.to_bits(),
+            "{what}: cycles diverged"
+        );
+        assert_eq!(x.bram36, y.bram36, "{what}: bram36 diverged");
+        assert_eq!(x.uram, y.uram, "{what}: uram diverged");
+    }
+}
+
+fn assert_explorations_identical(a: &Exploration, b: &Exploration) {
+    assert_points_identical(
+        std::slice::from_ref(&a.best),
+        std::slice::from_ref(&b.best),
+        "best",
+    );
+    assert_points_identical(&a.visited, &b.visited, "visited");
+    assert_eq!(a.rejected, b.rejected, "rejected counts diverged");
+    assert_points_identical(&a.pareto, &b.pareto, "pareto");
+    assert_points_identical(&a.top, &b.top, "top-k");
+}
+
+#[test]
+fn warm_explore_is_byte_identical_to_cold_and_reuses_scores() {
+    let t = tensor(11);
+    let profile = TensorProfile::measure(&t);
+    let base = ControllerConfig::default_for(t.record_bytes());
+    let dev = Device::alveo_u250();
+    // The full default grid plus a never-fits cache point so the
+    // search genuinely prunes: the rejected count doubles as the
+    // regression that warm queries prune exactly like cold ones, with
+    // infeasible verdicts replayed from the cache rather than
+    // re-derived.
+    let mut grids = Grids::default();
+    grids.cache_num_lines.push(1 << 22);
+    let opts = SearchOptions {
+        strategy: SearchStrategy::Coordinate,
+        top_k: 3,
+        resume: false,
+    };
+
+    let cold_eval = EvaluatorBuilder::new().rank(16).pms(&profile);
+    let cold = explore_with(&base, &grids, &dev, &cold_eval, &opts);
+    assert!(cold.rejected > 0, "the default grid should prune on u250");
+
+    let dir = tmp_dir("identical");
+    let key = pms_key(&t, &dev);
+
+    // First warm run (empty cache): already byte-identical to cold.
+    let cache = Arc::new(WarmCache::open(&dir, key));
+    let warm = Some(Arc::clone(&cache));
+    let eval = EvaluatorBuilder::new().rank(16).warm_cache(warm).pms(&profile);
+    let first = explore_with(&base, &grids, &dev, &eval, &opts);
+    assert_explorations_identical(&cold, &first);
+    assert!(cache.misses() > 0, "first run must populate the cache");
+
+    // Second warm run, cache reloaded from disk: byte-identical again
+    // and served entirely from the cache — zero re-scores, and the
+    // pruned count matches the cold path without re-pruning.
+    let cache2 = Arc::new(WarmCache::open(&dir, key));
+    assert!(!cache2.is_empty(), "cache must round-trip through disk");
+    let warm2 = Some(Arc::clone(&cache2));
+    let eval2 = EvaluatorBuilder::new().rank(16).warm_cache(warm2).pms(&profile);
+    let second = explore_with(&base, &grids, &dev, &eval2, &opts);
+    assert_explorations_identical(&cold, &second);
+    assert!(cache2.hits() > 0, "repeat query must hit the cache");
+    assert_eq!(cache2.misses(), 0, "repeat query must not re-score");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stale_fingerprint_never_hits_the_cache() {
+    let t1 = tensor(17);
+    // The same generator config perturbed by a single extra non-zero:
+    // the fingerprint, and therefore the context key and cache file,
+    // must change.
+    let t2 = generate(&SynthConfig {
+        dims: vec![120, 90, 60],
+        nnz: 3_001,
+        profile: Profile::Zipf { alpha_milli: 1200 },
+        seed: 17,
+    });
+    assert_ne!(
+        tensor_fingerprint(&t1),
+        tensor_fingerprint(&t2),
+        "a one-nnz perturbation must change the fingerprint"
+    );
+
+    let dev = Device::alveo_u250();
+    let dir = tmp_dir("stale");
+    let profile = TensorProfile::measure(&t1);
+    let base = ControllerConfig::default_for(t1.record_bytes());
+    let key1 = pms_key(&t1, &dev);
+    let cache1 = Arc::new(WarmCache::open(&dir, key1));
+    let warm = Some(Arc::clone(&cache1));
+    let eval = EvaluatorBuilder::new().rank(16).warm_cache(warm).pms(&profile);
+    let opts = SearchOptions::default();
+    explore_with(&base, &small_grids(), &dev, &eval, &opts);
+    assert!(!cache1.is_empty(), "first tensor must populate its cache");
+
+    let key2 = pms_key(&t2, &dev);
+    assert_ne!(key1, key2, "perturbed tensor must change the key");
+    let cache2 = WarmCache::open(&dir, key2);
+    assert!(cache2.is_empty(), "perturbed tensor must start cold");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_cache_files_fall_back_to_cold_results() {
+    let t = tensor(19);
+    let profile = TensorProfile::measure(&t);
+    let base = ControllerConfig::default_for(t.record_bytes());
+    let dev = Device::alveo_u250();
+    let grids = small_grids();
+    let opts = SearchOptions {
+        strategy: SearchStrategy::Coordinate,
+        top_k: 2,
+        resume: false,
+    };
+    let cold_eval = EvaluatorBuilder::new().rank(16).pms(&profile);
+    let cold = explore_with(&base, &grids, &dev, &cold_eval, &opts);
+
+    let dir = tmp_dir("corrupt");
+    let key = pms_key(&t, &dev);
+    let cache = Arc::new(WarmCache::open(&dir, key));
+    let warm = Some(Arc::clone(&cache));
+    let eval = EvaluatorBuilder::new().rank(16).warm_cache(warm).pms(&profile);
+    explore_with(&base, &grids, &dev, &eval, &opts);
+    let path = cache.path();
+    let good = std::fs::read(&path).expect("cache file must exist");
+
+    // Truncate the file: reopening must fall back to cold and the
+    // exploration must still be byte-identical.
+    std::fs::write(&path, &good[..good.len() / 3]).unwrap();
+    let cache2 = Arc::new(WarmCache::open(&dir, key));
+    assert!(cache2.is_empty(), "truncated file must read as cold");
+    let warm2 = Some(Arc::clone(&cache2));
+    let eval2 = EvaluatorBuilder::new().rank(16).warm_cache(warm2).pms(&profile);
+    let again = explore_with(&base, &grids, &dev, &eval2, &opts);
+    assert_explorations_identical(&cold, &again);
+
+    // The run over the corrupt file re-flushed a valid cache.
+    let cache3 = WarmCache::open(&dir, key);
+    assert!(!cache3.is_empty(), "explore must heal the cache file");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn beam_resume_restarts_from_the_stored_frontier() {
+    let t = tensor(23);
+    let profile = TensorProfile::measure(&t);
+    let base = ControllerConfig::default_for(t.record_bytes());
+    let dev = Device::alveo_u250();
+    let grids = small_grids();
+    let opts = SearchOptions {
+        strategy: SearchStrategy::Beam { width: 2 },
+        top_k: 3,
+        resume: false,
+    };
+    let cold_eval = EvaluatorBuilder::new().rank(16).pms(&profile);
+    let cold = explore_with(&base, &grids, &dev, &cold_eval, &opts);
+
+    let dir = tmp_dir("resume");
+    let key = pms_key(&t, &dev);
+    let cache = Arc::new(WarmCache::open(&dir, key));
+    let warm = Some(Arc::clone(&cache));
+    let eval = EvaluatorBuilder::new().rank(16).warm_cache(warm).pms(&profile);
+    let first = explore_with(&base, &grids, &dev, &eval, &opts);
+    assert_explorations_identical(&cold, &first);
+    assert!(
+        !cache.frontier().is_empty(),
+        "explore must store a frontier"
+    );
+
+    // Resumed run: seeds the beam from the stored frontier.  It may
+    // visit a different (seed-extended) set of points, but it must
+    // never end worse than the cold search, and it must reuse scores.
+    let cache2 = Arc::new(WarmCache::open(&dir, key));
+    let warm2 = Some(Arc::clone(&cache2));
+    let eval2 = EvaluatorBuilder::new().rank(16).warm_cache(warm2).pms(&profile);
+    let resume_opts = SearchOptions {
+        resume: true,
+        ..opts
+    };
+    let resumed = explore_with(&base, &grids, &dev, &eval2, &resume_opts);
+    assert!(
+        resumed.best.cycles <= cold.best.cycles,
+        "resume must never end worse than cold"
+    );
+    assert!(cache2.hits() > 0, "resume must reuse cached scores");
+    let _ = std::fs::remove_dir_all(&dir);
+}

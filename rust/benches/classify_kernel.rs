@@ -16,7 +16,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
-use ptmc::bench::{self, json_section, sized, smoke, upsert_json_section};
+use ptmc::bench::{self, sized, smoke, upsert_json_file};
 use ptmc::controller::{Access, CacheConfig, ControllerConfig, MemLayout};
 use ptmc::cpd::linalg::Mat;
 use ptmc::dram::RowPolicy;
@@ -28,8 +28,10 @@ use ptmc::engine::{ClassifyKernel, CompressedTrace, EngineKind, GridClassificati
 use ptmc::fpga::Device;
 use ptmc::mem::MemTech;
 use ptmc::shard::{partition_indices, shard_trace, ShardPlan};
+use ptmc::tensor::frostt::TnsBlockReader;
 use ptmc::tensor::synth::{generate, Profile, SynthConfig};
 use ptmc::testkit::Rng;
+use ptmc::util::fault;
 
 /// Every valid cache candidate of the default DSE grid (the same
 /// power-of-two-sets filter `dse::explore` applies).
@@ -197,6 +199,7 @@ fn main() {
         strategy: SearchStrategy::Coordinate,
         top_k: 3,
         resume: false,
+        checkpoint_every: 0,
     };
     let cold_eval = EvaluatorBuilder::new().rank(rank).cycle_sim(&t, &factors);
     let t0 = Instant::now();
@@ -231,6 +234,54 @@ fn main() {
     println!("explore: cold {cold_s:.2}s, warm repeat {warm_s:.2}s");
     println!("  warm speedup: {warm_speedup:.2}x ({warm_hits} cache hits)");
 
+    // 4. Disarmed failpoint overhead (the PR 9 robustness claim): one
+    //    relaxed atomic load per check, amortized over the block parse
+    //    it actually guards — must stay under 1% of the guarded work.
+    let checks = sized(20_000_000, 1_000_000) as u32;
+    let check_t = bench::time(1, iters, || {
+        let mut ok = 0u32;
+        for _ in 0..checks {
+            if fault::check_io(fault::FROSTT_READ_BLOCK).is_ok() {
+                ok += 1;
+            }
+        }
+        bench::black_box(ok)
+    });
+    let disarmed_check_ns = check_t.mean.as_secs_f64() * 1e9 / f64::from(checks);
+
+    let block_nnz = sized(1 << 18, 1 << 13);
+    let mut tns_text = String::new();
+    {
+        use std::fmt::Write as _;
+        let mut rng = Rng::new(0xFA017);
+        for _ in 0..block_nnz {
+            let _ = writeln!(
+                tns_text,
+                "{} {} {} 1.0",
+                1 + rng.below(512),
+                1 + rng.below(384),
+                1 + rng.below(256)
+            );
+        }
+    }
+    let parse_t = bench::time(1, iters, || {
+        let mut r = TnsBlockReader::new(std::io::Cursor::new(tns_text.as_bytes()), block_nnz);
+        let mut parsed = 0usize;
+        while let Ok(Some(b)) = r.next_block() {
+            parsed += b.nnz();
+        }
+        bench::black_box(parsed)
+    });
+    // One check guards one block read, so the per-block parse time is
+    // the denominator.
+    let block_parse_ns = parse_t.mean.as_secs_f64() * 1e9;
+    let overhead_pct = disarmed_check_ns / block_parse_ns * 100.0;
+    println!("fault check (disarmed): {disarmed_check_ns:.2} ns/check");
+    println!(
+        "  guarded block parse ({block_nnz} nnz): {:.3e} ns -> overhead {overhead_pct:.6}%",
+        block_parse_ns
+    );
+
     let section = format!(
         "{{\n    \"pr\": 8,\n    \"smoke\": {},\n    \
          \"kernel_accesses\": {n},\n    \"grid_configs\": {n_cfg},\n    \
@@ -244,14 +295,26 @@ fn main() {
          \"warm_speedup\": {warm_speedup:.2},\n    \"warm_hits\": {warm_hits}\n  }}",
         smoke(),
     );
+    let fault_section = format!(
+        "{{\n    \"pr\": 9,\n    \"smoke\": {},\n    \"checks\": {checks},\n    \
+         \"disarmed_check_ns\": {disarmed_check_ns:.3},\n    \
+         \"block_nnz\": {block_nnz},\n    \"block_parse_ns\": {block_parse_ns:.3e},\n    \
+         \"overhead_pct\": {overhead_pct:.6},\n    \"target_pct\": 1.0\n  }}",
+        smoke(),
+    );
     let bench_path = repo_root().join("BENCH_dse.json");
-    let old = std::fs::read_to_string(&bench_path).unwrap_or_default();
-    let merged = upsert_json_section(&old, "classify_kernel", &section);
-    debug_assert!(json_section(&merged, "classify_kernel").is_some());
-    if let Err(e) = std::fs::write(&bench_path, &merged) {
-        eprintln!("warning: failed to write {}: {e}", bench_path.display());
-    } else {
-        println!("[bench section written to {}]", bench_path.display());
+    match upsert_json_file(&bench_path, "classify_kernel", &section)
+        .and_then(|()| upsert_json_file(&bench_path, "fault_overhead", &fault_section))
+    {
+        Err(e) => eprintln!("warning: failed to update {}: {e}", bench_path.display()),
+        Ok(()) => println!("[bench sections written to {}]", bench_path.display()),
+    }
+
+    // The fault check must cost under 1% of the work it guards,
+    // regardless of smoke mode (the ratio is size-independent).
+    if overhead_pct > 1.0 {
+        let msg = format!("disarmed fault check above 1% of a block parse: {overhead_pct:.4}%");
+        warn_or_enforce(&msg);
     }
 
     if !smoke() {

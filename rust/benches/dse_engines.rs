@@ -402,6 +402,7 @@ fn main() {
                 strategy: SearchStrategy::Joint,
                 top_k: 3,
                 resume: false,
+                checkpoint_every: 0,
             },
         );
         assert_eq!(

@@ -17,7 +17,7 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use ptmc::bench::{json_section, sized, smoke, upsert_json_section};
+use ptmc::bench::{sized, smoke, upsert_json_file};
 use ptmc::controller::ControllerConfig;
 use ptmc::cpd::{cp_als, AlsConfig, NativeBackend};
 use ptmc::dse::{explore_with, EvaluatorBuilder, Grids, SearchOptions, SearchStrategy};
@@ -120,6 +120,7 @@ fn main() {
         strategy: SearchStrategy::Coordinate,
         top_k: 1,
         resume: false,
+        checkpoint_every: 0,
     };
     let ex = explore_with(&base, &grids, &dev, &eval, &opts);
     let explore_s = t0.elapsed().as_secs_f64();
@@ -157,11 +158,8 @@ fn main() {
         peak.map_or(true, |p| p <= BUDGET_BYTES),
     );
     let bench_path = repo_root().join("BENCH_dse.json");
-    let old = std::fs::read_to_string(&bench_path).unwrap_or_default();
-    let merged = upsert_json_section(&old, "streaming", &section);
-    debug_assert!(json_section(&merged, "streaming").is_some());
-    if let Err(e) = std::fs::write(&bench_path, &merged) {
-        eprintln!("warning: failed to write {}: {e}", bench_path.display());
+    if let Err(e) = upsert_json_file(&bench_path, "streaming", &section) {
+        eprintln!("warning: failed to update {}: {e}", bench_path.display());
     } else {
         println!("[streaming section written to {}]", bench_path.display());
     }

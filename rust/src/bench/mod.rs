@@ -179,6 +179,27 @@ pub fn upsert_json_section(text: &str, key: &str, value: &str) -> String {
     format!("{body}{comma}\n  \"{key}\": {value}\n}}\n")
 }
 
+/// Read-modify-write a `"key": <section>` member into the JSON object
+/// file at `path`, atomically (tmp + rename, so a crash mid-write
+/// leaves the previous file intact) and behind the `bench.upsert`
+/// failpoint.  Transient IO errors are retried.
+pub fn upsert_json_file(
+    path: &std::path::Path,
+    key: &str,
+    section: &str,
+) -> std::io::Result<()> {
+    crate::util::fault::retry_transient(3, || {
+        crate::util::fault::check_io(crate::util::fault::BENCH_UPSERT)?;
+        let old = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+            Err(e) => return Err(e),
+        };
+        let merged = upsert_json_section(&old, key, section);
+        crate::util::write_atomic(path, merged.as_bytes())
+    })
+}
+
 /// Byte index one past the closing quote of the string starting at
 /// `start` (which must index a `"`), honoring backslash escapes.
 fn skip_string(b: &[u8], start: usize) -> usize {

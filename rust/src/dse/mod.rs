@@ -944,6 +944,15 @@ pub struct SearchOptions {
     /// other strategies and for cold caches; `false` (the default)
     /// keeps every search byte-identical to a cold run.
     pub resume: bool,
+    /// Periodic checkpointing (S31): when nonzero and the evaluator is
+    /// [`Evaluator::Warm`], flush the interim Pareto frontier and the
+    /// verdict map through the warm cache's atomic writer after every
+    /// module sweep that added at least this many newly scored points.
+    /// A SIGKILL'd explore then resumes via `--warm-cache` from the
+    /// last checkpoint, byte-identical to an uninterrupted run.  `0`
+    /// (the default) disables mid-search flushes; the final flush at
+    /// the end of the search always happens.
+    pub checkpoint_every: usize,
 }
 
 impl Default for SearchOptions {
@@ -952,6 +961,7 @@ impl Default for SearchOptions {
             strategy: SearchStrategy::Coordinate,
             top_k: 1,
             resume: false,
+            checkpoint_every: 0,
         }
     }
 }
@@ -1076,6 +1086,45 @@ fn sweep_module(
         }
     }
     fresh
+}
+
+/// Periodic mid-search persistence (S31): after each module sweep,
+/// once at least `every` new points have been scored since the last
+/// flush, push the interim Pareto frontier into the warm cache and
+/// flush it through the atomic temp+rename writer.  Each checkpoint
+/// is a complete, valid cache file, so a run killed at *any* moment
+/// leaves either the previous checkpoint or the new one on disk —
+/// never a torn state — and `--warm-cache` resume replays the scored
+/// verdicts bit-exactly.
+struct Checkpointer<'a> {
+    cache: Option<&'a WarmCache>,
+    every: usize,
+    /// `visited.len()` at the last checkpoint.
+    last: usize,
+}
+
+impl<'a> Checkpointer<'a> {
+    fn new(eval: &'a Evaluator<'_>, every: usize) -> Self {
+        let cache = match eval {
+            Evaluator::Warm { cache, .. } if every > 0 => Some(cache.as_ref()),
+            _ => None,
+        };
+        Checkpointer {
+            cache,
+            every,
+            last: 0,
+        }
+    }
+
+    fn tick(&mut self, visited: &[Point]) {
+        let Some(cache) = self.cache else { return };
+        if visited.len().saturating_sub(self.last) < self.every {
+            return;
+        }
+        self.last = visited.len();
+        cache.set_frontier(&pareto_frontier(visited));
+        cache.flush_or_degrade();
+    }
 }
 
 /// The Cache Engine module grid swept from `from` (module 1).
@@ -1359,10 +1408,12 @@ fn search_coordinate(
     best: &mut Point,
     visited: &mut Vec<Point>,
     rejected: &mut usize,
+    ckpt: &mut Checkpointer<'_>,
 ) {
     for stage in 0..MODULE_STAGES {
         let cands = module_candidates(stage, grids, &best.cfg);
         sweep_module(eval, dev, cands, best, visited, rejected);
+        ckpt.tick(visited);
     }
 }
 
@@ -1380,6 +1431,7 @@ fn search_beam(
     best: &mut Point,
     visited: &mut Vec<Point>,
     rejected: &mut usize,
+    ckpt: &mut Checkpointer<'_>,
 ) {
     let width = width.max(1);
     let mut beam: Vec<Point> = vec![best.clone()];
@@ -1409,6 +1461,7 @@ fn search_beam(
         }
         scored.extend(cands.iter().cloned());
         let fresh = sweep_module(eval, dev, cands, best, visited, rejected);
+        ckpt.tick(visited);
         let mut pool = beam;
         pool.extend(fresh);
         // Stable sort: the old beam precedes this sweep's points, so a
@@ -1426,6 +1479,7 @@ fn search_beam(
 /// evaluator's device feasibility **before** any simulation (they come
 /// back `None` and count as rejections), and the grid engine routes
 /// the survivors through the hierarchical sweep core.
+#[allow(clippy::too_many_arguments)]
 fn search_joint(
     base: &ControllerConfig,
     grids: &Grids,
@@ -1434,12 +1488,14 @@ fn search_joint(
     best: &mut Point,
     visited: &mut Vec<Point>,
     rejected: &mut usize,
+    ckpt: &mut Checkpointer<'_>,
 ) {
     let cands: Vec<ControllerConfig> = joint_candidates(base, grids)
         .into_iter()
         .filter(|cfg| cfg != base) // base is already scored as the starting point
         .collect();
     sweep_module(eval, dev, cands, best, visited, rejected);
+    ckpt.tick(visited);
 }
 
 /// [`explore_with`] under the default options (coordinate descent,
@@ -1497,10 +1553,17 @@ pub fn explore_with(
     }
     visited.extend(seeds.iter().cloned());
 
+    let mut ckpt = Checkpointer::new(eval, opts.checkpoint_every);
     match opts.strategy {
-        SearchStrategy::Coordinate => {
-            search_coordinate(grids, dev, eval, &mut best, &mut visited, &mut rejected)
-        }
+        SearchStrategy::Coordinate => search_coordinate(
+            grids,
+            dev,
+            eval,
+            &mut best,
+            &mut visited,
+            &mut rejected,
+            &mut ckpt,
+        ),
         SearchStrategy::Beam { width } => search_beam(
             grids,
             dev,
@@ -1510,21 +1573,29 @@ pub fn explore_with(
             &mut best,
             &mut visited,
             &mut rejected,
+            &mut ckpt,
         ),
-        SearchStrategy::Joint => {
-            search_joint(base, grids, dev, eval, &mut best, &mut visited, &mut rejected)
-        }
+        SearchStrategy::Joint => search_joint(
+            base,
+            grids,
+            dev,
+            eval,
+            &mut best,
+            &mut visited,
+            &mut rejected,
+            &mut ckpt,
+        ),
     }
 
     let pareto = pareto_frontier(&visited);
     let top = top_points(&visited, opts.top_k.max(1));
     if let Evaluator::Warm { cache, .. } = eval {
         // Persist this exploration's frontier (the next session's
-        // beam seeds) and the scored-point cache.
+        // beam seeds) and the scored-point cache.  A persistent flush
+        // failure degrades to cold with one warning; the in-memory
+        // results are unaffected.
         cache.set_frontier(&pareto);
-        if let Err(e) = cache.flush() {
-            eprintln!("warning: warm-cache flush failed: {e}");
-        }
+        cache.flush_or_degrade();
     }
     Exploration {
         best,
@@ -2012,6 +2083,7 @@ mod tests {
             strategy: SearchStrategy::Joint,
             top_k: 3,
             resume: false,
+            checkpoint_every: 0,
         };
         let evals = [
             EvaluatorBuilder::new().rank(16).pms(&profile),
@@ -2049,6 +2121,7 @@ mod tests {
             strategy: SearchStrategy::Joint,
             top_k: 5,
             resume: false,
+            checkpoint_every: 0,
         };
         let ev_event = EvaluatorBuilder::new()
             .engine(EngineKind::Event)
@@ -2092,6 +2165,7 @@ mod tests {
                 strategy: SearchStrategy::Beam { width: 1 },
                 top_k: 1,
                 resume: false,
+                checkpoint_every: 0,
             },
         );
         assert_eq!(ex_beam.best.cycles, ex_coord.best.cycles);
@@ -2121,7 +2195,7 @@ mod tests {
                 &grids,
                 &dev,
                 &eval,
-                &SearchOptions { strategy, top_k: 1, resume: false },
+                &SearchOptions { strategy, top_k: 1, resume: false, checkpoint_every: 0 },
             )
             .best
             .cycles
@@ -2152,6 +2226,7 @@ mod tests {
                 strategy: SearchStrategy::Joint,
                 top_k: 5,
                 resume: false,
+                checkpoint_every: 0,
             },
         );
         // Top-k: ascending cycles, distinct configs, winner first.
@@ -2293,6 +2368,7 @@ mod tests {
                 strategy: SearchStrategy::Joint,
                 top_k: 3,
                 resume: false,
+                checkpoint_every: 0,
             },
         );
         let visited_techs: Vec<MemTech> = [MemTech::Ddr4, MemTech::Hbm2, MemTech::Osram]

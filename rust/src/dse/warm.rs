@@ -31,7 +31,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::controller::ControllerConfig;
@@ -39,7 +39,8 @@ use crate::cpd::linalg::Mat;
 use crate::engine::EngineKind;
 use crate::fpga::Device;
 use crate::tensor::{Coord, SparseTensor};
-use crate::util::codec::{decode_config, encode_config, ByteReader, ByteWriter, Fnv1a};
+use crate::util::codec::{decode_config, encode_config, write_atomic, ByteReader, ByteWriter, Fnv1a};
+use crate::util::fault;
 
 use super::Point;
 
@@ -212,6 +213,10 @@ pub struct WarmCache {
     state: Mutex<State>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Set once an IO fault degraded the cache to cold (failed load or
+    /// persistent flush failure); the degradation warning prints
+    /// exactly once per run.
+    degraded: AtomicBool,
 }
 
 const MAGIC: &[u8; 8] = b"PTMCWARM";
@@ -220,20 +225,57 @@ const VERSION: u32 = 1;
 impl WarmCache {
     /// Open (or cold-start) the cache for `key` under `dir`. Never
     /// fails: a missing, truncated, corrupt, or mismatched file is
-    /// treated as an empty cache.
+    /// treated as an empty cache, and an IO fault degrades to cold
+    /// with a single warning.  Stale `.tmp` litter from a flush that
+    /// died mid-write is swept on the way in.
     pub fn open(dir: impl Into<PathBuf>, key: u64) -> WarmCache {
         let dir = dir.into();
-        let state = std::fs::read(Self::file_path(&dir, key))
-            .ok()
-            .and_then(|bytes| Self::parse(&bytes, key))
-            .unwrap_or_default();
+        Self::sweep_stale_tmp(&dir);
+        let mut degraded = false;
+        let state = match fault::retry_transient(3, || {
+            fault::check_io(fault::WARM_LOAD)?;
+            match std::fs::read(Self::file_path(&dir, key)) {
+                Ok(bytes) => Ok(Some(bytes)),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+                Err(e) => Err(e),
+            }
+        }) {
+            Ok(bytes) => bytes
+                .and_then(|b| Self::parse(&b, key))
+                .unwrap_or_default(),
+            Err(e) => {
+                eprintln!("warning: warm cache degraded to cold: load failed: {e}");
+                degraded = true;
+                State::default()
+            }
+        };
         WarmCache {
             dir,
             key,
             state: Mutex::new(state),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            degraded: AtomicBool::new(degraded),
         }
+    }
+
+    /// Remove `warm_*.tmp` files a crashed or fault-injected flush
+    /// left behind (the atomic temp+rename's litter — S31 satellite).
+    fn sweep_stale_tmp(dir: &Path) {
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for entry in rd.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                if name.starts_with("warm_") && name.ends_with(".tmp") {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+    }
+
+    /// True once an IO fault has degraded this cache to cold.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
     }
 
     fn file_path(dir: &Path, key: u64) -> PathBuf {
@@ -352,9 +394,35 @@ impl WarmCache {
     }
 
     /// Serialize the cache to its backing file (temp file + rename so
-    /// a crash never leaves a half-written cache behind).
+    /// a crash never leaves a half-written cache behind; the temp file
+    /// is removed on failure).  Transient IO faults are retried with
+    /// backoff before the error propagates.
     pub fn flush(&self) -> std::io::Result<()> {
-        let bytes = {
+        let bytes = self.serialize();
+        fault::retry_transient(3, || {
+            fault::check_io(fault::WARM_FLUSH)?;
+            std::fs::create_dir_all(&self.dir)?;
+            write_atomic(&self.path(), &bytes)
+        })
+    }
+
+    /// [`flush`](Self::flush), but a persistent failure degrades the
+    /// cache to cold — one warning per run, search continues — instead
+    /// of propagating.  Returns whether the flush landed.
+    pub fn flush_or_degrade(&self) -> bool {
+        match self.flush() {
+            Ok(()) => true,
+            Err(e) => {
+                if !self.degraded.swap(true, Ordering::Relaxed) {
+                    eprintln!("warning: warm cache degraded to cold: flush failed: {e}");
+                }
+                false
+            }
+        }
+    }
+
+    fn serialize(&self) -> Vec<u8> {
+        {
             let st = self.state.lock().unwrap();
             let mut w = ByteWriter::new();
             w.bytes(MAGIC);
@@ -390,12 +458,7 @@ impl WarmCache {
             let sum = crate::util::fnv1a(w.as_slice());
             w.u64(sum);
             w.into_bytes()
-        };
-        std::fs::create_dir_all(&self.dir)?;
-        let path = self.path();
-        let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, &bytes)?;
-        std::fs::rename(&tmp, &path)
+        }
     }
 
     fn parse(bytes: &[u8], key: u64) -> Option<State> {
@@ -574,6 +637,79 @@ mod tests {
         again.flush().unwrap();
         let second = std::fs::read(again.path()).unwrap();
         assert_eq!(first, second, "sorted serialization is reproducible");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_tmp_litter_is_swept_on_open() {
+        let dir = tmp_dir("tmpsweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let litter = dir.join("warm_00000000000000aa.tmp");
+        std::fs::write(&litter, b"half-written flush").unwrap();
+        let unrelated = dir.join("keep.txt");
+        std::fs::write(&unrelated, b"not ours").unwrap();
+        let _cache = WarmCache::open(&dir, 5);
+        assert!(!litter.exists(), "stale warm tmp must be swept");
+        assert!(unrelated.exists(), "unrelated files must survive");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failed_flush_leaves_no_tmp_and_degrades_once() {
+        let dir = tmp_dir("flushfault");
+        let cache = WarmCache::open(&dir, 13);
+        cache.record_score(&cfg_with_lines(256), Some(1.0));
+        // Non-transient kind: retries must not mask it.
+        let _g = fault::arm("warm.flush@1%1:notfound").unwrap();
+        assert!(!cache.flush_or_degrade());
+        assert!(cache.is_degraded());
+        assert!(!cache.flush_or_degrade(), "still failing, but silent now");
+        drop(_g);
+        let tmps: Vec<_> = std::fs::read_dir(&dir)
+            .map(|rd| {
+                rd.flatten()
+                    .filter(|e| e.path().extension().is_some_and(|x| x == "tmp"))
+                    .collect()
+            })
+            .unwrap_or_default();
+        assert!(tmps.is_empty(), "failed flush must not leak .tmp files");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn transient_flush_fault_is_retried_to_identical_bytes() {
+        let dir = tmp_dir("flushretry");
+        let cache = WarmCache::open(&dir, 21);
+        for lines in [256usize, 512, 1024] {
+            cache.record_score(&cfg_with_lines(lines), Some(lines as f64));
+        }
+        cache.flush().unwrap();
+        let oracle = std::fs::read(cache.path()).unwrap();
+        std::fs::remove_file(cache.path()).unwrap();
+        {
+            let _g = fault::arm("warm.flush@1:interrupted").unwrap();
+            cache.flush().unwrap();
+        }
+        assert!(!cache.is_degraded());
+        let retried = std::fs::read(cache.path()).unwrap();
+        assert_eq!(oracle, retried, "retried flush must be byte-identical");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_fault_degrades_to_cold_not_an_error() {
+        let dir = tmp_dir("loadfault");
+        let cache = WarmCache::open(&dir, 33);
+        cache.record_score(&cfg_with_lines(512), Some(2.0));
+        cache.flush().unwrap();
+        let degraded = {
+            let _g = fault::arm("warm.load@1%1:permissiondenied").unwrap();
+            WarmCache::open(&dir, 33)
+        };
+        assert!(degraded.is_empty(), "load fault must start cold");
+        assert!(degraded.is_degraded());
+        // Disarmed, the same file still loads.
+        assert_eq!(WarmCache::open(&dir, 33).len(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -8,12 +8,48 @@
 use std::error::Error as StdError;
 use std::fmt;
 
+/// Coarse failure taxonomy carried by [`Error`] so user-facing
+/// frontends (the `ptmc` binary) can map each failure to a distinct
+/// nonzero exit code and a one-line stderr message instead of
+/// panicking (S31).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// A bug or unclassified internal failure.
+    Internal,
+    /// Bad command line / configuration from the user.
+    Usage,
+    /// Malformed input data (tensor files, cache files).
+    Parse,
+    /// An IO failure that survived retry/degradation.
+    Io,
+    /// A memory-budget violation.
+    Budget,
+    /// A shard worker died (panic or persistent IO fault).
+    Worker,
+}
+
+impl ErrorClass {
+    /// The process exit code for this class (`Internal` keeps the
+    /// generic `1`; everything user-diagnosable gets its own code).
+    pub fn exit_code(self) -> u8 {
+        match self {
+            ErrorClass::Internal => 1,
+            ErrorClass::Usage => 2,
+            ErrorClass::Parse => 3,
+            ErrorClass::Io => 4,
+            ErrorClass::Budget => 5,
+            ErrorClass::Worker => 6,
+        }
+    }
+}
+
 /// A message-carrying error, optionally wrapping a source error.
 /// `Display` renders the full context chain (`outer: inner: ...`) so a
 /// bare `eprintln!("{e}")` tells the whole story.
 pub struct Error {
     msg: String,
     source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+    class: ErrorClass,
 }
 
 /// Crate-wide result alias (defaults the error type to [`Error`]).
@@ -25,6 +61,7 @@ impl Error {
         Error {
             msg: msg.to_string(),
             source: None,
+            class: ErrorClass::Internal,
         }
     }
 
@@ -36,7 +73,26 @@ impl Error {
         Error {
             msg: msg.to_string(),
             source: Some(Box::new(source)),
+            class: ErrorClass::Internal,
         }
+    }
+
+    /// Tag this error with a failure class (builder style).
+    pub fn classify(mut self, class: ErrorClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// The failure class (defaults to [`ErrorClass::Internal`]).
+    pub fn class(&self) -> ErrorClass {
+        self.class
+    }
+
+    /// A supervised shard worker died: `cause` is either the panic
+    /// payload rendered to text or a persistent IO error.  Replaces
+    /// the poisoned-join panic of the unsupervised executor.
+    pub fn worker_failed(shard: usize, cause: impl fmt::Display) -> Self {
+        Error::msg(format!("shard worker {shard} failed: {cause}")).classify(ErrorClass::Worker)
     }
 }
 
@@ -166,6 +222,34 @@ mod tests {
             Ok(())
         }
         assert_eq!(run().unwrap_err().to_string(), "boom");
+    }
+
+    #[test]
+    fn classes_carry_distinct_exit_codes() {
+        assert_eq!(err!("plain").class(), ErrorClass::Internal);
+        let e = err!("over budget").classify(ErrorClass::Budget);
+        assert_eq!(e.class(), ErrorClass::Budget);
+        assert_eq!(e.class().exit_code(), 5);
+        let w = Error::worker_failed(3, "injected panic");
+        assert_eq!(w.class(), ErrorClass::Worker);
+        assert!(w.to_string().contains("shard worker 3"), "{w}");
+        // Context-wrapping resets to Internal by design; the frontier
+        // that cares about class must classify last.
+        let codes: Vec<u8> = [
+            ErrorClass::Internal,
+            ErrorClass::Usage,
+            ErrorClass::Parse,
+            ErrorClass::Io,
+            ErrorClass::Budget,
+            ErrorClass::Worker,
+        ]
+        .iter()
+        .map(|c| c.exit_code())
+        .collect();
+        let mut uniq = codes.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), codes.len(), "exit codes must be distinct");
     }
 
     #[test]

@@ -55,6 +55,7 @@ const OPTS: &[&str] = &[
     "config", "rank", "iters", "tol", "backend", "device", "evaluator", "seg",
     "workers", "mode", "engine", // sharded execution + replay core
     "search", "top-k", "warm-cache", // DSE search strategy + report depth + score cache
+    "checkpoint-every", // periodic frontier/verdict flush for resumable explore
     "cache-lines", "cache-line-bytes", "cache-assoc", "dma-buffers", "dma-num",
     "dma-buffer-bytes", "max-pointers", "memory-tech", "channels", "dram-banks",
     "row-policy", "mem-techs", "artifacts", "memory-budget",
@@ -67,9 +68,34 @@ fn main() -> ExitCode {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("error: {e}");
-            ExitCode::FAILURE
+            ExitCode::from(exit_code_for(e.as_ref()))
         }
     }
+}
+
+/// One distinct nonzero exit code per failure class (S31), so scripts
+/// and the CI fault-smoke job can tell a usage mistake (2) from a
+/// corrupt input (3), an IO failure (4), a blown memory budget (5), or
+/// a dead shard worker (6) without scraping stderr.
+fn exit_code_for(e: &(dyn std::error::Error + 'static)) -> u8 {
+    use ptmc::error::ErrorClass;
+    use ptmc::tensor::frostt::TnsError;
+    if let Some(err) = e.downcast_ref::<ptmc::error::Error>() {
+        return err.class().exit_code();
+    }
+    if e.downcast_ref::<CliError>().is_some() {
+        return ErrorClass::Usage.exit_code();
+    }
+    if let Some(t) = e.downcast_ref::<TnsError>() {
+        return match t {
+            TnsError::Io(_) => ErrorClass::Io.exit_code(),
+            TnsError::Parse(..) | TnsError::Empty => ErrorClass::Parse.exit_code(),
+        };
+    }
+    if e.downcast_ref::<std::io::Error>().is_some() {
+        return ErrorClass::Io.exit_code();
+    }
+    ErrorClass::Internal.exit_code()
 }
 
 fn usage() {
@@ -109,6 +135,10 @@ fn usage() {
          \x20          context; repeat/adjacent explores re-score only\n\
          \x20          unseen candidates and beam searches resume from\n\
          \x20          the stored frontier ([dse] warm_cache)\n\
+         \x20          --checkpoint-every N (with --warm-cache): flush the\n\
+         \x20          frontier + scored verdicts every N visited points,\n\
+         \x20          so a killed explore resumes from its last checkpoint\n\
+         \x20          ([dse] checkpoint_every; 0 disables)\n\
          sim core:  --engine lockstep|event|grid (bit-identical; default\n\
          \x20          event on explore for sweep throughput, lockstep on\n\
          \x20          simulate; grid scores whole cache-module grids in\n\
@@ -123,6 +153,11 @@ fn usage() {
 }
 
 fn run(raw: &[String]) -> Result<(), Box<dyn std::error::Error>> {
+    // Arm any requested fault plan eagerly so a malformed
+    // PTMC_FAULT_PLAN fails the run instead of silently executing
+    // fault-free (lazy library arming would only warn).
+    ptmc::util::fault::init_env()
+        .map_err(|e| CliError(format!("invalid PTMC_FAULT_PLAN: {e}")))?;
     let args = Args::parse(raw, OPTS, FLAGS)?;
     if args.flag("help") || args.subcommand.is_none() {
         usage();
@@ -273,11 +308,14 @@ fn enforce_budget(budget: Option<u64>) -> Result<(), Box<dyn std::error::Error>>
             ptmc::util::format_size(b)
         ),
         Some(b) => {
-            return Err(Box::new(CliError(format!(
-                "peak RSS {} exceeded --memory-budget {}",
-                ptmc::util::format_size(peak),
-                ptmc::util::format_size(b)
-            ))))
+            return Err(Box::new(
+                ptmc::error::Error::msg(format!(
+                    "peak RSS {} exceeded --memory-budget {}",
+                    ptmc::util::format_size(peak),
+                    ptmc::util::format_size(b)
+                ))
+                .classify(ptmc::error::ErrorClass::Budget),
+            ))
         }
     }
     Ok(())
@@ -309,7 +347,20 @@ fn cmd_decompose(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             let workers = args.usize_or("workers", 4)?.max(1);
             let cfg = controller_config(args, t.record_bytes())?;
             let mut b = ParallelBackend::with_controller(workers, cfg);
-            let model = cp_als(&mut t, &als, &mut b);
+            // The backend trait is infallible, so a supervised worker
+            // failure leaves the ALS loop as a panic with the typed
+            // error stashed in the backend; recover it here so the CLI
+            // reports one line and the Worker exit code, not a
+            // backtrace.
+            let model = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                cp_als(&mut t, &als, &mut b)
+            })) {
+                Ok(model) => model,
+                Err(payload) => match b.take_failure() {
+                    Some(e) => return Err(Box::new(e)),
+                    None => std::panic::resume_unwind(payload),
+                },
+            };
             let s = b.stats();
             println!(
                 "parallel: {} workers, {} controller instances, cache {:.1}% hits, \
@@ -526,10 +577,21 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
                 .and_then(|v| v.as_str())
                 .map(|s| s.to_string())
         });
+    let checkpoint_default = file_cfg
+        .as_ref()
+        .map_or(0, |c| c.usize_or("dse", "checkpoint_every", 0));
+    let checkpoint_every = args.usize_or("checkpoint-every", checkpoint_default)?;
+    if checkpoint_every > 0 && warm_dir.is_none() {
+        eprintln!(
+            "warning: --checkpoint-every {checkpoint_every} has no effect without --warm-cache \
+             (checkpoints persist through the warm cache)"
+        );
+    }
     let opts = SearchOptions {
         strategy,
         top_k,
         resume: warm_dir.is_some(),
+        checkpoint_every,
     };
     // `--evaluator grid` is shorthand for the cycle evaluator pinned to
     // the grid batch core; a conflicting explicit --engine would
@@ -545,6 +607,20 @@ fn cmd_explore(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
     }
     let base = controller_config_with(args, t.record_bytes(), file_cfg.as_ref())?;
     let dev = device(args)?;
+    // An infeasible base configuration would panic deep inside the
+    // search ("base configuration must fit the device"); reject it up
+    // front as a usage error with the resource numbers.
+    let base_est = ptmc::fpga::estimate(&base, &dev);
+    if !base_est.fits || !dev.supports(&base.mem) {
+        return Err(Box::new(CliError(format!(
+            "base configuration does not fit {} ({} BRAM36 + {} URAM, or unsupported memory \
+             tech {}); shrink --cache-lines/--max-pointers or pick a larger --device",
+            dev.name,
+            base_est.bram36_used,
+            base_est.uram_used,
+            base.mem.tech()
+        ))));
+    }
     let profile = TensorProfile::measure(&t);
     let factors: Vec<Mat> = t
         .dims()

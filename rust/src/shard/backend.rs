@@ -4,7 +4,7 @@
 
 use std::collections::HashMap;
 
-use super::exec::mttkrp_planned;
+use super::exec::try_mttkrp_planned_with_engine;
 use super::{partition_indices, AggregateStats, ShardPlan};
 use crate::controller::{ControllerConfig, MemLayout, MemoryController};
 use crate::coordinator::Metrics;
@@ -42,6 +42,12 @@ pub struct ParallelBackend {
     sim_cache: HashMap<usize, SimMemo>,
     /// (dims, nnz, sort order, rank) the caches were computed for.
     fingerprint: Option<(Vec<usize>, usize, SortOrder, usize)>,
+    /// The typed worker failure stashed just before `mttkrp` unwinds
+    /// (the [`MttkrpBackend`] trait is infallible, so supervision
+    /// errors leave the ALS loop as a panic).  Callers that
+    /// `catch_unwind` the loop recover it via [`Self::take_failure`]
+    /// instead of scraping the panic payload.
+    failure: Option<crate::error::Error>,
 }
 
 /// Memoized per-mode simulation result: parallel makespan plus remap
@@ -68,6 +74,7 @@ impl ParallelBackend {
             plan_cache: HashMap::new(),
             sim_cache: HashMap::new(),
             fingerprint: None,
+            failure: None,
         }
     }
 
@@ -97,6 +104,12 @@ impl ParallelBackend {
     /// The shard plan of the most recent MTTKRP call.
     pub fn last_plan(&self) -> Option<&ShardPlan> {
         self.last_plan.as_ref()
+    }
+
+    /// Take the typed worker failure that made the last `mttkrp` call
+    /// unwind, if any (see the `failure` field).
+    pub fn take_failure(&mut self) -> Option<crate::error::Error> {
+        self.failure.take()
     }
 }
 
@@ -139,7 +152,21 @@ impl MttkrpBackend for ParallelBackend {
         } else {
             None
         };
-        let run = mttkrp_planned(t, factors, plan, parts, sim);
+        let run = match try_mttkrp_planned_with_engine(
+            t,
+            factors,
+            plan,
+            parts,
+            sim,
+            crate::engine::EngineKind::Lockstep,
+        ) {
+            Ok(run) => run,
+            Err(e) => {
+                let msg = e.to_string();
+                self.failure = Some(e);
+                panic!("{msg}");
+            }
+        };
         self.metrics.merge(&run.metrics);
         self.last_plan = Some(run.plan);
 

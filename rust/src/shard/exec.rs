@@ -12,6 +12,7 @@
 //! simulated time of a mode is the *slowest* worker's makespan while
 //! statistics are the *sum* over workers ([`AggregateStats`]).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 use super::{partition_indices, AggregateStats, ShardPlan, ShardSpec};
@@ -21,9 +22,10 @@ use crate::cpd::linalg::Mat;
 use crate::engine::{
     EngineKind, GridClassification, JointIndex, PreparedTrace, TimingCandidate, TimingOps,
 };
+use crate::error::Error;
 use crate::mttkrp::{oracle, STREAM_CHUNK_ELEMS};
 use crate::tensor::{Coord, SparseTensor};
-use crate::util::{parallel_indexed, RemapMemo};
+use crate::util::{fault, parallel_indexed, RemapMemo};
 
 /// Result of one sharded MTTKRP mode execution.
 #[derive(Debug)]
@@ -156,6 +158,42 @@ struct SimSpec<'a> {
     engine: EngineKind,
 }
 
+/// Render a `catch_unwind` payload to text (panic messages are almost
+/// always `&str` or `String`).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked with a non-string payload".to_string()
+    }
+}
+
+/// Supervise one shard worker body (S31): catch panics instead of
+/// poisoning the join, retry transient IO faults with exponential
+/// backoff, and convert any terminal failure into a clean
+/// [`Error::worker_failed`] naming the shard.
+fn supervised<T>(shard: usize, body: impl Fn() -> T) -> crate::error::Result<T> {
+    const ATTEMPTS: u32 = 3;
+    let mut delay = Duration::from_millis(1);
+    for attempt in 0..ATTEMPTS {
+        match catch_unwind(AssertUnwindSafe(|| -> std::io::Result<T> {
+            fault::check_io(fault::SHARD_WORKER)?;
+            Ok(body())
+        })) {
+            Ok(Ok(v)) => return Ok(v),
+            Ok(Err(e)) if fault::is_transient(e.kind()) && attempt + 1 < ATTEMPTS => {
+                std::thread::sleep(delay);
+                delay *= 2;
+            }
+            Ok(Err(e)) => return Err(Error::worker_failed(shard, e)),
+            Err(payload) => return Err(Error::worker_failed(shard, panic_text(&*payload))),
+        }
+    }
+    unreachable!("the final attempt always returns")
+}
+
 /// The full worker body: compute, then (optionally) compile and replay
 /// the shard's trace on a fresh controller.
 fn worker(
@@ -230,10 +268,25 @@ pub fn mttkrp_sharded_with_engine(
     sim: Option<(&ControllerConfig, &MemLayout)>,
     engine: EngineKind,
 ) -> ShardedRun {
+    try_mttkrp_sharded_with_engine(t, factors, mode, k, sim, engine)
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible [`mttkrp_sharded_with_engine`]: a worker panic or a
+/// persistent IO fault surfaces as [`Error::worker_failed`] instead of
+/// a poisoned join.
+pub fn try_mttkrp_sharded_with_engine(
+    t: &SparseTensor,
+    factors: &[Mat],
+    mode: usize,
+    k: usize,
+    sim: Option<(&ControllerConfig, &MemLayout)>,
+    engine: EngineKind,
+) -> crate::error::Result<ShardedRun> {
     assert!(k >= 1, "need at least one worker");
     let plan = ShardPlan::balance(t, mode, k);
     let parts = partition_indices(t, &plan);
-    mttkrp_planned_with_engine(t, factors, &plan, &parts, sim, engine)
+    try_mttkrp_planned_with_engine(t, factors, &plan, &parts, sim, engine)
 }
 
 /// Like [`mttkrp_sharded`] with a precomputed plan and partition —
@@ -261,6 +314,23 @@ pub fn mttkrp_planned_with_engine(
     sim: Option<(&ControllerConfig, &MemLayout)>,
     engine: EngineKind,
 ) -> ShardedRun {
+    try_mttkrp_planned_with_engine(t, factors, plan, parts, sim, engine)
+        .unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible [`mttkrp_planned_with_engine`]: every shard worker runs
+/// under [`supervised`] — panics are caught, transient IO faults are
+/// retried with backoff, and the first failed shard aborts the mode
+/// with a typed [`Error::worker_failed`] (the merge never sees partial
+/// results).
+pub fn try_mttkrp_planned_with_engine(
+    t: &SparseTensor,
+    factors: &[Mat],
+    plan: &ShardPlan,
+    parts: &[Vec<usize>],
+    sim: Option<(&ControllerConfig, &MemLayout)>,
+    engine: EngineKind,
+) -> crate::error::Result<ShardedRun> {
     debug_assert_eq!(parts.len(), plan.k(), "partition/plan mismatch");
     let mode = plan.mode;
     let r = factors[0].cols();
@@ -289,16 +359,19 @@ pub fn mttkrp_planned_with_engine(
         _ => None,
     };
 
-    let results: Vec<(Mat, Metrics, Option<MemoryController>)> =
+    let results: Vec<crate::error::Result<(Mat, Metrics, Option<MemoryController>)>> =
         parallel_indexed(plan.shards.len(), |i| {
-            worker(t, factors, mode, &plan.shards[i], &parts[i], offsets[i], sim_w)
+            supervised(i, || {
+                worker(t, factors, mode, &plan.shards[i], &parts[i], offsets[i], sim_w)
+            })
         });
 
     let mut output = Mat::zeros(t.dims()[mode], r);
     let mut metrics = Metrics::default();
     let mut stats = AggregateStats::default();
     let mut makespan = 0u64;
-    for (spec, (local, m, ctl)) in plan.shards.iter().zip(results) {
+    for (spec, res) in plan.shards.iter().zip(results) {
+        let (local, m, ctl) = res?;
         for (off, c) in (spec.coord_lo..spec.coord_hi).enumerate() {
             output.row_mut(c as usize).copy_from_slice(local.row(off));
         }
@@ -309,13 +382,13 @@ pub fn mttkrp_planned_with_engine(
         }
     }
 
-    ShardedRun {
+    Ok(ShardedRun {
         output,
         plan: plan.clone(),
         makespan,
         stats,
         metrics,
-    }
+    })
 }
 
 /// Precomputed, configuration-independent inputs of a sharded DSE

@@ -30,7 +30,8 @@ pub mod exec;
 pub use backend::ParallelBackend;
 pub use exec::{
     mttkrp_planned, mttkrp_planned_with_engine, mttkrp_sharded, mttkrp_sharded_with_engine,
-    shard_trace, sweep_makespan, ShardedRun, ShardedSweep,
+    shard_trace, sweep_makespan, try_mttkrp_planned_with_engine, try_mttkrp_sharded_with_engine,
+    ShardedRun, ShardedSweep,
 };
 
 use crate::controller::{CacheStats, ControllerStats, DmaStats, MemoryController, RemapperStats};

@@ -9,6 +9,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::path::Path;
 
 use super::{Coord, SparseTensor};
+use crate::util::fault;
 
 /// Errors from `.tns` parsing.
 #[derive(Debug)]
@@ -176,6 +177,10 @@ impl<R: BufRead> TnsBlockReader<R> {
         if self.eof {
             return Ok(None);
         }
+        // Failpoint: one check per block keeps the per-line hot loop
+        // untouched while still letting fault plans hit streamed
+        // ingestion at any block boundary.
+        fault::check_io(fault::FROSTT_READ_BLOCK)?;
         // Cap pre-allocation: callers may pass a huge block_nnz to mean
         // "one block"; grow on demand instead of reserving it all.
         let reserve = self.block_nnz.min(DEFAULT_BLOCK_NNZ);

@@ -163,6 +163,19 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h.finish()
 }
 
+/// Atomically replace `path` with `bytes` via a sibling `.tmp` file and
+/// a rename.  Readers never observe a partial file; on *any* error the
+/// temp file is removed, so failed flushes cannot leak `.tmp` litter
+/// (S31 — the leak fixed in PR 9).
+pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = path.with_extension("tmp");
+    let res = std::fs::write(&tmp, bytes).and_then(|()| std::fs::rename(&tmp, path));
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    res
+}
+
 fn row_policy_tag(p: RowPolicy) -> u8 {
     match p {
         RowPolicy::Open => 0,

@@ -1,0 +1,472 @@
+//! Deterministic fault injection (S31): a zero-dependency registry of
+//! named failpoint *sites* threaded through every disk-touching and
+//! worker-spawning surface of the pipeline (`SpillCol`, the warm DSE
+//! cache, streamed FROSTT ingestion, bench upserts, shard workers).
+//!
+//! A *plan* arms a set of sites with deterministic schedules: fail on
+//! the Nth hit of a site (optionally repeating every `k` hits after)
+//! with a chosen [`std::io::ErrorKind`], or inject a panic.  Plans come
+//! from the `PTMC_FAULT_PLAN` environment variable (read once, lazily)
+//! or from the test-only [`arm`] API, which also serializes armed test
+//! sections behind a process-wide lock so concurrent `cargo test`
+//! threads cannot observe each other's faults.
+//!
+//! Plan grammar (semicolon-separated entries):
+//!
+//! ```text
+//! plan   := entry (';' entry)*
+//! entry  := site '@' nth ['%' every] [':' effect]
+//! effect := 'panic' | io-kind name (default: 'other')
+//! ```
+//!
+//! `spill.write@1` fails the first spill write with `ErrorKind::Other`;
+//! `warm.flush@2%1:interrupted` fails every flush from the second on
+//! with `Interrupted`; `shard.worker@3:panic` panics the third worker.
+//!
+//! When no plan is armed, [`check_io`] compiles down to a single
+//! relaxed atomic load — the disarmed overhead is benchmarked in
+//! `benches/classify_kernel.rs` (`fault_overhead` section, ≤1% of a
+//! guarded block parse).
+
+use std::io;
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// `SpillCol` writing a spilled column to disk.
+pub const SPILL_WRITE: &str = "spill.write";
+/// `SpillCol` reading a spilled column back.
+pub const SPILL_READ: &str = "spill.read";
+/// `WarmCache` flushing its verdict map + frontier to disk.
+pub const WARM_FLUSH: &str = "warm.flush";
+/// `WarmCache` loading a cache file on open.
+pub const WARM_LOAD: &str = "warm.load";
+/// `TnsBlockReader` pulling the next block from a FROSTT stream.
+pub const FROSTT_READ_BLOCK: &str = "frostt.read_block";
+/// Bench binaries upserting a section into `BENCH_dse.json`.
+pub const BENCH_UPSERT: &str = "bench.upsert";
+/// A shard worker body (supervised by `shard::exec`).
+pub const SHARD_WORKER: &str = "shard.worker";
+
+/// Every registered failpoint site, in declaration order.
+pub const SITES: &[&str] = &[
+    SPILL_WRITE,
+    SPILL_READ,
+    WARM_FLUSH,
+    WARM_LOAD,
+    FROSTT_READ_BLOCK,
+    BENCH_UPSERT,
+    SHARD_WORKER,
+];
+
+const UNINIT: u32 = 0;
+const DISARMED: u32 = 1;
+const ARMED: u32 = 2;
+
+/// Tri-state so the post-initialization disarmed path is exactly one
+/// relaxed load (`UNINIT` routes through the lazy env parse once).
+static STATE: AtomicU32 = AtomicU32::new(UNINIT);
+static PLAN: Mutex<Option<Plan>> = Mutex::new(None);
+static INJECTED: AtomicU64 = AtomicU64::new(0);
+/// Serializes armed test sections: held by [`FaultGuard`] for its
+/// lifetime so two tests arming plans cannot interleave.
+static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// What an armed rule does when its schedule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Effect {
+    /// Return `io::Error::new(kind, ...)` from [`check_io`].
+    Io(io::ErrorKind),
+    /// Panic at the failpoint (exercises `catch_unwind` supervision).
+    Panic,
+}
+
+#[derive(Debug, Clone)]
+struct Rule {
+    site: usize,
+    nth: u64,
+    /// 0 = fire once on hit `nth`; k>0 = fire on `nth` and every `k`
+    /// hits thereafter.
+    every: u64,
+    effect: Effect,
+}
+
+impl Rule {
+    fn fires(&self, hit: u64) -> bool {
+        if hit < self.nth {
+            return false;
+        }
+        if hit == self.nth {
+            return true;
+        }
+        self.every > 0 && (hit - self.nth) % self.every == 0
+    }
+}
+
+#[derive(Debug)]
+struct Plan {
+    rules: Vec<Rule>,
+    hits: [u64; SITES.len()],
+}
+
+impl Plan {
+    fn new(rules: Vec<Rule>) -> Self {
+        Plan {
+            rules,
+            hits: [0; SITES.len()],
+        }
+    }
+}
+
+fn site_index(site: &str) -> Option<usize> {
+    SITES.iter().position(|s| *s == site)
+}
+
+fn lock_plan() -> MutexGuard<'static, Option<Plan>> {
+    // A panic effect can unwind through a caller that still holds
+    // state elsewhere; never let lock poisoning cascade.
+    PLAN.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn kind_from_name(name: &str) -> Option<io::ErrorKind> {
+    Some(match name {
+        "notfound" => io::ErrorKind::NotFound,
+        "permissiondenied" => io::ErrorKind::PermissionDenied,
+        "brokenpipe" => io::ErrorKind::BrokenPipe,
+        "alreadyexists" => io::ErrorKind::AlreadyExists,
+        "wouldblock" => io::ErrorKind::WouldBlock,
+        "invaliddata" => io::ErrorKind::InvalidData,
+        "timedout" => io::ErrorKind::TimedOut,
+        "writezero" => io::ErrorKind::WriteZero,
+        "interrupted" => io::ErrorKind::Interrupted,
+        "unexpectedeof" => io::ErrorKind::UnexpectedEof,
+        "outofmemory" => io::ErrorKind::OutOfMemory,
+        "other" => io::ErrorKind::Other,
+        _ => return None,
+    })
+}
+
+fn parse_entry(entry: &str) -> Result<Rule, String> {
+    let entry = entry.trim();
+    let (head, effect) = match entry.split_once(':') {
+        Some((h, e)) => (h, e.trim()),
+        None => (entry, "other"),
+    };
+    let (site, sched) = head
+        .split_once('@')
+        .ok_or_else(|| format!("entry `{entry}` missing `@nth`"))?;
+    let site = site.trim();
+    let idx = site_index(site).ok_or_else(|| {
+        format!(
+            "unknown failpoint site `{site}` (known: {})",
+            SITES.join(", ")
+        )
+    })?;
+    let (nth_s, every_s) = match sched.split_once('%') {
+        Some((n, e)) => (n.trim(), Some(e.trim())),
+        None => (sched.trim(), None),
+    };
+    let nth: u64 = nth_s
+        .parse()
+        .map_err(|_| format!("entry `{entry}`: bad hit count `{nth_s}`"))?;
+    if nth == 0 {
+        return Err(format!("entry `{entry}`: hit counts are 1-based"));
+    }
+    let every: u64 = match every_s {
+        Some(e) => e
+            .parse()
+            .map_err(|_| format!("entry `{entry}`: bad repeat period `{e}`"))?,
+        None => 0,
+    };
+    let effect = if effect.eq_ignore_ascii_case("panic") {
+        Effect::Panic
+    } else {
+        Effect::Io(kind_from_name(&effect.to_ascii_lowercase()).ok_or_else(|| {
+            format!("entry `{entry}`: unknown effect `{effect}` (io kind name or `panic`)")
+        })?)
+    };
+    Ok(Rule {
+        site: idx,
+        nth,
+        every,
+        effect,
+    })
+}
+
+fn parse_plan(plan: &str) -> Result<Vec<Rule>, String> {
+    let mut rules = Vec::new();
+    for entry in plan.split(';') {
+        if entry.trim().is_empty() {
+            continue;
+        }
+        rules.push(parse_entry(entry)?);
+    }
+    if rules.is_empty() {
+        return Err("empty fault plan".into());
+    }
+    Ok(rules)
+}
+
+/// Parse and install the `PTMC_FAULT_PLAN` environment plan, if any.
+/// `Ok(true)` = a plan was armed; `Ok(false)` = no plan requested.
+fn apply_env_plan() -> Result<bool, String> {
+    match std::env::var("PTMC_FAULT_PLAN") {
+        Ok(s) if !s.trim().is_empty() => {
+            let rules = parse_plan(&s)?;
+            *lock_plan() = Some(Plan::new(rules));
+            eprintln!("fault: armed plan from PTMC_FAULT_PLAN: {}", s.trim());
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// Lazy one-shot environment arming for library users that never call
+/// [`init_env`].  Races between threads are benign: every contender
+/// parses the same string and stores the same terminal state.  A
+/// malformed plan is warned about and ignored here — binaries that
+/// want it fatal call [`init_env`] eagerly at startup.
+fn init_from_env() {
+    let state = match apply_env_plan() {
+        Ok(true) => ARMED,
+        Ok(false) => DISARMED,
+        Err(e) => {
+            eprintln!("warning: ignoring invalid PTMC_FAULT_PLAN: {e}");
+            DISARMED
+        }
+    };
+    STATE.store(state, Ordering::Relaxed);
+}
+
+/// Eager environment arming for binaries: parse `PTMC_FAULT_PLAN` at
+/// startup (instead of on the first failpoint crossing) and surface a
+/// malformed plan as an error, so a typo'd plan fails the run loudly
+/// rather than silently executing fault-free.
+pub fn init_env() -> Result<(), String> {
+    match apply_env_plan() {
+        Ok(true) => {
+            STATE.store(ARMED, Ordering::Relaxed);
+            Ok(())
+        }
+        Ok(false) => {
+            STATE.store(DISARMED, Ordering::Relaxed);
+            Ok(())
+        }
+        Err(e) => {
+            STATE.store(DISARMED, Ordering::Relaxed);
+            Err(e)
+        }
+    }
+}
+
+/// RAII handle returned by [`arm`]: keeps the plan armed (and other
+/// armed tests excluded) until dropped, then disarms.
+pub struct FaultGuard {
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        STATE.store(DISARMED, Ordering::Relaxed);
+        *lock_plan() = None;
+    }
+}
+
+/// Test-only arming API: parse `plan` and arm it until the returned
+/// guard drops.  Serializes with every other armed section in the
+/// process.  Resets the injected-fault counter.
+pub fn arm(plan: &str) -> Result<FaultGuard, String> {
+    let lock = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let rules = parse_plan(plan)?;
+    *lock_plan() = Some(Plan::new(rules));
+    INJECTED.store(0, Ordering::Relaxed);
+    STATE.store(ARMED, Ordering::Relaxed);
+    Ok(FaultGuard { _lock: lock })
+}
+
+/// How many faults (errors or panics) have been injected since the
+/// last [`arm`] / process start.
+pub fn injected_count() -> u64 {
+    INJECTED.load(Ordering::Relaxed)
+}
+
+/// Hits recorded at `site` by the currently armed plan (0 when no
+/// plan is armed).  Lets tests probe how many times a path crosses a
+/// failpoint — e.g. to size a kill schedule to the real number of
+/// checkpoint flushes — by arming a never-firing rule for the site.
+pub fn hit_count(site: &str) -> u64 {
+    match site_index(site) {
+        Some(i) => lock_plan().as_ref().map_or(0, |p| p.hits[i]),
+        None => 0,
+    }
+}
+
+/// The failpoint check.  Disarmed: one relaxed atomic load, `Ok(())`.
+/// Armed: bump the site's hit counter and, if a rule's schedule fires,
+/// return the injected [`io::Error`] or panic.
+#[inline]
+pub fn check_io(site: &str) -> io::Result<()> {
+    let st = STATE.load(Ordering::Relaxed);
+    if st == DISARMED {
+        return Ok(());
+    }
+    if st == UNINIT {
+        init_from_env();
+        if STATE.load(Ordering::Relaxed) != ARMED {
+            return Ok(());
+        }
+    }
+    check_armed(site)
+}
+
+#[cold]
+fn check_armed(site: &str) -> io::Result<()> {
+    let idx = match site_index(site) {
+        Some(i) => i,
+        None => return Ok(()),
+    };
+    // Decide under the lock, act after releasing it: a panic effect
+    // must not unwind while holding the plan mutex.
+    let fired: Option<(Effect, u64)> = {
+        let mut guard = lock_plan();
+        match guard.as_mut() {
+            Some(plan) => {
+                plan.hits[idx] += 1;
+                let hit = plan.hits[idx];
+                plan.rules
+                    .iter()
+                    .find(|r| r.site == idx && r.fires(hit))
+                    .map(|r| (r.effect, hit))
+            }
+            None => None,
+        }
+    };
+    match fired {
+        None => Ok(()),
+        Some((Effect::Panic, hit)) => {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+            panic!("injected panic at failpoint {site} (hit {hit})");
+        }
+        Some((Effect::Io(kind), hit)) => {
+            INJECTED.fetch_add(1, Ordering::Relaxed);
+            Err(io::Error::new(
+                kind,
+                format!("injected {kind:?} at failpoint {site} (hit {hit})"),
+            ))
+        }
+    }
+}
+
+/// Transient IO kinds worth retrying: the OS told us to try again, not
+/// that the operation is doomed.
+pub fn is_transient(kind: io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// Run `op` up to `attempts` times, sleeping `1ms << i` between
+/// attempts, retrying only transient kinds ([`is_transient`]).
+/// Non-transient errors propagate immediately.
+pub fn retry_transient<T>(attempts: u32, mut op: impl FnMut() -> io::Result<T>) -> io::Result<T> {
+    let attempts = attempts.max(1);
+    let mut last = None;
+    for i in 0..attempts {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if is_transient(e.kind()) => {
+                last = Some(e);
+                if i + 1 < attempts {
+                    std::thread::sleep(std::time::Duration::from_millis(1u64 << i.min(6)));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last.expect("retry_transient: at least one attempt ran"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_check_is_ok() {
+        // No guard held: either UNINIT (env empty in tests) or
+        // DISARMED after a previous guard dropped.
+        assert!(check_io(SPILL_WRITE).is_ok());
+    }
+
+    #[test]
+    fn plan_parses_and_fires_on_schedule() {
+        let _g = arm("spill.write@2%3:timedout").unwrap();
+        assert!(check_io(SPILL_WRITE).is_ok()); // hit 1
+        let e = check_io(SPILL_WRITE).unwrap_err(); // hit 2: nth
+        assert_eq!(e.kind(), io::ErrorKind::TimedOut);
+        assert!(check_io(SPILL_WRITE).is_ok()); // hit 3
+        assert!(check_io(SPILL_WRITE).is_ok()); // hit 4
+        assert!(check_io(SPILL_WRITE).is_err()); // hit 5: nth + every
+        assert!(check_io(SPILL_READ).is_ok()); // other site untouched
+        assert_eq!(injected_count(), 2);
+        assert_eq!(hit_count(SPILL_WRITE), 5);
+        assert_eq!(hit_count(SPILL_READ), 1);
+    }
+
+    #[test]
+    fn guard_drop_disarms() {
+        {
+            let _g = arm("warm.flush@1").unwrap();
+            assert!(check_io(WARM_FLUSH).is_err());
+        }
+        assert!(check_io(WARM_FLUSH).is_ok());
+    }
+
+    #[test]
+    fn bad_plans_are_rejected() {
+        assert!(arm("").is_err());
+        assert!(arm("nosuch.site@1").is_err());
+        assert!(arm("spill.write@0").is_err());
+        assert!(arm("spill.write@x").is_err());
+        assert!(arm("spill.write@1:frobnicate").is_err());
+        assert!(arm("spill.write").is_err());
+    }
+
+    #[test]
+    fn panic_effect_panics_at_site() {
+        let _g = arm("shard.worker@1:panic").unwrap();
+        let r = std::panic::catch_unwind(|| check_io(SHARD_WORKER));
+        assert!(r.is_err());
+        assert_eq!(injected_count(), 1);
+    }
+
+    #[test]
+    fn retry_transient_recovers_and_gives_up() {
+        let mut left = 2;
+        let v = retry_transient(3, || {
+            if left > 0 {
+                left -= 1;
+                Err(io::Error::new(io::ErrorKind::Interrupted, "again"))
+            } else {
+                Ok(42)
+            }
+        })
+        .unwrap();
+        assert_eq!(v, 42);
+
+        let e = retry_transient(2, || -> io::Result<()> {
+            Err(io::Error::new(io::ErrorKind::TimedOut, "still"))
+        })
+        .unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::TimedOut);
+
+        // Non-transient kinds do not burn retries.
+        let mut calls = 0;
+        let e = retry_transient(5, || -> io::Result<()> {
+            calls += 1;
+            Err(io::Error::new(io::ErrorKind::NotFound, "gone"))
+        })
+        .unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::NotFound);
+        assert_eq!(calls, 1);
+    }
+}

@@ -1,15 +1,21 @@
 //! Small shared utilities (S22): the scoped-thread fan-out helper used
 //! by every batch-parallel path in the crate, the shared remap-pass
-//! cycle memo the DSE evaluators key per (mode, DRAM, remapper), and
-//! the memory-budget plumbing (size parsing, peak-RSS observation,
-//! spill-to-disk coordinate columns) behind `--memory-budget` (S24).
+//! cycle memo the DSE evaluators key per (mode, DRAM, remapper), the
+//! memory-budget plumbing (size parsing, peak-RSS observation,
+//! spill-to-disk coordinate columns) behind `--memory-budget` (S24),
+//! and the deterministic fault-injection registry (S31) guarding every
+//! disk-touching surface.
 
 pub mod budget;
 pub mod codec;
+pub mod fault;
 pub mod par;
 pub mod remap_memo;
 
 pub use budget::{format_size, parse_size, peak_rss_bytes};
-pub use codec::{decode_config, encode_config, fnv1a, ByteReader, ByteWriter, Fnv1a};
+pub use codec::{
+    decode_config, encode_config, fnv1a, write_atomic, ByteReader, ByteWriter, Fnv1a,
+};
+pub use fault::{retry_transient, FaultGuard};
 pub use par::parallel_indexed;
 pub use remap_memo::{RemapKey, RemapMemo, SpillCol};

@@ -16,6 +16,21 @@ fn run(args: &[&str]) -> (bool, String) {
     (out.status.success(), text)
 }
 
+/// Like `run`, but also surfaces the raw exit code so tests can pin
+/// the per-error-class contract (see `ptmc::error::ErrorClass`).
+fn run_code(args: &[&str]) -> (Option<i32>, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_ptmc"))
+        .args(args)
+        .output()
+        .expect("spawn ptmc");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.code(), text)
+}
+
 const SMALL: &[&str] = &["--synth", "zipf", "--dims", "200x150x100", "--nnz", "5000"];
 
 #[test]
@@ -572,4 +587,169 @@ fn decompose_pjrt_when_artifacts_exist() {
     assert!(ok, "{text}");
     assert!(text.contains("coordinator:"), "{text}");
     assert!(text.contains("final fit:"), "{text}");
+}
+
+// ---- PR 9: per-error-class exit codes -----------------------------------
+//
+// Each failure class carries a distinct nonzero exit code so scripts
+// and CI can branch on *why* a run failed: 2 usage, 3 parse, 4 I/O,
+// 5 budget, 6 worker (1 stays the catch-all).
+
+#[test]
+fn usage_errors_exit_with_code_2() {
+    let (code, text) = run_code(&["stats", "--bogus", "1"]);
+    assert_eq!(code, Some(2), "{text}");
+    let (code, text) = run_code(&["frobnicate"]);
+    assert_eq!(code, Some(2), "{text}");
+    let (code, text) = run_code(&[&["explore"], SMALL, &["--search", "bogus"]].concat());
+    assert_eq!(code, Some(2), "{text}");
+}
+
+#[test]
+fn parse_errors_exit_with_code_3_and_name_the_line() {
+    let dir = std::env::temp_dir().join("ptmc_cli_exit_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let tns = dir.join("garbage.tns");
+    std::fs::write(&tns, "1 1 1 1.0\n2 x 2 2.0\n").unwrap();
+    let (code, text) = run_code(&["stats", "--input", tns.to_str().unwrap()]);
+    assert_eq!(code, Some(3), "{text}");
+    assert!(text.contains("line 2"), "parse error must name the line: {text}");
+}
+
+#[test]
+fn io_errors_exit_with_code_4() {
+    let missing = std::env::temp_dir()
+        .join("ptmc_cli_exit_test")
+        .join("no_such_file.tns");
+    let _ = std::fs::remove_file(&missing);
+    let (code, text) = run_code(&["stats", "--input", missing.to_str().unwrap()]);
+    assert_eq!(code, Some(4), "{text}");
+}
+
+#[test]
+fn budget_violations_exit_with_code_5() {
+    // 1 KiB is below any process's peak RSS, so the post-run budget
+    // check must fail with the Budget class — not a generic error.
+    let (code, text) = run_code(&[
+        &["decompose"],
+        SMALL,
+        &[
+            "--rank", "4", "--iters", "1", "--backend", "native", "--tol", "0",
+            "--memory-budget", "1k",
+        ],
+    ]
+    .concat());
+    assert_eq!(code, Some(5), "{text}");
+    assert!(text.contains("exceeded --memory-budget"), "{text}");
+}
+
+#[test]
+fn injected_worker_faults_exit_with_code_6() {
+    // A persistent (non-transient) injected panic in a shard worker
+    // must surface as the Worker class after supervision retries.
+    let out = Command::new(env!("CARGO_BIN_EXE_ptmc"))
+        .args(
+            [
+                &["decompose"],
+                SMALL,
+                &[
+                    "--rank", "4", "--iters", "1", "--backend", "parallel",
+                    "--workers", "2", "--tol", "0",
+                ],
+            ]
+            .concat(),
+        )
+        .env("PTMC_FAULT_PLAN", "shard.worker@1%1:panic")
+        .output()
+        .expect("spawn ptmc");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(out.status.code(), Some(6), "{text}");
+    assert!(text.contains("shard worker"), "{text}");
+}
+
+#[test]
+fn transient_injected_faults_are_retried_to_success() {
+    // One transient fault on the first worker attempt: supervision
+    // retries and the run completes normally (exit 0).
+    let out = Command::new(env!("CARGO_BIN_EXE_ptmc"))
+        .args(
+            [
+                &["decompose"],
+                SMALL,
+                &[
+                    "--rank", "4", "--iters", "1", "--backend", "parallel",
+                    "--workers", "2", "--tol", "0",
+                ],
+            ]
+            .concat(),
+        )
+        .env("PTMC_FAULT_PLAN", "shard.worker@1:interrupted")
+        .output()
+        .expect("spawn ptmc");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(out.status.code(), Some(0), "{text}");
+    assert!(text.contains("final fit:"), "{text}");
+}
+
+#[test]
+fn malformed_fault_plans_fail_loudly_at_startup() {
+    let out = Command::new(env!("CARGO_BIN_EXE_ptmc"))
+        .args([&["stats"], SMALL].concat())
+        .env("PTMC_FAULT_PLAN", "no.such.site@1")
+        .output()
+        .expect("spawn ptmc");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert_eq!(out.status.code(), Some(2), "{text}");
+    assert!(text.contains("PTMC_FAULT_PLAN"), "{text}");
+    assert!(text.contains("no.such.site"), "{text}");
+}
+
+#[test]
+fn explore_checkpoint_every_is_accepted_and_warns_without_cache() {
+    let dir = std::env::temp_dir().join("ptmc_cli_ckpt_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    // With a warm cache: accepted, run succeeds, cache directory is
+    // populated by the periodic + final flushes.
+    let (code, text) = run_code(&[
+        &["explore"],
+        SMALL,
+        &[
+            "--evaluator", "pms", "--warm-cache", dir.to_str().unwrap(),
+            "--checkpoint-every", "2",
+        ],
+    ]
+    .concat());
+    assert_eq!(code, Some(0), "{text}");
+    assert!(text.contains("best:"), "{text}");
+    assert!(dir.exists(), "warm cache dir must exist after explore: {text}");
+    // Without a cache the flag is inert — say so, but do not fail.
+    let (code, text) = run_code(&[
+        &["explore"],
+        SMALL,
+        &["--evaluator", "pms", "--checkpoint-every", "2"],
+    ]
+    .concat());
+    assert_eq!(code, Some(0), "{text}");
+    assert!(text.contains("no effect without --warm-cache"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn help_documents_robustness_flags() {
+    let (ok, text) = run(&["--help"]);
+    assert!(ok);
+    assert!(text.contains("--checkpoint-every"), "{text}");
+    assert!(text.contains("--warm-cache"), "{text}");
 }

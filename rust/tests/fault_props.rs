@@ -1,0 +1,389 @@
+//! Crash-consistency property suite for the fault-injection layer
+//! (S31, `ptmc::util::fault`): under randomized deterministic fault
+//! schedules the pipeline must either fail with a clean *typed* error
+//! or produce results bit-identical to the fault-free oracle; a warm
+//! explore killed at any checkpoint (emulated by failing every flush
+//! past the Nth) must resume via `--warm-cache` byte-for-byte; shard
+//! worker panics surface as [`ErrorClass::Worker`] instead of a
+//! poisoned join; and transient IO faults are retried away without
+//! changing a single bit of output.
+//!
+//! Tests that *must not* observe injected faults (oracles, resume
+//! runs) still arm a never-firing plan so they hold the process-wide
+//! fault lock and cannot race an armed test on another thread.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use ptmc::bench::{json_section, upsert_json_file};
+use ptmc::controller::ControllerConfig;
+use ptmc::cpd::linalg::Mat;
+use ptmc::dram::RowPolicy;
+use ptmc::dse::{
+    explore_with, tensor_fingerprint, EvaluatorBuilder, Exploration, Grids, KeyBuilder, Point,
+    SearchOptions, SearchStrategy, WarmCache,
+};
+use ptmc::engine::EngineKind;
+use ptmc::error::ErrorClass;
+use ptmc::fpga::Device;
+use ptmc::mem::MemTech;
+use ptmc::pms::TensorProfile;
+use ptmc::shard::try_mttkrp_sharded_with_engine;
+use ptmc::tensor::frostt::{TnsBlockReader, TnsError};
+use ptmc::tensor::synth::{generate, Profile, SynthConfig};
+use ptmc::tensor::SparseTensor;
+use ptmc::testkit::forall;
+use ptmc::util::fault;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ptmc_fault_props_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn tensor(seed: u64) -> SparseTensor {
+    generate(&SynthConfig {
+        dims: vec![120, 90, 60],
+        nnz: 3_000,
+        profile: Profile::Zipf { alpha_milli: 1200 },
+        seed,
+    })
+}
+
+fn small_grids() -> Grids {
+    Grids {
+        cache_line_bytes: vec![32, 64],
+        cache_num_lines: vec![256, 1024],
+        cache_assoc: vec![2, 4],
+        dma_num: vec![1, 2],
+        dma_buffers: vec![2],
+        dma_buffer_bytes: vec![4096],
+        mem_techs: vec![MemTech::Ddr4],
+        dram_channels: vec![1, 2],
+        dram_banks: vec![16],
+        dram_row_policy: vec![RowPolicy::Open],
+        remap_max_pointers: vec![1 << 10, 1 << 18],
+    }
+}
+
+fn pms_key(t: &SparseTensor, dev: &Device) -> u64 {
+    KeyBuilder::new(tensor_fingerprint(t))
+        .evaluator("pms")
+        .rank(16)
+        .device(dev)
+        .finish()
+}
+
+fn assert_points_identical(a: &[Point], b: &[Point], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: lengths diverged");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.cfg, y.cfg, "{what}: configs diverged");
+        assert_eq!(
+            x.cycles.to_bits(),
+            y.cycles.to_bits(),
+            "{what}: cycles diverged"
+        );
+        assert_eq!(x.bram36, y.bram36, "{what}: bram36 diverged");
+        assert_eq!(x.uram, y.uram, "{what}: uram diverged");
+    }
+}
+
+fn assert_explorations_identical(a: &Exploration, b: &Exploration) {
+    assert_points_identical(
+        std::slice::from_ref(&a.best),
+        std::slice::from_ref(&b.best),
+        "best",
+    );
+    assert_points_identical(&a.visited, &b.visited, "visited");
+    assert_eq!(a.rejected, b.rejected, "rejected counts diverged");
+    assert_points_identical(&a.pareto, &b.pareto, "pareto");
+    assert_points_identical(&a.top, &b.top, "top-k");
+}
+
+/// Hold the fault lock with a plan that cannot fire on any path these
+/// tests exercise (`bench.upsert` hit one million) — serializes a
+/// fault-free section against armed tests on other threads.
+fn quiesce() -> fault::FaultGuard {
+    fault::arm("bench.upsert@1000000").expect("never-firing plan must parse")
+}
+
+fn assert_mats_identical(a: &Mat, b: &Mat, what: &str) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{what}: shape");
+    for (x, y) in a.data().iter().zip(b.data()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: values diverged");
+    }
+}
+
+#[test]
+fn randomized_warm_fault_schedules_never_change_results() {
+    // Any schedule of warm-cache load/flush faults — transient or
+    // persistent, one-shot or repeating — degrades the cache to cold
+    // at worst; the exploration itself must stay bit-identical to the
+    // fault-free oracle.
+    let t = tensor(31);
+    let profile = TensorProfile::measure(&t);
+    let base = ControllerConfig::default_for(t.record_bytes());
+    let dev = Device::alveo_u250();
+    let grids = small_grids();
+    let opts = SearchOptions::default();
+    let key = pms_key(&t, &dev);
+    let oracle = {
+        let _q = quiesce();
+        let eval = EvaluatorBuilder::new().rank(16).pms(&profile);
+        explore_with(&base, &grids, &dev, &eval, &opts)
+    };
+
+    const KINDS: [&str; 6] = [
+        "notfound",
+        "permissiondenied",
+        "interrupted",
+        "timedout",
+        "unexpectedeof",
+        "other",
+    ];
+    forall("warm_fault_schedules", 6, |rng| {
+        let plan = format!(
+            "warm.flush@{}{}:{};warm.load@{}:{}",
+            rng.range(1, 4),
+            if rng.below(2) == 0 { "%1" } else { "" },
+            KINDS[rng.range(0, KINDS.len())],
+            rng.range(1, 3),
+            KINDS[rng.range(0, KINDS.len())],
+        );
+        let dir = tmp_dir(&format!("sched_{:08x}", rng.next_u64() as u32));
+        let guard = fault::arm(&plan).unwrap();
+        let cache = Arc::new(WarmCache::open(&dir, key));
+        let warm = Some(Arc::clone(&cache));
+        let eval = EvaluatorBuilder::new().rank(16).warm_cache(warm).pms(&profile);
+        let ex = explore_with(&base, &grids, &dev, &eval, &opts);
+        assert_explorations_identical(&oracle, &ex);
+        drop(guard);
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn kill_at_any_checkpoint_resumes_byte_identically() {
+    // SIGKILL emulation: with `--checkpoint-every 1` a coordinate
+    // explore flushes after every module sweep.  Failing every flush
+    // from the Kth on leaves the on-disk cache frozen at checkpoint
+    // K-1 — exactly the state a kill between flushes K-1 and K leaves
+    // behind.  A fresh warm explore over that prefix must reproduce
+    // the uninterrupted run byte-for-byte AND heal the cache file to
+    // the same bytes an uninterrupted warm run writes.
+    let t = tensor(37);
+    let profile = TensorProfile::measure(&t);
+    let base = ControllerConfig::default_for(t.record_bytes());
+    let dev = Device::alveo_u250();
+    let grids = small_grids();
+    let opts = SearchOptions {
+        strategy: SearchStrategy::Coordinate,
+        top_k: 3,
+        resume: false,
+        checkpoint_every: 1,
+    };
+    let key = pms_key(&t, &dev);
+
+    // Fault-free oracles: the exploration, the cache bytes an
+    // uninterrupted warm run persists, and — via a never-firing rule
+    // on the flush site — how many flushes the run performs, so the
+    // kill loop below covers every possible kill point.
+    let (oracle, oracle_bytes, flushes) = {
+        let probe = fault::arm("warm.flush@1000000").unwrap();
+        let dir = tmp_dir("ckpt_oracle");
+        let cache = Arc::new(WarmCache::open(&dir, key));
+        let warm = Some(Arc::clone(&cache));
+        let eval = EvaluatorBuilder::new().rank(16).warm_cache(warm).pms(&profile);
+        let ex = explore_with(&base, &grids, &dev, &eval, &opts);
+        let bytes = std::fs::read(cache.path()).expect("oracle cache file must exist");
+        let flushes = fault::hit_count(fault::WARM_FLUSH) as usize;
+        drop(probe);
+        let _ = std::fs::remove_dir_all(&dir);
+        (ex, bytes, flushes)
+    };
+    assert!(
+        flushes >= 2,
+        "checkpoint-every 1 must flush mid-search, not just at the end (saw {flushes})"
+    );
+
+    for kill_at in 1..=flushes {
+        let dir = tmp_dir(&format!("ckpt_kill{kill_at}"));
+
+        // Phase 1: the "killed" run — flushes 1..kill_at-1 land, every
+        // later flush (checkpoints and the final one) fails.
+        {
+            let guard = fault::arm(&format!("warm.flush@{kill_at}%1:other")).unwrap();
+            let cache = Arc::new(WarmCache::open(&dir, key));
+            let warm = Some(Arc::clone(&cache));
+            let eval = EvaluatorBuilder::new().rank(16).warm_cache(warm).pms(&profile);
+            let ex = explore_with(&base, &grids, &dev, &eval, &opts);
+            // Even the "killed" process computed correct results up to
+            // the kill; only its persistence was cut short.
+            assert_explorations_identical(&oracle, &ex);
+            assert!(cache.is_degraded(), "kill_at={kill_at}: flush faults must degrade");
+            assert!(fault::injected_count() > 0, "kill_at={kill_at}: plan never fired");
+            drop(guard);
+        }
+
+        // Phase 2: resume from whatever checkpoint survived.
+        {
+            let _q = quiesce();
+            let cache = Arc::new(WarmCache::open(&dir, key));
+            if kill_at == 1 {
+                assert!(
+                    cache.is_empty(),
+                    "first flush already failed: resume must start cold"
+                );
+            }
+            let warm = Some(Arc::clone(&cache));
+            let eval = EvaluatorBuilder::new().rank(16).warm_cache(warm).pms(&profile);
+            let resumed = explore_with(&base, &grids, &dev, &eval, &opts);
+            assert_explorations_identical(&oracle, &resumed);
+            let healed = std::fs::read(cache.path()).expect("resume must heal the cache");
+            assert_eq!(
+                healed, oracle_bytes,
+                "kill_at={kill_at}: healed cache bytes diverged from the uninterrupted run"
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn no_checkpoint_file_is_ever_torn() {
+    // Every checkpoint goes through the atomic temp+rename writer, so
+    // after any prefix of successful flushes the on-disk file is a
+    // complete, parseable cache — opening it never falls back to cold
+    // once at least one flush landed.
+    let t = tensor(41);
+    let profile = TensorProfile::measure(&t);
+    let base = ControllerConfig::default_for(t.record_bytes());
+    let dev = Device::alveo_u250();
+    let grids = small_grids();
+    let opts = SearchOptions {
+        strategy: SearchStrategy::Coordinate,
+        top_k: 1,
+        resume: false,
+        checkpoint_every: 1,
+    };
+    let key = pms_key(&t, &dev);
+    let dir = tmp_dir("torn");
+    {
+        let guard = fault::arm("warm.flush@2%1:other").unwrap();
+        let cache = Arc::new(WarmCache::open(&dir, key));
+        let warm = Some(Arc::clone(&cache));
+        let eval = EvaluatorBuilder::new().rank(16).warm_cache(warm).pms(&profile);
+        explore_with(&base, &grids, &dev, &eval, &opts);
+        drop(guard);
+    }
+    {
+        let _q = quiesce();
+        let cache = WarmCache::open(&dir, key);
+        assert!(
+            !cache.is_empty(),
+            "checkpoint 1 landed before the faults: it must parse"
+        );
+        assert!(!cache.is_degraded(), "a clean open must not degrade");
+        // The failed flushes left no temp-file litter behind.
+        let litter: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(litter.is_empty(), "tmp litter: {litter:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shard_worker_panics_surface_as_typed_worker_errors() {
+    let t = tensor(43);
+    let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 9)).collect();
+    let guard = fault::arm("shard.worker@1:panic").unwrap();
+    let err = try_mttkrp_sharded_with_engine(&t, &factors, 0, 2, None, EngineKind::Lockstep)
+        .expect_err("an injected worker panic must not produce a result");
+    assert_eq!(err.class(), ErrorClass::Worker);
+    assert_eq!(err.class().exit_code(), 6);
+    let msg = err.to_string();
+    assert!(msg.contains("shard worker"), "{msg}");
+    assert!(msg.contains("injected panic"), "{msg}");
+
+    // The plan is exhausted (one-shot rule): the same call now
+    // succeeds under the same guard — the executor survived the panic
+    // without poisoning anything.
+    let ok = try_mttkrp_sharded_with_engine(&t, &factors, 0, 2, None, EngineKind::Lockstep)
+        .expect("post-panic run must succeed");
+    assert_eq!(ok.output.rows(), t.dims()[0]);
+    drop(guard);
+}
+
+#[test]
+fn shard_worker_transient_faults_retry_to_identical_results() {
+    let t = tensor(47);
+    let factors: Vec<Mat> = t.dims().iter().map(|&d| Mat::randn(d, 8, 11)).collect();
+    let guard = fault::arm("shard.worker@1:interrupted").unwrap();
+    let faulted = try_mttkrp_sharded_with_engine(&t, &factors, 0, 2, None, EngineKind::Lockstep)
+        .expect("a one-shot transient fault must be retried away");
+    assert_eq!(fault::injected_count(), 1, "the transient fault must have fired");
+    // Plan exhausted: this run is the fault-free oracle.
+    let oracle = try_mttkrp_sharded_with_engine(&t, &factors, 0, 2, None, EngineKind::Lockstep)
+        .expect("oracle run must succeed");
+    assert_mats_identical(&faulted.output, &oracle.output, "retried output");
+    drop(guard);
+
+    // A persistent (repeating) non-transient fault is a typed error.
+    let guard = fault::arm("shard.worker@1%1:brokenpipe").unwrap();
+    let err = try_mttkrp_sharded_with_engine(&t, &factors, 0, 2, None, EngineKind::Lockstep)
+        .expect_err("a persistent fault must fail the mode");
+    assert_eq!(err.class(), ErrorClass::Worker);
+    assert!(err.to_string().contains("BrokenPipe") || err.to_string().contains("injected"));
+    drop(guard);
+}
+
+#[test]
+fn frostt_read_faults_are_typed_io_errors() {
+    let text = "1 1 1 1.0\n2 2 2 2.0\n3 3 3 3.0\n";
+    let guard = fault::arm("frostt.read_block@1:unexpectedeof").unwrap();
+    let mut r = TnsBlockReader::new(std::io::Cursor::new(text.as_bytes()), 2);
+    match r.next_block() {
+        Err(TnsError::Io(e)) => assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof),
+        other => panic!("expected a typed IO error, got {other:?}"),
+    }
+    drop(guard);
+
+    // Fault-free, the same stream parses completely.
+    let _q = quiesce();
+    let mut r = TnsBlockReader::new(std::io::Cursor::new(text.as_bytes()), 2);
+    let mut nnz = 0usize;
+    while let Some(b) = r.next_block().expect("clean stream must parse") {
+        nnz += b.nnz();
+    }
+    assert_eq!(nnz, 3);
+}
+
+#[test]
+fn bench_upserts_fail_clean_and_retry_transients() {
+    let dir = tmp_dir("upsert");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_test.json");
+    {
+        let _g = fault::arm("bench.upsert@1%1:notfound").unwrap();
+        let e = upsert_json_file(&path, "a", "1").unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::NotFound);
+        assert!(!path.exists(), "a failed upsert must not create the file");
+        assert!(
+            !path.with_extension("tmp").exists(),
+            "a failed upsert must not leave tmp litter"
+        );
+    }
+    {
+        let _g = fault::arm("bench.upsert@1:interrupted").unwrap();
+        upsert_json_file(&path, "a", "1").expect("transient upsert fault must be retried");
+        upsert_json_file(&path, "b", "{ \"x\": 2 }").unwrap();
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(json_section(&text, "a").as_deref(), Some("1"));
+    assert!(json_section(&text, "b").is_some(), "sections must accumulate");
+    assert!(!path.with_extension("tmp").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -26,7 +26,7 @@ use ptmc::engine::{
 };
 use ptmc::mttkrp::{approach1, Tracing};
 use ptmc::shard::{CoordHistogram, ShardPlan};
-use ptmc::tensor::frostt::{read_tns, write_tns, TnsBlockReader};
+use ptmc::tensor::frostt::{read_tns, write_tns, TnsBlockReader, TnsError};
 use ptmc::tensor::synth::{generate, generate_streamed, Profile, SynthConfig};
 use ptmc::tensor::{Coord, SortOrder, SparseTensor};
 use ptmc::testkit::{forall, Rng};
@@ -121,6 +121,140 @@ fn block_streamed_parse_matches_in_ram_parse() {
         }
         let streamed = SparseTensor::from_columns(r.dims(), cols, vals, SortOrder::Unsorted);
         assert_same_tensor(&whole, &streamed);
+    });
+}
+
+#[test]
+fn parse_errors_report_exact_line_numbers_across_block_boundaries() {
+    // S31 satellite: a garbage line anywhere in the stream must fail
+    // with the exact *physical* line number, no matter how comments,
+    // blank lines, and block boundaries fall around it — and the
+    // streamed reader must agree with the whole-file parser.
+    forall("streamed_parse_exact_line_numbers", 24, |rng| {
+        let nnz = rng.range(5, 60);
+        let mut lines: Vec<String> = Vec::new();
+        let mut data_linenos: Vec<usize> = Vec::new();
+        for _ in 0..nnz {
+            while rng.below(4) == 0 {
+                lines.push(if rng.below(2) == 0 {
+                    "# noise".to_string()
+                } else {
+                    String::new()
+                });
+            }
+            data_linenos.push(lines.len() + 1);
+            lines.push(format!(
+                "{} {} {} {:.1}",
+                1 + rng.below(40),
+                1 + rng.below(40),
+                1 + rng.below(40),
+                (rng.f32() + 0.5) * 10.0
+            ));
+        }
+        // Corrupt one random data entry (never the first, so the
+        // reader has an established arity to violate).
+        let victim = data_linenos[rng.range(1, data_linenos.len())];
+        lines[victim - 1] = match rng.below(4) {
+            0 => "x9 1 1 1.0".to_string(),  // garbage coordinate
+            1 => "0 1 1 1.0".to_string(),   // 1-based violation
+            2 => "1 1 1.0".to_string(),     // arity change
+            _ => "1 1 1 1.2.3".to_string(), // garbage value
+        };
+        let text = lines.join("\n") + "\n";
+
+        let whole = read_tns(text.as_bytes()).unwrap_err();
+        let TnsError::Parse(whole_line, _) = whole else {
+            panic!("whole-file parse must fail with Parse, got {whole}");
+        };
+        assert_eq!(whole_line, victim, "whole-file parser blamed the wrong line");
+
+        let block_nnz = rng.range(1, 20);
+        let mut r = TnsBlockReader::new(text.as_bytes(), block_nnz);
+        let streamed = loop {
+            match r.next_block() {
+                Ok(Some(_)) => {}
+                Ok(None) => panic!(
+                    "stream with a corrupt line {victim} ended cleanly at block {block_nnz}"
+                ),
+                Err(e) => break e,
+            }
+        };
+        let TnsError::Parse(stream_line, _) = streamed else {
+            panic!("streamed parse must fail with Parse, got {streamed}");
+        };
+        assert_eq!(
+            stream_line, victim,
+            "streamed parser blamed the wrong line at block size {block_nnz}"
+        );
+    });
+}
+
+/// A reader that serves a prefix of a `.tns` stream and then fails
+/// every further read — a dropped NFS mount / truncated pipe.
+struct FailingReader<'a> {
+    data: &'a [u8],
+    at: usize,
+}
+
+impl std::io::Read for FailingReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.at >= self.data.len() {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::ConnectionReset,
+                "stream died mid-file",
+            ));
+        }
+        let n = buf.len().min(self.data.len() - self.at);
+        buf[..n].copy_from_slice(&self.data[self.at..self.at + n]);
+        self.at += n;
+        Ok(n)
+    }
+}
+
+#[test]
+fn short_reads_surface_as_io_errors_not_silent_truncation() {
+    // S31 satellite: when the underlying stream dies mid-file the
+    // reader must return a typed IO error — never a clean end-of-file
+    // that silently drops the tail of the tensor.
+    forall("streamed_short_reads", 12, |rng| {
+        let nnz = rng.range(4, 40);
+        let mut text = String::new();
+        for i in 0..nnz {
+            text.push_str(&format!("{} {} {} 1.0\n", i + 1, 1 + rng.below(9), 1 + rng.below(9)));
+        }
+        // Cut somewhere strictly inside the data so entries remain
+        // unread when the failure hits.
+        let cut = rng.range(1, text.len());
+        let block_nnz = rng.range(1, 8);
+        let reader = std::io::BufReader::new(FailingReader {
+            data: &text.as_bytes()[..cut],
+            at: 0,
+        });
+        let mut r = TnsBlockReader::new(reader, block_nnz);
+        let mut yielded = 0usize;
+        let err = loop {
+            match r.next_block() {
+                Ok(Some(b)) => yielded += b.nnz(),
+                Ok(None) => panic!(
+                    "reader ended cleanly after {yielded}/{nnz} entries (cut {cut}): \
+                     short read became silent truncation"
+                ),
+                Err(e) => break e,
+            }
+        };
+        assert!(
+            matches!(&err, TnsError::Io(e) if e.kind() == std::io::ErrorKind::ConnectionReset),
+            "expected the stream's IO error, got {err}"
+        );
+        assert!(yielded < nnz, "every entry arrived yet the stream failed");
+
+        // The whole-file parser refuses the same stream identically.
+        let whole = read_tns(std::io::BufReader::new(FailingReader {
+            data: &text.as_bytes()[..cut],
+            at: 0,
+        }))
+        .unwrap_err();
+        assert!(matches!(whole, TnsError::Io(_)), "got {whole}");
     });
 }
 

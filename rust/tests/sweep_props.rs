@@ -258,6 +258,7 @@ fn joint_explore_never_worse_than_coordinate_on_random_tensors() {
             strategy: SearchStrategy::Joint,
             top_k: 3,
             resume: false,
+            checkpoint_every: 0,
         };
         let ev_grid = EvaluatorBuilder::new()
             .engine(EngineKind::Grid)

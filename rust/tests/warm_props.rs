@@ -102,6 +102,7 @@ fn warm_explore_is_byte_identical_to_cold_and_reuses_scores() {
         strategy: SearchStrategy::Coordinate,
         top_k: 3,
         resume: false,
+        checkpoint_every: 0,
     };
 
     let cold_eval = EvaluatorBuilder::new().rank(16).pms(&profile);
@@ -181,6 +182,7 @@ fn corrupt_cache_files_fall_back_to_cold_results() {
         strategy: SearchStrategy::Coordinate,
         top_k: 2,
         resume: false,
+        checkpoint_every: 0,
     };
     let cold_eval = EvaluatorBuilder::new().rank(16).pms(&profile);
     let cold = explore_with(&base, &grids, &dev, &cold_eval, &opts);
@@ -221,6 +223,7 @@ fn beam_resume_restarts_from_the_stored_frontier() {
         strategy: SearchStrategy::Beam { width: 2 },
         top_k: 3,
         resume: false,
+        checkpoint_every: 0,
     };
     let cold_eval = EvaluatorBuilder::new().rank(16).pms(&profile);
     let cold = explore_with(&base, &grids, &dev, &cold_eval, &opts);

@@ -179,15 +179,70 @@ pub fn upsert_json_section(text: &str, key: &str, value: &str) -> String {
     format!("{body}{comma}\n  \"{key}\": {value}\n}}\n")
 }
 
+/// A held sibling lockfile; removing it on drop releases the lock even
+/// when the critical section errors out.
+struct SectionLock {
+    path: std::path::PathBuf,
+}
+
+impl Drop for SectionLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// How long a waiter spins on someone else's `.lock` before declaring
+/// it stale (a crashed holder) and breaking it.  Upserts are
+/// millisecond-scale, so seconds of waiting means the holder is gone.
+const LOCK_STALE: Duration = Duration::from_secs(10);
+
+/// Acquire the exclusive sibling `<path minus extension>.lock` file.
+/// `create_new` is the atomic claim: exactly one process wins; losers
+/// sleep and retry until the holder releases (or crashed and the lock
+/// goes stale).
+fn lock_sibling(path: &std::path::Path) -> std::io::Result<SectionLock> {
+    let lock_path = path.with_extension("lock");
+    let deadline = Instant::now() + LOCK_STALE;
+    loop {
+        match std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&lock_path)
+        {
+            Ok(_) => {
+                return Ok(SectionLock {
+                    path: lock_path.clone(),
+                })
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                if Instant::now() >= deadline {
+                    // The holder has been gone for the whole window:
+                    // break its lock and race create_new again (only
+                    // one breaker wins the recreate).
+                    let _ = std::fs::remove_file(&lock_path);
+                } else {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
 /// Read-modify-write a `"key": <section>` member into the JSON object
 /// file at `path`, atomically (tmp + rename, so a crash mid-write
 /// leaves the previous file intact) and behind the `bench.upsert`
-/// failpoint.  Transient IO errors are retried.
+/// failpoint.  Transient IO errors are retried.  The read-merge-write
+/// runs under an exclusive sibling `.lock` file, so concurrent bench
+/// binaries upserting *different* sections serialize instead of
+/// reading the same base text and silently dropping each other's
+/// sections on the final rename.
 pub fn upsert_json_file(
     path: &std::path::Path,
     key: &str,
     section: &str,
 ) -> std::io::Result<()> {
+    let _lock = lock_sibling(path)?;
     crate::util::fault::retry_transient(3, || {
         crate::util::fault::check_io(crate::util::fault::BENCH_UPSERT)?;
         let old = match std::fs::read_to_string(path) {
@@ -382,6 +437,51 @@ mod tests {
         assert_eq!(json_section(&out, "streaming"), Some("{ \"new\": 1 }".into()));
         assert_eq!(json_section(&out, "keep"), Some("42".into()));
         assert!(!out.contains("old"), "stale section must be gone");
+    }
+
+    #[test]
+    fn concurrent_file_upserts_keep_every_section() {
+        // Regression: two binaries racing read-modify-write on the
+        // shared trajectory file used to drop whichever section lost
+        // the final rename.  With the sibling lock, all writers'
+        // sections must survive.
+        let dir = std::env::temp_dir().join(format!(
+            "ptmc_bench_upsert_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("traj.json");
+        let _ = std::fs::remove_file(&path);
+        let n = 8;
+        std::thread::scope(|scope| {
+            for w in 0..n {
+                let path = &path;
+                scope.spawn(move || {
+                    for round in 0..5 {
+                        upsert_json_file(
+                            path,
+                            &format!("section_{w}"),
+                            &format!("{{ \"round\": {round} }}"),
+                        )
+                        .unwrap();
+                    }
+                });
+            }
+        });
+        let text = std::fs::read_to_string(&path).unwrap();
+        for w in 0..n {
+            assert_eq!(
+                json_section(&text, &format!("section_{w}")),
+                Some("{ \"round\": 4 }".to_string()),
+                "section_{w} lost in {text}"
+            );
+        }
+        assert!(
+            !path.with_extension("lock").exists(),
+            "lockfile must be released"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

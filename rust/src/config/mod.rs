@@ -32,10 +32,19 @@
 //! [dse]
 //! search = "joint"   # coordinate | joint | beam
 //! top_k = 5
+//!
+//! [serve]
+//! listen = "127.0.0.1:7421"
+//! workers = 8
+//! tenant_budget = 100
+//! memo_spill = ".ptmc-warm"
 //! ```
 //!
 //! The `[dse]` section configures the explore subcommand's search
-//! layer (overridden by `--search` / `--top-k` on the command line).
+//! layer (overridden by `--search` / `--top-k` on the command line);
+//! `[serve]` configures the DSE service the same way (overridden by
+//! `--listen` / `--serve-workers` / `--tenant-budget` /
+//! `--memo-spill`).
 //!
 //! The parser is strict, mirroring the CLI's unknown-option handling:
 //! sections and keys outside the known schema are a [`ParseError`]
@@ -92,7 +101,8 @@ const SCHEMA: &[(&str, &[&str])] = &[
     ("remapper", &["max_pointers", "buffer_bytes"]),
     ("memory", &["tech"]),
     ("dram", &["channels", "banks", "row_policy"]),
-    ("dse", &["search", "top_k", "warm_cache"]),
+    ("dse", &["search", "top_k", "warm_cache", "checkpoint_every"]),
+    ("serve", &["listen", "workers", "tenant_budget", "memo_spill"]),
 ];
 
 fn schema_keys(section: &str) -> Option<&'static [&'static str]> {

@@ -1,0 +1,589 @@
+//! Cross-query shared-work memo (S34).
+//!
+//! The warm-start cache (S28, [`super::warm`]) makes one *repeat*
+//! query cheap, but it is single-context and single-owner: every
+//! `explore` opens its own [`WarmCache`], so N concurrent queries of
+//! the same tensor still score every candidate N times.  This module
+//! generalizes it into the substrate the DSE server
+//! ([`crate::serve`]) shares between tenants:
+//!
+//! - [`ScoreCache`] is the verdict-cache interface `Evaluator::Warm`
+//!   routes through — implemented by the existing [`WarmCache`]
+//!   (unchanged semantics) and by [`MemoView`].
+//! - [`MemoStore`] is a concurrent, sharded in-memory verdict store
+//!   keyed by `(context key, encoded ControllerConfig)`.  Shard
+//!   mutexes keep contention low when N worker threads score
+//!   concurrently; the *existing* warm-cache on-disk format is its
+//!   spill/persistence tier — one `warm_{key:016x}.bin` file per
+//!   context, byte-compatible with [`WarmCache`], flushed behind the
+//!   `memo.flush` failpoint.  A server restart (or a later plain
+//!   `explore --warm-cache` pointed at the same directory) warm-starts
+//!   from the spilled files.
+//! - [`MemoView`] scopes a store to one context key: the thing a job
+//!   hands to [`super::EvaluatorBuilder::score_cache`].  It keeps
+//!   per-view hit/miss counters so each query reports its own memo
+//!   economics while the verdicts themselves are shared store-wide.
+//!
+//! Scores are deterministic pure functions of the context, and the
+//! store keeps their exact `f64` bits — so a query served from the
+//! memo is byte-identical to a cold run, the same contract the S28
+//! warm layer proves in `tests/warm_props.rs`.
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::controller::ControllerConfig;
+use crate::util::codec::{decode_config, encode_config, fnv1a, write_atomic};
+use crate::util::fault;
+
+use super::warm::{parse_state, serialize_state, state_file_path, Entry, State};
+use super::{Point, WarmCache};
+
+/// The verdict-cache interface behind `Evaluator::Warm`: lookup and
+/// record score / feasibility verdicts, carry the Pareto frontier
+/// between sessions, and flush to a persistence tier.  Implemented by
+/// the single-context [`WarmCache`] and the cross-query [`MemoView`].
+pub trait ScoreCache: Send + Sync + std::fmt::Debug {
+    /// Cached score for `cfg`: `None` = unseen (score it and call
+    /// [`record_score`](Self::record_score)), `Some(None)` = known
+    /// infeasible, `Some(Some(c))` = known cycle count.
+    fn lookup_score(&self, cfg: &ControllerConfig) -> Option<Option<f64>>;
+    /// Record the outcome of scoring `cfg` (`None` = infeasible).
+    fn record_score(&self, cfg: &ControllerConfig, score: Option<f64>);
+    /// Cached feasibility verdict for `cfg`, if any.
+    fn lookup_feasible(&self, cfg: &ControllerConfig) -> Option<bool>;
+    /// Record a feasibility verdict.
+    fn record_feasible(&self, cfg: &ControllerConfig, ok: bool);
+    /// The stored Pareto frontier (beam resume seeds).
+    fn frontier(&self) -> Vec<ControllerConfig>;
+    /// Replace the stored Pareto frontier.
+    fn set_frontier(&self, pts: &[Point]);
+    /// Flush to the persistence tier; a persistent failure degrades
+    /// with one warning instead of propagating.  Returns whether the
+    /// flush landed (in-memory-only caches trivially return `true`).
+    fn flush_or_degrade(&self) -> bool;
+    /// Lookups served from the cache this session.
+    fn hits(&self) -> u64;
+    /// Lookups that fell through to the inner evaluator this session.
+    fn misses(&self) -> u64;
+}
+
+impl ScoreCache for WarmCache {
+    fn lookup_score(&self, cfg: &ControllerConfig) -> Option<Option<f64>> {
+        WarmCache::lookup_score(self, cfg)
+    }
+    fn record_score(&self, cfg: &ControllerConfig, score: Option<f64>) {
+        WarmCache::record_score(self, cfg, score)
+    }
+    fn lookup_feasible(&self, cfg: &ControllerConfig) -> Option<bool> {
+        WarmCache::lookup_feasible(self, cfg)
+    }
+    fn record_feasible(&self, cfg: &ControllerConfig, ok: bool) {
+        WarmCache::record_feasible(self, cfg, ok)
+    }
+    fn frontier(&self) -> Vec<ControllerConfig> {
+        WarmCache::frontier(self)
+    }
+    fn set_frontier(&self, pts: &[Point]) {
+        WarmCache::set_frontier(self, pts)
+    }
+    fn flush_or_degrade(&self) -> bool {
+        WarmCache::flush_or_degrade(self)
+    }
+    fn hits(&self) -> u64 {
+        WarmCache::hits(self)
+    }
+    fn misses(&self) -> u64 {
+        WarmCache::misses(self)
+    }
+}
+
+/// Number of independently locked shards.  Verdict lookups are
+/// sub-microsecond, so a modest shard count keeps N worker threads
+/// out of each other's way.
+const DEFAULT_SHARDS: usize = 16;
+
+/// Concurrent cross-query verdict store: `(context key, encoded
+/// config) -> verdict`, sharded by hash across independent mutexes,
+/// plus one stored frontier per context.  See the module docs.
+#[derive(Debug)]
+pub struct MemoStore {
+    shards: Vec<Mutex<HashMap<(u64, Vec<u8>), Entry>>>,
+    frontiers: Mutex<HashMap<u64, Vec<Vec<u8>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Spill/persistence directory (the warm-cache on-disk format);
+    /// `None` keeps the store purely in-memory.
+    spill: Option<PathBuf>,
+    /// Contexts whose spill file has already been consulted, so each
+    /// is read at most once per store lifetime.
+    loaded: Mutex<HashSet<u64>>,
+    /// Set once an IO fault degraded persistence; the warning prints
+    /// exactly once per store.
+    degraded: AtomicBool,
+}
+
+impl MemoStore {
+    /// A purely in-memory store.
+    pub fn new() -> Arc<MemoStore> {
+        Self::build(None)
+    }
+
+    /// A store spilling each context to `dir` in the warm-cache file
+    /// format — byte-compatible with [`WarmCache`], so the directory
+    /// can seed (and be seeded by) plain `--warm-cache` runs.  Stale
+    /// `.tmp` litter from a crashed flush is swept on the way in.
+    pub fn with_spill(dir: impl Into<PathBuf>) -> Arc<MemoStore> {
+        let dir = dir.into();
+        WarmCache::sweep_stale_tmp(&dir);
+        Self::build(Some(dir))
+    }
+
+    fn build(spill: Option<PathBuf>) -> Arc<MemoStore> {
+        Arc::new(MemoStore {
+            shards: (0..DEFAULT_SHARDS)
+                .map(|_| Mutex::new(HashMap::new()))
+                .collect(),
+            frontiers: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            spill,
+            loaded: Mutex::new(HashSet::new()),
+            degraded: AtomicBool::new(false),
+        })
+    }
+
+    /// A [`ScoreCache`] view of this store scoped to context `ctx`
+    /// (a [`super::KeyBuilder`] key).  The first view of a context
+    /// lazily absorbs its spill file, if any.
+    pub fn view(self: &Arc<Self>, ctx: u64) -> Arc<MemoView> {
+        self.ensure_loaded(ctx);
+        Arc::new(MemoView {
+            store: Arc::clone(self),
+            ctx,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    fn shard(&self, ctx: u64, enc: &[u8]) -> &Mutex<HashMap<(u64, Vec<u8>), Entry>> {
+        let h = fnv1a(enc) ^ ctx;
+        &self.shards[(h as usize) % self.shards.len()]
+    }
+
+    /// Read the spill file for `ctx` (at most once per store) and
+    /// merge it *under* the in-memory state: live verdicts win over
+    /// spilled ones.
+    fn ensure_loaded(&self, ctx: u64) {
+        let Some(dir) = &self.spill else { return };
+        {
+            let mut loaded = self.loaded.lock().unwrap();
+            if !loaded.insert(ctx) {
+                return;
+            }
+        }
+        let path = state_file_path(dir, ctx);
+        let bytes = match fault::retry_transient(3, || {
+            fault::check_io(fault::WARM_LOAD)?;
+            match std::fs::read(&path) {
+                Ok(b) => Ok(Some(b)),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+                Err(e) => Err(e),
+            }
+        }) {
+            Ok(Some(b)) => b,
+            Ok(None) => return,
+            Err(e) => {
+                self.degrade(&format!("load failed: {e}"));
+                return;
+            }
+        };
+        // Corrupt or mismatched bytes are a cold context, same as
+        // WarmCache::open.
+        let Some(state) = parse_state(&bytes, ctx) else {
+            return;
+        };
+        for (enc, entry) in state.entries {
+            let shard = self.shard(ctx, &enc);
+            shard
+                .lock()
+                .unwrap()
+                .entry((ctx, enc))
+                .or_insert(entry);
+        }
+        let mut frontiers = self.frontiers.lock().unwrap();
+        frontiers.entry(ctx).or_insert(state.frontier);
+    }
+
+    /// Collect context `ctx`'s verdicts + frontier into one [`State`]
+    /// (the spill serialization unit).
+    fn collect(&self, ctx: u64) -> State {
+        let mut entries = HashMap::new();
+        for shard in &self.shards {
+            let guard = shard.lock().unwrap();
+            for ((c, enc), entry) in guard.iter() {
+                if *c == ctx {
+                    entries.insert(enc.clone(), *entry);
+                }
+            }
+        }
+        let frontier = self
+            .frontiers
+            .lock()
+            .unwrap()
+            .get(&ctx)
+            .cloned()
+            .unwrap_or_default();
+        State { entries, frontier }
+    }
+
+    /// Flush context `ctx` to its spill file (atomic temp + rename,
+    /// behind the `memo.flush` failpoint, transient faults retried).
+    /// A no-op `Ok` for in-memory stores.
+    pub fn flush_context(&self, ctx: u64) -> std::io::Result<()> {
+        let Some(dir) = &self.spill else { return Ok(()) };
+        let bytes = serialize_state(&self.collect(ctx), ctx);
+        let path = state_file_path(dir, ctx);
+        fault::retry_transient(3, || {
+            fault::check_io(fault::MEMO_FLUSH)?;
+            std::fs::create_dir_all(dir)?;
+            write_atomic(&path, &bytes)
+        })
+    }
+
+    /// [`flush_context`](Self::flush_context), but a persistent
+    /// failure degrades persistence — one warning per store, the
+    /// in-memory verdicts keep serving — instead of propagating.
+    pub fn flush_context_or_degrade(&self, ctx: u64) -> bool {
+        match self.flush_context(ctx) {
+            Ok(()) => true,
+            Err(e) => {
+                self.degrade(&format!("flush failed: {e}"));
+                false
+            }
+        }
+    }
+
+    fn degrade(&self, why: &str) {
+        if !self.degraded.swap(true, Ordering::Relaxed) {
+            eprintln!("warning: memo spill degraded to in-memory: {why}");
+        }
+    }
+
+    /// True once an IO fault has degraded the spill tier.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
+    /// Total verdicts held across all contexts.
+    pub fn entries(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Store-wide lookups served from memory.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Store-wide lookups that missed.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    fn lookup_entry(&self, ctx: u64, cfg: &ControllerConfig) -> Option<Entry> {
+        let enc = encode_config(cfg);
+        let got = self.shard(ctx, &enc).lock().unwrap().get(&(ctx, enc)).copied();
+        got
+    }
+}
+
+/// One context's window onto a shared [`MemoStore`] — what a server
+/// job plugs into [`super::EvaluatorBuilder::score_cache`].  Hit/miss
+/// counters are per-view (each query reports its own memo economics);
+/// verdicts live in the store and are shared by every view of the
+/// same context.
+#[derive(Debug)]
+pub struct MemoView {
+    store: Arc<MemoStore>,
+    ctx: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl MemoView {
+    /// The context key this view is scoped to.
+    pub fn ctx(&self) -> u64 {
+        self.ctx
+    }
+
+    /// The store this view reads through.
+    pub fn store(&self) -> &Arc<MemoStore> {
+        &self.store
+    }
+
+    fn hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.store.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.store.misses.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+impl ScoreCache for MemoView {
+    fn lookup_score(&self, cfg: &ControllerConfig) -> Option<Option<f64>> {
+        match self.store.lookup_entry(self.ctx, cfg) {
+            Some(Entry::Infeasible) => {
+                self.hit();
+                Some(None)
+            }
+            Some(Entry::Scored(bits)) => {
+                self.hit();
+                Some(Some(f64::from_bits(bits)))
+            }
+            // Feasible-unscored still needs the inner evaluator —
+            // identical to WarmCache::lookup_score.
+            Some(Entry::Feasible) | None => {
+                self.miss();
+                None
+            }
+        }
+    }
+
+    fn record_score(&self, cfg: &ControllerConfig, score: Option<f64>) {
+        let entry = match score {
+            None => Entry::Infeasible,
+            Some(c) => Entry::Scored(c.to_bits()),
+        };
+        let enc = encode_config(cfg);
+        let shard = self.store.shard(self.ctx, &enc);
+        shard.lock().unwrap().insert((self.ctx, enc), entry);
+    }
+
+    fn lookup_feasible(&self, cfg: &ControllerConfig) -> Option<bool> {
+        match self.store.lookup_entry(self.ctx, cfg) {
+            Some(Entry::Infeasible) => {
+                self.hit();
+                Some(false)
+            }
+            Some(Entry::Feasible) | Some(Entry::Scored(_)) => {
+                self.hit();
+                Some(true)
+            }
+            None => {
+                self.miss();
+                None
+            }
+        }
+    }
+
+    fn record_feasible(&self, cfg: &ControllerConfig, ok: bool) {
+        let enc = encode_config(cfg);
+        let shard = self.store.shard(self.ctx, &enc);
+        let mut guard = shard.lock().unwrap();
+        let key = (self.ctx, enc);
+        match guard.get(&key) {
+            // Never downgrade a Scored entry to Feasible.
+            Some(Entry::Scored(_)) if ok => {}
+            _ => {
+                let e = if ok { Entry::Feasible } else { Entry::Infeasible };
+                guard.insert(key, e);
+            }
+        }
+    }
+
+    fn frontier(&self) -> Vec<ControllerConfig> {
+        self.store
+            .frontiers
+            .lock()
+            .unwrap()
+            .get(&self.ctx)
+            .map(|f| f.iter().filter_map(|e| decode_config(e)).collect())
+            .unwrap_or_default()
+    }
+
+    fn set_frontier(&self, pts: &[Point]) {
+        let encoded = pts.iter().map(|p| encode_config(&p.cfg)).collect();
+        self.store
+            .frontiers
+            .lock()
+            .unwrap()
+            .insert(self.ctx, encoded);
+    }
+
+    fn flush_or_degrade(&self) -> bool {
+        self.store.flush_context_or_degrade(self.ctx)
+    }
+
+    fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("ptmc_memo_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn cfg_with_lines(num_lines: usize) -> ControllerConfig {
+        let mut cfg = ControllerConfig::default_for(4);
+        cfg.cache.num_lines = num_lines;
+        cfg
+    }
+
+    #[test]
+    fn views_of_one_context_share_verdicts_with_private_counters() {
+        let store = MemoStore::new();
+        let a = store.view(7);
+        let b = store.view(7);
+        let cfg = cfg_with_lines(256);
+        assert_eq!(a.lookup_score(&cfg), None);
+        a.record_score(&cfg, Some(1234.0));
+        assert_eq!(b.lookup_score(&cfg), Some(Some(1234.0)), "cross-view hit");
+        assert_eq!(a.hits(), 0);
+        assert_eq!(a.misses(), 1);
+        assert_eq!(b.hits(), 1);
+        assert_eq!(b.misses(), 0);
+        assert_eq!(store.hits(), 1);
+        assert_eq!(store.misses(), 1);
+    }
+
+    #[test]
+    fn contexts_are_isolated() {
+        let store = MemoStore::new();
+        let a = store.view(1);
+        let b = store.view(2);
+        let cfg = cfg_with_lines(512);
+        a.record_score(&cfg, Some(5.0));
+        a.set_frontier(&[Point {
+            cfg: cfg.clone(),
+            cycles: 5.0,
+            bram36: 1,
+            uram: 0,
+        }]);
+        assert_eq!(b.lookup_score(&cfg), None, "other context must miss");
+        assert!(b.frontier().is_empty());
+        assert_eq!(a.lookup_score(&cfg), Some(Some(5.0)));
+        assert_eq!(a.frontier(), vec![cfg]);
+    }
+
+    #[test]
+    fn feasible_semantics_match_warm_cache() {
+        let store = MemoStore::new();
+        let v = store.view(3);
+        let cfg = cfg_with_lines(1024);
+        assert_eq!(v.lookup_feasible(&cfg), None);
+        v.record_feasible(&cfg, true);
+        assert_eq!(v.lookup_feasible(&cfg), Some(true));
+        assert_eq!(v.lookup_score(&cfg), None, "feasible-unscored misses");
+        v.record_score(&cfg, Some(9.0));
+        v.record_feasible(&cfg, true);
+        assert_eq!(
+            v.lookup_score(&cfg),
+            Some(Some(9.0)),
+            "scored entry must survive a feasible re-record"
+        );
+        v.record_feasible(&cfg, false);
+        assert_eq!(v.lookup_score(&cfg), Some(None), "infeasible overwrites");
+    }
+
+    #[test]
+    fn spill_round_trips_and_interops_with_warm_cache() {
+        let dir = tmp_dir("interop");
+        let ctx = 0xabcd;
+        let cfg = cfg_with_lines(256);
+        {
+            let store = MemoStore::with_spill(&dir);
+            let v = store.view(ctx);
+            v.record_score(&cfg, Some(42.0));
+            v.set_frontier(&[Point {
+                cfg: cfg.clone(),
+                cycles: 42.0,
+                bram36: 1,
+                uram: 0,
+            }]);
+            assert!(v.flush_or_degrade());
+        }
+        // A fresh store warm-starts from the spill file.
+        let store = MemoStore::with_spill(&dir);
+        let v = store.view(ctx);
+        assert_eq!(v.lookup_score(&cfg), Some(Some(42.0)));
+        assert_eq!(v.frontier(), vec![cfg.clone()]);
+        // The spill file IS a warm-cache file: WarmCache reads it...
+        let warm = WarmCache::open(&dir, ctx);
+        assert_eq!(warm.len(), 1);
+        assert_eq!(WarmCache::lookup_score(&warm, &cfg), Some(Some(42.0)));
+        // ...and a WarmCache flush seeds a fresh MemoStore.
+        let other = cfg_with_lines(4096);
+        WarmCache::record_score(&warm, &other, None);
+        warm.flush().unwrap();
+        let seeded = MemoStore::with_spill(&dir);
+        assert_eq!(seeded.view(ctx).lookup_score(&other), Some(None));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn live_verdicts_win_over_spilled_ones() {
+        let dir = tmp_dir("livewins");
+        let ctx = 9;
+        let cfg = cfg_with_lines(512);
+        {
+            let store = MemoStore::with_spill(&dir);
+            store.view(ctx).record_score(&cfg, Some(1.0));
+            store.flush_context(ctx).unwrap();
+        }
+        let store = MemoStore::with_spill(&dir);
+        let v = store.view(ctx);
+        v.record_score(&cfg, Some(2.0));
+        // A second view triggers no reload (loaded-once), and even the
+        // merge path would keep the live value.
+        let w = store.view(ctx);
+        assert_eq!(w.lookup_score(&cfg), Some(Some(2.0)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flush_fault_degrades_once_and_keeps_serving() {
+        let dir = tmp_dir("flushfault");
+        let store = MemoStore::with_spill(&dir);
+        let v = store.view(5);
+        let cfg = cfg_with_lines(256);
+        v.record_score(&cfg, Some(3.0));
+        let _g = fault::arm("memo.flush@1%1:notfound").unwrap();
+        assert!(!v.flush_or_degrade());
+        assert!(store.is_degraded());
+        assert!(!v.flush_or_degrade(), "still failing, but silent now");
+        assert_eq!(
+            v.lookup_score(&cfg),
+            Some(Some(3.0)),
+            "in-memory verdicts must keep serving after spill degradation"
+        );
+        drop(_g);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_spill_file_is_a_cold_context() {
+        let dir = tmp_dir("corrupt");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(state_file_path(&dir, 4), b"garbage").unwrap();
+        let store = MemoStore::with_spill(&dir);
+        let v = store.view(4);
+        assert_eq!(v.lookup_score(&cfg_with_lines(256)), None);
+        assert!(!store.is_degraded(), "corruption is cold, not degraded");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -58,8 +58,10 @@ use crate::pms::{self, TensorProfile};
 use crate::tensor::{remap, SparseTensor};
 use crate::util::{parallel_indexed, RemapMemo, SpillCol};
 
+pub mod memo;
 pub mod warm;
 
+pub use memo::{MemoStore, MemoView, ScoreCache};
 pub use warm::{tensor_fingerprint, Fingerprint, KeyBuilder, WarmCache};
 
 /// Per-mode precomputation of a CycleSim scoring pass under one
@@ -197,7 +199,9 @@ pub enum Evaluator<'a> {
         tensor: &'a SparseTensor,
         factors: &'a [Mat],
         engine: EngineKind,
-        memo: SimMemo,
+        /// Shared via `Arc` so the DSE server can hand N concurrent
+        /// same-tensor queries one memo ([`EvaluatorBuilder::sim_memo`]).
+        memo: Arc<SimMemo>,
     },
     /// Sharded cycle-level simulation ([`crate::shard`]): every candidate
     /// configuration is evaluated as K per-shard controller instances
@@ -211,18 +215,22 @@ pub enum Evaluator<'a> {
         sweep: &'a crate::shard::ShardedSweep<'a>,
     },
     /// Warm-start wrapper (S28): serves scores and feasibility
-    /// verdicts from a persistent [`WarmCache`] keyed by the full
-    /// scoring context (tensor fingerprint, evaluator kind, engine,
-    /// rank, device, factors) and delegates only cache misses to the
-    /// wrapped evaluator.  Scores are bit-identical to the inner
-    /// evaluator's — per-candidate scores are deterministic pure
-    /// functions of the context, and the cache stores their exact
-    /// `f64` bits — so a warm `explore` returns byte-identical
-    /// results while re-scoring only the delta of unseen candidates.
-    /// Construct with [`EvaluatorBuilder::warm_cache`].
+    /// verdicts from a [`ScoreCache`] keyed by the full scoring
+    /// context (tensor fingerprint, evaluator kind, engine, rank,
+    /// device, factors) and delegates only cache misses to the
+    /// wrapped evaluator.  The cache is either a persistent
+    /// single-context [`WarmCache`] or a per-context view of the
+    /// concurrent cross-query [`MemoStore`] (S34) — scores are
+    /// bit-identical to the inner evaluator's either way:
+    /// per-candidate scores are deterministic pure functions of the
+    /// context, and the cache stores their exact `f64` bits, so a
+    /// warm `explore` returns byte-identical results while re-scoring
+    /// only the delta of unseen candidates.  Construct with
+    /// [`EvaluatorBuilder::warm_cache`] or
+    /// [`EvaluatorBuilder::score_cache`].
     Warm {
         inner: Box<Evaluator<'a>>,
-        cache: Arc<WarmCache>,
+        cache: Arc<dyn ScoreCache>,
     },
 }
 
@@ -255,12 +263,25 @@ impl<'a> Evaluator<'a> {
 /// construct through the builder: it owns the defaults, and the legacy
 /// free-standing constructors ([`Evaluator::cycle_sim`]) are
 /// deprecated shims over it.
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct EvaluatorBuilder {
     engine: EngineKind,
     rank: usize,
     memory_budget: Option<u64>,
-    warm: Option<Arc<WarmCache>>,
+    warm: Option<Arc<dyn ScoreCache>>,
+    sim: Option<Arc<SimMemo>>,
+}
+
+impl std::fmt::Debug for EvaluatorBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EvaluatorBuilder")
+            .field("engine", &self.engine)
+            .field("rank", &self.rank)
+            .field("memory_budget", &self.memory_budget)
+            .field("warm", &self.warm)
+            .field("sim", &self.sim.as_ref().map(|_| "Arc<SimMemo>"))
+            .finish()
+    }
 }
 
 impl Default for EvaluatorBuilder {
@@ -278,6 +299,7 @@ impl EvaluatorBuilder {
             rank: 16,
             memory_budget: None,
             warm: None,
+            sim: None,
         }
     }
 
@@ -288,7 +310,30 @@ impl EvaluatorBuilder {
     /// the right context key ([`warm::KeyBuilder`]) — a key that
     /// omits a score-relevant input will serve stale scores.
     pub fn warm_cache(mut self, cache: Option<Arc<WarmCache>>) -> Self {
+        self.warm = cache.map(|c| c as Arc<dyn ScoreCache>);
+        self
+    }
+
+    /// Like [`Self::warm_cache`], for any [`ScoreCache`] — in
+    /// particular a per-context [`MemoView`] of the concurrent
+    /// cross-query [`MemoStore`] (S34), which is how the DSE server
+    /// shares verdicts between N concurrent explores of one tensor.
+    pub fn score_cache(mut self, cache: Option<Arc<dyn ScoreCache>>) -> Self {
         self.warm = cache;
+        self
+    }
+
+    /// Share a prepared simulation memo across evaluators (S34): the
+    /// per-mode remap + trace prep and the (mode, DRAM, remapper)
+    /// remap-pass cycles are computed once and reused by every
+    /// [`Self::cycle_sim`] evaluator built with the same memo — the
+    /// cross-query analogue of what [`SimMemo`] already does across
+    /// candidates within one query.  The caller must only share a
+    /// memo between evaluators scoring the *same* (tensor, factors,
+    /// engine): the memo caches their derived state.  `None` (the
+    /// default) builds a fresh memo per terminal call.
+    pub fn sim_memo(mut self, memo: Option<Arc<SimMemo>>) -> Self {
+        self.sim = memo;
         self
     }
 
@@ -339,13 +384,18 @@ impl EvaluatorBuilder {
     }
 
     /// Cycle-level simulation of a full Approach-1 sweep over a
-    /// concrete tensor, with a fresh cross-candidate memo.
+    /// concrete tensor, with a fresh cross-candidate memo (or the
+    /// shared one installed by [`Self::sim_memo`]).
     pub fn cycle_sim<'a>(&self, tensor: &'a SparseTensor, factors: &'a [Mat]) -> Evaluator<'a> {
+        let memo = self
+            .sim
+            .clone()
+            .unwrap_or_else(|| Arc::new(SimMemo::with_policy(self.memory_budget, self.engine)));
         self.wrap(Evaluator::CycleSim {
             tensor,
             factors,
             engine: self.engine,
-            memo: SimMemo::with_policy(self.memory_budget, self.engine),
+            memo,
         })
     }
 
@@ -1044,6 +1094,27 @@ impl Grids {
             ..Grids::default()
         }
     }
+
+    /// A tiny grid for smoke tests and the serve protocol's smoke
+    /// preset: two candidates per module, one memory technology.  The
+    /// joint space stays in the dozens of points, so a full explore
+    /// finishes in milliseconds while still exercising every module
+    /// sweep.
+    pub fn smoke() -> Self {
+        Grids {
+            cache_line_bytes: vec![64, 128],
+            cache_num_lines: vec![256, 1024],
+            cache_assoc: vec![1, 2],
+            dma_num: vec![1, 2],
+            dma_buffers: vec![1, 2],
+            dma_buffer_bytes: vec![1024, 4096],
+            mem_techs: vec![MemTech::Ddr4],
+            dram_channels: vec![1, 2],
+            dram_banks: vec![8],
+            dram_row_policy: vec![RowPolicy::Open],
+            remap_max_pointers: vec![1 << 10, 1 << 14],
+        }
+    }
 }
 
 /// A visited point with its device usage attached.
@@ -1097,7 +1168,7 @@ fn sweep_module(
 /// never a torn state — and `--warm-cache` resume replays the scored
 /// verdicts bit-exactly.
 struct Checkpointer<'a> {
-    cache: Option<&'a WarmCache>,
+    cache: Option<&'a dyn ScoreCache>,
     every: usize,
     /// `visited.len()` at the last checkpoint.
     last: usize,

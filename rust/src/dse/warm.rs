@@ -180,9 +180,11 @@ impl KeyBuilder {
     }
 }
 
-/// Cached verdict for one configuration.
+/// Cached verdict for one configuration.  Shared with the cross-query
+/// memo store ([`crate::dse::memo`]), which uses this same entry model
+/// and on-disk format as its spill tier.
 #[derive(Debug, Clone, Copy, PartialEq)]
-enum Entry {
+pub(crate) enum Entry {
     /// Fails `Evaluator::feasible` in this context.
     Infeasible,
     /// Passed feasibility, score not yet computed.
@@ -195,10 +197,12 @@ const TAG_INFEASIBLE: u8 = 0;
 const TAG_FEASIBLE: u8 = 1;
 const TAG_SCORED: u8 = 2;
 
+/// One context's verdicts + frontier — the unit both [`WarmCache`]
+/// and the memo store's spill tier serialize.
 #[derive(Debug, Default)]
-struct State {
-    entries: HashMap<Vec<u8>, Entry>,
-    frontier: Vec<Vec<u8>>,
+pub(crate) struct State {
+    pub(crate) entries: HashMap<Vec<u8>, Entry>,
+    pub(crate) frontier: Vec<Vec<u8>>,
 }
 
 /// Persistent score cache for one (tensor, evaluator, device) context.
@@ -261,7 +265,7 @@ impl WarmCache {
 
     /// Remove `warm_*.tmp` files a crashed or fault-injected flush
     /// left behind (the atomic temp+rename's litter — S31 satellite).
-    fn sweep_stale_tmp(dir: &Path) {
+    pub(crate) fn sweep_stale_tmp(dir: &Path) {
         if let Ok(rd) = std::fs::read_dir(dir) {
             for entry in rd.flatten() {
                 let name = entry.file_name();
@@ -279,7 +283,7 @@ impl WarmCache {
     }
 
     fn file_path(dir: &Path, key: u64) -> PathBuf {
-        dir.join(format!("warm_{key:016x}.bin"))
+        state_file_path(dir, key)
     }
 
     /// Path of this cache's backing file.
@@ -422,87 +426,102 @@ impl WarmCache {
     }
 
     fn serialize(&self) -> Vec<u8> {
-        {
-            let st = self.state.lock().unwrap();
-            let mut w = ByteWriter::new();
-            w.bytes(MAGIC);
-            w.u32(VERSION);
-            w.u64(self.key);
-            w.u64(st.entries.len() as u64);
-            // Deterministic file bytes regardless of HashMap order.
-            let mut keys: Vec<&Vec<u8>> = st.entries.keys().collect();
-            keys.sort();
-            for enc in keys {
-                w.u32(enc.len() as u32);
-                w.bytes(enc);
-                match st.entries[enc] {
-                    Entry::Infeasible => {
-                        w.u8(TAG_INFEASIBLE);
-                        w.u64(0);
-                    }
-                    Entry::Feasible => {
-                        w.u8(TAG_FEASIBLE);
-                        w.u64(0);
-                    }
-                    Entry::Scored(bits) => {
-                        w.u8(TAG_SCORED);
-                        w.u64(bits);
-                    }
-                }
-            }
-            w.u64(st.frontier.len() as u64);
-            for enc in st.frontier.iter() {
-                w.u32(enc.len() as u32);
-                w.bytes(enc);
-            }
-            let sum = crate::util::fnv1a(w.as_slice());
-            w.u64(sum);
-            w.into_bytes()
-        }
+        serialize_state(&self.state.lock().unwrap(), self.key)
     }
 
     fn parse(bytes: &[u8], key: u64) -> Option<State> {
-        if bytes.len() < 8 {
-            return None;
-        }
-        let (body, tail) = bytes.split_at(bytes.len() - 8);
-        let mut sum_r = ByteReader::new(tail);
-        if sum_r.u64()? != crate::util::fnv1a(body) {
-            return None;
-        }
-        let mut r = ByteReader::new(body);
-        if r.take(8)? != MAGIC {
-            return None;
-        }
-        if r.u32()? != VERSION || r.u64()? != key {
-            return None;
-        }
-        let n_entries = r.usize()?;
-        let mut entries = HashMap::with_capacity(n_entries);
-        for _ in 0..n_entries {
-            let len = r.u32()? as usize;
-            let enc = r.take(len)?.to_vec();
-            let tag = r.u8()?;
-            let payload = r.u64()?;
-            let entry = match tag {
-                TAG_INFEASIBLE => Entry::Infeasible,
-                TAG_FEASIBLE => Entry::Feasible,
-                TAG_SCORED => Entry::Scored(payload),
-                _ => return None,
-            };
-            entries.insert(enc, entry);
-        }
-        let n_frontier = r.usize()?;
-        let mut frontier = Vec::with_capacity(n_frontier);
-        for _ in 0..n_frontier {
-            let len = r.u32()? as usize;
-            frontier.push(r.take(len)?.to_vec());
-        }
-        if !r.is_empty() {
-            return None;
-        }
-        Some(State { entries, frontier })
+        parse_state(bytes, key)
     }
+}
+
+/// Backing-file name for a context key — shared by [`WarmCache`] and
+/// the memo store's spill tier, so the two read each other's files.
+pub(crate) fn state_file_path(dir: &Path, key: u64) -> PathBuf {
+    dir.join(format!("warm_{key:016x}.bin"))
+}
+
+/// Serialize one context's [`State`] into the checksummed on-disk
+/// format.  Deterministic: HashMap order never leaks into the bytes.
+pub(crate) fn serialize_state(st: &State, key: u64) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.bytes(MAGIC);
+    w.u32(VERSION);
+    w.u64(key);
+    w.u64(st.entries.len() as u64);
+    // Deterministic file bytes regardless of HashMap order.
+    let mut keys: Vec<&Vec<u8>> = st.entries.keys().collect();
+    keys.sort();
+    for enc in keys {
+        w.u32(enc.len() as u32);
+        w.bytes(enc);
+        match st.entries[enc] {
+            Entry::Infeasible => {
+                w.u8(TAG_INFEASIBLE);
+                w.u64(0);
+            }
+            Entry::Feasible => {
+                w.u8(TAG_FEASIBLE);
+                w.u64(0);
+            }
+            Entry::Scored(bits) => {
+                w.u8(TAG_SCORED);
+                w.u64(bits);
+            }
+        }
+    }
+    w.u64(st.frontier.len() as u64);
+    for enc in st.frontier.iter() {
+        w.u32(enc.len() as u32);
+        w.bytes(enc);
+    }
+    let sum = crate::util::fnv1a(w.as_slice());
+    w.u64(sum);
+    w.into_bytes()
+}
+
+/// Parse [`serialize_state`] output.  `None` on truncation, checksum
+/// mismatch, version skew, or a key that belongs to another context.
+pub(crate) fn parse_state(bytes: &[u8], key: u64) -> Option<State> {
+    if bytes.len() < 8 {
+        return None;
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 8);
+    let mut sum_r = ByteReader::new(tail);
+    if sum_r.u64()? != crate::util::fnv1a(body) {
+        return None;
+    }
+    let mut r = ByteReader::new(body);
+    if r.take(8)? != MAGIC {
+        return None;
+    }
+    if r.u32()? != VERSION || r.u64()? != key {
+        return None;
+    }
+    let n_entries = r.usize()?;
+    let mut entries = HashMap::with_capacity(n_entries);
+    for _ in 0..n_entries {
+        let len = r.u32()? as usize;
+        let enc = r.take(len)?.to_vec();
+        let tag = r.u8()?;
+        let payload = r.u64()?;
+        let entry = match tag {
+            TAG_INFEASIBLE => Entry::Infeasible,
+            TAG_FEASIBLE => Entry::Feasible,
+            TAG_SCORED => Entry::Scored(payload),
+            _ => return None,
+        };
+        entries.insert(enc, entry);
+    }
+    let n_frontier = r.usize()?;
+    let mut frontier = Vec::with_capacity(n_frontier);
+    for _ in 0..n_frontier {
+        let len = r.u32()? as usize;
+        frontier.push(r.take(len)?.to_vec());
+    }
+    if !r.is_empty() {
+        return None;
+    }
+    Some(State { entries, frontier })
 }
 
 #[cfg(test)]

@@ -114,6 +114,27 @@ impl EngineKind {
             }
         }
     }
+
+    /// Stable one-byte wire tag (the serve protocol,
+    /// [`crate::serve::proto`]).  Round-trips through
+    /// [`Self::from_tag`]; values are append-only.
+    pub fn tag(self) -> u8 {
+        match self {
+            EngineKind::Lockstep => 0,
+            EngineKind::Event => 1,
+            EngineKind::Grid => 2,
+        }
+    }
+
+    /// Decode a [`Self::tag`] byte; `None` on an unknown value.
+    pub fn from_tag(tag: u8) -> Option<EngineKind> {
+        match tag {
+            0 => Some(EngineKind::Lockstep),
+            1 => Some(EngineKind::Event),
+            2 => Some(EngineKind::Grid),
+            _ => None,
+        }
+    }
 }
 
 impl FromStr for EngineKind {

@@ -36,6 +36,10 @@
 //! * [`pms`] — analytic Performance Model Simulator. (S10)
 //! * [`dse`] — module-by-module exhaustive design-space search. (S11)
 //! * [`runtime`] — PJRT artifact loading and execution. (S12)
+//! * [`serve`] — persistent multi-tenant DSE service: length-prefixed
+//!   socket protocol, fixed worker pool, and the cross-query memo
+//!   layer ([`dse::MemoStore`]) that lets concurrent explorations of
+//!   the same tensor share classification and simulation work. (S32)
 //! * [`coordinator`] — block batching leader + worker pool. (S13)
 //! * [`shard`] — output-disjoint nnz sharding + the multi-threaded
 //!   [`shard::ParallelBackend`] (one worker and one simulated memory
@@ -62,6 +66,7 @@ pub mod mem;
 pub mod mttkrp;
 pub mod pms;
 pub mod runtime;
+pub mod serve;
 pub mod shard;
 pub mod tensor;
 pub mod testkit;

@@ -16,6 +16,12 @@
 //!   the top-k points (`--top-k`), and the Pareto frontier of cycles
 //!   vs on-chip blocks vs memory-device power.
 //! * `stats`     — Table-2-style characteristics of a tensor.
+//! * `serve`     — persistent multi-tenant DSE service: a socket server
+//!   running explorations on a fixed worker pool behind the
+//!   cross-query memo, so concurrent and repeat queries of the same
+//!   tensor share classification and simulation work.
+//! * `batch`     — pipeline a batch of exploration jobs to a running
+//!   `serve` instance and report results + memo economics.
 //!
 //! Workload selection (all subcommands): `--input file.tns` or
 //! `--synth zipf|uniform|clustered --dims AxBxC --nnz N --seed S`.
@@ -47,6 +53,8 @@ use ptmc::fpga::Device;
 use ptmc::mem::MemTech;
 use ptmc::pms::{self, TensorProfile};
 use ptmc::runtime::Runtime;
+use ptmc::serve::proto::{EvalKind, GridPreset, JobSpec};
+use ptmc::serve::{client, ServeConfig, Server};
 use ptmc::shard::{ParallelBackend, ShardPlan, ShardedSweep};
 use ptmc::tensor::{stats, SparseTensor};
 
@@ -59,8 +67,10 @@ const OPTS: &[&str] = &[
     "cache-lines", "cache-line-bytes", "cache-assoc", "dma-buffers", "dma-num",
     "dma-buffer-bytes", "max-pointers", "memory-tech", "channels", "dram-banks",
     "row-policy", "mem-techs", "artifacts", "memory-budget",
+    "listen", "serve-workers", "tenant-budget", "memo-spill", // serve
+    "addr", "tenant", "repeat", "grid", // batch
 ];
-const FLAGS: &[&str] = &["help", "verbose", "csv"];
+const FLAGS: &[&str] = &["help", "verbose", "csv", "shutdown", "server-stats"];
 
 fn main() -> ExitCode {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -102,7 +112,7 @@ fn usage() {
     println!(
         "ptmc — programmable tensor memory controller (paper reproduction)\n\
          \n\
-         USAGE: ptmc <decompose|simulate|shard|pms|explore|stats> [options]\n\
+         USAGE: ptmc <decompose|simulate|shard|pms|explore|stats|serve|batch> [options]\n\
          \n\
          workload:  --input x.tns | --synth zipf|uniform|clustered\n\
          \x20          --dims 2000x1500x1000 --nnz 50000 --seed 42 --alpha 1.2\n\
@@ -148,7 +158,22 @@ fn usage() {
          \x20          peak RSS — dedup-free streamed synthesis, spilled\n\
          \x20          remap columns, compressed-only traces; results are\n\
          \x20          bit-identical; peak RSS is reported and enforced\n\
-         \x20          at exit)\n"
+         \x20          at exit)\n\
+         serve:     --listen 127.0.0.1:7421 --serve-workers 4\n\
+         \x20          --tenant-budget N (0 = unmetered) --memo-spill DIR\n\
+         \x20          --device u250  (config: [serve] listen / workers /\n\
+         \x20          tenant_budget / memo_spill.  Jobs from all clients\n\
+         \x20          run on one worker pool and score through the shared\n\
+         \x20          cross-query memo; repeat queries of the same tensor\n\
+         \x20          skip simulation entirely.  Shut down via\n\
+         \x20          `batch --shutdown`)\n\
+         batch:     --addr 127.0.0.1:7421 --tenant NAME --repeat N\n\
+         \x20          (submit the workload N times; ids 1..N) plus the\n\
+         \x20          workload/dse knobs: --synth/--dims/--nnz/--seed,\n\
+         \x20          --rank, --evaluator pms|sim, --engine, --search,\n\
+         \x20          --top-k, --grid default|smoke.  --server-stats\n\
+         \x20          prints the server's lifetime counters;\n\
+         \x20          --shutdown drains and stops the server\n"
     );
 }
 
@@ -170,6 +195,8 @@ fn run(raw: &[String]) -> Result<(), Box<dyn std::error::Error>> {
         "pms" => cmd_pms(&args),
         "explore" => cmd_explore(&args),
         "stats" => cmd_stats(&args),
+        "serve" => cmd_serve(&args),
+        "batch" => cmd_batch(&args),
         other => Err(Box::new(CliError(format!(
             "unknown subcommand {other:?} (try --help)"
         )))),
@@ -771,6 +798,214 @@ fn cmd_stats(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
             "  mode {m}: {} used coords, mean fiber {:.2}, max fiber {}, skew {:.3}",
             f.used_coords, f.mean_len, f.max_len, f.skew
         );
+    }
+    Ok(())
+}
+
+/// `ptmc serve`: run the persistent DSE service until a client sends
+/// shutdown.  CLI flags override the config file's `[serve]` section.
+fn cmd_serve(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let file_cfg = match args.get("config") {
+        Some(path) => Some(Config::load(Path::new(path))?),
+        None => None,
+    };
+    let listen_default = file_cfg
+        .as_ref()
+        .map(|c| c.str_or("serve", "listen", "127.0.0.1:7421").to_string())
+        .unwrap_or_else(|| "127.0.0.1:7421".to_string());
+    let listen = args.str_or("listen", &listen_default);
+    let workers_default = file_cfg
+        .as_ref()
+        .map_or(4, |c| c.usize_or("serve", "workers", 4));
+    let workers = args.usize_or("serve-workers", workers_default)?.max(1);
+    let budget_default = file_cfg
+        .as_ref()
+        .map_or(0, |c| c.usize_or("serve", "tenant_budget", 0));
+    let tenant_budget = args.usize_or("tenant-budget", budget_default)?;
+    let spill: Option<String> = args
+        .get("memo-spill")
+        .map(|s| s.to_string())
+        .or_else(|| {
+            file_cfg
+                .as_ref()
+                .and_then(|c| c.get("serve", "memo_spill"))
+                .and_then(|v| v.as_str())
+                .map(|s| s.to_string())
+        });
+    let cfg = ServeConfig {
+        workers,
+        tenant_budget: if tenant_budget > 0 {
+            Some(tenant_budget as u64)
+        } else {
+            None
+        },
+        spill: spill.map(std::path::PathBuf::from),
+        device: device(args)?,
+    };
+    if let Some(dir) = &cfg.spill {
+        println!("serve: memo spill tier at {}", dir.display());
+    }
+    let server = Server::bind(listen, cfg)?;
+    server.run()?;
+    Ok(())
+}
+
+/// The job template `ptmc batch` submits: the synthetic-workload and
+/// DSE knobs of `explore`, minus anything that is a server-side
+/// resource decision.
+fn batch_spec(args: &Args) -> Result<JobSpec, Box<dyn std::error::Error>> {
+    if args.get("input").is_some() {
+        return Err(Box::new(CliError(
+            "batch serves synthetic workloads only (the server regenerates the tensor \
+             from --synth/--dims/--nnz/--seed; --input is not supported)"
+            .to_string(),
+        )));
+    }
+    let dims = workload::parse_dims(args.str_or("dims", "2000x1500x1000"))?;
+    let nnz = args.usize_or("nnz", 50_000)?;
+    let seed = args.u64_or("seed", 42)?;
+    let alpha = args.f64_or("alpha", 1.2)?;
+    // Mirrors `workload::tensor_from_args` exactly, so a served job
+    // and a local `explore` of the same flags describe one tensor.
+    let profile = match args.str_or("synth", "zipf") {
+        "uniform" => ptmc::tensor::synth::Profile::Uniform,
+        "zipf" => ptmc::tensor::synth::Profile::Zipf {
+            alpha_milli: (alpha * 1000.0) as u32,
+        },
+        "clustered" => ptmc::tensor::synth::Profile::Clustered {
+            block: 64,
+            blocks: (nnz / 256).max(1),
+        },
+        other => return Err(Box::new(CliError(format!("unknown --synth {other:?}")))),
+    };
+    let rank = args.usize_or("rank", 16)?;
+    let evaluator = match args.str_or("evaluator", "pms") {
+        "pms" => EvalKind::Pms,
+        "sim" => EvalKind::Sim,
+        other => {
+            return Err(Box::new(CliError(format!(
+                "unknown --evaluator {other:?} for batch (pms|sim)"
+            ))))
+        }
+    };
+    let top_k = args.usize_or("top-k", 1)?.max(1);
+    let strategy = match args.str_or("search", "coordinate") {
+        "coordinate" => SearchStrategy::Coordinate,
+        "joint" => SearchStrategy::Joint,
+        "beam" => SearchStrategy::Beam {
+            width: top_k.max(2),
+        },
+        other => {
+            return Err(Box::new(CliError(format!(
+                "unknown --search {other:?} (coordinate|joint|beam)"
+            ))))
+        }
+    };
+    let grid = match args.str_or("grid", "default") {
+        "default" => GridPreset::Default,
+        "smoke" => GridPreset::Smoke,
+        other => {
+            return Err(Box::new(CliError(format!(
+                "unknown --grid {other:?} (default|smoke)"
+            ))))
+        }
+    };
+    Ok(JobSpec {
+        id: 0, // assigned per submission
+        tenant: args.str_or("tenant", "default").to_string(),
+        dims,
+        nnz,
+        seed,
+        profile,
+        rank,
+        evaluator,
+        engine: engine_kind(args, EngineKind::Event)?,
+        strategy,
+        top_k,
+        grid,
+    })
+}
+
+/// `ptmc batch`: pipeline `--repeat` copies of the job to a running
+/// server, print results and memo economics, then optionally fetch
+/// stats and/or shut the server down.
+fn cmd_batch(args: &Args) -> Result<(), Box<dyn std::error::Error>> {
+    let addr = args.str_or("addr", "127.0.0.1:7421").to_string();
+    if args.flag("server-stats") {
+        let st = client::stats(&addr)?;
+        println!(
+            "server stats: jobs done={} failed={} | memo entries={} hits={} misses={} | \
+             {} workers",
+            st.jobs_done, st.jobs_failed, st.memo_entries, st.memo_hits, st.memo_misses,
+            st.workers
+        );
+        if args.flag("shutdown") {
+            client::shutdown(&addr)?;
+            println!("server shut down");
+        }
+        return Ok(());
+    }
+    let template = batch_spec(args)?;
+    let repeat = args.usize_or("repeat", 1)?.max(1);
+    let jobs: Vec<JobSpec> = (0..repeat)
+        .map(|i| JobSpec {
+            id: i as u64 + 1,
+            ..template.clone()
+        })
+        .collect();
+    println!(
+        "batch: {} job(s) to {} (tenant {:?}, dims {:?}, nnz {}, rank {})",
+        jobs.len(),
+        addr,
+        template.tenant,
+        template.dims,
+        template.nnz,
+        template.rank
+    );
+    let report = client::submit_batch(&addr, &jobs)?;
+    for r in &report.results {
+        println!(
+            "job {}: {:.3e} cycles | pareto {} points | {} visited, {} rejected | \
+             memo hits={} misses={}",
+            r.id,
+            r.best.cycles(),
+            r.pareto.len(),
+            r.visited,
+            r.rejected,
+            r.memo_hits,
+            r.memo_misses
+        );
+    }
+    for e in &report.errors {
+        eprintln!("job {}: {:?}: {}", e.id, e.class, e.msg);
+    }
+    let (hits, misses) = (report.memo_hits(), report.memo_misses());
+    let total = hits + misses;
+    println!(
+        "batch memo: hits={} misses={} ({:.1}% hit rate)",
+        hits,
+        misses,
+        if total > 0 {
+            hits as f64 * 100.0 / total as f64
+        } else {
+            0.0
+        }
+    );
+    if args.flag("shutdown") {
+        client::shutdown(&addr)?;
+        println!("server shut down");
+    }
+    if let Some(class) = report.first_error_class() {
+        return Err(Box::new(
+            ptmc::error::Error::msg(format!(
+                "{} of {} jobs failed (first: job {}: {})",
+                report.errors.len(),
+                jobs.len(),
+                report.errors[0].id,
+                report.errors[0].msg
+            ))
+            .classify(class),
+        ));
     }
     Ok(())
 }

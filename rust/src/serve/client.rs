@@ -1,0 +1,129 @@
+//! Batch client of the DSE service: pipeline a batch of jobs over one
+//! connection, collect the responses, and aggregate the memo
+//! economics (CLI `ptmc batch`).
+//!
+//! The client writes every Submit frame up front, then reads exactly
+//! one response per job.  Responses arrive in *completion* order and
+//! are matched by [`JobSpec::id`]; pipelining keeps the server's whole
+//! worker pool busy from a single connection.
+
+use std::io::{self, Write};
+use std::net::TcpStream;
+
+use crate::error::{Error, ErrorClass};
+use crate::util::{read_frame, write_frame};
+
+use super::proto::{self, JobResult, JobSpec, Request, Response, ServerStats};
+
+/// One failed job from a batch.
+#[derive(Debug, Clone)]
+pub struct BatchError {
+    /// The submitting [`JobSpec::id`] (0 for connection-level errors).
+    pub id: u64,
+    pub class: ErrorClass,
+    pub msg: String,
+}
+
+/// Everything a batch produced, results and errors each sorted by
+/// job id.
+#[derive(Debug, Clone, Default)]
+pub struct BatchReport {
+    pub results: Vec<JobResult>,
+    pub errors: Vec<BatchError>,
+}
+
+impl BatchReport {
+    /// Cross-query memo hits summed over the batch's results.
+    pub fn memo_hits(&self) -> u64 {
+        self.results.iter().map(|r| r.memo_hits).sum()
+    }
+
+    /// Cross-query memo misses summed over the batch's results.
+    pub fn memo_misses(&self) -> u64 {
+        self.results.iter().map(|r| r.memo_misses).sum()
+    }
+
+    /// The class of the first (lowest-id) error, if any — what a CLI
+    /// frontend should exit with, so e.g. a tenant-budget rejection
+    /// surfaces as exit code 5.
+    pub fn first_error_class(&self) -> Option<ErrorClass> {
+        self.errors.first().map(|e| e.class)
+    }
+}
+
+fn ioerr(what: &str, e: &io::Error) -> Error {
+    Error::msg(format!("{what}: {e}")).classify(ErrorClass::Io)
+}
+
+fn connect(addr: &str) -> Result<TcpStream, Error> {
+    TcpStream::connect(addr).map_err(|e| ioerr(&format!("connect {addr}"), &e))
+}
+
+/// Read one response frame; a clean EOF is an IO error here (the
+/// caller always expects a response).
+fn read_response(stream: &mut TcpStream) -> Result<Response, Error> {
+    match read_frame(stream, proto::MAX_FRAME) {
+        Ok(Some(body)) => Response::decode(&body),
+        Ok(None) => Err(Error::msg("server closed the connection mid-conversation")
+            .classify(ErrorClass::Io)),
+        Err(e) => Err(ioerr("read response", &e)),
+    }
+}
+
+fn write_request(stream: &mut TcpStream, req: &Request) -> Result<(), Error> {
+    write_frame(stream, &req.encode()).map_err(|e| ioerr("write request", &e))?;
+    stream.flush().map_err(|e| ioerr("flush request", &e))
+}
+
+/// Submit `jobs` over one pipelined connection and collect one
+/// response per job.  Connection-level failures (transport errors, a
+/// server that closes early) are `Err`; per-job rejections land in
+/// [`BatchReport::errors`].
+pub fn submit_batch(addr: &str, jobs: &[JobSpec]) -> Result<BatchReport, Error> {
+    let mut stream = connect(addr)?;
+    for job in jobs {
+        write_request(&mut stream, &Request::Submit(job.clone()))?;
+    }
+    let mut report = BatchReport::default();
+    for _ in 0..jobs.len() {
+        match read_response(&mut stream)? {
+            Response::Result(res) => report.results.push(res),
+            Response::Error { id, class, msg } => {
+                report.errors.push(BatchError { id, class, msg })
+            }
+            other => {
+                return Err(Error::msg(format!(
+                    "unexpected response to a job submission: {other:?}"
+                ))
+                .classify(ErrorClass::Parse))
+            }
+        }
+    }
+    report.results.sort_by_key(|r| r.id);
+    report.errors.sort_by_key(|e| e.id);
+    Ok(report)
+}
+
+/// Fetch the server's lifetime counters.
+pub fn stats(addr: &str) -> Result<ServerStats, Error> {
+    let mut stream = connect(addr)?;
+    write_request(&mut stream, &Request::Stats)?;
+    match read_response(&mut stream)? {
+        Response::Stats(st) => Ok(st),
+        other => Err(Error::msg(format!("unexpected response to Stats: {other:?}"))
+            .classify(ErrorClass::Parse)),
+    }
+}
+
+/// Ask the server to drain and exit; returns once it acknowledges.
+pub fn shutdown(addr: &str) -> Result<(), Error> {
+    let mut stream = connect(addr)?;
+    write_request(&mut stream, &Request::Shutdown)?;
+    match read_response(&mut stream)? {
+        Response::Bye => Ok(()),
+        other => Err(Error::msg(format!(
+            "unexpected response to Shutdown: {other:?}"
+        ))
+        .classify(ErrorClass::Parse)),
+    }
+}

@@ -1,0 +1,562 @@
+//! DSE-as-a-service (S32): a persistent, multi-tenant exploration
+//! server and its batch client.
+//!
+//! The server ([`Server`]) listens on a TCP socket speaking the
+//! length-prefixed frame protocol of [`proto`] (zero dependencies —
+//! `std::net` plus the crate's own codec).  Each connection gets a
+//! lightweight reader thread; the actual explorations run on a fixed
+//! worker pool ([`crate::util::Pool`]), so a slow client cannot starve
+//! other tenants and the host's cores bound the simulation load.
+//!
+//! The headline optimization is the **cross-query memo**
+//! ([`crate::dse::MemoStore`]): every job's evaluator is wrapped in a
+//! [`crate::dse::MemoView`] keyed by the full scoring context (tensor
+//! fingerprint, evaluator, engine, rank, device, factors — the same
+//! [`crate::dse::KeyBuilder`] identity the CLI warm cache uses), so N
+//! concurrent or consecutive explorations of the same tensor share
+//! classification verdicts and simulation scores.  A repeat submission
+//! of an identical job performs **zero** new simulations — every
+//! candidate is a memo hit — and returns a Pareto frontier
+//! byte-identical to the cold run's.  Same-tensor jobs additionally
+//! share one in-memory tensor instance and one [`crate::dse::SimMemo`]
+//! (trace prep + remap-pass simulation), the intra-query sharing PR 5
+//! introduced, now lifted across queries.
+//!
+//! Tenancy: each job names a tenant; `--tenant-budget N` bounds the
+//! jobs any single tenant may submit over the server's lifetime.  A
+//! tenant over budget gets a typed [`ErrorClass::Budget`] response
+//! (exit code 5 at the batch client) and the job is never queued.
+//!
+//! Fault handling (S29): the accept loop and the per-connection frame
+//! reader sit behind the `serve.accept` / `serve.frame` failpoints; an
+//! injected fault (or a real dropped connection) closes that one
+//! connection without poisoning the job queue or the memo — in-flight
+//! jobs complete and their verdicts stay shared.  Memo spills run
+//! behind `memo.flush` and degrade to in-memory on persistent failure.
+
+use std::collections::HashMap;
+use std::io::{self, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::controller::ControllerConfig;
+use crate::cpd::linalg::Mat;
+use crate::dse::{
+    explore_with, tensor_fingerprint, Exploration, Grids, KeyBuilder, MemoStore, Point,
+    ScoreCache, SearchOptions, SimMemo,
+};
+use crate::error::{Error, ErrorClass};
+use crate::fpga::{self, Device};
+use crate::pms::TensorProfile;
+use crate::tensor::synth::{generate, SynthConfig};
+use crate::tensor::SparseTensor;
+use crate::util::{
+    effective_parallelism, fault, read_frame, set_parallelism_cap, write_frame, ByteWriter, Pool,
+};
+
+pub mod client;
+pub mod proto;
+
+use proto::{EvalKind, GridPreset, JobResult, JobSpec, Request, Response, ServerStats, WirePoint};
+
+/// Hard sanity bound on a served synthetic tensor — a usage error, not
+/// a crash, for a client asking the server to materialize billions of
+/// non-zeros.
+const MAX_NNZ: usize = 10_000_000;
+
+/// Server-side configuration (CLI `ptmc serve`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads in the job pool (>= 1).
+    pub workers: usize,
+    /// Max jobs one tenant may submit over the server's lifetime
+    /// (`None` = unmetered).
+    pub tenant_budget: Option<u64>,
+    /// Memo spill directory — the warm-cache on-disk format, so a
+    /// served context survives restarts and interoperates with CLI
+    /// `explore --warm-cache` runs.  `None` keeps the memo in memory.
+    pub spill: Option<PathBuf>,
+    /// Device every job is explored against.
+    pub device: Device,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 4,
+            tenant_budget: None,
+            spill: None,
+            device: Device::alveo_u250(),
+        }
+    }
+}
+
+/// One workload resident in the server: the regenerated tensor, its
+/// factor matrices, the measured PMS profile, its fingerprint, and the
+/// shared per-tensor [`SimMemo`] (trace prep + remap-pass memo) that
+/// concurrent same-tensor jobs score through.
+struct TensorEntry {
+    tensor: SparseTensor,
+    factors: Vec<Mat>,
+    profile: TensorProfile,
+    fp: u64,
+    sim: Arc<SimMemo>,
+}
+
+/// Shared server state: the memo store, the job pool, the tensor
+/// registry, and tenant accounting.
+struct ServerState {
+    cfg: ServeConfig,
+    addr: SocketAddr,
+    store: Arc<MemoStore>,
+    pool: Pool,
+    tensors: Mutex<HashMap<Vec<u8>, Arc<TensorEntry>>>,
+    /// Jobs accepted per tenant (budget accounting).
+    tenants: Mutex<HashMap<String, u64>>,
+    jobs_done: AtomicU64,
+    jobs_failed: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// The persistent DSE server.  `bind` then `run`; `run` returns after
+/// a client sends [`Request::Shutdown`] and the queue has drained.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+/// The identity of a served workload *before* generation: everything
+/// [`TensorEntry`] is derived from.  (The memo context additionally
+/// hashes the generated tensor's fingerprint, evaluator, engine, and
+/// device through [`KeyBuilder`].)
+fn tensor_key(spec: &JobSpec) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.usize(spec.dims.len());
+    for &d in &spec.dims {
+        w.usize(d);
+    }
+    w.usize(spec.nnz);
+    w.u64(spec.seed);
+    match spec.profile {
+        crate::tensor::synth::Profile::Uniform => w.u8(0),
+        crate::tensor::synth::Profile::Zipf { alpha_milli } => {
+            w.u8(1);
+            w.u32(alpha_milli);
+        }
+        crate::tensor::synth::Profile::Clustered { block, blocks } => {
+            w.u8(2);
+            w.usize(block);
+            w.usize(blocks);
+        }
+    }
+    w.usize(spec.rank);
+    w.into_bytes()
+}
+
+/// Write one response frame under the connection's write lock (frames
+/// from concurrently completing jobs must not interleave).
+fn send(writer: &Mutex<TcpStream>, resp: &Response) -> io::Result<()> {
+    let body = resp.encode();
+    let mut s = writer.lock().unwrap();
+    write_frame(&mut *s, &body)?;
+    s.flush()
+}
+
+fn uerr(msg: impl std::fmt::Display) -> Error {
+    Error::msg(msg).classify(ErrorClass::Usage)
+}
+
+impl Server {
+    /// Bind the service.  `addr` is a `host:port` string; port 0 picks
+    /// a free port (read it back via [`Server::local_addr`]).
+    ///
+    /// Binding also installs the process-wide parallelism cap
+    /// ([`set_parallelism_cap`]): each of the pool's `workers` jobs
+    /// fans its candidate batches out over at most
+    /// `host_threads / workers` threads, so a full pool saturates the
+    /// host without oversubscribing it.
+    pub fn bind(addr: &str, cfg: ServeConfig) -> io::Result<Server> {
+        let workers = cfg.workers.max(1);
+        let host = std::thread::available_parallelism().map_or(1, |n| n.get());
+        set_parallelism_cap(Some((host / workers).max(1)));
+        let store = match &cfg.spill {
+            Some(dir) => MemoStore::with_spill(dir.clone()),
+            None => MemoStore::new(),
+        };
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let state = Arc::new(ServerState {
+            pool: Pool::new(workers),
+            cfg: ServeConfig { workers, ..cfg },
+            addr: local,
+            store,
+            tensors: Mutex::new(HashMap::new()),
+            tenants: Mutex::new(HashMap::new()),
+            jobs_done: AtomicU64::new(0),
+            jobs_failed: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        });
+        Ok(Server { listener, state })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Accept connections until shutdown, then drain the job queue.
+    ///
+    /// An injected `serve.accept` fault (or a transient accept error)
+    /// is logged and the loop continues — a flaky peer must not take
+    /// the service down.
+    pub fn run(self) -> io::Result<()> {
+        println!(
+            "serve: listening on {} ({} workers, {} sim threads each{})",
+            self.state.addr,
+            self.state.cfg.workers,
+            effective_parallelism(),
+            match self.state.cfg.tenant_budget {
+                Some(b) => format!(", tenant budget {b} jobs"),
+                None => String::new(),
+            }
+        );
+        loop {
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            if let Err(e) = fault::check_io(fault::SERVE_ACCEPT) {
+                eprintln!("warning: serve: accept failed: {e}");
+                continue;
+            }
+            let stream = match self.listener.accept() {
+                Ok((s, _peer)) => s,
+                Err(e) => {
+                    eprintln!("warning: serve: accept failed: {e}");
+                    continue;
+                }
+            };
+            if self.state.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let state = Arc::clone(&self.state);
+            let spawned = std::thread::Builder::new()
+                .name("ptmc-serve-conn".to_string())
+                .spawn(move || handle_conn(stream, state));
+            if let Err(e) = spawned {
+                eprintln!("warning: serve: could not spawn connection handler: {e}");
+            }
+        }
+        // Drain: every queued job completes (and its verdicts land in
+        // the memo/spill) before the process exits.
+        self.state.pool.wait_idle();
+        println!(
+            "serve: shut down ({} jobs done, {} failed, memo {} entries, hits={} misses={})",
+            self.state.jobs_done.load(Ordering::Relaxed),
+            self.state.jobs_failed.load(Ordering::Relaxed),
+            self.state.store.entries(),
+            self.state.store.hits(),
+            self.state.store.misses(),
+        );
+        Ok(())
+    }
+}
+
+/// Map a framing failure to the protocol's typed error taxonomy:
+/// desynced or oversized frames are parse errors, genuine transport
+/// failures are IO.
+fn frame_error_class(e: &io::Error) -> ErrorClass {
+    match e.kind() {
+        io::ErrorKind::InvalidData | io::ErrorKind::UnexpectedEof => ErrorClass::Parse,
+        _ => ErrorClass::Io,
+    }
+}
+
+/// One connection: read frames, answer Stats/Shutdown inline, queue
+/// Submits on the pool.  Responses to queued jobs are written by the
+/// pool workers through the shared write half, in completion order —
+/// clients match on [`JobSpec::id`].
+fn handle_conn(stream: TcpStream, state: Arc<ServerState>) {
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(e) => {
+            eprintln!("warning: serve: connection setup failed: {e}");
+            return;
+        }
+    };
+    let mut reader = io::BufReader::new(stream);
+    loop {
+        // An injected frame fault models the peer dropping mid-stream:
+        // close this connection only.  Jobs already queued keep
+        // running and their verdicts stay in the shared memo.
+        if let Err(e) = fault::check_io(fault::SERVE_FRAME) {
+            eprintln!("warning: serve: connection dropped: {e}");
+            return;
+        }
+        let body = match read_frame(&mut reader, proto::MAX_FRAME) {
+            Ok(Some(b)) => b,
+            Ok(None) => return, // clean EOF
+            Err(e) => {
+                // The stream is desynced or dead; best-effort typed
+                // error, then close.
+                let _ = send(
+                    &writer,
+                    &Response::Error {
+                        id: 0,
+                        class: frame_error_class(&e),
+                        msg: format!("frame error: {e}"),
+                    },
+                );
+                return;
+            }
+        };
+        let req = match Request::decode(&body) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = send(
+                    &writer,
+                    &Response::Error {
+                        id: 0,
+                        class: e.class(),
+                        msg: e.to_string(),
+                    },
+                );
+                return;
+            }
+        };
+        match req {
+            Request::Stats => {
+                let st = ServerStats {
+                    jobs_done: state.jobs_done.load(Ordering::Relaxed),
+                    jobs_failed: state.jobs_failed.load(Ordering::Relaxed),
+                    memo_entries: state.store.entries() as u64,
+                    memo_hits: state.store.hits(),
+                    memo_misses: state.store.misses(),
+                    workers: state.cfg.workers as u64,
+                };
+                if send(&writer, &Response::Stats(st)).is_err() {
+                    return;
+                }
+            }
+            Request::Shutdown => {
+                state.shutdown.store(true, Ordering::SeqCst);
+                // Finish everything in flight before acknowledging, so
+                // Bye means "quiesced".
+                state.pool.wait_idle();
+                let _ = send(&writer, &Response::Bye);
+                // Wake the accept loop so it observes the flag.
+                let _ = TcpStream::connect(state.addr);
+                return;
+            }
+            Request::Submit(spec) => {
+                if let Err(e) = admit(&state, &spec) {
+                    state.jobs_failed.fetch_add(1, Ordering::Relaxed);
+                    let resp = Response::Error {
+                        id: spec.id,
+                        class: e.class(),
+                        msg: e.to_string(),
+                    };
+                    if send(&writer, &resp).is_err() {
+                        return;
+                    }
+                    continue;
+                }
+                let st = Arc::clone(&state);
+                let wr = Arc::clone(&writer);
+                if !state.pool.spawn(move || run_job(st, wr, spec)) {
+                    let _ = send(
+                        &writer,
+                        &Response::Error {
+                            id: 0,
+                            class: ErrorClass::Io,
+                            msg: "server is shutting down".to_string(),
+                        },
+                    );
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Admission control: spec sanity plus the tenant budget.  Runs on the
+/// connection thread so rejections answer immediately and never
+/// consume a pool slot.
+fn admit(state: &ServerState, spec: &JobSpec) -> Result<(), Error> {
+    if spec.tenant.is_empty() {
+        return Err(uerr("job names no tenant"));
+    }
+    if spec.dims.iter().any(|&d| d < 2) {
+        return Err(uerr(format!("implausible mode lengths {:?}", spec.dims)));
+    }
+    if spec.nnz == 0 || spec.nnz > MAX_NNZ {
+        return Err(uerr(format!("nnz {} out of range 1..={MAX_NNZ}", spec.nnz)));
+    }
+    // The generator de-duplicates draws; a target above half the cell
+    // count would thrash (or never terminate at == cell count).
+    let cells = spec.dims.iter().try_fold(1usize, |a, &d| a.checked_mul(d));
+    if let Some(cells) = cells {
+        if spec.nnz > cells / 2 {
+            return Err(uerr(format!(
+                "nnz {} exceeds half the {} cells of {:?}",
+                spec.nnz, cells, spec.dims
+            )));
+        }
+    }
+    if spec.rank == 0 || spec.rank > 512 {
+        return Err(uerr(format!("rank {} out of range 1..=512", spec.rank)));
+    }
+    if let Some(budget) = state.cfg.tenant_budget {
+        let mut tenants = state.tenants.lock().unwrap();
+        let used = tenants.entry(spec.tenant.clone()).or_insert(0);
+        if *used >= budget {
+            return Err(Error::msg(format!(
+                "tenant {:?} exhausted its budget of {budget} jobs",
+                spec.tenant
+            ))
+            .classify(ErrorClass::Budget));
+        }
+        *used += 1;
+    }
+    Ok(())
+}
+
+/// Get-or-build the resident workload for `spec`.  Built outside the
+/// registry lock so a large cold tensor doesn't stall other tenants;
+/// on a concurrent first-submission race the first insert wins and the
+/// duplicate build is dropped.
+fn tensor_entry(state: &ServerState, spec: &JobSpec) -> Arc<TensorEntry> {
+    let key = tensor_key(spec);
+    if let Some(e) = state.tensors.lock().unwrap().get(&key) {
+        return Arc::clone(e);
+    }
+    let cfg = SynthConfig {
+        dims: spec.dims.clone(),
+        nnz: spec.nnz,
+        profile: spec.profile,
+        seed: spec.seed,
+    };
+    let tensor = generate(&cfg);
+    let factors: Vec<Mat> = tensor
+        .dims()
+        .iter()
+        .map(|&d| Mat::randn(d, spec.rank, 3))
+        .collect();
+    let entry = Arc::new(TensorEntry {
+        fp: tensor_fingerprint(&tensor),
+        profile: TensorProfile::measure(&tensor),
+        factors,
+        tensor,
+        sim: Arc::new(SimMemo::default()),
+    });
+    let mut reg = state.tensors.lock().unwrap();
+    Arc::clone(reg.entry(key).or_insert(entry))
+}
+
+fn wire_point(p: &Point) -> WirePoint {
+    WirePoint {
+        cfg_enc: crate::util::encode_config(&p.cfg),
+        cycles_bits: p.cycles.to_bits(),
+        bram36: p.bram36 as u64,
+        uram: p.uram as u64,
+    }
+}
+
+/// Execute one admitted job to an [`Exploration`], scoring through a
+/// fresh [`crate::dse::MemoView`] of the job's context.
+fn execute(state: &ServerState, spec: &JobSpec) -> Result<(Exploration, u64, u64), Error> {
+    let entry = tensor_entry(state, spec);
+    let dev = state.cfg.device;
+    // The same identity the CLI warm cache uses (workers = 0: the
+    // service's pool width is a resource decision, not part of the
+    // scoring context), so a served job and an `explore --warm-cache`
+    // run of the same workload share one spill file.
+    let ctx = KeyBuilder::new(entry.fp)
+        .evaluator(spec.evaluator.label())
+        .engine(spec.engine)
+        .rank(spec.rank)
+        .workers(0)
+        .device(&dev)
+        .factors(&entry.factors)
+        .finish();
+    let view = state.store.view(ctx);
+    let base = ControllerConfig::default_for(entry.tensor.record_bytes());
+    let est = fpga::estimate(&base, &dev);
+    if !est.fits || !dev.supports(&base.mem) {
+        return Err(uerr(format!(
+            "base configuration does not fit {} ({} BRAM36 + {} URAM)",
+            dev.name, est.bram36_used, est.uram_used
+        )));
+    }
+    let builder = crate::dse::EvaluatorBuilder::new()
+        .engine(spec.engine)
+        .rank(spec.rank)
+        .score_cache(Some(Arc::clone(&view) as Arc<dyn ScoreCache>))
+        .sim_memo(Some(Arc::clone(&entry.sim)));
+    let eval = match spec.evaluator {
+        EvalKind::Pms => builder.pms(&entry.profile),
+        EvalKind::Sim => builder.cycle_sim(&entry.tensor, &entry.factors),
+    };
+    let grids = match spec.grid {
+        GridPreset::Default => Grids::default(),
+        GridPreset::Smoke => Grids::smoke(),
+    };
+    let opts = SearchOptions {
+        strategy: spec.strategy,
+        top_k: spec.top_k.max(1),
+        // Never resume: every response must be byte-identical to a
+        // solo cold run — the memo accelerates, it must not steer.
+        resume: false,
+        checkpoint_every: 0,
+    };
+    let ex = explore_with(&base, &grids, &dev, &eval, &opts);
+    Ok((ex, view.hits(), view.misses()))
+}
+
+/// Pool-side job body: run the exploration, then write the response
+/// through the connection's shared write half.  A panic inside the
+/// search becomes a typed Internal error response — never a dead
+/// worker or a lost reply.
+fn run_job(state: Arc<ServerState>, writer: Arc<Mutex<TcpStream>>, spec: JobSpec) {
+    let outcome = catch_unwind(AssertUnwindSafe(|| execute(&state, &spec)));
+    let resp = match outcome {
+        Ok(Ok((ex, hits, misses))) => {
+            state.jobs_done.fetch_add(1, Ordering::Relaxed);
+            Response::Result(JobResult {
+                id: spec.id,
+                best: wire_point(&ex.best),
+                pareto: ex.pareto.iter().map(wire_point).collect(),
+                visited: ex.visited.len() as u64,
+                rejected: ex.rejected as u64,
+                memo_hits: hits,
+                memo_misses: misses,
+            })
+        }
+        Ok(Err(e)) => {
+            state.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            Response::Error {
+                id: spec.id,
+                class: e.class(),
+                msg: e.to_string(),
+            }
+        }
+        Err(panic) => {
+            state.jobs_failed.fetch_add(1, Ordering::Relaxed);
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "job panicked".to_string());
+            Response::Error {
+                id: spec.id,
+                class: ErrorClass::Internal,
+                msg: format!("job panicked: {msg}"),
+            }
+        }
+    };
+    // A dead connection is the client's problem; the verdicts this job
+    // computed are already in the memo for the next query.
+    let _ = send(&writer, &resp);
+}

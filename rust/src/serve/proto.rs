@@ -1,0 +1,686 @@
+//! Wire protocol of the DSE service (S32): length-prefixed frames
+//! ([`crate::util::write_frame`] / [`crate::util::read_frame`]) whose
+//! bodies are hand-rolled little-endian records over
+//! [`ByteWriter`] / [`ByteReader`] — the same zero-dependency codec
+//! the warm cache and config files use.
+//!
+//! Every frame body opens with a 4-byte magic (`b"PTSV"`) and a
+//! one-byte message tag, so a client that connects to the wrong port
+//! (or a stream that desyncs) fails with a typed [`ErrorClass::Parse`]
+//! error instead of misinterpreting bytes.  Tags are append-only;
+//! unknown tags are parse errors, never panics.
+//!
+//! Requests: [`Request::Submit`] (one [`JobSpec`]), [`Request::Stats`],
+//! [`Request::Shutdown`].  Responses: [`Response::Result`] (one
+//! [`JobResult`]), [`Response::Error`], [`Response::Stats`],
+//! [`Response::Bye`].  Submitted jobs are answered in submission order
+//! per connection, matched by the client-chosen `id`.
+
+use crate::dse::SearchStrategy;
+use crate::engine::EngineKind;
+use crate::error::{Error, ErrorClass};
+use crate::tensor::synth::Profile;
+use crate::util::{ByteReader, ByteWriter};
+
+/// Magic prefix of every frame body: `b"PTSV"` as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"PTSV");
+
+/// Upper bound on a frame body accepted by either side.  Generous for
+/// real traffic (a 10k-point frontier is ~1 MiB) while refusing a
+/// hostile or desynced length prefix before allocating.
+pub const MAX_FRAME: usize = 64 << 20;
+
+const REQ_SUBMIT: u8 = 1;
+const REQ_STATS: u8 = 2;
+const REQ_SHUTDOWN: u8 = 3;
+
+const RESP_RESULT: u8 = 1;
+const RESP_ERROR: u8 = 2;
+const RESP_STATS: u8 = 3;
+const RESP_BYE: u8 = 4;
+
+/// A typed [`ErrorClass::Parse`] decode failure.
+fn perr(msg: impl std::fmt::Display) -> Error {
+    Error::msg(format!("serve protocol: {msg}")).classify(ErrorClass::Parse)
+}
+
+/// Which evaluator a job scores through.  The service deliberately
+/// exposes only the analytic model and the single-controller cycle
+/// simulator — the sharded evaluator's worker count is a server-side
+/// resource decision, not a per-job knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvalKind {
+    /// Analytic Performance Model Simulator ([`crate::pms`]).
+    Pms,
+    /// Cycle-approximate simulation ([`crate::dse::Evaluator::CycleSim`]).
+    Sim,
+}
+
+impl EvalKind {
+    /// Stable wire tag (append-only).
+    pub fn tag(self) -> u8 {
+        match self {
+            EvalKind::Pms => 0,
+            EvalKind::Sim => 1,
+        }
+    }
+
+    /// Inverse of [`EvalKind::tag`].
+    pub fn from_tag(tag: u8) -> Option<EvalKind> {
+        match tag {
+            0 => Some(EvalKind::Pms),
+            1 => Some(EvalKind::Sim),
+            _ => None,
+        }
+    }
+
+    /// The `--evaluator` label this kind corresponds to — the string
+    /// the warm-cache [`crate::dse::KeyBuilder`] is keyed with, so a
+    /// served job and a CLI `explore --warm-cache` run of the same
+    /// workload land on the same memo context.
+    pub fn label(self) -> &'static str {
+        match self {
+            EvalKind::Pms => "pms",
+            EvalKind::Sim => "sim",
+        }
+    }
+}
+
+/// Which sweep grid a job explores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridPreset {
+    /// [`crate::dse::Grids::default`] — the paper's full §5.2.1 grid.
+    Default,
+    /// [`crate::dse::Grids::smoke`] — the tiny CI/smoke grid.
+    Smoke,
+}
+
+impl GridPreset {
+    pub fn tag(self) -> u8 {
+        match self {
+            GridPreset::Default => 0,
+            GridPreset::Smoke => 1,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<GridPreset> {
+        match tag {
+            0 => Some(GridPreset::Default),
+            1 => Some(GridPreset::Smoke),
+            _ => None,
+        }
+    }
+}
+
+/// One exploration job: a synthetic workload plus the search knobs of
+/// `ptmc explore`.  The tensor is described, not shipped — the server
+/// regenerates it from `(dims, nnz, profile, seed)`, which is exactly
+/// the identity the cross-query memo keys on, so two clients
+/// describing the same tensor share one in-memory instance *and* one
+/// memo context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobSpec {
+    /// Client-chosen correlation id, echoed in the response.
+    pub id: u64,
+    /// Tenant name this job bills against (see server `--tenant-budget`).
+    pub tenant: String,
+    /// Synthetic tensor mode lengths.
+    pub dims: Vec<usize>,
+    /// Synthetic tensor non-zero count.
+    pub nnz: usize,
+    /// Generator seed (also seeds the factor matrices).
+    pub seed: u64,
+    /// Coordinate distribution.
+    pub profile: Profile,
+    /// CP rank.
+    pub rank: usize,
+    pub evaluator: EvalKind,
+    pub engine: EngineKind,
+    pub strategy: SearchStrategy,
+    /// How many best points the response's `top` could report (the
+    /// search layer clamps to >= 1).
+    pub top_k: usize,
+    pub grid: GridPreset,
+}
+
+/// One explored point on the wire: the config in its canonical
+/// [`crate::util::encode_config`] encoding (the same bytes the memo
+/// and warm cache key on) plus the score and resource usage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WirePoint {
+    pub cfg_enc: Vec<u8>,
+    /// `f64::to_bits` of the cycle count — bit-exact across the wire.
+    pub cycles_bits: u64,
+    pub bram36: u64,
+    pub uram: u64,
+}
+
+impl WirePoint {
+    pub fn cycles(&self) -> f64 {
+        f64::from_bits(self.cycles_bits)
+    }
+}
+
+/// A completed job.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JobResult {
+    /// The submitting [`JobSpec::id`].
+    pub id: u64,
+    pub best: WirePoint,
+    /// Pareto frontier, ascending in cycles (see
+    /// [`crate::dse::Exploration::pareto`]).
+    pub pareto: Vec<WirePoint>,
+    /// Feasible points visited.
+    pub visited: u64,
+    /// Candidates rejected as not fitting the device.
+    pub rejected: u64,
+    /// Cross-query memo hits charged to this job's view.
+    pub memo_hits: u64,
+    /// Cross-query memo misses charged to this job's view.
+    pub memo_misses: u64,
+}
+
+/// Server-wide counters returned by [`Request::Stats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ServerStats {
+    /// Jobs completed (successfully) since startup.
+    pub jobs_done: u64,
+    /// Jobs rejected with an error response.
+    pub jobs_failed: u64,
+    /// Entries resident in the cross-query memo.
+    pub memo_entries: u64,
+    /// Store-wide memo hits across every query.
+    pub memo_hits: u64,
+    /// Store-wide memo misses.
+    pub memo_misses: u64,
+    /// Worker threads in the job pool.
+    pub workers: u64,
+}
+
+/// A client-to-server message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    Submit(JobSpec),
+    Stats,
+    /// Graceful shutdown: the server drains queued jobs, answers
+    /// [`Response::Bye`], and exits its accept loop.
+    Shutdown,
+}
+
+/// A server-to-client message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Response {
+    Result(JobResult),
+    /// A job (or frame) the server refused; `id` is 0 when the
+    /// failure happened before a job id could be parsed.
+    Error {
+        id: u64,
+        class: ErrorClass,
+        msg: String,
+    },
+    Stats(ServerStats),
+    Bye,
+}
+
+fn put_str(w: &mut ByteWriter, s: &str) {
+    w.usize(s.len());
+    w.bytes(s.as_bytes());
+}
+
+fn get_str(r: &mut ByteReader<'_>, what: &str) -> Result<String, Error> {
+    let len = r.usize().ok_or_else(|| perr(format!("{what}: truncated length")))?;
+    let raw = r
+        .take(len)
+        .ok_or_else(|| perr(format!("{what}: truncated body ({len} bytes)")))?;
+    String::from_utf8(raw.to_vec()).map_err(|_| perr(format!("{what}: invalid utf-8")))
+}
+
+fn put_blob(w: &mut ByteWriter, b: &[u8]) {
+    w.usize(b.len());
+    w.bytes(b);
+}
+
+fn get_blob(r: &mut ByteReader<'_>, what: &str) -> Result<Vec<u8>, Error> {
+    let len = r.usize().ok_or_else(|| perr(format!("{what}: truncated length")))?;
+    let raw = r
+        .take(len)
+        .ok_or_else(|| perr(format!("{what}: truncated body ({len} bytes)")))?;
+    Ok(raw.to_vec())
+}
+
+fn put_profile(w: &mut ByteWriter, p: Profile) {
+    match p {
+        Profile::Uniform => w.u8(0),
+        Profile::Zipf { alpha_milli } => {
+            w.u8(1);
+            w.u32(alpha_milli);
+        }
+        Profile::Clustered { block, blocks } => {
+            w.u8(2);
+            w.usize(block);
+            w.usize(blocks);
+        }
+    }
+}
+
+fn get_profile(r: &mut ByteReader<'_>) -> Result<Profile, Error> {
+    match r.u8().ok_or_else(|| perr("profile: truncated tag"))? {
+        0 => Ok(Profile::Uniform),
+        1 => Ok(Profile::Zipf {
+            alpha_milli: r.u32().ok_or_else(|| perr("profile: truncated alpha"))?,
+        }),
+        2 => Ok(Profile::Clustered {
+            block: r.usize().ok_or_else(|| perr("profile: truncated block"))?,
+            blocks: r.usize().ok_or_else(|| perr("profile: truncated blocks"))?,
+        }),
+        t => Err(perr(format!("profile: unknown tag {t}"))),
+    }
+}
+
+fn put_strategy(w: &mut ByteWriter, s: SearchStrategy) {
+    match s {
+        SearchStrategy::Coordinate => {
+            w.u8(0);
+            w.u32(0);
+        }
+        SearchStrategy::Joint => {
+            w.u8(1);
+            w.u32(0);
+        }
+        SearchStrategy::Beam { width } => {
+            w.u8(2);
+            w.u32(width.min(u32::MAX as usize) as u32);
+        }
+    }
+}
+
+fn get_strategy(r: &mut ByteReader<'_>) -> Result<SearchStrategy, Error> {
+    let tag = r.u8().ok_or_else(|| perr("strategy: truncated tag"))?;
+    let width = r.u32().ok_or_else(|| perr("strategy: truncated width"))? as usize;
+    match tag {
+        0 => Ok(SearchStrategy::Coordinate),
+        1 => Ok(SearchStrategy::Joint),
+        2 => Ok(SearchStrategy::Beam {
+            width: width.max(1),
+        }),
+        t => Err(perr(format!("strategy: unknown tag {t}"))),
+    }
+}
+
+fn class_tag(c: ErrorClass) -> u8 {
+    c.exit_code()
+}
+
+fn class_from_tag(tag: u8) -> Option<ErrorClass> {
+    match tag {
+        1 => Some(ErrorClass::Internal),
+        2 => Some(ErrorClass::Usage),
+        3 => Some(ErrorClass::Parse),
+        4 => Some(ErrorClass::Io),
+        5 => Some(ErrorClass::Budget),
+        6 => Some(ErrorClass::Worker),
+        _ => None,
+    }
+}
+
+fn put_point(w: &mut ByteWriter, p: &WirePoint) {
+    put_blob(w, &p.cfg_enc);
+    w.u64(p.cycles_bits);
+    w.u64(p.bram36);
+    w.u64(p.uram);
+}
+
+fn get_point(r: &mut ByteReader<'_>) -> Result<WirePoint, Error> {
+    Ok(WirePoint {
+        cfg_enc: get_blob(r, "point config")?,
+        cycles_bits: r.u64().ok_or_else(|| perr("point: truncated cycles"))?,
+        bram36: r.u64().ok_or_else(|| perr("point: truncated bram36"))?,
+        uram: r.u64().ok_or_else(|| perr("point: truncated uram"))?,
+    })
+}
+
+fn put_spec(w: &mut ByteWriter, s: &JobSpec) {
+    w.u64(s.id);
+    put_str(w, &s.tenant);
+    w.usize(s.dims.len());
+    for &d in &s.dims {
+        w.usize(d);
+    }
+    w.usize(s.nnz);
+    w.u64(s.seed);
+    put_profile(w, s.profile);
+    w.usize(s.rank);
+    w.u8(s.evaluator.tag());
+    w.u8(s.engine.tag());
+    put_strategy(w, s.strategy);
+    w.usize(s.top_k);
+    w.u8(s.grid.tag());
+}
+
+fn get_spec(r: &mut ByteReader<'_>) -> Result<JobSpec, Error> {
+    let id = r.u64().ok_or_else(|| perr("job: truncated id"))?;
+    let tenant = get_str(r, "job tenant")?;
+    let n_dims = r.usize().ok_or_else(|| perr("job: truncated dim count"))?;
+    // A desynced stream could claim billions of dims; real tensors
+    // have a handful of modes, so bound before allocating.
+    if n_dims == 0 || n_dims > 16 {
+        return Err(perr(format!("job: implausible mode count {n_dims}")));
+    }
+    let mut dims = Vec::with_capacity(n_dims);
+    for _ in 0..n_dims {
+        dims.push(r.usize().ok_or_else(|| perr("job: truncated dim"))?);
+    }
+    let nnz = r.usize().ok_or_else(|| perr("job: truncated nnz"))?;
+    let seed = r.u64().ok_or_else(|| perr("job: truncated seed"))?;
+    let profile = get_profile(r)?;
+    let rank = r.usize().ok_or_else(|| perr("job: truncated rank"))?;
+    let evaluator = r
+        .u8()
+        .and_then(EvalKind::from_tag)
+        .ok_or_else(|| perr("job: bad evaluator tag"))?;
+    let engine = r
+        .u8()
+        .and_then(EngineKind::from_tag)
+        .ok_or_else(|| perr("job: bad engine tag"))?;
+    let strategy = get_strategy(r)?;
+    let top_k = r.usize().ok_or_else(|| perr("job: truncated top_k"))?;
+    let grid = r
+        .u8()
+        .and_then(GridPreset::from_tag)
+        .ok_or_else(|| perr("job: bad grid tag"))?;
+    Ok(JobSpec {
+        id,
+        tenant,
+        dims,
+        nnz,
+        seed,
+        profile,
+        rank,
+        evaluator,
+        engine,
+        strategy,
+        top_k,
+        grid,
+    })
+}
+
+fn put_result(w: &mut ByteWriter, res: &JobResult) {
+    w.u64(res.id);
+    put_point(w, &res.best);
+    w.usize(res.pareto.len());
+    for p in &res.pareto {
+        put_point(w, p);
+    }
+    w.u64(res.visited);
+    w.u64(res.rejected);
+    w.u64(res.memo_hits);
+    w.u64(res.memo_misses);
+}
+
+fn get_result(r: &mut ByteReader<'_>) -> Result<JobResult, Error> {
+    let id = r.u64().ok_or_else(|| perr("result: truncated id"))?;
+    let best = get_point(r)?;
+    let n = r
+        .usize()
+        .ok_or_else(|| perr("result: truncated frontier length"))?;
+    // Each point is >= 28 bytes on the wire; refuse a length claim the
+    // remaining bytes cannot possibly satisfy before allocating.
+    if n > r.remaining() / 28 + 1 {
+        return Err(perr(format!("result: implausible frontier length {n}")));
+    }
+    let mut pareto = Vec::with_capacity(n);
+    for _ in 0..n {
+        pareto.push(get_point(r)?);
+    }
+    Ok(JobResult {
+        id,
+        best,
+        pareto,
+        visited: r.u64().ok_or_else(|| perr("result: truncated visited"))?,
+        rejected: r.u64().ok_or_else(|| perr("result: truncated rejected"))?,
+        memo_hits: r.u64().ok_or_else(|| perr("result: truncated hits"))?,
+        memo_misses: r.u64().ok_or_else(|| perr("result: truncated misses"))?,
+    })
+}
+
+fn put_stats(w: &mut ByteWriter, st: &ServerStats) {
+    w.u64(st.jobs_done);
+    w.u64(st.jobs_failed);
+    w.u64(st.memo_entries);
+    w.u64(st.memo_hits);
+    w.u64(st.memo_misses);
+    w.u64(st.workers);
+}
+
+fn get_stats(r: &mut ByteReader<'_>) -> Result<ServerStats, Error> {
+    Ok(ServerStats {
+        jobs_done: r.u64().ok_or_else(|| perr("stats: truncated jobs_done"))?,
+        jobs_failed: r.u64().ok_or_else(|| perr("stats: truncated jobs_failed"))?,
+        memo_entries: r.u64().ok_or_else(|| perr("stats: truncated entries"))?,
+        memo_hits: r.u64().ok_or_else(|| perr("stats: truncated hits"))?,
+        memo_misses: r.u64().ok_or_else(|| perr("stats: truncated misses"))?,
+        workers: r.u64().ok_or_else(|| perr("stats: truncated workers"))?,
+    })
+}
+
+/// The common frame-body prelude: magic + message tag.
+fn open_body(body: &[u8]) -> Result<(u8, ByteReader<'_>), Error> {
+    let mut r = ByteReader::new(body);
+    let magic = r.u32().ok_or_else(|| perr("frame shorter than magic"))?;
+    if magic != MAGIC {
+        return Err(perr(format!(
+            "bad magic {magic:#010x} (expected {MAGIC:#010x})"
+        )));
+    }
+    let tag = r.u8().ok_or_else(|| perr("frame missing message tag"))?;
+    Ok((tag, r))
+}
+
+/// Reject bytes left over after a complete decode — a trailing-junk
+/// frame means the stream is desynced and nothing after it can be
+/// trusted.
+fn close_body(r: &ByteReader<'_>, what: &str) -> Result<(), Error> {
+    if r.is_empty() {
+        Ok(())
+    } else {
+        Err(perr(format!(
+            "{what}: {} trailing bytes after message",
+            r.remaining()
+        )))
+    }
+}
+
+impl Request {
+    /// The frame body for this request.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(MAGIC);
+        match self {
+            Request::Submit(spec) => {
+                w.u8(REQ_SUBMIT);
+                put_spec(&mut w, spec);
+            }
+            Request::Stats => w.u8(REQ_STATS),
+            Request::Shutdown => w.u8(REQ_SHUTDOWN),
+        }
+        w.into_bytes()
+    }
+
+    /// Decode one frame body; failures are [`ErrorClass::Parse`].
+    pub fn decode(body: &[u8]) -> Result<Request, Error> {
+        let (tag, mut r) = open_body(body)?;
+        let req = match tag {
+            REQ_SUBMIT => Request::Submit(get_spec(&mut r)?),
+            REQ_STATS => Request::Stats,
+            REQ_SHUTDOWN => Request::Shutdown,
+            t => return Err(perr(format!("unknown request tag {t}"))),
+        };
+        close_body(&r, "request")?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    /// The frame body for this response.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.u32(MAGIC);
+        match self {
+            Response::Result(res) => {
+                w.u8(RESP_RESULT);
+                put_result(&mut w, res);
+            }
+            Response::Error { id, class, msg } => {
+                w.u8(RESP_ERROR);
+                w.u64(*id);
+                w.u8(class_tag(*class));
+                put_str(&mut w, msg);
+            }
+            Response::Stats(st) => {
+                w.u8(RESP_STATS);
+                put_stats(&mut w, st);
+            }
+            Response::Bye => w.u8(RESP_BYE),
+        }
+        w.into_bytes()
+    }
+
+    /// Decode one frame body; failures are [`ErrorClass::Parse`].
+    pub fn decode(body: &[u8]) -> Result<Response, Error> {
+        let (tag, mut r) = open_body(body)?;
+        let resp = match tag {
+            RESP_RESULT => Response::Result(get_result(&mut r)?),
+            RESP_ERROR => {
+                let id = r.u64().ok_or_else(|| perr("error: truncated id"))?;
+                let class = r
+                    .u8()
+                    .and_then(class_from_tag)
+                    .ok_or_else(|| perr("error: bad class tag"))?;
+                let msg = get_str(&mut r, "error message")?;
+                Response::Error { id, class, msg }
+            }
+            RESP_STATS => Response::Stats(get_stats(&mut r)?),
+            RESP_BYE => Response::Bye,
+            t => return Err(perr(format!("unknown response tag {t}"))),
+        };
+        close_body(&r, "response")?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> JobSpec {
+        JobSpec {
+            id: 7,
+            tenant: "team-a".to_string(),
+            dims: vec![200, 150, 100],
+            nnz: 5_000,
+            seed: 42,
+            profile: Profile::Zipf { alpha_milli: 1200 },
+            rank: 8,
+            evaluator: EvalKind::Pms,
+            engine: EngineKind::Event,
+            strategy: SearchStrategy::Beam { width: 3 },
+            top_k: 2,
+            grid: GridPreset::Smoke,
+        }
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        for req in [
+            Request::Submit(spec()),
+            Request::Stats,
+            Request::Shutdown,
+        ] {
+            let body = req.encode();
+            assert_eq!(Request::decode(&body).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn responses_round_trip() {
+        let point = WirePoint {
+            cfg_enc: vec![1, 2, 3, 4],
+            cycles_bits: 1.5e9f64.to_bits(),
+            bram36: 100,
+            uram: 8,
+        };
+        for resp in [
+            Response::Result(JobResult {
+                id: 7,
+                best: point.clone(),
+                pareto: vec![point.clone(), point.clone()],
+                visited: 40,
+                rejected: 3,
+                memo_hits: 12,
+                memo_misses: 28,
+            }),
+            Response::Error {
+                id: 9,
+                class: ErrorClass::Budget,
+                msg: "tenant budget exhausted".to_string(),
+            },
+            Response::Stats(ServerStats {
+                jobs_done: 5,
+                jobs_failed: 1,
+                memo_entries: 123,
+                memo_hits: 40,
+                memo_misses: 83,
+                workers: 4,
+            }),
+            Response::Bye,
+        ] {
+            let body = resp.encode();
+            assert_eq!(Response::decode(&body).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn malformed_bodies_are_typed_parse_errors() {
+        let cases: Vec<Vec<u8>> = vec![
+            vec![],                           // empty
+            vec![0xde, 0xad],                 // shorter than magic
+            {
+                let mut b = 0xdeadbeefu32.to_le_bytes().to_vec();
+                b.push(REQ_STATS);
+                b
+            }, // wrong magic
+            {
+                let mut b = MAGIC.to_le_bytes().to_vec();
+                b.push(0xff);
+                b
+            }, // unknown tag
+            {
+                let mut b = Request::Submit(spec()).encode();
+                b.truncate(b.len() - 3);
+                b
+            }, // truncated spec
+            {
+                let mut b = Request::Stats.encode();
+                b.push(0);
+                b
+            }, // trailing junk
+        ];
+        for body in cases {
+            let err = Request::decode(&body).unwrap_err();
+            assert_eq!(err.class(), ErrorClass::Parse, "body {body:?}");
+        }
+    }
+
+    #[test]
+    fn implausible_mode_count_is_rejected_before_allocating() {
+        let mut w = ByteWriter::new();
+        w.u32(MAGIC);
+        w.u8(REQ_SUBMIT);
+        w.u64(1); // id
+        w.usize(1); // tenant length
+        w.bytes(b"t");
+        w.usize(usize::MAX); // dim count
+        let err = Request::decode(w.as_slice()).unwrap_err();
+        assert_eq!(err.class(), ErrorClass::Parse);
+    }
+}

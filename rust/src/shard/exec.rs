@@ -11,6 +11,16 @@
 //! (one per DRAM channel group, the paper's multi-SLR layout); the
 //! simulated time of a mode is the *slowest* worker's makespan while
 //! statistics are the *sum* over workers ([`AggregateStats`]).
+//!
+//! Pool-aware scheduling (S32): every host-thread fan-out in this
+//! module goes through [`parallel_indexed`], which honours the
+//! process-wide parallelism cap
+//! ([`crate::util::set_parallelism_cap`]).  Inside the DSE server each
+//! pool worker therefore fans its shard workers out over at most
+//! `host_threads / pool_workers` threads — N concurrent jobs saturate
+//! the host without oversubscribing it.  The cap changes scheduling
+//! only: shard outputs and makespans stay bit-identical at any
+//! setting.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};

@@ -176,6 +176,60 @@ pub fn write_atomic(path: &std::path::Path, bytes: &[u8]) -> std::io::Result<()>
     res
 }
 
+/// Write one length-prefixed frame: a `u32` little-endian body length
+/// followed by the body bytes.  The framing layer under the DSE serve
+/// protocol ([`crate::serve`]).
+pub fn write_frame<W: std::io::Write>(w: &mut W, body: &[u8]) -> std::io::Result<()> {
+    let len = u32::try_from(body.len()).map_err(|_| {
+        std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("frame body too large: {} bytes", body.len()),
+        )
+    })?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(body)?;
+    Ok(())
+}
+
+/// Read one [`write_frame`] frame.  Returns `Ok(None)` on a clean EOF
+/// *before* the length prefix (the peer closed between frames); a
+/// truncated prefix or body is `UnexpectedEof`, and a length above
+/// `max_len` is `InvalidData` — so a malformed or hostile stream
+/// always surfaces as a typed error instead of an unbounded
+/// allocation or a hang.
+pub fn read_frame<R: std::io::Read>(r: &mut R, max_len: usize) -> std::io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    let mut filled = 0;
+    while filled < 4 {
+        match r.read(&mut len_buf[filled..])? {
+            0 if filled == 0 => return Ok(None),
+            0 => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "frame length prefix truncated",
+                ))
+            }
+            n => filled += n,
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > max_len {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds limit {max_len}"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "frame body truncated")
+        } else {
+            e
+        }
+    })?;
+    Ok(Some(body))
+}
+
 fn row_policy_tag(p: RowPolicy) -> u8 {
     match p {
         RowPolicy::Open => 0,
@@ -369,6 +423,34 @@ mod tests {
         let mut t = ByteReader::new(&bytes[..5]);
         assert_eq!(t.u8(), Some(7));
         assert_eq!(t.u64(), None, "truncated read must fail, not panic");
+    }
+
+    #[test]
+    fn frames_round_trip_and_reject_malformed_streams() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, b"hello").unwrap();
+        let mut r = std::io::Cursor::new(&buf);
+        assert_eq!(read_frame(&mut r, 1024).unwrap(), Some(Vec::new()));
+        assert_eq!(read_frame(&mut r, 1024).unwrap(), Some(b"hello".to_vec()));
+        assert_eq!(read_frame(&mut r, 1024).unwrap(), None, "clean EOF");
+
+        // Truncated length prefix.
+        let mut r = std::io::Cursor::new(&buf[..2]);
+        let err = read_frame(&mut r, 1024).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+
+        // Truncated body.
+        let mut r = std::io::Cursor::new(&buf[..buf.len() - 2]);
+        read_frame(&mut r, 1024).unwrap();
+        let err = read_frame(&mut r, 1024).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+
+        // Oversized length rejects before allocating.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut std::io::Cursor::new(&huge), 1024).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
     }
 
     #[test]

@@ -46,6 +46,12 @@ pub const FROSTT_READ_BLOCK: &str = "frostt.read_block";
 pub const BENCH_UPSERT: &str = "bench.upsert";
 /// A shard worker body (supervised by `shard::exec`).
 pub const SHARD_WORKER: &str = "shard.worker";
+/// The DSE server accepting one incoming connection.
+pub const SERVE_ACCEPT: &str = "serve.accept";
+/// A DSE server connection handler reading one request frame.
+pub const SERVE_FRAME: &str = "serve.frame";
+/// The cross-query memo store flushing one context to its spill tier.
+pub const MEMO_FLUSH: &str = "memo.flush";
 
 /// Every registered failpoint site, in declaration order.
 pub const SITES: &[&str] = &[
@@ -56,6 +62,9 @@ pub const SITES: &[&str] = &[
     FROSTT_READ_BLOCK,
     BENCH_UPSERT,
     SHARD_WORKER,
+    SERVE_ACCEPT,
+    SERVE_FRAME,
+    MEMO_FLUSH,
 ];
 
 const UNINIT: u32 = 0;

@@ -14,8 +14,9 @@ pub mod remap_memo;
 
 pub use budget::{format_size, parse_size, peak_rss_bytes};
 pub use codec::{
-    decode_config, encode_config, fnv1a, write_atomic, ByteReader, ByteWriter, Fnv1a,
+    decode_config, encode_config, fnv1a, read_frame, write_atomic, write_frame, ByteReader,
+    ByteWriter, Fnv1a,
 };
 pub use fault::{retry_transient, FaultGuard};
-pub use par::parallel_indexed;
+pub use par::{effective_parallelism, parallel_indexed, set_parallelism_cap, Pool};
 pub use remap_memo::{RemapKey, RemapMemo, SpillCol};

@@ -1,18 +1,59 @@
-//! Indexed scoped-thread fan-out.
+//! Indexed scoped-thread fan-out and a queued fixed worker pool.
 //!
-//! One helper replaces the hand-rolled `thread::scope` blocks that used
-//! to live in `dse::score_batch`, the shard worker launch, the
-//! concurrent shard replays, and the per-shard grid classification
-//! ([`crate::shard`], [`crate::dse`]): run an indexed closure over
-//! `0..n` on up to `available_parallelism` scoped host threads and
-//! return the results in index order, so callers are deterministic
-//! regardless of thread timing.
+//! Two layers share one process-wide parallelism budget:
+//!
+//! - [`parallel_indexed`] replaces the hand-rolled `thread::scope`
+//!   blocks that used to live in `dse::score_batch`, the shard worker
+//!   launch, the concurrent shard replays, and the per-shard grid
+//!   classification ([`crate::shard`], [`crate::dse`]): run an indexed
+//!   closure over `0..n` on scoped host threads and return the results
+//!   in index order, so callers are deterministic regardless of thread
+//!   timing.
+//! - [`Pool`] is a long-lived queued executor for the DSE server
+//!   ([`crate::serve`]): a fixed set of worker threads draining a FIFO
+//!   job queue, so N concurrent queries are *scheduled* rather than
+//!   each spawning its own unbounded thread scope.
+//!
+//! When a [`Pool`] runs J jobs concurrently, every nested
+//! `parallel_indexed` fan-out inside those jobs (shard workers, batch
+//! scoring, concurrent replays) would oversubscribe the host J-fold.
+//! [`set_parallelism_cap`] installs a process-wide per-fan-out thread
+//! cap that `parallel_indexed` honors, so the pool owner divides the
+//! host between its workers once instead of every call site guessing.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
-/// Run `f(i)` for `i in 0..n` on up to `available_parallelism` scoped
+/// Process-wide cap on threads per `parallel_indexed` fan-out.
+/// 0 means uncapped (use `available_parallelism`).
+static PAR_CAP: AtomicUsize = AtomicUsize::new(0);
+
+/// Cap every subsequent [`parallel_indexed`] fan-out at `cap` threads
+/// (`None` restores the uncapped default). The DSE server sets this to
+/// `max(1, host_cores / pool_workers)` so concurrent jobs share the
+/// host instead of each fanning out to every core.
+pub fn set_parallelism_cap(cap: Option<usize>) {
+    PAR_CAP.store(cap.unwrap_or(0), Ordering::Relaxed);
+}
+
+/// Threads one `parallel_indexed` fan-out may use right now: host
+/// parallelism clamped by [`set_parallelism_cap`].
+pub fn effective_parallelism() -> usize {
+    let host = thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    match PAR_CAP.load(Ordering::Relaxed) {
+        0 => host,
+        cap => host.min(cap),
+    }
+}
+
+/// Run `f(i)` for `i in 0..n` on up to [`effective_parallelism`] scoped
 /// host threads (contiguous chunks); results come back in index order.
-/// `n <= 1` (or a single-core host) runs inline with no threads spawned.
+/// `n <= 1` (or an effective parallelism of 1) runs inline with no
+/// threads spawned.
 pub fn parallel_indexed<T, F>(n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -21,10 +62,7 @@ where
     if n == 0 {
         return Vec::new();
     }
-    let threads = thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1)
-        .min(n);
+    let threads = effective_parallelism().min(n);
     if threads <= 1 {
         return (0..n).map(f).collect();
     }
@@ -46,9 +84,139 @@ where
     chunks.into_iter().flatten().collect()
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+    /// Jobs popped but not yet finished, for `wait_idle`.
+    active: usize,
+}
+
+struct PoolInner {
+    state: Mutex<PoolState>,
+    /// Signalled when a job is pushed or shutdown flips.
+    work: Condvar,
+    /// Signalled when the pool drains to empty-and-idle.
+    idle: Condvar,
+}
+
+/// A fixed-size queued executor: `workers` long-lived threads drain a
+/// FIFO job queue. Jobs are `'static` closures; panics in a job are
+/// caught so one poisoned query cannot take a worker (or the queue)
+/// down with it. Dropping the pool finishes queued work first.
+pub struct Pool {
+    inner: Arc<PoolInner>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// Spawn a pool with `workers` threads (clamped to at least 1).
+    pub fn new(workers: usize) -> Pool {
+        let workers = workers.max(1);
+        let inner = Arc::new(PoolInner {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                shutdown: false,
+                active: 0,
+            }),
+            work: Condvar::new(),
+            idle: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                thread::Builder::new()
+                    .name(format!("ptmc-pool-{i}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool {
+            inner,
+            workers: handles,
+        }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a job. Returns `false` (job dropped) after `shutdown`.
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, job: F) -> bool {
+        let mut state = self.inner.state.lock().unwrap();
+        if state.shutdown {
+            return false;
+        }
+        state.queue.push_back(Box::new(job));
+        drop(state);
+        self.inner.work.notify_one();
+        true
+    }
+
+    /// Jobs queued but not yet started.
+    pub fn queued(&self) -> usize {
+        self.inner.state.lock().unwrap().queue.len()
+    }
+
+    /// Block until the queue is empty and no job is running.
+    pub fn wait_idle(&self) {
+        let mut state = self.inner.state.lock().unwrap();
+        while !state.queue.is_empty() || state.active > 0 {
+            state = self.inner.idle.wait(state).unwrap();
+        }
+    }
+
+    fn begin_shutdown(&self) {
+        let mut state = self.inner.state.lock().unwrap();
+        state.shutdown = true;
+        drop(state);
+        self.inner.work.notify_all();
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.begin_shutdown();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &PoolInner) {
+    loop {
+        let job = {
+            let mut state = inner.state.lock().unwrap();
+            loop {
+                if let Some(job) = state.queue.pop_front() {
+                    state.active += 1;
+                    break job;
+                }
+                if state.shutdown {
+                    return;
+                }
+                state = inner.work.wait(state).unwrap();
+            }
+        };
+        // A panicking job must not kill the worker: the server's
+        // connection handler already turned job errors into typed
+        // responses, so anything escaping here is a bug in the job
+        // body — contain it and keep draining the queue.
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+        let mut state = inner.state.lock().unwrap();
+        state.active -= 1;
+        if state.queue.is_empty() && state.active == 0 {
+            inner.idle.notify_all();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn empty_and_singleton() {
@@ -69,7 +237,6 @@ mod tests {
 
     #[test]
     fn closure_sees_every_index_exactly_once() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
         let calls = AtomicUsize::new(0);
         let got = parallel_indexed(64, |i| {
             calls.fetch_add(1, Ordering::Relaxed);
@@ -77,5 +244,62 @@ mod tests {
         });
         assert_eq!(calls.load(Ordering::Relaxed), 64);
         assert_eq!(got, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallelism_cap_is_honored_and_results_unchanged() {
+        // Capped runs must produce identical results to uncapped ones;
+        // cap 1 must not deadlock (inline path).
+        set_parallelism_cap(Some(1));
+        assert_eq!(effective_parallelism(), 1);
+        let capped = parallel_indexed(257, |i| i * 3);
+        set_parallelism_cap(None);
+        let free = parallel_indexed(257, |i| i * 3);
+        assert_eq!(capped, free);
+    }
+
+    #[test]
+    fn pool_runs_every_job_once() {
+        let pool = Pool::new(4);
+        let calls = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let calls = Arc::clone(&calls);
+            assert!(pool.spawn(move || {
+                calls.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        pool.wait_idle();
+        assert_eq!(calls.load(Ordering::Relaxed), 100);
+        assert_eq!(pool.queued(), 0);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = Pool::new(2);
+        let calls = Arc::new(AtomicUsize::new(0));
+        pool.spawn(|| panic!("job bug"));
+        for _ in 0..10 {
+            let calls = Arc::clone(&calls);
+            pool.spawn(move || {
+                calls.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(calls.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn pool_drop_finishes_queued_work() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = Pool::new(1);
+            for _ in 0..20 {
+                let calls = Arc::clone(&calls);
+                pool.spawn(move || {
+                    calls.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        }
+        assert_eq!(calls.load(Ordering::Relaxed), 20);
     }
 }

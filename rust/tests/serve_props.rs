@@ -1,0 +1,299 @@
+//! Properties of the DSE service (S32): malformed frames answer typed
+//! parse errors (never hangs), tenant budgets reject with
+//! [`ErrorClass::Budget`], concurrent same-tensor clients receive
+//! Pareto frontiers byte-identical to a solo cold run, repeat
+//! submissions are pure memo hits, and a connection dropped mid-job
+//! (the `serve.frame` failpoint) poisons neither the job queue nor the
+//! cross-query memo.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use ptmc::dse::SearchStrategy;
+use ptmc::engine::EngineKind;
+use ptmc::error::ErrorClass;
+use ptmc::serve::client;
+use ptmc::serve::proto::{self, EvalKind, GridPreset, JobSpec, Response};
+use ptmc::serve::{ServeConfig, Server};
+use ptmc::tensor::synth::Profile;
+use ptmc::util::{fault, read_frame, write_frame};
+
+/// Every server in this binary hits the same process-wide failpoint
+/// sites and parallelism cap, so server-booting tests run one at a
+/// time.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Boot a server on a free port; returns its address and the join
+/// handle of the accept loop.
+fn boot(cfg: ServeConfig) -> (String, std::thread::JoinHandle<std::io::Result<()>>) {
+    let server = Server::bind("127.0.0.1:0", cfg).expect("bind");
+    let addr = server.local_addr().to_string();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, handle)
+}
+
+/// A tiny cycle-sim job over the smoke grid — heavy enough to exercise
+/// classification + simulation, small enough for test time.
+fn sim_job(id: u64, tenant: &str, seed: u64) -> JobSpec {
+    JobSpec {
+        id,
+        tenant: tenant.to_string(),
+        dims: vec![64, 48, 32],
+        nnz: 2_000,
+        seed,
+        profile: Profile::Zipf { alpha_milli: 1200 },
+        rank: 4,
+        evaluator: EvalKind::Sim,
+        engine: EngineKind::Event,
+        strategy: SearchStrategy::Coordinate,
+        top_k: 1,
+        grid: GridPreset::Smoke,
+    }
+}
+
+/// Same workload through the fast analytic evaluator, for tests where
+/// the exploration itself is incidental.
+fn pms_job(id: u64, tenant: &str) -> JobSpec {
+    JobSpec {
+        evaluator: EvalKind::Pms,
+        ..sim_job(id, tenant, 7)
+    }
+}
+
+fn shutdown_and_join(
+    addr: &str,
+    handle: std::thread::JoinHandle<std::io::Result<()>>,
+) {
+    client::shutdown(addr).expect("shutdown");
+    handle.join().expect("server thread").expect("server run");
+}
+
+#[test]
+fn malformed_frames_get_typed_parse_errors_not_hangs() {
+    let _guard = lock();
+    let (addr, handle) = boot(ServeConfig {
+        workers: 1,
+        ..ServeConfig::default()
+    });
+
+    // (a) A well-framed body that is not a protocol message.
+    {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write_frame(&mut s, b"this is not a ptmc frame").expect("write");
+        let body = read_frame(&mut s, proto::MAX_FRAME)
+            .expect("read")
+            .expect("response frame");
+        match Response::decode(&body).expect("decode") {
+            Response::Error { id, class, .. } => {
+                assert_eq!(id, 0);
+                assert_eq!(class, ErrorClass::Parse);
+            }
+            other => panic!("expected parse error, got {other:?}"),
+        }
+        // The server closes a desynced connection after answering.
+        assert!(read_frame(&mut s, proto::MAX_FRAME).expect("eof").is_none());
+    }
+
+    // (b) A hostile length prefix (4 GiB claim) is refused before
+    // allocation, with a typed error.
+    {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(&u32::MAX.to_le_bytes()).expect("write prefix");
+        s.flush().unwrap();
+        let body = read_frame(&mut s, proto::MAX_FRAME)
+            .expect("read")
+            .expect("response frame");
+        match Response::decode(&body).expect("decode") {
+            Response::Error { class, .. } => assert_eq!(class, ErrorClass::Parse),
+            other => panic!("expected parse error, got {other:?}"),
+        }
+    }
+
+    // (c) A frame truncated mid-body (client dies mid-write): the
+    // server must close, not hang.
+    {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s.write_all(&100u32.to_le_bytes()).expect("write prefix");
+        s.write_all(b"only a few bytes").expect("write partial");
+        s.shutdown(std::net::Shutdown::Write).expect("half-close");
+        let body = read_frame(&mut s, proto::MAX_FRAME)
+            .expect("read")
+            .expect("response frame");
+        match Response::decode(&body).expect("decode") {
+            Response::Error { class, .. } => assert_eq!(class, ErrorClass::Parse),
+            other => panic!("expected parse error, got {other:?}"),
+        }
+        assert!(read_frame(&mut s, proto::MAX_FRAME).expect("eof").is_none());
+    }
+
+    // The server survived all three abusive connections.
+    let st = client::stats(&addr).expect("stats after abuse");
+    assert_eq!(st.jobs_done, 0);
+    shutdown_and_join(&addr, handle);
+}
+
+#[test]
+fn tenant_budget_exhaustion_is_a_typed_budget_error() {
+    let _guard = lock();
+    let (addr, handle) = boot(ServeConfig {
+        workers: 1,
+        tenant_budget: Some(2),
+        ..ServeConfig::default()
+    });
+
+    // Three jobs from one tenant against a budget of two.
+    let jobs: Vec<JobSpec> = (1..=3).map(|i| pms_job(i, "greedy")).collect();
+    let report = client::submit_batch(&addr, &jobs).expect("batch");
+    assert_eq!(report.results.len(), 2, "two jobs within budget succeed");
+    assert_eq!(report.errors.len(), 1, "the third is rejected");
+    let err = &report.errors[0];
+    assert_eq!(err.id, 3);
+    assert_eq!(err.class, ErrorClass::Budget);
+    assert_eq!(err.class.exit_code(), 5);
+    assert_eq!(
+        report.first_error_class(),
+        Some(ErrorClass::Budget),
+        "a CLI frontend exits with the budget class"
+    );
+
+    // Another tenant is unaffected.
+    let other = client::submit_batch(&addr, &[pms_job(9, "frugal")]).expect("batch");
+    assert_eq!(other.results.len(), 1);
+    assert!(other.errors.is_empty());
+
+    shutdown_and_join(&addr, handle);
+}
+
+#[test]
+fn concurrent_same_tensor_clients_match_a_solo_cold_run() {
+    let _guard = lock();
+
+    // Baseline: one job on a fresh server — a solo cold run.
+    let (addr, handle) = boot(ServeConfig {
+        workers: 2,
+        ..ServeConfig::default()
+    });
+    let solo = client::submit_batch(&addr, &[sim_job(1, "solo", 42)]).expect("solo");
+    assert!(solo.errors.is_empty());
+    let baseline = &solo.results[0];
+    assert_eq!(baseline.memo_hits, 0, "a cold run has nothing to hit");
+    shutdown_and_join(&addr, handle);
+
+    // Fresh server, two clients racing the same tensor.
+    let (addr, handle) = boot(ServeConfig {
+        workers: 2,
+        ..ServeConfig::default()
+    });
+    let reports: Vec<_> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|c| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    client::submit_batch(&addr, &[sim_job(c + 1, "racer", 42)])
+                        .expect("concurrent batch")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let mut total_hits = 0;
+    for report in &reports {
+        assert!(report.errors.is_empty());
+        let res = &report.results[0];
+        assert_eq!(
+            res.best.cycles_bits, baseline.best.cycles_bits,
+            "winner diverged from the solo cold run"
+        );
+        assert_eq!(
+            res.pareto, baseline.pareto,
+            "Pareto frontier not byte-identical to the solo cold run"
+        );
+        total_hits += res.memo_hits;
+    }
+    // The two queries shared work through the memo: at least one of
+    // them hit verdicts the other recorded.  (How many depends on the
+    // race; sharing itself is guaranteed once one candidate finishes
+    // before the other query reaches it.)
+    let _ = total_hits; // racy lower bounds are asserted in the repeat test
+
+    shutdown_and_join(&addr, handle);
+}
+
+#[test]
+fn repeat_submission_is_pure_memo_hits() {
+    let _guard = lock();
+    let (addr, handle) = boot(ServeConfig {
+        workers: 2,
+        ..ServeConfig::default()
+    });
+
+    let cold = client::submit_batch(&addr, &[sim_job(1, "t", 5)]).expect("cold");
+    assert!(cold.errors.is_empty());
+    let cold_res = &cold.results[0];
+    assert_eq!(cold_res.memo_hits, 0);
+    assert!(cold_res.memo_misses > 0);
+
+    let warm = client::submit_batch(&addr, &[sim_job(2, "t", 5)]).expect("repeat");
+    assert!(warm.errors.is_empty());
+    let warm_res = &warm.results[0];
+    assert_eq!(
+        warm_res.memo_misses, 0,
+        "a repeat query must perform zero new simulations"
+    );
+    assert!(warm_res.memo_hits > 0, "repeat query reported no hits");
+    assert_eq!(warm_res.best.cycles_bits, cold_res.best.cycles_bits);
+    assert_eq!(warm_res.pareto, cold_res.pareto, "repeat frontier diverged");
+    assert_eq!(warm_res.visited, cold_res.visited);
+    assert_eq!(warm_res.rejected, cold_res.rejected);
+
+    let st = client::stats(&addr).expect("stats");
+    assert_eq!(st.jobs_done, 2);
+    assert!(st.memo_entries > 0);
+    assert!(st.memo_hits >= warm_res.memo_hits);
+
+    shutdown_and_join(&addr, handle);
+}
+
+#[test]
+fn dropped_connection_mid_job_poisons_neither_queue_nor_memo() {
+    let _guard = lock();
+    // The 2nd serve.frame check (the read after the first job is
+    // queued) fails once: the server drops that connection as if the
+    // client vanished mid-conversation.
+    let fault_guard = fault::arm("serve.frame@2:brokenpipe").expect("arm plan");
+    let (addr, handle) = boot(ServeConfig {
+        workers: 1,
+        ..ServeConfig::default()
+    });
+
+    // Client 1 submits one job, then loses its connection.  Depending
+    // on how the race between the drop and the job's completion falls,
+    // it sees either an IO error or (rarely) its result — both fine;
+    // what matters is what the *next* client observes.
+    let _ = client::submit_batch(&addr, &[sim_job(1, "dropped", 11)]);
+    assert!(fault::hit_count(fault::SERVE_FRAME) >= 2);
+
+    // Client 2 repeats the same tensor: the dropped client's job must
+    // have completed into the shared memo (workers = 1 serializes the
+    // queue), and the queue must still be serving.
+    let report = client::submit_batch(&addr, &[sim_job(2, "survivor", 11)]).expect("batch");
+    assert!(report.errors.is_empty(), "queue poisoned: {:?}", report.errors);
+    let res = &report.results[0];
+    assert_eq!(
+        res.memo_misses, 0,
+        "memo poisoned: the dropped client's verdicts are missing"
+    );
+    assert!(res.memo_hits > 0);
+
+    drop(fault_guard);
+    shutdown_and_join(&addr, handle);
+}
